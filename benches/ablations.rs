@@ -1,0 +1,74 @@
+//! Ablation studies over the two reconstruction choices DESIGN.md §5 calls
+//! out in the time model — the places where our reconstruction of [27] had
+//! to commit to an assumption the paper does not publish:
+//!
+//! 1. **shared-memory latency scaling** (`shm_latency_exponent`): 0 makes
+//!    scratchpad capacity latency-free (the optimizer then maxes out M_SM);
+//!    0.25 is the default (Cacti-style √delay growth softened by banking);
+//!    0.5 is full √ growth.
+//! 2. **bandwidth scaling** (`mem_bw_per_sm_gbs`): per-SM 14 GB/s (Maxwell's
+//!    observed 224/16 = 336/24 scaling, our default) vs a fixed chip-level
+//!    budget divided by the *reference* 16 SMs (what a chip-global model
+//!    would give every candidate regardless of n_SM).
+//!
+//! For each variant the bench re-runs the 2-D exploration on a reduced space
+//! and reports where the optimum architecture lands — making explicit how
+//! each assumption moves the Table II-style conclusions.
+//!
+//! Run: `cargo bench --bench ablations`
+
+use codesign::area::AreaModel;
+use codesign::codesign::scenario::{run, Scenario};
+use codesign::timemodel::{MachineSpec, TimeModel};
+use codesign::util::bench::Bencher;
+use codesign::util::csv::Table;
+
+fn main() {
+    let quick = codesign::util::bench::quick_requested();
+    let mut b = Bencher::new();
+    let area_model = AreaModel::paper();
+
+    let variants: Vec<(&str, MachineSpec)> = vec![
+        ("default (lat^0.25, per-SM BW)", MachineSpec::maxwell()),
+        ("no shm latency scaling", MachineSpec { shm_latency_exponent: 0.0, ..MachineSpec::maxwell() }),
+        ("full sqrt shm latency", MachineSpec { shm_latency_exponent: 0.5, ..MachineSpec::maxwell() }),
+        (
+            "2x per-SM bandwidth",
+            MachineSpec { mem_bw_per_sm_gbs: 28.0, ..MachineSpec::maxwell() },
+        ),
+        (
+            "half per-SM bandwidth",
+            MachineSpec { mem_bw_per_sm_gbs: 7.0, ..MachineSpec::maxwell() },
+        ),
+    ];
+
+    let mut t = Table::new(&[
+        "variant",
+        "best_n_sm",
+        "best_n_v",
+        "best_m_sm_kb",
+        "best_area_mm2",
+        "best_gflops",
+        "gain_vs_gtx980_pct",
+    ]);
+    for (name, spec) in variants {
+        let sc = Scenario::quick(Scenario::paper_2d(), if quick { 16 } else { 4 });
+        let tm = TimeModel::new(spec);
+        let (res, _) = b.bench_once(&format!("ablation: {name}"), || run(&sc, &area_model, &tm));
+        let gtx = res.reference("gtx980").unwrap();
+        let best = res.best_within(gtx.area_mm2).expect("non-empty space");
+        t.push(&[
+            name.to_string(),
+            best.hw.n_sm.to_string(),
+            best.hw.n_v.to_string(),
+            format!("{}", best.hw.m_sm_kb),
+            format!("{:.0}", best.area_mm2),
+            format!("{:.0}", best.gflops),
+            format!("{:.1}", 100.0 * (best.gflops / gtx.gflops - 1.0)),
+        ]);
+    }
+    println!("\nBest same-area-as-GTX980 design under each model variant:");
+    println!("{}", t.to_ascii());
+    t.save(std::path::Path::new("reports/ablations/ablations.csv")).unwrap();
+    println!("ablations report saved under reports/ablations/");
+}

@@ -1,0 +1,28 @@
+//! E1 — regenerates Fig 2 (the four memory linear fits + Table I
+//! coefficients) and times the calibration pipeline.
+//!
+//! Run: `cargo bench --bench fig2_memory_models`
+
+use codesign::area::calibrate::calibrate_maxwell;
+use codesign::cacti::{calibrate_to_paper, Knobs};
+use codesign::report::fig2;
+use codesign::util::bench::Bencher;
+use std::path::Path;
+
+fn main() {
+    let mut b = if codesign::util::bench::quick_requested() {
+        Bencher::quick()
+    } else {
+        Bencher::new()
+    };
+
+    // Timing: the fit pipeline and the knob calibration search.
+    b.bench("area_calibration_pipeline", calibrate_maxwell);
+    b.bench_once("cacti_knob_search", || calibrate_to_paper(Knobs::initial()));
+
+    // Figure regeneration.
+    let rep = fig2::generate_default();
+    print!("{}", rep.summary);
+    rep.save(Path::new("reports")).expect("save fig2");
+    println!("fig2 report saved under reports/fig2_memory_models/");
+}

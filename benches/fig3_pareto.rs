@@ -1,0 +1,45 @@
+//! E3/E4/E5/E9 — regenerates both Fig 3 panels (and the cache-less
+//! comparison) through the memoizing coordinator, and times the end-to-end
+//! sweep — the headline system benchmark of this repo.
+//!
+//! Run: `cargo bench --bench fig3_pareto` (add `-- --quick` for the reduced
+//! space; `--d2`/`--d3` restrict the class).
+
+use codesign::area::AreaModel;
+use codesign::codesign::scenario::Scenario;
+use codesign::coordinator::Coordinator;
+use codesign::report::fig3;
+use codesign::timemodel::TimeModel;
+use codesign::util::bench::Bencher;
+use std::path::Path;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = codesign::util::bench::quick_requested();
+    let only_2d = args.iter().any(|a| a == "--d2");
+    let only_3d = args.iter().any(|a| a == "--d3");
+
+    let mut b = Bencher::new();
+    let area_model = AreaModel::paper();
+    let coord = Coordinator::new(area_model, TimeModel::maxwell());
+
+    for base in [Scenario::paper_2d(), Scenario::paper_3d()] {
+        if (only_2d && base.name != "2d") || (only_3d && base.name != "3d") {
+            continue;
+        }
+        let name = base.name.clone();
+        let sc = if quick { Scenario::quick(base, 8) } else { base };
+        let (rep, wall) = b.bench_once(&format!("dse_sweep_{name}"), || coord.run_scenario(&sc));
+        println!(
+            "  {} design points, {} inner instances memoized, {} model evals, {:.2} s",
+            rep.result.points.len(),
+            rep.cache_entries,
+            rep.result.total_evals,
+            wall.as_secs_f64()
+        );
+        let fig = fig3::generate(&rep.result, &area_model);
+        print!("{}", fig.summary);
+        fig.save(Path::new("reports")).expect("save fig3");
+    }
+    println!("fig3 reports saved under reports/fig3_pareto_*/");
+}

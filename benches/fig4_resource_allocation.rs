@@ -1,0 +1,28 @@
+//! E7 — regenerates Fig 4 (resource allocation) for both workload classes
+//! and reports the clustering statistic.
+//!
+//! Run: `cargo bench --bench fig4_resource_allocation` (add `-- --quick`)
+
+use codesign::area::AreaModel;
+use codesign::codesign::scenario::Scenario;
+use codesign::coordinator::Coordinator;
+use codesign::report::fig4;
+use codesign::timemodel::TimeModel;
+use codesign::util::bench::Bencher;
+use std::path::Path;
+
+fn main() {
+    let quick = codesign::util::bench::quick_requested();
+    let mut b = Bencher::new();
+    let area_model = AreaModel::paper();
+    let coord = Coordinator::new(area_model, TimeModel::maxwell());
+    for base in [Scenario::paper_2d(), Scenario::paper_3d()] {
+        let name = base.name.clone();
+        let sc = if quick { Scenario::quick(base, 8) } else { base };
+        let (rep, _) = b.bench_once(&format!("sweep_{name}"), || coord.run_scenario(&sc));
+        let fig = fig4::generate(&rep.result, &area_model);
+        print!("{}", fig.summary);
+        fig.save(Path::new("reports")).expect("save fig4");
+    }
+    println!("fig4 reports saved under reports/fig4_allocation_*/");
+}

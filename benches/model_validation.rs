@@ -1,0 +1,48 @@
+//! E10 — model-vs-simulator validation sweep (the stand-in for the paper's
+//! real-GPU validation), plus simulator throughput benchmarks.
+//!
+//! Run: `cargo bench --bench model_validation`
+
+use codesign::area::params::HwParams;
+use codesign::sim::run::simulate;
+use codesign::sim::validate_sweep;
+use codesign::stencil::defs::{Stencil, StencilId};
+use codesign::stencil::workload::ProblemSize;
+use codesign::timemodel::talg::SoftwareParams;
+use codesign::timemodel::tiling::TileSizes;
+use codesign::timemodel::TimeModel;
+use codesign::util::bench::{black_box, Bencher};
+use codesign::util::csv::Table;
+
+fn main() {
+    let mut b = Bencher::new();
+    let model = TimeModel::maxwell();
+
+    // Timing: one model evaluation vs one simulation of the same instance.
+    let st = *Stencil::get(StencilId::Jacobi2D);
+    let size = ProblemSize::d2(1024, 128);
+    let hw = HwParams::gtx980();
+    let sw = SoftwareParams::new(TileSizes::d2(32, 64, 8), 2);
+    b.bench("analytical_model_eval", || model.evaluate(black_box(&st), &size, &hw, &sw));
+    b.bench("fluid_simulator_run", || simulate(&model.machine, black_box(&st), &size, &hw, &sw));
+
+    // The validation sweep + per-case table.
+    let (rep, _) = b.bench_once("validation_sweep", || validate_sweep(&model));
+    println!(
+        "\nmodel vs simulator: {} configs, MAPE {:.1}%, Kendall tau {:.3}",
+        rep.cases.len(),
+        rep.mape_pct,
+        rep.kendall_tau
+    );
+    let mut t = Table::new(&["config", "model_ms", "sim_ms", "rel_err_pct"]);
+    for c in &rep.cases {
+        t.push(&[
+            c.label.clone(),
+            format!("{:.4}", c.model_seconds * 1e3),
+            format!("{:.4}", c.sim_seconds * 1e3),
+            format!("{:.1}", c.rel_err_pct()),
+        ]);
+    }
+    t.save(std::path::Path::new("reports/model_validation/cases.csv")).unwrap();
+    println!("model_validation report saved under reports/model_validation/");
+}

@@ -1,0 +1,51 @@
+//! E8 — solver cost: microseconds per inner instance (vs the paper's 19 s
+//! bonmin average) and the joint-annealing baseline comparison.
+//!
+//! Run: `cargo bench --bench solver_cost`
+
+use codesign::area::params::HwParams;
+use codesign::opt::exhaustive::solve_exhaustive;
+use codesign::opt::{solve_inner, InnerProblem, SolveOpts};
+use codesign::report::solver_cost;
+use codesign::stencil::defs::{Stencil, StencilId};
+use codesign::stencil::workload::ProblemSize;
+use codesign::timemodel::{CIterTable, TimeModel};
+use codesign::util::bench::{black_box, Bencher};
+use std::path::Path;
+
+fn main() {
+    let quick = codesign::util::bench::quick_requested();
+    let mut b = Bencher::new();
+    let model = TimeModel::maxwell();
+
+    // Per-instance timings across representative shapes.
+    for (label, id, size) in [
+        ("inner_jacobi2d_8kx8k", StencilId::Jacobi2D, ProblemSize::d2(8192, 4096)),
+        ("inner_gradient2d_16kx16k", StencilId::Gradient2D, ProblemSize::d2(16384, 16384)),
+        ("inner_heat3d_512", StencilId::Heat3D, ProblemSize::d3(512, 256)),
+    ] {
+        let p = InnerProblem {
+            stencil: *Stencil::get(id),
+            size,
+            hw: HwParams::gtx980(),
+        };
+        b.bench(label, || solve_inner(&model, black_box(&p), &SolveOpts::default()));
+    }
+
+    // The brute-force yardstick on a reduced instance.
+    let small = InnerProblem {
+        stencil: *Stencil::get(StencilId::Jacobi2D),
+        size: ProblemSize::d2(1024, 256),
+        hw: HwParams::gtx980(),
+    };
+    b.bench_once("exhaustive_reference_small", || {
+        solve_exhaustive(&model, &small, 96, 256, 1, 24)
+    });
+
+    // Full report incl. the annealing baseline.
+    let iters = if quick { 5_000 } else { 50_000 };
+    let rep = solver_cost::generate(&model, &CIterTable::paper(), iters);
+    print!("{}", rep.summary);
+    rep.save(Path::new("reports")).expect("save solver_cost");
+    println!("solver_cost report saved under reports/solver_cost/");
+}

@@ -1,0 +1,50 @@
+//! E6 — regenerates Table II (workload sensitivity) and times the §V-B
+//! "scenarios for free" re-aggregation against a from-scratch solve.
+//!
+//! Run: `cargo bench --bench table2_sensitivity` (add `-- --quick`)
+
+use codesign::area::AreaModel;
+use codesign::codesign::scenario::Scenario;
+use codesign::codesign::sensitivity::{reweighted_gflops, single_benchmark_weights};
+use codesign::coordinator::Coordinator;
+use codesign::report::table2;
+use codesign::stencil::defs::StencilId;
+use codesign::timemodel::{CIterTable, TimeModel};
+use codesign::util::bench::{black_box, Bencher};
+use std::path::Path;
+
+fn main() {
+    let quick = codesign::util::bench::quick_requested();
+    let mut b = Bencher::new();
+    let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+    let make = |base: Scenario| if quick { Scenario::quick(base, 8) } else { base };
+    let sc2d = make(Scenario::paper_2d());
+    let sc3d = make(Scenario::paper_3d());
+
+    let (r2d, _) = b.bench_once("sweep_2d", || coord.run_scenario(&sc2d));
+    let (r3d, _) = b.bench_once("sweep_3d", || coord.run_scenario(&sc3d));
+
+    // The for-free knob: re-aggregating all points for one benchmark.
+    let weights = single_benchmark_weights(&sc2d.workload, StencilId::Heat2D);
+    b.bench("reweight_all_points_one_benchmark", || {
+        r2d.result
+            .points
+            .iter()
+            .filter_map(|p| reweighted_gflops(black_box(p), &sc2d.workload, &weights))
+            .fold(0.0f64, f64::max)
+    });
+
+    let band = if quick { (380.0, 460.0) } else { (425.0, 450.0) };
+    let rep = table2::generate(
+        &r2d.result,
+        &sc2d.workload,
+        &r3d.result,
+        &sc3d.workload,
+        &TimeModel::maxwell(),
+        &CIterTable::paper(),
+        band,
+    );
+    print!("{}", rep.summary);
+    rep.save(Path::new("reports")).expect("save table2");
+    println!("table2 report saved under reports/table2_sensitivity/");
+}

@@ -1,0 +1,48 @@
+//! Reproduce the paper's §III-B calibration end to end:
+//!
+//! 1. calibrate the Cacti-like estimator's knobs against the paper's
+//!    published Cacti fit coefficients,
+//! 2. run the four memory sweeps (Fig 2) with the calibrated estimator,
+//! 3. assemble the full area model (adding die-photo-derived β_VU and α_oh),
+//! 4. cross-check against the measured die blocks, the GTX 980 die area, and
+//!    validate on the Titan X (§III-C).
+//!
+//! Run with: `cargo run --release --example area_calibration`
+
+use codesign::area::{calibrate::calibrate_maxwell, AreaCoeffs};
+use codesign::cacti::{calibrate_to_paper, Knobs, PAPER_TARGETS};
+
+fn main() {
+    println!("== Cacti-knob calibration against the paper's published fits ==");
+    let rep = calibrate_to_paper(Knobs::initial());
+    println!("converged after {} objective evaluations", rep.iterations);
+    println!("knobs: {:#?}", rep.knobs);
+    println!("objective: {:.6e}", rep.objective);
+    println!("\n{:<16} {:>10} {:>10} | {:>10} {:>10}", "memory", "β err %", "α err %", "β paper", "α paper");
+    for (&(_, bt, at), &(name, eb, ea)) in PAPER_TARGETS.iter().zip(rep.errors_pct.iter()) {
+        println!("{name:<16} {eb:>10.2} {ea:>10.2} | {bt:>10.5} {at:>10.5}");
+    }
+
+    println!("\n== Full area-model calibration (Fig 2 + die photo) ==");
+    let cal = calibrate_maxwell();
+    for fit in &cal.sweeps {
+        println!(
+            "{:<16} beta={:.6} mm2/kB  alpha={:.6} mm2  r2={:.5}",
+            fit.name,
+            fit.beta(),
+            fit.alpha(),
+            fit.fit.r2
+        );
+    }
+    let p = AreaCoeffs::paper();
+    println!("\npaper:   beta_r={:.6} beta_m={:.5} beta_l1={:.4} beta_l2={:.5}", p.beta_r, p.beta_m, p.beta_l1, p.beta_l2);
+    println!("\nmemory block cross-check (die-photo measured vs model predicted, mm²):");
+    for (name, m, pr) in &cal.memory_crosscheck {
+        println!("  {name:<12} measured={m:>8.2}  predicted={pr:>8.2}");
+    }
+    println!("\nGTX 980 predicted die area: {:.1} mm² (published 398)", cal.gtx980_pred_mm2);
+    println!(
+        "Titan X predicted die area: {:.1} mm² (published 601, error {:.2}%)",
+        cal.titanx_pred_mm2, cal.titanx_err_pct
+    );
+}

@@ -1,0 +1,61 @@
+//! §V-A / E5: the cache-deletion comparison — how much of the codesign win
+//! is "remove the caches" versus "rebalance the architecture"?
+//!
+//! For each reference GPU this prints its stock performance, its area with
+//! caches deleted, and the best cache-less candidate design at (a) the full
+//! budget and (b) the reduced budget, against the paper's numbers.
+//!
+//! Run with: `cargo run --release --example cacheless [-- --quick]`
+
+use codesign::area::{AreaModel, HwParams};
+use codesign::codesign::cacheless::cacheless_comparison;
+use codesign::codesign::scenario::{run, Scenario};
+use codesign::report::fig3::paper_improvements;
+use codesign::timemodel::TimeModel;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let area_model = AreaModel::paper();
+
+    // The area decomposition first: what do the caches cost?
+    for (name, hw) in [("GTX 980", HwParams::gtx980()), ("Titan X", HwParams::titanx())] {
+        let b = area_model.breakdown(&hw);
+        println!(
+            "{name}: die {:.0} mm² = cores {:.0} + registers {:.0} + shm {:.0} + L1 {:.0} + L2 {:.0} + overhead {:.0}",
+            b.total(),
+            b.cores_mm2,
+            b.registers_mm2,
+            b.shared_mm2,
+            b.l1_mm2,
+            b.l2_mm2,
+            b.overhead_mm2
+        );
+        println!(
+            "  -> caches are {:.0} mm² ({:.0}% of the die); deleting them leaves {:.0} mm²",
+            b.caches_mm2(),
+            100.0 * b.caches_mm2() / b.total(),
+            b.total() - b.caches_mm2()
+        );
+    }
+
+    for base in [Scenario::paper_2d(), Scenario::paper_3d()] {
+        let name = base.name.clone();
+        let sc = if quick { Scenario::quick(base, 4) } else { base };
+        let res = run(&sc, &area_model, &TimeModel::maxwell());
+        println!("\n== {name} stencils ==");
+        for row in cacheless_comparison(&res, &area_model) {
+            println!(
+                "{}: stock {:.0} GFLOP/s @ {:.0} mm² | best candidate @ full budget {:+.1}% | @ cache-less budget ({:.0} mm²) {:+.1}%",
+                row.reference,
+                row.ref_gflops,
+                row.full_area_mm2,
+                row.full_budget_improvement_pct,
+                row.reduced_area_mm2,
+                row.improvement_pct
+            );
+        }
+        if let Some((g_full, t_full, g_cl, t_cl)) = paper_improvements(&name) {
+            println!("paper: gtx980 +{g_full}% full / +{g_cl}% cache-less; titanx +{t_full}% / +{t_cl}%");
+        }
+    }
+}

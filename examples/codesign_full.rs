@@ -1,0 +1,81 @@
+//! End-to-end reproduction of the paper's design-space exploration (§V-A,
+//! Fig 3, E3/E4/E5/E9): enumerate every feasible cache-less accelerator in
+//! the 200–650 mm² range, solve the eq. (18) codesign problem on each for
+//! both workload classes, extract the Pareto frontiers, and print the
+//! improvement statistics against the stock GTX 980 / Titan X.
+//!
+//! Run with: `cargo run --release --example codesign_full [-- --quick]`
+
+use codesign::area::AreaModel;
+use codesign::codesign::cacheless::cacheless_comparison;
+use codesign::codesign::scenario::{run, Scenario};
+use codesign::timemodel::TimeModel;
+use codesign::util::ascii_plot::ScatterPlot;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let area_model = AreaModel::paper();
+    let time_model = TimeModel::maxwell();
+
+    for base in [Scenario::paper_2d(), Scenario::paper_3d()] {
+        let name = base.name.clone();
+        let sc = if quick { Scenario::quick(base, 4) } else { base };
+        let t0 = std::time::Instant::now();
+        let res = run(&sc, &area_model, &time_model);
+        let dt = t0.elapsed();
+
+        println!("\n================ {name} stencils ================");
+        println!(
+            "design points: {} solved (+{} infeasible), pareto-optimal: {} ({:.1}%), {} model evals, {:.2?}",
+            res.points.len(),
+            res.infeasible_points,
+            res.pareto.len(),
+            100.0 * res.pareto.len() as f64 / res.points.len() as f64,
+            res.total_evals,
+            dt
+        );
+        for r in &res.references {
+            println!(
+                "  {:<8} area {:.0} mm² (published {:.0}), {:.0} GFLOP/s",
+                r.name, r.area_mm2, r.published_area_mm2, r.gflops
+            );
+        }
+        for (name, impr, hw) in &res.stats.vs_reference {
+            println!("  vs {name}: +{impr:.1}% at comparable area  (best: {})", hw.label());
+        }
+        for row in cacheless_comparison(&res, &area_model) {
+            println!(
+                "  cache-less {}: area {:.0}->{:.0} mm², improvement at reduced budget +{:.2}% (full budget +{:.2}%)",
+                row.reference,
+                row.full_area_mm2,
+                row.reduced_area_mm2,
+                row.improvement_pct,
+                row.full_budget_improvement_pct
+            );
+        }
+        // Fig 3 in the terminal.
+        let xy = res.xy();
+        let front: Vec<(f64, f64)> = res.pareto.iter().map(|&i| xy[i]).collect();
+        let refs: Vec<(f64, f64)> =
+            res.references.iter().map(|r| (r.area_mm2, r.gflops)).collect();
+        let mut plot = ScatterPlot::new(
+            &format!("Fig 3 ({name}): optimal performance vs chip area"),
+            "chip area (mm^2)",
+            "GFLOP/s",
+        );
+        plot.series("feasible designs", '.', xy);
+        plot.series("pareto", 'o', front);
+        plot.series("GTX980/TitanX", 'X', refs);
+        println!("\n{}", plot.render());
+
+        // Table II-style best-in-band summary.
+        if let Some(best) = res.best_within(450.0) {
+            println!(
+                "best design <= 450 mm²: {} -> {:.0} GFLOP/s ({:.0} mm²)",
+                best.hw.label(),
+                best.gflops,
+                best.area_mm2
+            );
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! Quickstart: the whole stack in one minute.
+//!
+//! 1. load an AOT-compiled Pallas stencil artifact and run it on the PJRT
+//!    CPU client (L3 executing L2/L1 output — Python is not involved);
+//! 2. ask the codesign optimizer for the optimal tile sizes of that stencil
+//!    on the stock GTX 980;
+//! 3. ask it for a better *hardware* design at the same silicon area.
+//!
+//! Run with: `make artifacts && cargo run --release --example quickstart`
+
+use codesign::area::{AreaModel, HwParams};
+use codesign::codesign::scenario::{run, Scenario};
+use codesign::opt::{solve_inner, InnerProblem, SolveOpts};
+use codesign::runtime::Engine;
+use codesign::stencil::defs::{Stencil, StencilId};
+use codesign::stencil::workload::ProblemSize;
+use codesign::timemodel::TimeModel;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. real numerics through PJRT ------------------------------------
+    let mut engine = Engine::from_default_artifacts()?;
+    println!("PJRT platform: {}", engine.platform());
+    let entry = engine.manifest().get("heat2d_256x256_t8").expect("make artifacts").clone();
+    let input = Engine::random_input(&entry, 7);
+    let sweep = engine.run_sweep(&entry.name, &input)?;
+    println!(
+        "ran {}: {} point-updates in {:?} ({:.1} ns/update)",
+        entry.name,
+        entry.points_per_sweep,
+        sweep.elapsed,
+        sweep.elapsed.as_nanos() as f64 / entry.points_per_sweep
+    );
+
+    // --- 2. optimal tile sizes on stock hardware (the PPoPP'17 problem) ---
+    let model = TimeModel::maxwell();
+    let p = InnerProblem {
+        stencil: *Stencil::get(StencilId::Heat2D),
+        size: ProblemSize::d2(8192, 4096),
+        hw: HwParams::gtx980(),
+    };
+    let sol = solve_inner(&model, &p, &SolveOpts::default()).expect("feasible");
+    println!(
+        "optimal tiles on GTX 980 for heat2d 8192x8192xT4096: tiles {} k={} -> {:.0} GFLOP/s ({:?}-bound)",
+        sol.sw.tiles.label(),
+        sol.sw.k,
+        sol.est.gflops,
+        sol.est.bound
+    );
+
+    // --- 3. codesign: a better machine at the same area -------------------
+    let sc = Scenario::quick(Scenario::paper_2d(), 8);
+    let res = run(&sc, &AreaModel::paper(), &TimeModel::maxwell());
+    let gtx = res.reference("gtx980").unwrap();
+    let best = res.best_within(gtx.area_mm2).unwrap();
+    println!(
+        "codesign: GTX 980 ({:.0} mm²) does {:.0} GFLOP/s on the 2-D mix; the optimizer finds {} at {:.0} mm² doing {:.0} GFLOP/s ({:+.0}%)",
+        gtx.area_mm2,
+        gtx.gflops,
+        best.hw.label(),
+        best.area_mm2,
+        best.gflops,
+        100.0 * (best.gflops / gtx.gflops - 1.0)
+    );
+    Ok(())
+}

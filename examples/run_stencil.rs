@@ -1,0 +1,78 @@
+//! E11 — end-to-end stencil execution: every artifact in the manifest is
+//! loaded, compiled and executed through PJRT; per-point costs are reported
+//! and the measured-mode C_iter table is derived (the paper's "measured
+//! C_iter" step, on this repo's CPU substrate).
+//!
+//! Run with: `make artifacts && cargo run --release --example run_stencil`
+
+use codesign::runtime::{citer_measure, Engine};
+use codesign::stencil::defs::ALL_STENCILS;
+use codesign::timemodel::CIterTable;
+
+fn main() -> anyhow::Result<()> {
+    let mut engine = Engine::from_default_artifacts()?;
+    println!("PJRT platform: {}", engine.platform());
+    println!("{:<28} {:>14} {:>12} {:>14}", "artifact", "points", "time", "ns/update");
+    let names: Vec<String> =
+        engine.manifest().entries.iter().map(|e| e.name.clone()).collect();
+    for name in names {
+        let entry = engine.manifest().get(&name).unwrap().clone();
+        let input = Engine::random_input(&entry, 1);
+        engine.run_sweep(&name, &input)?; // warm-up (compile)
+        let run = engine.run_sweep(&name, &input)?;
+        println!(
+            "{:<28} {:>14} {:>12?} {:>14.2}",
+            entry.name,
+            entry.points_per_sweep,
+            run.elapsed,
+            run.elapsed.as_nanos() as f64 / entry.points_per_sweep
+        );
+    }
+
+    // L1 time-tiling experiment: the fused ghost-zone artifacts do the same
+    // total point-updates as their plain twins with ~t_steps× fewer HBM
+    // round-trips per block (at the cost of redundant halo compute).
+    println!("\nfused (time-tiled) vs plain variants:");
+    let fused: Vec<String> = engine
+        .manifest()
+        .entries
+        .iter()
+        .filter(|e| e.pad > 1)
+        .map(|e| e.name.clone())
+        .collect();
+    for name in fused {
+        let plain_name = name.split("_fused").next().unwrap().to_string();
+        let mut time_of = |n: &str| -> anyhow::Result<f64> {
+            let entry = engine.manifest().get(n).unwrap().clone();
+            let input = Engine::random_input(&entry, 2);
+            engine.run_sweep(n, &input)?;
+            let mut best = f64::INFINITY;
+            for _ in 0..3 {
+                let r = engine.run_sweep(n, &input)?;
+                best = best.min(r.elapsed.as_nanos() as f64 / entry.points_per_sweep);
+            }
+            Ok(best)
+        };
+        let (fused_ns, plain_ns) = (time_of(&name)?, time_of(&plain_name)?);
+        println!(
+            "  {name}: {fused_ns:.2} ns/update vs plain {plain_ns:.2} ns/update ({:+.0}%)",
+            100.0 * (fused_ns / plain_ns - 1.0)
+        );
+    }
+
+    println!("\nmeasured-mode C_iter (anchored on jacobi2d paper value):");
+    let raw = citer_measure::measure_raw(&mut engine, 3)?;
+    let table = citer_measure::measure_citer(&mut engine, 3)?;
+    let paper = CIterTable::paper();
+    for st in &ALL_STENCILS {
+        let m = raw.iter().find(|m| m.stencil == st.id);
+        println!(
+            "  {:<12} {:>8.2} ns/pt -> {:>6.2} model cycles (paper mode {:>5.1})",
+            st.name(),
+            m.map(|m| m.ns_per_point).unwrap_or(f64::NAN),
+            table.get(st.id),
+            paper.get(st.id)
+        );
+    }
+    Ok(())
+}

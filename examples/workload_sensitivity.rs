@@ -1,0 +1,46 @@
+//! §V-B / Table II: workload sensitivity. Runs both sweeps through the
+//! memoizing coordinator, then derives per-benchmark optimal architectures
+//! by pure re-aggregation ("other scenarios for free") and prints the
+//! three-way Table II comparison (ours / paper / paper-config-under-our-model).
+//!
+//! Run with: `cargo run --release --example workload_sensitivity [-- --quick]`
+
+use codesign::area::AreaModel;
+use codesign::codesign::scenario::Scenario;
+use codesign::coordinator::Coordinator;
+use codesign::report::table2;
+use codesign::timemodel::{CIterTable, TimeModel};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell()).with_progress(1000);
+    let make = |base: Scenario| if quick { Scenario::quick(base, 4) } else { base };
+    let sc2d = make(Scenario::paper_2d());
+    let sc3d = make(Scenario::paper_3d());
+
+    eprintln!("running 2-D sweep…");
+    let r2d = coord.run_scenario(&sc2d);
+    eprintln!("running 3-D sweep…");
+    let r3d = coord.run_scenario(&sc3d);
+    eprintln!(
+        "cache: {} entries, {:.0}% hit rate over both sweeps",
+        coord.cache.len(),
+        100.0 * coord.cache.stats.hit_rate()
+    );
+
+    // The quick space may not reach the paper's 425–450 band; widen for -q.
+    let band = if quick { (380.0, 460.0) } else { (425.0, 450.0) };
+    let rep = table2::generate(
+        &r2d.result,
+        &sc2d.workload,
+        &r3d.result,
+        &sc3d.workload,
+        &TimeModel::maxwell(),
+        &CIterTable::paper(),
+        band,
+    );
+    print!("{}", rep.summary);
+    for f in rep.save(std::path::Path::new("reports")).unwrap() {
+        println!("wrote {}", f.display());
+    }
+}

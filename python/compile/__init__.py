@@ -1,0 +1,2 @@
+"""Build-time compile path: Pallas kernels (L1), JAX sweep graphs (L2) and
+the AOT HLO-text exporter. Python never runs on the Rust request path."""

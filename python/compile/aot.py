@@ -1,0 +1,132 @@
+"""AOT export: lower every (stencil, size) artifact variant to HLO **text**
+under `artifacts/`, plus a `manifest.json` the Rust runtime indexes.
+
+HLO text — not `.serialize()` — is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids that the crate-side XLA
+(xla_extension 0.5.1) rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as: `cd python && python -m compile.aot --out-dir ../artifacts`
+(idempotent; `make artifacts` wires the freshness check).
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels import fused
+from .kernels.ref import FLOPS_PER_POINT
+from .model import lower_sweep
+
+# Artifact variants: small ones exercise the end-to-end path (quickstart,
+# integration tests); the *_citer ones are the per-point cost measurement
+# workloads (runtime::citer_measure). Sizes are CPU-interpret tractable.
+VARIANTS = [
+    # (stencil, interior shape, T)
+    ("jacobi2d", (128, 128), 4),
+    ("heat2d", (128, 128), 4),
+    ("laplacian2d", (128, 128), 4),
+    ("gradient2d", (128, 128), 4),
+    ("heat3d", (32, 32, 32), 2),
+    ("laplacian3d", (32, 32, 32), 2),
+    ("jacobi2d", (256, 256), 8),
+    ("heat2d", (256, 256), 8),
+    ("laplacian2d", (256, 256), 8),
+    ("gradient2d", (256, 256), 8),
+    ("heat3d", (64, 64, 64), 4),
+    ("laplacian3d", (64, 64, 64), 4),
+]
+
+# Time-tiled (ghost-zone fused) variants: (stencil, shape, total T, fused
+# t_steps). Same total work as the matching plain variant — the L1
+# traffic-amortization experiment (EXPERIMENTS.md §Perf).
+FUSED_VARIANTS = [
+    ("jacobi2d", (256, 256), 8, 4),
+    ("heat2d", (256, 256), 8, 4),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def variant_name(stencil: str, shape, t: int) -> str:
+    dims = "x".join(str(s) for s in shape)
+    return f"{stencil}_{dims}_t{t}"
+
+
+def export_all(out_dir: pathlib.Path) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    entries = []
+    for stencil, shape, t in VARIANTS:
+        name = variant_name(stencil, shape, t)
+        path = out_dir / f"{name}.hlo.txt"
+        lowered = lower_sweep(stencil, shape, t)
+        text = to_hlo_text(lowered)
+        path.write_text(text)
+        points = 1.0
+        for s in shape:
+            points *= s
+        entries.append(
+            {
+                "name": name,
+                "file": path.name,
+                "stencil": stencil,
+                "shape": list(shape),
+                "t_steps": t,
+                "pad": 1,
+                "points_per_sweep": points * t,
+                "flops_per_point": FLOPS_PER_POINT[stencil],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    for stencil, shape, total_t, t_steps in FUSED_VARIANTS:
+        name = f"{variant_name(stencil, shape, total_t)}_fused{t_steps}"
+        path = out_dir / f"{name}.hlo.txt"
+        h = t_steps * fused.SIGMA
+        padded_shape = tuple(s + 2 * h for s in shape)
+        fn = fused.fused_sweep_fn(stencil, padded_shape, total_t, t_steps)
+        spec = jax.ShapeDtypeStruct(padded_shape, jnp.float32)
+        lowered = jax.jit(fn, donate_argnums=(0,)).lower(spec)
+        text = to_hlo_text(lowered)
+        path.write_text(text)
+        points = 1.0
+        for s in shape:
+            points *= s
+        entries.append(
+            {
+                "name": name,
+                "file": path.name,
+                "stencil": stencil,
+                "shape": list(shape),
+                "t_steps": total_t,
+                "pad": h,
+                "points_per_sweep": points * total_t,
+                "flops_per_point": FLOPS_PER_POINT[stencil],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    manifest = {"version": 1, "artifacts": entries}
+    # Manifest written last: it is the Makefile's freshness marker.
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'} ({len(entries)} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    export_all(pathlib.Path(args.out_dir))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Layer-1 Pallas stencil kernels (build-time only; never on the request path)."""
+
+from . import common, gradient2d, heat2d, heat3d, jacobi2d, laplacian2d, laplacian3d, ref
+
+STEP_FNS = {
+    "jacobi2d": jacobi2d.step,
+    "heat2d": heat2d.step,
+    "laplacian2d": laplacian2d.step,
+    "gradient2d": gradient2d.step,
+    "heat3d": heat3d.step,
+    "laplacian3d": laplacian3d.step,
+}
+
+__all__ = [
+    "common",
+    "ref",
+    "STEP_FNS",
+    "jacobi2d",
+    "heat2d",
+    "laplacian2d",
+    "gradient2d",
+    "heat3d",
+    "laplacian3d",
+]

@@ -1,0 +1,121 @@
+"""Shared machinery for the Pallas stencil kernels (Layer 1).
+
+Every stencil operates on a zero-padded array (halo ring of width sigma = 1,
+Dirichlet boundary): a step computes the interior from its neighbours and
+leaves the ring untouched.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA view
+— a threadblock stages a tile + halo into shared memory — maps here to one
+grid step of a ``pallas_call`` staging a block + halo into VMEM. The halo
+load is expressed with explicit dynamic slices from the full (ANY-space)
+input ref, because overlapping input windows are not expressible as a plain
+blocked ``BlockSpec``; the output is a standard blocked spec. Kernels are
+lowered with ``interpret=True`` — real-TPU lowering emits Mosaic custom
+calls the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+
+VMEM footprint per grid step (the L1 analogue of constraint (9)):
+``4 B · [(t1+2)(t2+2) + t1·t2]`` for 2-D, and the analogous product for 3-D
+— e.g. the default 64×64 fp32 block stages ~33 kB, comfortably inside a
+TPU core's ~16 MB VMEM; block shapes are chosen by `choose_tile` to divide
+the domain exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SIGMA = 1  # halo width of every paper stencil (all first-order)
+
+
+def choose_tile(extent: int, preferred: int = 64) -> int:
+    """Largest power-of-two block size <= preferred that divides `extent`."""
+    t = preferred
+    while t > 1:
+        if extent % t == 0:
+            return t
+        t //= 2
+    return 1
+
+
+def make_step_2d(compute):
+    """Build a 2-D stencil step: padded (S1+2, S2+2) -> interior (S1, S2).
+
+    `compute` maps a loaded (t1+2, t2+2) tile to its (t1, t2) output block.
+    """
+
+    def step(a_padded, t1=None, t2=None):
+        s1 = a_padded.shape[0] - 2 * SIGMA
+        s2 = a_padded.shape[1] - 2 * SIGMA
+        t1 = t1 or choose_tile(s1)
+        t2 = t2 or choose_tile(s2)
+        assert s1 % t1 == 0 and s2 % t2 == 0, "tiles must divide the domain"
+
+        def kernel(inp_ref, out_ref):
+            i = pl.program_id(0)
+            j = pl.program_id(1)
+            tile = inp_ref[
+                pl.dslice(i * t1, t1 + 2 * SIGMA), pl.dslice(j * t2, t2 + 2 * SIGMA)
+            ]
+            out_ref[...] = compute(tile)
+
+        return pl.pallas_call(
+            kernel,
+            grid=(s1 // t1, s2 // t2),
+            in_specs=[pl.BlockSpec(a_padded.shape, lambda i, j: (0, 0))],
+            out_specs=pl.BlockSpec((t1, t2), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((s1, s2), a_padded.dtype),
+            interpret=True,
+        )(a_padded)
+
+    return step
+
+
+def make_step_3d(compute):
+    """Build a 3-D stencil step: padded (S+2,)*3 -> interior (S1, S2, S3)."""
+
+    def step(a_padded, t1=None, t2=None, t3=None):
+        s1 = a_padded.shape[0] - 2 * SIGMA
+        s2 = a_padded.shape[1] - 2 * SIGMA
+        s3 = a_padded.shape[2] - 2 * SIGMA
+        t1 = t1 or choose_tile(s1, 32)
+        t2 = t2 or choose_tile(s2, 32)
+        t3 = t3 or choose_tile(s3, 32)
+        assert s1 % t1 == 0 and s2 % t2 == 0 and s3 % t3 == 0
+
+        def kernel(inp_ref, out_ref):
+            i = pl.program_id(0)
+            j = pl.program_id(1)
+            k = pl.program_id(2)
+            tile = inp_ref[
+                pl.dslice(i * t1, t1 + 2 * SIGMA),
+                pl.dslice(j * t2, t2 + 2 * SIGMA),
+                pl.dslice(k * t3, t3 + 2 * SIGMA),
+            ]
+            out_ref[...] = compute(tile)
+
+        return pl.pallas_call(
+            kernel,
+            grid=(s1 // t1, s2 // t2, s3 // t3),
+            in_specs=[pl.BlockSpec(a_padded.shape, lambda i, j, k: (0, 0, 0))],
+            out_specs=pl.BlockSpec((t1, t2, t3), lambda i, j, k: (i, j, k)),
+            out_shape=jax.ShapeDtypeStruct((s1, s2, s3), a_padded.dtype),
+            interpret=True,
+        )(a_padded)
+
+    return step
+
+
+def pad(a):
+    """Zero halo ring of width SIGMA around a 2-D or 3-D array."""
+    return jnp.pad(a, SIGMA)
+
+
+def vmem_footprint_bytes(tile_shape, dtype_bytes: int = 4) -> int:
+    """Staged bytes per grid step: input tile + halo, plus the output block."""
+    halo = 1
+    inp = 1
+    out = 1
+    for t in tile_shape:
+        inp *= t + 2 * halo
+        out *= t
+    return dtype_bytes * (inp + out)

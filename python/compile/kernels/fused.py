@@ -1,0 +1,131 @@
+"""Time-tiled (fused multi-step) Pallas kernels — the paper's core software
+idea expressed at Layer 1.
+
+The codesign model's whole premise is that time tiling amortizes off-chip
+traffic: a tile stages once and advances `t_T` time steps before writing
+back. This module realizes that at kernel level with the *ghost-zone /
+redundant-computation* scheme (Meng & Skadron [21], cited by the paper):
+one grid step loads a block plus a `t_steps`-deep halo into VMEM, applies
+the stencil `t_steps` times — the valid region shrinking by σ per step, the
+halo cells being recomputed redundantly — and stores the final block. HBM
+traffic per point-update drops by ~`t_steps`× at the cost of
+O(t_steps·σ/t) redundant compute per block edge.
+
+With the zero-Dirichlet ring held at zero for all time, a fused sweep is
+bit-for-bit the same computation as `t_steps` separate steps (asserted in
+`python/tests/test_fused.py`).
+
+VMEM footprint per grid step: `4 B · [(t1+2h)(t2+2h) + t1·t2]` with
+`h = t_steps` — e.g. 64×64, h = 4: 21.6 kB, still ~0.1% of VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import gradient2d, heat2d, jacobi2d, laplacian2d
+from .common import choose_tile
+
+SIGMA = 1
+
+# The single-step tile computations, reused from the plain kernels.
+_COMPUTE_2D = {
+    "jacobi2d": jacobi2d._compute,
+    "heat2d": heat2d._compute,
+    "laplacian2d": laplacian2d._compute,
+    "gradient2d": gradient2d._compute,
+}
+
+
+def make_fused_step_2d(name: str, t_steps: int):
+    """Build a fused 2-D stencil step advancing `t_steps` time steps per
+    VMEM residency. Input is padded by `h = t_steps·σ`; returns the interior.
+    """
+    compute = _COMPUTE_2D[name]
+    h = t_steps * SIGMA
+
+    def step(a_padded, t1=None, t2=None):
+        s1 = a_padded.shape[0] - 2 * h
+        s2 = a_padded.shape[1] - 2 * h
+        t1 = t1 or choose_tile(s1)
+        t2 = t2 or choose_tile(s2)
+        assert s1 % t1 == 0 and s2 % t2 == 0, "tiles must divide the domain"
+
+        def kernel(inp_ref, out_ref):
+            i = pl.program_id(0)
+            j = pl.program_id(1)
+            # Stage block + t_steps-deep halo.
+            tile = inp_ref[
+                pl.dslice(i * t1, t1 + 2 * h), pl.dslice(j * t2, t2 + 2 * h)
+            ]
+            # Advance time in VMEM; the valid region shrinks by σ per step.
+            # Cells of the global Dirichlet ring must stay zero at every
+            # intermediate time, so boundary tiles re-zero them (otherwise a
+            # ring cell inside the shrinking halo would evolve and pollute
+            # its interior neighbours at the next step).
+            for s in range(1, t_steps + 1):
+                tile = compute(tile)
+                rows = (
+                    jax.lax.broadcasted_iota(jnp.int32, tile.shape, 0)
+                    + i * t1
+                    + s * SIGMA
+                )
+                cols = (
+                    jax.lax.broadcasted_iota(jnp.int32, tile.shape, 1)
+                    + j * t2
+                    + s * SIGMA
+                )
+                inside = (
+                    (rows >= h) & (rows < h + s1) & (cols >= h) & (cols < h + s2)
+                )
+                tile = jnp.where(inside, tile, jnp.float32(0.0))
+            out_ref[...] = tile
+
+        return pl.pallas_call(
+            kernel,
+            grid=(s1 // t1, s2 // t2),
+            in_specs=[pl.BlockSpec(a_padded.shape, lambda i, j: (0, 0))],
+            out_specs=pl.BlockSpec((t1, t2), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((s1, s2), a_padded.dtype),
+            interpret=True,
+        )(a_padded)
+
+    return step
+
+
+def fused_sweep_fn(name: str, padded_shape, total_steps: int, t_steps: int, tiles=None):
+    """A jit-able `padded -> (padded,)` advancing `total_steps` via fused
+    blocks of `t_steps` (`total_steps` must be a multiple of `t_steps`).
+    The carry is padded by `h = t_steps·σ` zeros (the Dirichlet ring is zero
+    at every time, so the wider ring stays consistent)."""
+    assert total_steps % t_steps == 0, "total_steps must be a multiple of t_steps"
+    h = t_steps * SIGMA
+    step = make_fused_step_2d(name, t_steps)
+    tiles = tiles or ()
+
+    def body(_, a):
+        interior = step(a, *tiles)
+        return a.at[h:-h, h:-h].set(interior)
+
+    def fn(a):
+        return (jax.lax.fori_loop(0, total_steps // t_steps, body, a),)
+
+    _ = padded_shape
+    return fn
+
+
+def vmem_footprint_bytes(t1: int, t2: int, t_steps: int, dtype_bytes: int = 4) -> int:
+    """Staged bytes per fused grid step (input block + halo, output block)."""
+    h = t_steps * SIGMA
+    return dtype_bytes * ((t1 + 2 * h) * (t2 + 2 * h) + t1 * t2)
+
+
+def redundancy_factor(t1: int, t2: int, t_steps: int) -> float:
+    """Redundant-compute overhead of the ghost-zone scheme: total stencil
+    applications (shrinking trapezoid) divided by the useful t1·t2·t_steps."""
+    total = 0.0
+    for s in range(t_steps):
+        w1 = t1 + 2 * SIGMA * (t_steps - 1 - s)
+        w2 = t2 + 2 * SIGMA * (t_steps - 1 - s)
+        total += w1 * w2
+    return total / (t1 * t2 * t_steps)

@@ -1,0 +1,19 @@
+"""Gradient-2D (central-difference magnitude) Pallas kernel:
+o = sqrt(gx² + gy²), gx = (E−W)/2, gy = (S−N)/2."""
+
+import jax.numpy as jnp
+
+from . import common
+
+
+def _compute(tile):
+    n = tile[:-2, 1:-1]
+    s = tile[2:, 1:-1]
+    w = tile[1:-1, :-2]
+    e = tile[1:-1, 2:]
+    gx = 0.5 * (e - w)
+    gy = 0.5 * (s - n)
+    return jnp.sqrt(gx * gx + gy * gy)
+
+
+step = common.make_step_2d(_compute)

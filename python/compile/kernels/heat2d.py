@@ -1,0 +1,16 @@
+"""Heat-2D (explicit 5-point heat step) Pallas kernel:
+o = 0.5·C + 0.125·(N+S+E+W)."""
+
+from . import common
+
+
+def _compute(tile):
+    c = tile[1:-1, 1:-1]
+    n = tile[:-2, 1:-1]
+    s = tile[2:, 1:-1]
+    w = tile[1:-1, :-2]
+    e = tile[1:-1, 2:]
+    return 0.5 * c + 0.125 * (n + s + w + e)
+
+
+step = common.make_step_2d(_compute)

@@ -1,0 +1,18 @@
+"""Heat-3D (explicit 7-point heat step) Pallas kernel:
+o = 0.4·C + 0.1·Σ₆ neighbours."""
+
+from . import common
+
+
+def _compute(tile):
+    c = tile[1:-1, 1:-1, 1:-1]
+    xm = tile[:-2, 1:-1, 1:-1]
+    xp = tile[2:, 1:-1, 1:-1]
+    ym = tile[1:-1, :-2, 1:-1]
+    yp = tile[1:-1, 2:, 1:-1]
+    zm = tile[1:-1, 1:-1, :-2]
+    zp = tile[1:-1, 1:-1, 2:]
+    return 0.4 * c + 0.1 * (xm + xp + ym + yp + zm + zp)
+
+
+step = common.make_step_3d(_compute)

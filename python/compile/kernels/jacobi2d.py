@@ -1,0 +1,14 @@
+"""Jacobi-2D (5-point average) Pallas kernel: o = 0.25·(N+S+E+W)."""
+
+from . import common
+
+
+def _compute(tile):
+    n = tile[:-2, 1:-1]
+    s = tile[2:, 1:-1]
+    w = tile[1:-1, :-2]
+    e = tile[1:-1, 2:]
+    return 0.25 * (n + s + w + e)
+
+
+step = common.make_step_2d(_compute)

@@ -1,0 +1,15 @@
+"""Laplacian-2D (5-point operator) Pallas kernel: o = N+S+E+W − 4·C."""
+
+from . import common
+
+
+def _compute(tile):
+    c = tile[1:-1, 1:-1]
+    n = tile[:-2, 1:-1]
+    s = tile[2:, 1:-1]
+    w = tile[1:-1, :-2]
+    e = tile[1:-1, 2:]
+    return n + s + w + e - 4.0 * c
+
+
+step = common.make_step_2d(_compute)

@@ -1,0 +1,17 @@
+"""Laplacian-3D (7-point operator) Pallas kernel: o = Σ₆ neighbours − 6·C."""
+
+from . import common
+
+
+def _compute(tile):
+    c = tile[1:-1, 1:-1, 1:-1]
+    xm = tile[:-2, 1:-1, 1:-1]
+    xp = tile[2:, 1:-1, 1:-1]
+    ym = tile[1:-1, :-2, 1:-1]
+    yp = tile[1:-1, 2:, 1:-1]
+    zm = tile[1:-1, 1:-1, :-2]
+    zp = tile[1:-1, 1:-1, 2:]
+    return xm + xp + ym + yp + zm + zp - 6.0 * c
+
+
+step = common.make_step_3d(_compute)

@@ -1,0 +1,98 @@
+"""Pure-jnp oracle for every stencil (the correctness reference).
+
+Semantics shared with the Pallas kernels and the Rust model: arrays carry a
+zero Dirichlet halo ring of width 1; a step rewrites the interior only.
+Operation counts (flops/point) follow `rust/src/stencil/defs.rs` — they are
+the reporting convention for GFLOP/s, identical across all three layers.
+"""
+
+import jax.numpy as jnp
+
+SIGMA = 1
+
+
+def _interior_2d(a):
+    c = a[1:-1, 1:-1]
+    n = a[:-2, 1:-1]
+    s = a[2:, 1:-1]
+    w = a[1:-1, :-2]
+    e = a[1:-1, 2:]
+    return c, n, s, w, e
+
+
+def _interior_3d(a):
+    c = a[1:-1, 1:-1, 1:-1]
+    xm = a[:-2, 1:-1, 1:-1]
+    xp = a[2:, 1:-1, 1:-1]
+    ym = a[1:-1, :-2, 1:-1]
+    yp = a[1:-1, 2:, 1:-1]
+    zm = a[1:-1, 1:-1, :-2]
+    zp = a[1:-1, 1:-1, 2:]
+    return c, xm, xp, ym, yp, zm, zp
+
+
+def jacobi2d(a):
+    _, n, s, w, e = _interior_2d(a)
+    return 0.25 * (n + s + w + e)
+
+
+def heat2d(a):
+    c, n, s, w, e = _interior_2d(a)
+    return 0.5 * c + 0.125 * (n + s + w + e)
+
+
+def laplacian2d(a):
+    c, n, s, w, e = _interior_2d(a)
+    return n + s + w + e - 4.0 * c
+
+
+def gradient2d(a):
+    _, n, s, w, e = _interior_2d(a)
+    gx = 0.5 * (e - w)
+    gy = 0.5 * (s - n)
+    return jnp.sqrt(gx * gx + gy * gy)
+
+
+def heat3d(a):
+    c, xm, xp, ym, yp, zm, zp = _interior_3d(a)
+    return 0.4 * c + 0.1 * (xm + xp + ym + yp + zm + zp)
+
+
+def laplacian3d(a):
+    c, xm, xp, ym, yp, zm, zp = _interior_3d(a)
+    return xm + xp + ym + yp + zm + zp - 6.0 * c
+
+
+STEPS = {
+    "jacobi2d": jacobi2d,
+    "heat2d": heat2d,
+    "laplacian2d": laplacian2d,
+    "gradient2d": gradient2d,
+    "heat3d": heat3d,
+    "laplacian3d": laplacian3d,
+}
+
+# Canonical flops/point — keep in sync with rust/src/stencil/defs.rs.
+FLOPS_PER_POINT = {
+    "jacobi2d": 4.0,
+    "heat2d": 10.0,
+    "laplacian2d": 6.0,
+    "gradient2d": 14.0,
+    "heat3d": 14.0,
+    "laplacian3d": 8.0,
+}
+
+
+def step_ref(name, a_padded):
+    """One reference step: returns the padded array with interior updated."""
+    interior = STEPS[name](a_padded)
+    if a_padded.ndim == 2:
+        return a_padded.at[1:-1, 1:-1].set(interior)
+    return a_padded.at[1:-1, 1:-1, 1:-1].set(interior)
+
+
+def sweep_ref(name, a_padded, t_steps):
+    """T reference steps."""
+    for _ in range(t_steps):
+        a_padded = step_ref(name, a_padded)
+    return a_padded

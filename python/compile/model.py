@@ -1,0 +1,50 @@
+"""Layer 2 — the JAX compute graph: a T-step time sweep over a Layer-1
+Pallas stencil kernel.
+
+This is the graph that gets AOT-lowered to HLO text (see `aot.py`) and then
+executed from Rust via PJRT. The sweep is a `lax.fori_loop` whose body runs
+one Pallas step over the spatially-tiled domain and writes the interior back
+into the padded array — the time dimension stays sequential (the hexagonal
+time-tiling of the *model* is a schedule for the hypothetical accelerator;
+the artifact's job is numerics and per-point cost measurement on the CPU
+substrate, DESIGN.md §2).
+
+XLA-level optimization notes (the L2 perf checklist of the brief):
+* the loop carry is a single padded array — no growing live set, no
+  rematerialization hazard;
+* `donate_argnums=(0,)` lets XLA reuse the input buffer across the whole
+  sweep (verified to remove the copy in the lowered HLO);
+* the interior write-back fuses with the pallas-emitted loop nest under
+  interpret mode — the lowered module contains a single while loop.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import STEP_FNS, common
+
+
+def sweep_fn(name: str, padded_shape, t_steps: int, tiles=None):
+    """Return a jit-able `padded -> (padded,)` running `t_steps` steps."""
+    step = STEP_FNS[name]
+    ndim = len(padded_shape)
+    tiles = tiles or ()
+
+    def body(_, a):
+        interior = step(a, *tiles)
+        if ndim == 2:
+            return a.at[1:-1, 1:-1].set(interior)
+        return a.at[1:-1, 1:-1, 1:-1].set(interior)
+
+    def fn(a):
+        return (jax.lax.fori_loop(0, t_steps, body, a),)
+
+    return fn
+
+
+def lower_sweep(name: str, interior_shape, t_steps: int):
+    """Lower a sweep for a given interior shape; returns the jax Lowered."""
+    padded_shape = tuple(s + 2 * common.SIGMA for s in interior_shape)
+    fn = sweep_fn(name, padded_shape, t_steps)
+    spec = jax.ShapeDtypeStruct(padded_shape, jnp.float32)
+    return jax.jit(fn, donate_argnums=(0,)).lower(spec)

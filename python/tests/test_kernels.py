@@ -1,0 +1,118 @@
+"""L1 correctness: every Pallas kernel against the pure-jnp oracle, with
+hypothesis sweeping domain shapes, tile shapes and input distributions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import STEP_FNS, common, ref
+
+STENCILS_2D = ["jacobi2d", "heat2d", "laplacian2d", "gradient2d"]
+STENCILS_3D = ["heat3d", "laplacian3d"]
+
+
+def rand_padded(rng, shape):
+    """Random interior in [-1, 1] with a zero halo ring."""
+    interior = rng.uniform(-1.0, 1.0, size=shape).astype(np.float32)
+    return jnp.asarray(np.pad(interior, common.SIGMA))
+
+
+@pytest.mark.parametrize("name", STENCILS_2D)
+def test_2d_kernel_matches_ref_default_tiles(name):
+    rng = np.random.default_rng(0)
+    a = rand_padded(rng, (64, 64))
+    got = STEP_FNS[name](a)
+    want = ref.STEPS[name](a)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", STENCILS_3D)
+def test_3d_kernel_matches_ref_default_tiles(name):
+    rng = np.random.default_rng(1)
+    a = rand_padded(rng, (16, 16, 16))
+    got = STEP_FNS[name](a)
+    want = ref.STEPS[name](a)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    name=st.sampled_from(STENCILS_2D),
+    s1_blocks=st.integers(1, 4),
+    s2_blocks=st.integers(1, 4),
+    t1=st.sampled_from([4, 8, 16]),
+    t2=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_2d_kernel_matches_ref_swept(name, s1_blocks, s2_blocks, t1, t2, seed):
+    rng = np.random.default_rng(seed)
+    a = rand_padded(rng, (s1_blocks * t1, s2_blocks * t2))
+    got = STEP_FNS[name](a, t1, t2)
+    want = ref.STEPS[name](a)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    name=st.sampled_from(STENCILS_3D),
+    blocks=st.tuples(st.integers(1, 2), st.integers(1, 2), st.integers(1, 2)),
+    tile=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_3d_kernel_matches_ref_swept(name, blocks, tile, seed):
+    rng = np.random.default_rng(seed)
+    shape = tuple(b * tile for b in blocks)
+    a = rand_padded(rng, shape)
+    got = STEP_FNS[name](a, tile, tile, tile)
+    want = ref.STEPS[name](a)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_tile_must_divide_domain():
+    a = rand_padded(np.random.default_rng(2), (10, 10))
+    with pytest.raises(AssertionError):
+        STEP_FNS["jacobi2d"](a, 4, 4)  # 10 % 4 != 0
+
+
+def test_choose_tile():
+    assert common.choose_tile(128) == 64
+    assert common.choose_tile(96) == 32
+    assert common.choose_tile(10) == 2
+    assert common.choose_tile(7) == 1
+
+
+def test_vmem_footprint():
+    # 64x64 fp32: (66*66 + 64*64) * 4 B ≈ 33.8 kB.
+    fp = common.vmem_footprint_bytes((64, 64))
+    assert fp == 4 * (66 * 66 + 64 * 64)
+    assert fp < 16 * 2**20, "block must fit VMEM"
+
+
+def test_boundary_ring_untouched_by_sweep():
+    rng = np.random.default_rng(3)
+    a = rand_padded(rng, (16, 16))
+    out = ref.sweep_ref("heat2d", a, 3)
+    np.testing.assert_array_equal(np.asarray(out)[0, :], 0.0)
+    np.testing.assert_array_equal(np.asarray(out)[:, -1], 0.0)
+
+
+def test_jacobi_constant_field_midpoint():
+    # Interior of all-ones: away from the boundary the 4-neighbour average
+    # stays 1.
+    a = jnp.asarray(np.pad(np.ones((8, 8), np.float32), 1))
+    out = STEP_FNS["jacobi2d"](a)
+    assert abs(float(out[4, 4]) - 1.0) < 1e-6
+
+
+def test_gradient_nonnegative():
+    rng = np.random.default_rng(4)
+    a = rand_padded(rng, (32, 32))
+    out = np.asarray(STEP_FNS["gradient2d"](a))
+    assert (out >= 0.0).all()
+
+
+def test_flops_table_covers_all_stencils():
+    assert set(ref.FLOPS_PER_POINT) == set(STEP_FNS)
+    assert all(v > 0 for v in ref.FLOPS_PER_POINT.values())

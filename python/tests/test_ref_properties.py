@@ -1,0 +1,108 @@
+"""Mathematical properties of the reference stencils (and hence, via the
+allclose tests, of the Pallas kernels): invariance on constant fields,
+convexity bounds, linearity, symmetry."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import common, ref
+
+
+def const_padded(value, shape):
+    a = np.full(shape, value, np.float32)
+    return jnp.asarray(np.pad(a, common.SIGMA))
+
+
+def rand_padded(seed, shape, lo=-1.0, hi=1.0):
+    rng = np.random.default_rng(seed)
+    interior = rng.uniform(lo, hi, size=shape).astype(np.float32)
+    return jnp.asarray(np.pad(interior, common.SIGMA))
+
+
+def deep_interior(x):
+    """Values at least 2 cells away from the boundary ring."""
+    if x.ndim == 2:
+        return x[2:-2, 2:-2]
+    return x[2:-2, 2:-2, 2:-2]
+
+
+def test_jacobi_preserves_constant_in_deep_interior():
+    a = const_padded(3.5, (16, 16))
+    out = ref.jacobi2d(a)
+    np.testing.assert_allclose(deep_interior(np.pad(np.asarray(out), 1)), 3.5, rtol=1e-6)
+
+
+def test_heat_preserves_constant_in_deep_interior():
+    # 0.5 + 4*0.125 = 1: the step is an affine combination with weight 1.
+    a = const_padded(2.0, (16, 16))
+    out = np.asarray(ref.heat2d(a))
+    np.testing.assert_allclose(out[2:-2, 2:-2], 2.0, rtol=1e-6)
+
+
+def test_heat3d_preserves_constant_in_deep_interior():
+    # 0.4 + 6*0.1 = 1.
+    a = const_padded(1.5, (8, 8, 8))
+    out = np.asarray(ref.heat3d(a))
+    np.testing.assert_allclose(out[2:-2, 2:-2, 2:-2], 1.5, rtol=1e-6)
+
+
+@pytest.mark.parametrize("name", ["laplacian2d", "laplacian3d", "gradient2d"])
+def test_derivative_stencils_vanish_on_constants(name):
+    shape = (8, 8, 8) if name.endswith("3d") else (16, 16)
+    a = const_padded(7.0, shape)
+    out = np.asarray(ref.STEPS[name](a))
+    # Interior away from the zero boundary ring.
+    inner = out[2:-2, 2:-2] if out.ndim == 2 else out[2:-2, 2:-2, 2:-2]
+    np.testing.assert_allclose(inner, 0.0, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_convex_steps_are_bounded(seed):
+    # Jacobi/Heat are convex combinations: outputs stay within input range.
+    a = rand_padded(seed, (16, 16))
+    amin, amax = float(jnp.min(a)), float(jnp.max(a))
+    for name in ["jacobi2d", "heat2d"]:
+        out = ref.STEPS[name](a)
+        assert float(jnp.min(out)) >= amin - 1e-6
+        assert float(jnp.max(out)) <= amax + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.1, 10.0))
+def test_linear_stencils_are_homogeneous(seed, scale):
+    a = rand_padded(seed, (16, 16))
+    for name in ["jacobi2d", "heat2d", "laplacian2d"]:
+        out1 = np.asarray(ref.STEPS[name](a)) * scale
+        out2 = np.asarray(ref.STEPS[name](a * scale))
+        np.testing.assert_allclose(out1, out2, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_gradient_is_scale_homogeneous_of_degree_one(seed):
+    a = rand_padded(seed, (16, 16))
+    out1 = np.asarray(ref.gradient2d(a)) * 2.0
+    out2 = np.asarray(ref.gradient2d(a * 2.0))
+    np.testing.assert_allclose(out1, out2, rtol=1e-4, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_symmetric_stencils_commute_with_transpose(seed):
+    a = rand_padded(seed, (16, 16))
+    for name in ["jacobi2d", "heat2d", "laplacian2d", "gradient2d"]:
+        out_t = np.asarray(ref.STEPS[name](a.T))
+        t_out = np.asarray(ref.STEPS[name](a)).T
+        np.testing.assert_allclose(out_t, t_out, rtol=1e-5, atol=1e-6)
+
+
+def test_heat_sweep_converges_towards_zero_with_zero_boundary():
+    # With a zero Dirichlet ring, repeated heat steps dissipate energy.
+    a = rand_padded(5, (16, 16))
+    e0 = float(jnp.sum(a * a))
+    out = ref.sweep_ref("heat2d", a, 50)
+    e1 = float(jnp.sum(out * out))
+    assert e1 < e0 * 0.5, f"energy {e0} -> {e1}"

@@ -1,0 +1,151 @@
+//! End-to-end calibration pipeline (§III-B): Cacti-like sweeps → memory
+//! coefficients; die photo → core-logic and overhead coefficients; then
+//! validation against the Titan X (§III-C).
+
+use crate::area::diephoto::DiePhoto;
+use crate::area::model::{AreaCoeffs, AreaModel};
+use crate::area::params::HwParams;
+use crate::cacti::estimator::SramEstimator;
+use crate::cacti::sweep::{run_paper_sweeps, SweepFit};
+
+/// Everything the calibration run produces, for reporting (Fig 2 + §III-B/C).
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    /// The four memory sweeps with their fitted linear models.
+    pub sweeps: Vec<SweepFit>,
+    /// The assembled coefficient set.
+    pub coeffs: AreaCoeffs,
+    /// Cross-check of the memory model vs the die-photo block measurements
+    /// (§III-B's "measured vs predicted" table): (name, measured, predicted).
+    pub memory_crosscheck: Vec<(&'static str, f64, f64)>,
+    /// GTX 980 total predicted by the calibrated model, mm².
+    pub gtx980_pred_mm2: f64,
+    /// Titan X total predicted by the calibrated model, mm² (validation).
+    pub titanx_pred_mm2: f64,
+    /// Titan X relative error vs the published 601 mm², %.
+    pub titanx_err_pct: f64,
+}
+
+/// Published die areas used for calibration/validation targets.
+pub const GTX980_DIE_MM2: f64 = 398.0;
+pub const TITANX_DIE_MM2: f64 = 601.0;
+
+/// Run the full §III-B pipeline with a given estimator and die photo.
+pub fn calibrate(est: &SramEstimator, photo: &DiePhoto) -> Calibration {
+    let sweeps = run_paper_sweeps(est);
+    let get = |name: &str| {
+        sweeps
+            .iter()
+            .find(|f| f.name == name)
+            .unwrap_or_else(|| panic!("missing sweep {name}"))
+    };
+    let rf = get("register_file");
+    let shm = get("shared_memory");
+    let l1 = get("l1_cache");
+    let l2 = get("l2_cache");
+
+    let gtx = HwParams::gtx980();
+    let coeffs = AreaCoeffs {
+        beta_vu: photo.beta_vu(),
+        beta_r: rf.beta(),
+        alpha_r: rf.alpha(),
+        beta_m: shm.beta(),
+        alpha_m: shm.alpha(),
+        beta_l1: l1.beta(),
+        alpha_l1: l1.alpha(),
+        beta_l2: l2.beta(),
+        alpha_l2: l2.alpha(),
+        alpha_oh: photo.alpha_oh(gtx.n_sm),
+    };
+
+    // §III-B cross-check: predict the die-photo memory blocks from the fits.
+    // The measured blocks are the chip-level L2 (2 MB), one SM-pair's L1
+    // (48 kB) and one SM's shared memory (96 kB) — this is the reading under
+    // which the paper's own stated predictions (98.25 / 7.78 / 1.59 mm²)
+    // follow from its published coefficients.
+    let memory_crosscheck = vec![
+        (
+            "l2_total",
+            photo.block_mm2("l2_total").unwrap(),
+            coeffs.beta_l2 * gtx.l2_kb + coeffs.alpha_l2,
+        ),
+        (
+            "l1_total",
+            photo.block_mm2("l1_total").unwrap(),
+            coeffs.beta_l1 * gtx.l1_smpair_kb + coeffs.alpha_l1,
+        ),
+        (
+            "shm_per_sm",
+            photo.block_mm2("shm_per_sm").unwrap(),
+            coeffs.beta_m * gtx.m_sm_kb + coeffs.alpha_m,
+        ),
+    ];
+
+    let model = AreaModel::new(coeffs);
+    let gtx980_pred = model.area_mm2(&gtx);
+    let titanx_pred = model.area_mm2(&HwParams::titanx());
+    Calibration {
+        sweeps,
+        coeffs,
+        memory_crosscheck,
+        gtx980_pred_mm2: gtx980_pred,
+        titanx_pred_mm2: titanx_pred,
+        titanx_err_pct: 100.0 * (titanx_pred - TITANX_DIE_MM2).abs() / TITANX_DIE_MM2,
+    }
+}
+
+/// Convenience: calibrate with the default Maxwell estimator + GTX 980 photo.
+pub fn calibrate_maxwell() -> Calibration {
+    calibrate(&SramEstimator::maxwell(), &DiePhoto::gtx980())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibrated_coeffs_close_to_paper() {
+        let cal = calibrate_maxwell();
+        let p = AreaCoeffs::paper();
+        let close = |a: f64, b: f64, tol: f64, what: &str| {
+            assert!(((a - b) / b).abs() < tol, "{what}: got {a}, paper {b}");
+        };
+        close(cal.coeffs.beta_r, p.beta_r, 0.05, "beta_r");
+        close(cal.coeffs.beta_m, p.beta_m, 0.05, "beta_m");
+        close(cal.coeffs.beta_l1, p.beta_l1, 0.05, "beta_l1");
+        close(cal.coeffs.beta_l2, p.beta_l2, 0.05, "beta_l2");
+        // Die-photo-derived coefficients are exact by construction.
+        close(cal.coeffs.beta_vu, p.beta_vu, 1e-6, "beta_vu");
+        close(cal.coeffs.alpha_oh, p.alpha_oh, 1e-3, "alpha_oh");
+    }
+
+    #[test]
+    fn gtx980_and_titanx_predictions() {
+        let cal = calibrate_maxwell();
+        // The un-folded eq. (5) decomposition sits ~3–4% from the published
+        // die areas (the paper's headline 1.96% comes from the folded eq. (6)
+        // form — see `area::model::tests::titanx_validation_eq6_within_two_pct`).
+        let e980 = 100.0 * (cal.gtx980_pred_mm2 - GTX980_DIE_MM2).abs() / GTX980_DIE_MM2;
+        assert!(e980 < 4.0, "GTX980 {} mm² ({e980:.2}%)", cal.gtx980_pred_mm2);
+        assert!(
+            cal.titanx_err_pct < 4.5,
+            "TitanX {} mm² ({:.2}%)",
+            cal.titanx_pred_mm2,
+            cal.titanx_err_pct
+        );
+    }
+
+    #[test]
+    fn crosscheck_same_order_of_magnitude() {
+        // The paper's own cross-check has errors up to ~25% (shm 1.27 vs
+        // 1.59); require the same looseness, not more.
+        let cal = calibrate_maxwell();
+        for (name, measured, predicted) in &cal.memory_crosscheck {
+            let ratio = predicted / measured;
+            assert!(
+                (0.5..2.0).contains(&ratio),
+                "{name}: measured {measured} vs predicted {predicted}"
+            );
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! Analytical GPU silicon-area model (§III of the paper).
+//!
+//! `A_tot(n_SM, n_V, R_VU, M_SM, L1, L2)` per eq. (3)–(6): per-SM vector-unit
+//! and memory terms, chip-level caches, and a per-SM overhead for I/O, global
+//! routing, gigathread scheduler, PCI and memory controllers. Coefficients
+//! come from two sources, exactly as in the paper:
+//!
+//! 1. the four memory linear fits out of the Cacti-like estimator
+//!    ([`crate::cacti`], Fig 2), and
+//! 2. die-photomicrograph measurements of the GTX 980 ([`diephoto`]):
+//!    per-vector-unit core logic area β_VU and per-SM overhead α_oh.
+//!
+//! Calibrated on the GTX 980, validated on the Titan X (§III-C; ≤ 2% error).
+
+pub mod calibrate;
+pub mod diephoto;
+pub mod model;
+pub mod params;
+
+pub use calibrate::{calibrate, Calibration};
+pub use diephoto::DiePhoto;
+pub use model::{AreaBreakdown, AreaCoeffs, AreaModel};
+pub use params::HwParams;

@@ -1,0 +1,265 @@
+//! The area model proper: eq. (3)–(6).
+
+use crate::area::params::HwParams;
+
+/// Calibrated coefficients of eq. (5). Units: mm² and mm²/kB.
+///
+/// The four (β, α) memory pairs come from the Cacti-like sweeps (Fig 2);
+/// `beta_vu` and `alpha_oh` from die-photo measurements ([`super::diephoto`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AreaCoeffs {
+    /// Core-logic area per vector unit (mm²), excluding its register file.
+    pub beta_vu: f64,
+    /// Register file: mm² per kB per vector unit / fixed per vector unit.
+    pub beta_r: f64,
+    pub alpha_r: f64,
+    /// Shared memory: mm² per kB per SM / fixed per SM.
+    pub beta_m: f64,
+    pub alpha_m: f64,
+    /// L1 cache: mm² per kB per SM-pair / fixed per SM-pair.
+    pub beta_l1: f64,
+    pub alpha_l1: f64,
+    /// L2 cache: mm² per kB / fixed, chip-level.
+    pub beta_l2: f64,
+    pub alpha_l2: f64,
+    /// Common overhead per SM (I/O, routing, controllers…), mm².
+    pub alpha_oh: f64,
+}
+
+impl AreaCoeffs {
+    /// The paper's published calibration (§III-B): Cacti fits + GTX 980 die
+    /// measurements. These are the exact constants behind eq. (6).
+    pub fn paper() -> AreaCoeffs {
+        AreaCoeffs {
+            beta_vu: 0.04282,
+            beta_r: 0.004305,
+            alpha_r: 0.001947,
+            beta_m: 0.01565,
+            alpha_m: 0.09281,
+            beta_l1: 0.1604,
+            alpha_l1: 0.08204,
+            beta_l2: 0.04197,
+            alpha_l2: 0.7685,
+            alpha_oh: 6.4156,
+        }
+    }
+}
+
+/// Per-component area decomposition of a design (drives Fig 4).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AreaBreakdown {
+    /// Vector-unit core logic: `n_SM · n_V · β_VU`.
+    pub cores_mm2: f64,
+    /// Register files: `n_SM · n_V · (β_R·R_VU + α_R)`.
+    pub registers_mm2: f64,
+    /// Shared memory: `n_SM · (β_M·M_SM + α_M)`.
+    pub shared_mm2: f64,
+    /// L1: `(n_SM/2) · (β_L1·L1 + α_L1)`; zero for cache-less designs.
+    pub l1_mm2: f64,
+    /// L2: `β_L2·L2 + α_L2`; zero for cache-less designs.
+    pub l2_mm2: f64,
+    /// Common overhead: `n_SM · α_oh`.
+    pub overhead_mm2: f64,
+}
+
+impl AreaBreakdown {
+    pub fn total(&self) -> f64 {
+        self.cores_mm2
+            + self.registers_mm2
+            + self.shared_mm2
+            + self.l1_mm2
+            + self.l2_mm2
+            + self.overhead_mm2
+    }
+
+    /// All caches (L1 + L2).
+    pub fn caches_mm2(&self) -> f64 {
+        self.l1_mm2 + self.l2_mm2
+    }
+
+    /// All explicitly-managed memory (register files + shared memory) —
+    /// Fig 4's "memory" axis.
+    pub fn memory_mm2(&self) -> f64 {
+        self.registers_mm2 + self.shared_mm2
+    }
+
+    /// Fig 4 axes: (% of chip area in memory, % in vector units).
+    pub fn allocation_pcts(&self) -> (f64, f64) {
+        let t = self.total();
+        (100.0 * self.memory_mm2() / t, 100.0 * self.cores_mm2 / t)
+    }
+}
+
+/// The analytical area model, eq. (5).
+#[derive(Clone, Copy, Debug)]
+pub struct AreaModel {
+    pub coeffs: AreaCoeffs,
+}
+
+impl AreaModel {
+    pub fn new(coeffs: AreaCoeffs) -> AreaModel {
+        AreaModel { coeffs }
+    }
+
+    /// Model with the paper's published coefficients.
+    pub fn paper() -> AreaModel {
+        AreaModel::new(AreaCoeffs::paper())
+    }
+
+    /// Full per-component decomposition for a design point.
+    ///
+    /// Cache terms are dropped entirely (including their α fixed costs) when
+    /// the corresponding capacity is zero — a cache-less design has no cache
+    /// periphery either.
+    pub fn breakdown(&self, h: &HwParams) -> AreaBreakdown {
+        let c = &self.coeffs;
+        let n_sm = h.n_sm as f64;
+        let n_v = h.n_v as f64;
+        let l1 = if h.l1_smpair_kb > 0.0 {
+            (n_sm / 2.0) * (c.beta_l1 * h.l1_smpair_kb + c.alpha_l1)
+        } else {
+            0.0
+        };
+        let l2 = if h.l2_kb > 0.0 { c.beta_l2 * h.l2_kb + c.alpha_l2 } else { 0.0 };
+        AreaBreakdown {
+            cores_mm2: n_sm * n_v * c.beta_vu,
+            registers_mm2: n_sm * n_v * (c.beta_r * h.r_vu_kb + c.alpha_r),
+            shared_mm2: n_sm * (c.beta_m * h.m_sm_kb + c.alpha_m),
+            l1_mm2: l1,
+            l2_mm2: l2,
+            overhead_mm2: n_sm * c.alpha_oh,
+        }
+    }
+
+    /// Total die area, mm² — `A_tot` of eq. (5).
+    pub fn area_mm2(&self, h: &HwParams) -> f64 {
+        self.breakdown(h).total()
+    }
+
+    /// The paper's simplified published form, eq. (6):
+    ///
+    /// ```text
+    /// A_tot = 0.0447·n_SM·n_V + 0.0043·R_VU·n_SM·n_V + 0.015·M_SM·n_SM
+    ///       + 0.08·L1_SMpair·n_SM + 0.041·L2_kB + 7.317·n_SM
+    /// ```
+    ///
+    /// Note eq. (6) folds `β_VU + α_R` into 0.0447, halves β_L1 (per-pair →
+    /// per-SM), and folds `α_M + α_L1/2 + α_L2/… + α_oh` into the 7.317·n_SM
+    /// term (which slightly re-attributes the chip-level constant `α_L2` to
+    /// SMs). Kept verbatim for comparison against [`AreaModel::area_mm2`].
+    pub fn paper_eq6(h: &HwParams) -> f64 {
+        0.0447 * (h.n_sm * h.n_v) as f64
+            + 0.0043 * h.r_vu_kb * (h.n_sm * h.n_v) as f64
+            + 0.015 * h.m_sm_kb * h.n_sm as f64
+            + 0.08 * h.l1_smpair_kb * h.n_sm as f64
+            + 0.041 * h.l2_kb
+            + 7.317 * h.n_sm as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gtx980_close_to_published_die_area() {
+        // Calibration target: the GTX 980 die is 398 mm².
+        let a = AreaModel::paper().area_mm2(&HwParams::gtx980());
+        let err = (a - 398.0).abs() / 398.0 * 100.0;
+        assert!(err < 3.0, "GTX980 area {a} mm² ({err:.2}% off 398)");
+    }
+
+    #[test]
+    fn titanx_validation_eq6_within_two_pct() {
+        // §III-C: the paper predicts 589.2 mm² vs published 601 mm² (1.96%).
+        // That prediction comes from the published eq. (6) (whose folded
+        // 7.317·n_SM term re-attributes α_L2 per SM); reproduce it there.
+        let a = AreaModel::paper_eq6(&HwParams::titanx());
+        let err = (a - 601.0).abs() / 601.0 * 100.0;
+        assert!(err < 2.0, "TitanX eq6 area {a} mm² ({err:.2}% off 601)");
+    }
+
+    #[test]
+    fn titanx_validation_eq5_within_four_pct() {
+        // The exact eq. (5) decomposition (no folding) is slightly farther
+        // off the published die area; document the envelope.
+        let a = AreaModel::paper().area_mm2(&HwParams::titanx());
+        let err = (a - 601.0).abs() / 601.0 * 100.0;
+        assert!(err < 4.0, "TitanX eq5 area {a} mm² ({err:.2}% off 601)");
+    }
+
+    #[test]
+    fn gtx980_validation_eq6_within_one_pct() {
+        let a = AreaModel::paper_eq6(&HwParams::gtx980());
+        let err = (a - 398.0).abs() / 398.0 * 100.0;
+        assert!(err < 1.0, "GTX980 eq6 area {a} mm² ({err:.2}% off 398)");
+    }
+
+    #[test]
+    fn eq5_and_eq6_agree_roughly() {
+        // eq. (6) folds α_L2 into the per-SM overhead term, so the two forms
+        // differ by ~α_L2·(n_SM−1) ≈ 2–3%.
+        let m = AreaModel::paper();
+        for h in [HwParams::gtx980(), HwParams::titanx()] {
+            let a5 = m.area_mm2(&h);
+            let a6 = AreaModel::paper_eq6(&h);
+            assert!(
+                ((a5 - a6) / a6).abs() < 0.04,
+                "eq5={a5} eq6={a6} for {}",
+                h.label()
+            );
+        }
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let m = AreaModel::paper();
+        let h = HwParams::gtx980();
+        let b = m.breakdown(&h);
+        assert!((b.total() - m.area_mm2(&h)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cacheless_drops_cache_area_entirely() {
+        let m = AreaModel::paper();
+        let g = HwParams::gtx980();
+        let b = m.breakdown(&g);
+        let bc = m.breakdown(&g.without_caches());
+        assert_eq!(bc.caches_mm2(), 0.0);
+        assert!((b.total() - bc.total() - b.caches_mm2()).abs() < 1e-9);
+        // The paper says deleting GTX 980 caches lands near 237 mm²; our
+        // exact-coefficient computation gives ~249 mm². Assert the ballpark.
+        assert!(
+            (230.0..265.0).contains(&bc.total()),
+            "cacheless GTX980 = {}",
+            bc.total()
+        );
+    }
+
+    #[test]
+    fn area_monotone_in_every_parameter() {
+        let m = AreaModel::paper();
+        let base = HwParams::gtx980();
+        let a0 = m.area_mm2(&base);
+        for (i, h) in [
+            HwParams { n_sm: base.n_sm + 2, ..base },
+            HwParams { n_v: base.n_v + 32, ..base },
+            HwParams { r_vu_kb: base.r_vu_kb + 1.0, ..base },
+            HwParams { m_sm_kb: base.m_sm_kb + 48.0, ..base },
+            HwParams { l1_smpair_kb: base.l1_smpair_kb + 16.0, ..base },
+            HwParams { l2_kb: base.l2_kb + 512.0, ..base },
+        ]
+        .iter()
+        .enumerate()
+        {
+            assert!(m.area_mm2(h) > a0, "not monotone in param {i}");
+        }
+    }
+
+    #[test]
+    fn allocation_pcts_sane() {
+        let b = AreaModel::paper().breakdown(&HwParams::gtx980());
+        let (mem, cores) = b.allocation_pcts();
+        assert!(mem > 0.0 && cores > 0.0 && mem + cores < 100.0);
+    }
+}

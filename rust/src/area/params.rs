@@ -1,0 +1,128 @@
+//! Hardware parameter vectors (the h-vector of the codesign problem) and the
+//! two reference Maxwell configurations used throughout the paper.
+
+/// An accelerator hardware configuration.
+///
+/// Fields mirror Table I's elementary parameters. Cache-less design points
+/// (the paper's proposed architectures, §V-A) set `l1_smpair_kb` and `l2_kb`
+/// to zero.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HwParams {
+    /// Number of streaming multiprocessors, `n_SM`.
+    pub n_sm: u32,
+    /// Vector units (cores) per SM, `n_V`.
+    pub n_v: u32,
+    /// Register file per vector unit, kB (`R_VU`; GTX 980: 512 × 32-bit = 2 kB).
+    pub r_vu_kb: f64,
+    /// Shared (scratchpad) memory per SM, kB (`M_SM`).
+    pub m_sm_kb: f64,
+    /// L1 cache per SM-pair, kB (`L1_SMpair`).
+    pub l1_smpair_kb: f64,
+    /// Total chip-level L2 cache, kB (`L2`); not scaled by `n_SM` (§III-A).
+    pub l2_kb: f64,
+}
+
+impl HwParams {
+    /// NVIDIA GeForce GTX 980 (Maxwell GM204): 16 SMs × 128 cores, 96 kB
+    /// shared memory per SM, 48 kB L1 per SM-pair, 2 MB L2, 2 kB registers
+    /// per vector unit. Published die area: 398 mm².
+    pub fn gtx980() -> HwParams {
+        HwParams {
+            n_sm: 16,
+            n_v: 128,
+            r_vu_kb: 2.0,
+            m_sm_kb: 96.0,
+            l1_smpair_kb: 48.0,
+            l2_kb: 2048.0,
+        }
+    }
+
+    /// NVIDIA GeForce GTX Titan X (Maxwell GM200): 24 SMs × 128 cores, 3 MB
+    /// L2, otherwise GTX 980-like. Published die area: 601 mm².
+    pub fn titanx() -> HwParams {
+        HwParams { n_sm: 24, n_v: 128, r_vu_kb: 2.0, m_sm_kb: 96.0, l1_smpair_kb: 48.0, l2_kb: 3072.0 }
+    }
+
+    /// This configuration with all caches removed (§V-A's "delete the
+    /// caches" scenario). Register file and shared memory are kept.
+    pub fn without_caches(&self) -> HwParams {
+        HwParams { l1_smpair_kb: 0.0, l2_kb: 0.0, ..*self }
+    }
+
+    /// Total vector units on the chip.
+    pub fn total_cores(&self) -> u32 {
+        self.n_sm * self.n_v
+    }
+
+    /// Total shared memory on the chip, kB.
+    pub fn total_shared_kb(&self) -> f64 {
+        self.m_sm_kb * self.n_sm as f64
+    }
+
+    /// Manufacturer-pattern feasibility per constraints (12)–(15) and §IV-B:
+    /// `n_SM` even, `n_V` a positive multiple of 32, `M_SM` positive.
+    pub fn respects_manufacturer_patterns(&self) -> bool {
+        self.n_sm >= 2
+            && self.n_sm % 2 == 0
+            && self.n_v >= 32
+            && self.n_v % 32 == 0
+            && self.m_sm_kb > 0.0
+            && self.r_vu_kb > 0.0
+            && self.l1_smpair_kb >= 0.0
+            && self.l2_kb >= 0.0
+    }
+
+    /// Short human-readable identifier, e.g. `16sm x 128v, 96kB shm`.
+    pub fn label(&self) -> String {
+        let caches = if self.l1_smpair_kb == 0.0 && self.l2_kb == 0.0 {
+            ", cacheless".to_string()
+        } else {
+            String::new()
+        };
+        format!("{}sm x {}v, {}kB shm{}", self.n_sm, self.n_v, self.m_sm_kb, caches)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_configs_are_feasible() {
+        assert!(HwParams::gtx980().respects_manufacturer_patterns());
+        assert!(HwParams::titanx().respects_manufacturer_patterns());
+    }
+
+    #[test]
+    fn gtx980_headline_numbers() {
+        let g = HwParams::gtx980();
+        assert_eq!(g.total_cores(), 2048);
+        assert_eq!(g.total_shared_kb(), 1536.0);
+    }
+
+    #[test]
+    fn cacheless_strips_only_caches() {
+        let g = HwParams::gtx980().without_caches();
+        assert_eq!(g.l1_smpair_kb, 0.0);
+        assert_eq!(g.l2_kb, 0.0);
+        assert_eq!(g.m_sm_kb, 96.0);
+        assert_eq!(g.n_sm, 16);
+        assert!(g.respects_manufacturer_patterns());
+    }
+
+    #[test]
+    fn pattern_checks_reject_odd_configs() {
+        let mut p = HwParams::gtx980();
+        p.n_sm = 15;
+        assert!(!p.respects_manufacturer_patterns());
+        let mut p = HwParams::gtx980();
+        p.n_v = 100;
+        assert!(!p.respects_manufacturer_patterns());
+    }
+
+    #[test]
+    fn label_mentions_cacheless() {
+        assert!(HwParams::gtx980().without_caches().label().contains("cacheless"));
+        assert!(!HwParams::gtx980().label().contains("cacheless"));
+    }
+}

@@ -1,0 +1,184 @@
+//! Calibration of the estimator's free constants against the paper's
+//! published Cacti fit coefficients (§III-B).
+//!
+//! The paper reports, per memory type, the linear model `area = β·kB + α`
+//! extracted from Cacti 6.5 sweeps. We treat those eight numbers as ground
+//! truth and fit our estimator's eight knobs to reproduce them: a coordinate-
+//! descent search in log-space minimizing the summed squared relative error
+//! of (β, α) across the four memory types. The intercepts are weighted less
+//! than the slopes because the downstream area model (§III-A, eq. 5–6) is
+//! dominated by the β terms at realistic capacities.
+
+use crate::cacti::estimator::SramEstimator;
+use crate::cacti::sweep::{paper_sweeps, run_sweep};
+use crate::cacti::tech::{Knobs, TechNode};
+
+/// The paper's published fit coefficients, in sweep order
+/// (register_file, shared_memory, l1_cache, l2_cache): `(β mm²/kB, α mm²)`.
+pub const PAPER_TARGETS: [(&str, f64, f64); 4] = [
+    ("register_file", 0.004305, 0.001947),
+    ("shared_memory", 0.01565, 0.09281),
+    ("l1_cache", 0.1604, 0.08204),
+    ("l2_cache", 0.04197, 0.7685),
+];
+
+/// Outcome of a calibration run.
+#[derive(Clone, Debug)]
+pub struct CalibrationReport {
+    pub knobs: Knobs,
+    /// Final objective (weighted sum of squared relative coefficient errors).
+    pub objective: f64,
+    /// Per-memory-type relative errors in % for (β, α).
+    pub errors_pct: Vec<(&'static str, f64, f64)>,
+    pub iterations: usize,
+}
+
+impl CalibrationReport {
+    /// Largest |error| across all eight coefficients, %.
+    pub fn worst_error_pct(&self) -> f64 {
+        self.errors_pct
+            .iter()
+            .flat_map(|&(_, b, a)| [b.abs(), a.abs()])
+            .fold(0.0, f64::max)
+    }
+
+    /// Largest |β error| across the four memory types, %.
+    pub fn worst_beta_error_pct(&self) -> f64 {
+        self.errors_pct.iter().map(|&(_, b, _)| b.abs()).fold(0.0, f64::max)
+    }
+}
+
+const SLOPE_WEIGHT: f64 = 1.0;
+const INTERCEPT_WEIGHT: f64 = 0.15;
+
+fn objective(knobs: &Knobs) -> f64 {
+    let est = SramEstimator::new(TechNode::tsmc28(), *knobs);
+    let mut acc = 0.0;
+    for (sweep, &(_, beta_t, alpha_t)) in paper_sweeps().iter().zip(PAPER_TARGETS.iter()) {
+        let fit = run_sweep(&est, sweep);
+        let eb = (fit.beta() - beta_t) / beta_t;
+        let ea = (fit.alpha() - alpha_t) / alpha_t;
+        acc += SLOPE_WEIGHT * eb * eb + INTERCEPT_WEIGHT * ea * ea;
+    }
+    acc
+}
+
+fn report_for(knobs: Knobs, iterations: usize) -> CalibrationReport {
+    let est = SramEstimator::new(TechNode::tsmc28(), knobs);
+    let errors: Vec<(&'static str, f64, f64)> = paper_sweeps()
+        .iter()
+        .zip(PAPER_TARGETS.iter())
+        .map(|(sweep, &(name, beta_t, alpha_t))| {
+            let fit = run_sweep(&est, sweep);
+            (
+                name,
+                100.0 * (fit.beta() - beta_t) / beta_t,
+                100.0 * (fit.alpha() - alpha_t) / alpha_t,
+            )
+        })
+        .collect();
+    CalibrationReport { knobs, objective: objective(&knobs), errors_pct: errors, iterations }
+}
+
+/// Coordinate descent in log-space from `start`, shrinking the step factor
+/// until convergence. Deterministic; ~10⁴ objective evaluations.
+pub fn calibrate_to_paper(start: Knobs) -> CalibrationReport {
+    let mut x = start.as_vec();
+    let mut best = objective(&Knobs::from_vec(&x));
+    let mut step = 0.30; // multiplicative step
+    let mut iters = 0usize;
+    while step > 1e-4 {
+        let mut improved = false;
+        for dim in 0..x.len() {
+            for dir in [1.0 + step, 1.0 / (1.0 + step)] {
+                let mut cand = x;
+                cand[dim] *= dir;
+                // Keep knobs in physically sensible ranges.
+                if !knob_ok(dim, cand[dim]) {
+                    continue;
+                }
+                let obj = objective(&Knobs::from_vec(&cand));
+                iters += 1;
+                if obj < best {
+                    best = obj;
+                    x = cand;
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            step *= 0.5;
+        }
+    }
+    report_for(Knobs::from_vec(&x), iters)
+}
+
+fn knob_ok(dim: usize, v: f64) -> bool {
+    match dim {
+        0 => (0.05..=0.8).contains(&v),   // port_growth
+        1 => (1.0..=3.0).contains(&v),    // base_periph
+        2 => (1.0..=6.0).contains(&v),    // cache_factor
+        3 => (1.0..=4.0).contains(&v),    // fa_factor
+        4 => (0.0..=50.0).contains(&v),   // row_cost_um
+        5 => (0.0..=500.0).contains(&v),  // col_cost_um2
+        6 => (0.0..=1e5).contains(&v),    // fixed_per_port_um2
+        7 => (0.0..=1e4).contains(&v),    // fixed_per_bit_width_um2
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_converges_tightly_on_slopes() {
+        let rep = calibrate_to_paper(Knobs::initial());
+        assert!(
+            rep.worst_beta_error_pct() < 5.0,
+            "worst β error {}% (errors {:?})",
+            rep.worst_beta_error_pct(),
+            rep.errors_pct
+        );
+    }
+
+    #[test]
+    fn calibration_intercepts_reasonable() {
+        let rep = calibrate_to_paper(Knobs::initial());
+        // Intercepts are second-order for the downstream model (they change
+        // chip totals by < 1.5 mm² out of ~400 mm²): our periphery law cannot
+        // simultaneously match Cacti's four α values, and the calibration
+        // deliberately weights slopes over intercepts. Require the right
+        // order of magnitude only.
+        for &(name, _, ea) in &rep.errors_pct {
+            assert!(ea.abs() < 95.0, "{name} α error {ea}%");
+        }
+    }
+
+    #[test]
+    fn stored_defaults_match_fresh_calibration() {
+        // `Knobs::tsmc28_calibrated()` must be the converged output of
+        // `calibrate_to_paper(Knobs::initial())` (paste-updated when the
+        // estimator changes). Tolerate small drift.
+        let fresh = calibrate_to_paper(Knobs::initial()).knobs.as_vec();
+        let stored = Knobs::tsmc28_calibrated().as_vec();
+        for (i, (f, s)) in fresh.iter().zip(stored.iter()).enumerate() {
+            let denom = f.abs().max(1e-9);
+            assert!(
+                ((f - s) / denom).abs() < 0.05,
+                "knob {i} drifted: fresh={f} stored={s}"
+            );
+        }
+    }
+
+    #[test]
+    fn calibrated_estimator_matches_paper_coefficients() {
+        let rep = report_for(Knobs::tsmc28_calibrated(), 0);
+        assert!(
+            rep.worst_beta_error_pct() < 5.0,
+            "stored knobs β error {}%: {:?}",
+            rep.worst_beta_error_pct(),
+            rep.errors_pct
+        );
+    }
+}

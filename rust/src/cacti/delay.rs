@@ -1,0 +1,127 @@
+//! Access-time (delay) estimation — the other half of what Cacti gives.
+//!
+//! The paper configures Cacti with delay objectives ("minimize area, with a
+//! secondary objective of minimizing propagation delays", "tailored for
+//! speed"); our substitute needs a delay model for one purpose: grounding
+//! the time model's shared-memory latency scaling
+//! ([`crate::timemodel::MachineSpec::latency_factor_for`], ablated in E12).
+//!
+//! Model: an optimally-banked SRAM. Unbanked, word/bit-line RC delay grows
+//! linearly with the array side (≈ √capacity with distributed-RC partial
+//! compensation); splitting into `b` banks cuts the in-bank side by √b but
+//! adds an H-tree traversal growing with the chip-side of the bank grid.
+//! Balancing the two at the optimal bank count leaves the classic
+//! **capacity^(1/4)** envelope — which is exactly the exponent the machine
+//! model uses.
+
+use crate::cacti::estimator::MemConfig;
+use crate::cacti::tech::TechNode;
+
+/// Delay-model constants for a technology node.
+#[derive(Clone, Copy, Debug)]
+pub struct DelayModel {
+    /// Fixed decode + sense overhead, ns.
+    pub t_fixed_ns: f64,
+    /// In-bank RC delay per µm of array side, ns/µm.
+    pub t_wire_ns_per_um: f64,
+    /// H-tree routing delay per µm, ns/µm (repeated wires are faster).
+    pub t_htree_ns_per_um: f64,
+    /// Per-extra-port delay penalty (longer lines through fatter cells).
+    pub port_penalty: f64,
+}
+
+impl DelayModel {
+    /// TSMC 28 nm-class constants (sub-ns SRAM at small capacities).
+    pub fn tsmc28() -> DelayModel {
+        DelayModel {
+            t_fixed_ns: 0.3,
+            t_wire_ns_per_um: 0.004,
+            t_htree_ns_per_um: 0.0004,
+            port_penalty: 0.12,
+        }
+    }
+
+    /// Access time of an optimally-banked array, ns.
+    pub fn access_ns(&self, tech: &TechNode, cfg: &MemConfig) -> f64 {
+        let bits = cfg.data_bits() + cfg.tag_bits();
+        let p = cfg.ports.total().max(1) as f64;
+        let cell_side_um = tech.bitcell_um2.sqrt() * (1.0 + self.port_penalty * (p - 1.0));
+        // Try bank counts 1..=256 (powers of two) and keep the fastest.
+        let mut best = f64::INFINITY;
+        let mut b = 1.0f64;
+        while b <= 256.0 {
+            let bank_side_um = (bits / b).sqrt() * cell_side_um;
+            let htree_um = (b.sqrt() - 1.0) * bank_side_um * 2.0;
+            let t = self.t_fixed_ns
+                + self.t_wire_ns_per_um * bank_side_um
+                + self.t_htree_ns_per_um * htree_um;
+            best = best.min(t);
+            b *= 2.0;
+        }
+        best
+    }
+
+    /// Latency of a capacity relative to the 96 kB Maxwell reference, for a
+    /// shared-memory-like configuration.
+    pub fn shm_relative_latency(&self, tech: &TechNode, capacity_kb: f64) -> f64 {
+        let at = |kb: f64| self.access_ns(tech, &MemConfig::shared_memory(kb));
+        at(capacity_kb) / at(96.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timemodel::machine::MachineSpec;
+
+    #[test]
+    fn delay_grows_with_capacity() {
+        let d = DelayModel::tsmc28();
+        let t = TechNode::tsmc28();
+        let mut last = 0.0;
+        for kb in [12.0, 48.0, 96.0, 192.0, 480.0] {
+            let a = d.access_ns(&t, &MemConfig::shared_memory(kb));
+            assert!(a > last, "not monotone at {kb} kB");
+            last = a;
+        }
+    }
+
+    #[test]
+    fn absolute_delays_plausible_for_28nm() {
+        // 28 nm SRAMs are sub-ns small, ~1–2 ns at hundreds of kB.
+        let d = DelayModel::tsmc28();
+        let t = TechNode::tsmc28();
+        let small = d.access_ns(&t, &MemConfig::register_file(2.0));
+        let big = d.access_ns(&t, &MemConfig::shared_memory(480.0));
+        assert!((0.2..0.8).contains(&small), "RF access {small} ns");
+        assert!((0.5..4.0).contains(&big), "480 kB access {big} ns");
+    }
+
+    #[test]
+    fn banked_envelope_matches_machine_latency_exponent() {
+        // The machine model scales λ as (M_SM/96)^0.25; the banked delay
+        // model must produce the same envelope within ~20% over the design
+        // space's M_SM range — this is the E12 assumption's grounding.
+        let d = DelayModel::tsmc28();
+        let t = TechNode::tsmc28();
+        let m = MachineSpec::maxwell();
+        for kb in [24.0, 48.0, 192.0, 384.0, 480.0] {
+            let from_delay = d.shm_relative_latency(&t, kb);
+            let from_machine = m.latency_factor_for(kb) / m.latency_factor_for(96.0);
+            let ratio = from_delay / from_machine;
+            assert!(
+                (0.8..1.25).contains(&ratio),
+                "{kb} kB: delay-model rel {from_delay:.3} vs machine rel {from_machine:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn more_ports_slower() {
+        let d = DelayModel::tsmc28();
+        let t = TechNode::tsmc28();
+        let a1 = d.access_ns(&t, &MemConfig::register_file(2.0));
+        let a2 = d.access_ns(&t, &MemConfig::l1_cache(2.0));
+        assert!(a2 > a1);
+    }
+}

@@ -1,0 +1,258 @@
+//! The area estimator proper: one memory configuration in, mm² out.
+
+use crate::cacti::tech::{Knobs, TechNode};
+
+/// Read/write port configuration of a bank.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Ports {
+    /// Exclusive read ports.
+    pub read: u32,
+    /// Exclusive write ports.
+    pub write: u32,
+    /// Shared read-write ports.
+    pub rw: u32,
+}
+
+impl Ports {
+    pub fn new(read: u32, write: u32, rw: u32) -> Ports {
+        Ports { read, write, rw }
+    }
+
+    /// Total physical ports (each rw port wires one wordline + bitline pair,
+    /// like a single-direction port).
+    pub fn total(&self) -> u32 {
+        self.read + self.write + self.rw
+    }
+}
+
+/// Set associativity for cache-type memories.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Associativity {
+    DirectMapped,
+    SetAssociative(u32),
+    Full,
+}
+
+/// RAM vs cache organization.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MemKind {
+    /// Plain scratchpad / register-file array: no tags.
+    Ram,
+    /// Cache: adds a tag array (with CAM cells when fully associative),
+    /// comparators and line state.
+    Cache { line_bytes: u32, assoc: Associativity },
+}
+
+/// A memory bank configuration, mirroring the fields one gives Cacti.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MemConfig {
+    pub capacity_kb: f64,
+    pub data_width_bits: u32,
+    pub ports: Ports,
+    pub kind: MemKind,
+}
+
+impl MemConfig {
+    /// The paper's register-file config: direct-mapped 'ram', 32-bit bus,
+    /// 2 exclusive read + 1 exclusive write ports (§III-B).
+    pub fn register_file(capacity_kb: f64) -> MemConfig {
+        MemConfig {
+            capacity_kb,
+            data_width_bits: 32,
+            ports: Ports::new(2, 1, 0),
+            kind: MemKind::Ram,
+        }
+    }
+
+    /// The paper's shared-memory config: direct-mapped 'ram', 32-bit bus on
+    /// each of 8 read-write ports (§III-B).
+    pub fn shared_memory(capacity_kb: f64) -> MemConfig {
+        MemConfig {
+            capacity_kb,
+            data_width_bits: 32,
+            ports: Ports::new(0, 0, 8),
+            kind: MemKind::Ram,
+        }
+    }
+
+    /// The paper's L1 config: 'cache', 128-byte lines, fully associative,
+    /// 32-bit data width, 8 exclusive read + 8 exclusive write ports.
+    pub fn l1_cache(capacity_kb: f64) -> MemConfig {
+        MemConfig {
+            capacity_kb,
+            data_width_bits: 32,
+            ports: Ports::new(8, 8, 0),
+            kind: MemKind::Cache { line_bytes: 128, assoc: Associativity::Full },
+        }
+    }
+
+    /// The paper's L2 config: 'cache', 128-byte lines, 256-bit bus on 8
+    /// exclusive read ports plus one read-write port upstream.
+    pub fn l2_cache(capacity_kb: f64) -> MemConfig {
+        MemConfig {
+            capacity_kb,
+            data_width_bits: 256,
+            ports: Ports::new(8, 0, 1),
+            kind: MemKind::Cache { line_bytes: 128, assoc: Associativity::SetAssociative(16) },
+        }
+    }
+
+    /// Data bits stored (excluding tags).
+    pub fn data_bits(&self) -> f64 {
+        self.capacity_kb * 1024.0 * 8.0
+    }
+
+    /// Tag bits for cache organizations (40-bit physical address assumed,
+    /// plus valid+dirty state per line).
+    pub fn tag_bits(&self) -> f64 {
+        match self.kind {
+            MemKind::Ram => 0.0,
+            MemKind::Cache { line_bytes, .. } => {
+                let lines = self.capacity_kb * 1024.0 / line_bytes as f64;
+                let tag_width = 40.0 - (line_bytes as f64).log2() + 2.0;
+                lines * tag_width
+            }
+        }
+    }
+}
+
+/// The estimator: a technology node plus calibrated knobs.
+#[derive(Clone, Debug)]
+pub struct SramEstimator {
+    pub tech: TechNode,
+    pub knobs: Knobs,
+}
+
+impl SramEstimator {
+    /// Estimator at TSMC 28 nm with paper-calibrated knobs — the
+    /// configuration every downstream module uses.
+    pub fn maxwell() -> SramEstimator {
+        SramEstimator { tech: TechNode::tsmc28(), knobs: Knobs::tsmc28_calibrated() }
+    }
+
+    pub fn new(tech: TechNode, knobs: Knobs) -> SramEstimator {
+        SramEstimator { tech, knobs }
+    }
+
+    /// Effective area of one stored bit, µm², after port replication and
+    /// organization overheads.
+    fn cell_um2(&self, cfg: &MemConfig) -> f64 {
+        let k = &self.knobs;
+        let p = cfg.ports.total().max(1) as f64;
+        let port_factor = {
+            let lin = 1.0 + k.port_growth * (p - 1.0);
+            lin * lin
+        };
+        let mut a = self.tech.bitcell_um2 * k.base_periph * port_factor;
+        if let MemKind::Cache { assoc, .. } = cfg.kind {
+            a *= k.cache_factor;
+            if assoc == Associativity::Full {
+                a *= k.fa_factor;
+            }
+        }
+        a
+    }
+
+    /// Total bank area in mm².
+    ///
+    /// Structure: data array + tag array (cache) + √-shaped row/column
+    /// periphery + fixed per-port and per-bus-bit overheads. The √ terms are
+    /// what give the paper's linear fits their positive intercepts.
+    pub fn area_mm2(&self, cfg: &MemConfig) -> f64 {
+        assert!(cfg.capacity_kb > 0.0, "capacity must be positive");
+        let k = &self.knobs;
+        let bits = cfg.data_bits() + cfg.tag_bits();
+        let cell = self.cell_um2(cfg);
+        let array_um2 = bits * cell;
+
+        // Square-ish subarray: rows = cols = sqrt(bits). Periphery rows carry
+        // wordline drivers/decoder slices, columns carry sense amps and write
+        // drivers; both replicate per port.
+        let p = cfg.ports.total().max(1) as f64;
+        let side = bits.sqrt();
+        let cell_pitch_um = cell.sqrt();
+        let row_periph_um2 = k.row_cost_um * side * cell_pitch_um * p;
+        let col_periph_um2 = k.col_cost_um2 * side * p;
+
+        let fixed_um2 =
+            k.fixed_per_port_um2 * p + k.fixed_per_bit_width_um2 * cfg.data_width_bits as f64;
+
+        (array_um2 + row_periph_um2 + col_periph_um2 + fixed_um2) / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn est() -> SramEstimator {
+        SramEstimator::maxwell()
+    }
+
+    #[test]
+    fn area_monotone_in_capacity() {
+        let e = est();
+        let mut last = 0.0;
+        for kb in [0.5, 1.0, 2.0, 4.0, 8.0, 16.0] {
+            let a = e.area_mm2(&MemConfig::register_file(kb));
+            assert!(a > last, "area not monotone at {kb} kB");
+            last = a;
+        }
+    }
+
+    #[test]
+    fn area_monotone_in_ports() {
+        let e = est();
+        let mut cfg = MemConfig::shared_memory(96.0);
+        let a8 = e.area_mm2(&cfg);
+        cfg.ports = Ports::new(0, 0, 16);
+        let a16 = e.area_mm2(&cfg);
+        assert!(a16 > a8 * 1.5, "port scaling too weak: {a8} -> {a16}");
+    }
+
+    #[test]
+    fn cache_costs_more_than_ram() {
+        let e = est();
+        let ram = MemConfig {
+            capacity_kb: 48.0,
+            data_width_bits: 32,
+            ports: Ports::new(8, 8, 0),
+            kind: MemKind::Ram,
+        };
+        let cache = MemConfig::l1_cache(48.0);
+        assert!(e.area_mm2(&cache) > e.area_mm2(&ram));
+    }
+
+    #[test]
+    fn fully_associative_costs_more_than_set_assoc() {
+        let e = est();
+        let mut fa = MemConfig::l1_cache(48.0);
+        let area_fa = e.area_mm2(&fa);
+        fa.kind = MemKind::Cache { line_bytes: 128, assoc: Associativity::SetAssociative(8) };
+        let area_sa = e.area_mm2(&fa);
+        assert!(area_fa > area_sa);
+    }
+
+    #[test]
+    fn tag_bits_zero_for_ram() {
+        assert_eq!(MemConfig::register_file(1.0).tag_bits(), 0.0);
+        assert!(MemConfig::l1_cache(48.0).tag_bits() > 0.0);
+    }
+
+    #[test]
+    fn ports_total() {
+        assert_eq!(Ports::new(2, 1, 0).total(), 3);
+        assert_eq!(Ports::new(8, 0, 1).total(), 9);
+    }
+
+    #[test]
+    fn bigger_node_bigger_area() {
+        let small = SramEstimator::new(TechNode::tsmc28(), Knobs::tsmc28_calibrated());
+        let big = SramEstimator::new(
+            TechNode::tsmc28().shrunk(2.0, "fat"),
+            Knobs::tsmc28_calibrated(),
+        );
+        let cfg = MemConfig::shared_memory(96.0);
+        assert!(big.area_mm2(&cfg) > small.area_mm2(&cfg));
+    }
+}

@@ -1,0 +1,29 @@
+//! Cacti-like SRAM / cache silicon-area estimator.
+//!
+//! The paper (§III-B) calibrates its four memory-area linear models — register
+//! file, shared memory, L1 and L2 — by running HP Labs' **Cacti 6.5** over a
+//! sweep of bank sizes and fitting `area = β·size + α` per memory type. Cacti
+//! is not available in this offline image, so this module implements a
+//! simplified analytical estimator with the same *interface* (a memory
+//! configuration in, an area estimate out) and the same *usage pattern*
+//! (sweep sizes → linear fit → α/β coefficients).
+//!
+//! The estimator is physically structured (bit cells scaled by a quadratic
+//! multi-port growth law, √-shaped row/column periphery, tag arrays and
+//! associativity overheads for caches) and its handful of free constants are
+//! **calibrated once against the coefficients the paper published from its
+//! Cacti runs** (β_R, α_R, β_M, α_M, β_L1, α_L1, β_L2, α_L2) — see
+//! [`calibrate`] and DESIGN.md §2 for why this substitution preserves the
+//! downstream behaviour (the area model consumes only the fitted
+//! coefficients, never raw Cacti output).
+
+pub mod calibrate;
+pub mod delay;
+pub mod estimator;
+pub mod sweep;
+pub mod tech;
+
+pub use calibrate::{calibrate_to_paper, CalibrationReport, PAPER_TARGETS};
+pub use estimator::{Associativity, MemConfig, MemKind, Ports, SramEstimator};
+pub use sweep::{paper_sweeps, MemorySweep, SweepFit};
+pub use tech::{Knobs, TechNode};

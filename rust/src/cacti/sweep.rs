@@ -1,0 +1,115 @@
+//! The paper's §III-B sweep-and-fit procedure: estimate bank areas over the
+//! exact size grids the paper fed Cacti, then least-squares a linear model
+//! per memory type. These fits are the only thing the downstream area model
+//! consumes (Fig 2).
+
+use crate::cacti::estimator::{MemConfig, SramEstimator};
+use crate::util::regression::{linear_fit, LinearFit};
+
+/// One memory type's sweep definition.
+#[derive(Clone, Debug)]
+pub struct MemorySweep {
+    pub name: &'static str,
+    /// Sizes in kB, exactly as listed in §III-B.
+    pub sizes_kb: Vec<f64>,
+    /// Builds the Cacti-equivalent configuration for a given size.
+    pub config: fn(f64) -> MemConfig,
+}
+
+/// Result of sweeping one memory type and fitting the linear model.
+#[derive(Clone, Debug)]
+pub struct SweepFit {
+    pub name: &'static str,
+    pub sizes_kb: Vec<f64>,
+    pub areas_mm2: Vec<f64>,
+    pub fit: LinearFit,
+}
+
+impl SweepFit {
+    /// β (mm²/kB).
+    pub fn beta(&self) -> f64 {
+        self.fit.slope
+    }
+
+    /// α (mm²).
+    pub fn alpha(&self) -> f64 {
+        self.fit.intercept
+    }
+}
+
+/// The four sweeps of §III-B with the paper's exact size points.
+pub fn paper_sweeps() -> Vec<MemorySweep> {
+    vec![
+        MemorySweep {
+            name: "register_file",
+            // "per vector-unit register file banks of 512, 1024, 2048, 4096
+            // and 8192 bytes each"
+            sizes_kb: vec![0.5, 1.0, 2.0, 4.0, 8.0],
+            config: MemConfig::register_file,
+        },
+        MemorySweep {
+            name: "shared_memory",
+            // "per SM shared memory banks of 24, 48, 96, 192 and 384 kB"
+            sizes_kb: vec![24.0, 48.0, 96.0, 192.0, 384.0],
+            config: MemConfig::shared_memory,
+        },
+        MemorySweep {
+            name: "l1_cache",
+            // "per SM-pair sizes of 3, 6, 12, 24, 48 and 96 kB"
+            sizes_kb: vec![3.0, 6.0, 12.0, 24.0, 48.0, 96.0],
+            config: MemConfig::l1_cache,
+        },
+        MemorySweep {
+            name: "l2_cache",
+            // "per SM sizes of 32, 64, 128, 256 and 512 kB"
+            sizes_kb: vec![32.0, 64.0, 128.0, 256.0, 512.0],
+            config: MemConfig::l2_cache,
+        },
+    ]
+}
+
+/// Run one sweep through the estimator and fit the linear model.
+pub fn run_sweep(est: &SramEstimator, sweep: &MemorySweep) -> SweepFit {
+    let areas: Vec<f64> = sweep.sizes_kb.iter().map(|&kb| est.area_mm2(&(sweep.config)(kb))).collect();
+    let fit = linear_fit(&sweep.sizes_kb, &areas);
+    SweepFit { name: sweep.name, sizes_kb: sweep.sizes_kb.clone(), areas_mm2: areas, fit }
+}
+
+/// Run all four paper sweeps.
+pub fn run_paper_sweeps(est: &SramEstimator) -> Vec<SweepFit> {
+    paper_sweeps().iter().map(|s| run_sweep(est, s)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweeps_have_paper_grids() {
+        let s = paper_sweeps();
+        assert_eq!(s.len(), 4);
+        assert_eq!(s[0].sizes_kb, vec![0.5, 1.0, 2.0, 4.0, 8.0]);
+        assert_eq!(s[2].sizes_kb.len(), 6);
+    }
+
+    #[test]
+    fn fits_are_near_linear() {
+        let est = SramEstimator::maxwell();
+        for fit in run_paper_sweeps(&est) {
+            assert!(fit.fit.r2 > 0.99, "{}: r2={}", fit.name, fit.fit.r2);
+            assert!(fit.beta() > 0.0 && fit.alpha() > 0.0, "{}", fit.name);
+        }
+    }
+
+    #[test]
+    fn l1_slope_much_steeper_than_shared_memory() {
+        // 16-ported fully-associative cache bits are far more expensive than
+        // 8-ported scratchpad bits — the structural fact behind the paper's
+        // "delete the caches" conclusion.
+        let est = SramEstimator::maxwell();
+        let fits = run_paper_sweeps(&est);
+        let shm = fits.iter().find(|f| f.name == "shared_memory").unwrap();
+        let l1 = fits.iter().find(|f| f.name == "l1_cache").unwrap();
+        assert!(l1.beta() > 5.0 * shm.beta());
+    }
+}

@@ -1,0 +1,92 @@
+//! Resource allocation (§V-C, Fig 4): where does the chip area of each
+//! design go? Pareto designs cluster in the (%-memory, %-cores) plane.
+
+use crate::area::model::AreaModel;
+use crate::codesign::scenario::ScenarioResult;
+
+/// One design's allocation coordinates.
+#[derive(Clone, Copy, Debug)]
+pub struct AllocationPoint {
+    /// % of chip area in explicitly-managed memory (register files + shm).
+    pub pct_memory: f64,
+    /// % of chip area in vector-unit core logic.
+    pub pct_cores: f64,
+    pub area_mm2: f64,
+    pub gflops: f64,
+    pub is_pareto: bool,
+}
+
+/// Compute Fig 4's point cloud from a scenario result.
+pub fn allocation_points(result: &ScenarioResult, area_model: &AreaModel) -> Vec<AllocationPoint> {
+    result
+        .points
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let b = area_model.breakdown(&p.hw);
+            let (pct_memory, pct_cores) = b.allocation_pcts();
+            AllocationPoint {
+                pct_memory,
+                pct_cores,
+                area_mm2: p.area_mm2,
+                gflops: p.gflops,
+                is_pareto: result.pareto.contains(&i),
+            }
+        })
+        .collect()
+}
+
+/// Dispersion measure used to quantify the paper's "optimal designs cluster"
+/// observation: mean Euclidean distance to the centroid in the
+/// (%mem, %cores) plane.
+pub fn dispersion(points: &[(f64, f64)]) -> f64 {
+    if points.is_empty() {
+        return f64::NAN;
+    }
+    let n = points.len() as f64;
+    let cx = points.iter().map(|p| p.0).sum::<f64>() / n;
+    let cy = points.iter().map(|p| p.1).sum::<f64>() / n;
+    points.iter().map(|p| ((p.0 - cx).powi(2) + (p.1 - cy).powi(2)).sqrt()).sum::<f64>() / n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codesign::scenario::testfix;
+
+    #[test]
+    fn allocation_sums_below_100() {
+        let r = testfix::quick_2d();
+        let pts = allocation_points(r, &AreaModel::paper());
+        assert_eq!(pts.len(), r.points.len());
+        for p in &pts {
+            assert!(p.pct_memory > 0.0 && p.pct_cores > 0.0);
+            assert!(p.pct_memory + p.pct_cores < 100.0);
+        }
+        assert_eq!(pts.iter().filter(|p| p.is_pareto).count(), r.pareto.len());
+    }
+
+    #[test]
+    fn pareto_designs_cluster_tighter_than_the_cloud() {
+        // §V-C's qualitative observation, quantified.
+        let r = testfix::quick_2d();
+        let pts = allocation_points(r, &AreaModel::paper());
+        let all: Vec<(f64, f64)> = pts.iter().map(|p| (p.pct_memory, p.pct_cores)).collect();
+        let front: Vec<(f64, f64)> =
+            pts.iter().filter(|p| p.is_pareto).map(|p| (p.pct_memory, p.pct_cores)).collect();
+        assert!(front.len() > 2);
+        assert!(
+            dispersion(&front) < dispersion(&all),
+            "front dispersion {} vs cloud {}",
+            dispersion(&front),
+            dispersion(&all)
+        );
+    }
+
+    #[test]
+    fn dispersion_edge_cases() {
+        assert!(dispersion(&[]).is_nan());
+        assert_eq!(dispersion(&[(1.0, 2.0)]), 0.0);
+        assert!((dispersion(&[(0.0, 0.0), (2.0, 0.0)]) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,93 @@
+//! The cache-deletion comparison (§V-A, E5, and the abstract's 28%/33%
+//! claim): a large part of the Fig 3 gains come from candidate designs
+//! carrying no caches (the HHC compiler moves data explicitly). To separate
+//! "remove the caches" from "rebalance the architecture", the paper deletes
+//! the caches from the GTX 980 / Titan X, recomputes their areas, and
+//! compares the Pareto designs at those *reduced* budgets.
+
+use crate::area::model::AreaModel;
+use crate::codesign::scenario::ScenarioResult;
+
+/// One row of the cache-less comparison.
+#[derive(Clone, Debug)]
+pub struct CachelessRow {
+    pub reference: String,
+    /// Reference area with caches (modelled), mm².
+    pub full_area_mm2: f64,
+    /// Reference area after deleting L1+L2, mm².
+    pub reduced_area_mm2: f64,
+    /// Reference performance (unchanged by cache deletion — the time model's
+    /// code never uses caches), GFLOP/s.
+    pub ref_gflops: f64,
+    /// Best candidate design within the reduced budget, GFLOP/s.
+    pub best_gflops: f64,
+    /// Improvement at the reduced budget, %.
+    pub improvement_pct: f64,
+    /// Improvement at the full (cache-included) budget, % — Fig 3's headline.
+    pub full_budget_improvement_pct: f64,
+}
+
+/// Compute the §V-A comparison for every reference in the scenario result.
+pub fn cacheless_comparison(result: &ScenarioResult, area_model: &AreaModel) -> Vec<CachelessRow> {
+    let xy = result.xy();
+    result
+        .references
+        .iter()
+        .map(|r| {
+            let reduced_area = area_model.area_mm2(&r.hw.without_caches());
+            let best_reduced = crate::codesign::pareto::best_within_area(&xy, reduced_area);
+            let best_full = crate::codesign::pareto::best_within_area(&xy, r.area_mm2);
+            let best_gflops = best_reduced.map(|i| xy[i].1).unwrap_or(f64::NAN);
+            let full_gflops = best_full.map(|i| xy[i].1).unwrap_or(f64::NAN);
+            CachelessRow {
+                reference: r.name.to_string(),
+                full_area_mm2: r.area_mm2,
+                reduced_area_mm2: reduced_area,
+                ref_gflops: r.gflops,
+                best_gflops,
+                improvement_pct: 100.0 * (best_gflops / r.gflops - 1.0),
+                full_budget_improvement_pct: 100.0 * (full_gflops / r.gflops - 1.0),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codesign::scenario::testfix;
+
+    #[test]
+    fn cacheless_budgets_shrink_and_gains_shrink() {
+        let r = testfix::quick_2d();
+        let rows = cacheless_comparison(r, &AreaModel::paper());
+        assert_eq!(rows.len(), 2);
+        for row in &rows {
+            assert!(
+                row.reduced_area_mm2 < row.full_area_mm2,
+                "{}: deleting caches must shrink area",
+                row.reference
+            );
+            // A smaller budget can never improve more than a larger one.
+            // (Strictness is asserted for the GTX 980 below; the Titan X's
+            // full and reduced budgets both saturate the reduced *test*
+            // space, so they may tie there.)
+            assert!(
+                row.improvement_pct <= row.full_budget_improvement_pct,
+                "{}: {} !<= {}",
+                row.reference,
+                row.improvement_pct,
+                row.full_budget_improvement_pct
+            );
+        }
+        let g980 = rows.iter().find(|r| r.reference == "gtx980").unwrap();
+        assert!(
+            g980.improvement_pct < g980.full_budget_improvement_pct,
+            "gtx980 reduced-budget gain should be strictly smaller"
+        );
+        // GTX980 cache-less area lands near the paper's 237 mm² (our exact
+        // eq. (5) computation gives ~249; accept the ballpark).
+        let g = rows.iter().find(|r| r.reference == "gtx980").unwrap();
+        assert!((220.0..270.0).contains(&g.reduced_area_mm2), "{}", g.reduced_area_mm2);
+    }
+}

@@ -1,0 +1,30 @@
+//! The codesign engine — the paper's contribution proper (§IV–§V).
+//!
+//! * [`space`] — enumerate the feasible hardware design space of §IV-B
+//!   (cache-less candidate accelerators on the manufacturer grid).
+//! * [`scenario`] — run a full design-space exploration for a workload:
+//!   per-point eq. (18) solves, reference GTX 980 / Titan X evaluations, and
+//!   the improvement statistics quoted in the abstract and §V-A.
+//! * [`pareto`] — Pareto-frontier extraction over (area, performance).
+//! * [`sensitivity`] — §V-B / Table II: per-benchmark optimal architectures
+//!   from re-weighted (memoized) results.
+//! * [`allocation`] — §V-C / Fig 4: chip-area resource allocation of every
+//!   design point.
+//! * [`cacheless`] — §V-A's cache-deletion comparison (E5).
+//! * [`tuner`] — §V-D's partial codesign: pin any subset of the hardware
+//!   parameters and optimize the rest.
+//! * [`power`] — §V-D's energy extension: power model, weighted time/energy
+//!   objective, power-gating curves.
+
+pub mod allocation;
+pub mod cacheless;
+pub mod pareto;
+pub mod power;
+pub mod scenario;
+pub mod sensitivity;
+pub mod space;
+pub mod tuner;
+
+pub use pareto::pareto_front;
+pub use scenario::{DesignEval, Scenario, ScenarioResult};
+pub use space::{enumerate_space, DesignPoint, SpaceSpec};

@@ -1,0 +1,116 @@
+//! Pareto-frontier extraction over (area, performance).
+//!
+//! Fig 3's observation: of the thousands of feasible designs only ~1% are
+//! Pareto-optimal — "a nearly 100-fold savings in design cost".
+
+/// A design is Pareto-optimal iff no other design has `area ≤` **and**
+/// `perf ≥` with at least one strict. Returns indices into `points`,
+/// sorted by area ascending.
+///
+/// `O(n log n)`: sort by (area asc, perf desc), then a single max-scan.
+pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.sort_by(|&a, &b| {
+        points[a]
+            .0
+            .partial_cmp(&points[b].0)
+            .unwrap()
+            .then(points[b].1.partial_cmp(&points[a].1).unwrap())
+    });
+    let mut front = Vec::new();
+    let mut best_perf = f64::NEG_INFINITY;
+    let mut last_area = f64::NEG_INFINITY;
+    for &i in &idx {
+        let (area, perf) = points[i];
+        if perf > best_perf {
+            // Equal-area ties: the sort put the best-perf one first; any
+            // later equal-area point with lower perf is dominated, and an
+            // equal-area equal-perf duplicate is redundant.
+            if area == last_area && perf == best_perf {
+                continue;
+            }
+            front.push(i);
+            best_perf = perf;
+            last_area = area;
+        }
+    }
+    front
+}
+
+/// Best performance among points with `area ≤ budget`. Returns the index.
+pub fn best_within_area(points: &[(f64, f64)], budget: f64) -> Option<usize> {
+    points
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| p.0 <= budget)
+        .max_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
+        .map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_front() {
+        // (area, perf)
+        let pts = vec![(1.0, 1.0), (2.0, 3.0), (3.0, 2.0), (2.5, 3.5), (4.0, 4.0)];
+        let f = pareto_front(&pts);
+        // (3.0, 2.0) dominated by (2.5, 3.5); (2.0,3.0) on front.
+        assert_eq!(f, vec![0, 1, 3, 4]);
+    }
+
+    #[test]
+    fn dominated_duplicates_removed() {
+        let pts = vec![(1.0, 1.0), (1.0, 1.0), (1.0, 2.0)];
+        let f = pareto_front(&pts);
+        assert_eq!(f.len(), 1);
+        assert_eq!(pts[f[0]], (1.0, 2.0));
+    }
+
+    #[test]
+    fn front_invariants() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(99);
+        let pts: Vec<(f64, f64)> =
+            (0..500).map(|_| (rng.f64() * 100.0, rng.f64() * 100.0)).collect();
+        let f = pareto_front(&pts);
+        // 1. No front point dominates another front point.
+        for &a in &f {
+            for &b in &f {
+                if a != b {
+                    let dom = pts[a].0 <= pts[b].0
+                        && pts[a].1 >= pts[b].1
+                        && (pts[a].0 < pts[b].0 || pts[a].1 > pts[b].1);
+                    assert!(!dom, "front point dominates front point");
+                }
+            }
+        }
+        // 2. Every non-front point is dominated by some front point.
+        for i in 0..pts.len() {
+            if !f.contains(&i) {
+                assert!(
+                    f.iter().any(|&a| {
+                        pts[a].0 <= pts[i].0
+                            && pts[a].1 >= pts[i].1
+                            && (pts[a].0 < pts[i].0 || pts[a].1 > pts[i].1)
+                    }),
+                    "non-front point {i} not dominated"
+                );
+            }
+        }
+        // 3. Sorted by area, strictly increasing perf.
+        for w in f.windows(2) {
+            assert!(pts[w[0]].0 <= pts[w[1]].0);
+            assert!(pts[w[0]].1 < pts[w[1]].1);
+        }
+    }
+
+    #[test]
+    fn best_within_budget() {
+        let pts = vec![(1.0, 1.0), (2.0, 3.0), (3.0, 9.0)];
+        assert_eq!(best_within_area(&pts, 2.5), Some(1));
+        assert_eq!(best_within_area(&pts, 0.5), None);
+        assert_eq!(best_within_area(&pts, 10.0), Some(2));
+    }
+}

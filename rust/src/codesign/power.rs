@@ -1,0 +1,271 @@
+//! §V-D extension: energy/power-aware codesign.
+//!
+//! *"Our approach can be extended to consider energy/power consumption …
+//! the objective function can be updated to be the argmin of the weighted
+//! execution times and energy components … Such an optimization function can
+//! be formulated to solve power-gating problems."*
+//!
+//! This module adds exactly that: a component-level power model over the
+//! same hardware parameters the area model prices, an energy evaluation per
+//! solved design point (energy = power × workload time), a weighted
+//! time/energy objective, and the power-gating query (which fraction of the
+//! SMs should be switched off for a given workload intensity).
+//!
+//! The coefficients are first-order CMOS scaling anchored on the GTX 980's
+//! published 165 W TDP at 398 mm²: dynamic power proportional to active
+//! compute (lanes × utilization) and memory traffic, leakage proportional
+//! to powered silicon area. They are deliberately simple — the point is the
+//! *objective structure*, as in the paper.
+
+use crate::area::model::{AreaBreakdown, AreaModel};
+use crate::area::params::HwParams;
+use crate::codesign::scenario::ScenarioResult;
+use crate::timemodel::talg::TimeEstimate;
+
+/// Power model coefficients.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerModel {
+    /// Dynamic energy per lane-cycle at full issue, W per (lane·GHz) —
+    /// i.e. watts contributed by one vector lane busy at 1 GHz.
+    pub w_per_lane_ghz: f64,
+    /// Dynamic power per GB/s of off-chip traffic.
+    pub w_per_gbs: f64,
+    /// Leakage per mm² of powered silicon.
+    pub leakage_w_per_mm2: f64,
+    /// Fixed board/uncore power, W.
+    pub base_w: f64,
+}
+
+impl PowerModel {
+    /// Anchored on the GTX 980: 2048 lanes at 1.216 GHz boost, 224 GB/s,
+    /// 398 mm², 165 W TDP. Split: ~60% dynamic compute, ~15% memory,
+    /// ~15% leakage, ~10% base.
+    pub fn maxwell() -> PowerModel {
+        PowerModel {
+            w_per_lane_ghz: 165.0 * 0.60 / (2048.0 * 1.216),
+            w_per_gbs: 165.0 * 0.15 / 224.0,
+            leakage_w_per_mm2: 165.0 * 0.15 / 398.0,
+            base_w: 165.0 * 0.10,
+        }
+    }
+
+    /// Average power of a design running one modelled workload phase.
+    ///
+    /// `est` supplies the utilization (occupancy and compute/memory balance);
+    /// `clock_ghz` the rate; `active_sm_frac` supports power-gating studies
+    /// (gated SMs contribute no dynamic power and no leakage for their area
+    /// share, but the chip-level overhead keeps leaking).
+    pub fn power_w(
+        &self,
+        hw: &HwParams,
+        breakdown: &AreaBreakdown,
+        est: &TimeEstimate,
+        clock_ghz: f64,
+        active_sm_frac: f64,
+    ) -> f64 {
+        assert!((0.0..=1.0).contains(&active_sm_frac));
+        let lanes = (hw.n_sm * hw.n_v) as f64 * active_sm_frac;
+        // Issue utilization: occupancy caps the issue rate; memory-bound
+        // rounds idle the lanes for the balance of the round.
+        let compute_frac = if est.mem_cycles > est.compute_cycles {
+            est.compute_cycles / est.mem_cycles
+        } else {
+            1.0
+        };
+        let util = est.occupancy.min(1.0) * compute_frac;
+        let dyn_compute = self.w_per_lane_ghz * lanes * clock_ghz * util;
+
+        // Memory traffic power from the achieved bandwidth share.
+        let mem_frac = if est.compute_cycles > est.mem_cycles {
+            est.mem_cycles / est.compute_cycles
+        } else {
+            1.0
+        };
+        let bw_gbs = 14.0 * hw.n_sm as f64 * active_sm_frac * mem_frac;
+        let dyn_mem = self.w_per_gbs * bw_gbs;
+
+        // Leakage: gated SMs are power-gated (their slice of SM-proportional
+        // area stops leaking); chip-level L2 and base never gate.
+        let sm_area = breakdown.total() - breakdown.l2_mm2;
+        let leak = self.leakage_w_per_mm2 * (sm_area * active_sm_frac + breakdown.l2_mm2);
+
+        dyn_compute + dyn_mem + leak + self.base_w
+    }
+}
+
+/// Energy-aware view of one solved design point.
+#[derive(Clone, Debug)]
+pub struct EnergyEval {
+    pub hw: HwParams,
+    pub area_mm2: f64,
+    pub gflops: f64,
+    /// Average power over the workload, W.
+    pub power_w: f64,
+    /// Workload energy, J (weighted seconds × average power).
+    pub energy_j: f64,
+    /// Energy efficiency, GFLOP/s per W.
+    pub gflops_per_w: f64,
+}
+
+/// Evaluate energy for every point of a scenario result.
+pub fn energy_evals(
+    result: &ScenarioResult,
+    area_model: &AreaModel,
+    power_model: &PowerModel,
+    clock_ghz: f64,
+) -> Vec<EnergyEval> {
+    result
+        .points
+        .iter()
+        .map(|p| {
+            let breakdown = area_model.breakdown(&p.hw);
+            // Workload-weighted average power: weight each entry's power by
+            // its share of the total time.
+            let mut acc_pw = 0.0;
+            let mut acc_t = 0.0;
+            for sol in p.per_entry.iter().flatten() {
+                let pw = power_model.power_w(&p.hw, &breakdown, &sol.est, clock_ghz, 1.0);
+                acc_pw += pw * sol.est.seconds;
+                acc_t += sol.est.seconds;
+            }
+            let power_w = if acc_t > 0.0 { acc_pw / acc_t } else { f64::NAN };
+            EnergyEval {
+                hw: p.hw,
+                area_mm2: p.area_mm2,
+                gflops: p.gflops,
+                power_w,
+                energy_j: power_w * p.seconds,
+                gflops_per_w: p.gflops / power_w,
+            }
+        })
+        .collect()
+}
+
+/// The §V-D weighted objective: minimize `λ·T + (1−λ)·E` (normalized). With
+/// λ = 1 this is the paper's pure-performance problem; with λ = 0 pure
+/// energy. Returns the index of the best point.
+pub fn best_weighted(evals: &[EnergyEval], result: &ScenarioResult, lambda: f64) -> Option<usize> {
+    assert!((0.0..=1.0).contains(&lambda));
+    if evals.is_empty() {
+        return None;
+    }
+    let t_min = result.points.iter().map(|p| p.seconds).fold(f64::INFINITY, f64::min);
+    let e_min = evals.iter().map(|e| e.energy_j).fold(f64::INFINITY, f64::min);
+    (0..evals.len()).min_by(|&a, &b| {
+        let score = |i: usize| {
+            lambda * result.points[i].seconds / t_min + (1.0 - lambda) * evals[i].energy_j / e_min
+        };
+        score(a).partial_cmp(&score(b)).unwrap()
+    })
+}
+
+/// Power-gating query (§V-D's closing suggestion): for a design point and a
+/// per-SM power budget, how many SMs can stay on — and what fraction of
+/// nominal throughput survives? Returns (active SMs, power W, relative
+/// throughput) for each gating level.
+pub fn gating_curve(
+    hw: &HwParams,
+    breakdown: &AreaBreakdown,
+    est: &TimeEstimate,
+    power_model: &PowerModel,
+    clock_ghz: f64,
+) -> Vec<(u32, f64, f64)> {
+    (1..=hw.n_sm)
+        .map(|active| {
+            let frac = active as f64 / hw.n_sm as f64;
+            let p = power_model.power_w(hw, breakdown, est, clock_ghz, frac);
+            // Throughput scales with active SMs (each carries its own
+            // bandwidth slice in the time model).
+            (active, p, frac)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codesign::scenario::testfix;
+    use crate::timemodel::talg::Bound;
+
+    fn est(occ: f64, cc: f64, mc: f64) -> TimeEstimate {
+        TimeEstimate {
+            cycles: 1e9,
+            seconds: 1.0,
+            gflops: 1000.0,
+            m_tile_bytes: 1e4,
+            compute_cycles: cc,
+            mem_cycles: mc,
+            rounds: 100.0,
+            bound: Bound::Compute,
+            occupancy: occ,
+        }
+    }
+
+    #[test]
+    fn gtx980_full_tilt_lands_near_tdp() {
+        let pm = PowerModel::maxwell();
+        let hw = HwParams::gtx980();
+        let b = AreaModel::paper().breakdown(&hw);
+        let p = pm.power_w(&hw, &b, &est(1.0, 1.0, 1.0), 1.216, 1.0);
+        assert!((140.0..190.0).contains(&p), "GTX980 busy power {p} W vs 165 W TDP");
+    }
+
+    #[test]
+    fn idle_ish_power_below_busy() {
+        let pm = PowerModel::maxwell();
+        let hw = HwParams::gtx980();
+        let b = AreaModel::paper().breakdown(&hw);
+        let busy = pm.power_w(&hw, &b, &est(1.0, 1.0, 0.1), 1.216, 1.0);
+        let starved = pm.power_w(&hw, &b, &est(0.2, 1.0, 0.1), 1.216, 1.0);
+        assert!(starved < busy);
+    }
+
+    #[test]
+    fn gating_reduces_power_monotonically() {
+        let pm = PowerModel::maxwell();
+        let hw = HwParams::gtx980();
+        let b = AreaModel::paper().breakdown(&hw);
+        let curve = gating_curve(&hw, &b, &est(1.0, 1.0, 0.5), &pm, 1.216);
+        assert_eq!(curve.len(), 16);
+        for w in curve.windows(2) {
+            assert!(w[0].1 < w[1].1, "power not monotone in active SMs");
+            assert!(w[0].2 < w[1].2);
+        }
+        // Even fully gated to one SM, base + L2 leakage keeps power > base.
+        assert!(curve[0].1 > pm.base_w);
+    }
+
+    #[test]
+    fn energy_objective_interpolates() {
+        let r = testfix::quick_2d();
+        let evals = energy_evals(r, &AreaModel::paper(), &PowerModel::maxwell(), 1.2);
+        assert_eq!(evals.len(), r.points.len());
+        assert!(evals.iter().all(|e| e.power_w > 0.0 && e.energy_j > 0.0));
+        let perf = best_weighted(&evals, r, 1.0).unwrap();
+        let energy = best_weighted(&evals, r, 0.0).unwrap();
+        // Pure-performance pick = the fastest point.
+        let fastest = (0..r.points.len())
+            .min_by(|&a, &b| r.points[a].seconds.partial_cmp(&r.points[b].seconds).unwrap())
+            .unwrap();
+        assert_eq!(perf, fastest);
+        // Pure-energy pick minimizes energy.
+        let frugalest = (0..evals.len())
+            .min_by(|&a, &b| evals[a].energy_j.partial_cmp(&evals[b].energy_j).unwrap())
+            .unwrap();
+        assert_eq!(energy, frugalest);
+        // And they are (almost certainly) different machines.
+        assert_ne!(
+            r.points[perf].hw, r.points[energy].hw,
+            "perf- and energy-optimal designs coincide — suspicious"
+        );
+    }
+
+    #[test]
+    fn efficiency_metric_consistent() {
+        let r = testfix::quick_2d();
+        let evals = energy_evals(r, &AreaModel::paper(), &PowerModel::maxwell(), 1.2);
+        for e in &evals {
+            assert!((e.gflops_per_w - e.gflops / e.power_w).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! Full design-space exploration for one workload class (Fig 3's two
+//! panels): enumerate hardware candidates, solve eq. (18) on each, evaluate
+//! the stock GTX 980 / Titan X references under the same time model, and
+//! derive the paper's improvement statistics.
+
+use crate::area::model::AreaModel;
+use crate::area::params::HwParams;
+use crate::codesign::pareto::{best_within_area, pareto_front};
+use crate::codesign::space::{enumerate_space, SpaceSpec};
+use crate::opt::inner::InnerSolution;
+use crate::opt::problem::SolveOpts;
+use crate::opt::separable::solve_hardware_point;
+use crate::stencil::workload::Workload;
+use crate::timemodel::citer::CIterTable;
+use crate::timemodel::talg::TimeModel;
+use crate::util::threadpool::{default_threads, parallel_map};
+
+/// One solved design point.
+#[derive(Clone, Debug)]
+pub struct DesignEval {
+    pub hw: HwParams,
+    pub area_mm2: f64,
+    /// Workload-weighted GFLOP/s (Fig 3 y-axis).
+    pub gflops: f64,
+    /// Workload-weighted execution time, seconds (objective (17)).
+    pub seconds: f64,
+    /// Per-entry optima, aligned with the scenario workload's entries —
+    /// kept so §V-B re-weighting needs no further model evaluations.
+    pub per_entry: Vec<Option<InnerSolution>>,
+}
+
+/// A reference (existing) architecture evaluated under the same model.
+#[derive(Clone, Debug)]
+pub struct RefEval {
+    pub name: &'static str,
+    pub hw: HwParams,
+    /// Modelled area (eq. 5) and the published die area.
+    pub area_mm2: f64,
+    pub published_area_mm2: f64,
+    pub gflops: f64,
+    pub seconds: f64,
+    pub per_entry: Vec<Option<InnerSolution>>,
+}
+
+/// Scenario definition.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub workload: Workload,
+    pub space: SpaceSpec,
+    pub solve_opts: SolveOpts,
+    pub threads: usize,
+    pub citer: CIterTable,
+}
+
+impl Scenario {
+    /// Fig 3 left panel: the four 2-D stencils, uniform frequencies, the
+    /// paper's full hardware grid.
+    pub fn paper_2d() -> Scenario {
+        Scenario {
+            name: "2d".into(),
+            workload: Workload::uniform_2d(),
+            space: SpaceSpec::paper(),
+            solve_opts: SolveOpts::default(),
+            threads: default_threads(),
+            citer: CIterTable::paper(),
+        }
+    }
+
+    /// Fig 3 right panel: the two 3-D stencils.
+    pub fn paper_3d() -> Scenario {
+        Scenario { name: "3d".into(), workload: Workload::uniform_3d(), ..Scenario::paper_2d() }
+    }
+
+    /// Reduced scenario for tests / quick runs: small space, thinned
+    /// workload (every `stride`-th size instance).
+    pub fn quick(base: Scenario, stride: usize) -> Scenario {
+        let mut workload = base.workload.clone();
+        let kept: Vec<_> =
+            workload.entries.iter().copied().step_by(stride.max(1)).collect();
+        workload.entries = kept;
+        let total: f64 = workload.entries.iter().map(|e| e.weight).sum();
+        for e in &mut workload.entries {
+            e.weight /= total;
+        }
+        Scenario { workload, space: SpaceSpec::small(), ..base }
+    }
+}
+
+/// Headline improvement statistics (§V-A / abstract).
+#[derive(Clone, Debug)]
+pub struct ImprovementStats {
+    /// (reference name, best same-area design improvement %, best design hw).
+    pub vs_reference: Vec<(String, f64, HwParams)>,
+}
+
+/// Everything a scenario run produces.
+#[derive(Clone, Debug)]
+pub struct ScenarioResult {
+    pub scenario_name: String,
+    pub points: Vec<DesignEval>,
+    /// Indices into `points`, area-ascending (the blue points of Fig 3).
+    pub pareto: Vec<usize>,
+    pub references: Vec<RefEval>,
+    pub stats: ImprovementStats,
+    /// Total inner-solver model evaluations (solver-cost accounting, E8).
+    pub total_evals: u64,
+    /// Feasible-but-unsolvable hardware points (no feasible tiling).
+    pub infeasible_points: usize,
+}
+
+impl ScenarioResult {
+    /// (area, gflops) pairs of all solved points.
+    pub fn xy(&self) -> Vec<(f64, f64)> {
+        self.points.iter().map(|p| (p.area_mm2, p.gflops)).collect()
+    }
+
+    pub fn reference(&self, name: &str) -> Option<&RefEval> {
+        self.references.iter().find(|r| r.name == name)
+    }
+
+    /// Best solved design within an area budget.
+    pub fn best_within(&self, budget_mm2: f64) -> Option<&DesignEval> {
+        best_within_area(&self.xy(), budget_mm2).map(|i| &self.points[i])
+    }
+}
+
+/// Evaluate one reference architecture (stock Maxwell, caches and all) under
+/// the scenario's workload. The time model sees its real `n_SM`, `n_V`,
+/// `M_SM`; its caches contribute area but not performance (the HHC-generated
+/// code the model describes stages data through shared memory explicitly).
+pub fn evaluate_reference(
+    name: &'static str,
+    hw: HwParams,
+    published_area_mm2: f64,
+    scenario: &Scenario,
+    area_model: &AreaModel,
+    time_model: &TimeModel,
+) -> RefEval {
+    let sol = solve_hardware_point(
+        time_model,
+        &scenario.workload,
+        &scenario.citer,
+        &hw,
+        &scenario.solve_opts,
+    );
+    RefEval {
+        name,
+        hw,
+        area_mm2: area_model.area_mm2(&hw),
+        published_area_mm2,
+        gflops: sol.weighted_gflops.expect("reference must be feasible"),
+        seconds: sol.weighted_seconds.expect("reference must be feasible"),
+        per_entry: sol.per_entry,
+    }
+}
+
+/// Run the full exploration.
+pub fn run(scenario: &Scenario, area_model: &AreaModel, time_model: &TimeModel) -> ScenarioResult {
+    let space = enumerate_space(area_model, &scenario.space);
+    let solved = parallel_map(&space, scenario.threads, |pt| {
+        let sol = solve_hardware_point(
+            time_model,
+            &scenario.workload,
+            &scenario.citer,
+            &pt.hw,
+            &scenario.solve_opts,
+        );
+        (pt.area_mm2, sol)
+    });
+
+    let mut points = Vec::new();
+    let mut total_evals = 0u64;
+    let mut infeasible_points = 0usize;
+    for (pt, (area, sol)) in space.iter().zip(solved) {
+        total_evals += sol.evals;
+        match (sol.weighted_seconds, sol.weighted_gflops) {
+            (Some(seconds), Some(gflops)) => points.push(DesignEval {
+                hw: pt.hw,
+                area_mm2: area,
+                gflops,
+                seconds,
+                per_entry: sol.per_entry,
+            }),
+            _ => infeasible_points += 1,
+        }
+    }
+
+    let xy: Vec<(f64, f64)> = points.iter().map(|p| (p.area_mm2, p.gflops)).collect();
+    let pareto = pareto_front(&xy);
+
+    let references = vec![
+        evaluate_reference("gtx980", HwParams::gtx980(), 398.0, scenario, area_model, time_model),
+        evaluate_reference("titanx", HwParams::titanx(), 601.0, scenario, area_model, time_model),
+    ];
+
+    let vs_reference = references
+        .iter()
+        .map(|r| {
+            let best = best_within_area(&xy, r.area_mm2);
+            let (impr, hw) = match best {
+                Some(i) => {
+                    (100.0 * (points[i].gflops / r.gflops - 1.0), points[i].hw)
+                }
+                None => (f64::NAN, r.hw),
+            };
+            (r.name.to_string(), impr, hw)
+        })
+        .collect();
+
+    ScenarioResult {
+        scenario_name: scenario.name.clone(),
+        points,
+        pareto,
+        references,
+        stats: ImprovementStats { vs_reference },
+        total_evals,
+        infeasible_points,
+    }
+}
+
+/// Shared quick scenario results for the test suite (a full quick run takes
+/// seconds; several test modules consume the same one).
+#[cfg(test)]
+pub(crate) mod testfix {
+    use super::*;
+    use std::sync::OnceLock;
+
+    pub fn quick_2d_scenario() -> Scenario {
+        Scenario::quick(Scenario::paper_2d(), 8) // 8 of 64 entries
+    }
+
+    pub fn quick_2d() -> &'static ScenarioResult {
+        static CELL: OnceLock<ScenarioResult> = OnceLock::new();
+        CELL.get_or_init(|| run(&quick_2d_scenario(), &AreaModel::paper(), &TimeModel::maxwell()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testfix::quick_2d;
+    use super::*;
+
+    #[test]
+    fn quick_scenario_produces_front_and_references() {
+        let r = quick_2d();
+        assert!(r.points.len() > 100, "points: {}", r.points.len());
+        assert!(!r.pareto.is_empty());
+        assert!(r.pareto.len() < r.points.len() / 10, "front should prune ~99%");
+        assert_eq!(r.references.len(), 2);
+        assert!(r.reference("gtx980").unwrap().gflops > 100.0);
+        // Titan X has more SMs: at least as fast as GTX 980 on the same mix.
+        assert!(r.reference("titanx").unwrap().gflops >= r.reference("gtx980").unwrap().gflops);
+    }
+
+    #[test]
+    fn optimized_designs_beat_stock_at_same_area() {
+        // The central claim (E3/E9): a same-area cache-less design
+        // outperforms the stock GTX 980 under this workload.
+        let r = quick_2d();
+        let (name, impr, _) = &r.stats.vs_reference[0];
+        assert_eq!(name, "gtx980");
+        assert!(*impr > 20.0, "improvement over GTX980 = {impr}%");
+    }
+
+    #[test]
+    fn pareto_points_are_best_within_their_area() {
+        let r = quick_2d();
+        let xy = r.xy();
+        for &i in &r.pareto {
+            let b = best_within_area(&xy, xy[i].0).unwrap();
+            assert!((xy[b].1 - xy[i].1).abs() < 1e-9);
+        }
+    }
+}

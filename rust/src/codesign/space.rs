@@ -1,0 +1,125 @@
+//! Hardware design-space enumeration (§IV-B).
+//!
+//! The candidate accelerators are **cache-less** (the HHC compiler the time
+//! model targets performs explicit shared-memory data movement, so the paper
+//! spends no candidate area on caches — §V-A), on the manufacturer grid:
+//!
+//! * `2 ≤ n_SM ≤ 32`, even;
+//! * `32 ≤ n_V ≤ 2048`, multiple of 32;
+//! * `M_SM ∈ {12, 24, 36} ∪ {48, 96, …, 480}` kB (multiples of 48 plus the
+//!   three small sizes the paper additionally explores);
+//! * `R_VU` fixed at the Maxwell 2 kB per vector unit (register sizing is a
+//!   stated limitation of the paper's model, §V-D).
+
+use crate::area::model::AreaModel;
+use crate::area::params::HwParams;
+
+/// Enumeration bounds (defaults = the paper's).
+#[derive(Clone, Copy, Debug)]
+pub struct SpaceSpec {
+    pub n_sm_max: u32,
+    pub n_v_max: u32,
+    pub m_sm_max_kb: f64,
+    /// Total-area budget ceiling, mm² (§V-A sweeps 200–650).
+    pub max_area_mm2: f64,
+    pub r_vu_kb: f64,
+}
+
+impl SpaceSpec {
+    pub fn paper() -> SpaceSpec {
+        SpaceSpec { n_sm_max: 32, n_v_max: 2048, m_sm_max_kb: 480.0, max_area_mm2: 650.0, r_vu_kb: 2.0 }
+    }
+
+    /// A reduced space for tests and quick runs.
+    pub fn small() -> SpaceSpec {
+        SpaceSpec { n_sm_max: 16, n_v_max: 512, m_sm_max_kb: 192.0, max_area_mm2: 650.0, r_vu_kb: 2.0 }
+    }
+}
+
+/// One enumerated hardware candidate with its modelled area.
+#[derive(Clone, Copy, Debug)]
+pub struct DesignPoint {
+    pub hw: HwParams,
+    pub area_mm2: f64,
+}
+
+/// The `M_SM` grid: 12/24/36 kB plus multiples of 48 kB up to the cap.
+pub fn m_sm_grid(max_kb: f64) -> Vec<f64> {
+    let mut g: Vec<f64> = vec![12.0, 24.0, 36.0];
+    let mut v = 48.0;
+    while v <= max_kb {
+        g.push(v);
+        v += 48.0;
+    }
+    g.retain(|&x| x <= max_kb);
+    g
+}
+
+/// Enumerate every grid point whose modelled area fits the budget.
+pub fn enumerate_space(model: &AreaModel, spec: &SpaceSpec) -> Vec<DesignPoint> {
+    let mut out = Vec::new();
+    let m_grid = m_sm_grid(spec.m_sm_max_kb);
+    for n_sm in (2..=spec.n_sm_max).step_by(2) {
+        for n_v in (32..=spec.n_v_max).step_by(32) {
+            // Cheapest memory config first: if even M_SM = 12 kB busts the
+            // budget, larger n_V at this n_SM can't fit either.
+            for &m_sm_kb in &m_grid {
+                let hw = HwParams {
+                    n_sm,
+                    n_v,
+                    r_vu_kb: spec.r_vu_kb,
+                    m_sm_kb,
+                    l1_smpair_kb: 0.0,
+                    l2_kb: 0.0,
+                };
+                debug_assert!(hw.respects_manufacturer_patterns());
+                let area = model.area_mm2(&hw);
+                if area <= spec.max_area_mm2 {
+                    out.push(DesignPoint { hw, area_mm2: area });
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn m_grid_matches_paper() {
+        let g = m_sm_grid(480.0);
+        assert_eq!(&g[..3], &[12.0, 24.0, 36.0]);
+        assert!(g.contains(&48.0) && g.contains(&480.0));
+        assert_eq!(g.len(), 13);
+    }
+
+    #[test]
+    fn paper_space_has_thousands_of_points() {
+        let pts = enumerate_space(&AreaModel::paper(), &SpaceSpec::paper());
+        // Fig 3 reports ≈3000 feasible 2-D design points; the enumeration
+        // (shared by both workload classes) must be the same order.
+        assert!(
+            (1500..8000).contains(&pts.len()),
+            "feasible design points: {}",
+            pts.len()
+        );
+        assert!(pts.iter().all(|p| p.area_mm2 <= 650.0));
+        assert!(pts.iter().all(|p| p.hw.l1_smpair_kb == 0.0 && p.hw.l2_kb == 0.0));
+    }
+
+    #[test]
+    fn all_points_on_manufacturer_grid() {
+        let pts = enumerate_space(&AreaModel::paper(), &SpaceSpec::small());
+        assert!(pts.iter().all(|p| p.hw.respects_manufacturer_patterns()));
+    }
+
+    #[test]
+    fn budget_monotone() {
+        let model = AreaModel::paper();
+        let lo = enumerate_space(&model, &SpaceSpec { max_area_mm2: 300.0, ..SpaceSpec::paper() });
+        let hi = enumerate_space(&model, &SpaceSpec::paper());
+        assert!(lo.len() < hi.len());
+    }
+}

@@ -1,0 +1,170 @@
+//! §V-D: "The designer can choose to fix some parameters and optimize for
+//! others" — partial-codesign tuning.
+//!
+//! Given any subset of {n_SM, n_V, M_SM} pinned (plus optionally the cache
+//! configuration, for tuning *existing* cached parts) and an area budget,
+//! search the free parameters for the workload-optimal completion. This is
+//! the paper's compiler-only (`everything fixed` → tile sizes only) and
+//! architect (`n_V and M_SM fixed` → tune n_SM) scenarios in one knob.
+
+use crate::area::model::AreaModel;
+use crate::area::params::HwParams;
+use crate::codesign::space::m_sm_grid;
+use crate::opt::problem::SolveOpts;
+use crate::opt::separable::solve_hardware_point;
+use crate::stencil::workload::Workload;
+use crate::timemodel::citer::CIterTable;
+use crate::timemodel::talg::TimeModel;
+
+/// Which hardware parameters are pinned.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Pinned {
+    pub n_sm: Option<u32>,
+    pub n_v: Option<u32>,
+    pub m_sm_kb: Option<f64>,
+    /// Pin the cache configuration (e.g. tune around an existing cached
+    /// part). `None` means cache-less candidates (the paper's default).
+    pub caches: Option<(f64, f64)>, // (l1_smpair_kb, l2_kb)
+}
+
+impl Pinned {
+    /// Everything fixed to an existing part: only tile sizes remain free —
+    /// the paper's "optimize for compiler parameters" scenario.
+    pub fn all_of(hw: &HwParams) -> Pinned {
+        Pinned {
+            n_sm: Some(hw.n_sm),
+            n_v: Some(hw.n_v),
+            m_sm_kb: Some(hw.m_sm_kb),
+            caches: Some((hw.l1_smpair_kb, hw.l2_kb)),
+        }
+    }
+}
+
+/// Result of a tuning run.
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    pub hw: HwParams,
+    pub area_mm2: f64,
+    pub gflops: f64,
+    pub seconds: f64,
+    /// Candidates examined.
+    pub candidates: usize,
+}
+
+/// Search the unpinned dimensions for the best completion within the budget.
+pub fn tune(
+    pinned: &Pinned,
+    budget_mm2: f64,
+    workload: &Workload,
+    area_model: &AreaModel,
+    time_model: &TimeModel,
+    citer: &CIterTable,
+    opts: &SolveOpts,
+) -> Option<TuneResult> {
+    let n_sm_grid: Vec<u32> = match pinned.n_sm {
+        Some(v) => vec![v],
+        None => (2..=32).step_by(2).collect(),
+    };
+    let n_v_grid: Vec<u32> = match pinned.n_v {
+        Some(v) => vec![v],
+        None => (32..=2048).step_by(32).collect(),
+    };
+    let m_grid: Vec<f64> = match pinned.m_sm_kb {
+        Some(v) => vec![v],
+        None => m_sm_grid(480.0),
+    };
+    let (l1, l2) = pinned.caches.unwrap_or((0.0, 0.0));
+
+    let mut best: Option<TuneResult> = None;
+    let mut candidates = 0usize;
+    for &n_sm in &n_sm_grid {
+        for &n_v in &n_v_grid {
+            for &m_sm_kb in &m_grid {
+                let hw = HwParams { n_sm, n_v, r_vu_kb: 2.0, m_sm_kb, l1_smpair_kb: l1, l2_kb: l2 };
+                let area = area_model.area_mm2(&hw);
+                if area > budget_mm2 {
+                    continue;
+                }
+                candidates += 1;
+                let sol = solve_hardware_point(time_model, workload, citer, &hw, opts);
+                if let (Some(seconds), Some(gflops)) = (sol.weighted_seconds, sol.weighted_gflops)
+                {
+                    if best.as_ref().map_or(true, |b| gflops > b.gflops) {
+                        best = Some(TuneResult { hw, area_mm2: area, gflops, seconds, candidates });
+                    }
+                }
+            }
+        }
+    }
+    best.map(|b| TuneResult { candidates, ..b })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::defs::StencilId;
+
+    fn small_workload() -> Workload {
+        Workload::single(StencilId::Heat2D).reweighted(|e| {
+            // Thin to 4 instances to keep the test fast.
+            if e.size.s1 <= 8192 && e.size.t <= 2048 {
+                1.0
+            } else {
+                0.0
+            }
+        })
+    }
+
+    fn setup() -> (AreaModel, TimeModel, CIterTable, SolveOpts) {
+        (AreaModel::paper(), TimeModel::maxwell(), CIterTable::paper(), SolveOpts::default())
+    }
+
+    #[test]
+    fn fully_pinned_is_tile_selection_only() {
+        let (am, tm, ci, opts) = setup();
+        let wl = small_workload();
+        let gtx = HwParams::gtx980();
+        let r = tune(&Pinned::all_of(&gtx), 1e9, &wl, &am, &tm, &ci, &opts).unwrap();
+        assert_eq!(r.candidates, 1);
+        assert_eq!(r.hw, gtx);
+        assert!(r.gflops > 100.0);
+    }
+
+    #[test]
+    fn tuning_n_sm_with_rest_pinned() {
+        // §V-D's example: n_V and memory sizes fixed, tune the SM count.
+        let (am, tm, ci, opts) = setup();
+        let wl = small_workload();
+        let pinned = Pinned {
+            n_sm: None,
+            n_v: Some(128),
+            m_sm_kb: Some(96.0),
+            caches: None,
+        };
+        let r = tune(&pinned, 430.0, &wl, &am, &tm, &ci, &opts).unwrap();
+        assert!(r.candidates > 5);
+        assert_eq!(r.hw.n_v, 128);
+        assert_eq!(r.hw.m_sm_kb, 96.0);
+        assert!(r.area_mm2 <= 430.0);
+        // With everything else equal and compute-bound workloads, the tuner
+        // should push n_SM up to the budget.
+        assert!(r.hw.n_sm >= 20, "n_sm = {}", r.hw.n_sm);
+    }
+
+    #[test]
+    fn wider_budget_never_worse() {
+        let (am, tm, ci, opts) = setup();
+        let wl = small_workload();
+        let pinned = Pinned { n_v: Some(128), m_sm_kb: Some(96.0), ..Default::default() };
+        let lo = tune(&pinned, 300.0, &wl, &am, &tm, &ci, &opts).unwrap();
+        let hi = tune(&pinned, 500.0, &wl, &am, &tm, &ci, &opts).unwrap();
+        assert!(hi.gflops >= lo.gflops);
+    }
+
+    #[test]
+    fn impossible_budget_returns_none() {
+        let (am, tm, ci, opts) = setup();
+        let wl = small_workload();
+        assert!(tune(&Pinned::default(), 10.0, &wl, &am, &tm, &ci, &opts).is_none());
+    }
+}

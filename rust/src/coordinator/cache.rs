@@ -1,0 +1,196 @@
+//! Memoized inner-solution store.
+//!
+//! Keyed by the full (hardware, stencil, size) instance. Sharded mutexes
+//! keep contention negligible under the worker pool (the inner solve costs
+//! 10³–10⁵ model evaluations; a lock round-trip is noise).
+
+use crate::area::params::HwParams;
+use crate::opt::inner::InnerSolution;
+use crate::stencil::defs::StencilId;
+use crate::stencil::workload::ProblemSize;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Exact instance key. `f64` fields are stored as bits — they come from
+/// finite enumeration grids, so bit-equality is the right notion.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub n_sm: u32,
+    pub n_v: u32,
+    pub m_sm_kb_bits: u64,
+    pub stencil: StencilId,
+    pub s1: u64,
+    pub s2: u64,
+    pub s3: u64,
+    pub t: u64,
+}
+
+impl CacheKey {
+    pub fn new(hw: &HwParams, stencil: StencilId, size: &ProblemSize) -> CacheKey {
+        CacheKey {
+            n_sm: hw.n_sm,
+            n_v: hw.n_v,
+            m_sm_kb_bits: hw.m_sm_kb.to_bits(),
+            stencil,
+            s1: size.s1,
+            s2: size.s2,
+            s3: size.s3.unwrap_or(0),
+            t: size.t,
+        }
+    }
+}
+
+/// Hit/miss counters.
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits.load(Ordering::Relaxed) as f64;
+        let m = self.misses.load(Ordering::Relaxed) as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+}
+
+const SHARDS: usize = 64;
+
+/// The sharded memo store. Values are `Option<InnerSolution>` — `None`
+/// memoizes infeasibility too.
+pub struct MemoCache {
+    shards: Vec<Mutex<HashMap<CacheKey, Option<InnerSolution>>>>,
+    pub stats: CacheStats,
+}
+
+impl Default for MemoCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MemoCache {
+    pub fn new() -> MemoCache {
+        MemoCache {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    fn shard(&self, key: &CacheKey) -> &Mutex<HashMap<CacheKey, Option<InnerSolution>>> {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % SHARDS]
+    }
+
+    /// Get the memoized solution or compute and store it.
+    pub fn get_or_compute(
+        &self,
+        key: CacheKey,
+        compute: impl FnOnce() -> Option<InnerSolution>,
+    ) -> Option<InnerSolution> {
+        if let Some(v) = self.shard(&key).lock().unwrap().get(&key) {
+            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+            return *v;
+        }
+        // Compute outside the lock; duplicate work on a race is harmless
+        // (deterministic result) and rare.
+        let v = compute();
+        self.stats.misses.fetch_add(1, Ordering::Relaxed);
+        self.shard(&key).lock().unwrap().insert(key, v);
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timemodel::talg::{SoftwareParams, TimeEstimate};
+    use crate::timemodel::tiling::TileSizes;
+
+    fn key(n_v: u32) -> CacheKey {
+        CacheKey::new(
+            &HwParams { n_v, ..HwParams::gtx980() },
+            StencilId::Jacobi2D,
+            &ProblemSize::d2(1024, 256),
+        )
+    }
+
+    fn dummy_solution() -> Option<InnerSolution> {
+        Some(InnerSolution {
+            sw: SoftwareParams::new(TileSizes::d2(32, 64, 8), 2),
+            est: TimeEstimate {
+                cycles: 1.0,
+                seconds: 1.0,
+                gflops: 1.0,
+                m_tile_bytes: 1.0,
+                compute_cycles: 1.0,
+                mem_cycles: 0.5,
+                rounds: 1.0,
+                bound: crate::timemodel::talg::Bound::Compute,
+                occupancy: 1.0,
+            },
+            evals: 1,
+        })
+    }
+
+    #[test]
+    fn memoizes_and_counts() {
+        let cache = MemoCache::new();
+        let mut calls = 0;
+        for _ in 0..3 {
+            cache.get_or_compute(key(128), || {
+                calls += 1;
+                dummy_solution()
+            });
+        }
+        assert_eq!(calls, 1);
+        assert_eq!(cache.stats.hits.load(Ordering::Relaxed), 2);
+        assert_eq!(cache.stats.misses.load(Ordering::Relaxed), 1);
+        assert!((cache.stats.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_keys_distinct_slots() {
+        let cache = MemoCache::new();
+        cache.get_or_compute(key(128), dummy_solution);
+        cache.get_or_compute(key(256), || None);
+        assert_eq!(cache.len(), 2);
+        // Infeasibility (None) is memoized too.
+        let v = cache.get_or_compute(key(256), dummy_solution);
+        assert!(v.is_none());
+    }
+
+    #[test]
+    fn concurrent_access() {
+        use std::sync::Arc;
+        let cache = Arc::new(MemoCache::new());
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let cache = Arc::clone(&cache);
+                s.spawn(move || {
+                    for i in 0..100 {
+                        cache.get_or_compute(key(32 * (i % 10 + 1) + t), dummy_solution);
+                    }
+                });
+            }
+        });
+        assert!(cache.len() <= 8 * 10 + 8);
+    }
+}

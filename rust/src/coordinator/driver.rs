@@ -1,0 +1,225 @@
+//! The coordinator driver: memoized, multi-threaded design-space sweeps and
+//! free scenario re-weighting on top of them.
+
+use crate::area::model::AreaModel;
+use crate::codesign::pareto::pareto_front;
+use crate::codesign::scenario::{evaluate_reference, DesignEval, Scenario, ScenarioResult};
+use crate::codesign::space::enumerate_space;
+use crate::coordinator::cache::{CacheKey, MemoCache};
+use crate::opt::separable::solve_entry;
+use crate::stencil::defs::Stencil;
+use crate::stencil::workload::Workload;
+use crate::timemodel::talg::TimeModel;
+use crate::util::threadpool::parallel_map;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Sweep statistics beyond the scenario result itself.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub result: ScenarioResult,
+    pub cache_hit_rate: f64,
+    pub cache_entries: usize,
+    pub wall: std::time::Duration,
+}
+
+/// The long-lived coordinator: owns the models and the memo store.
+pub struct Coordinator {
+    pub area_model: AreaModel,
+    pub time_model: TimeModel,
+    pub cache: MemoCache,
+    progress_every: usize,
+    done: AtomicUsize,
+}
+
+impl Coordinator {
+    pub fn new(area_model: AreaModel, time_model: TimeModel) -> Coordinator {
+        Coordinator {
+            area_model,
+            time_model,
+            cache: MemoCache::new(),
+            progress_every: usize::MAX,
+            done: AtomicUsize::new(0),
+        }
+    }
+
+    /// Print a progress line every `n` hardware points.
+    pub fn with_progress(mut self, n: usize) -> Coordinator {
+        self.progress_every = n.max(1);
+        self
+    }
+
+    /// Run a scenario through the memo store. Identical instances across
+    /// scenarios (e.g. the same hardware point under re-weighted workloads,
+    /// or overlapping spaces) are solved once, ever.
+    pub fn run_scenario(&self, scenario: &Scenario) -> SweepReport {
+        let t0 = std::time::Instant::now();
+        let space = enumerate_space(&self.area_model, &scenario.space);
+        self.done.store(0, Ordering::Relaxed);
+
+        let solved: Vec<DesignEval> = parallel_map(&space, scenario.threads, |pt| {
+            let per_entry: Vec<_> = scenario
+                .workload
+                .entries
+                .iter()
+                .map(|e| {
+                    let key = CacheKey::new(&pt.hw, e.stencil, &e.size);
+                    self.cache.get_or_compute(key, || {
+                        solve_entry(
+                            &self.time_model,
+                            &scenario.citer,
+                            &pt.hw,
+                            e,
+                            &scenario.solve_opts,
+                        )
+                    })
+                })
+                .collect();
+            let n = self.done.fetch_add(1, Ordering::Relaxed) + 1;
+            if n % self.progress_every == 0 {
+                eprintln!("[coordinator] {n}/{} hardware points", space.len());
+            }
+            DesignEval {
+                hw: pt.hw,
+                area_mm2: pt.area_mm2,
+                gflops: 0.0,
+                seconds: 0.0,
+                per_entry,
+            }
+        })
+        .into_iter()
+        .collect();
+
+        // Aggregate weighted objective per point; drop infeasible points.
+        let mut points = Vec::new();
+        let mut infeasible = 0usize;
+        let mut total_evals = 0u64;
+        for mut p in solved {
+            total_evals += p.per_entry.iter().flatten().map(|s| s.evals).sum::<u64>();
+            match aggregate(&scenario.workload, &p) {
+                Some((seconds, gflops)) => {
+                    p.seconds = seconds;
+                    p.gflops = gflops;
+                    points.push(p);
+                }
+                None => infeasible += 1,
+            }
+        }
+        let xy: Vec<(f64, f64)> = points.iter().map(|p| (p.area_mm2, p.gflops)).collect();
+        let pareto = pareto_front(&xy);
+
+        let references = vec![
+            evaluate_reference(
+                "gtx980",
+                crate::area::params::HwParams::gtx980(),
+                398.0,
+                scenario,
+                &self.area_model,
+                &self.time_model,
+            ),
+            evaluate_reference(
+                "titanx",
+                crate::area::params::HwParams::titanx(),
+                601.0,
+                scenario,
+                &self.area_model,
+                &self.time_model,
+            ),
+        ];
+        let vs_reference = references
+            .iter()
+            .map(|r| {
+                let best = crate::codesign::pareto::best_within_area(&xy, r.area_mm2);
+                match best {
+                    Some(i) => (
+                        r.name.to_string(),
+                        100.0 * (points[i].gflops / r.gflops - 1.0),
+                        points[i].hw,
+                    ),
+                    None => (r.name.to_string(), f64::NAN, r.hw),
+                }
+            })
+            .collect();
+
+        SweepReport {
+            result: ScenarioResult {
+                scenario_name: scenario.name.clone(),
+                points,
+                pareto,
+                references,
+                stats: crate::codesign::scenario::ImprovementStats { vs_reference },
+                total_evals,
+                infeasible_points: infeasible,
+            },
+            cache_hit_rate: self.cache.stats.hit_rate(),
+            cache_entries: self.cache.len(),
+            wall: t0.elapsed(),
+        }
+    }
+}
+
+/// Weighted aggregation of one design's per-entry optima.
+fn aggregate(workload: &Workload, p: &DesignEval) -> Option<(f64, f64)> {
+    let mut t = 0.0;
+    let mut flops = 0.0;
+    for (e, sol) in workload.entries.iter().zip(&p.per_entry) {
+        if e.weight == 0.0 {
+            continue;
+        }
+        let s = sol.as_ref()?;
+        t += e.weight * s.est.seconds;
+        flops += e.weight * Stencil::get(e.stencil).flops_per_point * e.size.points();
+    }
+    Some((t, flops / t / 1e9))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codesign::scenario;
+    use crate::stencil::defs::StencilId;
+
+    fn quick() -> Scenario {
+        Scenario::quick(Scenario::paper_2d(), 8)
+    }
+
+    #[test]
+    fn coordinator_matches_direct_scenario_run() {
+        let sc = quick();
+        let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+        let rep = coord.run_scenario(&sc);
+        let direct = scenario::run(&sc, &AreaModel::paper(), &TimeModel::maxwell());
+        assert_eq!(rep.result.points.len(), direct.points.len());
+        for (a, b) in rep.result.points.iter().zip(&direct.points) {
+            assert_eq!(a.hw, b.hw);
+            assert!((a.gflops - b.gflops).abs() / b.gflops < 1e-12);
+        }
+        assert_eq!(rep.result.pareto, direct.pareto);
+    }
+
+    #[test]
+    fn second_run_is_all_hits_and_much_faster() {
+        let sc = quick();
+        let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+        let first = coord.run_scenario(&sc);
+        let entries_after_first = coord.cache.len();
+
+        // Re-weighted scenario over the same instances: 100% cache hits.
+        let mut sc2 = sc.clone();
+        sc2.workload = sc
+            .workload
+            .reweighted(|e| if e.stencil == StencilId::Jacobi2D { 1.0 } else { 0.0 });
+        let second = coord.run_scenario(&sc2);
+        assert_eq!(coord.cache.len(), entries_after_first, "no new instances solved");
+        assert!(second.cache_hit_rate > 0.45, "hit rate {}", second.cache_hit_rate);
+        assert!(
+            second.wall < first.wall / 2,
+            "reweighted run {:?} should be far faster than {:?}",
+            second.wall,
+            first.wall
+        );
+        // And the Jacobi-only objective differs from the mixed one.
+        let a = first.result.points[0].gflops;
+        let b = second.result.points[0].gflops;
+        assert!((a - b).abs() > 1e-9);
+    }
+}

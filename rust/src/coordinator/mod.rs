@@ -1,0 +1,13 @@
+//! The DSE coordinator — Layer 3's orchestration core.
+//!
+//! Owns the event loop of a design-space exploration: a memoized result
+//! store keyed by (hardware, stencil, size) — the concrete realization of
+//! eq. (18)'s separability, which makes §V-B's scenario re-weighting free —
+//! a work queue fanned across a thread pool, and progress/statistics
+//! reporting for the CLI.
+
+pub mod cache;
+pub mod driver;
+
+pub use cache::{CacheKey, CacheStats, MemoCache};
+pub use driver::{Coordinator, SweepReport};

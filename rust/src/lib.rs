@@ -1,0 +1,38 @@
+//! # codesign — Accelerator Codesign as Non-Linear Optimization
+//!
+//! A full reproduction of *"Accelerator Codesign as Non-Linear Optimization"*
+//! (Prajapati et al., 2017): an analytical silicon-area model for GPU-like
+//! vector-parallel accelerators, an analytical execution-time model for
+//! hybrid-hexagonally tiled dense stencils, and a mixed-integer non-linear
+//! codesign optimizer that simultaneously selects hardware parameters
+//! (`n_SM`, `n_V`, `M_SM`) and software parameters (tile sizes, hyperthreading
+//! factor) to maximize workload performance under a chip-area budget.
+//!
+//! ## Architecture (three layers, Python never on the request path)
+//!
+//! * **L1** (`python/compile/kernels/`): the six paper stencils as Pallas
+//!   kernels (interpret mode), checked against a pure-`jnp` oracle.
+//! * **L2** (`python/compile/model.py`): JAX time-sweep graphs per stencil,
+//!   AOT-lowered once to HLO text under `artifacts/`.
+//! * **L3** (this crate): area model ([`area`]), Cacti-like memory estimator
+//!   ([`cacti`]), execution-time model ([`timemodel`]), MINLP optimizer
+//!   ([`opt`]), codesign engine ([`codesign`]), cycle-approximate GPU
+//!   simulator ([`sim`]), PJRT runtime ([`runtime`]), DSE coordinator
+//!   ([`coordinator`]), and report generation ([`report`]).
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod area;
+pub mod cacti;
+pub mod codesign;
+pub mod coordinator;
+pub mod opt;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod stencil;
+pub mod timemodel;
+pub mod util;
+
+// Modules are introduced bottom-up; see DESIGN.md §4 for the inventory.

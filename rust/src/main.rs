@@ -1,0 +1,298 @@
+//! `codesign` — the leader binary: CLI over the full reproduction.
+//!
+//! Subcommands map 1:1 onto the experiments of DESIGN.md §6; `report --all`
+//! regenerates every paper table/figure under `reports/`.
+
+use codesign::area::AreaModel;
+use codesign::codesign::scenario::Scenario;
+use codesign::coordinator::Coordinator;
+use codesign::report;
+use codesign::runtime::{measure_citer, Engine};
+use codesign::sim::validate_sweep;
+use codesign::stencil::defs::StencilId;
+use codesign::timemodel::{CIterTable, TimeModel};
+use codesign::util::cli::{Args, Cli, Command, OptSpec, Parsed};
+use std::path::Path;
+
+fn cli() -> Cli {
+    let out = OptSpec { name: "out", takes_value: true, default: Some("reports"), help: "output directory" };
+    let quick =
+        OptSpec { name: "quick", takes_value: false, default: None, help: "reduced space/workload" };
+    let threads = OptSpec { name: "threads", takes_value: true, default: None, help: "worker threads" };
+    Cli {
+        bin: "codesign",
+        about: "Accelerator codesign as non-linear optimization — paper reproduction",
+        commands: vec![
+            Command {
+                name: "calibrate",
+                about: "E1/E2: calibrate the area model, validate on Titan X (Fig 2)",
+                opts: vec![out.clone()],
+            },
+            Command {
+                name: "explore",
+                about: "E3/E4/E5/E7: full design-space exploration (Fig 3, Fig 4)",
+                opts: vec![
+                    out.clone(),
+                    quick.clone(),
+                    threads.clone(),
+                    OptSpec { name: "class", takes_value: true, default: Some("both"), help: "2d | 3d | both" },
+                    OptSpec { name: "measured-citer", takes_value: false, default: None, help: "use PJRT-measured C_iter" },
+                ],
+            },
+            Command {
+                name: "sensitivity",
+                about: "E6: per-benchmark optimal architectures (Table II)",
+                opts: vec![out.clone(), quick.clone(), threads.clone()],
+            },
+            Command {
+                name: "solver-cost",
+                about: "E8: inner-solver cost vs bonmin + joint annealing baseline",
+                opts: vec![out.clone()],
+            },
+            Command {
+                name: "validate",
+                about: "E10: time model vs cycle-approximate simulator",
+                opts: vec![],
+            },
+            Command {
+                name: "citer",
+                about: "measure C_iter on the PJRT CPU substrate (needs `make artifacts`)",
+                opts: vec![OptSpec { name: "repeats", takes_value: true, default: Some("3"), help: "runs per artifact" }],
+            },
+            Command {
+                name: "run-stencil",
+                about: "E11: execute one AOT stencil artifact end to end via PJRT",
+                opts: vec![
+                    OptSpec { name: "artifact", takes_value: true, default: Some("heat2d_256x256_t8"), help: "artifact name (see artifacts/manifest.json)" },
+                    OptSpec { name: "seed", takes_value: true, default: Some("42"), help: "input seed" },
+                ],
+            },
+            Command {
+                name: "tune",
+                about: "§V-D: pin a subset of {n-sm, n-v, m-sm} and optimize the rest under a budget",
+                opts: vec![
+                    OptSpec { name: "budget", takes_value: true, default: Some("450"), help: "area budget, mm²" },
+                    OptSpec { name: "n-sm", takes_value: true, default: None, help: "pin the SM count" },
+                    OptSpec { name: "n-v", takes_value: true, default: None, help: "pin vector units per SM" },
+                    OptSpec { name: "m-sm", takes_value: true, default: None, help: "pin shared memory (kB)" },
+                    OptSpec { name: "stencil", takes_value: true, default: None, help: "single-benchmark workload (default: 2d mix)" },
+                ],
+            },
+            Command {
+                name: "report",
+                about: "regenerate paper tables/figures (use --all for everything)",
+                opts: vec![
+                    out.clone(),
+                    quick.clone(),
+                    threads,
+                    OptSpec { name: "all", takes_value: false, default: None, help: "all experiments" },
+                ],
+            },
+        ],
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match cli().parse(&argv) {
+        Parsed::Help(h) => println!("{h}"),
+        Parsed::Error(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+        Parsed::Run(cmd, args) => {
+            if let Err(e) = dispatch(&cmd, &args) {
+                eprintln!("error: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+fn scenario(base: Scenario, args: &Args) -> Scenario {
+    let mut sc = if args.flag("quick") { Scenario::quick(base, 4) } else { base };
+    if let Some(t) = args.opt_usize("threads") {
+        sc.threads = t.max(1);
+    }
+    sc
+}
+
+fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
+    let out = args.opt_or("out", "reports");
+    let out = Path::new(&out);
+    let area_model = AreaModel::paper();
+    let time_model = TimeModel::maxwell();
+    match cmd {
+        "calibrate" => {
+            let rep = report::fig2::generate_default();
+            print!("{}", rep.summary);
+            for f in rep.save(out)? {
+                println!("wrote {}", f.display());
+            }
+        }
+        "explore" | "sensitivity" | "report" => {
+            let class = args.opt_or("class", "both");
+            let citer = if args.flag("measured-citer") {
+                let mut engine = Engine::from_default_artifacts()?;
+                measure_citer(&mut engine, 3)?
+            } else {
+                CIterTable::paper()
+            };
+            let coord = Coordinator::new(area_model, time_model).with_progress(500);
+            let mut results = Vec::new();
+            for base in [Scenario::paper_2d(), Scenario::paper_3d()] {
+                if cmd == "explore" && class != "both" && base.name != class {
+                    continue;
+                }
+                let mut sc = scenario(base, args);
+                sc.citer = citer.clone();
+                eprintln!("[explore] running {} scenario…", sc.name);
+                let rep = coord.run_scenario(&sc);
+                eprintln!(
+                    "[explore] {}: {} points, {:?}, cache {} entries ({:.0}% hits)",
+                    sc.name,
+                    rep.result.points.len(),
+                    rep.wall,
+                    rep.cache_entries,
+                    100.0 * rep.cache_hit_rate
+                );
+                results.push((sc, rep));
+            }
+            for (_, rep) in &results {
+                let fig3 = report::fig3::generate(&rep.result, &area_model);
+                print!("{}", fig3.summary);
+                fig3.save(out)?;
+                let fig4 = report::fig4::generate(&rep.result, &area_model);
+                print!("{}", fig4.summary);
+                fig4.save(out)?;
+            }
+            if (cmd != "explore") && results.len() == 2 {
+                let t2 = report::table2::generate(
+                    &results[0].1.result,
+                    &results[0].0.workload,
+                    &results[1].1.result,
+                    &results[1].0.workload,
+                    &time_model,
+                    &results[0].0.citer,
+                    (425.0, 450.0),
+                );
+                print!("{}", t2.summary);
+                t2.save(out)?;
+            }
+            if cmd == "report" && args.flag("all") {
+                let fig2 = report::fig2::generate_default();
+                print!("{}", fig2.summary);
+                fig2.save(out)?;
+                let sc = report::solver_cost::generate(&time_model, &CIterTable::paper(), 20_000);
+                print!("{}", sc.summary);
+                sc.save(out)?;
+            }
+        }
+        "solver-cost" => {
+            let rep = report::solver_cost::generate(&time_model, &CIterTable::paper(), 50_000);
+            print!("{}", rep.summary);
+            rep.save(out)?;
+        }
+        "validate" => {
+            let rep = validate_sweep(&time_model);
+            println!(
+                "model vs simulator over {} configurations: MAPE {:.1}%, Kendall tau {:.3}",
+                rep.cases.len(),
+                rep.mape_pct,
+                rep.kendall_tau
+            );
+            for c in rep.cases.iter().take(8) {
+                println!(
+                    "  {:<64} model {:>10.4} ms  sim {:>10.4} ms  ({:+.1}%)",
+                    c.label,
+                    c.model_seconds * 1e3,
+                    c.sim_seconds * 1e3,
+                    c.rel_err_pct()
+                );
+            }
+        }
+        "citer" => {
+            let repeats = args.opt_usize("repeats").unwrap_or(3);
+            let mut engine = Engine::from_default_artifacts()?;
+            println!("PJRT platform: {}", engine.platform());
+            let table = measure_citer(&mut engine, repeats)?;
+            let paper = CIterTable::paper();
+            for id in [
+                StencilId::Jacobi2D,
+                StencilId::Heat2D,
+                StencilId::Laplacian2D,
+                StencilId::Gradient2D,
+                StencilId::Heat3D,
+                StencilId::Laplacian3D,
+            ] {
+                println!(
+                    "  {:<12} measured {:>7.2} cycles (paper mode {:>5.1})",
+                    id.name(),
+                    table.get(id),
+                    paper.get(id)
+                );
+            }
+        }
+        "run-stencil" => {
+            let name = args.opt_or("artifact", "heat2d_256x256_t8");
+            let seed = args.opt_usize("seed").unwrap_or(42) as u64;
+            let mut engine = Engine::from_default_artifacts()?;
+            let entry = engine
+                .manifest()
+                .get(&name)
+                .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}'"))?
+                .clone();
+            let input = Engine::random_input(&entry, seed);
+            let run = engine.run_sweep(&name, &input)?;
+            let ns_pt = run.elapsed.as_nanos() as f64 / entry.points_per_sweep;
+            println!(
+                "{name}: {} points x {} steps in {:?} ({ns_pt:.2} ns/point-update) on {}",
+                entry.points_per_sweep / entry.t_steps as f64,
+                entry.t_steps,
+                run.elapsed,
+                engine.platform()
+            );
+            let mean: f32 = run.output.iter().sum::<f32>() / run.output.len() as f32;
+            println!("output mean {mean:.6}, first interior value {}", run.output[entry.shape[1] + 3]);
+        }
+        "tune" => {
+            use codesign::codesign::tuner::{tune, Pinned};
+            use codesign::opt::problem::SolveOpts;
+            use codesign::stencil::workload::Workload;
+            let budget = args.opt_f64("budget").unwrap_or(450.0);
+            let pinned = Pinned {
+                n_sm: args.opt_usize("n-sm").map(|v| v as u32),
+                n_v: args.opt_usize("n-v").map(|v| v as u32),
+                m_sm_kb: args.opt_f64("m-sm"),
+                caches: None,
+            };
+            let workload = match args.opt("stencil") {
+                Some(name) => {
+                    let id = StencilId::from_name(name)
+                        .ok_or_else(|| anyhow::anyhow!("unknown stencil '{name}'"))?;
+                    Workload::single(id)
+                }
+                None => Workload::uniform_2d(),
+            };
+            let r = tune(
+                &pinned,
+                budget,
+                &workload,
+                &area_model,
+                &time_model,
+                &CIterTable::paper(),
+                &SolveOpts::default(),
+            )
+            .ok_or_else(|| anyhow::anyhow!("no feasible design within {budget} mm²"))?;
+            println!(
+                "best completion within {budget} mm² over {} candidates:\n  {} -> {:.0} GFLOP/s at {:.0} mm²",
+                r.candidates,
+                r.hw.label(),
+                r.gflops,
+                r.area_mm2
+            );
+        }
+        other => anyhow::bail!("unhandled command {other}"),
+    }
+    Ok(())
+}

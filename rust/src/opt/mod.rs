@@ -1,0 +1,32 @@
+//! The non-linear mixed-integer optimization substrate (§IV).
+//!
+//! The paper solves problem (17) — minimize workload-weighted `T_alg` over
+//! hardware *and* software parameters — by the separability transformation
+//! (18): exhaustive search over hardware points, and for each hardware point
+//! an independent *inner problem* per (stencil, size) pair over the ~10
+//! integer software variables (tile sizes, hyperthreading factor, plus the
+//! auxiliary floor/ceil variables that our evaluator computes directly).
+//! The paper hands the inner problem to bonmin (≈ 19 s per instance); we
+//! solve it exactly over the constraint-pruned candidate grid:
+//!
+//! * [`inner`] — the production inner solver: constraint-directed candidate
+//!   enumeration with a monotonicity-based `k` selection and local integer
+//!   refinement around the grid optimum (µs–ms per instance).
+//! * [`exhaustive`] — a brute-force reference solver over a *fine* grid,
+//!   used by tests and the solver-cost bench to certify [`inner`].
+//! * [`separable`] — the eq. (18) driver: workload-weighted objective for
+//!   one hardware point from memoizable inner solutions.
+//! * [`anneal`] — the joint 600-odd-variable baseline (simulated annealing
+//!   over hardware and all tile vectors simultaneously), reproducing the
+//!   paper's argument that the unstructured problem is computationally
+//!   infeasible (E8).
+
+pub mod anneal;
+pub mod exhaustive;
+pub mod inner;
+pub mod problem;
+pub mod separable;
+
+pub use inner::{solve_inner, InnerSolution};
+pub use problem::{InnerProblem, SolveOpts};
+pub use separable::{solve_hardware_point, HardwarePointSolution};

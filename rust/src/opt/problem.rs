@@ -1,0 +1,165 @@
+//! Inner-problem definition and candidate grids.
+
+use crate::area::params::HwParams;
+use crate::stencil::defs::Stencil;
+use crate::stencil::workload::ProblemSize;
+use crate::timemodel::talg::TimeModel;
+
+/// One inner optimization instance: fixed stencil (with its `C_iter`
+/// applied), problem size and hardware point; free software parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct InnerProblem {
+    pub stencil: Stencil,
+    pub size: ProblemSize,
+    pub hw: HwParams,
+}
+
+/// Solver options.
+#[derive(Clone, Debug)]
+pub struct SolveOpts {
+    /// Evaluate every feasible `k` instead of the candidate heuristic.
+    pub all_k: bool,
+    /// Hill-climb integer refinement around the grid optimum.
+    pub refine: bool,
+    /// Cap on the hexagon time height grid.
+    pub max_t_t: u64,
+}
+
+impl Default for SolveOpts {
+    fn default() -> Self {
+        SolveOpts { all_k: false, refine: true, max_t_t: 128 }
+    }
+}
+
+/// Geometric-ish grid for `t_S1` (the hexagon base width). `T_alg` is smooth
+/// in `t_S1` between ceil breakpoints, so a coarse grid plus local refinement
+/// recovers the integer optimum (certified against [`crate::opt::exhaustive`]
+/// by the property tests).
+pub fn t_s1_grid(s1: u64) -> Vec<u64> {
+    const GRID: [u64; 17] = [1, 2, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512];
+    GRID.iter().copied().filter(|&v| v <= s1).collect()
+}
+
+/// Grid for `t_S2`: positive multiples of 32 up to the thread limit.
+pub fn t_s2_grid(s2: u64, max_threads: u32) -> Vec<u64> {
+    const GRID: [u64; 10] = [32, 64, 96, 128, 192, 256, 384, 512, 768, 1024];
+    GRID.iter()
+        .copied()
+        .filter(|&v| v <= s2.max(32) && v <= max_threads as u64)
+        .collect()
+}
+
+/// Grid for `t_S3` (3-D only).
+pub fn t_s3_grid(s3: u64) -> Vec<u64> {
+    const GRID: [u64; 9] = [1, 2, 4, 6, 8, 12, 16, 24, 32];
+    GRID.iter().copied().filter(|&v| v <= s3).collect()
+}
+
+/// Grid for `t_T`: even values, denser at the small end where the
+/// reuse-vs-footprint trade-off lives.
+pub fn t_t_grid(t: u64, cap: u64) -> Vec<u64> {
+    const GRID: [u64; 16] = [2, 4, 6, 8, 10, 12, 16, 20, 24, 32, 40, 48, 64, 80, 96, 128];
+    GRID.iter().copied().filter(|&v| v <= t.max(2) && v <= cap).collect()
+}
+
+/// Candidate `k` values for given tiles: the occupancy-saturating `k`, the
+/// resource-maximal `k`, and their immediate neighbours (the only points
+/// where the piecewise behaviour of the round model can turn — validated
+/// against all-k enumeration by `prop_invariants`).
+pub fn k_candidates(
+    model: &TimeModel,
+    _stencil: &Stencil,
+    hw: &HwParams,
+    threads_per_block: u64,
+    m_tile_bytes: f64,
+) -> Vec<u32> {
+    let m = &model.machine;
+    let k_max = k_max_for(model, hw, threads_per_block, m_tile_bytes);
+    if k_max == 0 {
+        return Vec::new();
+    }
+    let k_occ = ((m.latency_factor_for(hw.m_sm_kb) * hw.n_v as f64) / threads_per_block as f64)
+        .ceil() as u64;
+    // Three candidates suffice: k=1 (sync-amortization floor), the
+    // occupancy-saturating k, and the resource-maximal k. The ±1 neighbours
+    // were measured to change no optimum across the brute-force property
+    // sweep while costing ~40% more evaluations (§Perf); the refinement
+    // phase still explores k±1 and the coupled tile/k_max moves.
+    let (arr, n) = k_candidates_inline(k_max, k_occ);
+    arr[..n].to_vec()
+}
+
+/// Allocation-free core of [`k_candidates`]: `(candidates, count)`, sorted
+/// and deduplicated. The inner solver calls this once per tile vector on the
+/// DSE hot path (§Perf).
+pub fn k_candidates_inline(k_max: u64, k_occ: u64) -> ([u32; 3], usize) {
+    let mut arr = [1u32, k_occ.clamp(1, k_max) as u32, k_max as u32];
+    arr.sort_unstable();
+    let mut n = 0usize;
+    for i in 0..3 {
+        if n == 0 || arr[i] != arr[n - 1] {
+            arr[n] = arr[i];
+            n += 1;
+        }
+    }
+    (arr, n)
+}
+
+/// The raw resource cap on `k` for given tiles (shared by the solver and the
+/// refinement's coupled moves).
+pub fn k_max_for(
+    model: &TimeModel,
+    hw: &HwParams,
+    threads_per_block: u64,
+    m_tile_bytes: f64,
+) -> u64 {
+    let m = &model.machine;
+    let by_blocks = m.max_blocks_per_sm as u64;
+    let by_warps = (m.max_warps_per_sm as u64 * m.warp as u64) / threads_per_block.max(1);
+    let by_shmem = (hw.m_sm_kb * 1024.0 / m_tile_bytes.max(1.0)).floor() as u64;
+    by_blocks.min(by_warps).min(by_shmem)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::defs::{Stencil, StencilId};
+
+    #[test]
+    fn grids_respect_bounds() {
+        assert!(t_s1_grid(16384).contains(&512));
+        assert_eq!(t_s1_grid(5), vec![1, 2, 4]);
+        assert_eq!(t_s2_grid(4096, 1024).last(), Some(&1024));
+        assert_eq!(t_s2_grid(4096, 256).last(), Some(&256));
+        assert!(t_t_grid(1024, 128).iter().all(|&v| v % 2 == 0));
+        assert_eq!(t_t_grid(7, 128), vec![2, 4, 6]);
+        assert_eq!(t_s3_grid(4), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn t_s2_grid_never_empty() {
+        // Even a tiny S2 must offer the minimum warp width.
+        assert_eq!(t_s2_grid(8, 1024), vec![32]);
+    }
+
+    #[test]
+    fn k_candidates_within_limits() {
+        let model = TimeModel::maxwell();
+        let st = Stencil::get(StencilId::Jacobi2D);
+        let hw = HwParams::gtx980();
+        let ks = k_candidates(&model, st, &hw, 128, 20_000.0);
+        assert!(!ks.is_empty());
+        // shmem cap: floor(98304 / 20000) = 4.
+        assert!(ks.iter().all(|&k| k >= 1 && k <= 4), "{ks:?}");
+        assert!(ks.contains(&4));
+        assert!(ks.contains(&1));
+    }
+
+    #[test]
+    fn k_candidates_empty_when_tile_too_big() {
+        let model = TimeModel::maxwell();
+        let st = Stencil::get(StencilId::Jacobi2D);
+        let hw = HwParams::gtx980();
+        assert!(k_candidates(&model, st, &hw, 128, 1e9).is_empty());
+    }
+}

@@ -1,0 +1,179 @@
+//! The separability transformation, eq. (18): the workload-weighted
+//! objective for one hardware point decomposes into independent inner
+//! minimizations per (stencil, size) entry.
+
+use crate::area::params::HwParams;
+use crate::opt::inner::{solve_inner, InnerSolution};
+use crate::opt::problem::{InnerProblem, SolveOpts};
+use crate::stencil::defs::Stencil;
+use crate::stencil::workload::{Workload, WorkloadEntry};
+use crate::timemodel::citer::CIterTable;
+use crate::timemodel::talg::TimeModel;
+
+/// Result of optimizing every workload entry on one hardware point.
+#[derive(Clone, Debug)]
+pub struct HardwarePointSolution {
+    pub hw: HwParams,
+    /// Per-entry optimal software parameters (None where infeasible).
+    pub per_entry: Vec<Option<InnerSolution>>,
+    /// Workload-weighted execution time `T_alg^Cd` (eq. 17), seconds.
+    /// `None` if any positively-weighted entry is infeasible.
+    pub weighted_seconds: Option<f64>,
+    /// Workload-weighted GFLOP/s (the Fig 3 y-axis).
+    pub weighted_gflops: Option<f64>,
+    /// Total model evaluations across the inner solves.
+    pub evals: u64,
+}
+
+/// Solve eq. (18)'s inner stage for one hardware point: independent inner
+/// problems per entry, then the weighted sums.
+///
+/// The weighted GFLOP/s is the flop-weighted aggregate
+/// `Σ w_i · flops_i / Σ w_i · T_i` — the workload's aggregate throughput if
+/// instances arrive with frequency `w`.
+pub fn solve_hardware_point(
+    model: &TimeModel,
+    workload: &Workload,
+    citer: &CIterTable,
+    hw: &HwParams,
+    opts: &SolveOpts,
+) -> HardwarePointSolution {
+    let per_entry: Vec<Option<InnerSolution>> = workload
+        .entries
+        .iter()
+        .map(|e| solve_entry(model, citer, hw, e, opts))
+        .collect();
+    let evals = per_entry.iter().flatten().map(|s| s.evals).sum();
+
+    let mut t_weighted = 0.0;
+    let mut flops_weighted = 0.0;
+    let mut feasible = true;
+    for (entry, sol) in workload.entries.iter().zip(&per_entry) {
+        if entry.weight == 0.0 {
+            continue;
+        }
+        match sol {
+            Some(s) => {
+                t_weighted += entry.weight * s.est.seconds;
+                let st = Stencil::get(entry.stencil);
+                flops_weighted += entry.weight * st.flops_per_point * entry.size.points();
+            }
+            None => feasible = false,
+        }
+    }
+    let (weighted_seconds, weighted_gflops) = if feasible {
+        (Some(t_weighted), Some(flops_weighted / t_weighted / 1e9))
+    } else {
+        (None, None)
+    };
+    HardwarePointSolution { hw: *hw, per_entry, weighted_seconds, weighted_gflops, evals }
+}
+
+/// Solve one workload entry on one hardware point.
+pub fn solve_entry(
+    model: &TimeModel,
+    citer: &CIterTable,
+    hw: &HwParams,
+    entry: &WorkloadEntry,
+    opts: &SolveOpts,
+) -> Option<InnerSolution> {
+    let stencil = citer.apply(Stencil::get(entry.stencil));
+    let p = InnerProblem { stencil, size: entry.size, hw: *hw };
+    solve_inner(model, &p, opts)
+}
+
+/// Re-aggregate an already-solved hardware point under a different workload
+/// weighting — §V-B's "explore other scenarios for free". The `solution`
+/// must have been produced over the *same entry list* (same order).
+pub fn reweight(
+    solution: &HardwarePointSolution,
+    base: &Workload,
+    reweighted: &Workload,
+) -> HardwarePointSolution {
+    assert_eq!(base.entries.len(), reweighted.entries.len(), "workload mismatch");
+    let mut t_weighted = 0.0;
+    let mut flops_weighted = 0.0;
+    let mut feasible = true;
+    for ((e_base, e_new), sol) in
+        base.entries.iter().zip(&reweighted.entries).zip(&solution.per_entry)
+    {
+        assert_eq!(e_base.stencil, e_new.stencil, "workload mismatch");
+        if e_new.weight == 0.0 {
+            continue;
+        }
+        match sol {
+            Some(s) => {
+                t_weighted += e_new.weight * s.est.seconds;
+                let st = Stencil::get(e_new.stencil);
+                flops_weighted += e_new.weight * st.flops_per_point * e_new.size.points();
+            }
+            None => feasible = false,
+        }
+    }
+    HardwarePointSolution {
+        hw: solution.hw,
+        per_entry: solution.per_entry.clone(),
+        weighted_seconds: feasible.then_some(t_weighted),
+        weighted_gflops: feasible.then_some(flops_weighted / t_weighted / 1e9),
+        evals: 0, // no new model evaluations — the point of eq. (18)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::defs::StencilId;
+
+    #[test]
+    fn gtx980_uniform_2d_solves() {
+        let model = TimeModel::maxwell();
+        let w = Workload::uniform_2d();
+        let sol = solve_hardware_point(
+            &model,
+            &w,
+            &CIterTable::paper(),
+            &HwParams::gtx980(),
+            &SolveOpts::default(),
+        );
+        assert_eq!(sol.per_entry.len(), 64);
+        assert!(sol.per_entry.iter().all(|s| s.is_some()));
+        let g = sol.weighted_gflops.unwrap();
+        assert!(g > 200.0 && g < 6000.0, "weighted GFLOP/s = {g}");
+    }
+
+    #[test]
+    fn infeasible_hw_flagged() {
+        let model = TimeModel::maxwell();
+        let mut hw = HwParams::gtx980();
+        hw.m_sm_kb = 0.25;
+        let sol = solve_hardware_point(
+            &model,
+            &Workload::uniform_2d(),
+            &CIterTable::paper(),
+            &hw,
+            &SolveOpts::default(),
+        );
+        assert!(sol.weighted_seconds.is_none());
+    }
+
+    #[test]
+    fn reweight_matches_direct_solve_for_free() {
+        let model = TimeModel::maxwell();
+        let base = Workload::uniform_2d();
+        let hw = HwParams::gtx980();
+        let opts = SolveOpts::default();
+        let citer = CIterTable::paper();
+        let solved = solve_hardware_point(&model, &base, &citer, &hw, &opts);
+
+        let jaconly =
+            base.reweighted(|e| if e.stencil == StencilId::Jacobi2D { 1.0 } else { 0.0 });
+        let cheap = reweight(&solved, &base, &jaconly);
+        assert_eq!(cheap.evals, 0);
+        // Per-entry optima don't depend on weights, so re-aggregation must
+        // equal a from-scratch solve under the new weights.
+        let direct = solve_hardware_point(&model, &jaconly, &citer, &hw, &opts);
+        let a = cheap.weighted_seconds.unwrap();
+        let b = direct.weighted_seconds.unwrap();
+        assert!((a - b).abs() / b < 1e-12, "{a} vs {b}");
+    }
+}

@@ -1,0 +1,99 @@
+//! E1 — Fig 2: linear regression models for the four memory types, plus the
+//! Table I coefficient comparison against the paper's published values.
+
+use crate::area::calibrate::{calibrate_maxwell, Calibration};
+use crate::cacti::calibrate::PAPER_TARGETS;
+use crate::report::render::Report;
+use crate::util::csv::Table;
+use crate::util::svg::{Marker, SvgPlot};
+
+/// Generate the Fig 2 report from a calibration run.
+pub fn generate(cal: &Calibration) -> Report {
+    let mut rep = Report::new("fig2_memory_models");
+
+    // Data points + fits per memory type.
+    let mut data = Table::new(&["memory", "size_kb", "cacti_area_mm2", "fit_area_mm2"]);
+    for sweep in &cal.sweeps {
+        for (&kb, &a) in sweep.sizes_kb.iter().zip(&sweep.areas_mm2) {
+            data.push(&[
+                sweep.name.to_string(),
+                format!("{kb}"),
+                format!("{a:.6}"),
+                format!("{:.6}", sweep.fit.eval(kb)),
+            ]);
+        }
+    }
+    rep.csvs.push(("points".into(), data));
+
+    // Coefficients vs paper.
+    let mut coeffs = Table::new(&["memory", "beta_ours", "beta_paper", "beta_err_pct", "alpha_ours", "alpha_paper", "alpha_err_pct", "r2"]);
+    let mut summary = String::from("Fig 2 / Table I — memory linear fits (ours vs paper)\n");
+    for (sweep, &(name, bt, at)) in cal.sweeps.iter().zip(PAPER_TARGETS.iter()) {
+        assert_eq!(sweep.name, name);
+        let be = 100.0 * (sweep.beta() - bt) / bt;
+        let ae = 100.0 * (sweep.alpha() - at) / at;
+        coeffs.push(&[
+            name.to_string(),
+            format!("{:.6}", sweep.beta()),
+            format!("{bt:.6}"),
+            format!("{be:.2}"),
+            format!("{:.6}", sweep.alpha()),
+            format!("{at:.6}"),
+            format!("{ae:.2}"),
+            format!("{:.5}", sweep.fit.r2),
+        ]);
+        summary.push_str(&format!(
+            "  {name:<16} β {:.6} (paper {:.6}, {be:+.2}%)  α {:.6} (paper {:.6}, {ae:+.2}%)  r²={:.5}\n",
+            sweep.beta(),
+            bt,
+            sweep.alpha(),
+            at,
+            sweep.fit.r2
+        ));
+    }
+    summary.push_str(&format!(
+        "\nGTX980 predicted {:.1} mm² (published 398); TitanX predicted {:.1} mm² (published 601, err {:.2}%)\n",
+        cal.gtx980_pred_mm2, cal.titanx_pred_mm2, cal.titanx_err_pct
+    ));
+    rep.csvs.push(("coefficients".into(), coeffs));
+
+    // One SVG panel per memory type (points + fitted line), like Fig 2.
+    for sweep in &cal.sweeps {
+        let mut plot = SvgPlot::new(
+            &format!("{} area model", sweep.name),
+            "bank size (kB)",
+            "area (mm^2)",
+        );
+        let pts: Vec<(f64, f64)> =
+            sweep.sizes_kb.iter().copied().zip(sweep.areas_mm2.iter().copied()).collect();
+        let fit: Vec<(f64, f64)> =
+            sweep.sizes_kb.iter().map(|&kb| (kb, sweep.fit.eval(kb))).collect();
+        plot.series("estimator", "#1f77b4", Marker::Circle, false, pts);
+        plot.series("linear fit", "#d62728", Marker::Cross, true, fit);
+        rep.svgs.push((sweep.name.to_string(), plot.render()));
+    }
+
+    rep.summary = summary;
+    rep
+}
+
+/// Convenience: calibrate and report in one call.
+pub fn generate_default() -> Report {
+    generate(&calibrate_maxwell())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_report_complete() {
+        let rep = generate_default();
+        assert_eq!(rep.csvs.len(), 2);
+        assert_eq!(rep.svgs.len(), 4);
+        assert!(rep.summary.contains("register_file"));
+        assert!(rep.summary.contains("TitanX"));
+        // 21 data rows: 5+5+6+5.
+        assert_eq!(rep.csvs[0].1.rows.len(), 21);
+    }
+}

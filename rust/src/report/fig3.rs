@@ -1,0 +1,133 @@
+//! E3/E4/E5/E9 — Fig 3: optimal performance vs chip area, Pareto frontier,
+//! reference architectures, improvement statistics and the cache-less
+//! comparison.
+
+use crate::area::model::AreaModel;
+use crate::codesign::cacheless::cacheless_comparison;
+use crate::codesign::scenario::ScenarioResult;
+use crate::report::render::Report;
+use crate::util::csv::Table;
+use crate::util::svg::{Marker, SvgPlot};
+
+/// Paper-reported improvement numbers for the summary comparison.
+pub fn paper_improvements(name: &str) -> Option<(f64, f64, f64, f64)> {
+    // (vs gtx980 full, vs titanx full, cacheless gtx980, cacheless titanx)
+    match name {
+        "2d" => Some((104.0, 69.0, 9.34, 28.44)),
+        "3d" => Some((123.0, 126.0, 9.22, 33.15)),
+        _ => None,
+    }
+}
+
+/// Generate the Fig 3 report for one workload class.
+pub fn generate(res: &ScenarioResult, area_model: &AreaModel) -> Report {
+    let mut rep = Report::new(&format!("fig3_pareto_{}", res.scenario_name));
+
+    // Full point cloud.
+    let mut cloud = Table::new(&["n_sm", "n_v", "m_sm_kb", "area_mm2", "gflops", "pareto"]);
+    for (i, p) in res.points.iter().enumerate() {
+        cloud.push(&[
+            p.hw.n_sm.to_string(),
+            p.hw.n_v.to_string(),
+            format!("{}", p.hw.m_sm_kb),
+            format!("{:.1}", p.area_mm2),
+            format!("{:.1}", p.gflops),
+            (res.pareto.contains(&i) as u8).to_string(),
+        ]);
+    }
+    rep.csvs.push(("design_points".into(), cloud));
+
+    // References + improvements.
+    let mut refs = Table::new(&["name", "area_mm2", "published_mm2", "gflops"]);
+    for r in &res.references {
+        refs.push(&[
+            r.name.to_string(),
+            format!("{:.1}", r.area_mm2),
+            format!("{:.0}", r.published_area_mm2),
+            format!("{:.1}", r.gflops),
+        ]);
+    }
+    rep.csvs.push(("references".into(), refs));
+
+    let cacheless = cacheless_comparison(res, area_model);
+    let mut cl = Table::new(&[
+        "reference",
+        "full_area_mm2",
+        "reduced_area_mm2",
+        "ref_gflops",
+        "best_gflops_at_reduced",
+        "improvement_pct",
+        "full_budget_improvement_pct",
+    ]);
+    for row in &cacheless {
+        cl.push(&[
+            row.reference.clone(),
+            format!("{:.1}", row.full_area_mm2),
+            format!("{:.1}", row.reduced_area_mm2),
+            format!("{:.1}", row.ref_gflops),
+            format!("{:.1}", row.best_gflops),
+            format!("{:.2}", row.improvement_pct),
+            format!("{:.2}", row.full_budget_improvement_pct),
+        ]);
+    }
+    rep.csvs.push(("cacheless".into(), cl));
+
+    // SVG in the style of Fig 3.
+    let xy = res.xy();
+    let front: Vec<(f64, f64)> = res.pareto.iter().map(|&i| xy[i]).collect();
+    let refs_xy: Vec<(f64, f64)> = res.references.iter().map(|r| (r.area_mm2, r.gflops)).collect();
+    let mut plot = SvgPlot::new(
+        &format!(
+            "Fig 3 ({}): optimal performance of each feasible design vs chip area",
+            res.scenario_name
+        ),
+        "chip area (mm^2)",
+        "GFLOP/s",
+    );
+    plot.series("feasible designs", "#bbbbbb", Marker::Circle, false, xy);
+    plot.series("pareto optimal", "#1f77b4", Marker::Circle, true, front);
+    plot.series("GTX980 / TitanX", "#d62728", Marker::Cross, false, refs_xy);
+    rep.svgs.push(("pareto".into(), plot.render()));
+
+    // Summary with paper comparison.
+    let mut s = format!(
+        "Fig 3 ({}): {} feasible designs, {} pareto-optimal ({:.1}%)\n",
+        res.scenario_name,
+        res.points.len(),
+        res.pareto.len(),
+        100.0 * res.pareto.len() as f64 / res.points.len().max(1) as f64
+    );
+    for (name, impr, hw) in &res.stats.vs_reference {
+        s.push_str(&format!("  vs {name}: {impr:+.1}% at comparable area (best: {})\n", hw.label()));
+    }
+    for row in &cacheless {
+        s.push_str(&format!(
+            "  cache-less {}: {:.0}->{:.0} mm², {:+.2}% at reduced budget\n",
+            row.reference, row.full_area_mm2, row.reduced_area_mm2, row.improvement_pct
+        ));
+    }
+    if let Some((g_full, t_full, g_cl, t_cl)) = paper_improvements(&res.scenario_name) {
+        s.push_str(&format!(
+            "  paper reports: +{g_full}% / +{t_full}% full budget; +{g_cl}% / +{t_cl}% cache-less\n"
+        ));
+    }
+    rep.summary = s;
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codesign::scenario::testfix;
+
+    #[test]
+    fn fig3_report_complete() {
+        let res = testfix::quick_2d();
+        let rep = generate(res, &AreaModel::paper());
+        assert_eq!(rep.csvs.len(), 3);
+        assert_eq!(rep.svgs.len(), 1);
+        assert!(rep.summary.contains("pareto-optimal"));
+        assert!(rep.summary.contains("paper reports"));
+        assert_eq!(rep.csvs[0].1.rows.len(), res.points.len());
+    }
+}

@@ -1,0 +1,63 @@
+//! E7 — Fig 4: resource allocation — % of chip area in memory vs in vector
+//! units for every design, Pareto designs highlighted, plus the clustering
+//! statistic.
+
+use crate::area::model::AreaModel;
+use crate::codesign::allocation::{allocation_points, dispersion};
+use crate::codesign::scenario::ScenarioResult;
+use crate::report::render::Report;
+use crate::util::csv::Table;
+use crate::util::svg::{Marker, SvgPlot};
+
+pub fn generate(res: &ScenarioResult, area_model: &AreaModel) -> Report {
+    let mut rep = Report::new(&format!("fig4_allocation_{}", res.scenario_name));
+    let pts = allocation_points(res, area_model);
+
+    let mut t = Table::new(&["pct_memory", "pct_cores", "area_mm2", "gflops", "pareto"]);
+    for p in &pts {
+        t.push(&[
+            format!("{:.2}", p.pct_memory),
+            format!("{:.2}", p.pct_cores),
+            format!("{:.1}", p.area_mm2),
+            format!("{:.1}", p.gflops),
+            (p.is_pareto as u8).to_string(),
+        ]);
+    }
+    rep.csvs.push(("allocation".into(), t));
+
+    let all: Vec<(f64, f64)> = pts.iter().map(|p| (p.pct_memory, p.pct_cores)).collect();
+    let front: Vec<(f64, f64)> =
+        pts.iter().filter(|p| p.is_pareto).map(|p| (p.pct_memory, p.pct_cores)).collect();
+    let mut plot = SvgPlot::new(
+        &format!("Fig 4 ({}): resource allocation", res.scenario_name),
+        "% die area in memory (RF + shared)",
+        "% die area in vector units",
+    );
+    plot.series("all designs", "#bbbbbb", Marker::Circle, false, all.clone());
+    plot.series("pareto optimal", "#1f77b4", Marker::Circle, false, front.clone());
+    rep.svgs.push(("allocation".into(), plot.render()));
+
+    rep.summary = format!(
+        "Fig 4 ({}): dispersion all={:.2}, pareto={:.2} — optimal designs cluster ({}x tighter)\n",
+        res.scenario_name,
+        dispersion(&all),
+        dispersion(&front),
+        (dispersion(&all) / dispersion(&front).max(1e-9)).round()
+    );
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codesign::scenario::testfix;
+
+    #[test]
+    fn fig4_report_complete() {
+        let res = testfix::quick_2d();
+        let rep = generate(res, &AreaModel::paper());
+        assert_eq!(rep.csvs[0].1.rows.len(), res.points.len());
+        assert!(rep.summary.contains("dispersion"));
+        assert_eq!(rep.svgs.len(), 1);
+    }
+}

@@ -1,0 +1,12 @@
+//! Report generation: every table and figure of the paper's evaluation is
+//! regenerated as CSV (data), SVG (plot) and an ASCII summary, written under
+//! `reports/` (see DESIGN.md §6 for the experiment index).
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod render;
+pub mod solver_cost;
+pub mod table2;
+
+pub use render::Report;

@@ -1,0 +1,60 @@
+//! Common report container: named CSV tables, SVG plots and a text summary,
+//! saved as a bundle.
+
+use crate::util::csv::Table;
+use std::path::Path;
+
+/// One generated report (e.g. "fig3_2d").
+pub struct Report {
+    pub name: String,
+    pub csvs: Vec<(String, Table)>,
+    pub svgs: Vec<(String, String)>,
+    pub summary: String,
+}
+
+impl Report {
+    pub fn new(name: &str) -> Report {
+        Report { name: name.to_string(), csvs: Vec::new(), svgs: Vec::new(), summary: String::new() }
+    }
+
+    /// Write `<dir>/<name>/…` and return the list of files written.
+    pub fn save(&self, dir: &Path) -> std::io::Result<Vec<std::path::PathBuf>> {
+        let sub = dir.join(&self.name);
+        std::fs::create_dir_all(&sub)?;
+        let mut written = Vec::new();
+        for (n, t) in &self.csvs {
+            let p = sub.join(format!("{n}.csv"));
+            t.save(&p)?;
+            written.push(p);
+        }
+        for (n, s) in &self.svgs {
+            let p = sub.join(format!("{n}.svg"));
+            std::fs::write(&p, s)?;
+            written.push(p);
+        }
+        let p = sub.join("summary.txt");
+        std::fs::write(&p, &self.summary)?;
+        written.push(p);
+        Ok(written)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_roundtrip() {
+        let mut r = Report::new("unit_test_report");
+        let mut t = Table::new(&["a"]);
+        t.push(&[1]);
+        r.csvs.push(("data".into(), t));
+        r.svgs.push(("plot".into(), "<svg></svg>".into()));
+        r.summary = "hello".into();
+        let dir = std::env::temp_dir().join(format!("codesign-report-{}", std::process::id()));
+        let files = r.save(&dir).unwrap();
+        assert_eq!(files.len(), 3);
+        assert!(files.iter().all(|f| f.exists()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

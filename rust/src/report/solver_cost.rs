@@ -1,0 +1,131 @@
+//! E8 — solver cost: our exact inner solver vs the paper's bonmin
+//! (19 s/instance average, 7–24 h per full sweep) and vs the joint annealing
+//! baseline that ignores eq. (18)'s separability.
+
+use crate::area::params::HwParams;
+use crate::opt::anneal::{solve_joint, AnnealOpts};
+use crate::opt::inner::solve_inner;
+use crate::opt::problem::{InnerProblem, SolveOpts};
+use crate::opt::separable::solve_hardware_point;
+use crate::report::render::Report;
+use crate::stencil::defs::Stencil;
+use crate::stencil::workload::Workload;
+use crate::timemodel::citer::CIterTable;
+use crate::timemodel::talg::TimeModel;
+use crate::util::csv::Table;
+use crate::util::stats;
+use std::time::Instant;
+
+/// Paper-reported solver figures.
+pub const PAPER_AVG_SECONDS_PER_INSTANCE: f64 = 19.0;
+pub const PAPER_TOTAL_HOURS: (f64, f64) = (7.0, 24.0);
+
+/// Timing of our inner solver over a workload on one hardware point.
+pub struct InnerTiming {
+    pub per_instance_us: Vec<f64>,
+    pub evals: Vec<u64>,
+}
+
+/// Time every (stencil, size) inner solve on `hw` individually.
+pub fn time_inner_solves(
+    model: &TimeModel,
+    workload: &Workload,
+    citer: &CIterTable,
+    hw: &HwParams,
+) -> InnerTiming {
+    let mut per_instance_us = Vec::new();
+    let mut evals = Vec::new();
+    for e in &workload.entries {
+        let stencil = citer.apply(Stencil::get(e.stencil));
+        let p = InnerProblem { stencil, size: e.size, hw: *hw };
+        let t0 = Instant::now();
+        let sol = solve_inner(model, &p, &SolveOpts::default());
+        per_instance_us.push(t0.elapsed().as_nanos() as f64 / 1e3);
+        evals.push(sol.map(|s| s.evals).unwrap_or(0));
+    }
+    InnerTiming { per_instance_us, evals }
+}
+
+/// Generate the solver-cost report.
+pub fn generate(model: &TimeModel, citer: &CIterTable, anneal_iters: u64) -> Report {
+    let mut rep = Report::new("solver_cost");
+    let workload = Workload::uniform_2d();
+    let hw = HwParams::gtx980();
+
+    let timing = time_inner_solves(model, &workload, citer, &hw);
+    let med = stats::median(&timing.per_instance_us);
+    let mean = stats::mean(&timing.per_instance_us);
+    let p95 = stats::percentile(&timing.per_instance_us, 95.0);
+
+    // Joint annealing baseline on the same workload / hardware freedom.
+    let t0 = Instant::now();
+    let sa = solve_joint(
+        model,
+        &workload,
+        citer,
+        hw,
+        |h| h.respects_manufacturer_patterns(),
+        &AnnealOpts { iterations: anneal_iters, ..Default::default() },
+    );
+    let sa_wall = t0.elapsed();
+    let exact = solve_hardware_point(model, &workload, citer, &hw, &SolveOpts::default());
+
+    let mut t = Table::new(&["metric", "value"]);
+    t.push(&["instances".to_string(), timing.per_instance_us.len().to_string()]);
+    t.push(&["ours_median_us".to_string(), format!("{med:.1}")]);
+    t.push(&["ours_mean_us".to_string(), format!("{mean:.1}")]);
+    t.push(&["ours_p95_us".to_string(), format!("{p95:.1}")]);
+    t.push(&["paper_bonmin_avg_s".to_string(), format!("{PAPER_AVG_SECONDS_PER_INSTANCE}")]);
+    t.push(&[
+        "speedup_vs_bonmin".to_string(),
+        format!("{:.0}x", PAPER_AVG_SECONDS_PER_INSTANCE * 1e6 / mean),
+    ]);
+    t.push(&["anneal_iterations".to_string(), sa.evals.to_string()]);
+    t.push(&["anneal_wall_s".to_string(), format!("{:.2}", sa_wall.as_secs_f64())]);
+    t.push(&["anneal_variables".to_string(), sa.n_variables.to_string()]);
+    t.push(&[
+        "anneal_objective_s".to_string(),
+        sa.weighted_seconds.map(|s| format!("{s:.4}")).unwrap_or_else(|| "infeasible".into()),
+    ]);
+    t.push(&[
+        "separable_objective_s".to_string(),
+        format!("{:.4}", exact.weighted_seconds.unwrap()),
+    ]);
+    rep.csvs.push(("cost".into(), t));
+
+    rep.summary = format!(
+        "Solver cost (E8)\n  ours: median {med:.0} µs / mean {mean:.0} µs per 10-int-var instance \
+         (paper bonmin: {PAPER_AVG_SECONDS_PER_INSTANCE} s avg -> {:.0}x speedup)\n  \
+         joint annealing baseline ({} vars, {} model evals, {:.2} s): objective {} s vs separable exact {:.4} s\n",
+        PAPER_AVG_SECONDS_PER_INSTANCE * 1e6 / mean,
+        sa.n_variables,
+        sa.evals,
+        sa_wall.as_secs_f64(),
+        sa.weighted_seconds.map(|s| format!("{s:.4}")).unwrap_or_else(|| "inf".into()),
+        exact.weighted_seconds.unwrap(),
+    );
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inner_solver_is_orders_of_magnitude_faster_than_bonmin() {
+        let timing = time_inner_solves(
+            &TimeModel::maxwell(),
+            &Workload::uniform_2d(),
+            &CIterTable::paper(),
+            &HwParams::gtx980(),
+        );
+        let mean_us = stats::mean(&timing.per_instance_us);
+        // Paper: 19 s average. Require at least 1000x faster (observed:
+        // ~10^4–10^5x in release, less in debug — be conservative).
+        assert!(
+            mean_us < 19e6 / 1e3,
+            "mean {mean_us} µs is not >=1000x faster than bonmin"
+        );
+        assert_eq!(timing.per_instance_us.len(), 64);
+    }
+}

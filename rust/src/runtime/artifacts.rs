@@ -1,0 +1,197 @@
+//! Artifact manifest: the index `python/compile/aot.py` writes last, and the
+//! Rust side's only source of truth about what was compiled.
+
+use crate::stencil::defs::StencilId;
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled sweep.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// File name of the HLO text, relative to the artifact dir.
+    pub file: String,
+    pub stencil: StencilId,
+    /// Interior shape (2 or 3 dims).
+    pub shape: Vec<usize>,
+    pub t_steps: usize,
+    /// Zero-halo ring width (1 for plain sweeps, `t_steps·σ` for fused
+    /// ghost-zone variants).
+    pub pad: usize,
+    pub points_per_sweep: f64,
+    pub flops_per_point: f64,
+}
+
+impl ArtifactEntry {
+    /// Padded input shape (halo ring of `pad`).
+    pub fn padded_shape(&self) -> Vec<usize> {
+        self.shape.iter().map(|s| s + 2 * self.pad).collect()
+    }
+
+    pub fn padded_len(&self) -> usize {
+        self.padded_shape().iter().product()
+    }
+}
+
+/// The parsed manifest plus its directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        let arr = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts' array"))?;
+        let mut entries = Vec::new();
+        for item in arr {
+            entries.push(parse_entry(item)?);
+        }
+        if entries.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Default location relative to the repo root.
+    pub fn load_default() -> Result<Manifest> {
+        Manifest::load(Path::new("artifacts"))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// All entries for a stencil, largest sweep first (the C_iter
+    /// measurement wants the biggest workload).
+    pub fn for_stencil(&self, id: StencilId) -> Vec<&ArtifactEntry> {
+        let mut v: Vec<&ArtifactEntry> =
+            self.entries.iter().filter(|e| e.stencil == id).collect();
+        v.sort_by(|a, b| b.points_per_sweep.partial_cmp(&a.points_per_sweep).unwrap());
+        v
+    }
+
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+fn parse_entry(item: &Json) -> Result<ArtifactEntry> {
+    let get_str = |k: &str| {
+        item.get(k)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("artifact entry missing '{k}'"))
+    };
+    let get_num = |k: &str| {
+        item.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("artifact entry missing '{k}'"))
+    };
+    let stencil_name = get_str("stencil")?;
+    let stencil = StencilId::from_name(&stencil_name)
+        .ok_or_else(|| anyhow!("unknown stencil '{stencil_name}'"))?;
+    let shape = item
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("artifact entry missing 'shape'"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad shape element")))
+        .collect::<Result<Vec<_>>>()?;
+    if !(shape.len() == 2 || shape.len() == 3) {
+        bail!("shape must be 2-D or 3-D, got {shape:?}");
+    }
+    // `pad` is optional for backwards compatibility with older manifests.
+    let pad = item.get("pad").and_then(Json::as_f64).unwrap_or(1.0) as usize;
+    Ok(ArtifactEntry {
+        name: get_str("name")?,
+        file: get_str("file")?,
+        stencil,
+        shape,
+        t_steps: get_num("t_steps")? as usize,
+        pad,
+        points_per_sweep: get_num("points_per_sweep")?,
+        flops_per_point: get_num("flops_per_point")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic_manifest(dir: &Path) {
+        let text = r#"{
+            "version": 1,
+            "artifacts": [
+                {"name": "jacobi2d_8x8_t2", "file": "jacobi2d_8x8_t2.hlo.txt",
+                 "stencil": "jacobi2d", "shape": [8, 8], "t_steps": 2,
+                 "points_per_sweep": 128, "flops_per_point": 4},
+                {"name": "heat3d_4x4x4_t1", "file": "heat3d_4x4x4_t1.hlo.txt",
+                 "stencil": "heat3d", "shape": [4, 4, 4], "t_steps": 1,
+                 "points_per_sweep": 64, "flops_per_point": 14}
+            ]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("codesign-test-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn parses_synthetic_manifest() {
+        let d = tmpdir("manifest");
+        synthetic_manifest(&d);
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.get("jacobi2d_8x8_t2").unwrap();
+        assert_eq!(e.stencil, StencilId::Jacobi2D);
+        assert_eq!(e.padded_shape(), vec![10, 10]);
+        assert_eq!(e.padded_len(), 100);
+        assert_eq!(m.hlo_path(e), d.join("jacobi2d_8x8_t2.hlo.txt"));
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn for_stencil_sorts_largest_first() {
+        let d = tmpdir("manifest2");
+        let text = r#"{"artifacts": [
+            {"name": "a", "file": "a", "stencil": "heat2d", "shape": [8, 8],
+             "t_steps": 1, "points_per_sweep": 64, "flops_per_point": 10},
+            {"name": "b", "file": "b", "stencil": "heat2d", "shape": [16, 16],
+             "t_steps": 2, "points_per_sweep": 512, "flops_per_point": 10}
+        ]}"#;
+        std::fs::write(d.join("manifest.json"), text).unwrap();
+        let m = Manifest::load(&d).unwrap();
+        let v = m.for_stencil(StencilId::Heat2D);
+        assert_eq!(v[0].name, "b");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load(Path::new("/nonexistent-dir-xyz")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn rejects_bad_entries() {
+        let d = tmpdir("manifest3");
+        std::fs::write(d.join("manifest.json"), r#"{"artifacts": [{"name": "x"}]}"#).unwrap();
+        assert!(Manifest::load(&d).is_err());
+        std::fs::write(d.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+        assert!(Manifest::load(&d).is_err());
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

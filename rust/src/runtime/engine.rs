@@ -1,0 +1,156 @@
+//! The PJRT execution engine: compile HLO-text artifacts once, execute many
+//! times. Wraps the `xla` crate (PJRT C API, CPU plugin) following the
+//! /opt/xla-example/load_hlo reference.
+
+use crate::runtime::artifacts::{ArtifactEntry, Manifest};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// A compiled-executable cache over one PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// Result of one sweep execution.
+#[derive(Debug)]
+pub struct SweepRun {
+    /// Flattened padded output.
+    pub output: Vec<f32>,
+    /// Pure execute wall time (excludes compilation).
+    pub elapsed: Duration,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client over the given artifact manifest.
+    pub fn new(manifest: Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, compiled: HashMap::new() })
+    }
+
+    /// Load the default `artifacts/` manifest and build an engine.
+    pub fn from_default_artifacts() -> Result<Engine> {
+        Engine::new(Manifest::load_default()?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) one artifact.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?
+            .clone();
+        let path = self.manifest.hlo_path(&entry);
+        // HLO TEXT is the interchange format (jax>=0.5 serialized protos are
+        // rejected by xla_extension 0.5.1 — see DESIGN.md / aot.py).
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute one sweep on a flattened padded input (zero halo included).
+    pub fn run_sweep(&mut self, name: &str, input: &[f32]) -> Result<SweepRun> {
+        self.compile(name)?;
+        let entry = self.manifest.get(name).unwrap().clone();
+        anyhow::ensure!(
+            input.len() == entry.padded_len(),
+            "input length {} != padded {}",
+            input.len(),
+            entry.padded_len()
+        );
+        let dims: Vec<i64> = entry.padded_shape().iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input).reshape(&dims)?;
+        let exe = self.compiled.get(&entry.name).unwrap();
+        let t0 = Instant::now();
+        let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let elapsed = t0.elapsed();
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(SweepRun { output: out.to_vec::<f32>()?, elapsed })
+    }
+
+    /// Build a deterministic random padded input for an artifact (interior
+    /// in [-1, 1], zero halo ring of width `entry.pad`) — shared by the
+    /// examples and tests.
+    pub fn random_input(entry: &ArtifactEntry, seed: u64) -> Vec<f32> {
+        use crate::util::prng::Rng;
+        let padded = entry.padded_shape();
+        let h = entry.pad;
+        let mut rng = Rng::new(seed);
+        let mut data = vec![0f32; entry.padded_len()];
+        match padded.len() {
+            2 => {
+                let (p1, p2) = (padded[0], padded[1]);
+                for i in h..p1 - h {
+                    for j in h..p2 - h {
+                        data[i * p2 + j] = (rng.f64() * 2.0 - 1.0) as f32;
+                    }
+                }
+            }
+            3 => {
+                let (p1, p2, p3) = (padded[0], padded[1], padded[2]);
+                for i in h..p1 - h {
+                    for j in h..p2 - h {
+                        for k in h..p3 - h {
+                            data[(i * p2 + j) * p3 + k] = (rng.f64() * 2.0 - 1.0) as f32;
+                        }
+                    }
+                }
+            }
+            _ => unreachable!("manifest validation enforces 2-D/3-D"),
+        }
+        data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Engine tests against real artifacts live in
+    // rust/tests/integration_runtime.rs (they need `make artifacts`).
+
+    #[test]
+    fn random_input_has_zero_halo() {
+        let entry = ArtifactEntry {
+            name: "x".into(),
+            file: "x".into(),
+            stencil: crate::stencil::defs::StencilId::Jacobi2D,
+            shape: vec![4, 4],
+            t_steps: 1,
+            pad: 1,
+            points_per_sweep: 16.0,
+            flops_per_point: 4.0,
+        };
+        let data = Engine::random_input(&entry, 7);
+        assert_eq!(data.len(), 36);
+        // Halo ring zero, interior nonzero somewhere.
+        for j in 0..6 {
+            assert_eq!(data[j], 0.0); // first row
+            assert_eq!(data[30 + j], 0.0); // last row
+            assert_eq!(data[j * 6], 0.0); // first col
+            assert_eq!(data[j * 6 + 5], 0.0); // last col
+        }
+        assert!(data.iter().any(|&x| x != 0.0));
+        // Deterministic.
+        assert_eq!(data, Engine::random_input(&entry, 7));
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime — the only layer that touches XLA at run time.
+//!
+//! `make artifacts` (Python, build-time) lowers each stencil sweep to HLO
+//! text under `artifacts/`; this module loads those artifacts through the
+//! `xla` crate's PJRT CPU client, executes them with concrete inputs, and
+//! measures per-point cost for the measured-mode `C_iter` table. Python is
+//! never on this path.
+
+pub mod artifacts;
+pub mod citer_measure;
+pub mod engine;
+
+pub use artifacts::{ArtifactEntry, Manifest};
+pub use citer_measure::{measure_citer, CiterMeasurement};
+pub use engine::Engine;

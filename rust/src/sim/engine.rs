@@ -1,0 +1,313 @@
+//! The fluid discrete-event engine.
+//!
+//! One SM holds up to `k` resident blocks. Each block walks through
+//! `Dispatch → Load → Compute → Store`. At any instant every active block
+//! has a rate (bytes/cycle for memory phases, lane-cycles/cycle for compute)
+//! determined by water-filling the SM's resources; the engine jumps from
+//! block-phase-completion event to event. Blocks of one wavefront are
+//! dispatched greedily to whichever SM frees a slot first; a wavefront
+//! barrier separates dependent phases of the hexagonal schedule.
+
+use crate::timemodel::machine::MachineSpec;
+
+/// One threadblock's static requirements.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockSpec {
+    /// Threads in the block (t_S2 × t_S3, clipped at boundaries).
+    pub threads: f64,
+    /// Lane-cycles of compute: threads × iterations × C_iter.
+    pub compute_lane_cycles: f64,
+    /// Bytes to stream in before compute.
+    pub load_bytes: f64,
+    /// Bytes to stream out after compute.
+    pub store_bytes: f64,
+}
+
+/// Simulated machine shape.
+#[derive(Clone, Copy, Debug)]
+pub struct SimMachine {
+    pub n_sm: u32,
+    pub n_v: u32,
+    /// Resident block slots per SM (the schedule's `k`).
+    pub k: u32,
+    /// Shared-memory capacity, kB (drives access-latency scaling).
+    pub m_sm_kb: f64,
+    pub spec: MachineSpec,
+}
+
+/// Aggregate outcome.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimOutcome {
+    pub cycles: f64,
+    /// Total bytes moved (for bandwidth-utilization reporting).
+    pub bytes: f64,
+    /// Total lane-cycles of compute executed.
+    pub lane_cycles: f64,
+    /// Events processed (cost accounting).
+    pub events: u64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Phase {
+    /// Fixed-latency dispatch/setup.
+    Dispatch,
+    Load,
+    Compute,
+    Store,
+    Done,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Resident {
+    spec: BlockSpec,
+    phase: Phase,
+    /// Remaining work in the current phase (cycles, bytes or lane-cycles).
+    remaining: f64,
+}
+
+impl Resident {
+    fn new(spec: BlockSpec, dispatch_cycles: f64) -> Resident {
+        Resident { spec, phase: Phase::Dispatch, remaining: dispatch_cycles }
+    }
+
+    fn advance_phase(&mut self) {
+        self.phase = match self.phase {
+            Phase::Dispatch => {
+                self.remaining = self.spec.load_bytes;
+                Phase::Load
+            }
+            Phase::Load => {
+                self.remaining = self.spec.compute_lane_cycles;
+                Phase::Compute
+            }
+            Phase::Compute => {
+                self.remaining = self.spec.store_bytes;
+                Phase::Store
+            }
+            Phase::Store | Phase::Done => Phase::Done,
+        };
+        // Skip empty phases.
+        if self.phase != Phase::Done && self.remaining <= 0.0 {
+            self.advance_phase();
+        }
+    }
+}
+
+/// The engine. Simulates one wavefront at a time over all SMs.
+pub struct FluidSim {
+    pub machine: SimMachine,
+}
+
+impl FluidSim {
+    pub fn new(machine: SimMachine) -> FluidSim {
+        assert!(machine.k >= 1 && machine.n_sm >= 1 && machine.n_v >= 1);
+        FluidSim { machine }
+    }
+
+    /// Simulate a sequence of wavefronts (each a list of blocks, with a
+    /// barrier between consecutive wavefronts). Returns the aggregate.
+    pub fn run(&self, wavefronts: &[Vec<BlockSpec>]) -> SimOutcome {
+        let mut out = SimOutcome::default();
+        for wf in wavefronts {
+            let o = self.run_wavefront(wf);
+            out.cycles += o.cycles;
+            out.bytes += o.bytes;
+            out.lane_cycles += o.lane_cycles;
+            out.events += o.events;
+        }
+        out
+    }
+
+    /// Simulate one wavefront to completion.
+    pub fn run_wavefront(&self, blocks: &[BlockSpec]) -> SimOutcome {
+        let m = &self.machine;
+        let dispatch_cycles = m.spec.sync_cycles;
+        let mut queue: std::collections::VecDeque<BlockSpec> = blocks.iter().copied().collect();
+        let mut sms: Vec<Vec<Resident>> = (0..m.n_sm).map(|_| Vec::new()).collect();
+        // Per-SM independent execution with a *global* FIFO queue: an SM
+        // admits a new block the moment one of its k slots frees.
+        let mut now = 0.0f64;
+        let mut out = SimOutcome {
+            bytes: blocks.iter().map(|b| b.load_bytes + b.store_bytes).sum(),
+            lane_cycles: blocks.iter().map(|b| b.compute_lane_cycles).sum(),
+            ..Default::default()
+        };
+
+        // Initial fill, round-robin.
+        'fill: for sm in 0..sms.len() {
+            while (sms[sm].len() as u32) < m.k {
+                match queue.pop_front() {
+                    Some(b) => sms[sm].push(Resident::new(b, dispatch_cycles)),
+                    None => break 'fill,
+                }
+            }
+        }
+
+        let bw = m.spec.bytes_per_cycle_per_sm();
+        let lam = m.spec.latency_factor_for(m.m_sm_kb);
+        loop {
+            // Compute rates per SM and find the earliest completion event.
+            let mut best_dt = f64::INFINITY;
+            let mut rates: Vec<Vec<f64>> = Vec::with_capacity(sms.len());
+            for residents in &sms {
+                let mut sm_rates = vec![0.0f64; residents.len()];
+                // Memory: bandwidth shared equally among Load/Store blocks.
+                let mem_users = residents
+                    .iter()
+                    .filter(|r| matches!(r.phase, Phase::Load | Phase::Store))
+                    .count();
+                // Compute: n_V lanes water-filled subject to per-block caps.
+                let caps: Vec<(usize, f64)> = residents
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, r)| r.phase == Phase::Compute)
+                    .map(|(i, r)| (i, r.spec.threads / lam))
+                    .collect();
+                let cap_sum: f64 = caps.iter().map(|c| c.1).sum();
+                let scale = if cap_sum > m.n_v as f64 { m.n_v as f64 / cap_sum } else { 1.0 };
+                for (i, r) in residents.iter().enumerate() {
+                    sm_rates[i] = match r.phase {
+                        Phase::Dispatch => 1.0, // cycles tick at rate 1
+                        Phase::Load | Phase::Store => bw / mem_users as f64,
+                        Phase::Compute => {
+                            let cap = r.spec.threads / lam;
+                            (cap * scale).min(m.n_v as f64)
+                        }
+                        Phase::Done => 0.0,
+                    };
+                    if sm_rates[i] > 0.0 && r.remaining > 0.0 {
+                        best_dt = best_dt.min(r.remaining / sm_rates[i]);
+                    }
+                }
+                rates.push(sm_rates);
+            }
+            if !best_dt.is_finite() {
+                break; // nothing active anywhere
+            }
+            now += best_dt;
+            out.events += 1;
+
+            // Advance everything by best_dt, transition completed phases,
+            // admit queued blocks into freed slots.
+            for (residents, sm_rates) in sms.iter_mut().zip(&rates) {
+                for (r, &rate) in residents.iter_mut().zip(sm_rates) {
+                    if rate > 0.0 {
+                        r.remaining -= rate * best_dt;
+                        if r.remaining <= 1e-9 {
+                            r.advance_phase();
+                        }
+                    }
+                }
+                residents.retain(|r| r.phase != Phase::Done);
+                while (residents.len() as u32) < self.machine.k {
+                    match queue.pop_front() {
+                        Some(b) => residents.push(Resident::new(b, dispatch_cycles)),
+                        None => break,
+                    }
+                }
+            }
+            if out.events > 50_000_000 {
+                panic!("simulator runaway: too many events for this instance");
+            }
+        }
+        out.cycles = now;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn machine(n_sm: u32, n_v: u32, k: u32) -> SimMachine {
+        // 96 kB shared memory = the reference latency point (λ exactly 4).
+        SimMachine { n_sm, n_v, k, m_sm_kb: 96.0, spec: MachineSpec::maxwell() }
+    }
+
+    fn block(threads: f64, compute: f64, load: f64, store: f64) -> BlockSpec {
+        BlockSpec { threads, compute_lane_cycles: compute, load_bytes: load, store_bytes: store }
+    }
+
+    #[test]
+    fn single_block_compute_only_latency_bound() {
+        // 64 threads, λ=4 → cap 16 lanes; 16000 lane-cycles → 1000 cycles
+        // (+600 dispatch).
+        let sim = FluidSim::new(machine(1, 128, 1));
+        let o = sim.run_wavefront(&[block(64.0, 16_000.0, 0.0, 0.0)]);
+        assert!((o.cycles - (600.0 + 1000.0)).abs() < 1.0, "{}", o.cycles);
+    }
+
+    #[test]
+    fn single_block_issue_bound() {
+        // 1024 threads, cap 256 > n_V=128 → rate 128.
+        let sim = FluidSim::new(machine(1, 128, 1));
+        let o = sim.run_wavefront(&[block(1024.0, 128_000.0, 0.0, 0.0)]);
+        assert!((o.cycles - (600.0 + 1000.0)).abs() < 1.0, "{}", o.cycles);
+    }
+
+    #[test]
+    fn memory_phase_uses_bandwidth_slice() {
+        // 11666.7 bytes at 11.667 B/cycle → 1000 cycles.
+        let sim = FluidSim::new(machine(1, 128, 1));
+        let spec = MachineSpec::maxwell();
+        let bytes = spec.bytes_per_cycle_per_sm() * 1000.0;
+        let o = sim.run_wavefront(&[block(64.0, 0.0, bytes, 0.0)]);
+        assert!((o.cycles - 1600.0).abs() < 1.0, "{}", o.cycles);
+    }
+
+    #[test]
+    fn two_sms_halve_the_work() {
+        let blocks: Vec<BlockSpec> =
+            (0..8).map(|_| block(128.0, 32_000.0, 0.0, 0.0)).collect();
+        let one = FluidSim::new(machine(1, 128, 1)).run_wavefront(&blocks);
+        let two = FluidSim::new(machine(2, 128, 1)).run_wavefront(&blocks);
+        assert!(
+            (one.cycles / two.cycles - 2.0).abs() < 0.05,
+            "1 SM {} vs 2 SM {}",
+            one.cycles,
+            two.cycles
+        );
+    }
+
+    #[test]
+    fn double_buffering_overlaps_load_and_compute() {
+        // With k=2, a memory-phase block overlaps a compute-phase block;
+        // serial execution (k=1) pays the sum.
+        let spec = MachineSpec::maxwell();
+        let bytes = spec.bytes_per_cycle_per_sm() * 2000.0; // 2000-cycle load
+        let blocks = vec![
+            block(512.0, 128.0 * 2000.0, 0.0, 0.0), // pure compute, 2000 cyc
+            block(512.0, 0.0, bytes, 0.0),          // pure load, 2000 cyc
+        ];
+        let k1 = FluidSim::new(machine(1, 128, 1)).run_wavefront(&blocks);
+        let k2 = FluidSim::new(machine(1, 128, 2)).run_wavefront(&blocks);
+        // k=1: 600+2000 + 600+2000 = 5200; k=2: 600+2000 = 2600.
+        assert!(k2.cycles < k1.cycles * 0.6, "k1 {} vs k2 {}", k1.cycles, k2.cycles);
+    }
+
+    #[test]
+    fn wavefront_barrier_serializes() {
+        let sim = FluidSim::new(machine(4, 128, 2));
+        let wf: Vec<BlockSpec> = (0..4).map(|_| block(128.0, 16_000.0, 0.0, 0.0)).collect();
+        let once = sim.run(&[wf.clone()]);
+        let twice = sim.run(&[wf.clone(), wf]);
+        assert!((twice.cycles / once.cycles - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn accounting_totals() {
+        let sim = FluidSim::new(machine(2, 128, 2));
+        let blocks = vec![block(64.0, 1000.0, 500.0, 250.0); 5];
+        let o = sim.run_wavefront(&blocks);
+        assert_eq!(o.bytes, 5.0 * 750.0);
+        assert_eq!(o.lane_cycles, 5000.0);
+        assert!(o.events > 0);
+    }
+
+    #[test]
+    fn empty_wavefront_is_free() {
+        let sim = FluidSim::new(machine(2, 128, 2));
+        let o = sim.run_wavefront(&[]);
+        assert_eq!(o.cycles, 0.0);
+    }
+}

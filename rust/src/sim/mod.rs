@@ -1,0 +1,29 @@
+//! Cycle-approximate GPU microarchitecture simulator.
+//!
+//! The paper validates its execution-time model against real GTX 980 / Titan
+//! X silicon; no GPU exists in this environment, so this simulator is the
+//! substituted ground truth (DESIGN.md §2). It executes the *same tile
+//! schedules* the model describes, but with a deliberately different and
+//! finer abstraction, so that model-vs-simulator agreement is a meaningful
+//! check rather than a tautology:
+//!
+//! * **greedy block dispatch** to SM slots as they free up (the model
+//!   assumes uniform synchronized rounds with a global `ceil`);
+//! * **clipped boundary tiles** with their true iteration counts and
+//!   footprints (the model assumes every tile is full-size);
+//! * **fluid-rate resource sharing** inside an SM: resident blocks share the
+//!   `n_V` issue lanes (capped per block by warp latency limits) and the
+//!   SM's memory-bandwidth slice, with load/compute/store phases overlapping
+//!   across blocks (the model takes a per-round `max(compute, mem)`);
+//! * **per-block dispatch latency** instead of a per-round sync constant.
+//!
+//! Experiment E10 (`benches/model_validation.rs`) sweeps both over hardware
+//! and tile configurations and reports MAPE + rank agreement.
+
+pub mod engine;
+pub mod run;
+pub mod validate;
+
+pub use engine::{BlockSpec, FluidSim, SimOutcome};
+pub use run::{simulate, SimEstimate};
+pub use validate::{validate_sweep, ValidationReport};

@@ -1,0 +1,148 @@
+//! E10 — model-vs-simulator validation (the stand-in for the paper's
+//! real-GPU validation of [27]).
+
+use crate::area::params::HwParams;
+use crate::sim::run::simulate;
+use crate::stencil::defs::{Stencil, StencilId};
+use crate::stencil::workload::ProblemSize;
+use crate::timemodel::talg::{SoftwareParams, TimeModel};
+use crate::timemodel::tiling::TileSizes;
+use crate::util::stats;
+
+/// One compared configuration.
+#[derive(Clone, Debug)]
+pub struct ValidationCase {
+    pub label: String,
+    pub model_seconds: f64,
+    pub sim_seconds: f64,
+}
+
+impl ValidationCase {
+    pub fn rel_err_pct(&self) -> f64 {
+        100.0 * (self.model_seconds - self.sim_seconds) / self.sim_seconds
+    }
+}
+
+/// Aggregate validation report.
+#[derive(Clone, Debug)]
+pub struct ValidationReport {
+    pub cases: Vec<ValidationCase>,
+    /// Mean absolute percentage error of model vs simulator.
+    pub mape_pct: f64,
+    /// Kendall-τ rank agreement between model and simulator orderings —
+    /// the property the codesign search actually relies on (it compares
+    /// configurations, it does not need absolute times).
+    pub kendall_tau: f64,
+}
+
+/// Kendall rank-correlation τ (pairwise concordance).
+pub fn kendall_tau(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let mut concordant = 0i64;
+    let mut discordant = 0i64;
+    for i in 0..n {
+        for j in i + 1..n {
+            let s = (a[i] - a[j]) * (b[i] - b[j]);
+            if s > 0.0 {
+                concordant += 1;
+            } else if s < 0.0 {
+                discordant += 1;
+            }
+        }
+    }
+    (concordant - discordant) as f64 / (n * (n - 1) / 2) as f64
+}
+
+/// The default validation sweep: a grid of hardware shapes × tile shapes ×
+/// both dimensionalities, at simulator-tractable problem sizes.
+pub fn default_cases() -> Vec<(Stencil, ProblemSize, HwParams, SoftwareParams)> {
+    let mut cases = Vec::new();
+    let hw_variants = [
+        HwParams::gtx980(),
+        HwParams { n_sm: 8, n_v: 256, ..HwParams::gtx980() },
+        HwParams { n_sm: 32, n_v: 64, ..HwParams::gtx980() },
+        HwParams { n_sm: 16, n_v: 128, m_sm_kb: 48.0, ..HwParams::gtx980() },
+    ];
+    let sw_2d = [
+        SoftwareParams::new(TileSizes::d2(32, 64, 8), 2),
+        SoftwareParams::new(TileSizes::d2(64, 128, 4), 1),
+        SoftwareParams::new(TileSizes::d2(16, 32, 16), 4),
+    ];
+    for id in [StencilId::Jacobi2D, StencilId::Heat2D] {
+        let st = *Stencil::get(id);
+        for hw in &hw_variants {
+            for sw in &sw_2d {
+                cases.push((st, ProblemSize::d2(1024, 128), *hw, *sw));
+            }
+        }
+    }
+    let sw_3d = [
+        SoftwareParams::new(TileSizes::d3(8, 32, 4, 4), 1),
+        SoftwareParams::new(TileSizes::d3(16, 32, 2, 8), 2),
+    ];
+    let st = *Stencil::get(StencilId::Heat3D);
+    for hw in &hw_variants[..2] {
+        for sw in &sw_3d {
+            cases.push((st, ProblemSize::d3(128, 32), *hw, *sw));
+        }
+    }
+    cases
+}
+
+/// Run the sweep and aggregate.
+pub fn validate_sweep(model: &TimeModel) -> ValidationReport {
+    let mut cases = Vec::new();
+    for (stencil, size, hw, sw) in default_cases() {
+        if model.feasibility(&stencil, &hw, &sw).is_err() {
+            continue;
+        }
+        let est = model.evaluate(&stencil, &size, &hw, &sw);
+        let sim = simulate(&model.machine, &stencil, &size, &hw, &sw);
+        cases.push(ValidationCase {
+            label: format!(
+                "{} {} {} {} k{}",
+                stencil.name(),
+                size.label(),
+                hw.label(),
+                sw.tiles.label(),
+                sw.k
+            ),
+            model_seconds: est.seconds,
+            sim_seconds: sim.seconds,
+        });
+    }
+    let model_t: Vec<f64> = cases.iter().map(|c| c.model_seconds).collect();
+    let sim_t: Vec<f64> = cases.iter().map(|c| c.sim_seconds).collect();
+    ValidationReport {
+        mape_pct: stats::mape(&model_t, &sim_t),
+        kendall_tau: kendall_tau(&model_t, &sim_t),
+        cases,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kendall_basics() {
+        assert_eq!(kendall_tau(&[1.0, 2.0, 3.0], &[10.0, 20.0, 30.0]), 1.0);
+        assert_eq!(kendall_tau(&[1.0, 2.0, 3.0], &[30.0, 20.0, 10.0]), -1.0);
+        assert!(kendall_tau(&[1.0, 2.0, 3.0, 4.0], &[1.0, 3.0, 2.0, 4.0]) > 0.5);
+    }
+
+    #[test]
+    fn model_tracks_simulator() {
+        // The analytical model must track the independent simulator within a
+        // generous envelope (the paper's own model-vs-silicon errors are
+        // ~10–30% per [27]) and, crucially, preserve configuration ranking.
+        let rep = validate_sweep(&TimeModel::maxwell());
+        assert!(rep.cases.len() >= 20, "only {} cases", rep.cases.len());
+        assert!(rep.mape_pct < 40.0, "MAPE {}%", rep.mape_pct);
+        assert!(rep.kendall_tau > 0.7, "kendall tau {}", rep.kendall_tau);
+    }
+}

@@ -1,0 +1,190 @@
+//! The six dense stencils of the paper's workload: four 2-D (Jacobi, Heat,
+//! Laplacian, Gradient — all first order, two space dimensions + time) and
+//! two 3-D (Heat, Laplacian — three space dimensions + time).
+//!
+//! Per-point operation counts are derived from the canonical loop bodies (the
+//! same bodies implemented by the Pallas kernels in `python/compile/kernels/`
+//! and by the pure-jnp oracle `ref.py`). `C_iter` — the per-iteration,
+//! per-thread issue cost in cycles that the paper measures on real silicon —
+//! is carried per stencil with *paper-mode* defaults calibrated against the
+//! paper's reported GFLOP/s scale (see `timemodel::citer`), and can be
+//! overridden by measurements from the PJRT runtime.
+
+/// Identity of a benchmark stencil.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum StencilId {
+    Jacobi2D,
+    Heat2D,
+    Laplacian2D,
+    Gradient2D,
+    Heat3D,
+    Laplacian3D,
+}
+
+impl StencilId {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StencilId::Jacobi2D => "jacobi2d",
+            StencilId::Heat2D => "heat2d",
+            StencilId::Laplacian2D => "laplacian2d",
+            StencilId::Gradient2D => "gradient2d",
+            StencilId::Heat3D => "heat3d",
+            StencilId::Laplacian3D => "laplacian3d",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<StencilId> {
+        ALL_STENCILS.iter().find(|s| s.id.name() == name).map(|s| s.id)
+    }
+}
+
+/// Static description of one stencil benchmark.
+#[derive(Clone, Copy, Debug)]
+pub struct Stencil {
+    pub id: StencilId,
+    /// Space dimensions (2 or 3); every benchmark adds one time dimension.
+    pub space_dims: u32,
+    /// Halo width per time step (all six are first-order: σ = 1).
+    pub sigma: u32,
+    /// Floating-point operations per updated point.
+    pub flops_per_point: f64,
+    /// Live arrays a tile must stage in shared memory (double-buffered
+    /// time planes for in/out, plus coefficient arrays where applicable).
+    pub n_buffers: f64,
+    /// Bytes per cell (all benchmarks are fp32).
+    pub bytes_per_cell: f64,
+    /// Paper-mode per-iteration single-thread cost, cycles (see
+    /// `timemodel::citer` for calibration).
+    pub c_iter_cycles: f64,
+}
+
+impl Stencil {
+    pub fn name(&self) -> &'static str {
+        self.id.name()
+    }
+
+    pub fn is_3d(&self) -> bool {
+        self.space_dims == 3
+    }
+
+    /// Look up a stencil by id.
+    pub fn get(id: StencilId) -> &'static Stencil {
+        ALL_STENCILS.iter().find(|s| s.id == id).expect("unknown stencil")
+    }
+
+    /// Look up a stencil by `name()`.
+    pub fn by_name(name: &str) -> Option<&'static Stencil> {
+        ALL_STENCILS.iter().find(|s| s.id.name() == name)
+    }
+}
+
+/// All six benchmarks.
+///
+/// Operation counts (per output point, fp32):
+/// * **Jacobi-2D** `o = 0.25·(N+S+E+W)`: 3 add + 1 mul = 4 flops.
+/// * **Heat-2D** `o = c·C + a·(N+S+E+W)` (explicit 5-point heat step written
+///   as 2 mul + 5 add/sub in the canonical body): 10 flops.
+/// * **Laplacian-2D** `o = N+S+E+W − 4·C`: 4 add/sub + 1 mul = 6 flops
+///   (counting the fused scale-subtract as 2).
+/// * **Gradient-2D** `o = sqrt(gx² + gy²)`, `gx = (E−W)/2`, `gy = (N−S)/2`:
+///   2 sub + 2 mul + 2 mul + 1 add + sqrt(≈4) = 14 flops.
+/// * **Heat-3D** 7-point explicit heat step: 14 flops.
+/// * **Laplacian-3D** `o = Σ₆ neighbors − 6·C`: 6 add + 2 = 8 flops.
+///
+/// `n_buffers`: Jacobi/Heat/Laplacian sweep in/out planes (2); Gradient reads
+/// one plane and writes a derived field (2); none carry coefficient arrays.
+pub const ALL_STENCILS: [Stencil; 6] = [
+    Stencil {
+        id: StencilId::Jacobi2D,
+        space_dims: 2,
+        sigma: 1,
+        flops_per_point: 4.0,
+        n_buffers: 2.0,
+        bytes_per_cell: 4.0,
+        c_iter_cycles: 11.0,
+    },
+    Stencil {
+        id: StencilId::Heat2D,
+        space_dims: 2,
+        sigma: 1,
+        flops_per_point: 10.0,
+        n_buffers: 2.0,
+        bytes_per_cell: 4.0,
+        c_iter_cycles: 13.0,
+    },
+    Stencil {
+        id: StencilId::Laplacian2D,
+        space_dims: 2,
+        sigma: 1,
+        flops_per_point: 6.0,
+        n_buffers: 2.0,
+        bytes_per_cell: 4.0,
+        c_iter_cycles: 10.0,
+    },
+    Stencil {
+        id: StencilId::Gradient2D,
+        space_dims: 2,
+        sigma: 1,
+        flops_per_point: 14.0,
+        n_buffers: 2.0,
+        bytes_per_cell: 4.0,
+        c_iter_cycles: 12.0,
+    },
+    Stencil {
+        id: StencilId::Heat3D,
+        space_dims: 3,
+        sigma: 1,
+        flops_per_point: 14.0,
+        n_buffers: 2.0,
+        bytes_per_cell: 4.0,
+        c_iter_cycles: 16.0,
+    },
+    Stencil {
+        id: StencilId::Laplacian3D,
+        space_dims: 3,
+        sigma: 1,
+        flops_per_point: 8.0,
+        n_buffers: 2.0,
+        bytes_per_cell: 4.0,
+        c_iter_cycles: 15.0,
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_benchmarks_four_2d_two_3d() {
+        assert_eq!(ALL_STENCILS.len(), 6);
+        assert_eq!(ALL_STENCILS.iter().filter(|s| s.space_dims == 2).count(), 4);
+        assert_eq!(ALL_STENCILS.iter().filter(|s| s.space_dims == 3).count(), 2);
+    }
+
+    #[test]
+    fn all_first_order_fp32() {
+        for s in &ALL_STENCILS {
+            assert_eq!(s.sigma, 1, "{}", s.name());
+            assert_eq!(s.bytes_per_cell, 4.0, "{}", s.name());
+            assert!(s.flops_per_point > 0.0 && s.c_iter_cycles > 0.0);
+        }
+    }
+
+    #[test]
+    fn lookup_roundtrip() {
+        for s in &ALL_STENCILS {
+            assert_eq!(Stencil::by_name(s.name()).unwrap().id, s.id);
+            assert_eq!(StencilId::from_name(s.name()), Some(s.id));
+            assert_eq!(Stencil::get(s.id).name(), s.name());
+        }
+        assert!(Stencil::by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn names_unique() {
+        let mut names: Vec<&str> = ALL_STENCILS.iter().map(|s| s.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 6);
+    }
+}

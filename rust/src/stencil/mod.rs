@@ -1,0 +1,8 @@
+//! The paper's benchmark stencils and the workload characterization
+//! (§II "Workload characterization", §IV-A's SZ size grids).
+
+pub mod defs;
+pub mod workload;
+
+pub use defs::{Stencil, StencilId, ALL_STENCILS};
+pub use workload::{ProblemSize, Workload, WorkloadEntry};

@@ -1,0 +1,216 @@
+//! Workload characterization (§II, §IV-A): the SZ grids of problem sizes and
+//! the frequency-weighted benchmark mix that the codesign objective (17)
+//! averages over.
+
+use crate::stencil::defs::{Stencil, StencilId, ALL_STENCILS};
+
+/// Problem-size vector `p` of one program instance.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ProblemSize {
+    pub s1: u64,
+    pub s2: u64,
+    /// `None` for 2-D stencils.
+    pub s3: Option<u64>,
+    pub t: u64,
+}
+
+impl ProblemSize {
+    pub fn d2(s: u64, t: u64) -> ProblemSize {
+        ProblemSize { s1: s, s2: s, s3: None, t }
+    }
+
+    pub fn d3(s: u64, t: u64) -> ProblemSize {
+        ProblemSize { s1: s, s2: s, s3: Some(s), t }
+    }
+
+    /// Total updated points `S1·S2(·S3)·T`.
+    pub fn points(&self) -> f64 {
+        self.s1 as f64 * self.s2 as f64 * self.s3.unwrap_or(1) as f64 * self.t as f64
+    }
+
+    pub fn label(&self) -> String {
+        match self.s3 {
+            Some(s3) => format!("{}x{}x{}xT{}", self.s1, self.s2, s3, self.t),
+            None => format!("{}x{}xT{}", self.s1, self.s2, self.t),
+        }
+    }
+}
+
+/// §IV-A's 2-D grid: `S ∈ {4096, 8192, 12288, 16384}`,
+/// `T ∈ {1024, 2048, 4096, 8192, 16384}`, restricted to `T ≤ S`
+/// ("no more than S iterations are needed for convergence"); |SZ| = 16.
+///
+/// (The paper prints 12228, an evident typo for 12288 = 3·4096.)
+pub fn sz_2d() -> Vec<ProblemSize> {
+    let ss = [4096u64, 8192, 12288, 16384];
+    let ts = [1024u64, 2048, 4096, 8192, 16384];
+    let mut out = Vec::new();
+    for &s in &ss {
+        for &t in &ts {
+            if t <= s {
+                out.push(ProblemSize::d2(s, t));
+            }
+        }
+    }
+    out
+}
+
+/// 3-D grid. The paper does not print its 3-D SZ set; we use cubes whose
+/// *total footprint* spans the same range of working sets as the 2-D grid
+/// (256³–512³ fp32 ≈ 64 MB–512 MB) with `T ≤ S`, giving |SZ| = 9 instances.
+pub fn sz_3d() -> Vec<ProblemSize> {
+    let ss = [256u64, 384, 512];
+    let ts = [64u64, 128, 256];
+    let mut out = Vec::new();
+    for &s in &ss {
+        for &t in &ts {
+            if t <= s {
+                out.push(ProblemSize::d3(s, t));
+            }
+        }
+    }
+    out
+}
+
+/// One `(stencil, size, frequency)` instance of the workload mix.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadEntry {
+    pub stencil: StencilId,
+    pub size: ProblemSize,
+    /// `fr(c) · fr(c, Sz)` — the combined weight in objective (17).
+    pub weight: f64,
+}
+
+/// A frequency-weighted set of program instances.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub name: String,
+    pub entries: Vec<WorkloadEntry>,
+}
+
+impl Workload {
+    /// §V-A's uniform 2-D workload: the four 2-D stencils × the 16 sizes,
+    /// all equally likely.
+    pub fn uniform_2d() -> Workload {
+        Workload::uniform("2d", ALL_STENCILS.iter().filter(|s| !s.is_3d()), &sz_2d())
+    }
+
+    /// §V-A's uniform 3-D workload: the two 3-D stencils × the 3-D grid.
+    pub fn uniform_3d() -> Workload {
+        Workload::uniform("3d", ALL_STENCILS.iter().filter(|s| s.is_3d()), &sz_3d())
+    }
+
+    /// A single-benchmark workload over the dimension-appropriate size grid
+    /// (Table II's "frequency one for one benchmark, zero elsewhere").
+    pub fn single(id: StencilId) -> Workload {
+        let st = Stencil::get(id);
+        let sizes = if st.is_3d() { sz_3d() } else { sz_2d() };
+        Workload::uniform(st.name(), std::iter::once(st), &sizes)
+    }
+
+    fn uniform<'a>(
+        name: &str,
+        stencils: impl Iterator<Item = &'a Stencil>,
+        sizes: &[ProblemSize],
+    ) -> Workload {
+        let stencils: Vec<&Stencil> = stencils.collect();
+        let n = (stencils.len() * sizes.len()) as f64;
+        let entries = stencils
+            .iter()
+            .flat_map(|s| {
+                sizes.iter().map(move |&size| WorkloadEntry {
+                    stencil: s.id,
+                    size,
+                    weight: 1.0 / n,
+                })
+            })
+            .collect();
+        Workload { name: name.to_string(), entries }
+    }
+
+    /// Re-weight this workload with an arbitrary frequency function — the
+    /// "workload sensitivity for free" knob of §V-B. Weights are
+    /// re-normalized; entries weighted zero are kept (their memoized results
+    /// remain addressable).
+    pub fn reweighted(&self, f: impl Fn(&WorkloadEntry) -> f64) -> Workload {
+        let raw: Vec<f64> = self.entries.iter().map(&f).collect();
+        let total: f64 = raw.iter().sum();
+        assert!(total > 0.0, "reweighting zeroed the whole workload");
+        Workload {
+            name: format!("{}-reweighted", self.name),
+            entries: self
+                .entries
+                .iter()
+                .zip(raw)
+                .map(|(e, w)| WorkloadEntry { weight: w / total, ..*e })
+                .collect(),
+        }
+    }
+
+    /// Sum of weights (1.0 after construction / reweighting).
+    pub fn total_weight(&self) -> f64 {
+        self.entries.iter().map(|e| e.weight).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sz_2d_matches_paper_count() {
+        let sz = sz_2d();
+        assert_eq!(sz.len(), 16, "|SZ| must be 16 (§IV-A)");
+        assert!(sz.iter().all(|p| p.t <= p.s1 && p.s3.is_none()));
+    }
+
+    #[test]
+    fn sz_3d_cubes() {
+        let sz = sz_3d();
+        assert_eq!(sz.len(), 9);
+        assert!(sz.iter().all(|p| p.s3 == Some(p.s1)));
+    }
+
+    #[test]
+    fn uniform_workloads_normalized() {
+        for w in [Workload::uniform_2d(), Workload::uniform_3d()] {
+            assert!((w.total_weight() - 1.0).abs() < 1e-9, "{}", w.name);
+        }
+        assert_eq!(Workload::uniform_2d().entries.len(), 4 * 16);
+        assert_eq!(Workload::uniform_3d().entries.len(), 2 * 9);
+    }
+
+    #[test]
+    fn single_workload_has_one_stencil() {
+        let w = Workload::single(StencilId::Heat3D);
+        assert!(w.entries.iter().all(|e| e.stencil == StencilId::Heat3D));
+        assert_eq!(w.entries.len(), 9);
+        assert!((w.total_weight() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reweighting_targets_one_benchmark() {
+        let w = Workload::uniform_2d()
+            .reweighted(|e| if e.stencil == StencilId::Jacobi2D { 1.0 } else { 0.0 });
+        assert!((w.total_weight() - 1.0).abs() < 1e-9);
+        let jac_w: f64 = w
+            .entries
+            .iter()
+            .filter(|e| e.stencil == StencilId::Jacobi2D)
+            .map(|e| e.weight)
+            .sum();
+        assert!((jac_w - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn points_product() {
+        assert_eq!(ProblemSize::d2(8, 2).points(), 128.0);
+        assert_eq!(ProblemSize::d3(4, 2).points(), 128.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reweight_to_zero_panics() {
+        Workload::uniform_2d().reweighted(|_| 0.0);
+    }
+}

@@ -1,0 +1,113 @@
+//! `C_iter` handling — the per-iteration, single-thread issue cost.
+//!
+//! §IV-B: *"in the execution time model we use a parameter C_iter, the
+//! execution time of a single iteration on one thread. For optimal tile size
+//! selection, we measured this parameter for the different stencils."* The
+//! paper measured it on GTX 980 silicon; we carry
+//!
+//! * **paper mode** — the defaults stored on [`crate::stencil::defs::Stencil`],
+//!   calibrated so the GTX 980-configured model lands on the paper's Fig 3 /
+//!   Table II GFLOP/s scale, and
+//! * **measured mode** — values measured by the PJRT runtime
+//!   (`runtime::citer_measure`) running the real Pallas-built kernels on this
+//!   machine's CPU backend, rescaled into model cycles.
+
+use crate::stencil::defs::{Stencil, StencilId, ALL_STENCILS};
+
+/// A per-stencil override table for `C_iter`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CIterTable {
+    entries: Vec<(StencilId, f64)>,
+}
+
+impl CIterTable {
+    /// Paper-mode table (the defaults baked into [`ALL_STENCILS`]).
+    pub fn paper() -> CIterTable {
+        CIterTable {
+            entries: ALL_STENCILS.iter().map(|s| (s.id, s.c_iter_cycles)).collect(),
+        }
+    }
+
+    /// Build from measured (stencil, cycles) pairs; missing stencils fall
+    /// back to paper mode.
+    pub fn with_measured(pairs: &[(StencilId, f64)]) -> CIterTable {
+        let mut t = CIterTable::paper();
+        for &(id, c) in pairs {
+            assert!(c > 0.0, "C_iter must be positive");
+            if let Some(e) = t.entries.iter_mut().find(|e| e.0 == id) {
+                e.1 = c;
+            }
+        }
+        t
+    }
+
+    pub fn get(&self, id: StencilId) -> f64 {
+        self.entries
+            .iter()
+            .find(|e| e.0 == id)
+            .map(|e| e.1)
+            .expect("stencil missing from C_iter table")
+    }
+
+    /// A copy of `stencil` with this table's `C_iter` applied — what the
+    /// optimizer feeds to the time model.
+    pub fn apply(&self, stencil: &Stencil) -> Stencil {
+        Stencil { c_iter_cycles: self.get(stencil.id), ..*stencil }
+    }
+
+    /// Uniformly scale every entry (used to translate CPU-substrate
+    /// measurements onto the model's GPU-cycle scale, anchored on one
+    /// stencil's paper value — see `runtime::citer_measure`).
+    pub fn scaled(&self, factor: f64) -> CIterTable {
+        assert!(factor > 0.0);
+        CIterTable {
+            entries: self.entries.iter().map(|&(id, c)| (id, c * factor)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table_covers_all_stencils() {
+        let t = CIterTable::paper();
+        for s in &ALL_STENCILS {
+            assert!(t.get(s.id) > 0.0);
+            assert_eq!(t.get(s.id), s.c_iter_cycles);
+        }
+    }
+
+    #[test]
+    fn measured_overrides_only_given() {
+        let t = CIterTable::with_measured(&[(StencilId::Jacobi2D, 42.0)]);
+        assert_eq!(t.get(StencilId::Jacobi2D), 42.0);
+        assert_eq!(
+            t.get(StencilId::Heat2D),
+            Stencil::get(StencilId::Heat2D).c_iter_cycles
+        );
+    }
+
+    #[test]
+    fn apply_rewrites_c_iter_only() {
+        let t = CIterTable::with_measured(&[(StencilId::Heat3D, 99.0)]);
+        let s = t.apply(Stencil::get(StencilId::Heat3D));
+        assert_eq!(s.c_iter_cycles, 99.0);
+        assert_eq!(s.flops_per_point, Stencil::get(StencilId::Heat3D).flops_per_point);
+    }
+
+    #[test]
+    fn scaling() {
+        let t = CIterTable::paper().scaled(2.0);
+        for s in &ALL_STENCILS {
+            assert_eq!(t.get(s.id), 2.0 * s.c_iter_cycles);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn nonpositive_measured_rejected() {
+        CIterTable::with_measured(&[(StencilId::Jacobi2D, 0.0)]);
+    }
+}

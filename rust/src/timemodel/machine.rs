@@ -1,0 +1,87 @@
+//! Machine-level constants that the codesign search does *not* vary.
+//!
+//! The paper optimizes (n_SM, n_V, M_SM); clock, off-chip bandwidth and the
+//! SM's fixed microarchitectural limits are held at Maxwell-class values for
+//! every candidate design (the off-chip memory system is outside the chip
+//! area budget). Kept in one struct so the sensitivity of results to these
+//! assumptions can be probed (see `benches/model_validation.rs`).
+
+/// Fixed machine parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MachineSpec {
+    /// Core clock, GHz (Maxwell boost ≈ 1.2).
+    pub clock_ghz: f64,
+    /// Off-chip (global) memory bandwidth **per SM**, GB/s.
+    ///
+    /// Maxwell's memory system scales with SM count — the GTX 980 has
+    /// 224 GB/s over 16 SMs and the Titan X 336 GB/s over 24, i.e. exactly
+    /// 14 GB/s per SM — and the paper's per-SM overhead term α_oh explicitly
+    /// includes the memory controllers. Candidate designs therefore carry
+    /// `n_SM · 14` GB/s of off-chip bandwidth.
+    pub mem_bw_per_sm_gbs: f64,
+    /// Max resident threadblocks per SM (`MTB_SM`, constraint (10)).
+    pub max_blocks_per_sm: u32,
+    /// Max resident warps per SM (Maxwell: 64).
+    pub max_warps_per_sm: u32,
+    /// Max threads per block (CUDA architectural limit).
+    pub max_threads_per_block: u32,
+    /// Warp width (32 lanes).
+    pub warp: u32,
+    /// Latency-hiding factor λ: an SM needs ≈ λ·n_V resident threads to
+    /// fully hide pipeline + shared-memory latency — at the reference 96 kB
+    /// shared memory.
+    pub latency_factor: f64,
+    /// Shared-memory access latency grows with capacity (Cacti's delay
+    /// scales ≈ √capacity through longer word/bit lines); the effective λ is
+    /// `latency_factor · (M_SM / 96 kB)^shm_latency_exponent`. This is what
+    /// stops the optimizer from treating scratchpad capacity as free
+    /// performance: a 480 kB SM needs ~1.5× the resident parallelism of a
+    /// 96 kB one.
+    pub shm_latency_exponent: f64,
+    /// Per-wavefront synchronization / block-dispatch overhead, cycles.
+    pub sync_cycles: f64,
+}
+
+impl MachineSpec {
+    /// Maxwell-class constants (used for every design point, §IV-B).
+    pub fn maxwell() -> MachineSpec {
+        MachineSpec {
+            clock_ghz: 1.2,
+            mem_bw_per_sm_gbs: 14.0,
+            max_blocks_per_sm: 32,
+            max_warps_per_sm: 64,
+            max_threads_per_block: 1024,
+            warp: 32,
+            latency_factor: 4.0,
+            shm_latency_exponent: 0.25,
+            sync_cycles: 600.0,
+        }
+    }
+
+    /// Effective latency-hiding factor for a given shared-memory capacity.
+    pub fn latency_factor_for(&self, m_sm_kb: f64) -> f64 {
+        self.latency_factor * (m_sm_kb.max(1.0) / 96.0).powf(self.shm_latency_exponent)
+    }
+
+    /// Bytes one SM's bandwidth slice delivers per core clock cycle.
+    pub fn bytes_per_cycle_per_sm(&self) -> f64 {
+        self.mem_bw_per_sm_gbs / self.clock_ghz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maxwell_constants_sane() {
+        let m = MachineSpec::maxwell();
+        assert_eq!(m.warp, 32);
+        assert!(m.clock_ghz > 1.0 && m.clock_ghz < 2.0);
+        // GTX 980: 16 SM × 14 = 224 GB/s; Titan X: 24 × 14 = 336 GB/s.
+        assert_eq!(m.mem_bw_per_sm_gbs * 16.0, 224.0);
+        assert_eq!(m.mem_bw_per_sm_gbs * 24.0, 336.0);
+        // 14 GB/s at 1.2 GHz ≈ 11.7 B/cycle/SM.
+        assert!((m.bytes_per_cycle_per_sm() - 11.667).abs() < 0.01);
+    }
+}

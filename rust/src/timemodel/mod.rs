@@ -1,0 +1,19 @@
+//! Analytical execution-time model `T_alg(p, h, s)` for hybrid-hexagonally
+//! tiled stencils on GPU-like accelerators — the reconstruction of the
+//! authors' PPoPP'17 model [27] described in DESIGN.md §5.
+//!
+//! The model is deliberately non-smooth: it keeps the floor/ceil wavefront
+//! quantization, the `max` of compute vs memory phases and the occupancy
+//! `min`s, because those non-convexities are exactly what makes the codesign
+//! problem "non-linear optimization" (§IV-A) and what the inner solver
+//! ([`crate::opt`]) must cope with.
+
+pub mod citer;
+pub mod machine;
+pub mod talg;
+pub mod tiling;
+
+pub use citer::CIterTable;
+pub use machine::MachineSpec;
+pub use talg::{Infeasibility, SoftwareParams, TimeEstimate, TimeModel};
+pub use tiling::TileSizes;

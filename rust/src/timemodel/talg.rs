@@ -1,0 +1,431 @@
+//! `T_alg` — the execution-time model proper, with the feasibility
+//! constraints (8)–(15) of the codesign formulation.
+
+use crate::area::params::HwParams;
+use crate::stencil::defs::Stencil;
+use crate::stencil::workload::ProblemSize;
+use crate::timemodel::machine::MachineSpec;
+use crate::timemodel::tiling::{self, TileSizes};
+
+/// Software parameter vector: tile sizes plus the hyperthreading factor `k`
+/// (resident blocks per SM, constraints (10)–(11)).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SoftwareParams {
+    pub tiles: TileSizes,
+    pub k: u32,
+}
+
+impl SoftwareParams {
+    pub fn new(tiles: TileSizes, k: u32) -> SoftwareParams {
+        SoftwareParams { tiles, k }
+    }
+}
+
+/// Why a parameter combination is infeasible.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Infeasibility {
+    /// Violates an integrality/divisibility pattern of (12)–(15).
+    Pattern(&'static str),
+    /// (9)/(11): `k · M_tile > M_SM`.
+    SharedMemory { m_tile_bytes: f64, m_sm_bytes: f64, k: u32 },
+    /// (10): `k > MTB_SM`.
+    TooManyBlocks { k: u32, max: u32 },
+    /// Threads per block exceed the architectural limit.
+    TooManyThreads { threads: u64, max: u32 },
+    /// Resident warps exceed the SM's warp contexts.
+    TooManyWarps { warps: u64, max: u32 },
+}
+
+impl std::fmt::Display for Infeasibility {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Infeasibility::Pattern(p) => write!(f, "pattern violation: {p}"),
+            Infeasibility::SharedMemory { m_tile_bytes, m_sm_bytes, k } => write!(
+                f,
+                "shared memory: k={k} x M_tile={m_tile_bytes}B > M_SM={m_sm_bytes}B"
+            ),
+            Infeasibility::TooManyBlocks { k, max } => write!(f, "k={k} > MTB_SM={max}"),
+            Infeasibility::TooManyThreads { threads, max } => {
+                write!(f, "{threads} threads/block > {max}")
+            }
+            Infeasibility::TooManyWarps { warps, max } => {
+                write!(f, "{warps} resident warps > {max}")
+            }
+        }
+    }
+}
+
+/// Which phase bounds each round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bound {
+    Compute,
+    Memory,
+    Latency,
+}
+
+/// Full output of one model evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct TimeEstimate {
+    pub cycles: f64,
+    pub seconds: f64,
+    pub gflops: f64,
+    /// Shared-memory bytes per threadblock (`M_tile`).
+    pub m_tile_bytes: f64,
+    /// Per-round compute / memory phase lengths, cycles.
+    pub compute_cycles: f64,
+    pub mem_cycles: f64,
+    /// Dispatch rounds summed over all wavefronts.
+    pub rounds: f64,
+    pub bound: Bound,
+    /// SM occupancy actually achieved, resident threads / (λ·n_V), capped 1.
+    pub occupancy: f64,
+}
+
+/// The model: machine constants + evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct TimeModel {
+    pub machine: MachineSpec,
+}
+
+impl TimeModel {
+    pub fn new(machine: MachineSpec) -> TimeModel {
+        TimeModel { machine }
+    }
+
+    pub fn maxwell() -> TimeModel {
+        TimeModel::new(MachineSpec::maxwell())
+    }
+
+    /// Check constraints (9)–(15) for `(stencil, hw, sw)`.
+    ///
+    /// Patterns enforced (§IV-A): `t_S1 ≥ 1`, `t_S2` a positive multiple of
+    /// 32 (full warps), `t_T ≥ 2` and even (hybrid hexagonal requirement),
+    /// `t_S3 ≥ 1` for 3-D, `k ≥ 1` integer; and the resource constraints
+    /// (9)–(11) plus the architectural thread/warp limits.
+    pub fn feasibility(
+        &self,
+        stencil: &Stencil,
+        hw: &HwParams,
+        sw: &SoftwareParams,
+    ) -> Result<(), Infeasibility> {
+        let m = &self.machine;
+        let t = &sw.tiles;
+        if t.t_s1 < 1 {
+            return Err(Infeasibility::Pattern("t_S1 must be a positive integer"));
+        }
+        if t.t_s2 == 0 || t.t_s2 % m.warp as u64 != 0 {
+            return Err(Infeasibility::Pattern("t_S2 must be a positive multiple of 32"));
+        }
+        if t.t_t < 2 || t.t_t % 2 != 0 {
+            return Err(Infeasibility::Pattern("t_T must be even and >= 2"));
+        }
+        match (stencil.is_3d(), t.t_s3) {
+            (true, Some(s3)) if s3 >= 1 => {}
+            (true, _) => return Err(Infeasibility::Pattern("3-D stencil needs t_S3 >= 1")),
+            (false, None) => {}
+            (false, Some(_)) => return Err(Infeasibility::Pattern("2-D stencil with t_S3")),
+        }
+        if sw.k < 1 {
+            return Err(Infeasibility::Pattern("k must be a positive integer"));
+        }
+        if sw.k > m.max_blocks_per_sm {
+            return Err(Infeasibility::TooManyBlocks { k: sw.k, max: m.max_blocks_per_sm });
+        }
+        let threads = t.t_s2 * t.t_s3.unwrap_or(1);
+        if threads > m.max_threads_per_block as u64 {
+            return Err(Infeasibility::TooManyThreads { threads, max: m.max_threads_per_block });
+        }
+        let warps = sw.k as u64 * threads / m.warp as u64;
+        if warps > m.max_warps_per_sm as u64 {
+            return Err(Infeasibility::TooManyWarps { warps, max: m.max_warps_per_sm });
+        }
+        let m_tile = tiling::tile_footprint_bytes(stencil, t);
+        let m_sm = hw.m_sm_kb * 1024.0;
+        if sw.k as f64 * m_tile > m_sm {
+            return Err(Infeasibility::SharedMemory {
+                m_tile_bytes: m_tile,
+                m_sm_bytes: m_sm,
+                k: sw.k,
+            });
+        }
+        Ok(())
+    }
+
+    /// Evaluate `T_alg` assuming feasibility has been established.
+    ///
+    /// Model structure (DESIGN.md §5):
+    ///
+    /// * Each wavefront's blocks are dispatched in `ceil(blocks / (n_SM·k))`
+    ///   rounds of `n_SM·k` concurrent blocks.
+    /// * Per round, an SM issues `n_V` lane-operations per cycle if it holds
+    ///   enough resident threads to hide latency (`R ≥ λ·n_V`), else it is
+    ///   latency-bound at `R/λ` lanes per cycle.
+    /// * The round's global-memory phase moves `n_SM·k` tile footprints
+    ///   through the fixed off-chip bandwidth; compute and memory overlap
+    ///   (`max`), plus a fixed sync/dispatch overhead.
+    pub fn evaluate(
+        &self,
+        stencil: &Stencil,
+        size: &ProblemSize,
+        hw: &HwParams,
+        sw: &SoftwareParams,
+    ) -> TimeEstimate {
+        let geo = tiling::geometry(stencil, size, &sw.tiles);
+        let m_tile = tiling::tile_footprint_bytes(stencil, &sw.tiles);
+        let traffic = tiling::tile_traffic_bytes(stencil, &sw.tiles);
+        self.evaluate_pre(stencil, size, hw, sw, &geo, m_tile, traffic)
+    }
+
+    /// Hot-path variant of [`TimeModel::evaluate`] with the tile-dependent
+    /// (k-independent) quantities precomputed: the inner solver evaluates
+    /// several `k` candidates per tile vector, and geometry + footprint +
+    /// traffic are invariant across them (§Perf in EXPERIMENTS.md).
+    pub fn evaluate_pre(
+        &self,
+        stencil: &Stencil,
+        size: &ProblemSize,
+        hw: &HwParams,
+        sw: &SoftwareParams,
+        geo: &tiling::TilingGeometry,
+        m_tile: f64,
+        traffic: f64,
+    ) -> TimeEstimate {
+        let m = &self.machine;
+
+        // Resident threads per SM and achievable issue rate.
+        let resident = (sw.k as u64 * geo.threads_per_block) as f64;
+        let lam = m.latency_factor_for(hw.m_sm_kb);
+        let needed = lam * hw.n_v as f64;
+        let occupancy = (resident / needed).min(1.0);
+        let issue_lanes = (hw.n_v as f64).min(resident / lam);
+
+        // One round = n_SM·k blocks; each block runs iters_per_thread
+        // iterations of C_iter cycles on each of its threads.
+        let lane_work = resident * geo.iters_per_thread * stencil.c_iter_cycles;
+        let compute_cycles = lane_work / issue_lanes;
+
+        // Each SM streams its k resident blocks' footprints through its own
+        // bandwidth slice (the memory system scales with n_SM; see
+        // `MachineSpec::mem_bw_per_sm_gbs`).
+        let sm_bytes = sw.k as f64 * traffic;
+        let mem_cycles = sm_bytes / m.bytes_per_cycle_per_sm();
+
+        let round_cycles = compute_cycles.max(mem_cycles) + m.sync_cycles;
+        let bound = if compute_cycles >= mem_cycles {
+            if occupancy < 1.0 {
+                Bound::Latency
+            } else {
+                Bound::Compute
+            }
+        } else {
+            Bound::Memory
+        };
+
+        let concurrent = (hw.n_sm * sw.k) as f64;
+        let rounds_per_wavefront = (geo.blocks_per_wavefront() as f64 / concurrent).ceil();
+        let rounds = geo.n_wavefronts() as f64 * rounds_per_wavefront;
+        let cycles = rounds * round_cycles;
+        let seconds = cycles / (m.clock_ghz * 1e9);
+        let gflops = stencil.flops_per_point * size.points() / seconds / 1e9;
+
+        TimeEstimate {
+            cycles,
+            seconds,
+            gflops,
+            m_tile_bytes: m_tile,
+            compute_cycles,
+            mem_cycles,
+            rounds,
+            bound,
+            occupancy,
+        }
+    }
+
+    /// Feasibility-checked evaluation.
+    pub fn evaluate_checked(
+        &self,
+        stencil: &Stencil,
+        size: &ProblemSize,
+        hw: &HwParams,
+        sw: &SoftwareParams,
+    ) -> Result<TimeEstimate, Infeasibility> {
+        self.feasibility(stencil, hw, sw)?;
+        Ok(self.evaluate(stencil, size, hw, sw))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::defs::{Stencil, StencilId};
+
+    fn jac() -> &'static Stencil {
+        Stencil::get(StencilId::Jacobi2D)
+    }
+
+    fn heat3d() -> &'static Stencil {
+        Stencil::get(StencilId::Heat3D)
+    }
+
+    fn model() -> TimeModel {
+        TimeModel::maxwell()
+    }
+
+    fn gtx() -> HwParams {
+        HwParams::gtx980()
+    }
+
+    fn sw2d() -> SoftwareParams {
+        // Footprint: 2 buf × 4 B × (32+2·7+2) × (64+2) = 25 344 B; k = 2
+        // fits comfortably in GTX 980's 96 kB.
+        SoftwareParams::new(TileSizes::d2(32, 64, 8), 2)
+    }
+
+    #[test]
+    fn feasible_baseline() {
+        assert_eq!(model().feasibility(jac(), &gtx(), &sw2d()), Ok(()));
+    }
+
+    #[test]
+    fn pattern_violations_rejected() {
+        let m = model();
+        // odd t_T
+        let sw = SoftwareParams::new(TileSizes::d2(64, 128, 15), 4);
+        assert!(matches!(m.feasibility(jac(), &gtx(), &sw), Err(Infeasibility::Pattern(_))));
+        // t_S2 not multiple of 32
+        let sw = SoftwareParams::new(TileSizes::d2(64, 100, 16), 4);
+        assert!(matches!(m.feasibility(jac(), &gtx(), &sw), Err(Infeasibility::Pattern(_))));
+        // k = 0
+        let sw = SoftwareParams::new(TileSizes::d2(64, 128, 16), 0);
+        assert!(matches!(m.feasibility(jac(), &gtx(), &sw), Err(Infeasibility::Pattern(_))));
+        // 3-D tiles on a 2-D stencil
+        let sw = SoftwareParams::new(TileSizes::d3(64, 32, 4, 16), 4);
+        assert!(matches!(m.feasibility(jac(), &gtx(), &sw), Err(Infeasibility::Pattern(_))));
+    }
+
+    #[test]
+    fn shared_memory_constraint_binds() {
+        let m = model();
+        // Huge tile: footprint over 96 kB.
+        let sw = SoftwareParams::new(TileSizes::d2(4096, 512, 32), 1);
+        assert!(matches!(
+            m.feasibility(jac(), &gtx(), &sw),
+            Err(Infeasibility::SharedMemory { .. })
+        ));
+        // Same tile fits with more shared memory.
+        let mut big = gtx();
+        big.m_sm_kb = 100_000.0;
+        assert!(matches!(
+            m.feasibility(jac(), &big, &sw),
+            Ok(()) | Err(Infeasibility::TooManyWarps { .. })
+        ));
+    }
+
+    #[test]
+    fn block_and_warp_limits() {
+        let m = model();
+        let sw = SoftwareParams::new(TileSizes::d2(64, 128, 16), 33);
+        assert!(matches!(m.feasibility(jac(), &gtx(), &sw), Err(Infeasibility::TooManyBlocks { .. })));
+        let sw = SoftwareParams::new(TileSizes::d2(64, 2048, 16), 1);
+        assert!(matches!(m.feasibility(jac(), &gtx(), &sw), Err(Infeasibility::TooManyThreads { .. })));
+        let sw = SoftwareParams::new(TileSizes::d2(64, 256, 16), 16);
+        assert!(matches!(m.feasibility(jac(), &gtx(), &sw), Err(Infeasibility::TooManyWarps { .. })));
+    }
+
+    #[test]
+    fn estimate_internally_consistent() {
+        let m = model();
+        let size = ProblemSize::d2(4096, 1024);
+        let e = m.evaluate(jac(), &size, &gtx(), &sw2d());
+        assert!(e.cycles > 0.0 && e.seconds > 0.0 && e.gflops > 0.0);
+        assert!((e.seconds - e.cycles / 1.2e9).abs() / e.seconds < 1e-12);
+        let gflops = jac().flops_per_point * size.points() / e.seconds / 1e9;
+        assert!((gflops - e.gflops).abs() / gflops < 1e-12);
+    }
+
+    #[test]
+    fn gtx980_jacobi_gflops_plausible() {
+        // Sanity scale check: a decent tiling on GTX 980 should land in the
+        // hundreds-to-thousands of GFLOP/s — the paper's Fig 3 scale.
+        let m = model();
+        let e = m.evaluate(jac(), &ProblemSize::d2(8192, 4096), &gtx(), &sw2d());
+        assert!(
+            e.gflops > 100.0 && e.gflops < 6000.0,
+            "GTX980 Jacobi2D = {} GFLOP/s",
+            e.gflops
+        );
+    }
+
+    #[test]
+    fn more_cores_help_when_compute_bound() {
+        let m = model();
+        let size = ProblemSize::d2(8192, 4096);
+        // High occupancy config.
+        let sw = SoftwareParams::new(TileSizes::d2(64, 256, 16), 8);
+        let base = m.evaluate(jac(), &size, &gtx(), &sw);
+        let mut more = gtx();
+        more.n_v = 256;
+        let boosted = m.evaluate(jac(), &size, &more, &sw);
+        assert!(boosted.gflops > base.gflops);
+    }
+
+    #[test]
+    fn starved_sm_is_latency_bound() {
+        let m = model();
+        let size = ProblemSize::d2(8192, 4096);
+        // One tiny block per SM on a very wide SM.
+        let mut wide = gtx();
+        wide.n_v = 1024;
+        let sw = SoftwareParams::new(TileSizes::d2(64, 32, 8), 1);
+        let e = m.evaluate(jac(), &size, &wide, &sw);
+        assert_eq!(e.bound, Bound::Latency);
+        assert!(e.occupancy < 1.0);
+    }
+
+    #[test]
+    fn tiny_time_tiles_become_memory_bound() {
+        let m = model();
+        let size = ProblemSize::d2(8192, 4096);
+        // t_T = 2 (minimum reuse) with wide spatial tiles: traffic-heavy.
+        let sw = SoftwareParams::new(TileSizes::d2(512, 1024, 2), 1);
+        let e = m.evaluate(jac(), &size, &gtx(), &sw);
+        assert_eq!(e.bound, Bound::Memory, "bound={:?} cc={} mc={}", e.bound, e.compute_cycles, e.mem_cycles);
+    }
+
+    #[test]
+    fn evaluate_checked_rejects_infeasible() {
+        let m = model();
+        let sw = SoftwareParams::new(TileSizes::d2(4096, 512, 32), 4);
+        assert!(m
+            .evaluate_checked(jac(), &ProblemSize::d2(4096, 1024), &gtx(), &sw)
+            .is_err());
+    }
+
+    #[test]
+    fn model_3d_runs() {
+        let m = model();
+        let sw = SoftwareParams::new(TileSizes::d3(16, 32, 4, 8), 1);
+        let e = m
+            .evaluate_checked(heat3d(), &ProblemSize::d3(256, 64), &gtx(), &sw)
+            .unwrap();
+        assert!(e.gflops > 0.0);
+    }
+
+    #[test]
+    fn weak_monotonicity_fixed_sw_more_sms_compute_bound() {
+        // With software fixed and the round compute-bound, doubling n_SM
+        // must not hurt. (When memory-bound, more SMs genuinely do not help
+        // under fixed off-chip bandwidth and ceil-quantization can even cost
+        // a few percent — that behaviour is intentional and covered by
+        // `tiny_time_tiles_become_memory_bound`.)
+        let m = model();
+        let size = ProblemSize::d2(8192, 4096);
+        let sw = SoftwareParams::new(TileSizes::d2(32, 64, 16), 2);
+        let a = m.evaluate(jac(), &size, &gtx(), &sw);
+        assert_ne!(a.bound, Bound::Memory, "config must be compute/latency bound");
+        let mut h2 = gtx();
+        h2.n_sm = 32;
+        let b = m.evaluate(jac(), &size, &h2, &sw);
+        assert!(b.seconds <= a.seconds * 1.0001);
+    }
+}

@@ -1,0 +1,254 @@
+//! Hybrid hexagonal / classical tiling geometry (Grosser et al. [16]).
+//!
+//! The (time × S1) plane is covered by hexagonal tiles of time-height `t_T`
+//! and base width `t_S1`, whose slanted edges follow the stencil's dependence
+//! cone (slope σ). Hexagons come in two *phases* per time band; all tiles of
+//! one phase are mutually independent (they form a wavefront and can run
+//! concurrently), and phase B of a band depends on phase A. The remaining
+//! space dimensions are tiled classically: S2 into strips of `t_S2` (mapped
+//! to the threads of a block), and for 3-D stencils S3 into strips of `t_S3`.
+
+use crate::stencil::defs::Stencil;
+use crate::stencil::workload::ProblemSize;
+
+/// Software tile-size vector (the s-vector of the codesign problem).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TileSizes {
+    /// Hexagon base width along S1 (integer ≥ 1, constraint (12)).
+    pub t_s1: u64,
+    /// Strip width along S2 = threads per block slice (multiple of 32,
+    /// constraint (13)).
+    pub t_s2: u64,
+    /// Strip width along S3; `None` for 2-D stencils.
+    pub t_s3: Option<u64>,
+    /// Hexagon time height (even, constraint (15): hybrid-hexagonal tiling
+    /// requires it).
+    pub t_t: u64,
+}
+
+impl TileSizes {
+    pub fn d2(t_s1: u64, t_s2: u64, t_t: u64) -> TileSizes {
+        TileSizes { t_s1, t_s2, t_s3: None, t_t }
+    }
+
+    pub fn d3(t_s1: u64, t_s2: u64, t_s3: u64, t_t: u64) -> TileSizes {
+        TileSizes { t_s1, t_s2, t_s3: Some(t_s3), t_t }
+    }
+
+    pub fn label(&self) -> String {
+        match self.t_s3 {
+            Some(s3) => format!("({},{},{},{})", self.t_s1, self.t_s2, s3, self.t_t),
+            None => format!("({},{},{})", self.t_s1, self.t_s2, self.t_t),
+        }
+    }
+}
+
+/// Geometry of a tiling applied to one problem instance.
+#[derive(Clone, Copy, Debug)]
+pub struct TilingGeometry {
+    /// Time bands: `ceil(T / t_T)`.
+    pub n_bands: u64,
+    /// Hexagonal tiles per band across S1 **per phase**.
+    pub tiles_s1_per_phase: u64,
+    /// Classical blocks across S2.
+    pub blocks_s2: u64,
+    /// Classical blocks across S3 (1 for 2-D).
+    pub blocks_s3: u64,
+    /// Points computed per (hexagon × S2×S3 strip) threadblock, averaged
+    /// over the hexagon (its s1 extent varies with t).
+    pub points_per_block: f64,
+    /// Iterations each thread executes inside one block = hexagon area in
+    /// the (t, s1) plane divided by… 1 thread per (s2[, s3]) column.
+    pub iters_per_thread: f64,
+    /// Threads per block.
+    pub threads_per_block: u64,
+}
+
+impl TilingGeometry {
+    /// Wavefronts in the whole computation: two phases per time band.
+    pub fn n_wavefronts(&self) -> u64 {
+        2 * self.n_bands
+    }
+
+    /// Independent threadblocks per wavefront (one phase of one band).
+    pub fn blocks_per_wavefront(&self) -> u64 {
+        self.tiles_s1_per_phase * self.blocks_s2 * self.blocks_s3
+    }
+
+    /// Total threadblocks launched.
+    pub fn total_blocks(&self) -> u64 {
+        self.n_wavefronts() * self.blocks_per_wavefront()
+    }
+}
+
+/// Average s1-extent of a hexagonal tile: the base contributes `t_S1`, the
+/// slanted edges add σ·(t_T − 1) on average over the tile's height.
+pub fn hex_avg_width(t_s1: u64, t_t: u64, sigma: u32) -> f64 {
+    t_s1 as f64 + sigma as f64 * (t_t as f64 - 1.0)
+}
+
+/// Maximum s1-extent of a hexagonal tile (at its widest row) — this is what
+/// must be staged in shared memory, plus halo.
+pub fn hex_max_width(t_s1: u64, t_t: u64, sigma: u32) -> f64 {
+    t_s1 as f64 + 2.0 * sigma as f64 * (t_t as f64 - 1.0)
+}
+
+/// Points in the (t, s1) cross-section of one hexagon.
+pub fn hex_area(t_s1: u64, t_t: u64, sigma: u32) -> f64 {
+    t_t as f64 * hex_avg_width(t_s1, t_t, sigma)
+}
+
+/// Compute the tiling geometry of `tiles` applied to `(stencil, size)`.
+///
+/// A phase pair covers `2·avg_width` of S1 per band period, so each phase
+/// contributes `ceil(S1 / (2·avg_width))` tiles (+1 boundary tile on the
+/// phase whose hexagons straddle the band edge — folded into the ceil by
+/// adding the half-period offset).
+pub fn geometry(stencil: &Stencil, size: &ProblemSize, tiles: &TileSizes) -> TilingGeometry {
+    let sigma = stencil.sigma;
+    let avg_w = hex_avg_width(tiles.t_s1, tiles.t_t, sigma);
+    let n_bands = div_ceil_f(size.t as f64, tiles.t_t as f64);
+    let tiles_s1_per_phase = div_ceil_f(size.s1 as f64 + avg_w, 2.0 * avg_w);
+    let blocks_s2 = div_ceil_f(size.s2 as f64, tiles.t_s2 as f64);
+    let blocks_s3 = match (stencil.is_3d(), size.s3, tiles.t_s3) {
+        (true, Some(s3), Some(t_s3)) => div_ceil_f(s3 as f64, t_s3 as f64),
+        (false, None, None) => 1,
+        _ => panic!("dimensionality mismatch between stencil, size and tiles"),
+    };
+    let area = hex_area(tiles.t_s1, tiles.t_t, sigma);
+    let threads_per_block = tiles.t_s2 * tiles.t_s3.unwrap_or(1);
+    TilingGeometry {
+        n_bands,
+        tiles_s1_per_phase,
+        blocks_s2,
+        blocks_s3,
+        points_per_block: area * threads_per_block as f64,
+        iters_per_thread: area,
+        threads_per_block,
+    }
+}
+
+/// Shared-memory footprint of one threadblock, bytes: the hexagon's widest
+/// row plus halo in every classical dimension, double-buffered across
+/// `n_buffers` live arrays (constraint (9)'s `M_tile`).
+pub fn tile_footprint_bytes(stencil: &Stencil, tiles: &TileSizes) -> f64 {
+    let sigma = stencil.sigma as f64;
+    let w1 = hex_max_width(tiles.t_s1, tiles.t_t, stencil.sigma) + 2.0 * sigma;
+    let w2 = tiles.t_s2 as f64 + 2.0 * sigma;
+    let w3 = tiles.t_s3.map(|s| s as f64 + 2.0 * sigma).unwrap_or(1.0);
+    stencil.bytes_per_cell * stencil.n_buffers * w1 * w2 * w3
+}
+
+/// Global-memory traffic of one threadblock, bytes: stream the footprint in
+/// and the computed face back out.
+pub fn tile_traffic_bytes(stencil: &Stencil, tiles: &TileSizes) -> f64 {
+    let in_bytes = tile_footprint_bytes(stencil, tiles) / stencil.n_buffers;
+    let out_w1 = hex_avg_width(tiles.t_s1, tiles.t_t, stencil.sigma);
+    let out_bytes = stencil.bytes_per_cell
+        * out_w1
+        * tiles.t_s2 as f64
+        * tiles.t_s3.map(|s| s as f64).unwrap_or(1.0);
+    in_bytes + out_bytes
+}
+
+fn div_ceil_f(a: f64, b: f64) -> u64 {
+    (a / b).ceil() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::defs::{Stencil, StencilId};
+
+    fn jac() -> &'static Stencil {
+        Stencil::get(StencilId::Jacobi2D)
+    }
+
+    fn heat3d() -> &'static Stencil {
+        Stencil::get(StencilId::Heat3D)
+    }
+
+    #[test]
+    fn hex_geometry_basics() {
+        assert_eq!(hex_avg_width(32, 1, 1), 32.0);
+        assert_eq!(hex_avg_width(32, 9, 1), 40.0);
+        assert_eq!(hex_max_width(32, 9, 1), 48.0);
+        assert_eq!(hex_area(32, 9, 1), 360.0);
+    }
+
+    #[test]
+    fn geometry_counts_cover_problem() {
+        let size = ProblemSize::d2(4096, 1024);
+        let tiles = TileSizes::d2(64, 128, 16);
+        let g = geometry(jac(), &size, &tiles);
+        // Tiles must (over-)cover the iteration space.
+        let covered = g.total_blocks() as f64 * g.points_per_block;
+        assert!(covered >= size.points(), "covered {covered} < {}", size.points());
+        // …but not by more than the boundary slack (≈ one extra tile per
+        // row/column of tiles, well under 2x for these sizes).
+        assert!(covered < 2.0 * size.points());
+        assert_eq!(g.n_wavefronts(), 2 * 64);
+        assert_eq!(g.blocks_s3, 1);
+        assert_eq!(g.threads_per_block, 128);
+    }
+
+    #[test]
+    fn geometry_3d() {
+        let size = ProblemSize::d3(256, 64);
+        let tiles = TileSizes::d3(16, 32, 8, 8);
+        let g = geometry(heat3d(), &size, &tiles);
+        assert_eq!(g.blocks_s3, 32);
+        assert_eq!(g.threads_per_block, 256);
+        let covered = g.total_blocks() as f64 * g.points_per_block;
+        assert!(covered >= size.points());
+    }
+
+    #[test]
+    #[should_panic(expected = "dimensionality mismatch")]
+    fn dim_mismatch_panics() {
+        let size = ProblemSize::d2(128, 64);
+        let tiles = TileSizes::d3(8, 32, 8, 4);
+        geometry(jac(), &size, &tiles);
+    }
+
+    #[test]
+    fn footprint_grows_with_every_tile_dim() {
+        let base = TileSizes::d2(32, 64, 8);
+        let f0 = tile_footprint_bytes(jac(), &base);
+        for t in [
+            TileSizes::d2(64, 64, 8),
+            TileSizes::d2(32, 128, 8),
+            TileSizes::d2(32, 64, 16),
+        ] {
+            assert!(tile_footprint_bytes(jac(), &t) > f0);
+        }
+    }
+
+    #[test]
+    fn footprint_example_value() {
+        // Jacobi2D, (32, 64, 8): w1 = 32+2*7+2 = 48, w2 = 66, 2 buffers, fp32.
+        let f = tile_footprint_bytes(jac(), &TileSizes::d2(32, 64, 8));
+        assert_eq!(f, 4.0 * 2.0 * 48.0 * 66.0);
+    }
+
+    #[test]
+    fn traffic_less_than_two_footprints() {
+        let t = TileSizes::d2(32, 64, 8);
+        let traffic = tile_traffic_bytes(jac(), &t);
+        assert!(traffic > 0.0);
+        assert!(traffic < 2.0 * tile_footprint_bytes(jac(), &t));
+    }
+
+    #[test]
+    fn bigger_time_tiles_amortize_traffic() {
+        // Traffic per computed point must fall as t_T grows — the reuse
+        // argument that makes time tiling worthwhile.
+        let small = TileSizes::d2(64, 128, 2);
+        let big = TileSizes::d2(64, 128, 32);
+        let per_point = |t: &TileSizes| {
+            let g = geometry(jac(), &ProblemSize::d2(4096, 1024), t);
+            tile_traffic_bytes(jac(), t) / g.points_per_block
+        };
+        assert!(per_point(&big) < per_point(&small));
+    }
+}

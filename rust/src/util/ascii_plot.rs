@@ -1,0 +1,134 @@
+//! Terminal scatter plots. Every figure report prints one of these next to
+//! its CSV/SVG output so the paper's plots can be eyeballed directly in the
+//! terminal (Fig 3's Pareto clouds, Fig 4's allocation clusters, Fig 2's fits).
+
+/// A named point series.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub glyph: char,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Scatter-plot canvas with axes and legend.
+pub struct ScatterPlot {
+    pub title: String,
+    pub xlabel: String,
+    pub ylabel: String,
+    pub width: usize,
+    pub height: usize,
+    pub series: Vec<Series>,
+}
+
+impl ScatterPlot {
+    pub fn new(title: &str, xlabel: &str, ylabel: &str) -> ScatterPlot {
+        ScatterPlot {
+            title: title.to_string(),
+            xlabel: xlabel.to_string(),
+            ylabel: ylabel.to_string(),
+            width: 72,
+            height: 24,
+            series: Vec::new(),
+        }
+    }
+
+    pub fn series(&mut self, name: &str, glyph: char, points: Vec<(f64, f64)>) -> &mut Self {
+        self.series.push(Series { name: name.to_string(), glyph, points });
+        self
+    }
+
+    /// Render to a string. Later series overwrite earlier ones on collision,
+    /// so put highlights (e.g. Pareto points) last.
+    pub fn render(&self) -> String {
+        let all: Vec<(f64, f64)> = self.series.iter().flat_map(|s| s.points.iter().copied()).collect();
+        if all.is_empty() {
+            return format!("{}\n(no data)\n", self.title);
+        }
+        let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &(x, y) in &all {
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+        if xmax == xmin {
+            xmax = xmin + 1.0;
+        }
+        if ymax == ymin {
+            ymax = ymin + 1.0;
+        }
+        let w = self.width;
+        let h = self.height;
+        let mut grid = vec![vec![' '; w]; h];
+        for s in &self.series {
+            for &(x, y) in &s.points {
+                let cx = ((x - xmin) / (xmax - xmin) * (w - 1) as f64).round() as usize;
+                let cy = ((y - ymin) / (ymax - ymin) * (h - 1) as f64).round() as usize;
+                grid[h - 1 - cy][cx] = s.glyph;
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.title));
+        let ylab_w = 10;
+        for (r, row) in grid.iter().enumerate() {
+            let yv = ymax - (ymax - ymin) * r as f64 / (h - 1) as f64;
+            let label = if r % 4 == 0 {
+                format!("{:>9.4}", yv)
+            } else {
+                " ".repeat(9)
+            };
+            out.push_str(&format!("{label} |"));
+            out.extend(row.iter());
+            out.push('\n');
+        }
+        out.push_str(&" ".repeat(ylab_w));
+        out.push('+');
+        out.push_str(&"-".repeat(w));
+        out.push('\n');
+        out.push_str(&format!(
+            "{}{:<12.4}{}{:>12.4}\n",
+            " ".repeat(ylab_w + 1),
+            xmin,
+            " ".repeat(w.saturating_sub(24)),
+            xmax
+        ));
+        out.push_str(&format!("{}x: {}   y: {}\n", " ".repeat(ylab_w + 1), self.xlabel, self.ylabel));
+        let legend: Vec<String> = self
+            .series
+            .iter()
+            .map(|s| format!("'{}' {} ({} pts)", s.glyph, s.name, s.points.len()))
+            .collect();
+        out.push_str(&format!("{}legend: {}\n", " ".repeat(ylab_w + 1), legend.join(", ")));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_points_and_legend() {
+        let mut p = ScatterPlot::new("t", "x", "y");
+        p.series("all", '.', vec![(0.0, 0.0), (1.0, 1.0), (2.0, 4.0)]);
+        p.series("best", '*', vec![(2.0, 4.0)]);
+        let s = p.render();
+        assert!(s.contains('*'));
+        assert!(s.contains('.'));
+        assert!(s.contains("legend: '.' all (3 pts), '*' best (1 pts)"));
+    }
+
+    #[test]
+    fn empty_plot_is_graceful() {
+        let p = ScatterPlot::new("empty", "x", "y");
+        assert!(p.render().contains("no data"));
+    }
+
+    #[test]
+    fn degenerate_range_no_panic() {
+        let mut p = ScatterPlot::new("deg", "x", "y");
+        p.series("s", 'o', vec![(1.0, 1.0), (1.0, 1.0)]);
+        let _ = p.render();
+    }
+}

@@ -1,0 +1,221 @@
+//! Mini-criterion: the measurement harness behind every `benches/` target
+//! (`criterion` itself is unavailable offline). Provides warmup, multiple
+//! timed samples, simple statistics and a stable one-line-per-benchmark
+//! output format, plus a `black_box` to defeat constant folding.
+//!
+//! The `benches/` targets are `harness = false` binaries that mix *timing*
+//! benchmarks (this module) with *figure regeneration* (module `report`),
+//! one per paper table/figure, per DESIGN.md §6.
+
+use crate::util::stats;
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-export of `std::hint::black_box` under the criterion-familiar name.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Wall-clock budget for the warmup phase.
+    pub warmup: Duration,
+    /// Number of measured samples.
+    pub samples: usize,
+    /// Minimum time per sample; iterations are batched to reach it.
+    pub min_sample_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            samples: 20,
+            min_sample_time: Duration::from_millis(20),
+        }
+    }
+}
+
+/// Summary statistics of one benchmark, all in nanoseconds per iteration.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub iters_total: u64,
+}
+
+impl BenchResult {
+    /// criterion-like single line: `name  time: [median] mean ± stddev`.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{:<44} time: {:>12} (mean {:>12} ± {})",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.stddev_ns),
+        )
+    }
+}
+
+/// Human-readable duration from nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// A bench runner that accumulates results and prints them criterion-style.
+pub struct Bencher {
+    cfg: BenchConfig,
+    pub results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new() -> Bencher {
+        Bencher { cfg: BenchConfig::default(), results: Vec::new() }
+    }
+
+    pub fn with_config(cfg: BenchConfig) -> Bencher {
+        Bencher { cfg, results: Vec::new() }
+    }
+
+    /// Fast configuration for CI-style runs (fewer samples, shorter warmup).
+    pub fn quick() -> Bencher {
+        Bencher::with_config(BenchConfig {
+            warmup: Duration::from_millis(50),
+            samples: 10,
+            min_sample_time: Duration::from_millis(5),
+        })
+    }
+
+    /// Measure `f`, printing a summary line. The closure's return value is
+    /// black-boxed to keep the computation alive.
+    pub fn bench<R, F: FnMut() -> R>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup & calibration: find iterations per sample.
+        let warm_start = Instant::now();
+        let mut one = Duration::ZERO;
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.cfg.warmup || warm_iters == 0 {
+            let t = Instant::now();
+            std_black_box(f());
+            one = t.elapsed();
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = (warm_start.elapsed() / warm_iters.max(1) as u32).max(Duration::from_nanos(1));
+        let _ = one;
+        let iters_per_sample = ((self.cfg.min_sample_time.as_nanos() / per_iter.as_nanos().max(1))
+            as u64)
+            .clamp(1, 1_000_000);
+
+        let mut samples_ns = Vec::with_capacity(self.cfg.samples);
+        let mut total_iters = 0u64;
+        for _ in 0..self.cfg.samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                std_black_box(f());
+            }
+            let el = t.elapsed().as_nanos() as f64;
+            samples_ns.push(el / iters_per_sample as f64);
+            total_iters += iters_per_sample;
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            mean_ns: stats::mean(&samples_ns),
+            median_ns: stats::median(&samples_ns),
+            stddev_ns: stats::stddev(&samples_ns),
+            min_ns: stats::min(&samples_ns),
+            max_ns: stats::max(&samples_ns),
+            iters_total: total_iters,
+        };
+        println!("{}", res.summary_line());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Time a one-shot (non-repeating) operation, e.g. a full DSE sweep.
+    pub fn bench_once<R, F: FnOnce() -> R>(&mut self, name: &str, f: F) -> (R, Duration) {
+        let t = Instant::now();
+        let r = std_black_box(f());
+        let el = t.elapsed();
+        let ns = el.as_nanos() as f64;
+        let res = BenchResult {
+            name: name.to_string(),
+            mean_ns: ns,
+            median_ns: ns,
+            stddev_ns: 0.0,
+            min_ns: ns,
+            max_ns: ns,
+            iters_total: 1,
+        };
+        println!("{}", res.summary_line());
+        self.results.push(res);
+        (r, el)
+    }
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher::new()
+    }
+}
+
+/// `true` when the bench binary should run in abbreviated mode: either
+/// `cargo bench -- --quick` or the `CODESIGN_BENCH_QUICK` env var. `cargo test`
+/// also runs bench targets with `--test`, which we treat as quick mode.
+pub fn quick_requested() -> bool {
+    std::env::args().any(|a| a == "--quick" || a == "--test")
+        || std::env::var("CODESIGN_BENCH_QUICK").is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher::with_config(BenchConfig {
+            warmup: Duration::from_millis(1),
+            samples: 5,
+            min_sample_time: Duration::from_micros(100),
+        });
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..100 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            acc
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.max_ns);
+    }
+
+    #[test]
+    fn bench_once_returns_value() {
+        let mut b = Bencher::quick();
+        let (v, d) = b.bench_once("one", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5e3).contains("µs"));
+        assert!(fmt_ns(5e6).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

@@ -1,0 +1,225 @@
+//! Tiny command-line parser for the `codesign` binary (offline stand-in for
+//! `clap`). Supports subcommands, `--flag`, `--opt value` / `--opt=value`,
+//! and positional arguments, with generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub flags: BTreeMap<String, bool>,
+    pub opts: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or(&false)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_f64(&self, name: &str) -> Option<f64> {
+        self.opt(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn opt_usize(&self, name: &str) -> Option<usize> {
+        self.opt(name).and_then(|s| s.parse().ok())
+    }
+}
+
+/// One subcommand definition.
+#[derive(Clone, Debug)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+/// A CLI with subcommands.
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+/// Parse outcome.
+#[derive(Debug)]
+pub enum Parsed {
+    /// `(command name, parsed args)`
+    Run(String, Args),
+    /// Help was requested (text already composed).
+    Help(String),
+    /// Parse error (message suitable for stderr).
+    Error(String),
+}
+
+impl Cli {
+    pub fn parse(&self, argv: &[String]) -> Parsed {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            return Parsed::Help(self.help());
+        }
+        let cmd_name = &argv[0];
+        let Some(cmd) = self.commands.iter().find(|c| c.name == cmd_name.as_str()) else {
+            return Parsed::Error(format!(
+                "unknown command '{cmd_name}'; run '{} --help'",
+                self.bin
+            ));
+        };
+        let mut args = Args::default();
+        // Seed defaults.
+        for o in &cmd.opts {
+            if let Some(d) = o.default {
+                args.opts.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Parsed::Help(self.help_command(cmd));
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let Some(spec) = cmd.opts.iter().find(|o| o.name == name) else {
+                    return Parsed::Error(format!("unknown option '--{name}' for '{cmd_name}'"));
+                };
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            match argv.get(i) {
+                                Some(v) => v.clone(),
+                                None => {
+                                    return Parsed::Error(format!("option '--{name}' needs a value"))
+                                }
+                            }
+                        }
+                    };
+                    args.opts.insert(name.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        return Parsed::Error(format!("flag '--{name}' does not take a value"));
+                    }
+                    args.flags.insert(name.to_string(), true);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Parsed::Run(cmd.name.to_string(), args)
+    }
+
+    /// Top-level help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n", self.bin, self.about, self.bin);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+        }
+        s.push_str(&format!("\nRun '{} <command> --help' for command options.\n", self.bin));
+        s
+    }
+
+    fn help_command(&self, cmd: &Command) -> String {
+        let mut s = format!("{} {} — {}\n\nOPTIONS:\n", self.bin, cmd.name, cmd.about);
+        for o in &cmd.opts {
+            let arg = if o.takes_value {
+                format!("--{} <value>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  {:<26} {}{}\n", arg, o.help, def));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli {
+            bin: "codesign",
+            about: "test cli",
+            commands: vec![Command {
+                name: "explore",
+                about: "run DSE",
+                opts: vec![
+                    OptSpec { name: "area", takes_value: true, default: Some("450"), help: "area budget" },
+                    OptSpec { name: "verbose", takes_value: false, default: None, help: "chatty" },
+                ],
+            }],
+        }
+    }
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_overrides() {
+        match cli().parse(&argv(&["explore"])) {
+            Parsed::Run(name, a) => {
+                assert_eq!(name, "explore");
+                assert_eq!(a.opt("area"), Some("450"));
+                assert!(!a.flag("verbose"));
+            }
+            other => panic!("{other:?}"),
+        }
+        match cli().parse(&argv(&["explore", "--area", "600", "--verbose", "pos1"])) {
+            Parsed::Run(_, a) => {
+                assert_eq!(a.opt_f64("area"), Some(600.0));
+                assert!(a.flag("verbose"));
+                assert_eq!(a.positional, vec!["pos1"]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn equals_syntax() {
+        match cli().parse(&argv(&["explore", "--area=512"])) {
+            Parsed::Run(_, a) => assert_eq!(a.opt_usize("area"), Some(512)),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_command_and_option() {
+        assert!(matches!(cli().parse(&argv(&["bogus"])), Parsed::Error(_)));
+        assert!(matches!(cli().parse(&argv(&["explore", "--nope"])), Parsed::Error(_)));
+        assert!(matches!(cli().parse(&argv(&["explore", "--area"])), Parsed::Error(_)));
+    }
+
+    #[test]
+    fn help_paths() {
+        assert!(matches!(cli().parse(&argv(&[])), Parsed::Help(_)));
+        assert!(matches!(cli().parse(&argv(&["--help"])), Parsed::Help(_)));
+        match cli().parse(&argv(&["explore", "--help"])) {
+            Parsed::Help(h) => assert!(h.contains("--area")),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Tiny CSV table builder. Every report in `report/` emits one CSV per paper
+//! table/figure so results can be diffed and re-plotted externally.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// An in-memory CSV table with a fixed header.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create a table with the given column names.
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row; panics if the arity does not match the header.
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "csv row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Convenience: append a row of display-able values.
+    pub fn push<T: std::fmt::Display>(&mut self, cells: &[T]) {
+        self.row(cells.iter().map(|c| c.to_string()).collect());
+    }
+
+    /// Render to CSV text (RFC-4180 quoting where needed).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        write_row(&mut out, &self.header);
+        for r in &self.rows {
+            write_row(&mut out, r);
+        }
+        out
+    }
+
+    /// Render as an aligned ASCII table (for terminal report output).
+    pub fn to_ascii(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |out: &mut String, cells: &[String]| {
+            for i in 0..ncol {
+                let _ = write!(out, "| {:width$} ", cells[i], width = widths[i]);
+            }
+            out.push_str("|\n");
+        };
+        fmt_row(&mut out, &self.header);
+        for (i, w) in widths.iter().enumerate() {
+            out.push_str(if i == 0 { "|" } else { "" });
+            out.push_str(&"-".repeat(w + 2));
+            out.push('|');
+        }
+        out.push('\n');
+        for r in &self.rows {
+            fmt_row(&mut out, r);
+        }
+        out
+    }
+
+    /// Write the CSV rendering to a file, creating parent directories.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+fn write_row(out: &mut String, cells: &[String]) {
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if c.contains([',', '"', '\n']) {
+            out.push('"');
+            out.push_str(&c.replace('"', "\"\""));
+            out.push('"');
+        } else {
+            out.push_str(c);
+        }
+    }
+    out.push('\n');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_csv() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push(&[1, 2]);
+        t.push(&[3, 4]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n3,4\n");
+    }
+
+    #[test]
+    fn quoting() {
+        let mut t = Table::new(&["x"]);
+        t.row(vec!["hello, \"world\"".to_string()]);
+        assert_eq!(t.to_csv(), "x\n\"hello, \"\"world\"\"\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push(&[1]);
+    }
+
+    #[test]
+    fn ascii_alignment() {
+        let mut t = Table::new(&["name", "v"]);
+        t.push(&["x", "10"]);
+        t.push(&["longer", "7"]);
+        let a = t.to_ascii();
+        assert!(a.contains("| name   | v  |"));
+        assert!(a.contains("| longer | 7  |"));
+    }
+}

@@ -1,0 +1,30 @@
+//! Dependency-free utility substrate.
+//!
+//! This image builds fully offline with only the `xla` crate's dependency
+//! closure vendored, so the usual ecosystem crates (`rand`, `serde`, `rayon`,
+//! `clap`, `criterion`, `proptest`) are unavailable. Everything the rest of
+//! the library needs from them is implemented here, small and tested:
+//!
+//! * [`prng`] — SplitMix64 / xoshiro256** PRNG (replaces `rand`)
+//! * [`stats`] — descriptive statistics and percentiles
+//! * [`regression`] — least-squares linear fits (the paper's calibration tool)
+//! * [`json`] — minimal JSON value model, writer and parser (replaces `serde_json`)
+//! * [`csv`] — CSV table writer
+//! * [`threadpool`] — scoped parallel map + persistent worker pool (replaces `rayon`)
+//! * [`propcheck`] — mini property-based testing harness (replaces `proptest`)
+//! * [`bench`] — mini-criterion used by the `benches/` targets (replaces `criterion`)
+//! * [`cli`] — tiny argument parser for the `codesign` binary (replaces `clap`)
+//! * [`ascii_plot`] — terminal scatter plots for report output
+//! * [`svg`] — SVG scatter/line plot writer for report output
+
+pub mod ascii_plot;
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod prng;
+pub mod propcheck;
+pub mod regression;
+pub mod stats;
+pub mod svg;
+pub mod threadpool;

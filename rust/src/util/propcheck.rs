@@ -1,0 +1,121 @@
+//! Mini property-based testing harness (offline stand-in for `proptest`).
+//!
+//! Usage:
+//! ```no_run
+//! // (no_run: rustdoc test binaries miss the xla rpath in this image)
+//! use codesign::util::propcheck::{forall, Config};
+//! forall(Config::default().cases(200), |rng| {
+//!     let x = rng.range_i64(-100, 100);
+//!     let prop = (x * x) >= 0;
+//!     prop
+//! });
+//! ```
+//!
+//! Failures report the seed and case index so they can be replayed
+//! deterministically with [`Config::seed`].
+
+use crate::util::prng::Rng;
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 100, seed: 0xC0DE_5160_u64 ^ 0xA5A5 }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Run `prop` on `cfg.cases` independently seeded RNGs; panic with the
+/// replayable (seed, case) pair on the first returned `false`.
+pub fn forall<F: FnMut(&mut Rng) -> bool>(cfg: Config, mut prop: F) {
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        if !prop(&mut rng) {
+            panic!(
+                "property failed at case {case}/{} (replay with Config::default().seed({}).cases(1) after advancing {} cases, or seed {})",
+                cfg.cases,
+                cfg.seed,
+                case,
+                cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result<(), String>` so failures
+/// can carry a description of the counterexample.
+pub fn forall_res<F: FnMut(&mut Rng) -> Result<(), String>>(cfg: Config, mut prop: F) {
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed at case {case}/{} (seed {seed}): {msg}", cfg.cases);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(Config::default().cases(50), |rng| {
+            count += 1;
+            let x = rng.range_i64(-1000, 1000);
+            x.abs() >= 0
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(Config::default().cases(100), |rng| rng.range_u64(0, 10) != 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "counterexample: 5")]
+    fn failing_res_property_carries_message() {
+        forall_res(Config::default().cases(100), |rng| {
+            let v = rng.range_u64(0, 10);
+            if v == 5 {
+                Err("counterexample: 5".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mut first: Vec<u64> = Vec::new();
+        forall(Config::default().cases(10), |rng| {
+            first.push(rng.next_u64());
+            true
+        });
+        let mut second: Vec<u64> = Vec::new();
+        forall(Config::default().cases(10), |rng| {
+            second.push(rng.next_u64());
+            true
+        });
+        assert_eq!(first, second);
+    }
+}

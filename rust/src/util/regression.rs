@@ -1,0 +1,180 @@
+//! Least-squares linear regression.
+//!
+//! This is the paper's calibration workhorse: §III-B fits independent linear
+//! area models `area = β·size + α` to Cacti-estimated bank areas for each of
+//! the four memory types (register file, shared memory, L1, L2), and a final
+//! measurement-based linear model for the per-SM core area.
+
+use crate::util::stats;
+
+/// Result of a 1-D least-squares fit `y ≈ slope·x + intercept`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinearFit {
+    pub slope: f64,
+    pub intercept: f64,
+    /// Coefficient of determination of the fit.
+    pub r2: f64,
+}
+
+impl LinearFit {
+    /// Evaluate the fitted line.
+    pub fn eval(&self, x: f64) -> f64 {
+        self.slope * x + self.intercept
+    }
+
+    /// Maximum relative error of the fit over the given points (in %).
+    pub fn max_rel_err_pct(&self, xs: &[f64], ys: &[f64]) -> f64 {
+        xs.iter()
+            .zip(ys)
+            .filter(|(_, &y)| y != 0.0)
+            .map(|(&x, &y)| ((self.eval(x) - y) / y).abs() * 100.0)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Ordinary least squares over `(x, y)` pairs. Panics on fewer than 2 points
+/// or zero x-variance.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> LinearFit {
+    assert_eq!(xs.len(), ys.len(), "linear_fit: length mismatch");
+    assert!(xs.len() >= 2, "linear_fit: need at least 2 points");
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    assert!(sxx > 0.0, "linear_fit: zero variance in x");
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let pred: Vec<f64> = xs.iter().map(|&x| slope * x + intercept).collect();
+    let r2 = stats::r_squared(&pred, ys);
+    LinearFit { slope, intercept, r2 }
+}
+
+/// Least squares through the origin: `y ≈ slope·x`.
+pub fn proportional_fit(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let num: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let den: f64 = xs.iter().map(|x| x * x).sum();
+    assert!(den > 0.0, "proportional_fit: degenerate x");
+    num / den
+}
+
+/// Multivariate OLS `y ≈ X·b` via normal equations with Gaussian elimination
+/// (small, well-conditioned systems only — the area-model calibration has
+/// ≤ 6 regressors). `xs[i]` is the i-th row of regressors.
+pub fn multilinear_fit(xs: &[Vec<f64>], ys: &[f64]) -> Vec<f64> {
+    assert_eq!(xs.len(), ys.len());
+    assert!(!xs.is_empty());
+    let k = xs[0].len();
+    assert!(xs.iter().all(|r| r.len() == k), "ragged design matrix");
+    assert!(xs.len() >= k, "underdetermined system");
+    // Normal equations A = XᵀX (k×k), b = Xᵀy.
+    let mut a = vec![vec![0.0f64; k]; k];
+    let mut b = vec![0.0f64; k];
+    for (row, &y) in xs.iter().zip(ys) {
+        for i in 0..k {
+            b[i] += row[i] * y;
+            for j in 0..k {
+                a[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    solve_dense(&mut a, &mut b);
+    b
+}
+
+/// In-place Gaussian elimination with partial pivoting; solution left in `b`.
+fn solve_dense(a: &mut [Vec<f64>], b: &mut [f64]) {
+    let n = b.len();
+    for col in 0..n {
+        // Pivot.
+        let piv = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        assert!(a[piv][col].abs() > 1e-12, "singular normal matrix");
+        a.swap(col, piv);
+        b.swap(col, piv);
+        // Eliminate below.
+        for row in col + 1..n {
+            let f = a[row][col] / a[col][col];
+            for j in col..n {
+                a[row][j] -= f * a[col][j];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    // Back-substitute.
+    for col in (0..n).rev() {
+        let mut acc = b[col];
+        for j in col + 1..n {
+            acc -= a[col][j] * b[j];
+        }
+        b[col] = acc / a[col][col];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line_recovered() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 2.5 * x + 1.0).collect();
+        let fit = linear_fit(&xs, &ys);
+        assert!((fit.slope - 2.5).abs() < 1e-12);
+        assert!((fit.intercept - 1.0).abs() < 1e-12);
+        assert!((fit.r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noisy_line_close() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        // deterministic "noise"
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| 3.0 * x - 5.0 + ((x * 12.9898).sin() * 0.5))
+            .collect();
+        let fit = linear_fit(&xs, &ys);
+        assert!((fit.slope - 3.0).abs() < 0.01);
+        assert!((fit.intercept + 5.0).abs() < 0.5);
+        assert!(fit.r2 > 0.999);
+    }
+
+    #[test]
+    fn eval_and_max_err() {
+        let fit = LinearFit { slope: 2.0, intercept: 0.0, r2: 1.0 };
+        assert_eq!(fit.eval(3.0), 6.0);
+        let err = fit.max_rel_err_pct(&[1.0, 2.0], &[2.0, 5.0]);
+        assert!((err - 20.0).abs() < 1e-12); // 4 vs 5 -> 20%
+    }
+
+    #[test]
+    fn proportional_recovers_slope() {
+        let xs = [1.0, 2.0, 4.0];
+        let ys = [3.0, 6.0, 12.0];
+        assert!((proportional_fit(&xs, &ys) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multilinear_exact() {
+        // y = 2*x0 + 3*x1 + 4
+        let xs = vec![
+            vec![1.0, 0.0, 1.0],
+            vec![0.0, 1.0, 1.0],
+            vec![1.0, 1.0, 1.0],
+            vec![2.0, 3.0, 1.0],
+        ];
+        let ys = vec![6.0, 7.0, 9.0, 17.0];
+        let b = multilinear_fit(&xs, &ys);
+        assert!((b[0] - 2.0).abs() < 1e-9);
+        assert!((b[1] - 3.0).abs() < 1e-9);
+        assert!((b[2] - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn degenerate_x_panics() {
+        linear_fit(&[1.0, 1.0], &[2.0, 3.0]);
+    }
+}

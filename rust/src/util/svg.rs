@@ -1,0 +1,298 @@
+//! Minimal SVG scatter/line plot writer for the report generators. Each paper
+//! figure is emitted both as CSV (data) and SVG (visual) under `reports/`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Point marker style.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Marker {
+    Circle,
+    Square,
+    Cross,
+}
+
+/// A plotted series (scatter, optionally connected by a polyline).
+#[derive(Clone, Debug)]
+pub struct SvgSeries {
+    pub name: String,
+    pub color: String,
+    pub marker: Marker,
+    pub connect: bool,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// A simple 2-D chart.
+pub struct SvgPlot {
+    pub title: String,
+    pub xlabel: String,
+    pub ylabel: String,
+    pub width: f64,
+    pub height: f64,
+    pub series: Vec<SvgSeries>,
+    /// Optional log-scale x axis (used by Fig 2's wide size sweeps).
+    pub logx: bool,
+}
+
+const MARGIN_L: f64 = 64.0;
+const MARGIN_R: f64 = 16.0;
+const MARGIN_T: f64 = 32.0;
+const MARGIN_B: f64 = 48.0;
+
+impl SvgPlot {
+    pub fn new(title: &str, xlabel: &str, ylabel: &str) -> SvgPlot {
+        SvgPlot {
+            title: title.to_string(),
+            xlabel: xlabel.to_string(),
+            ylabel: ylabel.to_string(),
+            width: 640.0,
+            height: 420.0,
+            series: Vec::new(),
+            logx: false,
+        }
+    }
+
+    pub fn series(
+        &mut self,
+        name: &str,
+        color: &str,
+        marker: Marker,
+        connect: bool,
+        points: Vec<(f64, f64)>,
+    ) -> &mut Self {
+        self.series.push(SvgSeries {
+            name: name.to_string(),
+            color: color.to_string(),
+            marker,
+            connect,
+            points,
+        });
+        self
+    }
+
+    fn tx(&self, x: f64, xmin: f64, xmax: f64) -> f64 {
+        let (x, xmin, xmax) = if self.logx {
+            (x.ln(), xmin.ln(), xmax.ln())
+        } else {
+            (x, xmin, xmax)
+        };
+        MARGIN_L + (x - xmin) / (xmax - xmin) * (self.width - MARGIN_L - MARGIN_R)
+    }
+
+    fn ty(&self, y: f64, ymin: f64, ymax: f64) -> f64 {
+        self.height - MARGIN_B - (y - ymin) / (ymax - ymin) * (self.height - MARGIN_T - MARGIN_B)
+    }
+
+    /// Render the SVG document.
+    pub fn render(&self) -> String {
+        let all: Vec<(f64, f64)> =
+            self.series.iter().flat_map(|s| s.points.iter().copied()).collect();
+        let (mut xmin, mut xmax, mut ymin, mut ymax) =
+            (f64::INFINITY, f64::NEG_INFINITY, f64::INFINITY, f64::NEG_INFINITY);
+        for &(x, y) in &all {
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+        if all.is_empty() {
+            xmin = 0.0;
+            xmax = 1.0;
+            ymin = 0.0;
+            ymax = 1.0;
+        }
+        if xmin == xmax {
+            xmax = xmin + 1.0;
+        }
+        if ymin == ymax {
+            ymax = ymin + 1.0;
+        }
+        // pad y a little
+        let ypad = (ymax - ymin) * 0.05;
+        ymin -= ypad;
+        ymax += ypad;
+
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" viewBox="0 0 {w} {h}">"#,
+            w = self.width,
+            h = self.height
+        );
+        s.push_str("<rect width=\"100%\" height=\"100%\" fill=\"white\"/>");
+        // Title + axis labels.
+        let _ = write!(
+            s,
+            r#"<text x="{}" y="20" font-family="sans-serif" font-size="14" text-anchor="middle">{}</text>"#,
+            self.width / 2.0,
+            esc(&self.title)
+        );
+        let _ = write!(
+            s,
+            r#"<text x="{}" y="{}" font-family="sans-serif" font-size="12" text-anchor="middle">{}</text>"#,
+            self.width / 2.0,
+            self.height - 10.0,
+            esc(&self.xlabel)
+        );
+        let _ = write!(
+            s,
+            r#"<text x="14" y="{}" font-family="sans-serif" font-size="12" text-anchor="middle" transform="rotate(-90 14 {})">{}</text>"#,
+            self.height / 2.0,
+            self.height / 2.0,
+            esc(&self.ylabel)
+        );
+        // Axes box + ticks.
+        let _ = write!(
+            s,
+            r#"<rect x="{}" y="{}" width="{}" height="{}" fill="none" stroke="black" stroke-width="1"/>"#,
+            MARGIN_L,
+            MARGIN_T,
+            self.width - MARGIN_L - MARGIN_R,
+            self.height - MARGIN_T - MARGIN_B
+        );
+        for i in 0..=4 {
+            let fx = xmin + (xmax - xmin) * i as f64 / 4.0;
+            let fy = ymin + (ymax - ymin) * i as f64 / 4.0;
+            let px = MARGIN_L + (self.width - MARGIN_L - MARGIN_R) * i as f64 / 4.0;
+            let py = self.ty(fy, ymin, ymax);
+            let _ = write!(
+                s,
+                r#"<text x="{px}" y="{}" font-family="sans-serif" font-size="10" text-anchor="middle">{}</text>"#,
+                self.height - MARGIN_B + 14.0,
+                fmt_tick(if self.logx { (xmin.ln() + (xmax.ln() - xmin.ln()) * i as f64 / 4.0).exp() } else { fx })
+            );
+            let _ = write!(
+                s,
+                r#"<text x="{}" y="{}" font-family="sans-serif" font-size="10" text-anchor="end">{}</text>"#,
+                MARGIN_L - 6.0,
+                py + 3.0,
+                fmt_tick(fy)
+            );
+        }
+        // Series.
+        for ser in &self.series {
+            if ser.connect && ser.points.len() > 1 {
+                let mut d = String::new();
+                let mut pts = ser.points.clone();
+                pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                for (i, &(x, y)) in pts.iter().enumerate() {
+                    let _ = write!(
+                        d,
+                        "{}{:.2},{:.2} ",
+                        if i == 0 { "M" } else { "L" },
+                        self.tx(x, xmin, xmax),
+                        self.ty(y, ymin, ymax)
+                    );
+                }
+                let _ = write!(
+                    s,
+                    r#"<path d="{}" fill="none" stroke="{}" stroke-width="1.5"/>"#,
+                    d.trim_end(),
+                    ser.color
+                );
+            }
+            for &(x, y) in &ser.points {
+                let (px, py) = (self.tx(x, xmin, xmax), self.ty(y, ymin, ymax));
+                match ser.marker {
+                    Marker::Circle => {
+                        let _ = write!(
+                            s,
+                            r#"<circle cx="{px:.2}" cy="{py:.2}" r="2.5" fill="{}" fill-opacity="0.7"/>"#,
+                            ser.color
+                        );
+                    }
+                    Marker::Square => {
+                        let _ = write!(
+                            s,
+                            r#"<rect x="{:.2}" y="{:.2}" width="5" height="5" fill="{}"/>"#,
+                            px - 2.5,
+                            py - 2.5,
+                            ser.color
+                        );
+                    }
+                    Marker::Cross => {
+                        let _ = write!(
+                            s,
+                            r#"<path d="M{:.2},{:.2}L{:.2},{:.2}M{:.2},{:.2}L{:.2},{:.2}" stroke="{}" stroke-width="1.5"/>"#,
+                            px - 3.0, py - 3.0, px + 3.0, py + 3.0,
+                            px - 3.0, py + 3.0, px + 3.0, py - 3.0,
+                            ser.color
+                        );
+                    }
+                }
+            }
+        }
+        // Legend.
+        let mut ly = MARGIN_T + 12.0;
+        for ser in &self.series {
+            let _ = write!(
+                s,
+                r#"<circle cx="{}" cy="{}" r="3" fill="{}"/><text x="{}" y="{}" font-family="sans-serif" font-size="11">{}</text>"#,
+                MARGIN_L + 10.0,
+                ly - 3.0,
+                ser.color,
+                MARGIN_L + 18.0,
+                ly,
+                esc(&ser.name)
+            );
+            ly += 14.0;
+        }
+        s.push_str("</svg>");
+        s
+    }
+
+    /// Write the rendered SVG to a file, creating parent directories.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.render())
+    }
+}
+
+fn fmt_tick(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 1000.0 || v.abs() < 0.01 {
+        format!("{v:.1e}")
+    } else if v.fract().abs() < 1e-9 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+fn esc(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_valid_looking_svg() {
+        let mut p = SvgPlot::new("T", "x", "y");
+        p.series("a", "#1f77b4", Marker::Circle, false, vec![(0.0, 1.0), (2.0, 3.0)]);
+        p.series("fit", "#d62728", Marker::Square, true, vec![(0.0, 1.0), (2.0, 3.0)]);
+        let s = p.render();
+        assert!(s.starts_with("<svg"));
+        assert!(s.ends_with("</svg>"));
+        assert!(s.contains("<circle"));
+        assert!(s.contains("<path"));
+        assert!(s.matches("fill-opacity").count() >= 2);
+    }
+
+    #[test]
+    fn empty_plot_renders() {
+        let p = SvgPlot::new("empty", "x", "y");
+        let s = p.render();
+        assert!(s.contains("</svg>"));
+    }
+
+    #[test]
+    fn title_escaped() {
+        let p = SvgPlot::new("a < b & c", "x", "y");
+        assert!(p.render().contains("a &lt; b &amp; c"));
+    }
+}

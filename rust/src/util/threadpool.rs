@@ -1,0 +1,206 @@
+//! Scoped data parallelism without `rayon`.
+//!
+//! The DSE coordinator fans thousands of independent inner optimization
+//! problems across cores. [`parallel_map`] gives an order-preserving parallel
+//! map with work-stealing via a shared atomic cursor; [`Pool`] is a small
+//! persistent worker pool for long-lived coordinator jobs.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Number of worker threads to use by default: all available cores, capped to
+/// the number of items where relevant.
+pub fn default_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Order-preserving parallel map over `items` using `nthreads` OS threads.
+///
+/// `f` must be `Sync` (it is shared by reference across workers). Items are
+/// claimed through a shared atomic index, so uneven per-item cost balances
+/// automatically. With `nthreads <= 1` this degrades to a plain serial map.
+pub fn parallel_map<T, R, F>(items: &[T], nthreads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let nthreads = nthreads.max(1).min(items.len());
+    if nthreads == 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    let slots_ptr = SendPtr(slots.as_mut_ptr());
+    thread::scope(|scope| {
+        for _ in 0..nthreads {
+            let cursor = &cursor;
+            let f = &f;
+            let slots_ptr = &slots_ptr;
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                // SAFETY: each index i is claimed by exactly one worker, and
+                // `slots` outlives the scope; distinct workers write disjoint
+                // slots.
+                unsafe {
+                    *slots_ptr.0.add(i) = Some(r);
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.expect("worker missed a slot")).collect()
+}
+
+/// A raw pointer wrapper that asserts cross-thread sendability for the
+/// disjoint-slot write pattern above.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A small persistent worker pool (FIFO). Jobs are arbitrary closures; results
+/// travel back through whatever channel the caller closes over.
+pub struct Pool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+impl Pool {
+    /// Spawn a pool with `n` workers (`n >= 1`).
+    pub fn new(n: usize) -> Pool {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let queued = Arc::clone(&queued);
+                thread::spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => {
+                            job();
+                            queued.fetch_sub(1, Ordering::Release);
+                        }
+                        Err(_) => break, // sender dropped -> shut down
+                    }
+                })
+            })
+            .collect();
+        Pool { tx: Some(tx), workers, queued }
+    }
+
+    /// Enqueue a job.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.queued.fetch_add(1, Ordering::Acquire);
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(f))
+            .expect("pool workers gone");
+    }
+
+    /// Number of jobs submitted but not yet finished.
+    pub fn pending(&self) -> usize {
+        self.queued.load(Ordering::Acquire)
+    }
+
+    /// Block until all submitted jobs have completed.
+    pub fn wait_idle(&self) {
+        while self.pending() > 0 {
+            thread::yield_now();
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn map_preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = parallel_map(&items, 8, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_serial_path() {
+        let items = vec![1, 2, 3];
+        assert_eq!(parallel_map(&items, 1, |&x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn map_empty() {
+        let items: Vec<u32> = vec![];
+        assert!(parallel_map(&items, 4, |&x| x).is_empty());
+    }
+
+    #[test]
+    fn map_uneven_work() {
+        // Items with wildly different costs still return correct results.
+        let items: Vec<u64> = (0..64).collect();
+        let out = parallel_map(&items, 8, |&x| {
+            let mut acc = 0u64;
+            for i in 0..(x * 1000) {
+                acc = acc.wrapping_add(i);
+            }
+            (x, acc).0
+        });
+        assert_eq!(out, items);
+    }
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = Pool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_drop_joins() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = Pool::new(2);
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop waits for workers
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+}

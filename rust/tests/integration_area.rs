@@ -1,0 +1,59 @@
+//! Integration: Cacti-like estimator → sweeps → area model → validation,
+//! exercised as one pipeline (E1 + E2).
+
+use codesign::area::calibrate::{calibrate_maxwell, GTX980_DIE_MM2, TITANX_DIE_MM2};
+use codesign::area::{AreaModel, HwParams};
+use codesign::cacti::calibrate::PAPER_TARGETS;
+
+#[test]
+fn full_calibration_pipeline_reproduces_paper_coefficients() {
+    let cal = calibrate_maxwell();
+    // β within 5% of the paper's published Cacti fits, per memory type.
+    for (sweep, &(name, beta_t, _)) in cal.sweeps.iter().zip(PAPER_TARGETS.iter()) {
+        let err = ((sweep.beta() - beta_t) / beta_t).abs();
+        assert!(err < 0.05, "{name}: β {} vs paper {beta_t} ({:.1}%)", sweep.beta(), err * 100.0);
+        assert!(sweep.fit.r2 > 0.99, "{name}: poor fit r²={}", sweep.fit.r2);
+    }
+    // Die-area predictions.
+    assert!((cal.gtx980_pred_mm2 - GTX980_DIE_MM2).abs() / GTX980_DIE_MM2 < 0.04);
+    assert!((cal.titanx_pred_mm2 - TITANX_DIE_MM2).abs() / TITANX_DIE_MM2 < 0.045);
+}
+
+#[test]
+fn calibrated_model_close_to_published_constants_end_to_end() {
+    // Assemble a model from our own calibration and compare the totals it
+    // produces with the model built from the paper's published constants.
+    let cal = calibrate_maxwell();
+    let ours = AreaModel::new(cal.coeffs);
+    let paper = AreaModel::paper();
+    for hw in [
+        HwParams::gtx980(),
+        HwParams::titanx(),
+        HwParams::gtx980().without_caches(),
+        HwParams { n_sm: 8, n_v: 512, m_sm_kb: 192.0, ..HwParams::gtx980().without_caches() },
+    ] {
+        let a = ours.area_mm2(&hw);
+        let b = paper.area_mm2(&hw);
+        assert!(
+            ((a - b) / b).abs() < 0.05,
+            "{}: ours {a:.1} vs paper-constants {b:.1}",
+            hw.label()
+        );
+    }
+}
+
+#[test]
+fn paper_design_space_areas_are_consistent() {
+    // Every Table II architecture must price out within the paper's stated
+    // 425–450 mm² band (±10% tolerance for their rounding).
+    use codesign::report::table2::PAPER_TABLE2;
+    let model = AreaModel::paper();
+    for &(id, n_sm, n_v, m_sm, area, _) in &PAPER_TABLE2 {
+        let hw = HwParams { n_sm, n_v, r_vu_kb: 2.0, m_sm_kb: m_sm, l1_smpair_kb: 0.0, l2_kb: 0.0 };
+        let a = model.area_mm2(&hw);
+        assert!(
+            ((a - area) / area).abs() < 0.10,
+            "{id:?}: our model prices paper config at {a:.0}, paper says {area:.0}"
+        );
+    }
+}

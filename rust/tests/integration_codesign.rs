@@ -1,0 +1,145 @@
+//! Integration: the codesign engine end to end on a reduced space —
+//! qualitative reproduction of every §V claim at test scale.
+
+use codesign::area::AreaModel;
+use codesign::codesign::allocation::{allocation_points, dispersion};
+use codesign::codesign::cacheless::cacheless_comparison;
+use codesign::codesign::scenario::{run, Scenario};
+use codesign::codesign::sensitivity::best_for_benchmark;
+use codesign::coordinator::Coordinator;
+use codesign::stencil::defs::StencilId;
+use codesign::timemodel::TimeModel;
+use std::sync::OnceLock;
+
+fn quick_scenarios() -> (&'static Scenario, &'static Scenario) {
+    static CELL: OnceLock<(Scenario, Scenario)> = OnceLock::new();
+    let (a, b) = CELL.get_or_init(|| {
+        let mut s2 = Scenario::quick(Scenario::paper_2d(), 8);
+        let mut s3 = Scenario::quick(Scenario::paper_3d(), 3);
+        // The default quick space caps n_SM at 16, which cannot out-perform
+        // the 24-SM Titan X; the §V-A claims need the full n_SM range.
+        for s in [&mut s2, &mut s3] {
+            s.space.n_sm_max = 32;
+        }
+        (s2, s3)
+    });
+    (a, b)
+}
+
+fn results() -> &'static (
+    codesign::codesign::scenario::ScenarioResult,
+    codesign::codesign::scenario::ScenarioResult,
+) {
+    static CELL: OnceLock<(
+        codesign::codesign::scenario::ScenarioResult,
+        codesign::codesign::scenario::ScenarioResult,
+    )> = OnceLock::new();
+    CELL.get_or_init(|| {
+        let (s2, s3) = quick_scenarios();
+        let am = AreaModel::paper();
+        let tm = TimeModel::maxwell();
+        (run(s2, &am, &tm), run(s3, &am, &tm))
+    })
+}
+
+#[test]
+fn claim_optimized_designs_beat_stock_at_equal_area() {
+    // §V-A headline: substantial same-area gains over both references, in
+    // both workload classes.
+    let (r2d, r3d) = results();
+    for r in [r2d, r3d] {
+        for (name, impr, _) in &r.stats.vs_reference {
+            assert!(
+                *impr > 15.0,
+                "{}/{name}: improvement {impr}% too small",
+                r.scenario_name
+            );
+        }
+    }
+}
+
+#[test]
+fn claim_pareto_prunes_design_space_to_few_percent() {
+    // Fig 3: "only about 1% … worth exploring further".
+    let (r2d, r3d) = results();
+    for r in [r2d, r3d] {
+        let frac = r.pareto.len() as f64 / r.points.len() as f64;
+        assert!(frac < 0.10, "{}: pareto fraction {frac}", r.scenario_name);
+    }
+}
+
+#[test]
+fn claim_cacheless_gain_smaller_than_full_budget_gain() {
+    // §V-A: most of the win is cache deletion.
+    let (r2d, _) = results();
+    let rows = cacheless_comparison(r2d, &AreaModel::paper());
+    let g = rows.iter().find(|r| r.reference == "gtx980").unwrap();
+    assert!(g.improvement_pct < g.full_budget_improvement_pct);
+    assert!(g.improvement_pct > -5.0, "cache-less gain {} suspiciously negative", g.improvement_pct);
+}
+
+#[test]
+fn claim_3d_needs_more_shared_memory_than_2d() {
+    // Table II's strongest signal: small scratchpads cripple the 3-D
+    // stencils but not the 2-D ones. Compare the best small-shm design
+    // against the per-class optimum at equal area.
+    let (r2d, r3d) = results();
+    let penalty = |r: &codesign::codesign::scenario::ScenarioResult| {
+        let best = r.points.iter().map(|p| p.gflops).fold(0.0, f64::max);
+        let best_small = r
+            .points
+            .iter()
+            .filter(|p| p.hw.m_sm_kb <= 24.0)
+            .map(|p| p.gflops)
+            .fold(0.0, f64::max);
+        best_small / best
+    };
+    let p2 = penalty(r2d);
+    let p3 = penalty(r3d);
+    assert!(
+        p3 < p2,
+        "3-D should suffer more from tiny scratchpads: 2d ratio {p2:.3}, 3d ratio {p3:.3}"
+    );
+}
+
+#[test]
+fn claim_pareto_designs_cluster_in_allocation_space() {
+    let (r2d, _) = results();
+    let pts = allocation_points(r2d, &AreaModel::paper());
+    let all: Vec<(f64, f64)> = pts.iter().map(|p| (p.pct_memory, p.pct_cores)).collect();
+    let front: Vec<(f64, f64)> =
+        pts.iter().filter(|p| p.is_pareto).map(|p| (p.pct_memory, p.pct_cores)).collect();
+    assert!(dispersion(&front) < dispersion(&all));
+}
+
+#[test]
+fn claim_per_benchmark_optima_differ() {
+    let (r2d, r3d) = results();
+    let (s2, s3) = quick_scenarios();
+    let band = (300.0, 460.0);
+    let rows: Vec<_> = [
+        best_for_benchmark(r2d, &s2.workload, StencilId::Jacobi2D, band),
+        best_for_benchmark(r2d, &s2.workload, StencilId::Gradient2D, band),
+        best_for_benchmark(r3d, &s3.workload, StencilId::Heat3D, band),
+    ]
+    .into_iter()
+    .flatten()
+    .collect();
+    assert_eq!(rows.len(), 3);
+    // Achieved GFLOP/s must differ across benchmarks (operation mixes differ).
+    assert!((rows[0].gflops - rows[1].gflops).abs() > 1.0);
+}
+
+#[test]
+fn coordinator_reweighting_is_free_and_consistent() {
+    let (s2, _) = quick_scenarios();
+    let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+    let first = coord.run_scenario(s2);
+    let misses_after_first = coord.cache.len();
+    // Same scenario again: zero new instances.
+    let again = coord.run_scenario(s2);
+    assert_eq!(coord.cache.len(), misses_after_first);
+    for (a, b) in first.result.points.iter().zip(&again.result.points) {
+        assert_eq!(a.gflops, b.gflops);
+    }
+}

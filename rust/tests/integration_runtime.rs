@@ -1,0 +1,154 @@
+//! End-to-end runtime integration: load the AOT artifacts produced by
+//! `make artifacts`, execute them on the PJRT CPU client, check numerics
+//! against an independent Rust-side reference sweep, and run the measured-
+//! mode C_iter pipeline.
+//!
+//! Requires `artifacts/` (run `make artifacts`); tests skip gracefully with
+//! a message when it is absent so `cargo test` works in a fresh checkout.
+
+use codesign::runtime::{measure_citer, Engine, Manifest};
+use codesign::stencil::defs::StencilId;
+use codesign::timemodel::CIterTable;
+
+fn engine_or_skip() -> Option<Engine> {
+    match Manifest::load_default() {
+        Ok(m) => Some(Engine::new(m).expect("PJRT CPU client")),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+/// Independent Rust reference: T steps of a 2-D stencil on a padded array.
+fn ref_sweep_2d(
+    name: StencilId,
+    padded: &[f32],
+    p1: usize,
+    p2: usize,
+    t_steps: usize,
+) -> Vec<f32> {
+    let mut a = padded.to_vec();
+    for _ in 0..t_steps {
+        let mut next = a.clone();
+        for i in 1..p1 - 1 {
+            for j in 1..p2 - 1 {
+                let c = a[i * p2 + j];
+                let n = a[(i - 1) * p2 + j];
+                let s = a[(i + 1) * p2 + j];
+                let w = a[i * p2 + j - 1];
+                let e = a[i * p2 + j + 1];
+                next[i * p2 + j] = match name {
+                    StencilId::Jacobi2D => 0.25 * (n + s + w + e),
+                    StencilId::Heat2D => 0.5 * c + 0.125 * (n + s + w + e),
+                    StencilId::Laplacian2D => n + s + w + e - 4.0 * c,
+                    StencilId::Gradient2D => {
+                        let gx = 0.5 * (e - w);
+                        let gy = 0.5 * (s - n);
+                        (gx * gx + gy * gy).sqrt()
+                    }
+                    _ => unreachable!(),
+                };
+            }
+        }
+        a = next;
+    }
+    a
+}
+
+#[test]
+fn manifest_covers_all_six_stencils() {
+    let Some(engine) = engine_or_skip() else { return };
+    for id in [
+        StencilId::Jacobi2D,
+        StencilId::Heat2D,
+        StencilId::Laplacian2D,
+        StencilId::Gradient2D,
+        StencilId::Heat3D,
+        StencilId::Laplacian3D,
+    ] {
+        assert!(
+            !engine.manifest().for_stencil(id).is_empty(),
+            "no artifact for {id:?}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_executes_and_matches_rust_reference() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    for id in [StencilId::Jacobi2D, StencilId::Heat2D, StencilId::Gradient2D] {
+        let entry = engine.manifest().for_stencil(id).last().copied().cloned().unwrap();
+        assert_eq!(entry.shape.len(), 2);
+        let (p1, p2) = (entry.shape[0] + 2, entry.shape[1] + 2);
+        let input = Engine::random_input(&entry, 123);
+        let run = engine.run_sweep(&entry.name, &input).expect("sweep");
+        assert_eq!(run.output.len(), input.len());
+        let expected = ref_sweep_2d(id, &input, p1, p2, entry.t_steps);
+        let mut max_err = 0f32;
+        for (a, b) in run.output.iter().zip(&expected) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(
+            max_err < 1e-4,
+            "{}: PJRT vs rust reference max abs err {max_err}",
+            entry.name
+        );
+    }
+}
+
+#[test]
+fn repeated_execution_is_deterministic_and_cached() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let entry = engine
+        .manifest()
+        .for_stencil(StencilId::Laplacian2D)
+        .last()
+        .copied()
+        .cloned()
+        .unwrap();
+    let input = Engine::random_input(&entry, 9);
+    let a = engine.run_sweep(&entry.name, &input).unwrap();
+    let b = engine.run_sweep(&entry.name, &input).unwrap();
+    assert_eq!(a.output, b.output);
+}
+
+#[test]
+fn three_d_artifact_executes() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let entry = engine
+        .manifest()
+        .for_stencil(StencilId::Heat3D)
+        .last()
+        .copied()
+        .cloned()
+        .unwrap();
+    let input = Engine::random_input(&entry, 5);
+    let run = engine.run_sweep(&entry.name, &input).unwrap();
+    assert_eq!(run.output.len(), entry.padded_len());
+    // Heat step is a convex average of bounded values: output stays bounded.
+    assert!(run.output.iter().all(|x| x.abs() <= 1.0 + 1e-5));
+    // And not identically zero.
+    assert!(run.output.iter().any(|&x| x != 0.0));
+}
+
+#[test]
+fn measured_citer_pipeline() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    let table = measure_citer(&mut engine, 2).expect("measure");
+    let paper = CIterTable::paper();
+    // Anchor: Jacobi-2D equals its paper value exactly.
+    let j = table.get(StencilId::Jacobi2D);
+    assert!((j - paper.get(StencilId::Jacobi2D)).abs() < 1e-9);
+    // All entries positive and within a plausible band of the anchor.
+    for id in [
+        StencilId::Heat2D,
+        StencilId::Laplacian2D,
+        StencilId::Gradient2D,
+        StencilId::Heat3D,
+        StencilId::Laplacian3D,
+    ] {
+        let c = table.get(id);
+        assert!(c > 0.0 && c < 50.0 * j, "{id:?}: C_iter {c}");
+    }
+}

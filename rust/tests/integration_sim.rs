@@ -1,0 +1,77 @@
+//! Integration: the fluid simulator as ground truth for the analytical
+//! model (E10), beyond the unit-level checks.
+
+use codesign::area::HwParams;
+use codesign::sim::run::{build_wavefronts, simulate};
+use codesign::sim::validate::{kendall_tau, validate_sweep};
+use codesign::stencil::defs::{Stencil, StencilId};
+use codesign::stencil::workload::ProblemSize;
+use codesign::timemodel::talg::SoftwareParams;
+use codesign::timemodel::tiling::TileSizes;
+use codesign::timemodel::TimeModel;
+
+#[test]
+fn validation_sweep_is_tight_enough_to_rank_designs() {
+    let rep = validate_sweep(&TimeModel::maxwell());
+    assert!(rep.cases.len() >= 20);
+    assert!(rep.mape_pct < 40.0, "MAPE {}", rep.mape_pct);
+    assert!(rep.kendall_tau > 0.7, "tau {}", rep.kendall_tau);
+    // No single case catastrophically wrong (order-of-magnitude).
+    for c in &rep.cases {
+        assert!(
+            c.rel_err_pct().abs() < 120.0,
+            "{}: {}% model-vs-sim",
+            c.label,
+            c.rel_err_pct()
+        );
+    }
+}
+
+#[test]
+fn simulator_work_accounting_matches_problem_size() {
+    let st = Stencil::get(StencilId::Heat2D);
+    let size = ProblemSize::d2(512, 128);
+    let sw = SoftwareParams::new(TileSizes::d2(32, 64, 8), 2);
+    let wfs = build_wavefronts(st, &size, &sw);
+    let total_lane_cycles: f64 =
+        wfs.iter().flatten().map(|b| b.compute_lane_cycles).sum();
+    let expected = size.points() * st.c_iter_cycles;
+    // The clipped-tile schedule over-covers the domain by up to ~2·avg_w per
+    // band at the S1 edges (both phases own a boundary tile); on this small
+    // 512-wide domain that is <10%. It must never under-cover.
+    let ratio = total_lane_cycles / expected;
+    assert!(
+        (1.0..1.10).contains(&ratio),
+        "lane-cycles {total_lane_cycles} vs expected {expected} (ratio {ratio})"
+    );
+}
+
+#[test]
+fn simulator_ranks_hardware_like_the_model() {
+    // Sweep n_V at fixed everything else; both should agree on ordering.
+    let model = TimeModel::maxwell();
+    let st = Stencil::get(StencilId::Jacobi2D);
+    let size = ProblemSize::d2(1024, 64);
+    let sw = SoftwareParams::new(TileSizes::d2(32, 128, 8), 4);
+    let mut model_t = Vec::new();
+    let mut sim_t = Vec::new();
+    for n_v in [64, 128, 256, 512] {
+        let hw = HwParams { n_v, ..HwParams::gtx980() };
+        model_t.push(model.evaluate(st, &size, &hw, &sw).seconds);
+        sim_t.push(simulate(&model.machine, st, &size, &hw, &sw).seconds);
+    }
+    assert!(kendall_tau(&model_t, &sim_t) >= 0.5, "{model_t:?} vs {sim_t:?}");
+}
+
+#[test]
+fn clipped_schedules_never_exceed_full_tile_blocks() {
+    let st = Stencil::get(StencilId::Heat3D);
+    let size = ProblemSize::d3(96, 24);
+    let sw = SoftwareParams::new(TileSizes::d3(16, 32, 8, 8), 1);
+    for wf in build_wavefronts(st, &size, &sw) {
+        for b in &wf {
+            assert!(b.threads <= (sw.tiles.t_s2 * sw.tiles.t_s3.unwrap()) as f64);
+            assert!(b.load_bytes > 0.0 && b.store_bytes > 0.0);
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Integration: the execution-time model across the full workload grid —
+//! scale sanity, boundedness transitions and C_iter sensitivity.
+
+use codesign::area::HwParams;
+use codesign::stencil::defs::{Stencil, ALL_STENCILS};
+use codesign::stencil::workload::Workload;
+use codesign::timemodel::talg::Bound;
+use codesign::timemodel::{CIterTable, SoftwareParams, TileSizes, TimeModel};
+use codesign::opt::{solve_inner, InnerProblem, SolveOpts};
+
+#[test]
+fn every_workload_entry_is_solvable_on_reference_hardware() {
+    let model = TimeModel::maxwell();
+    for wl in [Workload::uniform_2d(), Workload::uniform_3d()] {
+        for e in &wl.entries {
+            let p = InnerProblem {
+                stencil: *Stencil::get(e.stencil),
+                size: e.size,
+                hw: HwParams::gtx980(),
+            };
+            let sol = solve_inner(&model, &p, &SolveOpts::default())
+                .unwrap_or_else(|| panic!("infeasible: {:?} {}", e.stencil, e.size.label()));
+            assert!(
+                sol.est.gflops > 50.0 && sol.est.gflops < 20_000.0,
+                "{:?} {}: {} GFLOP/s out of scale",
+                e.stencil,
+                e.size.label(),
+                sol.est.gflops
+            );
+        }
+    }
+}
+
+#[test]
+fn gtx980_mix_lands_on_paper_gflops_scale() {
+    // Fig 3 places the GTX 980 around 1000–2000 GFLOP/s on the 2-D mix.
+    let model = TimeModel::maxwell();
+    let wl = Workload::uniform_2d();
+    let sol = codesign::opt::separable::solve_hardware_point(
+        &model,
+        &wl,
+        &CIterTable::paper(),
+        &HwParams::gtx980(),
+        &SolveOpts::default(),
+    );
+    let g = sol.weighted_gflops.unwrap();
+    assert!((800.0..2600.0).contains(&g), "GTX980 2-D mix: {g} GFLOP/s");
+}
+
+#[test]
+fn larger_c_iter_means_slower() {
+    let model = TimeModel::maxwell();
+    let hw = HwParams::gtx980();
+    let sw = SoftwareParams::new(TileSizes::d2(32, 64, 8), 2);
+    let size = codesign::stencil::workload::ProblemSize::d2(4096, 1024);
+    for base in &ALL_STENCILS {
+        if base.is_3d() {
+            continue;
+        }
+        let mut slow = *base;
+        slow.c_iter_cycles *= 2.0;
+        let a = model.evaluate(base, &size, &hw, &sw);
+        let b = model.evaluate(&slow, &size, &hw, &sw);
+        assert!(b.seconds >= a.seconds, "{}", base.name());
+    }
+}
+
+#[test]
+fn boundedness_transitions_with_bandwidth() {
+    // Shrinking per-SM bandwidth must eventually turn a compute-bound
+    // configuration memory-bound, and never speed it up.
+    let mut spec = codesign::timemodel::MachineSpec::maxwell();
+    let hw = HwParams::gtx980();
+    let sw = SoftwareParams::new(TileSizes::d2(32, 64, 16), 2);
+    let size = codesign::stencil::workload::ProblemSize::d2(4096, 1024);
+    let st = Stencil::get(codesign::stencil::defs::StencilId::Jacobi2D);
+    let mut last_seconds = 0.0;
+    let mut saw_memory_bound = false;
+    for bw in [14.0, 3.5, 0.875, 0.22] {
+        spec.mem_bw_per_sm_gbs = bw;
+        let est = TimeModel::new(spec).evaluate(st, &size, &hw, &sw);
+        assert!(est.seconds >= last_seconds);
+        last_seconds = est.seconds;
+        saw_memory_bound |= est.bound == Bound::Memory;
+    }
+    assert!(saw_memory_bound, "never became memory bound at 0.22 GB/s/SM");
+}
+
+#[test]
+fn measured_citer_table_changes_solutions_consistently() {
+    let model = TimeModel::maxwell();
+    let wl = Workload::uniform_2d();
+    let paper = CIterTable::paper();
+    let doubled = paper.scaled(2.0);
+    let a = codesign::opt::separable::solve_hardware_point(
+        &model, &wl, &paper, &HwParams::gtx980(), &SolveOpts::default());
+    let b = codesign::opt::separable::solve_hardware_point(
+        &model, &wl, &doubled, &HwParams::gtx980(), &SolveOpts::default());
+    // Doubling every C_iter must slow the weighted objective, by at most 2x.
+    let (ta, tb) = (a.weighted_seconds.unwrap(), b.weighted_seconds.unwrap());
+    assert!(tb > ta && tb <= 2.0 * ta * 1.0001, "{ta} -> {tb}");
+}

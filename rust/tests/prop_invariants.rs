@@ -1,0 +1,209 @@
+//! Property-based tests over the coordinator-level invariants: Pareto
+//! semantics, optimizer optimality vs brute force, area-model structure,
+//! feasibility-constraint coherence and cache-key identity.
+
+use codesign::area::{AreaModel, HwParams};
+use codesign::codesign::pareto::{best_within_area, pareto_front};
+use codesign::opt::exhaustive::solve_exhaustive;
+use codesign::opt::{solve_inner, InnerProblem, SolveOpts};
+use codesign::stencil::defs::{Stencil, StencilId, ALL_STENCILS};
+use codesign::stencil::workload::ProblemSize;
+use codesign::timemodel::{SoftwareParams, TileSizes, TimeModel};
+use codesign::util::propcheck::{forall, forall_res, Config};
+
+fn random_hw(rng: &mut codesign::util::prng::Rng) -> HwParams {
+    HwParams {
+        n_sm: 2 * rng.range_u64(1, 16) as u32,
+        n_v: 32 * rng.range_u64(1, 32) as u32,
+        r_vu_kb: 2.0,
+        m_sm_kb: *rng.choose(&[12.0, 24.0, 48.0, 96.0, 192.0, 384.0]),
+        l1_smpair_kb: *rng.choose(&[0.0, 24.0, 48.0]),
+        l2_kb: *rng.choose(&[0.0, 1024.0, 2048.0]),
+    }
+}
+
+#[test]
+fn prop_pareto_front_is_sound_and_complete() {
+    forall_res(Config::default().cases(50), |rng| {
+        let n = rng.range_u64(1, 120) as usize;
+        let pts: Vec<(f64, f64)> =
+            (0..n).map(|_| (rng.f64() * 100.0, rng.f64() * 100.0)).collect();
+        let front = pareto_front(&pts);
+        if front.is_empty() {
+            return Err("empty front".into());
+        }
+        let dominates = |a: (f64, f64), b: (f64, f64)| {
+            a.0 <= b.0 && a.1 >= b.1 && (a.0 < b.0 || a.1 > b.1)
+        };
+        for &i in &front {
+            if front.iter().any(|&j| j != i && dominates(pts[j], pts[i])) {
+                return Err(format!("front point {i} dominated"));
+            }
+        }
+        for i in 0..n {
+            if !front.contains(&i)
+                && !front.iter().any(|&j| dominates(pts[j], pts[i]) || pts[j] == pts[i])
+            {
+                return Err(format!("non-front point {i} not dominated"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_best_within_area_consistent_with_front() {
+    forall(Config::default().cases(50), |rng| {
+        let n = rng.range_u64(2, 80) as usize;
+        let pts: Vec<(f64, f64)> =
+            (0..n).map(|_| (rng.f64() * 100.0, rng.f64() * 100.0)).collect();
+        let budget = rng.f64() * 100.0;
+        let front = pareto_front(&pts);
+        match best_within_area(&pts, budget) {
+            None => pts.iter().all(|p| p.0 > budget),
+            Some(i) => {
+                // Best-in-budget is achieved by some front point too.
+                let front_best = front
+                    .iter()
+                    .filter(|&&j| pts[j].0 <= budget)
+                    .map(|&j| pts[j].1)
+                    .fold(f64::NEG_INFINITY, f64::max);
+                (pts[i].1 - front_best).abs() < 1e-12
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_area_model_monotone_and_decomposes() {
+    let model = AreaModel::paper();
+    forall_res(Config::default().cases(100), |rng| {
+        let hw = random_hw(rng);
+        let b = model.breakdown(&hw);
+        if (b.total() - model.area_mm2(&hw)).abs() > 1e-9 {
+            return Err("breakdown does not sum to total".into());
+        }
+        if b.cores_mm2 <= 0.0 || b.overhead_mm2 <= 0.0 {
+            return Err("non-positive component".into());
+        }
+        // Monotone in each dimension.
+        let bigger = HwParams { n_v: hw.n_v + 32, ..hw };
+        if model.area_mm2(&bigger) <= model.area_mm2(&hw) {
+            return Err("not monotone in n_v".into());
+        }
+        let more_shm = HwParams { m_sm_kb: hw.m_sm_kb + 48.0, ..hw };
+        if model.area_mm2(&more_shm) <= model.area_mm2(&hw) {
+            return Err("not monotone in m_sm".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_feasibility_agrees_with_evaluate_checked() {
+    let model = TimeModel::maxwell();
+    forall(Config::default().cases(200), |rng| {
+        let st: &Stencil = rng.choose(&ALL_STENCILS);
+        let hw = random_hw(rng);
+        let tiles = if st.is_3d() {
+            TileSizes::d3(
+                rng.range_u64(1, 128),
+                32 * rng.range_u64(1, 8),
+                rng.range_u64(1, 16),
+                2 * rng.range_u64(1, 32),
+            )
+        } else {
+            TileSizes::d2(rng.range_u64(1, 512), 32 * rng.range_u64(1, 16), 2 * rng.range_u64(1, 48))
+        };
+        let sw = SoftwareParams::new(tiles, rng.range_u64(1, 40) as u32);
+        let size = if st.is_3d() { ProblemSize::d3(256, 64) } else { ProblemSize::d2(4096, 1024) };
+        let feas = model.feasibility(st, &hw, &sw);
+        let checked = model.evaluate_checked(st, &size, &hw, &sw);
+        feas.is_ok() == checked.is_ok()
+    });
+}
+
+#[test]
+fn prop_feasible_estimates_are_finite_and_positive() {
+    let model = TimeModel::maxwell();
+    forall_res(Config::default().cases(300), |rng| {
+        let st: &Stencil = rng.choose(&ALL_STENCILS);
+        let hw = random_hw(rng);
+        let tiles = if st.is_3d() {
+            TileSizes::d3(rng.range_u64(1, 64), 32, rng.range_u64(1, 8), 2 * rng.range_u64(1, 8))
+        } else {
+            TileSizes::d2(rng.range_u64(1, 64), 32 * rng.range_u64(1, 4), 2 * rng.range_u64(1, 8))
+        };
+        let sw = SoftwareParams::new(tiles, rng.range_u64(1, 4) as u32);
+        let size = if st.is_3d() { ProblemSize::d3(128, 32) } else { ProblemSize::d2(2048, 512) };
+        if model.feasibility(st, &hw, &sw).is_err() {
+            return Ok(()); // vacuous
+        }
+        let est = model.evaluate(st, &size, &hw, &sw);
+        if !(est.seconds.is_finite() && est.seconds > 0.0) {
+            return Err(format!("bad seconds {}", est.seconds));
+        }
+        if !(est.gflops.is_finite() && est.gflops > 0.0) {
+            return Err(format!("bad gflops {}", est.gflops));
+        }
+        if est.occupancy <= 0.0 || est.occupancy > 1.0 {
+            return Err(format!("bad occupancy {}", est.occupancy));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_smart_solver_matches_brute_force_on_small_instances() {
+    // The inner solver's grid+refinement must land within 3% of exhaustive
+    // enumeration over the same bounds, on randomized small instances.
+    let model = TimeModel::maxwell();
+    forall_res(Config::default().cases(8), |rng| {
+        let id = *rng.choose(&[StencilId::Jacobi2D, StencilId::Heat2D, StencilId::Laplacian2D]);
+        let s = 256 * rng.range_u64(2, 6);
+        let t = 128 * rng.range_u64(1, 4);
+        let hw = HwParams {
+            n_sm: 2 * rng.range_u64(2, 12) as u32,
+            n_v: 32 * rng.range_u64(2, 12) as u32,
+            m_sm_kb: *rng.choose(&[48.0, 96.0, 192.0]),
+            ..HwParams::gtx980()
+        };
+        let p = InnerProblem { stencil: *Stencil::get(id), size: ProblemSize::d2(s, t), hw };
+        let brute = solve_exhaustive(&model, &p, 96, 256, 1, 24);
+        let smart = solve_inner(&model, &p, &SolveOpts::default());
+        match (brute, smart) {
+            (None, None) => Ok(()),
+            (Some(b), Some(s)) => {
+                if s.est.seconds <= b.est.seconds * 1.03 {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "smart {} vs brute {} on {id:?} {}x{} hw {}",
+                        s.est.seconds,
+                        b.est.seconds,
+                        p.size.s1,
+                        p.size.t,
+                        hw.label()
+                    ))
+                }
+            }
+            (b, s) => Err(format!("feasibility mismatch: brute {:?} smart {:?}", b.is_some(), s.is_some())),
+        }
+    });
+}
+
+#[test]
+fn prop_cache_key_identity() {
+    use codesign::coordinator::CacheKey;
+    forall(Config::default().cases(200), |rng| {
+        let hw1 = random_hw(rng);
+        let hw2 = random_hw(rng);
+        let st: &Stencil = rng.choose(&ALL_STENCILS);
+        let size = if st.is_3d() { ProblemSize::d3(128, 32) } else { ProblemSize::d2(4096, 1024) };
+        let k1 = CacheKey::new(&hw1, st.id, &size);
+        let k1b = CacheKey::new(&hw1, st.id, &size);
+        let k2 = CacheKey::new(&hw2, st.id, &size);
+        let same_relevant = hw1.n_sm == hw2.n_sm && hw1.n_v == hw2.n_v && hw1.m_sm_kb == hw2.m_sm_kb;
+        k1 == k1b && ((k1 == k2) == same_relevant)
+    });
+}
