@@ -25,6 +25,6 @@ pub mod sensitivity;
 pub mod space;
 pub mod tuner;
 
-pub use pareto::pareto_front;
+pub use pareto::{pareto_front, ParetoFront};
 pub use scenario::{DesignEval, Scenario, ScenarioResult};
 pub use space::{enumerate_space, DesignPoint, SpaceSpec};

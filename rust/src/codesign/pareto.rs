@@ -37,6 +37,84 @@ pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
     front
 }
 
+/// Incrementally maintained Pareto front over (area ↓ good, perf ↑ good).
+///
+/// The batched DSE engine streams candidate designs as they are aggregated
+/// and keeps the front current after every insertion instead of re-running
+/// [`pareto_front`] over the full point set per scenario. Entries are kept
+/// strictly increasing in *both* area and perf, so an insert is a binary
+/// search plus one contiguous splice — `O(n)` worst case in the front size
+/// `n` (the splice shifts the tail). That's the right trade here because
+/// fronts stay tiny (~1% of the points, Fig 3); don't reuse this for huge
+/// fronts fed in descending-area order, which degenerates to `Θ(n²)`.
+///
+/// Feeding every point of a slice in index order yields exactly
+/// [`pareto_front`]'s output, ties included (certified by the property test
+/// `prop_incremental_pareto_front_matches_batch`). Coordinates must be
+/// finite (no NaN).
+#[derive(Clone, Debug, Default)]
+pub struct ParetoFront {
+    /// `(area, perf, caller index)`, area strictly ascending, perf strictly
+    /// ascending.
+    entries: Vec<(f64, f64, usize)>,
+}
+
+impl ParetoFront {
+    pub fn new() -> ParetoFront {
+        ParetoFront { entries: Vec::new() }
+    }
+
+    /// Offer one point. Returns `true` if it joined the front (possibly
+    /// evicting now-dominated entries), `false` if an existing entry
+    /// dominates or duplicates it.
+    pub fn insert(&mut self, area: f64, perf: f64, index: usize) -> bool {
+        // Loud like `pareto_front`'s `partial_cmp().unwrap()`: a NaN here
+        // (e.g. an all-zero-weight workload aggregating to 0/0) would
+        // otherwise corrupt the front silently.
+        assert!(
+            area.is_finite() && perf.is_finite(),
+            "ParetoFront requires finite coordinates (got area {area}, perf {perf})"
+        );
+        // First entry with area strictly greater than the candidate's.
+        let pos = self.entries.partition_point(|e| e.0 <= area);
+        if pos > 0 && self.entries[pos - 1].1 >= perf {
+            // The best entry at area ≤ `area` already performs at least as
+            // well: the candidate is dominated (or an exact duplicate, where
+            // the first-seen index is kept, matching `pareto_front`).
+            return false;
+        }
+        // Evict the contiguous run the candidate dominates: an equal-area
+        // predecessor with lower perf, plus every larger-area entry whose
+        // perf does not exceed the candidate's.
+        let start = if pos > 0 && self.entries[pos - 1].0 == area { pos - 1 } else { pos };
+        let mut end = start;
+        while end < self.entries.len() && self.entries[end].1 <= perf {
+            end += 1;
+        }
+        self.entries.splice(start..end, std::iter::once((area, perf, index)));
+        true
+    }
+
+    /// Caller indices of the current front, area-ascending — the same shape
+    /// [`pareto_front`] returns.
+    pub fn indices(&self) -> Vec<usize> {
+        self.entries.iter().map(|e| e.2).collect()
+    }
+
+    /// The `(area, perf, index)` entries, area-ascending.
+    pub fn entries(&self) -> &[(f64, f64, usize)] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
 /// Best performance among points with `area ≤ budget`. Returns the index.
 pub fn best_within_area(points: &[(f64, f64)], budget: f64) -> Option<usize> {
     points
@@ -104,6 +182,53 @@ mod tests {
             assert!(pts[w[0]].0 <= pts[w[1]].0);
             assert!(pts[w[0]].1 < pts[w[1]].1);
         }
+    }
+
+    #[test]
+    fn incremental_front_matches_batch_on_examples() {
+        let cases: Vec<Vec<(f64, f64)>> = vec![
+            vec![(1.0, 1.0), (2.0, 3.0), (3.0, 2.0), (2.5, 3.5), (4.0, 4.0)],
+            vec![(1.0, 1.0), (1.0, 1.0), (1.0, 2.0)],
+            vec![(1.0, 5.0), (1.0, 9.0), (1.0, 7.0)], // equal areas, mixed order
+            vec![(3.0, 1.0), (2.0, 2.0), (1.0, 3.0)], // strictly improving inserts
+            vec![(5.0, 5.0)],
+        ];
+        for pts in cases {
+            let mut inc = ParetoFront::new();
+            for (i, &(a, p)) in pts.iter().enumerate() {
+                inc.insert(a, p, i);
+            }
+            assert_eq!(inc.indices(), pareto_front(&pts), "points {pts:?}");
+            assert_eq!(inc.len(), inc.indices().len());
+        }
+    }
+
+    #[test]
+    fn incremental_front_stays_strictly_sorted() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(4242);
+        let mut inc = ParetoFront::new();
+        for i in 0..2000 {
+            // Quantized coordinates force frequent area/perf ties.
+            let a = rng.range_u64(0, 30) as f64;
+            let p = rng.range_u64(0, 30) as f64;
+            inc.insert(a, p, i);
+            for w in inc.entries().windows(2) {
+                assert!(w[0].0 < w[1].0, "area not strictly ascending");
+                assert!(w[0].1 < w[1].1, "perf not strictly ascending");
+            }
+        }
+        assert!(!inc.is_empty());
+    }
+
+    #[test]
+    fn insert_reports_membership() {
+        let mut inc = ParetoFront::new();
+        assert!(inc.insert(2.0, 2.0, 0));
+        assert!(!inc.insert(3.0, 1.0, 1), "dominated point must be rejected");
+        assert!(!inc.insert(2.0, 2.0, 2), "duplicate keeps the first index");
+        assert!(inc.insert(1.0, 3.0, 3), "dominating point evicts");
+        assert_eq!(inc.indices(), vec![3]);
     }
 
     #[test]

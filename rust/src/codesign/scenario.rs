@@ -72,6 +72,35 @@ impl Scenario {
         Scenario { name: "3d".into(), workload: Workload::uniform_3d(), ..Scenario::paper_2d() }
     }
 
+    /// This scenario under a new display name (batch outputs are keyed by
+    /// name, so give every batched variant a distinct one).
+    pub fn named(mut self, name: &str) -> Scenario {
+        self.name = name.to_string();
+        self
+    }
+
+    /// This scenario restricted to designs within `mm2` of silicon — a
+    /// tighter budget enumerates a subset of the same grid, so a batch
+    /// answers it from the shared sweep without new inner solves.
+    pub fn with_area_budget(mut self, mm2: f64) -> Scenario {
+        self.space = self.space.with_budget(mm2);
+        self
+    }
+
+    /// This scenario under a different workload (re-weighting, per-stencil
+    /// subset, …). Workloads over the same entry instances share all inner
+    /// solutions in a batch.
+    pub fn with_workload(mut self, workload: Workload) -> Scenario {
+        self.workload = workload;
+        self
+    }
+
+    /// This scenario with an explicit worker-thread count.
+    pub fn with_threads(mut self, threads: usize) -> Scenario {
+        self.threads = threads.max(1);
+        self
+    }
+
     /// Reduced scenario for tests / quick runs: small space, thinned
     /// workload (every `stride`-th size instance).
     pub fn quick(base: Scenario, stride: usize) -> Scenario {

@@ -34,6 +34,14 @@ impl SpaceSpec {
     pub fn small() -> SpaceSpec {
         SpaceSpec { n_sm_max: 16, n_v_max: 512, m_sm_max_kb: 192.0, max_area_mm2: 650.0, r_vu_kb: 2.0 }
     }
+
+    /// This space under a tighter (or looser) total-area budget. On the same
+    /// grid bounds a smaller budget enumerates a subset of the points, which
+    /// the batched coordinator serves without any new inner solves.
+    pub fn with_budget(mut self, max_area_mm2: f64) -> SpaceSpec {
+        self.max_area_mm2 = max_area_mm2;
+        self
+    }
 }
 
 /// One enumerated hardware candidate with its modelled area.

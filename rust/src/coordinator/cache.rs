@@ -3,6 +3,17 @@
 //! Keyed by the full (hardware, stencil, size) instance. Sharded mutexes
 //! keep contention negligible under the worker pool (the inner solve costs
 //! 10³–10⁵ model evaluations; a lock round-trip is noise).
+//!
+//! Accounting is *exact*: every lookup increments exactly one of
+//! `hits`/`misses`. In [`MemoCache::get_or_compute`] a miss is only charged
+//! by the thread whose insert actually created the entry (a thread that
+//! loses a compute race finds the entry present on re-lock and is charged a
+//! hit), so `get_or_compute` misses equal the number of distinct instances
+//! ever solved. [`MemoCache::get`] probes of never-solved keys also count
+//! as misses without creating entries — the batch engine's serve phase
+//! never takes that path (it only reads keys its sweep populated), which is
+//! what lets the batched-sweep hit-rate tests certify the reported rate
+//! against recomputed ground truth.
 
 use crate::area::params::HwParams;
 use crate::opt::inner::InnerSolution;
@@ -41,30 +52,62 @@ impl CacheKey {
     }
 }
 
-/// Hit/miss counters.
+/// Monotonic hit/miss counters with snapshot ("epoch") support, so callers
+/// can attribute lookups to one sweep on a long-lived coordinator.
 #[derive(Debug, Default)]
 pub struct CacheStats {
     pub hits: AtomicU64,
     pub misses: AtomicU64,
 }
 
-impl CacheStats {
+/// A point-in-time copy of the counters, from [`CacheStats::snapshot`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl StatsSnapshot {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
     pub fn hit_rate(&self) -> f64 {
-        let h = self.hits.load(Ordering::Relaxed) as f64;
-        let m = self.misses.load(Ordering::Relaxed) as f64;
-        if h + m == 0.0 {
+        if self.hits + self.misses == 0 {
             0.0
         } else {
-            h / (h + m)
+            self.hits as f64 / (self.hits + self.misses) as f64
         }
     }
 }
 
-const SHARDS: usize = 64;
+impl CacheStats {
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
 
-/// The sharded memo store. Values are `Option<InnerSolution>` — `None`
-/// memoizes infeasibility too.
+    /// Counter deltas accumulated since `since` was snapshotted.
+    pub fn delta_since(&self, since: StatsSnapshot) -> StatsSnapshot {
+        let now = self.snapshot();
+        StatsSnapshot { hits: now.hits - since.hits, misses: now.misses - since.misses }
+    }
+
+    /// Lifetime hit rate.
+    pub fn hit_rate(&self) -> f64 {
+        self.snapshot().hit_rate()
+    }
+}
+
+const DEFAULT_SHARDS: usize = 64;
+
+/// The sharded memo store: N-way lock striping keyed by the `CacheKey` hash.
+/// Values are `Option<InnerSolution>` — `None` memoizes infeasibility too.
 pub struct MemoCache {
+    /// Invariant: `shards.len()` is a power of two (shard selection masks
+    /// the key hash).
     shards: Vec<Mutex<HashMap<CacheKey, Option<InnerSolution>>>>,
     pub stats: CacheStats,
 }
@@ -77,20 +120,37 @@ impl Default for MemoCache {
 
 impl MemoCache {
     pub fn new() -> MemoCache {
+        MemoCache::with_shards(DEFAULT_SHARDS)
+    }
+
+    /// A cache striped over at least `n` locks (rounded up to a power of
+    /// two, minimum 1). More stripes buy concurrency at a fixed small memory
+    /// cost; the default suits typical core counts.
+    pub fn with_shards(n: usize) -> MemoCache {
+        let n = n.max(1).next_power_of_two();
         MemoCache {
-            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            shards: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
             stats: CacheStats::default(),
         }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
     }
 
     fn shard(&self, key: &CacheKey) -> &Mutex<HashMap<CacheKey, Option<InnerSolution>>> {
         use std::hash::{Hash, Hasher};
         let mut h = std::collections::hash_map::DefaultHasher::new();
         key.hash(&mut h);
-        &self.shards[(h.finish() as usize) % SHARDS]
+        &self.shards[(h.finish() as usize) & (self.shards.len() - 1)]
     }
 
     /// Get the memoized solution or compute and store it.
+    ///
+    /// The compute runs outside the lock; when two threads race on the same
+    /// key both compute (deterministic result, so this is harmless), but the
+    /// first insert wins and is the only one charged a miss — the loser is
+    /// charged a hit and returns the stored value.
     pub fn get_or_compute(
         &self,
         key: CacheKey,
@@ -100,12 +160,36 @@ impl MemoCache {
             self.stats.hits.fetch_add(1, Ordering::Relaxed);
             return *v;
         }
-        // Compute outside the lock; duplicate work on a race is harmless
-        // (deterministic result) and rare.
         let v = compute();
-        self.stats.misses.fetch_add(1, Ordering::Relaxed);
-        self.shard(&key).lock().unwrap().insert(key, v);
-        v
+        let mut shard = self.shard(&key).lock().unwrap();
+        match shard.entry(key) {
+            std::collections::hash_map::Entry::Occupied(e) => {
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                *e.get()
+            }
+            std::collections::hash_map::Entry::Vacant(slot) => {
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                slot.insert(v);
+                v
+            }
+        }
+    }
+
+    /// Look up without computing. `None` means the instance was never
+    /// solved; `Some(None)` means it was solved and found infeasible.
+    /// Counted as a hit or miss like any other lookup.
+    pub fn get(&self, key: &CacheKey) -> Option<Option<InnerSolution>> {
+        let found = self.shard(key).lock().unwrap().get(key).copied();
+        match found {
+            Some(v) => {
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            None => {
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -178,6 +262,40 @@ mod tests {
     }
 
     #[test]
+    fn get_distinguishes_unsolved_from_infeasible() {
+        let cache = MemoCache::new();
+        assert!(cache.get(&key(128)).is_none(), "unsolved instance");
+        cache.get_or_compute(key(128), || None);
+        assert!(matches!(cache.get(&key(128)), Some(None)), "memoized infeasible");
+        cache.get_or_compute(key(256), dummy_solution);
+        assert!(cache.get(&key(256)).unwrap().is_some());
+        // Tally: get(miss), get_or_compute(miss), get(hit),
+        // get_or_compute(miss), get(hit).
+        assert_eq!(cache.stats.snapshot(), StatsSnapshot { hits: 2, misses: 3 });
+    }
+
+    #[test]
+    fn snapshot_deltas_isolate_epochs() {
+        let cache = MemoCache::new();
+        cache.get_or_compute(key(32), dummy_solution);
+        let epoch = cache.stats.snapshot();
+        cache.get_or_compute(key(32), dummy_solution);
+        cache.get_or_compute(key(64), dummy_solution);
+        let d = cache.stats.delta_since(epoch);
+        assert_eq!((d.hits, d.misses), (1, 1));
+        assert_eq!(d.lookups(), 2);
+        assert!((d.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shard_count_rounds_to_power_of_two() {
+        assert_eq!(MemoCache::with_shards(0).shard_count(), 1);
+        assert_eq!(MemoCache::with_shards(1).shard_count(), 1);
+        assert_eq!(MemoCache::with_shards(48).shard_count(), 64);
+        assert_eq!(MemoCache::new().shard_count(), 64);
+    }
+
+    #[test]
     fn concurrent_access() {
         use std::sync::Arc;
         let cache = Arc::new(MemoCache::new());
@@ -192,5 +310,28 @@ mod tests {
             }
         });
         assert!(cache.len() <= 8 * 10 + 8);
+    }
+
+    #[test]
+    fn concurrent_accounting_is_exact() {
+        // 8 threads hammer the same 16 keys: regardless of compute races,
+        // exactly one miss may be charged per distinct key.
+        use std::sync::Arc;
+        let cache = Arc::new(MemoCache::with_shards(4));
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let cache = Arc::clone(&cache);
+                s.spawn(move || {
+                    for i in 0..400 {
+                        let v = cache.get_or_compute(key(32 * (i % 16 + 1)), dummy_solution);
+                        assert_eq!(v.unwrap().evals, 1);
+                    }
+                });
+            }
+        });
+        let snap = cache.stats.snapshot();
+        assert_eq!(cache.len(), 16);
+        assert_eq!(snap.misses, 16, "misses must equal distinct instances");
+        assert_eq!(snap.lookups(), 8 * 400);
     }
 }

@@ -1,25 +1,77 @@
-//! The coordinator driver: memoized, multi-threaded design-space sweeps and
-//! free scenario re-weighting on top of them.
+//! The coordinator driver: batched, memoized, multi-threaded design-space
+//! sweeps and free scenario re-weighting on top of them.
+//!
+//! The batch engine decouples sweep cost from scenario count:
+//!
+//! 1. **Plan** — enumerate each scenario's hardware space and deduplicate
+//!    the union of (hardware, stencil, size) instances by [`CacheKey`];
+//! 2. **Sweep** — shard the deduplicated instances across the thread pool
+//!    (chunked work claiming, results into the striped [`MemoCache`]), so
+//!    each inner problem is solved **once** per batch regardless of how many
+//!    scenarios reference it;
+//! 3. **Serve** — answer every scenario from the shared sweep: per-scenario
+//!    weighted aggregation (`opt::separable::aggregate_weighted`), incremental
+//!    Pareto-front maintenance (`codesign::pareto::ParetoFront`) and reference
+//!    evaluations, scenarios fanned across the pool.
+//!
+//! Every stage iterates in a fixed order and the inner solver is
+//! deterministic, so results are bit-identical across thread counts and
+//! across batched vs direct (`codesign::scenario::run`) execution.
 
 use crate::area::model::AreaModel;
-use crate::codesign::pareto::pareto_front;
-use crate::codesign::scenario::{evaluate_reference, DesignEval, Scenario, ScenarioResult};
-use crate::codesign::space::enumerate_space;
+use crate::area::params::HwParams;
+use crate::codesign::pareto::ParetoFront;
+use crate::codesign::scenario::{DesignEval, RefEval, Scenario, ScenarioResult};
+use crate::codesign::space::{enumerate_space, DesignPoint};
 use crate::coordinator::cache::{CacheKey, MemoCache};
-use crate::opt::separable::solve_entry;
-use crate::stencil::defs::Stencil;
-use crate::stencil::workload::Workload;
+use crate::opt::inner::InnerSolution;
+use crate::opt::problem::SolveOpts;
+use crate::opt::separable::{aggregate_weighted, solve_entry};
+use crate::stencil::workload::WorkloadEntry;
+use crate::timemodel::citer::CIterTable;
 use crate::timemodel::talg::TimeModel;
-use crate::util::threadpool::parallel_map;
+use crate::util::threadpool::{parallel_map, parallel_map_chunked};
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 /// Sweep statistics beyond the scenario result itself.
+///
+/// `cache_hit_rate` covers the whole batch this scenario was answered in
+/// (sweep lookups + serve lookups since the batch began): the sweep is
+/// shared, so per-scenario attribution of its misses would be arbitrary.
 #[derive(Clone, Debug)]
 pub struct SweepReport {
     pub result: ScenarioResult,
     pub cache_hit_rate: f64,
     pub cache_entries: usize,
-    pub wall: std::time::Duration,
+    pub wall: Duration,
+}
+
+/// What a whole batch run reports beyond the per-scenario results.
+#[derive(Clone, Debug)]
+pub struct BatchReport {
+    /// One report per input scenario, in input order.
+    pub reports: Vec<SweepReport>,
+    /// Distinct (hardware, stencil, size) instances the batch's shared sweep
+    /// covered — the number of inner problems this batch can ever solve,
+    /// however many scenarios consume them.
+    pub unique_instances: usize,
+    /// Cache lookups made by this batch: one per unique instance during the
+    /// sweep phase plus `(|space| + 2 references) × |entries|` per scenario
+    /// during serve.
+    pub lookups: u64,
+    /// Hit rate over exactly those lookups. On a fresh coordinator the
+    /// misses equal `unique_instances`; a repeated batch is ~100% hits.
+    pub cache_hit_rate: f64,
+    pub wall: Duration,
+}
+
+/// One deduplicated unit of sweep work.
+struct SweepInstance {
+    hw: HwParams,
+    entry: WorkloadEntry,
 }
 
 /// The long-lived coordinator: owns the models and the memo store.
@@ -27,6 +79,16 @@ pub struct Coordinator {
     pub area_model: AreaModel,
     pub time_model: TimeModel,
     pub cache: MemoCache,
+    /// The (C_iter, solver options) pair the cache was populated under.
+    /// `CacheKey` deliberately omits them (one sweep serves many scenarios),
+    /// so the coordinator refuses to mix them across batches: a later batch
+    /// under a different pair would silently serve stale solutions.
+    solved_under: Mutex<Option<(CIterTable, SolveOpts)>>,
+    /// Serializes whole batches: the epoch-delta cache statistics and the
+    /// shared progress counter attribute cleanly only when one batch runs at
+    /// a time. Parallelism lives *inside* a batch (instances and scenarios
+    /// fan across the pool), so overlapping batches would gain nothing.
+    batch_lock: Mutex<()>,
     progress_every: usize,
     done: AtomicUsize,
 }
@@ -37,93 +99,191 @@ impl Coordinator {
             area_model,
             time_model,
             cache: MemoCache::new(),
+            solved_under: Mutex::new(None),
+            batch_lock: Mutex::new(()),
             progress_every: usize::MAX,
             done: AtomicUsize::new(0),
         }
     }
 
-    /// Print a progress line every `n` hardware points.
+    /// Print a progress line every `n` solved instances.
     pub fn with_progress(mut self, n: usize) -> Coordinator {
         self.progress_every = n.max(1);
         self
     }
 
-    /// Run a scenario through the memo store. Identical instances across
-    /// scenarios (e.g. the same hardware point under re-weighted workloads,
-    /// or overlapping spaces) are solved once, ever.
+    /// Run one scenario through the memo store — a batch of one. Identical
+    /// instances across calls (e.g. the same hardware point under
+    /// re-weighted workloads, or overlapping spaces) are solved once, ever.
     pub fn run_scenario(&self, scenario: &Scenario) -> SweepReport {
-        let t0 = std::time::Instant::now();
-        let space = enumerate_space(&self.area_model, &scenario.space);
-        self.done.store(0, Ordering::Relaxed);
+        self.run_batch_report(std::slice::from_ref(scenario))
+            .reports
+            .pop()
+            .expect("one scenario in, one report out")
+    }
 
-        let solved: Vec<DesignEval> = parallel_map(&space, scenario.threads, |pt| {
-            let per_entry: Vec<_> = scenario
+    /// Answer a batch of scenarios from one shared hardware sweep.
+    ///
+    /// All scenarios must share `citer` and `solve_opts` (asserted): those
+    /// define the inner problem, which the sweep solves once per instance.
+    /// Everything else — workload weights, per-stencil subsets, space
+    /// bounds/area budgets, thread hints — may vary freely per scenario.
+    pub fn run_batch(&self, scenarios: &[Scenario]) -> Vec<ScenarioResult> {
+        self.run_batch_report(scenarios).reports.into_iter().map(|r| r.result).collect()
+    }
+
+    /// [`Self::run_batch`] with cache and timing statistics.
+    pub fn run_batch_report(&self, scenarios: &[Scenario]) -> BatchReport {
+        let t0 = Instant::now();
+        if scenarios.is_empty() {
+            return BatchReport {
+                reports: Vec::new(),
+                unique_instances: 0,
+                lookups: 0,
+                cache_hit_rate: 0.0,
+                wall: t0.elapsed(),
+            };
+        }
+        for s in &scenarios[1..] {
+            assert!(
+                s.citer == scenarios[0].citer,
+                "batched scenarios must share one C_iter table ('{}' differs)",
+                s.name
+            );
+            assert!(
+                s.solve_opts == scenarios[0].solve_opts,
+                "batched scenarios must share solver options ('{}' differs)",
+                s.name
+            );
+        }
+        {
+            let mut guard = self.solved_under.lock().unwrap();
+            match &*guard {
+                Some((citer, opts)) => assert!(
+                    *citer == scenarios[0].citer && *opts == scenarios[0].solve_opts,
+                    "this coordinator's cache was populated under a different C_iter \
+                     table / solver options; use a fresh Coordinator"
+                ),
+                None => {
+                    *guard =
+                        Some((scenarios[0].citer.clone(), scenarios[0].solve_opts.clone()));
+                }
+            }
+        }
+        // One batch at a time per coordinator (see `batch_lock`); taken after
+        // the cheap validation asserts so a rejected batch cannot poison it.
+        let _batch = self.batch_lock.lock().unwrap();
+        let epoch = self.cache.stats.snapshot();
+        let threads = scenarios.iter().map(|s| s.threads).max().unwrap_or(1).max(1);
+
+        // Plan: per-scenario spaces, then the deduplicated instance union.
+        let spaces: Vec<Vec<DesignPoint>> =
+            scenarios.iter().map(|s| enumerate_space(&self.area_model, &s.space)).collect();
+        let mut seen: HashSet<CacheKey> = HashSet::new();
+        let mut instances: Vec<SweepInstance> = Vec::new();
+        for (sc, space) in scenarios.iter().zip(&spaces) {
+            for pt in space {
+                for e in &sc.workload.entries {
+                    if seen.insert(CacheKey::new(&pt.hw, e.stencil, &e.size)) {
+                        instances.push(SweepInstance { hw: pt.hw, entry: *e });
+                    }
+                }
+            }
+            // The reference architectures are answered from the same sweep
+            // (the time model ignores their caches, so sharing `CacheKey`s
+            // with same-shaped cache-less grid points is exact).
+            for hw in [HwParams::gtx980(), HwParams::titanx()] {
+                for e in &sc.workload.entries {
+                    if seen.insert(CacheKey::new(&hw, e.stencil, &e.size)) {
+                        instances.push(SweepInstance { hw, entry: *e });
+                    }
+                }
+            }
+        }
+        let unique_instances = instances.len();
+
+        // Sweep: shard the instance grid across the pool. Chunked claiming
+        // keeps cursor traffic low when most instances are already cached.
+        self.done.store(0, Ordering::Relaxed);
+        let chunk = (unique_instances / (threads * 8).max(1)).clamp(1, 128);
+        let citer = &scenarios[0].citer;
+        let opts = &scenarios[0].solve_opts;
+        parallel_map_chunked(&instances, threads, chunk, |inst| {
+            let key = CacheKey::new(&inst.hw, inst.entry.stencil, &inst.entry.size);
+            self.cache.get_or_compute(key, || {
+                solve_entry(&self.time_model, citer, &inst.hw, &inst.entry, opts)
+            });
+            let n = self.done.fetch_add(1, Ordering::Relaxed) + 1;
+            if n % self.progress_every == 0 {
+                eprintln!("[coordinator] {n}/{unique_instances} instances solved");
+            }
+        });
+
+        // Serve: every scenario reads the shared sweep; scenarios themselves
+        // fan across the pool (each serve is pure per-scenario work).
+        let jobs: Vec<(&Scenario, &[DesignPoint])> =
+            scenarios.iter().zip(spaces.iter().map(Vec::as_slice)).collect();
+        let results: Vec<ScenarioResult> =
+            parallel_map(&jobs, threads.min(jobs.len()), |&(sc, space)| {
+                self.serve_scenario(sc, space)
+            });
+
+        let delta = self.cache.stats.delta_since(epoch);
+        let wall = t0.elapsed();
+        let cache_entries = self.cache.len();
+        let cache_hit_rate = delta.hit_rate();
+        let reports = results
+            .into_iter()
+            .map(|result| SweepReport { result, cache_hit_rate, cache_entries, wall })
+            .collect();
+        BatchReport {
+            reports,
+            unique_instances,
+            lookups: delta.lookups(),
+            cache_hit_rate,
+            wall,
+        }
+    }
+
+    /// Aggregate one scenario entirely from cached inner solutions.
+    fn serve_scenario(&self, scenario: &Scenario, space: &[DesignPoint]) -> ScenarioResult {
+        let mut points: Vec<DesignEval> = Vec::new();
+        let mut front = ParetoFront::new();
+        let mut infeasible = 0usize;
+        let mut total_evals = 0u64;
+        for pt in space {
+            let per_entry: Vec<Option<InnerSolution>> = scenario
                 .workload
                 .entries
                 .iter()
                 .map(|e| {
                     let key = CacheKey::new(&pt.hw, e.stencil, &e.size);
-                    self.cache.get_or_compute(key, || {
-                        solve_entry(
-                            &self.time_model,
-                            &scenario.citer,
-                            &pt.hw,
-                            e,
-                            &scenario.solve_opts,
-                        )
-                    })
+                    self.cache
+                        .get(&key)
+                        .expect("batch sweep must populate every (hw, entry) instance")
                 })
                 .collect();
-            let n = self.done.fetch_add(1, Ordering::Relaxed) + 1;
-            if n % self.progress_every == 0 {
-                eprintln!("[coordinator] {n}/{} hardware points", space.len());
-            }
-            DesignEval {
-                hw: pt.hw,
-                area_mm2: pt.area_mm2,
-                gflops: 0.0,
-                seconds: 0.0,
-                per_entry,
-            }
-        })
-        .into_iter()
-        .collect();
-
-        // Aggregate weighted objective per point; drop infeasible points.
-        let mut points = Vec::new();
-        let mut infeasible = 0usize;
-        let mut total_evals = 0u64;
-        for mut p in solved {
-            total_evals += p.per_entry.iter().flatten().map(|s| s.evals).sum::<u64>();
-            match aggregate(&scenario.workload, &p) {
+            total_evals += per_entry.iter().flatten().map(|s| s.evals).sum::<u64>();
+            match aggregate_weighted(&scenario.workload, &per_entry) {
                 Some((seconds, gflops)) => {
-                    p.seconds = seconds;
-                    p.gflops = gflops;
-                    points.push(p);
+                    front.insert(pt.area_mm2, gflops, points.len());
+                    points.push(DesignEval {
+                        hw: pt.hw,
+                        area_mm2: pt.area_mm2,
+                        gflops,
+                        seconds,
+                        per_entry,
+                    });
                 }
                 None => infeasible += 1,
             }
         }
+        let pareto = front.indices();
         let xy: Vec<(f64, f64)> = points.iter().map(|p| (p.area_mm2, p.gflops)).collect();
-        let pareto = pareto_front(&xy);
 
         let references = vec![
-            evaluate_reference(
-                "gtx980",
-                crate::area::params::HwParams::gtx980(),
-                398.0,
-                scenario,
-                &self.area_model,
-                &self.time_model,
-            ),
-            evaluate_reference(
-                "titanx",
-                crate::area::params::HwParams::titanx(),
-                601.0,
-                scenario,
-                &self.area_model,
-                &self.time_model,
-            ),
+            self.reference_from_cache("gtx980", HwParams::gtx980(), 398.0, scenario),
+            self.reference_from_cache("titanx", HwParams::titanx(), 601.0, scenario),
         ];
         let vs_reference = references
             .iter()
@@ -140,36 +300,50 @@ impl Coordinator {
             })
             .collect();
 
-        SweepReport {
-            result: ScenarioResult {
-                scenario_name: scenario.name.clone(),
-                points,
-                pareto,
-                references,
-                stats: crate::codesign::scenario::ImprovementStats { vs_reference },
-                total_evals,
-                infeasible_points: infeasible,
-            },
-            cache_hit_rate: self.cache.stats.hit_rate(),
-            cache_entries: self.cache.len(),
-            wall: t0.elapsed(),
+        ScenarioResult {
+            scenario_name: scenario.name.clone(),
+            points,
+            pareto,
+            references,
+            stats: crate::codesign::scenario::ImprovementStats { vs_reference },
+            total_evals,
+            infeasible_points: infeasible,
         }
     }
-}
 
-/// Weighted aggregation of one design's per-entry optima.
-fn aggregate(workload: &Workload, p: &DesignEval) -> Option<(f64, f64)> {
-    let mut t = 0.0;
-    let mut flops = 0.0;
-    for (e, sol) in workload.entries.iter().zip(&p.per_entry) {
-        if e.weight == 0.0 {
-            continue;
+    /// Evaluate one reference (stock) architecture from the shared sweep —
+    /// same solutions and the same aggregation order as
+    /// `codesign::scenario::evaluate_reference`, without re-solving anything.
+    fn reference_from_cache(
+        &self,
+        name: &'static str,
+        hw: HwParams,
+        published_area_mm2: f64,
+        scenario: &Scenario,
+    ) -> RefEval {
+        let per_entry: Vec<Option<InnerSolution>> = scenario
+            .workload
+            .entries
+            .iter()
+            .map(|e| {
+                let key = CacheKey::new(&hw, e.stencil, &e.size);
+                self.cache
+                    .get(&key)
+                    .expect("batch sweep must cover the reference architectures")
+            })
+            .collect();
+        let (seconds, gflops) = aggregate_weighted(&scenario.workload, &per_entry)
+            .expect("reference must be feasible");
+        RefEval {
+            name,
+            hw,
+            area_mm2: self.area_model.area_mm2(&hw),
+            published_area_mm2,
+            gflops,
+            seconds,
+            per_entry,
         }
-        let s = sol.as_ref()?;
-        t += e.weight * s.est.seconds;
-        flops += e.weight * Stencil::get(e.stencil).flops_per_point * e.size.points();
     }
-    Some((t, flops / t / 1e9))
 }
 
 #[cfg(test)]
@@ -221,5 +395,40 @@ mod tests {
         let a = first.result.points[0].gflops;
         let b = second.result.points[0].gflops;
         assert!((a - b).abs() > 1e-9);
+    }
+
+    #[test]
+    fn batch_of_one_equals_run_scenario() {
+        let sc = quick();
+        let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+        let batch = coord.run_batch(std::slice::from_ref(&sc));
+        assert_eq!(batch.len(), 1);
+        let coord2 = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+        let single = coord2.run_scenario(&sc).result;
+        assert_eq!(batch[0].points.len(), single.points.len());
+        assert_eq!(batch[0].pareto, single.pareto);
+        for (a, b) in batch[0].points.iter().zip(&single.points) {
+            assert_eq!(a.gflops.to_bits(), b.gflops.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+        let rep = coord.run_batch_report(&[]);
+        assert!(rep.reports.is_empty());
+        assert_eq!(rep.unique_instances, 0);
+        assert_eq!(rep.lookups, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "share one C_iter")]
+    fn mixed_citer_batches_are_rejected() {
+        use crate::timemodel::citer::CIterTable;
+        let a = quick();
+        let mut b = quick();
+        b.citer = CIterTable::with_measured(&[(StencilId::Jacobi2D, 99.0)]);
+        let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+        coord.run_batch(&[a, b]);
     }
 }

@@ -5,9 +5,15 @@
 //! eq. (18)'s separability, which makes §V-B's scenario re-weighting free —
 //! a work queue fanned across a thread pool, and progress/statistics
 //! reporting for the CLI.
+//!
+//! [`Coordinator::run_batch`] is the production entry point: it answers an
+//! arbitrary batch of scenarios (workload re-weightings, area budgets,
+//! per-stencil subsets) from **one** shared, sharded hardware sweep, so
+//! scenario throughput scales with cores while sweep cost stays flat in the
+//! number of scenarios.
 
 pub mod cache;
 pub mod driver;
 
-pub use cache::{CacheKey, CacheStats, MemoCache};
-pub use driver::{Coordinator, SweepReport};
+pub use cache::{CacheKey, CacheStats, MemoCache, StatsSnapshot};
+pub use driver::{BatchReport, Coordinator, SweepReport};

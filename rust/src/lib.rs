@@ -20,8 +20,8 @@
 //!   simulator ([`sim`]), PJRT runtime ([`runtime`]), DSE coordinator
 //!   ([`coordinator`]), and report generation ([`report`]).
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index, and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` (repo root) for the system inventory, the batched DSE
+//! engine's contract, and the per-experiment index.
 
 pub mod area;
 pub mod cacti;

@@ -29,4 +29,4 @@ pub mod separable;
 
 pub use inner::{solve_inner, InnerSolution};
 pub use problem::{InnerProblem, SolveOpts};
-pub use separable::{solve_hardware_point, HardwarePointSolution};
+pub use separable::{aggregate_weighted, solve_entry, solve_hardware_point, HardwarePointSolution};

@@ -14,8 +14,9 @@ pub struct InnerProblem {
     pub hw: HwParams,
 }
 
-/// Solver options.
-#[derive(Clone, Debug)]
+/// Solver options. `PartialEq` so the batched coordinator can assert that
+/// every scenario sharing one sweep solves the same inner problem.
+#[derive(Clone, Debug, PartialEq)]
 pub struct SolveOpts {
     /// Evaluate every feasible `k` instead of the candidate heuristic.
     pub all_k: bool,

@@ -44,11 +44,27 @@ pub fn solve_hardware_point(
         .map(|e| solve_entry(model, citer, hw, e, opts))
         .collect();
     let evals = per_entry.iter().flatten().map(|s| s.evals).sum();
+    let (weighted_seconds, weighted_gflops) = aggregate_weighted(workload, &per_entry).unzip();
+    HardwarePointSolution { hw: *hw, per_entry, weighted_seconds, weighted_gflops, evals }
+}
 
+/// Workload-weighted `(seconds, GFLOP/s)` over already-solved per-entry
+/// optima, aligned with `workload.entries`. `None` if any positively-weighted
+/// entry is infeasible; zero-weight entries never affect the result.
+///
+/// This is the single aggregation path shared by the direct scenario runner,
+/// the batched coordinator's serve phase and [`reweight`] — one accumulation
+/// order, so re-serving memoized solutions is bit-identical to a from-scratch
+/// solve under the same weights.
+pub fn aggregate_weighted(
+    workload: &Workload,
+    per_entry: &[Option<InnerSolution>],
+) -> Option<(f64, f64)> {
+    debug_assert_eq!(workload.entries.len(), per_entry.len(), "entry/solution mismatch");
     let mut t_weighted = 0.0;
     let mut flops_weighted = 0.0;
     let mut feasible = true;
-    for (entry, sol) in workload.entries.iter().zip(&per_entry) {
+    for (entry, sol) in workload.entries.iter().zip(per_entry) {
         if entry.weight == 0.0 {
             continue;
         }
@@ -61,12 +77,7 @@ pub fn solve_hardware_point(
             None => feasible = false,
         }
     }
-    let (weighted_seconds, weighted_gflops) = if feasible {
-        (Some(t_weighted), Some(flops_weighted / t_weighted / 1e9))
-    } else {
-        (None, None)
-    };
-    HardwarePointSolution { hw: *hw, per_entry, weighted_seconds, weighted_gflops, evals }
+    feasible.then(|| (t_weighted, flops_weighted / t_weighted / 1e9))
 }
 
 /// Solve one workload entry on one hardware point.
@@ -91,30 +102,16 @@ pub fn reweight(
     reweighted: &Workload,
 ) -> HardwarePointSolution {
     assert_eq!(base.entries.len(), reweighted.entries.len(), "workload mismatch");
-    let mut t_weighted = 0.0;
-    let mut flops_weighted = 0.0;
-    let mut feasible = true;
-    for ((e_base, e_new), sol) in
-        base.entries.iter().zip(&reweighted.entries).zip(&solution.per_entry)
-    {
+    for (e_base, e_new) in base.entries.iter().zip(&reweighted.entries) {
         assert_eq!(e_base.stencil, e_new.stencil, "workload mismatch");
-        if e_new.weight == 0.0 {
-            continue;
-        }
-        match sol {
-            Some(s) => {
-                t_weighted += e_new.weight * s.est.seconds;
-                let st = Stencil::get(e_new.stencil);
-                flops_weighted += e_new.weight * st.flops_per_point * e_new.size.points();
-            }
-            None => feasible = false,
-        }
     }
+    let (weighted_seconds, weighted_gflops) =
+        aggregate_weighted(reweighted, &solution.per_entry).unzip();
     HardwarePointSolution {
         hw: solution.hw,
         per_entry: solution.per_entry.clone(),
-        weighted_seconds: feasible.then_some(t_weighted),
-        weighted_gflops: feasible.then_some(flops_weighted / t_weighted / 1e9),
+        weighted_seconds,
+        weighted_gflops,
         evals: 0, // no new model evaluations — the point of eq. (18)
     }
 }

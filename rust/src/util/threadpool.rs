@@ -27,10 +27,27 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
+    parallel_map_chunked(items, nthreads, 1, f)
+}
+
+/// [`parallel_map`] with shard-sized work claiming: workers claim contiguous
+/// chunks of `chunk` items through the shared cursor instead of one item at a
+/// time. For cheap per-item work (e.g. the batched coordinator's serve phase,
+/// or sweeps that are mostly cache hits) this divides cursor contention by
+/// `chunk` while keeping the same order-preserving output and automatic load
+/// balancing across uneven shards.
+pub fn parallel_map_chunked<T, R, F>(items: &[T], nthreads: usize, chunk: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
     if items.is_empty() {
         return Vec::new();
     }
-    let nthreads = nthreads.max(1).min(items.len());
+    let chunk = chunk.max(1);
+    let nchunks = items.len().div_ceil(chunk);
+    let nthreads = nthreads.max(1).min(nchunks);
     if nthreads == 1 {
         return items.iter().map(|t| f(t)).collect();
     }
@@ -43,16 +60,20 @@ where
             let f = &f;
             let slots_ptr = &slots_ptr;
             scope.spawn(move || loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= items.len() {
+                let c = cursor.fetch_add(1, Ordering::Relaxed);
+                if c >= nchunks {
                     break;
                 }
-                let r = f(&items[i]);
-                // SAFETY: each index i is claimed by exactly one worker, and
-                // `slots` outlives the scope; distinct workers write disjoint
-                // slots.
-                unsafe {
-                    *slots_ptr.0.add(i) = Some(r);
+                let start = c * chunk;
+                let end = (start + chunk).min(items.len());
+                for i in start..end {
+                    let r = f(&items[i]);
+                    // SAFETY: each chunk (and so each index i) is claimed by
+                    // exactly one worker, and `slots` outlives the scope;
+                    // distinct workers write disjoint slots.
+                    unsafe {
+                        *slots_ptr.0.add(i) = Some(r);
+                    }
                 }
             });
         }
@@ -173,6 +194,25 @@ mod tests {
             (x, acc).0
         });
         assert_eq!(out, items);
+    }
+
+    #[test]
+    fn chunked_map_matches_serial_for_all_chunk_sizes() {
+        let items: Vec<u64> = (0..257).collect();
+        let expect: Vec<u64> = items.iter().map(|x| x * 3 + 1).collect();
+        for chunk in [1, 2, 7, 64, 256, 257, 1000] {
+            for threads in [1, 3, 8] {
+                let out = parallel_map_chunked(&items, threads, chunk, |&x| x * 3 + 1);
+                assert_eq!(out, expect, "chunk {chunk}, threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_map_empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(parallel_map_chunked(&empty, 4, 16, |&x| x).is_empty());
+        assert_eq!(parallel_map_chunked(&[9u32], 4, 16, |&x| x + 1), vec![10]);
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! Integration: the batched multi-scenario DSE engine.
+//!
+//! Certifies the three contracts the batch API makes:
+//!
+//! 1. **Determinism** — a batch on 1 thread and on N threads produces
+//!    bit-identical `ScenarioResult`s and Pareto fronts, and those fronts
+//!    are non-dominated and strictly sorted;
+//! 2. **Consistency** — batched answers equal direct (`scenario::run`)
+//!    answers per scenario;
+//! 3. **Exact cache accounting** — the hit rate the report carries equals
+//!    ground truth recomputed from first principles, and a repeated batch
+//!    over the same grid is ≥99% hits.
+
+use codesign::area::{AreaModel, HwParams};
+use codesign::codesign::pareto::pareto_front;
+use codesign::codesign::scenario::{self, Scenario, ScenarioResult};
+use codesign::codesign::space::enumerate_space;
+use codesign::coordinator::{CacheKey, Coordinator};
+use codesign::stencil::defs::StencilId;
+use codesign::timemodel::TimeModel;
+use std::collections::HashSet;
+
+/// Four scenario shapes the batch API advertises: the base mix, a
+/// per-stencil subset, a tighter area budget, and a skewed re-weighting.
+fn batch(threads: usize) -> Vec<Scenario> {
+    let base = Scenario::quick(Scenario::paper_2d(), 8).with_threads(threads);
+    let jacobi = base
+        .clone()
+        .with_workload(
+            base.workload
+                .reweighted(|e| if e.stencil == StencilId::Jacobi2D { 1.0 } else { 0.0 }),
+        )
+        .named("jacobi-only");
+    let budget = base.clone().with_area_budget(380.0).named("budget-380");
+    let skewed = base
+        .clone()
+        .with_workload(
+            base.workload.reweighted(|e| if e.stencil == StencilId::Heat2D { 5.0 } else { 1.0 }),
+        )
+        .named("heat-heavy");
+    vec![base.named("uniform"), jacobi, budget, skewed]
+}
+
+fn fresh_coordinator() -> Coordinator {
+    Coordinator::new(AreaModel::paper(), TimeModel::maxwell())
+}
+
+fn assert_bit_identical(a: &ScenarioResult, b: &ScenarioResult) {
+    assert_eq!(a.scenario_name, b.scenario_name);
+    assert_eq!(a.points.len(), b.points.len(), "{}", a.scenario_name);
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.hw, pb.hw);
+        assert_eq!(pa.area_mm2.to_bits(), pb.area_mm2.to_bits());
+        assert_eq!(pa.gflops.to_bits(), pb.gflops.to_bits(), "{}", a.scenario_name);
+        assert_eq!(pa.seconds.to_bits(), pb.seconds.to_bits());
+    }
+    assert_eq!(a.pareto, b.pareto, "{}", a.scenario_name);
+    assert_eq!(a.total_evals, b.total_evals);
+    assert_eq!(a.infeasible_points, b.infeasible_points);
+    assert_eq!(a.references.len(), b.references.len());
+    for (ra, rb) in a.references.iter().zip(&b.references) {
+        assert_eq!(ra.name, rb.name);
+        assert_eq!(ra.gflops.to_bits(), rb.gflops.to_bits());
+    }
+}
+
+#[test]
+fn batch_is_deterministic_across_thread_counts() {
+    let serial = fresh_coordinator().run_batch(&batch(1));
+    let threaded = fresh_coordinator().run_batch(&batch(8));
+    assert_eq!(serial.len(), threaded.len());
+    for (a, b) in serial.iter().zip(&threaded) {
+        assert_bit_identical(a, b);
+    }
+}
+
+#[test]
+fn batch_matches_direct_per_scenario_runs() {
+    let scenarios = batch(8);
+    let results = fresh_coordinator().run_batch(&scenarios);
+    let am = AreaModel::paper();
+    let tm = TimeModel::maxwell();
+    for (sc, batched) in scenarios.iter().zip(&results) {
+        let direct = scenario::run(sc, &am, &tm);
+        assert_eq!(batched.points.len(), direct.points.len(), "{}", sc.name);
+        for (a, b) in batched.points.iter().zip(&direct.points) {
+            assert_eq!(a.hw, b.hw);
+            assert!(
+                (a.gflops - b.gflops).abs() / b.gflops < 1e-12,
+                "{}: {} vs {}",
+                sc.name,
+                a.gflops,
+                b.gflops
+            );
+        }
+        assert_eq!(batched.pareto, direct.pareto, "{}", sc.name);
+    }
+}
+
+#[test]
+fn batch_pareto_fronts_are_sorted_nondominated_and_match_recomputation() {
+    let results = fresh_coordinator().run_batch(&batch(8));
+    for r in &results {
+        assert!(!r.pareto.is_empty(), "{}", r.scenario_name);
+        let xy = r.xy();
+        // Strictly sorted: area ascending, perf ascending — so no front
+        // point can dominate another.
+        for w in r.pareto.windows(2) {
+            assert!(xy[w[0]].0 < xy[w[1]].0, "{}: front areas not ascending", r.scenario_name);
+            assert!(xy[w[0]].1 < xy[w[1]].1, "{}: front perf not ascending", r.scenario_name);
+        }
+        // Complete: every non-front point is dominated by some front point.
+        let front: HashSet<usize> = r.pareto.iter().copied().collect();
+        for (i, &(a, p)) in xy.iter().enumerate() {
+            if front.contains(&i) {
+                continue;
+            }
+            assert!(
+                r.pareto.iter().any(|&j| {
+                    let (fa, fp) = xy[j];
+                    (fa <= a && fp >= p && (fa < a || fp > p)) || (fa == a && fp == p)
+                }),
+                "{}: point {i} not dominated",
+                r.scenario_name
+            );
+        }
+        // And the incrementally-maintained front equals batch recomputation.
+        assert_eq!(r.pareto, pareto_front(&xy), "{}", r.scenario_name);
+    }
+}
+
+#[test]
+fn cache_accounting_matches_recomputed_ground_truth() {
+    let scenarios = batch(8);
+
+    // Ground truth from first principles: the batch must look up each
+    // deduplicated (hw, stencil, size) instance once in the sweep phase —
+    // including the two reference architectures per scenario — and
+    // (|space| + 2 references) x |entries| per scenario in the serve phase.
+    let am = AreaModel::paper();
+    let mut uniq: HashSet<CacheKey> = HashSet::new();
+    let mut serve_lookups = 0u64;
+    for sc in &scenarios {
+        let space = enumerate_space(&am, &sc.space);
+        serve_lookups += ((space.len() + 2) * sc.workload.entries.len()) as u64;
+        for pt in &space {
+            for e in &sc.workload.entries {
+                uniq.insert(CacheKey::new(&pt.hw, e.stencil, &e.size));
+            }
+        }
+        for hw in [HwParams::gtx980(), HwParams::titanx()] {
+            for e in &sc.workload.entries {
+                uniq.insert(CacheKey::new(&hw, e.stencil, &e.size));
+            }
+        }
+    }
+    let unique = uniq.len() as u64;
+    let lookups = unique + serve_lookups;
+    let expected_rate = serve_lookups as f64 / lookups as f64; // fresh cache: every sweep lookup misses
+
+    let coord = fresh_coordinator();
+    let rep = coord.run_batch_report(&scenarios);
+    assert_eq!(rep.unique_instances as u64, unique);
+    assert_eq!(rep.lookups, lookups);
+    assert_eq!(coord.cache.len() as u64, unique, "cache holds exactly the swept instances");
+    assert!(
+        (rep.cache_hit_rate - expected_rate).abs() < 1e-12,
+        "reported {} vs ground truth {}",
+        rep.cache_hit_rate,
+        expected_rate
+    );
+    for r in &rep.reports {
+        assert_eq!(r.cache_hit_rate.to_bits(), rep.cache_hit_rate.to_bits());
+        assert_eq!(r.cache_entries as u64, unique);
+    }
+
+    // Second batch over the same grid: the sweep finds everything cached.
+    let again = coord.run_batch_report(&scenarios);
+    assert!(again.cache_hit_rate >= 0.99, "repeat hit rate {}", again.cache_hit_rate);
+    assert_eq!(again.unique_instances as u64, unique);
+    assert_eq!(coord.cache.len() as u64, unique, "no new instances solved");
+    for (a, b) in rep.reports.iter().zip(&again.reports) {
+        assert_bit_identical(&a.result, &b.result);
+    }
+}
+
+#[test]
+fn tighter_budget_scenario_is_a_prefix_closed_subset() {
+    // The budget-380 scenario's designs must all exist in the uniform
+    // scenario's space with identical objective values — it was served from
+    // the same sweep.
+    let results = fresh_coordinator().run_batch(&batch(8));
+    let uniform = &results[0];
+    let budget = results.iter().find(|r| r.scenario_name == "budget-380").unwrap();
+    assert!(budget.points.len() < uniform.points.len());
+    for p in &budget.points {
+        assert!(p.area_mm2 <= 380.0);
+        let twin = uniform
+            .points
+            .iter()
+            .find(|q| q.hw == p.hw)
+            .expect("budget design missing from uniform space");
+        assert_eq!(twin.gflops.to_bits(), p.gflops.to_bits());
+    }
+}

@@ -3,12 +3,13 @@
 //! feasibility-constraint coherence and cache-key identity.
 
 use codesign::area::{AreaModel, HwParams};
-use codesign::codesign::pareto::{best_within_area, pareto_front};
+use codesign::codesign::pareto::{best_within_area, pareto_front, ParetoFront};
 use codesign::opt::exhaustive::solve_exhaustive;
+use codesign::opt::separable::solve_entry;
 use codesign::opt::{solve_inner, InnerProblem, SolveOpts};
 use codesign::stencil::defs::{Stencil, StencilId, ALL_STENCILS};
-use codesign::stencil::workload::ProblemSize;
-use codesign::timemodel::{SoftwareParams, TileSizes, TimeModel};
+use codesign::stencil::workload::{ProblemSize, WorkloadEntry};
+use codesign::timemodel::{CIterTable, SoftwareParams, TileSizes, TimeModel};
 use codesign::util::propcheck::{forall, forall_res, Config};
 
 fn random_hw(rng: &mut codesign::util::prng::Rng) -> HwParams {
@@ -46,6 +47,44 @@ fn prop_pareto_front_is_sound_and_complete() {
             {
                 return Err(format!("non-front point {i} not dominated"));
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_incremental_pareto_front_matches_batch() {
+    // The batched coordinator maintains its fronts incrementally; feeding
+    // any point sequence in index order must reproduce the batch
+    // `pareto_front` exactly, ties and duplicates included (quantized
+    // coordinates force plenty of both).
+    forall_res(Config::default().cases(200), |rng| {
+        let n = rng.range_u64(1, 150) as usize;
+        let quantized = rng.bernoulli(0.5);
+        let pts: Vec<(f64, f64)> = (0..n)
+            .map(|_| {
+                if quantized {
+                    (rng.range_u64(0, 12) as f64, rng.range_u64(0, 12) as f64)
+                } else {
+                    (rng.f64() * 100.0, rng.f64() * 100.0)
+                }
+            })
+            .collect();
+        let mut inc = ParetoFront::new();
+        let mut members = 0usize;
+        for (i, &(a, p)) in pts.iter().enumerate() {
+            if inc.insert(a, p, i) {
+                members += 1;
+            }
+        }
+        let batch = pareto_front(&pts);
+        if inc.indices() != batch {
+            return Err(format!("incremental {:?} != batch {:?} on {pts:?}", inc.indices(), batch));
+        }
+        // `insert` returning true means "joined the front at that moment";
+        // at least the surviving members must have reported so.
+        if members < inc.len() {
+            return Err("fewer reported insertions than survivors".into());
         }
         Ok(())
     });
@@ -190,6 +229,85 @@ fn prop_smart_solver_matches_brute_force_on_small_instances() {
             (b, s) => Err(format!("feasibility mismatch: brute {:?} smart {:?}", b.is_some(), s.is_some())),
         }
     });
+}
+
+#[test]
+fn certify_solve_entry_matches_exhaustive_on_all_six_stencils() {
+    // Optimality certification for the production sweep path: on a small
+    // grid where `solve_exhaustive` enumerates the ENTIRE feasible software
+    // space (tile bounds = the problem size, the solver's own t_T cap, every
+    // k), `opt::separable::solve_entry` must land on the same optimum for
+    // all six stencils. `all_k` removes the k-candidate heuristic from the
+    // comparison, so any gap would be a genuine solver miss. Exhaustive
+    // covers a superset of everything the smart solver can visit, hence
+    // smart can never be better — equality certifies exact optimality.
+    let model = TimeModel::maxwell();
+    let citer = CIterTable::paper();
+    let opts = SolveOpts { all_k: true, refine: true, max_t_t: 16 };
+    let hw = HwParams {
+        n_sm: 8,
+        n_v: 128,
+        r_vu_kb: 2.0,
+        m_sm_kb: 48.0,
+        l1_smpair_kb: 0.0,
+        l2_kb: 0.0,
+    };
+    for st in &ALL_STENCILS {
+        let size = if st.is_3d() { ProblemSize::d3(64, 16) } else { ProblemSize::d2(128, 32) };
+        let entry = WorkloadEntry { stencil: st.id, size, weight: 1.0 };
+        let smart = solve_entry(&model, &citer, &hw, &entry, &opts);
+        let p = InnerProblem { stencil: citer.apply(st), size, hw };
+        let brute =
+            solve_exhaustive(&model, &p, size.s1, size.s2, size.s3.unwrap_or(1), opts.max_t_t);
+        match (smart, brute) {
+            (None, None) => {}
+            (Some(s), Some(b)) => {
+                // Optimality: exhaustive enumerated every in-domain
+                // candidate, so the production solver must never be worse.
+                assert!(
+                    s.est.seconds <= b.est.seconds * (1.0 + 1e-9),
+                    "{:?}: smart {} ({:?}) worse than exhaustive {} ({:?})",
+                    st.id,
+                    s.est.seconds,
+                    s.sw,
+                    b.est.seconds,
+                    b.sw
+                );
+                // Exactness: the refinement phase has two moves that can
+                // step off the exhaustive grid (t_S2 += 32 past S2, and k
+                // past the per-SM block cap); whenever the optimum stayed
+                // on-grid — the overwhelmingly common case — the two
+                // solvers must agree to f64 noise.
+                let on_grid = s.sw.tiles.t_s2 <= size.s2
+                    && s.sw.k <= model.machine.max_blocks_per_sm;
+                if on_grid {
+                    let rel = (s.est.seconds - b.est.seconds).abs() / b.est.seconds;
+                    assert!(
+                        rel < 1e-9,
+                        "{:?}: smart {} ({:?}) vs exhaustive {} ({:?}), rel {rel:e}",
+                        st.id,
+                        s.est.seconds,
+                        s.sw,
+                        b.est.seconds,
+                        b.sw
+                    );
+                }
+                assert!(
+                    s.evals < b.evals,
+                    "{:?}: smart spent {} evals vs exhaustive {}",
+                    st.id,
+                    s.evals,
+                    b.evals
+                );
+            }
+            (s, b) => panic!(
+                "{:?}: feasibility mismatch — smart {:?} vs exhaustive {:?}",
+                st.id,
+                s.is_some(),
+                b.is_some()
+            ),
+        }
+    }
 }
 
 #[test]

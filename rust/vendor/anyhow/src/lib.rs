@@ -1,0 +1,178 @@
+//! Offline vendored stand-in for the `anyhow` crate.
+//!
+//! This image builds with no crates.io access, so the small slice of the
+//! `anyhow` API the repo uses is implemented here: [`Error`], [`Result`],
+//! the [`anyhow!`] / [`bail!`] / [`ensure!`] macros, and the [`Context`]
+//! extension trait for `Result<_, E: std::error::Error>` and `Option<_>`.
+//!
+//! Semantics match the real crate where it matters to callers:
+//! `{e}` displays the outermost message, `{e:#}` displays the whole cause
+//! chain joined by `": "` (the format the CLI and the manifest tests rely
+//! on), and `?` converts any `std::error::Error + Send + Sync + 'static`.
+
+use std::fmt;
+
+/// A dynamic error: an outermost message plus its cause chain, outermost
+/// first. Like the real `anyhow::Error`, this type deliberately does *not*
+/// implement `std::error::Error` (that keeps the blanket `From` below
+/// coherent).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a plain message (what [`anyhow!`] expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — plain `Result` defaulting the error to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to fallible values, converting the error to [`Error`].
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, context: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, context: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, context: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Result::<(), _>::Err(io_err())
+            .with_context(|| format!("reading {:?}", "x"))
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading \"x\"");
+        assert_eq!(format!("{e:#}"), "reading \"x\": missing thing");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        fn inner(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            let v = Some(7u32).context("always present")?;
+            if v == 0 {
+                bail!("impossible");
+            }
+            Ok(v)
+        }
+        assert_eq!(inner(true).unwrap(), 7);
+        let e = inner(false).unwrap_err();
+        assert_eq!(format!("{e:#}"), "flag was false");
+        let m = anyhow!("x = {}", 3);
+        assert_eq!(format!("{m}"), "x = 3");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{:#}", f().unwrap_err()), "missing thing");
+    }
+}

@@ -1,0 +1,118 @@
+//! Offline API stub of the `xla` crate (PJRT C API bindings).
+//!
+//! The native XLA/PJRT shared library is not vendored in this image, so this
+//! stub provides the exact type-and-method surface `runtime::engine` compiles
+//! against while reporting the runtime as unavailable from the single entry
+//! point ([`PjRtClient::cpu`]). Everything model-based — area model, time
+//! model, optimizer, DSE coordinator, reports — is independent of this crate;
+//! the runtime integration tests skip when no client can be constructed, just
+//! as they do in a checkout without `make artifacts`.
+
+use std::fmt;
+
+/// Stub error carrying a human-readable explanation.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: the XLA/PJRT native runtime is not vendored in this offline build \
+         (model-based paths are unaffected)"
+    ))
+}
+
+/// PJRT client handle. The only constructor fails in this stub, so every
+/// other method is statically reachable but dynamically dead.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module handle.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Computation wrapper around a parsed HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Host literal handle.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable("Literal::reshape"))
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("not vendored"));
+    }
+}
