@@ -1,76 +1,95 @@
-//! Batched DSE: answer many scenario queries from ONE shared hardware sweep.
+//! Batched DSE through the session service: answer many typed requests from
+//! ONE shared hardware sweep, then repeat the batch against the warm cache.
 //!
-//! The production question the coordinator's batch API serves: given one
-//! sweep of the hardware grid, answer an arbitrary mix of scenario queries —
-//! workload re-weightings, per-stencil subsets, chip-area budgets — without
-//! re-solving a single inner problem. Nine scenarios below share one sweep;
-//! the printed cache accounting shows the sweep cost is flat in the number
-//! of scenarios.
+//! The production question the service answers: given one sweep of the
+//! hardware grid, serve an arbitrary mix of requests — full explorations,
+//! §V-B what-if re-weightings, Pareto queries under chip-area budgets —
+//! without re-solving a single inner problem. Nine requests below share one
+//! sweep; the second submission of the same batch is pure cache service.
 //!
 //! Run with: `cargo run --release --example batch_scenarios`
 
-use codesign::area::AreaModel;
-use codesign::codesign::scenario::Scenario;
-use codesign::coordinator::Coordinator;
+use codesign::service::{CodesignRequest, CodesignResponse, ScenarioSpec, Session};
 use codesign::stencil::defs::StencilId;
-use codesign::timemodel::TimeModel;
 
 fn main() {
-    let base = Scenario::quick(Scenario::paper_2d(), 8);
+    let base = ScenarioSpec::two_d().quick(8);
     let only = |id: StencilId| {
-        base.clone()
-            .with_workload(
-                base.workload.reweighted(|e| if e.stencil == id { 1.0 } else { 0.0 }),
-            )
-            .named(&format!("only-{}", id.name()))
+        CodesignRequest::what_if(
+            base.clone().named(&format!("only-{}", id.name())),
+            vec![(id, 1.0)],
+        )
     };
-    let scenarios = vec![
-        base.clone().named("uniform-2d"),
+    let requests = vec![
+        CodesignRequest::explore(base.clone().named("uniform-2d")),
         only(StencilId::Jacobi2D),
         only(StencilId::Heat2D),
         only(StencilId::Laplacian2D),
         only(StencilId::Gradient2D),
-        base.clone().with_area_budget(300.0).named("budget-300mm2"),
-        base.clone().with_area_budget(380.0).named("budget-380mm2"),
-        base.clone().with_area_budget(460.0).named("budget-460mm2"),
-        base.clone()
-            .with_workload(
-                base.workload
-                    .reweighted(|e| if e.stencil == StencilId::Jacobi2D { 7.0 } else { 1.0 }),
-            )
-            .named("jacobi-heavy-70/10/10/10"),
+        CodesignRequest::pareto(base.clone().with_area_budget(300.0).named("budget-300mm2")),
+        CodesignRequest::pareto(base.clone().with_area_budget(380.0).named("budget-380mm2")),
+        CodesignRequest::pareto(base.clone().with_area_budget(460.0).named("budget-460mm2")),
+        CodesignRequest::what_if(
+            base.clone().named("jacobi-heavy-70/10/10/10"),
+            vec![
+                (StencilId::Jacobi2D, 7.0),
+                (StencilId::Heat2D, 1.0),
+                (StencilId::Laplacian2D, 1.0),
+                (StencilId::Gradient2D, 1.0),
+            ],
+        ),
     ];
-    assert!(scenarios.len() >= 8, "the demo promises at least 8 scenarios");
+    assert!(requests.len() >= 8, "the demo promises at least 8 requests");
 
-    let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
-    let rep = coord.run_batch_report(&scenarios);
-    assert_eq!(rep.reports.len(), scenarios.len());
+    let mut session = Session::paper();
+    let rep = session.submit_all(&requests);
+    assert_eq!(rep.answers.len(), requests.len());
 
     println!(
         "{:<28} {:>7} {:>7} {:>12} {:>14}",
-        "scenario", "designs", "pareto", "best GFLOP/s", "vs GTX980"
+        "request", "designs", "pareto", "best GFLOP/s", "vs GTX980"
     );
-    for r in &rep.reports {
-        let res = &r.result;
-        let best = res.points.iter().map(|p| p.gflops).fold(0.0, f64::max);
-        let (ref_name, impr, _) = &res.stats.vs_reference[0];
-        println!(
-            "{:<28} {:>7} {:>7} {:>12.0} {:>+12.1}% ({ref_name})",
-            res.scenario_name,
-            res.points.len(),
-            res.pareto.len(),
-            best,
-            impr
-        );
+    for a in &rep.answers {
+        match &a.response {
+            CodesignResponse::Explore(s) | CodesignResponse::WhatIf(s) => {
+                let best = s.best.as_ref().map(|d| d.gflops).unwrap_or(0.0);
+                let vs = s
+                    .references
+                    .iter()
+                    .find(|r| r.name == "gtx980")
+                    .and_then(|r| r.improvement_pct)
+                    .unwrap_or(f64::NAN);
+                println!(
+                    "{:<28} {:>7} {:>7} {:>12.0} {:>+12.1}% (gtx980)",
+                    s.scenario,
+                    s.designs,
+                    s.pareto.len(),
+                    best,
+                    vs
+                );
+            }
+            CodesignResponse::Pareto(p) => {
+                let best = p.pareto.last().map(|d| d.gflops).unwrap_or(0.0);
+                println!(
+                    "{:<28} {:>7} {:>7} {:>12.0} {:>14}",
+                    p.scenario,
+                    p.designs,
+                    p.pareto.len(),
+                    best,
+                    "-"
+                );
+            }
+            other => panic!("unexpected response '{}'", other.kind()),
+        }
     }
 
-    // The whole point: scenario-by-scenario solving would have cost the
+    // The whole point: request-by-request solving would have cost the
     // serve-phase lookups in inner solves; the shared sweep solved only the
     // deduplicated union.
-    let serve_lookups = rep.lookups - rep.unique_instances as u64;
+    let serve_lookups = rep.lookups() - rep.unique_instances as u64;
     println!(
-        "\n{} scenarios answered from one sweep in {:?}:",
-        rep.reports.len(),
+        "\n{} requests answered from one sweep in {:?}:",
+        rep.answers.len(),
         rep.wall
     );
     println!(
@@ -78,19 +97,22 @@ fn main() {
          ({:.1}% cache hits)",
         rep.unique_instances,
         serve_lookups,
-        100.0 * rep.cache_hit_rate
+        100.0 * rep.cache_hit_rate()
     );
     println!(
-        "  scenario-by-scenario solving would have needed {serve_lookups} inner solves \
+        "  request-by-request solving would have needed {serve_lookups} inner solves \
          ({:.1}x the shared sweep)",
         serve_lookups as f64 / rep.unique_instances as f64
     );
 
-    // A second batch over the same grid is pure cache service.
-    let again = coord.run_batch_report(&scenarios);
+    // A second submission of the same batch is pure cache service.
+    let again = session.submit_all(&requests);
     println!(
         "  repeated batch: {:.2}% hits in {:?}",
-        100.0 * again.cache_hit_rate,
+        100.0 * again.cache_hit_rate(),
         again.wall
     );
+    for (a, b) in rep.answers.iter().zip(&again.answers) {
+        assert_eq!(a.response, b.response, "warm repeat must be bit-identical");
+    }
 }

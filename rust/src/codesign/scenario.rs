@@ -102,15 +102,25 @@ impl Scenario {
     }
 
     /// Reduced scenario for tests / quick runs: small space, thinned
-    /// workload (every `stride`-th size instance).
+    /// workload (every `stride`-th size instance; `step_by` always keeps the
+    /// first entry, so any stride leaves at least one entry of a non-empty
+    /// workload). Falls back to uniform weights when the kept entries carry
+    /// zero total weight — normalizing by zero would poison every downstream
+    /// aggregate with NaN.
     pub fn quick(base: Scenario, stride: usize) -> Scenario {
         let mut workload = base.workload.clone();
-        let kept: Vec<_> =
+        workload.entries =
             workload.entries.iter().copied().step_by(stride.max(1)).collect();
-        workload.entries = kept;
         let total: f64 = workload.entries.iter().map(|e| e.weight).sum();
-        for e in &mut workload.entries {
-            e.weight /= total;
+        if total > 0.0 {
+            for e in &mut workload.entries {
+                e.weight /= total;
+            }
+        } else if !workload.entries.is_empty() {
+            let uniform = 1.0 / workload.entries.len() as f64;
+            for e in &mut workload.entries {
+                e.weight = uniform;
+            }
         }
         Scenario { workload, space: SpaceSpec::small(), ..base }
     }
@@ -290,6 +300,31 @@ mod tests {
         let (name, impr, _) = &r.stats.vs_reference[0];
         assert_eq!(name, "gtx980");
         assert!(*impr > 20.0, "improvement over GTX980 = {impr}%");
+    }
+
+    #[test]
+    fn quick_oversized_stride_keeps_one_normalized_entry() {
+        // A stride beyond the entry count must not leave an empty workload
+        // or normalize by a zero total.
+        let sc = Scenario::quick(Scenario::paper_2d(), 10_000);
+        assert_eq!(sc.workload.entries.len(), 1);
+        assert!((sc.workload.total_weight() - 1.0).abs() < 1e-12);
+        assert!(sc.workload.entries[0].weight.is_finite());
+    }
+
+    #[test]
+    fn quick_zero_weight_survivors_get_uniform_weights() {
+        // If thinning keeps only zero-weighted entries, quick() must fall
+        // back to uniform weights instead of dividing by zero.
+        let mut base = Scenario::paper_2d();
+        for e in &mut base.workload.entries {
+            e.weight = 0.0;
+        }
+        base.workload.entries[1].weight = 1.0; // dropped by any stride >= 2
+        let sc = Scenario::quick(base, 10_000);
+        assert!(!sc.workload.entries.is_empty());
+        assert!((sc.workload.total_weight() - 1.0).abs() < 1e-12);
+        assert!(sc.workload.entries.iter().all(|e| e.weight.is_finite()));
     }
 
     #[test]

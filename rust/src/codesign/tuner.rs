@@ -9,7 +9,7 @@
 
 use crate::area::model::AreaModel;
 use crate::area::params::HwParams;
-use crate::codesign::space::m_sm_grid;
+use crate::codesign::space::{m_sm_grid, DesignPoint};
 use crate::opt::problem::SolveOpts;
 use crate::opt::separable::solve_hardware_point;
 use crate::stencil::workload::Workload;
@@ -51,16 +51,11 @@ pub struct TuneResult {
     pub candidates: usize,
 }
 
-/// Search the unpinned dimensions for the best completion within the budget.
-pub fn tune(
-    pinned: &Pinned,
-    budget_mm2: f64,
-    workload: &Workload,
-    area_model: &AreaModel,
-    time_model: &TimeModel,
-    citer: &CIterTable,
-    opts: &SolveOpts,
-) -> Option<TuneResult> {
+/// Enumerate the area-feasible completions of `pinned` within the budget, in
+/// the deterministic (n_SM, n_V, M_SM) nested order the tuner searches. The
+/// shared grid behind [`tune`] and the session service's memoized tune path
+/// (`service::session`), so both examine identical candidates.
+pub fn candidate_grid(pinned: &Pinned, budget_mm2: f64, area_model: &AreaModel) -> Vec<DesignPoint> {
     let n_sm_grid: Vec<u32> = match pinned.n_sm {
         Some(v) => vec![v],
         None => (2..=32).step_by(2).collect(),
@@ -74,29 +69,48 @@ pub fn tune(
         None => m_sm_grid(480.0),
     };
     let (l1, l2) = pinned.caches.unwrap_or((0.0, 0.0));
-
-    let mut best: Option<TuneResult> = None;
-    let mut candidates = 0usize;
+    let mut out = Vec::new();
     for &n_sm in &n_sm_grid {
         for &n_v in &n_v_grid {
             for &m_sm_kb in &m_grid {
                 let hw = HwParams { n_sm, n_v, r_vu_kb: 2.0, m_sm_kb, l1_smpair_kb: l1, l2_kb: l2 };
                 let area = area_model.area_mm2(&hw);
-                if area > budget_mm2 {
-                    continue;
-                }
-                candidates += 1;
-                let sol = solve_hardware_point(time_model, workload, citer, &hw, opts);
-                if let (Some(seconds), Some(gflops)) = (sol.weighted_seconds, sol.weighted_gflops)
-                {
-                    if best.as_ref().map_or(true, |b| gflops > b.gflops) {
-                        best = Some(TuneResult { hw, area_mm2: area, gflops, seconds, candidates });
-                    }
+                if area <= budget_mm2 {
+                    out.push(DesignPoint { hw, area_mm2: area });
                 }
             }
         }
     }
-    best.map(|b| TuneResult { candidates, ..b })
+    out
+}
+
+/// Search the unpinned dimensions for the best completion within the budget.
+pub fn tune(
+    pinned: &Pinned,
+    budget_mm2: f64,
+    workload: &Workload,
+    area_model: &AreaModel,
+    time_model: &TimeModel,
+    citer: &CIterTable,
+    opts: &SolveOpts,
+) -> Option<TuneResult> {
+    let candidates = candidate_grid(pinned, budget_mm2, area_model);
+    let mut best: Option<TuneResult> = None;
+    for c in &candidates {
+        let sol = solve_hardware_point(time_model, workload, citer, &c.hw, opts);
+        if let (Some(seconds), Some(gflops)) = (sol.weighted_seconds, sol.weighted_gflops) {
+            if best.as_ref().map_or(true, |b| gflops > b.gflops) {
+                best = Some(TuneResult {
+                    hw: c.hw,
+                    area_mm2: c.area_mm2,
+                    gflops,
+                    seconds,
+                    candidates: 0,
+                });
+            }
+        }
+    }
+    best.map(|b| TuneResult { candidates: candidates.len(), ..b })
 }
 
 #[cfg(test)]
@@ -159,6 +173,21 @@ mod tests {
         let lo = tune(&pinned, 300.0, &wl, &am, &tm, &ci, &opts).unwrap();
         let hi = tune(&pinned, 500.0, &wl, &am, &tm, &ci, &opts).unwrap();
         assert!(hi.gflops >= lo.gflops);
+    }
+
+    #[test]
+    fn candidate_grid_is_area_feasible_and_deterministic() {
+        let am = AreaModel::paper();
+        let pinned = Pinned { n_v: Some(128), m_sm_kb: Some(96.0), ..Default::default() };
+        let a = candidate_grid(&pinned, 430.0, &am);
+        let b = candidate_grid(&pinned, 430.0, &am);
+        assert!(!a.is_empty());
+        assert!(a.iter().all(|c| c.area_mm2 <= 430.0));
+        assert!(a.iter().all(|c| c.hw.n_v == 128 && c.hw.m_sm_kb == 96.0));
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x.hw == y.hw));
+        // n_SM ascending — the tuner's historical search order.
+        assert!(a.windows(2).all(|w| w[0].hw.n_sm <= w[1].hw.n_sm));
     }
 
     #[test]

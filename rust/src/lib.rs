@@ -18,7 +18,9 @@
 //!   ([`cacti`]), execution-time model ([`timemodel`]), MINLP optimizer
 //!   ([`opt`]), codesign engine ([`codesign`]), cycle-approximate GPU
 //!   simulator ([`sim`]), PJRT runtime ([`runtime`]), DSE coordinator
-//!   ([`coordinator`]), and report generation ([`report`]).
+//!   ([`coordinator`]), report generation ([`report`]), and the session
+//!   service ([`service`]) — the typed request API everything public
+//!   routes through.
 //!
 //! See `DESIGN.md` (repo root) for the system inventory, the batched DSE
 //! engine's contract, and the per-experiment index.
@@ -30,6 +32,7 @@ pub mod coordinator;
 pub mod opt;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod stencil;
 pub mod timemodel;

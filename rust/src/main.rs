@@ -1,17 +1,25 @@
-//! `codesign` — the leader binary: CLI over the full reproduction.
+//! `codesign` — the leader binary: a thin CLI adapter over the session
+//! service.
 //!
-//! Subcommands map 1:1 onto the experiments of DESIGN.md §6; `report --all`
+//! Every subcommand that evaluates scenarios (`explore`, `sensitivity`,
+//! `report`, `tune`, `validate`, `solver-cost`) builds typed
+//! [`CodesignRequest`]s and routes them through one [`Session::submit`]
+//! path, so all of them share the warm memo store and the batched sweep
+//! engine; `serve` answers a JSON request file through the same session.
+//! Subcommands map onto the experiments of DESIGN.md §6; `report --all`
 //! regenerates every paper table/figure under `reports/`.
 
 use codesign::area::AreaModel;
-use codesign::codesign::scenario::Scenario;
-use codesign::coordinator::Coordinator;
 use codesign::report;
 use codesign::runtime::{measure_citer, Engine};
-use codesign::sim::validate_sweep;
+use codesign::service::{
+    wire, CodesignRequest, CodesignResponse, ResponseDetail, ScenarioSpec, Session,
+    SubmitReport, TuneRequest,
+};
 use codesign::stencil::defs::StencilId;
 use codesign::timemodel::{CIterTable, TimeModel};
 use codesign::util::cli::{Args, Cli, Command, OptSpec, Parsed};
+use codesign::util::json::Json;
 use std::path::Path;
 
 fn cli() -> Cli {
@@ -71,6 +79,7 @@ fn cli() -> Cli {
                 name: "tune",
                 about: "§V-D: pin a subset of {n-sm, n-v, m-sm} and optimize the rest under a budget",
                 opts: vec![
+                    threads.clone(),
                     OptSpec { name: "budget", takes_value: true, default: Some("450"), help: "area budget, mm²" },
                     OptSpec { name: "n-sm", takes_value: true, default: None, help: "pin the SM count" },
                     OptSpec { name: "n-v", takes_value: true, default: None, help: "pin vector units per SM" },
@@ -86,6 +95,16 @@ fn cli() -> Cli {
                     quick.clone(),
                     threads,
                     OptSpec { name: "all", takes_value: false, default: None, help: "all experiments" },
+                ],
+            },
+            Command {
+                name: "serve",
+                about: "answer a JSON request file through one warm session (wire schema v1)",
+                opts: vec![
+                    OptSpec { name: "requests", takes_value: true, default: None, help: "request file path (required)" },
+                    OptSpec { name: "out", takes_value: true, default: Some("-"), help: "response file path ('-' = stdout)" },
+                    OptSpec { name: "pretty", takes_value: false, default: None, help: "indent the response JSON" },
+                    OptSpec { name: "bench-out", takes_value: true, default: None, help: "write wall/cache/eval stats JSON here" },
                 ],
             },
         ],
@@ -109,12 +128,30 @@ fn main() {
     }
 }
 
-fn scenario(base: Scenario, args: &Args) -> Scenario {
-    let mut sc = if args.flag("quick") { Scenario::quick(base, 4) } else { base };
-    if let Some(t) = args.opt_usize("threads") {
-        sc.threads = t.max(1);
+/// A scenario spec from the shared CLI options (`--quick`, `--threads`).
+fn spec_from_args(spec: ScenarioSpec, args: &Args, citer: &CIterTable) -> ScenarioSpec {
+    let mut spec = spec.with_citer(citer.clone());
+    if args.flag("quick") {
+        spec = spec.quick(4);
     }
-    sc
+    if let Some(t) = args.opt_usize("threads") {
+        spec = spec.with_threads(t);
+    }
+    spec
+}
+
+fn session_stats_line(session: &Session, rep: &SubmitReport) {
+    eprintln!(
+        "[service] {} request(s) answered in {:?}: {} unique instances swept, \
+         {} lookups ({:.1}% cache hits), {} cached entries across {} partition(s)",
+        rep.answers.len(),
+        rep.wall,
+        rep.unique_instances,
+        rep.lookups(),
+        100.0 * rep.cache_hit_rate(),
+        session.cache_entries(),
+        session.partitions(),
+    );
 }
 
 fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
@@ -132,76 +169,114 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
         }
         "explore" | "sensitivity" | "report" => {
             let class = args.opt_or("class", "both");
+            anyhow::ensure!(
+                matches!(class.as_str(), "2d" | "3d" | "both"),
+                "--class must be 2d, 3d or both (got '{class}')"
+            );
             let citer = if args.flag("measured-citer") {
                 let mut engine = Engine::from_default_artifacts()?;
                 measure_citer(&mut engine, 3)?
             } else {
                 CIterTable::paper()
             };
-            let coord = Coordinator::new(area_model, time_model).with_progress(500);
-            let mut results = Vec::new();
-            for base in [Scenario::paper_2d(), Scenario::paper_3d()] {
-                if cmd == "explore" && class != "both" && base.name != class {
-                    continue;
+            // `--class` filters *before* any scenario is constructed: only
+            // the requested specs are ever built.
+            let want_2d = cmd != "explore" || class != "3d";
+            let want_3d = cmd != "explore" || class != "2d";
+            let spec_2d = want_2d.then(|| spec_from_args(ScenarioSpec::two_d(), args, &citer));
+            let spec_3d = want_3d.then(|| spec_from_args(ScenarioSpec::three_d(), args, &citer));
+
+            let mut requests = Vec::new();
+            for spec in [&spec_2d, &spec_3d].into_iter().flatten() {
+                requests.push(CodesignRequest::explore(spec.clone()));
+            }
+            if cmd != "explore" {
+                if let (Some(s2), Some(s3)) = (&spec_2d, &spec_3d) {
+                    requests.push(CodesignRequest::sensitivity(
+                        s2.clone(),
+                        s3.clone(),
+                        (425.0, 450.0),
+                    ));
                 }
-                let mut sc = scenario(base, args);
-                sc.citer = citer.clone();
-                eprintln!("[explore] running {} scenario…", sc.name);
-                let rep = coord.run_scenario(&sc);
-                eprintln!(
-                    "[explore] {}: {} points, {:?}, cache {} entries ({:.0}% hits)",
-                    sc.name,
-                    rep.result.points.len(),
-                    rep.wall,
-                    rep.cache_entries,
-                    100.0 * rep.cache_hit_rate
-                );
-                results.push((sc, rep));
             }
-            for (_, rep) in &results {
-                let fig3 = report::fig3::generate(&rep.result, &area_model);
-                print!("{}", fig3.summary);
-                fig3.save(out)?;
-                let fig4 = report::fig4::generate(&rep.result, &area_model);
-                print!("{}", fig4.summary);
-                fig4.save(out)?;
+            if cmd == "report" && args.flag("all") {
+                requests.push(CodesignRequest::SolverCost {
+                    anneal_iters: 20_000,
+                    citer: CIterTable::paper(),
+                });
             }
-            if (cmd != "explore") && results.len() == 2 {
-                let t2 = report::table2::generate(
-                    &results[0].1.result,
-                    &results[0].0.workload,
-                    &results[1].1.result,
-                    &results[1].0.workload,
-                    &time_model,
-                    &results[0].0.citer,
-                    (425.0, 450.0),
-                );
-                print!("{}", t2.summary);
-                t2.save(out)?;
+
+            let mut session = Session::new(area_model, time_model).with_progress(500);
+            let rep = session.submit_all(&requests);
+            session_stats_line(&session, &rep);
+            for answer in &rep.answers {
+                match (&answer.response, &answer.detail) {
+                    (CodesignResponse::Explore(_), ResponseDetail::Scenarios(details)) => {
+                        for d in details {
+                            let fig3 = report::fig3::generate(&d.result, &area_model);
+                            print!("{}", fig3.summary);
+                            fig3.save(out)?;
+                            let fig4 = report::fig4::generate(&d.result, &area_model);
+                            print!("{}", fig4.summary);
+                            fig4.save(out)?;
+                        }
+                    }
+                    (CodesignResponse::Sensitivity(_), ResponseDetail::Scenarios(details)) => {
+                        let [d2, d3] = &details[..] else {
+                            anyhow::bail!("sensitivity answer must carry two scenarios");
+                        };
+                        let t2 = report::table2::generate(
+                            &d2.result,
+                            &d2.scenario.workload,
+                            &d3.result,
+                            &d3.scenario.workload,
+                            &time_model,
+                            &d2.scenario.citer,
+                            (425.0, 450.0),
+                        );
+                        print!("{}", t2.summary);
+                        t2.save(out)?;
+                    }
+                    (CodesignResponse::SolverCost(_), ResponseDetail::Report(r)) => {
+                        print!("{}", r.summary);
+                        r.save(out)?;
+                    }
+                    (CodesignResponse::Error(e), _) => {
+                        anyhow::bail!("{} request failed: {}", e.request, e.message)
+                    }
+                    _ => {}
+                }
             }
             if cmd == "report" && args.flag("all") {
                 let fig2 = report::fig2::generate_default();
                 print!("{}", fig2.summary);
                 fig2.save(out)?;
-                let sc = report::solver_cost::generate(&time_model, &CIterTable::paper(), 20_000);
-                print!("{}", sc.summary);
-                sc.save(out)?;
             }
         }
         "solver-cost" => {
-            let rep = report::solver_cost::generate(&time_model, &CIterTable::paper(), 50_000);
-            print!("{}", rep.summary);
-            rep.save(out)?;
+            let mut session = Session::new(area_model, time_model);
+            let answer = session.submit(&CodesignRequest::solver_cost(50_000));
+            match (&answer.response, &answer.detail) {
+                (CodesignResponse::SolverCost(_), ResponseDetail::Report(r)) => {
+                    print!("{}", r.summary);
+                    r.save(out)?;
+                }
+                (other, _) => anyhow::bail!("unexpected response '{}'", other.kind()),
+            }
         }
         "validate" => {
-            let rep = validate_sweep(&time_model);
+            let mut session = Session::new(area_model, time_model);
+            let answer = session.submit(&CodesignRequest::validate());
+            let (CodesignResponse::Validate(v), ResponseDetail::Validation(full)) =
+                (&answer.response, &answer.detail)
+            else {
+                anyhow::bail!("unexpected response '{}'", answer.response.kind());
+            };
             println!(
                 "model vs simulator over {} configurations: MAPE {:.1}%, Kendall tau {:.3}",
-                rep.cases.len(),
-                rep.mape_pct,
-                rep.kendall_tau
+                v.cases, v.mape_pct, v.kendall_tau
             );
-            for c in rep.cases.iter().take(8) {
+            for c in full.cases.iter().take(8) {
                 println!(
                     "  {:<64} model {:>10.4} ms  sim {:>10.4} ms  ({:+.1}%)",
                     c.label,
@@ -256,40 +331,86 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
             println!("output mean {mean:.6}, first interior value {}", run.output[entry.shape[1] + 3]);
         }
         "tune" => {
-            use codesign::codesign::tuner::{tune, Pinned};
-            use codesign::opt::problem::SolveOpts;
-            use codesign::stencil::workload::Workload;
             let budget = args.opt_f64("budget").unwrap_or(450.0);
-            let pinned = Pinned {
-                n_sm: args.opt_usize("n-sm").map(|v| v as u32),
-                n_v: args.opt_usize("n-v").map(|v| v as u32),
-                m_sm_kb: args.opt_f64("m-sm"),
-                caches: None,
+            let mut req = TuneRequest::new(budget);
+            req.n_sm = args.opt_usize("n-sm").map(|v| v as u32);
+            req.n_v = args.opt_usize("n-v").map(|v| v as u32);
+            req.m_sm_kb = args.opt_f64("m-sm");
+            req.threads = args.opt_usize("threads");
+            if let Some(name) = args.opt("stencil") {
+                let id = StencilId::from_name(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown stencil '{name}'"))?;
+                req.stencil = Some(id);
+            }
+            let mut session = Session::new(area_model, time_model);
+            let answer = session.submit(&CodesignRequest::Tune(req));
+            let CodesignResponse::Tune(t) = &answer.response else {
+                anyhow::bail!("unexpected response '{}'", answer.response.kind());
             };
-            let workload = match args.opt("stencil") {
-                Some(name) => {
-                    let id = StencilId::from_name(name)
-                        .ok_or_else(|| anyhow::anyhow!("unknown stencil '{name}'"))?;
-                    Workload::single(id)
-                }
-                None => Workload::uniform_2d(),
-            };
-            let r = tune(
-                &pinned,
-                budget,
-                &workload,
-                &area_model,
-                &time_model,
-                &CIterTable::paper(),
-                &SolveOpts::default(),
-            )
-            .ok_or_else(|| anyhow::anyhow!("no feasible design within {budget} mm²"))?;
+            let best = t
+                .best
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("no feasible design within {budget} mm²"))?;
             println!(
                 "best completion within {budget} mm² over {} candidates:\n  {} -> {:.0} GFLOP/s at {:.0} mm²",
-                r.candidates,
-                r.hw.label(),
-                r.gflops,
-                r.area_mm2
+                t.candidates,
+                best.label(),
+                best.gflops,
+                best.area_mm2
+            );
+        }
+        "serve" => {
+            let path = args
+                .opt("requests")
+                .ok_or_else(|| anyhow::anyhow!("serve needs --requests <file.json>"))?;
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("cannot read '{path}': {e}"))?;
+            let requests = wire::decode_requests(&text)?;
+            let mut session = Session::new(area_model, time_model);
+            let rep = session.submit_all(&requests);
+            session_stats_line(&session, &rep);
+            let mut failed = 0usize;
+            for (i, a) in rep.answers.iter().enumerate() {
+                if let CodesignResponse::Error(e) = &a.response {
+                    eprintln!("[service] request {i} ({}) failed: {}", e.request, e.message);
+                    failed += 1;
+                }
+            }
+            let responses: Vec<CodesignResponse> =
+                rep.answers.iter().map(|a| a.response.clone()).collect();
+            let envelope = wire::encode_responses(&responses);
+            let rendered = if args.flag("pretty") {
+                envelope.to_string_pretty()
+            } else {
+                envelope.to_string_compact()
+            };
+            let dest = args.opt_or("out", "-");
+            if dest == "-" {
+                println!("{rendered}");
+            } else {
+                std::fs::write(&dest, &rendered)?;
+                eprintln!("wrote {dest}");
+            }
+            if let Some(bench_path) = args.opt("bench-out") {
+                let total_evals: u64 =
+                    responses.iter().map(CodesignResponse::total_evals).sum();
+                let bench = Json::obj(vec![
+                    ("requests", Json::num(requests.len() as f64)),
+                    ("wall_ms", Json::num(rep.wall.as_secs_f64() * 1e3)),
+                    ("cache_hit_rate", Json::num(rep.cache_hit_rate())),
+                    ("lookups", Json::num(rep.lookups() as f64)),
+                    ("unique_instances", Json::num(rep.unique_instances as f64)),
+                    ("total_evals", Json::num(total_evals as f64)),
+                ]);
+                std::fs::write(bench_path, bench.to_string_pretty())?;
+                eprintln!("wrote {bench_path}");
+            }
+            // Responses (and bench stats) are written above even on failure;
+            // the nonzero exit keeps CI honest about error answers.
+            anyhow::ensure!(
+                failed == 0,
+                "{failed} of {} request(s) answered with an error",
+                requests.len()
             );
         }
         other => anyhow::bail!("unhandled command {other}"),

@@ -1,0 +1,42 @@
+//! The session service — the crate's one public API.
+//!
+//! Three pieces:
+//!
+//! * [`request`] — the typed vocabulary: a [`CodesignRequest`] variant per
+//!   experiment (Explore, Pareto, WhatIf, Sensitivity, Tune, Validate,
+//!   SolverCost), builder-style [`ScenarioSpec`] construction, and a typed
+//!   [`CodesignResponse`] per variant.
+//! * [`session`] — the persistent [`Session`]: owns the coordinators, keeps
+//!   their memo caches warm across calls, and auto-partitions each submission
+//!   into compatible batch groups by (C_iter, solver options) so mixed
+//!   request sets batch instead of being rejected.
+//! * [`wire`] — the versioned JSON wire format: bit-exact request/response
+//!   round-trips and the `{"schema": 1, …}` file envelopes behind
+//!   `codesign serve --requests`.
+//!
+//! ```no_run
+//! use codesign::service::{CodesignRequest, ScenarioSpec, Session};
+//!
+//! let mut session = Session::paper();
+//! let first = session.submit(&CodesignRequest::explore(ScenarioSpec::two_d()));
+//! // A follow-up over the same grid is answered almost entirely from cache.
+//! let again = session.submit(&CodesignRequest::explore(ScenarioSpec::two_d()));
+//! assert_eq!(first.response, again.response);
+//! ```
+
+pub mod request;
+pub mod session;
+pub mod wire;
+
+pub use request::{
+    CodesignRequest, CodesignResponse, DesignSummary, ErrorInfo, ParetoSummary,
+    ReferenceSummary, ScenarioSpec, ScenarioSummary, SensitivityRow, SensitivitySummary,
+    SolverCostSummary, TuneRequest, TuneSummary, ValidateSummary, WorkloadClass,
+};
+pub use session::{
+    ResponseDetail, ScenarioDetail, Session, SessionAnswer, SubmitReport,
+};
+pub use wire::{
+    decode_requests, decode_responses, encode_requests, encode_responses, request_from_json,
+    request_to_json, response_from_json, response_to_json, SCHEMA_VERSION,
+};

@@ -1,0 +1,565 @@
+//! The typed request/response vocabulary of the session service — the one
+//! public API surface of the crate.
+//!
+//! Every experiment the CLI, examples and benches used to hand-roll is a
+//! [`CodesignRequest`] variant: full exploration, Pareto-front queries,
+//! §V-B what-if re-weightings, Table II sensitivity, §V-D partial-codesign
+//! tuning, model validation and solver-cost accounting. Requests are built
+//! with builder-style constructors ([`ScenarioSpec`]), answered by a
+//! [`crate::service::Session`], and carried over the versioned JSON wire
+//! format of [`crate::service::wire`].
+
+use crate::codesign::scenario::Scenario;
+use crate::opt::problem::SolveOpts;
+use crate::stencil::defs::{Stencil, StencilId};
+use crate::stencil::workload::Workload;
+use crate::timemodel::citer::CIterTable;
+
+/// Which workload family a scenario draws its program instances from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadClass {
+    /// The four 2-D stencils over §IV-A's 16-size grid.
+    TwoD,
+    /// The two 3-D stencils over the cube grid.
+    ThreeD,
+    /// One benchmark over its dimension-appropriate size grid.
+    Single(StencilId),
+}
+
+impl WorkloadClass {
+    pub fn name(&self) -> String {
+        match self {
+            WorkloadClass::TwoD => "2d".to_string(),
+            WorkloadClass::ThreeD => "3d".to_string(),
+            WorkloadClass::Single(id) => id.name().to_string(),
+        }
+    }
+}
+
+/// A serializable scenario description — what a request carries instead of a
+/// materialized [`Scenario`]. Construction is builder-style; the session
+/// materializes it late, so request-level filtering (e.g. `explore --class`)
+/// never pays for scenarios it discards.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    /// Display name (derived from the modifiers when `None`).
+    pub name: Option<String>,
+    pub class: WorkloadClass,
+    /// Keep every `stride`-th workload entry and shrink to the small space.
+    pub quick_stride: Option<usize>,
+    /// Total-silicon budget; tighter budgets enumerate a subset of the same
+    /// grid, so a warm session answers them without new inner solves.
+    pub area_budget_mm2: Option<f64>,
+    /// Per-stencil weights (§V-B re-weighting). Empty = uniform; when
+    /// non-empty, stencils not listed weigh zero.
+    pub stencil_weights: Vec<(StencilId, f64)>,
+    pub threads: Option<usize>,
+    pub citer: CIterTable,
+    pub solve_opts: SolveOpts,
+}
+
+impl ScenarioSpec {
+    pub fn new(class: WorkloadClass) -> ScenarioSpec {
+        ScenarioSpec {
+            name: None,
+            class,
+            quick_stride: None,
+            area_budget_mm2: None,
+            stencil_weights: Vec::new(),
+            threads: None,
+            citer: CIterTable::paper(),
+            solve_opts: SolveOpts::default(),
+        }
+    }
+
+    pub fn two_d() -> ScenarioSpec {
+        ScenarioSpec::new(WorkloadClass::TwoD)
+    }
+
+    pub fn three_d() -> ScenarioSpec {
+        ScenarioSpec::new(WorkloadClass::ThreeD)
+    }
+
+    pub fn single(id: StencilId) -> ScenarioSpec {
+        ScenarioSpec::new(WorkloadClass::Single(id))
+    }
+
+    pub fn named(mut self, name: &str) -> ScenarioSpec {
+        self.name = Some(name.to_string());
+        self
+    }
+
+    pub fn quick(mut self, stride: usize) -> ScenarioSpec {
+        self.quick_stride = Some(stride.max(1));
+        self
+    }
+
+    pub fn with_area_budget(mut self, mm2: f64) -> ScenarioSpec {
+        self.area_budget_mm2 = Some(mm2);
+        self
+    }
+
+    /// Add one stencil's weight (replaces an earlier weight for the same
+    /// stencil). Any stencil never weighted is excluded once weights exist.
+    pub fn weighted(mut self, id: StencilId, weight: f64) -> ScenarioSpec {
+        self.stencil_weights.retain(|(s, _)| *s != id);
+        self.stencil_weights.push((id, weight));
+        self
+    }
+
+    pub fn with_weights(mut self, weights: Vec<(StencilId, f64)>) -> ScenarioSpec {
+        self.stencil_weights = weights;
+        self
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> ScenarioSpec {
+        self.threads = Some(threads.max(1));
+        self
+    }
+
+    pub fn with_citer(mut self, citer: CIterTable) -> ScenarioSpec {
+        self.citer = citer;
+        self
+    }
+
+    pub fn with_solve_opts(mut self, opts: SolveOpts) -> ScenarioSpec {
+        self.solve_opts = opts;
+        self
+    }
+
+    /// The display name this spec materializes under.
+    pub fn scenario_name(&self) -> String {
+        if let Some(n) = &self.name {
+            return n.clone();
+        }
+        let mut n = self.class.name();
+        if !self.stencil_weights.is_empty() {
+            n.push_str("-reweighted");
+        }
+        if let Some(b) = self.area_budget_mm2 {
+            n.push_str(&format!("-b{b:.0}"));
+        }
+        n
+    }
+
+    /// Materialize the scenario this spec describes. Fails (instead of
+    /// panicking downstream) when the weight vector zeroes out every kept
+    /// workload entry.
+    pub fn to_scenario(&self) -> anyhow::Result<Scenario> {
+        let mut sc = match self.class {
+            WorkloadClass::TwoD => Scenario::paper_2d(),
+            WorkloadClass::ThreeD => Scenario::paper_3d(),
+            WorkloadClass::Single(id) => {
+                let mut s = if Stencil::get(id).is_3d() {
+                    Scenario::paper_3d()
+                } else {
+                    Scenario::paper_2d()
+                };
+                s.workload = Workload::single(id);
+                s
+            }
+        };
+        if let Some(stride) = self.quick_stride {
+            sc = Scenario::quick(sc, stride);
+        }
+        if !self.stencil_weights.is_empty() {
+            for (id, w) in &self.stencil_weights {
+                anyhow::ensure!(
+                    w.is_finite() && *w >= 0.0,
+                    "weight for {} must be finite and non-negative (got {w})",
+                    id.name()
+                );
+            }
+            let weight_of = |id: StencilId| {
+                self.stencil_weights
+                    .iter()
+                    .find(|(s, _)| *s == id)
+                    .map(|(_, w)| *w)
+                    .unwrap_or(0.0)
+            };
+            let total: f64 = sc.workload.entries.iter().map(|e| weight_of(e.stencil)).sum();
+            anyhow::ensure!(
+                total > 0.0,
+                "stencil weights zero out every workload entry of scenario '{}'",
+                self.scenario_name()
+            );
+            sc.workload = sc.workload.reweighted(|e| weight_of(e.stencil));
+        }
+        if let Some(b) = self.area_budget_mm2 {
+            sc = sc.with_area_budget(b);
+        }
+        if let Some(t) = self.threads {
+            sc = sc.with_threads(t);
+        }
+        sc.name = self.scenario_name();
+        sc.citer = self.citer.clone();
+        sc.solve_opts = self.solve_opts.clone();
+        Ok(sc)
+    }
+}
+
+/// §V-D partial-codesign tuning request: pin any subset of
+/// {n_SM, n_V, M_SM} and search the rest under an area budget.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneRequest {
+    pub budget_mm2: f64,
+    pub n_sm: Option<u32>,
+    pub n_v: Option<u32>,
+    pub m_sm_kb: Option<f64>,
+    /// Single-benchmark workload; `None` = the uniform 2-D mix.
+    pub stencil: Option<StencilId>,
+    pub threads: Option<usize>,
+    pub citer: CIterTable,
+    pub solve_opts: SolveOpts,
+}
+
+impl TuneRequest {
+    pub fn new(budget_mm2: f64) -> TuneRequest {
+        TuneRequest {
+            budget_mm2,
+            n_sm: None,
+            n_v: None,
+            m_sm_kb: None,
+            stencil: None,
+            threads: None,
+            citer: CIterTable::paper(),
+            solve_opts: SolveOpts::default(),
+        }
+    }
+
+    pub fn pin_n_sm(mut self, v: u32) -> TuneRequest {
+        self.n_sm = Some(v);
+        self
+    }
+
+    pub fn pin_n_v(mut self, v: u32) -> TuneRequest {
+        self.n_v = Some(v);
+        self
+    }
+
+    pub fn pin_m_sm_kb(mut self, v: f64) -> TuneRequest {
+        self.m_sm_kb = Some(v);
+        self
+    }
+
+    pub fn for_stencil(mut self, id: StencilId) -> TuneRequest {
+        self.stencil = Some(id);
+        self
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> TuneRequest {
+        self.threads = Some(threads.max(1));
+        self
+    }
+}
+
+/// One typed request — the single entry point every experiment goes through.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CodesignRequest {
+    /// Full DSE over one scenario: point cloud, Pareto front, references,
+    /// improvement statistics (Fig 3 / Fig 4's input).
+    Explore { scenario: ScenarioSpec },
+    /// Pareto front only — the cheap production query.
+    Pareto { scenario: ScenarioSpec },
+    /// §V-B what-if: the base scenario under new per-stencil weights. Over a
+    /// warm session this is pure re-aggregation — no new inner solves.
+    WhatIf { scenario: ScenarioSpec, weights: Vec<(StencilId, f64)> },
+    /// Table II: per-benchmark optimal architectures within an area band.
+    Sensitivity {
+        scenario_2d: ScenarioSpec,
+        scenario_3d: ScenarioSpec,
+        area_band: (f64, f64),
+    },
+    /// §V-D partial codesign under pinned parameters.
+    Tune(TuneRequest),
+    /// E10: time model vs the cycle-approximate simulator.
+    Validate,
+    /// E8: inner-solver cost vs the joint-annealing baseline.
+    SolverCost { anneal_iters: u64, citer: CIterTable },
+}
+
+impl CodesignRequest {
+    pub fn explore(scenario: ScenarioSpec) -> CodesignRequest {
+        CodesignRequest::Explore { scenario }
+    }
+
+    pub fn pareto(scenario: ScenarioSpec) -> CodesignRequest {
+        CodesignRequest::Pareto { scenario }
+    }
+
+    pub fn what_if(scenario: ScenarioSpec, weights: Vec<(StencilId, f64)>) -> CodesignRequest {
+        CodesignRequest::WhatIf { scenario, weights }
+    }
+
+    pub fn sensitivity(
+        scenario_2d: ScenarioSpec,
+        scenario_3d: ScenarioSpec,
+        area_band: (f64, f64),
+    ) -> CodesignRequest {
+        CodesignRequest::Sensitivity { scenario_2d, scenario_3d, area_band }
+    }
+
+    pub fn tune(request: TuneRequest) -> CodesignRequest {
+        CodesignRequest::Tune(request)
+    }
+
+    pub fn validate() -> CodesignRequest {
+        CodesignRequest::Validate
+    }
+
+    pub fn solver_cost(anneal_iters: u64) -> CodesignRequest {
+        CodesignRequest::SolverCost { anneal_iters, citer: CIterTable::paper() }
+    }
+
+    /// Wire-level type tag (also used in error responses).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            CodesignRequest::Explore { .. } => "explore",
+            CodesignRequest::Pareto { .. } => "pareto",
+            CodesignRequest::WhatIf { .. } => "what_if",
+            CodesignRequest::Sensitivity { .. } => "sensitivity",
+            CodesignRequest::Tune(_) => "tune",
+            CodesignRequest::Validate => "validate",
+            CodesignRequest::SolverCost { .. } => "solver_cost",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Responses
+// ---------------------------------------------------------------------------
+
+/// One solved design, wire-sized (the full per-entry software parameters stay
+/// in the session; see [`crate::service::ResponseDetail`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DesignSummary {
+    pub n_sm: u32,
+    pub n_v: u32,
+    pub m_sm_kb: f64,
+    pub area_mm2: f64,
+    pub gflops: f64,
+    pub seconds: f64,
+}
+
+impl DesignSummary {
+    /// Short human-readable identifier matching `HwParams::label` for the
+    /// cache-less candidates the service explores.
+    pub fn label(&self) -> String {
+        format!("{}sm x {}v, {}kB shm, cacheless", self.n_sm, self.n_v, self.m_sm_kb)
+    }
+}
+
+/// A reference (stock) architecture evaluated under the same models.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReferenceSummary {
+    pub name: String,
+    pub area_mm2: f64,
+    pub published_area_mm2: f64,
+    pub gflops: f64,
+    /// Best same-area optimized design vs this reference, percent. `None`
+    /// when no feasible design fits under the reference's area (kept
+    /// NaN-free so derived equality and the wire format stay exact).
+    pub improvement_pct: Option<f64>,
+}
+
+/// What an Explore / WhatIf request answers with.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSummary {
+    pub scenario: String,
+    /// Feasible design points evaluated.
+    pub designs: usize,
+    pub infeasible: usize,
+    /// Highest-throughput feasible design.
+    pub best: Option<DesignSummary>,
+    /// The Pareto front, area-ascending.
+    pub pareto: Vec<DesignSummary>,
+    pub references: Vec<ReferenceSummary>,
+    pub total_evals: u64,
+}
+
+/// What a Pareto request answers with.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParetoSummary {
+    pub scenario: String,
+    pub designs: usize,
+    pub infeasible: usize,
+    pub pareto: Vec<DesignSummary>,
+    pub total_evals: u64,
+}
+
+/// One Table II row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SensitivityRow {
+    pub stencil: StencilId,
+    pub n_sm: u32,
+    pub n_v: u32,
+    pub m_sm_kb: f64,
+    pub area_mm2: f64,
+    pub gflops: f64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct SensitivitySummary {
+    pub band: (f64, f64),
+    pub rows: Vec<SensitivityRow>,
+    pub total_evals: u64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneSummary {
+    pub budget_mm2: f64,
+    /// Area-feasible candidates examined.
+    pub candidates: usize,
+    /// `None` when no candidate fits the budget with a feasible tiling.
+    pub best: Option<DesignSummary>,
+    pub total_evals: u64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ValidateSummary {
+    pub cases: usize,
+    pub mape_pct: f64,
+    pub kendall_tau: f64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct SolverCostSummary {
+    pub anneal_iters: u64,
+    /// The generated report's text summary (timings are machine-dependent;
+    /// the structured CSVs stay with the in-process report detail).
+    pub summary: String,
+}
+
+/// A request that could not be answered (malformed spec, infeasible weights,
+/// …) — carried on the wire instead of tearing the batch down.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ErrorInfo {
+    /// The failing request's type tag.
+    pub request: String,
+    pub message: String,
+}
+
+/// One typed response, variant-matched to its request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CodesignResponse {
+    Explore(ScenarioSummary),
+    Pareto(ParetoSummary),
+    WhatIf(ScenarioSummary),
+    Sensitivity(SensitivitySummary),
+    Tune(TuneSummary),
+    Validate(ValidateSummary),
+    SolverCost(SolverCostSummary),
+    Error(ErrorInfo),
+}
+
+impl CodesignResponse {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            CodesignResponse::Explore(_) => "explore",
+            CodesignResponse::Pareto(_) => "pareto",
+            CodesignResponse::WhatIf(_) => "what_if",
+            CodesignResponse::Sensitivity(_) => "sensitivity",
+            CodesignResponse::Tune(_) => "tune",
+            CodesignResponse::Validate(_) => "validate",
+            CodesignResponse::SolverCost(_) => "solver_cost",
+            CodesignResponse::Error(_) => "error",
+        }
+    }
+
+    pub fn is_error(&self) -> bool {
+        matches!(self, CodesignResponse::Error(_))
+    }
+
+    /// The scenario summary behind an Explore or WhatIf response.
+    pub fn scenario_summary(&self) -> Option<&ScenarioSummary> {
+        match self {
+            CodesignResponse::Explore(s) | CodesignResponse::WhatIf(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Total inner-solver model evaluations this response accounts for
+    /// (attributed per answer; cached solutions shared across answers are
+    /// counted by each answer that reads them, as everywhere else).
+    pub fn total_evals(&self) -> u64 {
+        match self {
+            CodesignResponse::Explore(s) | CodesignResponse::WhatIf(s) => s.total_evals,
+            CodesignResponse::Pareto(p) => p.total_evals,
+            CodesignResponse::Sensitivity(s) => s.total_evals,
+            CodesignResponse::Tune(t) => t.total_evals,
+            CodesignResponse::Validate(_)
+            | CodesignResponse::SolverCost(_)
+            | CodesignResponse::Error(_) => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_builders_materialize() {
+        let sc = ScenarioSpec::two_d().quick(8).with_area_budget(300.0).to_scenario().unwrap();
+        assert_eq!(sc.name, "2d-b300");
+        assert_eq!(sc.workload.entries.len(), 8);
+        assert_eq!(sc.space.max_area_mm2, 300.0);
+        let named = ScenarioSpec::two_d().named("mine").to_scenario().unwrap();
+        assert_eq!(named.name, "mine");
+    }
+
+    #[test]
+    fn spec_weights_reweight_by_stencil() {
+        let sc = ScenarioSpec::two_d()
+            .weighted(StencilId::Jacobi2D, 1.0)
+            .to_scenario()
+            .unwrap();
+        let jac: f64 = sc
+            .workload
+            .entries
+            .iter()
+            .filter(|e| e.stencil == StencilId::Jacobi2D)
+            .map(|e| e.weight)
+            .sum();
+        assert!((jac - 1.0).abs() < 1e-12);
+        assert!((sc.workload.total_weight() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spec_negative_or_nonfinite_weights_rejected() {
+        for bad in [-0.5, f64::NAN, f64::INFINITY] {
+            let err = ScenarioSpec::two_d()
+                .weighted(StencilId::Jacobi2D, 1.0)
+                .weighted(StencilId::Heat2D, bad)
+                .to_scenario()
+                .unwrap_err();
+            assert!(format!("{err:#}").contains("non-negative"), "{bad}: {err:#}");
+        }
+    }
+
+    #[test]
+    fn spec_zero_weights_error_cleanly() {
+        // 3-D stencil weights over a 2-D workload leave nothing.
+        let err = ScenarioSpec::two_d()
+            .weighted(StencilId::Heat3D, 1.0)
+            .to_scenario()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("zero out"));
+    }
+
+    #[test]
+    fn single_class_uses_matching_space_dims() {
+        let s2 = ScenarioSpec::single(StencilId::Heat2D).to_scenario().unwrap();
+        assert!(s2.workload.entries.iter().all(|e| e.size.s3.is_none()));
+        let s3 = ScenarioSpec::single(StencilId::Heat3D).to_scenario().unwrap();
+        assert!(s3.workload.entries.iter().all(|e| e.size.s3.is_some()));
+    }
+
+    #[test]
+    fn request_kinds_are_stable() {
+        assert_eq!(CodesignRequest::explore(ScenarioSpec::two_d()).kind(), "explore");
+        assert_eq!(CodesignRequest::validate().kind(), "validate");
+        assert_eq!(CodesignRequest::solver_cost(10).kind(), "solver_cost");
+        assert_eq!(CodesignRequest::tune(TuneRequest::new(450.0)).kind(), "tune");
+    }
+}

@@ -1,0 +1,578 @@
+//! The persistent session: one long-lived service object that owns the
+//! coordinators and keeps their memo caches warm across calls.
+//!
+//! A [`Session`] answers arbitrary mixes of [`CodesignRequest`]s. Scenario
+//! evaluation is defined by the (C_iter, solver-options) pair — the batch
+//! engine's `solved_under` invariant — so the session keeps **one coordinator
+//! per distinct pair** and auto-partitions each submission into compatible
+//! batch groups instead of rejecting mixed request sets. Repeat queries over
+//! the same grids are answered almost entirely from cache (~100% hits), and
+//! the partial-codesign tune path reads and feeds the same memo store.
+
+use crate::area::model::AreaModel;
+use crate::codesign::scenario::{DesignEval, Scenario, ScenarioResult};
+use crate::codesign::sensitivity::best_for_benchmark;
+use crate::codesign::tuner::{candidate_grid, Pinned};
+use crate::coordinator::{CacheKey, Coordinator, StatsSnapshot, SweepReport};
+use crate::opt::inner::InnerSolution;
+use crate::opt::problem::SolveOpts;
+use crate::opt::separable::{aggregate_weighted, solve_entry};
+use crate::report::{self, Report};
+use crate::service::request::{
+    CodesignRequest, CodesignResponse, DesignSummary, ErrorInfo, ParetoSummary,
+    ReferenceSummary, ScenarioSpec, ScenarioSummary, SensitivityRow, SensitivitySummary,
+    SolverCostSummary, TuneRequest, TuneSummary, ValidateSummary,
+};
+use crate::sim::{validate_sweep, ValidationReport};
+use crate::stencil::defs::StencilId;
+use crate::stencil::workload::Workload;
+use crate::timemodel::citer::CIterTable;
+use crate::timemodel::talg::TimeModel;
+use crate::util::threadpool::{default_threads, parallel_map};
+use std::time::{Duration, Instant};
+
+/// The full in-process artifacts behind one response, for consumers (the CLI
+/// report renderers) that need more than the wire-sized summary.
+pub enum ResponseDetail {
+    None,
+    /// The materialized scenario(s) and their full results: one for
+    /// Explore/Pareto/WhatIf, two (2-D then 3-D) for Sensitivity.
+    Scenarios(Vec<ScenarioDetail>),
+    /// The generated report bundle (SolverCost).
+    Report(Box<Report>),
+    /// The model-vs-simulator case list (Validate).
+    Validation(Box<ValidationReport>),
+}
+
+pub struct ScenarioDetail {
+    pub scenario: Scenario,
+    pub result: ScenarioResult,
+}
+
+/// One answered request: the wire-typed response plus in-process detail.
+pub struct SessionAnswer {
+    pub response: CodesignResponse,
+    pub detail: ResponseDetail,
+}
+
+/// What one `submit_all` reports beyond the responses themselves.
+pub struct SubmitReport {
+    /// One answer per request, in request order.
+    pub answers: Vec<SessionAnswer>,
+    /// Exact hit/miss deltas summed over every partition this submission
+    /// touched (the same accounting `BatchReport` certifies).
+    pub cache: StatsSnapshot,
+    /// Distinct (hardware, stencil, size) instances the batch sweeps covered.
+    pub unique_instances: usize,
+    pub wall: Duration,
+}
+
+impl SubmitReport {
+    pub fn lookups(&self) -> u64 {
+        self.cache.lookups()
+    }
+
+    /// Hit rate over this submission's lookups (0.0 when it made none).
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.cache.hit_rate()
+    }
+
+    /// Just the wire-typed responses, dropping the in-process detail.
+    pub fn into_responses(self) -> Vec<CodesignResponse> {
+        self.answers.into_iter().map(|a| a.response).collect()
+    }
+}
+
+/// Where a planned request's scenarios sit in the group batches.
+type Slot = (usize, usize); // (group index, scenario index within the group)
+
+enum OneKind {
+    Explore,
+    Pareto,
+    WhatIf,
+}
+
+enum Plan {
+    /// Already answered during planning (errors, Validate, SolverCost).
+    Direct(CodesignResponse, ResponseDetail),
+    /// One scenario in a batch group.
+    One { slot: Slot, kind: OneKind },
+    /// Two scenarios (2-D, 3-D) plus the Table II area band.
+    Sensitivity { s2: Slot, s3: Slot, band: (f64, f64) },
+    /// Runs after the batches, against the then-warm memo store.
+    Tune(TuneRequest),
+}
+
+/// The long-lived session service.
+pub struct Session {
+    pub area_model: AreaModel,
+    pub time_model: TimeModel,
+    /// One coordinator per (C_iter, solver options) pair ever submitted —
+    /// the auto-partitioning that replaces the batch engine's hard
+    /// `solved_under` rejection at this layer.
+    coordinators: Vec<(CIterTable, SolveOpts, Coordinator)>,
+    progress_every: Option<usize>,
+}
+
+impl Session {
+    pub fn new(area_model: AreaModel, time_model: TimeModel) -> Session {
+        Session { area_model, time_model, coordinators: Vec::new(), progress_every: None }
+    }
+
+    /// A session over the paper's calibrated models.
+    pub fn paper() -> Session {
+        Session::new(AreaModel::paper(), TimeModel::maxwell())
+    }
+
+    /// Print a progress line every `n` solved instances (per coordinator).
+    pub fn with_progress(mut self, n: usize) -> Session {
+        self.progress_every = Some(n.max(1));
+        self
+    }
+
+    /// Number of (C_iter, solver-options) partitions this session holds.
+    pub fn partitions(&self) -> usize {
+        self.coordinators.len()
+    }
+
+    /// Memoized instances across every partition.
+    pub fn cache_entries(&self) -> usize {
+        self.coordinators.iter().map(|(_, _, c)| c.cache.len()).sum()
+    }
+
+    fn stats_total(&self) -> StatsSnapshot {
+        let mut total = StatsSnapshot::default();
+        for (_, _, c) in &self.coordinators {
+            let s = c.cache.stats.snapshot();
+            total.hits += s.hits;
+            total.misses += s.misses;
+        }
+        total
+    }
+
+    fn coordinator_index(&mut self, citer: &CIterTable, opts: &SolveOpts) -> usize {
+        if let Some(i) =
+            self.coordinators.iter().position(|(c, o, _)| c == citer && o == opts)
+        {
+            return i;
+        }
+        let mut coord = Coordinator::new(self.area_model, self.time_model);
+        if let Some(n) = self.progress_every {
+            coord = coord.with_progress(n);
+        }
+        self.coordinators.push((citer.clone(), opts.clone(), coord));
+        self.coordinators.len() - 1
+    }
+
+    /// Answer one request (a submission of one).
+    pub fn submit(&mut self, request: &CodesignRequest) -> SessionAnswer {
+        self.submit_all(std::slice::from_ref(request))
+            .answers
+            .pop()
+            .expect("one request in, one answer out")
+    }
+
+    /// Answer a request set: materialize scenarios, auto-partition them into
+    /// compatible batch groups, run each group through its warm coordinator,
+    /// and assemble per-request answers in request order.
+    pub fn submit_all(&mut self, requests: &[CodesignRequest]) -> SubmitReport {
+        let t0 = Instant::now();
+        let before = self.stats_total();
+
+        // Plan: one entry per request; scenario-backed requests enqueue into
+        // per-(C_iter, SolveOpts) groups, with identical specs within this
+        // submission deduplicated onto one batch slot (e.g. `report` asks
+        // for a scenario both as Explore and inside Sensitivity — it should
+        // be served, not re-aggregated, twice).
+        let mut groups: Vec<(usize, Vec<Scenario>)> = Vec::new();
+        let mut seen: Vec<(ScenarioSpec, Slot)> = Vec::new();
+        let mut plans: Vec<Plan> = Vec::with_capacity(requests.len());
+        for req in requests {
+            let plan = self.plan(req, &mut groups, &mut seen);
+            plans.push(plan);
+        }
+
+        // Sweep + serve each group on its coordinator. One shared sweep per
+        // group answers every scenario in it.
+        let mut unique_instances = 0usize;
+        let mut batches: Vec<Vec<SweepReport>> = Vec::with_capacity(groups.len());
+        for (ci, scenarios) in &groups {
+            let rep = self.coordinators[*ci].2.run_batch_report(scenarios);
+            unique_instances += rep.unique_instances;
+            batches.push(rep.reports);
+        }
+
+        // Assemble answers; tunes execute here, against the warm store.
+        let mut answers = Vec::with_capacity(plans.len());
+        for plan in plans {
+            answers.push(self.finish(plan, &groups, &batches));
+        }
+
+        let after = self.stats_total();
+        SubmitReport {
+            answers,
+            cache: StatsSnapshot {
+                hits: after.hits - before.hits,
+                misses: after.misses - before.misses,
+            },
+            unique_instances,
+            wall: t0.elapsed(),
+        }
+    }
+
+    fn plan(
+        &mut self,
+        req: &CodesignRequest,
+        groups: &mut Vec<(usize, Vec<Scenario>)>,
+        seen: &mut Vec<(ScenarioSpec, Slot)>,
+    ) -> Plan {
+        match req {
+            CodesignRequest::Explore { scenario } => {
+                self.plan_one(scenario, OneKind::Explore, req, groups, seen)
+            }
+            CodesignRequest::Pareto { scenario } => {
+                self.plan_one(scenario, OneKind::Pareto, req, groups, seen)
+            }
+            CodesignRequest::WhatIf { scenario, weights } => {
+                let mut spec = scenario.clone().with_weights(weights.clone());
+                if spec.name.is_none() {
+                    // Fold the weight vector into the derived name so two
+                    // unnamed what-ifs over one base stay distinguishable in
+                    // a response file.
+                    let sig: Vec<String> =
+                        weights.iter().map(|(id, w)| format!("{}={w}", id.name())).collect();
+                    spec.name = Some(format!(
+                        "{}-whatif[{}]",
+                        scenario.scenario_name(),
+                        sig.join(",")
+                    ));
+                }
+                self.plan_one(&spec, OneKind::WhatIf, req, groups, seen)
+            }
+            CodesignRequest::Sensitivity { scenario_2d, scenario_3d, area_band } => {
+                // Validate both specs before enqueueing either, so a bad
+                // sibling can't leave an orphan scenario in a batch group
+                // (which would be swept at full cost and never consumed).
+                if let Err(e) =
+                    scenario_2d.to_scenario().and(scenario_3d.to_scenario())
+                {
+                    return Plan::Direct(error_response(req, &e), ResponseDetail::None);
+                }
+                match (
+                    self.enqueue(scenario_2d, groups, seen),
+                    self.enqueue(scenario_3d, groups, seen),
+                ) {
+                    (Ok(s2), Ok(s3)) => Plan::Sensitivity { s2, s3, band: *area_band },
+                    (Err(e), _) | (_, Err(e)) => {
+                        Plan::Direct(error_response(req, &e), ResponseDetail::None)
+                    }
+                }
+            }
+            CodesignRequest::Tune(t) => Plan::Tune(t.clone()),
+            CodesignRequest::Validate => {
+                let rep = validate_sweep(&self.time_model);
+                let summary = ValidateSummary {
+                    cases: rep.cases.len(),
+                    mape_pct: rep.mape_pct,
+                    kendall_tau: rep.kendall_tau,
+                };
+                Plan::Direct(
+                    CodesignResponse::Validate(summary),
+                    ResponseDetail::Validation(Box::new(rep)),
+                )
+            }
+            CodesignRequest::SolverCost { anneal_iters, citer } => {
+                let rep = report::solver_cost::generate(&self.time_model, citer, *anneal_iters);
+                let summary = SolverCostSummary {
+                    anneal_iters: *anneal_iters,
+                    summary: rep.summary.clone(),
+                };
+                Plan::Direct(
+                    CodesignResponse::SolverCost(summary),
+                    ResponseDetail::Report(Box::new(rep)),
+                )
+            }
+        }
+    }
+
+    fn plan_one(
+        &mut self,
+        spec: &ScenarioSpec,
+        kind: OneKind,
+        req: &CodesignRequest,
+        groups: &mut Vec<(usize, Vec<Scenario>)>,
+        seen: &mut Vec<(ScenarioSpec, Slot)>,
+    ) -> Plan {
+        match self.enqueue(spec, groups, seen) {
+            Ok(slot) => Plan::One { slot, kind },
+            Err(e) => Plan::Direct(error_response(req, &e), ResponseDetail::None),
+        }
+    }
+
+    /// Materialize a spec and place it in the batch group matching its
+    /// (C_iter, solver options) — creating the group (and its coordinator)
+    /// on first sight. A spec identical to one already planned in this
+    /// submission reuses its slot instead of being served twice.
+    fn enqueue(
+        &mut self,
+        spec: &ScenarioSpec,
+        groups: &mut Vec<(usize, Vec<Scenario>)>,
+        seen: &mut Vec<(ScenarioSpec, Slot)>,
+    ) -> anyhow::Result<Slot> {
+        if let Some((_, slot)) = seen.iter().find(|(s, _)| s == spec) {
+            return Ok(*slot);
+        }
+        let sc = spec.to_scenario()?;
+        let ci = self.coordinator_index(&sc.citer, &sc.solve_opts);
+        let g = match groups.iter().position(|(c, _)| *c == ci) {
+            Some(g) => g,
+            None => {
+                groups.push((ci, Vec::new()));
+                groups.len() - 1
+            }
+        };
+        groups[g].1.push(sc);
+        let slot = (g, groups[g].1.len() - 1);
+        seen.push((spec.clone(), slot));
+        Ok(slot)
+    }
+
+    fn finish(
+        &mut self,
+        plan: Plan,
+        groups: &[(usize, Vec<Scenario>)],
+        batches: &[Vec<SweepReport>],
+    ) -> SessionAnswer {
+        match plan {
+            Plan::Direct(response, detail) => SessionAnswer { response, detail },
+            Plan::One { slot: (g, i), kind } => {
+                let scenario = groups[g].1[i].clone();
+                let result = batches[g][i].result.clone();
+                let response = match kind {
+                    OneKind::Explore => CodesignResponse::Explore(scenario_summary(&result)),
+                    OneKind::WhatIf => CodesignResponse::WhatIf(scenario_summary(&result)),
+                    OneKind::Pareto => CodesignResponse::Pareto(ParetoSummary {
+                        scenario: result.scenario_name.clone(),
+                        designs: result.points.len(),
+                        infeasible: result.infeasible_points,
+                        pareto: result
+                            .pareto
+                            .iter()
+                            .map(|&i| design_summary(&result.points[i]))
+                            .collect(),
+                        total_evals: result.total_evals,
+                    }),
+                };
+                SessionAnswer {
+                    response,
+                    detail: ResponseDetail::Scenarios(vec![ScenarioDetail { scenario, result }]),
+                }
+            }
+            Plan::Sensitivity { s2: (g2, i2), s3: (g3, i3), band } => {
+                let d2 = ScenarioDetail {
+                    scenario: groups[g2].1[i2].clone(),
+                    result: batches[g2][i2].result.clone(),
+                };
+                let d3 = ScenarioDetail {
+                    scenario: groups[g3].1[i3].clone(),
+                    result: batches[g3][i3].result.clone(),
+                };
+                let response =
+                    CodesignResponse::Sensitivity(sensitivity_summary(&d2, &d3, band));
+                SessionAnswer { response, detail: ResponseDetail::Scenarios(vec![d2, d3]) }
+            }
+            Plan::Tune(req) => self.run_tune(&req),
+        }
+    }
+
+    /// §V-D tuning through the session's memo store: the same candidate grid
+    /// and best-selection order as `codesign::tuner::tune`, but every
+    /// (hardware, entry) instance is read from / written to the partition's
+    /// cache, so tunes ride on prior sweeps and warm future ones.
+    fn run_tune(&mut self, req: &TuneRequest) -> SessionAnswer {
+        let pinned =
+            Pinned { n_sm: req.n_sm, n_v: req.n_v, m_sm_kb: req.m_sm_kb, caches: None };
+        let workload = match req.stencil {
+            Some(id) => Workload::single(id),
+            None => Workload::uniform_2d(),
+        };
+        let candidates = candidate_grid(&pinned, req.budget_mm2, &self.area_model);
+        let ci = self.coordinator_index(&req.citer, &req.solve_opts);
+        let coord = &self.coordinators[ci].2;
+        let threads = req.threads.unwrap_or_else(default_threads).max(1);
+        let time_model = &self.time_model;
+        let (citer, opts) = (&req.citer, &req.solve_opts);
+        let solved: Vec<(Option<(f64, f64)>, u64)> = parallel_map(&candidates, threads, |cand| {
+            let per_entry: Vec<Option<InnerSolution>> = workload
+                .entries
+                .iter()
+                .map(|e| {
+                    let key = CacheKey::new(&cand.hw, e.stencil, &e.size);
+                    coord
+                        .cache
+                        .get_or_compute(key, || solve_entry(time_model, citer, &cand.hw, e, opts))
+                })
+                .collect();
+            let evals: u64 = per_entry.iter().flatten().map(|s| s.evals).sum();
+            (aggregate_weighted(&workload, &per_entry), evals)
+        });
+        let total_evals: u64 = solved.iter().map(|(_, e)| *e).sum();
+        let mut best: Option<(usize, f64, f64)> = None;
+        for (i, (s, _)) in solved.iter().enumerate() {
+            if let Some((seconds, gflops)) = *s {
+                if best.map_or(true, |(_, bg, _)| gflops > bg) {
+                    best = Some((i, gflops, seconds));
+                }
+            }
+        }
+        let best = best.map(|(i, gflops, seconds)| DesignSummary {
+            n_sm: candidates[i].hw.n_sm,
+            n_v: candidates[i].hw.n_v,
+            m_sm_kb: candidates[i].hw.m_sm_kb,
+            area_mm2: candidates[i].area_mm2,
+            gflops,
+            seconds,
+        });
+        SessionAnswer {
+            response: CodesignResponse::Tune(TuneSummary {
+                budget_mm2: req.budget_mm2,
+                candidates: candidates.len(),
+                best,
+                total_evals,
+            }),
+            detail: ResponseDetail::None,
+        }
+    }
+}
+
+fn error_response(req: &CodesignRequest, err: &anyhow::Error) -> CodesignResponse {
+    CodesignResponse::Error(ErrorInfo {
+        request: req.kind().to_string(),
+        message: format!("{err:#}"),
+    })
+}
+
+fn design_summary(p: &DesignEval) -> DesignSummary {
+    DesignSummary {
+        n_sm: p.hw.n_sm,
+        n_v: p.hw.n_v,
+        m_sm_kb: p.hw.m_sm_kb,
+        area_mm2: p.area_mm2,
+        gflops: p.gflops,
+        seconds: p.seconds,
+    }
+}
+
+fn scenario_summary(result: &ScenarioResult) -> ScenarioSummary {
+    let mut best: Option<&DesignEval> = None;
+    for p in &result.points {
+        if best.map_or(true, |b| p.gflops > b.gflops) {
+            best = Some(p);
+        }
+    }
+    let references = result
+        .references
+        .iter()
+        .map(|r| {
+            // `None` (not NaN) when no feasible design fits under the
+            // reference's area, so response equality and the wire stay exact.
+            let improvement_pct = result
+                .stats
+                .vs_reference
+                .iter()
+                .find(|(name, _, _)| name == r.name)
+                .map(|(_, pct, _)| *pct)
+                .filter(|pct| pct.is_finite());
+            ReferenceSummary {
+                name: r.name.to_string(),
+                area_mm2: r.area_mm2,
+                published_area_mm2: r.published_area_mm2,
+                gflops: r.gflops,
+                improvement_pct,
+            }
+        })
+        .collect();
+    ScenarioSummary {
+        scenario: result.scenario_name.clone(),
+        designs: result.points.len(),
+        infeasible: result.infeasible_points,
+        best: best.map(design_summary),
+        pareto: result.pareto.iter().map(|&i| design_summary(&result.points[i])).collect(),
+        references,
+        total_evals: result.total_evals,
+    }
+}
+
+const TABLE2_2D: [StencilId; 4] =
+    [StencilId::Jacobi2D, StencilId::Heat2D, StencilId::Gradient2D, StencilId::Laplacian2D];
+const TABLE2_3D: [StencilId; 2] = [StencilId::Heat3D, StencilId::Laplacian3D];
+
+fn sensitivity_summary(
+    d2: &ScenarioDetail,
+    d3: &ScenarioDetail,
+    band: (f64, f64),
+) -> SensitivitySummary {
+    let mut rows = Vec::new();
+    let sides: [(&ScenarioDetail, &[StencilId]); 2] =
+        [(d2, &TABLE2_2D), (d3, &TABLE2_3D)];
+    for (detail, ids) in sides {
+        for &id in ids {
+            if !detail.scenario.workload.entries.iter().any(|e| e.stencil == id) {
+                continue;
+            }
+            if let Some(r) =
+                best_for_benchmark(&detail.result, &detail.scenario.workload, id, band)
+            {
+                rows.push(SensitivityRow {
+                    stencil: r.stencil,
+                    n_sm: r.n_sm,
+                    n_v: r.n_v,
+                    m_sm_kb: r.m_sm_kb,
+                    area_mm2: r.area_mm2,
+                    gflops: r.gflops,
+                });
+            }
+        }
+    }
+    SensitivitySummary {
+        band,
+        rows,
+        total_evals: d2.result.total_evals + d3.result.total_evals,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn direct_requests_answer_without_coordinators() {
+        let mut s = Session::paper();
+        let a = s.submit(&CodesignRequest::validate());
+        match &a.response {
+            CodesignResponse::Validate(v) => {
+                assert!(v.cases > 0);
+                assert!(v.mape_pct.is_finite());
+            }
+            other => panic!("unexpected response {}", other.kind()),
+        }
+        assert!(matches!(a.detail, ResponseDetail::Validation(_)));
+        assert_eq!(s.partitions(), 0, "validate touches no memo partition");
+    }
+
+    #[test]
+    fn malformed_scenario_yields_error_response() {
+        let mut s = Session::paper();
+        let bad = CodesignRequest::explore(
+            ScenarioSpec::two_d().weighted(StencilId::Heat3D, 1.0),
+        );
+        let a = s.submit(&bad);
+        match &a.response {
+            CodesignResponse::Error(e) => {
+                assert_eq!(e.request, "explore");
+                assert!(e.message.contains("zero out"));
+            }
+            other => panic!("unexpected response {}", other.kind()),
+        }
+    }
+}

@@ -1,0 +1,626 @@
+//! Versioned JSON wire format for the session service.
+//!
+//! Every [`CodesignRequest`] / [`CodesignResponse`] variant encodes to a
+//! `{"type": …}`-tagged object and decodes back **bit-exactly** (floats ride
+//! Rust's shortest-round-trip formatting; non-finite values encode as
+//! `null` and decode as NaN). Request and response files share one envelope,
+//! `{"schema": 1, "requests"|"responses": […]}`; an unknown schema version is
+//! a clean error, never a guess.
+
+use crate::opt::problem::SolveOpts;
+use crate::service::request::{
+    CodesignRequest, CodesignResponse, DesignSummary, ErrorInfo, ParetoSummary,
+    ReferenceSummary, ScenarioSpec, ScenarioSummary, SensitivityRow, SensitivitySummary,
+    SolverCostSummary, TuneRequest, TuneSummary, ValidateSummary, WorkloadClass,
+};
+use crate::stencil::defs::{StencilId, ALL_STENCILS};
+use crate::timemodel::citer::CIterTable;
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// The wire schema this build speaks.
+pub const SCHEMA_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// Field helpers
+// ---------------------------------------------------------------------------
+
+fn field<'a>(obj: &'a Json, key: &str) -> Result<&'a Json> {
+    obj.get(key).ok_or_else(|| anyhow!("missing field '{key}'"))
+}
+
+/// Finite numbers as-is; NaN/∞ as null (JSON has no non-finite literals).
+fn fnum(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+fn get_f64(obj: &Json, key: &str) -> Result<f64> {
+    match field(obj, key)? {
+        Json::Num(x) => Ok(*x),
+        Json::Null => Ok(f64::NAN),
+        _ => bail!("field '{key}' must be a number"),
+    }
+}
+
+fn get_u64(obj: &Json, key: &str) -> Result<u64> {
+    let x = get_f64(obj, key)?;
+    ensure!(x.is_finite() && x >= 0.0, "field '{key}' must be a non-negative integer");
+    Ok(x as u64)
+}
+
+fn get_usize(obj: &Json, key: &str) -> Result<usize> {
+    Ok(get_u64(obj, key)? as usize)
+}
+
+fn get_bool(obj: &Json, key: &str) -> Result<bool> {
+    match field(obj, key)? {
+        Json::Bool(b) => Ok(*b),
+        _ => bail!("field '{key}' must be a boolean"),
+    }
+}
+
+fn get_str<'a>(obj: &'a Json, key: &str) -> Result<&'a str> {
+    field(obj, key)?.as_str().ok_or_else(|| anyhow!("field '{key}' must be a string"))
+}
+
+/// Absent or null → `None`.
+fn get_opt_f64(obj: &Json, key: &str) -> Result<Option<f64>> {
+    match obj.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Num(x)) => Ok(Some(*x)),
+        _ => bail!("field '{key}' must be a number or null"),
+    }
+}
+
+fn get_opt_u64(obj: &Json, key: &str) -> Result<Option<u64>> {
+    match get_opt_f64(obj, key)? {
+        None => Ok(None),
+        Some(x) => {
+            ensure!(x.is_finite() && x >= 0.0, "field '{key}' must be a non-negative integer");
+            Ok(Some(x as u64))
+        }
+    }
+}
+
+fn get_opt_str<'a>(obj: &'a Json, key: &str) -> Result<Option<&'a str>> {
+    match obj.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Str(s)) => Ok(Some(s.as_str())),
+        _ => bail!("field '{key}' must be a string or null"),
+    }
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    v.map(fnum).unwrap_or(Json::Null)
+}
+
+fn opt_unum(v: Option<u64>) -> Json {
+    v.map(|x| Json::Num(x as f64)).unwrap_or(Json::Null)
+}
+
+// ---------------------------------------------------------------------------
+// Shared pieces
+// ---------------------------------------------------------------------------
+
+fn stencil_from_json(j: &Json) -> Result<StencilId> {
+    let s = j.as_str().ok_or_else(|| anyhow!("stencil must be a string"))?;
+    StencilId::from_name(s).ok_or_else(|| anyhow!("unknown stencil '{s}'"))
+}
+
+fn weights_to_json(w: &[(StencilId, f64)]) -> Json {
+    Json::Arr(
+        w.iter()
+            .map(|(id, x)| {
+                Json::obj(vec![("stencil", Json::str(id.name())), ("weight", fnum(*x))])
+            })
+            .collect(),
+    )
+}
+
+fn weights_from_json(j: &Json) -> Result<Vec<(StencilId, f64)>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("weights must be an array"))?;
+    arr.iter()
+        .map(|item| Ok((stencil_from_json(field(item, "stencil")?)?, get_f64(item, "weight")?)))
+        .collect()
+}
+
+fn citer_to_json(t: &CIterTable) -> Json {
+    Json::Arr(
+        ALL_STENCILS
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("stencil", Json::str(s.id.name())),
+                    ("cycles", fnum(t.get(s.id))),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Absent / null → paper-mode defaults, so hand-written request files can
+/// omit the table.
+fn opt_citer_from_json(obj: &Json, key: &str) -> Result<CIterTable> {
+    match obj.get(key) {
+        None | Some(Json::Null) => Ok(CIterTable::paper()),
+        Some(c) => citer_from_json(c),
+    }
+}
+
+fn citer_from_json(j: &Json) -> Result<CIterTable> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("citer must be an array"))?;
+    let mut pairs = Vec::with_capacity(arr.len());
+    for item in arr {
+        let id = stencil_from_json(field(item, "stencil")?)?;
+        let cycles = get_f64(item, "cycles")?;
+        ensure!(cycles.is_finite() && cycles > 0.0, "C_iter for {} must be positive", id.name());
+        pairs.push((id, cycles));
+    }
+    Ok(CIterTable::with_measured(&pairs))
+}
+
+fn solve_opts_to_json(o: &SolveOpts) -> Json {
+    Json::obj(vec![
+        ("all_k", Json::Bool(o.all_k)),
+        ("refine", Json::Bool(o.refine)),
+        ("max_t_t", Json::Num(o.max_t_t as f64)),
+    ])
+}
+
+fn solve_opts_from_json(j: &Json) -> Result<SolveOpts> {
+    Ok(SolveOpts {
+        all_k: get_bool(j, "all_k")?,
+        refine: get_bool(j, "refine")?,
+        max_t_t: get_u64(j, "max_t_t")?,
+    })
+}
+
+/// Absent / null → default solver options.
+fn opt_solve_opts_from_json(obj: &Json, key: &str) -> Result<SolveOpts> {
+    match obj.get(key) {
+        None | Some(Json::Null) => Ok(SolveOpts::default()),
+        Some(o) => solve_opts_from_json(o),
+    }
+}
+
+/// Absent / null → no re-weighting.
+fn opt_weights_from_json(obj: &Json, key: &str) -> Result<Vec<(StencilId, f64)>> {
+    match obj.get(key) {
+        None | Some(Json::Null) => Ok(Vec::new()),
+        Some(w) => weights_from_json(w),
+    }
+}
+
+fn class_to_json(c: WorkloadClass) -> Json {
+    Json::str(c.name())
+}
+
+fn class_from_json(j: &Json) -> Result<WorkloadClass> {
+    let s = j.as_str().ok_or_else(|| anyhow!("class must be a string"))?;
+    match s {
+        "2d" => Ok(WorkloadClass::TwoD),
+        "3d" => Ok(WorkloadClass::ThreeD),
+        other => StencilId::from_name(other)
+            .map(WorkloadClass::Single)
+            .ok_or_else(|| anyhow!("unknown workload class '{other}'")),
+    }
+}
+
+pub fn spec_to_json(s: &ScenarioSpec) -> Json {
+    Json::obj(vec![
+        ("name", s.name.as_deref().map(Json::str).unwrap_or(Json::Null)),
+        ("class", class_to_json(s.class)),
+        ("quick_stride", opt_unum(s.quick_stride.map(|v| v as u64))),
+        ("area_budget_mm2", opt_num(s.area_budget_mm2)),
+        ("weights", weights_to_json(&s.stencil_weights)),
+        ("threads", opt_unum(s.threads.map(|v| v as u64))),
+        ("citer", citer_to_json(&s.citer)),
+        ("solve", solve_opts_to_json(&s.solve_opts)),
+    ])
+}
+
+pub fn spec_from_json(j: &Json) -> Result<ScenarioSpec> {
+    Ok(ScenarioSpec {
+        name: get_opt_str(j, "name")?.map(str::to_string),
+        class: class_from_json(field(j, "class")?)?,
+        quick_stride: get_opt_u64(j, "quick_stride")?.map(|v| v as usize),
+        area_budget_mm2: get_opt_f64(j, "area_budget_mm2")?,
+        stencil_weights: opt_weights_from_json(j, "weights")?,
+        threads: get_opt_u64(j, "threads")?.map(|v| v as usize),
+        citer: opt_citer_from_json(j, "citer")?,
+        solve_opts: opt_solve_opts_from_json(j, "solve")?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------------
+
+pub fn request_to_json(r: &CodesignRequest) -> Json {
+    let tag = ("type", Json::str(r.kind()));
+    match r {
+        CodesignRequest::Explore { scenario } | CodesignRequest::Pareto { scenario } => {
+            Json::obj(vec![tag, ("scenario", spec_to_json(scenario))])
+        }
+        CodesignRequest::WhatIf { scenario, weights } => Json::obj(vec![
+            tag,
+            ("scenario", spec_to_json(scenario)),
+            ("weights", weights_to_json(weights)),
+        ]),
+        CodesignRequest::Sensitivity { scenario_2d, scenario_3d, area_band } => Json::obj(vec![
+            tag,
+            ("scenario_2d", spec_to_json(scenario_2d)),
+            ("scenario_3d", spec_to_json(scenario_3d)),
+            ("area_band", Json::Arr(vec![fnum(area_band.0), fnum(area_band.1)])),
+        ]),
+        CodesignRequest::Tune(t) => Json::obj(vec![
+            tag,
+            ("budget_mm2", fnum(t.budget_mm2)),
+            ("n_sm", opt_unum(t.n_sm.map(|v| v as u64))),
+            ("n_v", opt_unum(t.n_v.map(|v| v as u64))),
+            ("m_sm_kb", opt_num(t.m_sm_kb)),
+            ("stencil", t.stencil.map(|id| Json::str(id.name())).unwrap_or(Json::Null)),
+            ("threads", opt_unum(t.threads.map(|v| v as u64))),
+            ("citer", citer_to_json(&t.citer)),
+            ("solve", solve_opts_to_json(&t.solve_opts)),
+        ]),
+        CodesignRequest::Validate => Json::obj(vec![tag]),
+        CodesignRequest::SolverCost { anneal_iters, citer } => Json::obj(vec![
+            tag,
+            ("anneal_iters", Json::Num(*anneal_iters as f64)),
+            ("citer", citer_to_json(citer)),
+        ]),
+    }
+}
+
+pub fn request_from_json(j: &Json) -> Result<CodesignRequest> {
+    match get_str(j, "type")? {
+        "explore" => Ok(CodesignRequest::Explore { scenario: spec_from_json(field(j, "scenario")?)? }),
+        "pareto" => Ok(CodesignRequest::Pareto { scenario: spec_from_json(field(j, "scenario")?)? }),
+        "what_if" => Ok(CodesignRequest::WhatIf {
+            scenario: spec_from_json(field(j, "scenario")?)?,
+            weights: weights_from_json(field(j, "weights")?)?,
+        }),
+        "sensitivity" => {
+            let band = field(j, "area_band")?
+                .as_arr()
+                .filter(|a| a.len() == 2)
+                .ok_or_else(|| anyhow!("area_band must be a [lo, hi] array"))?;
+            let lo = band[0].as_f64().ok_or_else(|| anyhow!("area_band entries must be numbers"))?;
+            let hi = band[1].as_f64().ok_or_else(|| anyhow!("area_band entries must be numbers"))?;
+            Ok(CodesignRequest::Sensitivity {
+                scenario_2d: spec_from_json(field(j, "scenario_2d")?)?,
+                scenario_3d: spec_from_json(field(j, "scenario_3d")?)?,
+                area_band: (lo, hi),
+            })
+        }
+        "tune" => Ok(CodesignRequest::Tune(TuneRequest {
+            budget_mm2: get_f64(j, "budget_mm2")?,
+            n_sm: get_opt_u64(j, "n_sm")?.map(|v| v as u32),
+            n_v: get_opt_u64(j, "n_v")?.map(|v| v as u32),
+            m_sm_kb: get_opt_f64(j, "m_sm_kb")?,
+            stencil: match j.get("stencil") {
+                None | Some(Json::Null) => None,
+                Some(s) => Some(stencil_from_json(s)?),
+            },
+            threads: get_opt_u64(j, "threads")?.map(|v| v as usize),
+            citer: opt_citer_from_json(j, "citer")?,
+            solve_opts: opt_solve_opts_from_json(j, "solve")?,
+        })),
+        "validate" => Ok(CodesignRequest::Validate),
+        "solver_cost" => Ok(CodesignRequest::SolverCost {
+            anneal_iters: get_u64(j, "anneal_iters")?,
+            citer: opt_citer_from_json(j, "citer")?,
+        }),
+        other => bail!("unknown request type '{other}'"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Responses
+// ---------------------------------------------------------------------------
+
+fn design_to_json(d: &DesignSummary) -> Json {
+    Json::obj(vec![
+        ("n_sm", Json::Num(d.n_sm as f64)),
+        ("n_v", Json::Num(d.n_v as f64)),
+        ("m_sm_kb", fnum(d.m_sm_kb)),
+        ("area_mm2", fnum(d.area_mm2)),
+        ("gflops", fnum(d.gflops)),
+        ("seconds", fnum(d.seconds)),
+    ])
+}
+
+fn design_from_json(j: &Json) -> Result<DesignSummary> {
+    Ok(DesignSummary {
+        n_sm: get_u64(j, "n_sm")? as u32,
+        n_v: get_u64(j, "n_v")? as u32,
+        m_sm_kb: get_f64(j, "m_sm_kb")?,
+        area_mm2: get_f64(j, "area_mm2")?,
+        gflops: get_f64(j, "gflops")?,
+        seconds: get_f64(j, "seconds")?,
+    })
+}
+
+fn reference_to_json(r: &ReferenceSummary) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(r.name.as_str())),
+        ("area_mm2", fnum(r.area_mm2)),
+        ("published_area_mm2", fnum(r.published_area_mm2)),
+        ("gflops", fnum(r.gflops)),
+        ("improvement_pct", opt_num(r.improvement_pct)),
+    ])
+}
+
+fn reference_from_json(j: &Json) -> Result<ReferenceSummary> {
+    Ok(ReferenceSummary {
+        name: get_str(j, "name")?.to_string(),
+        area_mm2: get_f64(j, "area_mm2")?,
+        published_area_mm2: get_f64(j, "published_area_mm2")?,
+        gflops: get_f64(j, "gflops")?,
+        improvement_pct: get_opt_f64(j, "improvement_pct")?,
+    })
+}
+
+fn scenario_summary_to_json(s: &ScenarioSummary) -> Json {
+    Json::obj(vec![
+        ("scenario", Json::str(s.scenario.as_str())),
+        ("designs", Json::Num(s.designs as f64)),
+        ("infeasible", Json::Num(s.infeasible as f64)),
+        ("best", s.best.as_ref().map(design_to_json).unwrap_or(Json::Null)),
+        ("pareto", Json::Arr(s.pareto.iter().map(design_to_json).collect())),
+        ("references", Json::Arr(s.references.iter().map(reference_to_json).collect())),
+        ("total_evals", Json::Num(s.total_evals as f64)),
+    ])
+}
+
+fn scenario_summary_from_json(j: &Json) -> Result<ScenarioSummary> {
+    let best = match field(j, "best")? {
+        Json::Null => None,
+        d => Some(design_from_json(d)?),
+    };
+    let pareto = field(j, "pareto")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("pareto must be an array"))?
+        .iter()
+        .map(design_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    let references = field(j, "references")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("references must be an array"))?
+        .iter()
+        .map(reference_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ScenarioSummary {
+        scenario: get_str(j, "scenario")?.to_string(),
+        designs: get_usize(j, "designs")?,
+        infeasible: get_usize(j, "infeasible")?,
+        best,
+        pareto,
+        references,
+        total_evals: get_u64(j, "total_evals")?,
+    })
+}
+
+pub fn response_to_json(r: &CodesignResponse) -> Json {
+    let tag = ("type", Json::str(r.kind()));
+    match r {
+        CodesignResponse::Explore(s) | CodesignResponse::WhatIf(s) => {
+            let mut obj = scenario_summary_to_json(s);
+            if let Json::Obj(m) = &mut obj {
+                m.insert("type".to_string(), Json::str(r.kind()));
+            }
+            obj
+        }
+        CodesignResponse::Pareto(p) => Json::obj(vec![
+            tag,
+            ("scenario", Json::str(p.scenario.as_str())),
+            ("designs", Json::Num(p.designs as f64)),
+            ("infeasible", Json::Num(p.infeasible as f64)),
+            ("pareto", Json::Arr(p.pareto.iter().map(design_to_json).collect())),
+            ("total_evals", Json::Num(p.total_evals as f64)),
+        ]),
+        CodesignResponse::Sensitivity(s) => Json::obj(vec![
+            tag,
+            ("band", Json::Arr(vec![fnum(s.band.0), fnum(s.band.1)])),
+            (
+                "rows",
+                Json::Arr(
+                    s.rows
+                        .iter()
+                        .map(|row| {
+                            Json::obj(vec![
+                                ("stencil", Json::str(row.stencil.name())),
+                                ("n_sm", Json::Num(row.n_sm as f64)),
+                                ("n_v", Json::Num(row.n_v as f64)),
+                                ("m_sm_kb", fnum(row.m_sm_kb)),
+                                ("area_mm2", fnum(row.area_mm2)),
+                                ("gflops", fnum(row.gflops)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("total_evals", Json::Num(s.total_evals as f64)),
+        ]),
+        CodesignResponse::Tune(t) => Json::obj(vec![
+            tag,
+            ("budget_mm2", fnum(t.budget_mm2)),
+            ("candidates", Json::Num(t.candidates as f64)),
+            ("best", t.best.as_ref().map(design_to_json).unwrap_or(Json::Null)),
+            ("total_evals", Json::Num(t.total_evals as f64)),
+        ]),
+        CodesignResponse::Validate(v) => Json::obj(vec![
+            tag,
+            ("cases", Json::Num(v.cases as f64)),
+            ("mape_pct", fnum(v.mape_pct)),
+            ("kendall_tau", fnum(v.kendall_tau)),
+        ]),
+        CodesignResponse::SolverCost(s) => Json::obj(vec![
+            tag,
+            ("anneal_iters", Json::Num(s.anneal_iters as f64)),
+            ("summary", Json::str(s.summary.as_str())),
+        ]),
+        CodesignResponse::Error(e) => Json::obj(vec![
+            tag,
+            ("request", Json::str(e.request.as_str())),
+            ("message", Json::str(e.message.as_str())),
+        ]),
+    }
+}
+
+pub fn response_from_json(j: &Json) -> Result<CodesignResponse> {
+    match get_str(j, "type")? {
+        "explore" => Ok(CodesignResponse::Explore(scenario_summary_from_json(j)?)),
+        "what_if" => Ok(CodesignResponse::WhatIf(scenario_summary_from_json(j)?)),
+        "pareto" => Ok(CodesignResponse::Pareto(ParetoSummary {
+            scenario: get_str(j, "scenario")?.to_string(),
+            designs: get_usize(j, "designs")?,
+            infeasible: get_usize(j, "infeasible")?,
+            pareto: field(j, "pareto")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("pareto must be an array"))?
+                .iter()
+                .map(design_from_json)
+                .collect::<Result<Vec<_>>>()?,
+            total_evals: get_u64(j, "total_evals")?,
+        })),
+        "sensitivity" => {
+            let band = field(j, "band")?
+                .as_arr()
+                .filter(|a| a.len() == 2)
+                .ok_or_else(|| anyhow!("band must be a [lo, hi] array"))?;
+            let lo = band[0].as_f64().ok_or_else(|| anyhow!("band entries must be numbers"))?;
+            let hi = band[1].as_f64().ok_or_else(|| anyhow!("band entries must be numbers"))?;
+            let rows = field(j, "rows")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("rows must be an array"))?
+                .iter()
+                .map(|row| {
+                    Ok(SensitivityRow {
+                        stencil: stencil_from_json(field(row, "stencil")?)?,
+                        n_sm: get_u64(row, "n_sm")? as u32,
+                        n_v: get_u64(row, "n_v")? as u32,
+                        m_sm_kb: get_f64(row, "m_sm_kb")?,
+                        area_mm2: get_f64(row, "area_mm2")?,
+                        gflops: get_f64(row, "gflops")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(CodesignResponse::Sensitivity(SensitivitySummary {
+                band: (lo, hi),
+                rows,
+                total_evals: get_u64(j, "total_evals")?,
+            }))
+        }
+        "tune" => Ok(CodesignResponse::Tune(TuneSummary {
+            budget_mm2: get_f64(j, "budget_mm2")?,
+            candidates: get_usize(j, "candidates")?,
+            best: match field(j, "best")? {
+                Json::Null => None,
+                d => Some(design_from_json(d)?),
+            },
+            total_evals: get_u64(j, "total_evals")?,
+        })),
+        "validate" => Ok(CodesignResponse::Validate(ValidateSummary {
+            cases: get_usize(j, "cases")?,
+            mape_pct: get_f64(j, "mape_pct")?,
+            kendall_tau: get_f64(j, "kendall_tau")?,
+        })),
+        "solver_cost" => Ok(CodesignResponse::SolverCost(SolverCostSummary {
+            anneal_iters: get_u64(j, "anneal_iters")?,
+            summary: get_str(j, "summary")?.to_string(),
+        })),
+        "error" => Ok(CodesignResponse::Error(ErrorInfo {
+            request: get_str(j, "request")?.to_string(),
+            message: get_str(j, "message")?.to_string(),
+        })),
+        other => bail!("unknown response type '{other}'"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Envelopes
+// ---------------------------------------------------------------------------
+
+fn check_schema(j: &Json) -> Result<()> {
+    let v = field(j, "schema")?
+        .as_f64()
+        .ok_or_else(|| anyhow!("schema version must be a number"))?;
+    ensure!(
+        v == SCHEMA_VERSION as f64,
+        "unsupported schema version {v} (this build speaks {SCHEMA_VERSION})"
+    );
+    Ok(())
+}
+
+/// `{"schema": 1, "requests": […]}`.
+pub fn encode_requests(requests: &[CodesignRequest]) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Num(SCHEMA_VERSION as f64)),
+        ("requests", Json::Arr(requests.iter().map(request_to_json).collect())),
+    ])
+}
+
+pub fn decode_requests(text: &str) -> Result<Vec<CodesignRequest>> {
+    let j = parse(text).map_err(|e| anyhow!("{e}"))?;
+    check_schema(&j)?;
+    let arr = field(&j, "requests")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("'requests' must be an array"))?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, r)| request_from_json(r).map_err(|e| anyhow!("request {i}: {e:#}")))
+        .collect()
+}
+
+/// `{"schema": 1, "responses": […]}`.
+pub fn encode_responses(responses: &[CodesignResponse]) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Num(SCHEMA_VERSION as f64)),
+        ("responses", Json::Arr(responses.iter().map(response_to_json).collect())),
+    ])
+}
+
+pub fn decode_responses(text: &str) -> Result<Vec<CodesignResponse>> {
+    let j = parse(text).map_err(|e| anyhow!("{e}"))?;
+    check_schema(&j)?;
+    let arr = field(&j, "responses")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("'responses' must be an array"))?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, r)| response_from_json(r).map_err(|e| anyhow!("response {i}: {e:#}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_roundtrip_defaults() {
+        let spec = ScenarioSpec::two_d();
+        let back = spec_from_json(&spec_to_json(&spec)).unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn envelope_schema_enforced() {
+        assert!(decode_requests(r#"{"schema": 99, "requests": []}"#).is_err());
+        assert!(decode_requests(r#"{"requests": []}"#).is_err());
+        assert!(decode_requests("not json").is_err());
+        assert!(decode_requests(r#"{"schema": 1, "requests": []}"#).unwrap().is_empty());
+    }
+
+    #[test]
+    fn unknown_tags_rejected() {
+        let j = parse(r#"{"type": "frobnicate"}"#).unwrap();
+        assert!(request_from_json(&j).is_err());
+        assert!(response_from_json(&j).is_err());
+    }
+}

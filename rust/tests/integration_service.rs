@@ -1,0 +1,370 @@
+//! Certification of the session-service API (PR 2):
+//!
+//! * **Warm cache** — submitting the same Explore request twice yields
+//!   bit-identical responses and ≥99% cache hits on the repeat;
+//! * **Auto-partitioning** — mixed-(C_iter, SolveOpts) request sets are
+//!   split into compatible batch groups, not rejected;
+//! * **Consistency** — service answers equal direct coordinator / tuner
+//!   runs bit-for-bit;
+//! * **Wire format** — every request/response variant survives JSON
+//!   encode→decode bit-exactly; unknown schema versions are clean errors;
+//! * **Serve** — the shipped 9-request example file is answered from one
+//!   warm session with per-request responses that serialize back to JSON.
+
+use codesign::area::AreaModel;
+use codesign::codesign::tuner::{tune, Pinned};
+use codesign::coordinator::Coordinator;
+use codesign::opt::problem::SolveOpts;
+use codesign::service::{
+    wire, CodesignRequest, CodesignResponse, DesignSummary, ErrorInfo, ParetoSummary,
+    ReferenceSummary, ScenarioSpec, ScenarioSummary, SensitivityRow, SensitivitySummary,
+    Session, SolverCostSummary, TuneRequest, TuneSummary, ValidateSummary,
+};
+use codesign::stencil::defs::StencilId;
+use codesign::stencil::workload::Workload;
+use codesign::timemodel::citer::CIterTable;
+use codesign::timemodel::TimeModel;
+
+fn quick_spec() -> ScenarioSpec {
+    ScenarioSpec::two_d().quick(8)
+}
+
+#[test]
+fn repeat_explore_is_bit_identical_and_hot() {
+    let mut session = Session::paper();
+    let req = CodesignRequest::explore(quick_spec());
+
+    let first = session.submit_all(std::slice::from_ref(&req));
+    let entries_after_first = session.cache_entries();
+    assert!(entries_after_first > 0);
+    let a = &first.answers[0].response;
+    let CodesignResponse::Explore(sa) = a else { panic!("unexpected {}", a.kind()) };
+    assert!(sa.designs > 100);
+    assert!(!sa.pareto.is_empty());
+
+    let second = session.submit_all(std::slice::from_ref(&req));
+    let b = &second.answers[0].response;
+    assert_eq!(a, b, "warm repeat must be bit-identical");
+    assert_eq!(session.cache_entries(), entries_after_first, "no new instances solved");
+    assert!(
+        second.cache_hit_rate() >= 0.99,
+        "repeat hit rate {} (hits {}, misses {})",
+        second.cache_hit_rate(),
+        second.cache.hits,
+        second.cache.misses
+    );
+}
+
+#[test]
+fn mixed_solve_opts_are_partitioned_not_rejected() {
+    // The coordinator's batch engine (PR 1) asserts on mixed solver options;
+    // the session splits them into compatible groups instead.
+    let spec_a = quick_spec();
+    let spec_b = quick_spec()
+        .named("coarse")
+        .with_solve_opts(SolveOpts { max_t_t: 96, ..SolveOpts::default() });
+    let requests = vec![
+        CodesignRequest::explore(spec_a),
+        CodesignRequest::explore(spec_b),
+    ];
+    let mut session = Session::paper();
+    let rep = session.submit_all(&requests);
+    assert_eq!(rep.answers.len(), 2);
+    assert_eq!(session.partitions(), 2, "one coordinator per (C_iter, SolveOpts)");
+    for a in &rep.answers {
+        let CodesignResponse::Explore(s) = &a.response else {
+            panic!("unexpected {}", a.response.kind());
+        };
+        assert!(s.designs > 100, "{}: {} designs", s.scenario, s.designs);
+    }
+
+    // Mixed C_iter tables partition the same way.
+    let other_citer = CIterTable::with_measured(&[(StencilId::Jacobi2D, 99.0)]);
+    let req = CodesignRequest::explore(quick_spec().with_citer(other_citer));
+    let rep = session.submit_all(std::slice::from_ref(&req));
+    assert!(!rep.answers[0].response.is_error());
+    assert_eq!(session.partitions(), 3);
+}
+
+#[test]
+fn service_explore_matches_direct_coordinator_run() {
+    let spec = quick_spec();
+    let sc = spec.to_scenario().unwrap();
+    let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+    let direct = coord.run_scenario(&sc);
+
+    let mut session = Session::paper();
+    let answer = session.submit(&CodesignRequest::explore(spec));
+    let CodesignResponse::Explore(s) = &answer.response else {
+        panic!("unexpected {}", answer.response.kind());
+    };
+    assert_eq!(s.designs, direct.result.points.len());
+    assert_eq!(s.infeasible, direct.result.infeasible_points);
+    assert_eq!(s.pareto.len(), direct.result.pareto.len());
+    for (ours, &i) in s.pareto.iter().zip(&direct.result.pareto) {
+        let theirs = &direct.result.points[i];
+        assert_eq!(ours.gflops.to_bits(), theirs.gflops.to_bits());
+        assert_eq!(ours.n_sm, theirs.hw.n_sm);
+        assert_eq!(ours.n_v, theirs.hw.n_v);
+    }
+    let best_direct =
+        direct.result.points.iter().map(|p| p.gflops).fold(f64::MIN, f64::max);
+    assert_eq!(s.best.as_ref().unwrap().gflops.to_bits(), best_direct.to_bits());
+}
+
+#[test]
+fn service_tune_matches_direct_tuner() {
+    let pinned = Pinned { n_sm: None, n_v: Some(128), m_sm_kb: Some(96.0), caches: None };
+    let workload = Workload::single(StencilId::Heat2D);
+    let direct = tune(
+        &pinned,
+        430.0,
+        &workload,
+        &AreaModel::paper(),
+        &TimeModel::maxwell(),
+        &CIterTable::paper(),
+        &SolveOpts::default(),
+    )
+    .expect("430 mm² fits a design");
+
+    let mut session = Session::paper();
+    let req = TuneRequest::new(430.0)
+        .pin_n_v(128)
+        .pin_m_sm_kb(96.0)
+        .for_stencil(StencilId::Heat2D)
+        .with_threads(3);
+    let answer = session.submit(&CodesignRequest::tune(req));
+    let CodesignResponse::Tune(t) = &answer.response else {
+        panic!("unexpected {}", answer.response.kind());
+    };
+    assert_eq!(t.candidates, direct.candidates);
+    let best = t.best.as_ref().unwrap();
+    assert_eq!(best.n_sm, direct.hw.n_sm);
+    assert_eq!(best.n_v, direct.hw.n_v);
+    assert_eq!(best.m_sm_kb.to_bits(), direct.hw.m_sm_kb.to_bits());
+    assert_eq!(best.gflops.to_bits(), direct.gflops.to_bits());
+    assert_eq!(best.area_mm2.to_bits(), direct.area_mm2.to_bits());
+
+    // The tune fed the memo store: repeating it is pure cache service.
+    let again = session.submit_all(&[CodesignRequest::tune(
+        TuneRequest::new(430.0)
+            .pin_n_v(128)
+            .pin_m_sm_kb(96.0)
+            .for_stencil(StencilId::Heat2D),
+    )]);
+    assert!(again.cache_hit_rate() >= 0.99, "tune repeat {}", again.cache_hit_rate());
+    assert_eq!(&again.answers[0].response, &answer.response);
+}
+
+#[test]
+fn whatif_reaggregates_without_new_solves() {
+    let mut session = Session::paper();
+    let base = quick_spec();
+    session.submit(&CodesignRequest::explore(base.clone()));
+    let entries = session.cache_entries();
+
+    let rep = session.submit_all(&[CodesignRequest::what_if(
+        base,
+        vec![(StencilId::Jacobi2D, 1.0)],
+    )]);
+    assert_eq!(session.cache_entries(), entries, "what-if must not solve anything new");
+    assert!(rep.cache_hit_rate() >= 0.99);
+    let CodesignResponse::WhatIf(s) = &rep.answers[0].response else {
+        panic!("unexpected {}", rep.answers[0].response.kind());
+    };
+    assert!(s.best.as_ref().unwrap().gflops > 0.0);
+}
+
+// ---------------------------------------------------------------------------
+// Wire format
+// ---------------------------------------------------------------------------
+
+fn all_request_variants() -> Vec<CodesignRequest> {
+    // Awkward floats on purpose: shortest-round-trip formatting must carry
+    // them bit-exactly.
+    let spec = ScenarioSpec::two_d()
+        .named("wire-test")
+        .quick(7)
+        .with_area_budget(0.1 + 0.2)
+        .with_threads(3)
+        .weighted(StencilId::Jacobi2D, 1.0 / 3.0)
+        .weighted(StencilId::Heat2D, 1e-17)
+        .with_citer(CIterTable::paper().scaled(1.000000000000003))
+        .with_solve_opts(SolveOpts { all_k: true, refine: false, max_t_t: 96 });
+    vec![
+        CodesignRequest::explore(spec.clone()),
+        CodesignRequest::pareto(ScenarioSpec::three_d()),
+        CodesignRequest::what_if(
+            ScenarioSpec::single(StencilId::Heat3D),
+            vec![(StencilId::Heat3D, 0.30000000000000004)],
+        ),
+        CodesignRequest::sensitivity(spec, ScenarioSpec::three_d(), (425.0, 450.7)),
+        CodesignRequest::tune(
+            TuneRequest::new(432.1)
+                .pin_n_sm(16)
+                .pin_m_sm_kb(96.0)
+                .for_stencil(StencilId::Gradient2D)
+                .with_threads(2),
+        ),
+        CodesignRequest::validate(),
+        CodesignRequest::solver_cost(12_345),
+    ]
+}
+
+#[test]
+fn every_request_variant_roundtrips_bit_exactly() {
+    let requests = all_request_variants();
+    // Item-level round trip.
+    for r in &requests {
+        let back = wire::request_from_json(&wire::request_to_json(r)).unwrap();
+        assert_eq!(*r, back, "{} variant", r.kind());
+    }
+    // Envelope round trip, compact and pretty.
+    for text in [
+        wire::encode_requests(&requests).to_string_compact(),
+        wire::encode_requests(&requests).to_string_pretty(),
+    ] {
+        let back = wire::decode_requests(&text).unwrap();
+        assert_eq!(requests, back);
+    }
+}
+
+fn all_response_variants() -> Vec<CodesignResponse> {
+    let design = DesignSummary {
+        n_sm: 14,
+        n_v: 224,
+        m_sm_kb: 36.0,
+        area_mm2: 431.6999999999999,
+        gflops: 2059.3333333333335,
+        seconds: 1.0 / 3.0,
+    };
+    let reference = ReferenceSummary {
+        name: "gtx980".to_string(),
+        area_mm2: 390.12345678901234,
+        published_area_mm2: 398.0,
+        gflops: 1009.0000000000001,
+        improvement_pct: Some(104.1),
+    };
+    let summary = ScenarioSummary {
+        scenario: "2d".to_string(),
+        designs: 3111,
+        infeasible: 7,
+        best: Some(design.clone()),
+        pareto: vec![design.clone(), DesignSummary { n_sm: 2, ..design.clone() }],
+        references: vec![reference],
+        total_evals: 9_007_199_254,
+    };
+    vec![
+        CodesignResponse::Explore(summary.clone()),
+        CodesignResponse::WhatIf(ScenarioSummary { scenario: "whatif".into(), ..summary.clone() }),
+        CodesignResponse::Pareto(ParetoSummary {
+            scenario: "p".to_string(),
+            designs: 12,
+            infeasible: 0,
+            pareto: vec![design.clone()],
+            total_evals: 41_557,
+        }),
+        CodesignResponse::Sensitivity(SensitivitySummary {
+            band: (425.0, 450.0),
+            rows: vec![SensitivityRow {
+                stencil: StencilId::Laplacian3D,
+                n_sm: 8,
+                n_v: 896,
+                m_sm_kb: 96.0,
+                area_mm2: 446.00000000000006,
+                gflops: 1427.9,
+            }],
+            total_evals: 123_456_789,
+        }),
+        CodesignResponse::Tune(TuneSummary {
+            budget_mm2: 450.0,
+            candidates: 193,
+            best: None,
+            total_evals: 0,
+        }),
+        CodesignResponse::Tune(TuneSummary {
+            budget_mm2: 450.0,
+            candidates: 193,
+            best: Some(design),
+            total_evals: 77_003,
+        }),
+        CodesignResponse::Validate(ValidateSummary {
+            cases: 240,
+            mape_pct: 11.799999999999999,
+            kendall_tau: 0.7071067811865476,
+        }),
+        CodesignResponse::SolverCost(SolverCostSummary {
+            anneal_iters: 50_000,
+            summary: "line one\nline \"two\" — µs\n".to_string(),
+        }),
+        CodesignResponse::Error(ErrorInfo {
+            request: "explore".to_string(),
+            message: "stencil weights zero out every workload entry".to_string(),
+        }),
+    ]
+}
+
+#[test]
+fn every_response_variant_roundtrips_bit_exactly() {
+    let responses = all_response_variants();
+    for r in &responses {
+        let back = wire::response_from_json(&wire::response_to_json(r)).unwrap();
+        assert_eq!(*r, back, "{} variant", r.kind());
+    }
+    let text = wire::encode_responses(&responses).to_string_compact();
+    assert_eq!(wire::decode_responses(&text).unwrap(), responses);
+}
+
+#[test]
+fn unknown_schema_version_is_a_clean_error() {
+    let err = wire::decode_requests(r#"{"schema": 2, "requests": []}"#).unwrap_err();
+    assert!(format!("{err:#}").contains("schema version"), "{err:#}");
+    let err = wire::decode_responses(r#"{"schema": 0, "responses": []}"#).unwrap_err();
+    assert!(format!("{err:#}").contains("schema version"), "{err:#}");
+    assert!(wire::decode_requests(r#"[1, 2]"#).is_err(), "bare arrays lack a version");
+}
+
+// ---------------------------------------------------------------------------
+// Serve: the shipped request file
+// ---------------------------------------------------------------------------
+
+#[test]
+fn example_request_file_is_served_from_one_warm_session() {
+    let text = include_str!("../../examples/service_requests.json");
+    let requests = wire::decode_requests(text).expect("shipped request file must decode");
+    assert_eq!(requests.len(), 9, "the example promises nine requests");
+
+    let mut session = Session::paper();
+    let rep = session.submit_all(&requests);
+    assert_eq!(rep.answers.len(), 9);
+    for (req, ans) in requests.iter().zip(&rep.answers) {
+        assert!(
+            !ans.response.is_error(),
+            "request '{}' failed: {:?}",
+            req.kind(),
+            ans.response
+        );
+        assert_eq!(req.kind(), ans.response.kind(), "responses are variant-matched");
+    }
+    // One warm session: 2-D scenarios share one sweep, so the whole file
+    // needs far fewer inner solves than request-by-request evaluation.
+    assert!(rep.unique_instances > 0);
+    assert!(rep.lookups() > rep.unique_instances as u64 * 2);
+
+    // Per-request responses serialize back to JSON and round-trip.
+    let responses: Vec<CodesignResponse> =
+        rep.answers.iter().map(|a| a.response.clone()).collect();
+    let encoded = wire::encode_responses(&responses).to_string_compact();
+    let back = wire::decode_responses(&encoded).unwrap();
+    assert_eq!(responses, back);
+
+    // A repeated submission of the whole file is almost pure cache service
+    // (validate runs no cached work; everything scenario-backed is hot).
+    let again = session.submit_all(&requests);
+    assert!(again.cache_hit_rate() >= 0.99, "repeat file {}", again.cache_hit_rate());
+    for (a, b) in rep.answers.iter().zip(&again.answers) {
+        if !matches!(a.response, CodesignResponse::SolverCost(_)) {
+            assert_eq!(a.response, b.response);
+        }
+    }
+}
