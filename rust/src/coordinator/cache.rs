@@ -1,6 +1,7 @@
 //! Memoized inner-solution store.
 //!
-//! Keyed by the full (hardware, stencil, size) instance. Sharded mutexes
+//! Keyed by the full (hardware, stencil-characterization, size) instance —
+//! see [`CacheKey`] for why characterization, not identity. Sharded mutexes
 //! keep contention negligible under the worker pool (the inner solve costs
 //! 10³–10⁵ model evaluations; a lock round-trip is noise).
 //!
@@ -17,7 +18,7 @@
 
 use crate::area::params::HwParams;
 use crate::opt::inner::InnerSolution;
-use crate::stencil::defs::StencilId;
+use crate::stencil::defs::Stencil;
 use crate::stencil::workload::ProblemSize;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -25,12 +26,26 @@ use std::sync::Mutex;
 
 /// Exact instance key. `f64` fields are stored as bits — they come from
 /// finite enumeration grids, so bit-equality is the right notion.
+///
+/// The stencil is keyed by its **derived characterization** — everything the
+/// time model actually consumes (dimensionality, halo σ, flops/point,
+/// buffers, bytes/cell, effective `C_iter`) — not by its registry identity.
+/// Two differently-named stencils with identical characterization (e.g. a
+/// preset and an equivalent parametric spec) therefore share one memoized
+/// solution, and any parametric family member caches exactly like a preset.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct CacheKey {
     pub n_sm: u32,
     pub n_v: u32,
     pub m_sm_kb_bits: u64,
-    pub stencil: StencilId,
+    pub space_dims: u32,
+    pub sigma: u32,
+    pub flops_bits: u64,
+    pub n_buffers_bits: u64,
+    pub bytes_bits: u64,
+    /// The *effective* per-iteration cost: callers must pass a stencil that
+    /// already carries its table value (`CIterTable::apply`).
+    pub c_iter_bits: u64,
     pub s1: u64,
     pub s2: u64,
     pub s3: u64,
@@ -38,12 +53,20 @@ pub struct CacheKey {
 }
 
 impl CacheKey {
-    pub fn new(hw: &HwParams, stencil: StencilId, size: &ProblemSize) -> CacheKey {
+    /// Build the key for one (hardware, stencil, size) instance. `stencil`
+    /// must be the stencil *as solved* — i.e. with the scenario's `C_iter`
+    /// table already applied — so the key pins the exact inner problem.
+    pub fn new(hw: &HwParams, stencil: &Stencil, size: &ProblemSize) -> CacheKey {
         CacheKey {
             n_sm: hw.n_sm,
             n_v: hw.n_v,
             m_sm_kb_bits: hw.m_sm_kb.to_bits(),
-            stencil,
+            space_dims: stencil.space_dims,
+            sigma: stencil.sigma,
+            flops_bits: stencil.flops_per_point.to_bits(),
+            n_buffers_bits: stencil.n_buffers.to_bits(),
+            bytes_bits: stencil.bytes_per_cell.to_bits(),
+            c_iter_bits: stencil.c_iter_cycles.to_bits(),
             s1: size.s1,
             s2: size.s2,
             s3: size.s3.unwrap_or(0),
@@ -210,7 +233,7 @@ mod tests {
     fn key(n_v: u32) -> CacheKey {
         CacheKey::new(
             &HwParams { n_v, ..HwParams::gtx980() },
-            StencilId::Jacobi2D,
+            Stencil::get(crate::stencil::defs::StencilId::Jacobi2D),
             &ProblemSize::d2(1024, 256),
         )
     }
@@ -231,6 +254,24 @@ mod tests {
             },
             evals: 1,
         })
+    }
+
+    #[test]
+    fn key_is_characterization_not_identity() {
+        use crate::stencil::defs::StencilId;
+        use crate::stencil::spec::{Dim, StencilSpec};
+        let hw = HwParams::gtx980();
+        let size = ProblemSize::d2(1024, 256);
+        let jac = Stencil::get(StencilId::Jacobi2D);
+        // A parametric spec pinned to Jacobi's exact characterization shares
+        // its key; bumping the radius (different σ, flops) does not.
+        let twin = Stencil::get(
+            StencilSpec::star(Dim::D2, 1).with_flops(4.0).with_c_iter(11.0).register(),
+        );
+        assert_ne!(jac.id, twin.id, "distinct identities");
+        assert_eq!(CacheKey::new(&hw, jac, &size), CacheKey::new(&hw, twin, &size));
+        let r2 = Stencil::get(StencilSpec::star(Dim::D2, 2).register());
+        assert_ne!(CacheKey::new(&hw, jac, &size), CacheKey::new(&hw, r2, &size));
     }
 
     #[test]

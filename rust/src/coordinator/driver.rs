@@ -27,6 +27,7 @@ use crate::coordinator::cache::{CacheKey, MemoCache};
 use crate::opt::inner::InnerSolution;
 use crate::opt::problem::SolveOpts;
 use crate::opt::separable::{aggregate_weighted, solve_entry};
+use crate::stencil::defs::Stencil;
 use crate::stencil::workload::WorkloadEntry;
 use crate::timemodel::citer::CIterTable;
 use crate::timemodel::talg::TimeModel;
@@ -72,6 +73,10 @@ pub struct BatchReport {
 struct SweepInstance {
     hw: HwParams,
     entry: WorkloadEntry,
+    /// The entry's stencil with the batch `C_iter` applied — the exact
+    /// characterization the cache key and the inner solver see
+    /// (`CIterTable::characterize_workload`).
+    stencil: Stencil,
 }
 
 /// The long-lived coordinator: owns the models and the memo store.
@@ -177,15 +182,20 @@ impl Coordinator {
         let threads = scenarios.iter().map(|s| s.threads).max().unwrap_or(1).max(1);
 
         // Plan: per-scenario spaces, then the deduplicated instance union.
+        // Dedup is by characterization-level `CacheKey`, so scenarios over
+        // differently-named but identically-characterized stencils share
+        // sweep work too.
+        let citer = &scenarios[0].citer;
         let spaces: Vec<Vec<DesignPoint>> =
             scenarios.iter().map(|s| enumerate_space(&self.area_model, &s.space)).collect();
         let mut seen: HashSet<CacheKey> = HashSet::new();
         let mut instances: Vec<SweepInstance> = Vec::new();
         for (sc, space) in scenarios.iter().zip(&spaces) {
+            let chars = citer.characterize_workload(&sc.workload);
             for pt in space {
-                for e in &sc.workload.entries {
-                    if seen.insert(CacheKey::new(&pt.hw, e.stencil, &e.size)) {
-                        instances.push(SweepInstance { hw: pt.hw, entry: *e });
+                for (e, st) in sc.workload.entries.iter().zip(&chars) {
+                    if seen.insert(CacheKey::new(&pt.hw, st, &e.size)) {
+                        instances.push(SweepInstance { hw: pt.hw, entry: *e, stencil: *st });
                     }
                 }
             }
@@ -193,9 +203,9 @@ impl Coordinator {
             // (the time model ignores their caches, so sharing `CacheKey`s
             // with same-shaped cache-less grid points is exact).
             for hw in [HwParams::gtx980(), HwParams::titanx()] {
-                for e in &sc.workload.entries {
-                    if seen.insert(CacheKey::new(&hw, e.stencil, &e.size)) {
-                        instances.push(SweepInstance { hw, entry: *e });
+                for (e, st) in sc.workload.entries.iter().zip(&chars) {
+                    if seen.insert(CacheKey::new(&hw, st, &e.size)) {
+                        instances.push(SweepInstance { hw, entry: *e, stencil: *st });
                     }
                 }
             }
@@ -206,10 +216,9 @@ impl Coordinator {
         // keeps cursor traffic low when most instances are already cached.
         self.done.store(0, Ordering::Relaxed);
         let chunk = (unique_instances / (threads * 8).max(1)).clamp(1, 128);
-        let citer = &scenarios[0].citer;
         let opts = &scenarios[0].solve_opts;
         parallel_map_chunked(&instances, threads, chunk, |inst| {
-            let key = CacheKey::new(&inst.hw, inst.entry.stencil, &inst.entry.size);
+            let key = CacheKey::new(&inst.hw, &inst.stencil, &inst.entry.size);
             self.cache.get_or_compute(key, || {
                 solve_entry(&self.time_model, citer, &inst.hw, &inst.entry, opts)
             });
@@ -247,6 +256,7 @@ impl Coordinator {
 
     /// Aggregate one scenario entirely from cached inner solutions.
     fn serve_scenario(&self, scenario: &Scenario, space: &[DesignPoint]) -> ScenarioResult {
+        let chars = scenario.citer.characterize_workload(&scenario.workload);
         let mut points: Vec<DesignEval> = Vec::new();
         let mut front = ParetoFront::new();
         let mut infeasible = 0usize;
@@ -256,8 +266,9 @@ impl Coordinator {
                 .workload
                 .entries
                 .iter()
-                .map(|e| {
-                    let key = CacheKey::new(&pt.hw, e.stencil, &e.size);
+                .zip(&chars)
+                .map(|(e, st)| {
+                    let key = CacheKey::new(&pt.hw, st, &e.size);
                     self.cache
                         .get(&key)
                         .expect("batch sweep must populate every (hw, entry) instance")
@@ -321,12 +332,14 @@ impl Coordinator {
         published_area_mm2: f64,
         scenario: &Scenario,
     ) -> RefEval {
+        let chars = scenario.citer.characterize_workload(&scenario.workload);
         let per_entry: Vec<Option<InnerSolution>> = scenario
             .workload
             .entries
             .iter()
-            .map(|e| {
-                let key = CacheKey::new(&hw, e.stencil, &e.size);
+            .zip(&chars)
+            .map(|(e, st)| {
+                let key = CacheKey::new(&hw, st, &e.size);
                 self.cache
                     .get(&key)
                     .expect("batch sweep must cover the reference architectures")

@@ -11,6 +11,20 @@
 //! per-stencil subsets) from **one** shared, sharded hardware sweep, so
 //! scenario throughput scales with cores while sweep cost stays flat in the
 //! number of scenarios.
+//!
+//! # Examples
+//!
+//! ```no_run
+//! use codesign::area::AreaModel;
+//! use codesign::codesign::scenario::Scenario;
+//! use codesign::coordinator::Coordinator;
+//! use codesign::timemodel::TimeModel;
+//!
+//! let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+//! let batch = coord.run_batch(&[Scenario::paper_2d(), Scenario::paper_3d()]);
+//! // A repeated batch over the same grids is ~100% cache hits.
+//! assert_eq!(batch.len(), 2);
+//! ```
 
 pub mod cache;
 pub mod driver;

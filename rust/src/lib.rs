@@ -22,8 +22,16 @@
 //!   service ([`service`]) — the typed request API everything public
 //!   routes through.
 //!
+//! ## Workloads beyond the paper
+//!
+//! The six paper kernels are presets of a parametric stencil-family
+//! subsystem ([`stencil::spec`]): any star/box stencil of radius 1–8 in
+//! 2-D/3-D is a first-class workload, addressed by names like `star3d:r2`
+//! everywhere a stencil name is accepted (CLI, wire schema v2, workloads).
+//!
 //! See `DESIGN.md` (repo root) for the system inventory, the batched DSE
-//! engine's contract, and the per-experiment index.
+//! engine's contract, the stencil characterization math, and the
+//! per-experiment index.
 
 pub mod area;
 pub mod cacti;

@@ -14,9 +14,9 @@ use codesign::report;
 use codesign::runtime::{measure_citer, Engine};
 use codesign::service::{
     wire, CodesignRequest, CodesignResponse, ResponseDetail, ScenarioSpec, Session,
-    SubmitReport, TuneRequest,
+    SubmitReport, TuneRequest, WorkloadClass,
 };
-use codesign::stencil::defs::StencilId;
+use codesign::stencil::defs::ALL_STENCILS;
 use codesign::timemodel::{CIterTable, TimeModel};
 use codesign::util::cli::{Args, Cli, Command, OptSpec, Parsed};
 use codesign::util::json::Json;
@@ -43,7 +43,8 @@ fn cli() -> Cli {
                     out.clone(),
                     quick.clone(),
                     threads.clone(),
-                    OptSpec { name: "class", takes_value: true, default: Some("both"), help: "2d | 3d | both" },
+                    OptSpec { name: "class", takes_value: true, default: Some("both"), help: "2d | 3d | both | <stencil>" },
+                    OptSpec { name: "stencil", takes_value: true, default: None, help: "single stencil: preset (jacobi2d) or family (star3d:r2)" },
                     OptSpec { name: "measured-citer", takes_value: false, default: None, help: "use PJRT-measured C_iter" },
                 ],
             },
@@ -84,7 +85,7 @@ fn cli() -> Cli {
                     OptSpec { name: "n-sm", takes_value: true, default: None, help: "pin the SM count" },
                     OptSpec { name: "n-v", takes_value: true, default: None, help: "pin vector units per SM" },
                     OptSpec { name: "m-sm", takes_value: true, default: None, help: "pin shared memory (kB)" },
-                    OptSpec { name: "stencil", takes_value: true, default: None, help: "single-benchmark workload (default: 2d mix)" },
+                    OptSpec { name: "stencil", takes_value: true, default: None, help: "single-stencil workload, preset or family name (default: 2d mix)" },
                 ],
             },
             Command {
@@ -99,7 +100,7 @@ fn cli() -> Cli {
             },
             Command {
                 name: "serve",
-                about: "answer a JSON request file through one warm session (wire schema v1)",
+                about: "answer a JSON request file through one warm session (wire schema v2; v1 accepted)",
                 opts: vec![
                     OptSpec { name: "requests", takes_value: true, default: None, help: "request file path (required)" },
                     OptSpec { name: "out", takes_value: true, default: Some("-"), help: "response file path ('-' = stdout)" },
@@ -169,10 +170,31 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
         }
         "explore" | "sensitivity" | "report" => {
             let class = args.opt_or("class", "both");
-            anyhow::ensure!(
-                matches!(class.as_str(), "2d" | "3d" | "both"),
-                "--class must be 2d, 3d or both (got '{class}')"
-            );
+            // `--class both` fans out to the two paper panels; anything else
+            // (2d, 3d, a preset name, a parametric family like star3d:r2)
+            // resolves through `WorkloadClass::parse`, whose rejection lists
+            // every valid option. `--stencil NAME` is shorthand for
+            // `--class NAME` restricted to single-stencil classes.
+            let single_class = match (cmd, args.opt("stencil"), class.as_str()) {
+                ("explore", Some(name), _) => {
+                    anyhow::ensure!(
+                        class == "both",
+                        "--stencil {name} conflicts with --class {class}; pass one or the other"
+                    );
+                    let st = codesign::stencil::defs::Stencil::by_name_err(name)
+                        .map_err(|msg| anyhow::anyhow!("{msg}"))?;
+                    Some(WorkloadClass::Single(st.id))
+                }
+                ("explore", None, "both" | "2d" | "3d") => None,
+                ("explore", None, other) => Some(WorkloadClass::parse(other)?),
+                _ => {
+                    anyhow::ensure!(
+                        class == "both",
+                        "--class is only selectable for explore (got '{class}')"
+                    );
+                    None
+                }
+            };
             let citer = if args.flag("measured-citer") {
                 let mut engine = Engine::from_default_artifacts()?;
                 measure_citer(&mut engine, 3)?
@@ -181,12 +203,16 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
             };
             // `--class` filters *before* any scenario is constructed: only
             // the requested specs are ever built.
-            let want_2d = cmd != "explore" || class != "3d";
-            let want_3d = cmd != "explore" || class != "2d";
+            let want_2d = single_class.is_none() && (cmd != "explore" || class != "3d");
+            let want_3d = single_class.is_none() && (cmd != "explore" || class != "2d");
             let spec_2d = want_2d.then(|| spec_from_args(ScenarioSpec::two_d(), args, &citer));
             let spec_3d = want_3d.then(|| spec_from_args(ScenarioSpec::three_d(), args, &citer));
 
             let mut requests = Vec::new();
+            if let Some(c) = single_class {
+                let spec = spec_from_args(ScenarioSpec::new(c), args, &citer);
+                requests.push(CodesignRequest::explore(spec));
+            }
             for spec in [&spec_2d, &spec_3d].into_iter().flatten() {
                 requests.push(CodesignRequest::explore(spec.clone()));
             }
@@ -292,19 +318,12 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
             println!("PJRT platform: {}", engine.platform());
             let table = measure_citer(&mut engine, repeats)?;
             let paper = CIterTable::paper();
-            for id in [
-                StencilId::Jacobi2D,
-                StencilId::Heat2D,
-                StencilId::Laplacian2D,
-                StencilId::Gradient2D,
-                StencilId::Heat3D,
-                StencilId::Laplacian3D,
-            ] {
+            for s in &ALL_STENCILS {
                 println!(
                     "  {:<12} measured {:>7.2} cycles (paper mode {:>5.1})",
-                    id.name(),
-                    table.get(id),
-                    paper.get(id)
+                    s.name(),
+                    table.get(s.id),
+                    paper.get(s.id)
                 );
             }
         }
@@ -338,9 +357,9 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
             req.m_sm_kb = args.opt_f64("m-sm");
             req.threads = args.opt_usize("threads");
             if let Some(name) = args.opt("stencil") {
-                let id = StencilId::from_name(name)
-                    .ok_or_else(|| anyhow::anyhow!("unknown stencil '{name}'"))?;
-                req.stencil = Some(id);
+                let st = codesign::stencil::defs::Stencil::by_name_err(name)
+                    .map_err(|msg| anyhow::anyhow!("{msg}"))?;
+                req.stencil = Some(st.id);
             }
             let mut session = Session::new(area_model, time_model);
             let answer = session.submit(&CodesignRequest::Tune(req));

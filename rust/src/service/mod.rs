@@ -11,8 +11,10 @@
 //!   into compatible batch groups by (C_iter, solver options) so mixed
 //!   request sets batch instead of being rejected.
 //! * [`wire`] — the versioned JSON wire format: bit-exact request/response
-//!   round-trips and the `{"schema": 1, …}` file envelopes behind
-//!   `codesign serve --requests`.
+//!   round-trips and the `{"schema": 2, …}` file envelopes behind
+//!   `codesign serve --requests` (schema v1 files still decode; v2 adds
+//!   parametric stencil-family names like `star3d:r2` everywhere a stencil
+//!   name is accepted).
 //!
 //! ```no_run
 //! use codesign::service::{CodesignRequest, ScenarioSpec, Session};
@@ -38,5 +40,5 @@ pub use session::{
 };
 pub use wire::{
     decode_requests, decode_responses, encode_requests, encode_responses, request_from_json,
-    request_to_json, response_from_json, response_to_json, SCHEMA_VERSION,
+    request_to_json, response_from_json, response_to_json, MIN_SCHEMA_VERSION, SCHEMA_VERSION,
 };

@@ -12,6 +12,7 @@
 use crate::codesign::scenario::Scenario;
 use crate::opt::problem::SolveOpts;
 use crate::stencil::defs::{Stencil, StencilId};
+use crate::stencil::spec::StencilSpec;
 use crate::stencil::workload::Workload;
 use crate::timemodel::citer::CIterTable;
 
@@ -22,7 +23,8 @@ pub enum WorkloadClass {
     TwoD,
     /// The two 3-D stencils over the cube grid.
     ThreeD,
-    /// One benchmark over its dimension-appropriate size grid.
+    /// One stencil — preset or registered parametric family member — over
+    /// its dimension-appropriate size grid.
     Single(StencilId),
 }
 
@@ -32,6 +34,21 @@ impl WorkloadClass {
             WorkloadClass::TwoD => "2d".to_string(),
             WorkloadClass::ThreeD => "3d".to_string(),
             WorkloadClass::Single(id) => id.name().to_string(),
+        }
+    }
+
+    /// Parse a class name: `2d`, `3d`, a preset stencil name, or a
+    /// parametric family name (`star3d:r2`). Unknown names error with the
+    /// full list of valid presets and the family grammar — the message the
+    /// CLI's `--class`/`--stencil` and the wire decoder surface.
+    pub fn parse(s: &str) -> anyhow::Result<WorkloadClass> {
+        match s {
+            "2d" => Ok(WorkloadClass::TwoD),
+            "3d" => Ok(WorkloadClass::ThreeD),
+            other => match Stencil::by_name_err(other) {
+                Ok(st) => Ok(WorkloadClass::Single(st.id)),
+                Err(msg) => anyhow::bail!("{msg} (or a workload class: 2d, 3d)"),
+            },
         }
     }
 }
@@ -82,6 +99,20 @@ impl ScenarioSpec {
 
     pub fn single(id: StencilId) -> ScenarioSpec {
         ScenarioSpec::new(WorkloadClass::Single(id))
+    }
+
+    /// A single-stencil scenario over a parametric family member, registering
+    /// the spec on construction.
+    ///
+    /// ```no_run
+    /// use codesign::service::ScenarioSpec;
+    /// use codesign::stencil::spec::{Dim, StencilSpec};
+    ///
+    /// let spec = ScenarioSpec::parametric(StencilSpec::star(Dim::D3, 2));
+    /// assert_eq!(spec.scenario_name(), "star3d:r2");
+    /// ```
+    pub fn parametric(spec: StencilSpec) -> ScenarioSpec {
+        ScenarioSpec::single(spec.register())
     }
 
     pub fn named(mut self, name: &str) -> ScenarioSpec {
@@ -553,6 +584,36 @@ mod tests {
         assert!(s2.workload.entries.iter().all(|e| e.size.s3.is_none()));
         let s3 = ScenarioSpec::single(StencilId::Heat3D).to_scenario().unwrap();
         assert!(s3.workload.entries.iter().all(|e| e.size.s3.is_some()));
+    }
+
+    #[test]
+    fn class_parse_covers_presets_and_families() {
+        assert_eq!(WorkloadClass::parse("2d").unwrap(), WorkloadClass::TwoD);
+        assert_eq!(WorkloadClass::parse("3d").unwrap(), WorkloadClass::ThreeD);
+        assert_eq!(
+            WorkloadClass::parse("heat3d").unwrap(),
+            WorkloadClass::Single(StencilId::Heat3D)
+        );
+        let WorkloadClass::Single(id) = WorkloadClass::parse("star3d:r2").unwrap() else {
+            panic!("family name must parse to Single");
+        };
+        assert_eq!(id.name(), "star3d:r2");
+        // The rejection lists every valid option, not a bare "unknown".
+        let err = format!("{:#}", WorkloadClass::parse("warp5d").unwrap_err());
+        for needle in ["jacobi2d", "heat3d", "star|box", "2d, 3d"] {
+            assert!(err.contains(needle), "'{err}' should mention '{needle}'");
+        }
+    }
+
+    #[test]
+    fn parametric_spec_materializes_dimension_matched_scenario() {
+        use crate::stencil::spec::{Dim, StencilSpec};
+        let sc = ScenarioSpec::parametric(StencilSpec::star(Dim::D3, 2))
+            .quick(3)
+            .to_scenario()
+            .unwrap();
+        assert_eq!(sc.name, "star3d:r2");
+        assert!(sc.workload.entries.iter().all(|e| e.size.s3.is_some()));
     }
 
     #[test]

@@ -396,6 +396,9 @@ impl Session {
             Some(id) => Workload::single(id),
             None => Workload::uniform_2d(),
         };
+        // Characterization-level cache keys, exactly as the batch engine
+        // builds them (cache.rs: the stencil must carry its table C_iter).
+        let chars = req.citer.characterize_workload(&workload);
         let candidates = candidate_grid(&pinned, req.budget_mm2, &self.area_model);
         let ci = self.coordinator_index(&req.citer, &req.solve_opts);
         let coord = &self.coordinators[ci].2;
@@ -406,8 +409,9 @@ impl Session {
             let per_entry: Vec<Option<InnerSolution>> = workload
                 .entries
                 .iter()
-                .map(|e| {
-                    let key = CacheKey::new(&cand.hw, e.stencil, &e.size);
+                .zip(&chars)
+                .map(|(e, st)| {
+                    let key = CacheKey::new(&cand.hw, st, &e.size);
                     coord
                         .cache
                         .get_or_compute(key, || solve_entry(time_model, citer, &cand.hw, e, opts))

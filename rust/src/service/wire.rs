@@ -4,8 +4,27 @@
 //! `{"type": …}`-tagged object and decodes back **bit-exactly** (floats ride
 //! Rust's shortest-round-trip formatting; non-finite values encode as
 //! `null` and decode as NaN). Request and response files share one envelope,
-//! `{"schema": 1, "requests"|"responses": […]}`; an unknown schema version is
+//! `{"schema": 2, "requests"|"responses": […]}`; an unknown schema version is
 //! a clean error, never a guess.
+//!
+//! **Schema history.** v2 is a strict superset of v1 (v1 files still decode):
+//! every field where v1 accepted a stencil name (`class`, `stencil`, weights
+//! and `citer` entries) now also accepts a parametric family name like
+//! `star3d:r2` or `box2d:r1:f20` (the canonical
+//! [`StencilSpec`](crate::stencil::spec::StencilSpec) grammar), which
+//! registers the family member on decode; and
+//! `citer` tables may carry entries beyond the six presets. Encoding emits
+//! canonical names, so specs round-trip bit-exactly through their name.
+//!
+//! # Examples
+//!
+//! ```no_run
+//! use codesign::service::{wire, CodesignRequest, ScenarioSpec};
+//!
+//! let requests = vec![CodesignRequest::explore(ScenarioSpec::two_d())];
+//! let text = wire::encode_requests(&requests).to_string_pretty();
+//! assert_eq!(wire::decode_requests(&text).unwrap(), requests);
+//! ```
 
 use crate::opt::problem::SolveOpts;
 use crate::service::request::{
@@ -13,13 +32,16 @@ use crate::service::request::{
     ReferenceSummary, ScenarioSpec, ScenarioSummary, SensitivityRow, SensitivitySummary,
     SolverCostSummary, TuneRequest, TuneSummary, ValidateSummary, WorkloadClass,
 };
-use crate::stencil::defs::{StencilId, ALL_STENCILS};
+use crate::stencil::defs::{Stencil, StencilId};
 use crate::timemodel::citer::CIterTable;
 use crate::util::json::{parse, Json};
 use anyhow::{anyhow, bail, ensure, Result};
 
-/// The wire schema this build speaks.
-pub const SCHEMA_VERSION: u64 = 1;
+/// The wire schema this build emits.
+pub const SCHEMA_VERSION: u64 = 2;
+
+/// The oldest schema this build still accepts (v2 is additive over v1).
+pub const MIN_SCHEMA_VERSION: u64 = 1;
 
 // ---------------------------------------------------------------------------
 // Field helpers
@@ -106,9 +128,11 @@ fn opt_unum(v: Option<u64>) -> Json {
 // Shared pieces
 // ---------------------------------------------------------------------------
 
+/// A stencil name on the wire: a preset or a parametric family name (v2),
+/// registered on decode. Unknown names list the valid options.
 fn stencil_from_json(j: &Json) -> Result<StencilId> {
     let s = j.as_str().ok_or_else(|| anyhow!("stencil must be a string"))?;
-    StencilId::from_name(s).ok_or_else(|| anyhow!("unknown stencil '{s}'"))
+    Stencil::by_name_err(s).map(|st| st.id).map_err(|msg| anyhow!("{msg}"))
 }
 
 fn weights_to_json(w: &[(StencilId, f64)]) -> Json {
@@ -129,13 +153,16 @@ fn weights_from_json(j: &Json) -> Result<Vec<(StencilId, f64)>> {
 }
 
 fn citer_to_json(t: &CIterTable) -> Json {
+    // The table's own entries, in table order: the paper table serializes
+    // exactly as under schema v1 (the six presets), measured tables carry
+    // any parametric extras too (v2).
     Json::Arr(
-        ALL_STENCILS
+        t.entries()
             .iter()
-            .map(|s| {
+            .map(|&(id, cycles)| {
                 Json::obj(vec![
-                    ("stencil", Json::str(s.id.name())),
-                    ("cycles", fnum(t.get(s.id))),
+                    ("stencil", Json::str(id.name())),
+                    ("cycles", fnum(cycles)),
                 ])
             })
             .collect(),
@@ -201,13 +228,7 @@ fn class_to_json(c: WorkloadClass) -> Json {
 
 fn class_from_json(j: &Json) -> Result<WorkloadClass> {
     let s = j.as_str().ok_or_else(|| anyhow!("class must be a string"))?;
-    match s {
-        "2d" => Ok(WorkloadClass::TwoD),
-        "3d" => Ok(WorkloadClass::ThreeD),
-        other => StencilId::from_name(other)
-            .map(WorkloadClass::Single)
-            .ok_or_else(|| anyhow!("unknown workload class '{other}'")),
-    }
+    WorkloadClass::parse(s)
 }
 
 pub fn spec_to_json(s: &ScenarioSpec) -> Json {
@@ -552,13 +573,14 @@ fn check_schema(j: &Json) -> Result<()> {
         .as_f64()
         .ok_or_else(|| anyhow!("schema version must be a number"))?;
     ensure!(
-        v == SCHEMA_VERSION as f64,
-        "unsupported schema version {v} (this build speaks {SCHEMA_VERSION})"
+        v.fract() == 0.0 && v >= MIN_SCHEMA_VERSION as f64 && v <= SCHEMA_VERSION as f64,
+        "unsupported schema version {v} (this build speaks \
+         {MIN_SCHEMA_VERSION}..={SCHEMA_VERSION})"
     );
     Ok(())
 }
 
-/// `{"schema": 1, "requests": […]}`.
+/// `{"schema": 2, "requests": […]}`.
 pub fn encode_requests(requests: &[CodesignRequest]) -> Json {
     Json::obj(vec![
         ("schema", Json::Num(SCHEMA_VERSION as f64)),
@@ -578,7 +600,7 @@ pub fn decode_requests(text: &str) -> Result<Vec<CodesignRequest>> {
         .collect()
 }
 
-/// `{"schema": 1, "responses": […]}`.
+/// `{"schema": 2, "responses": […]}`.
 pub fn encode_responses(responses: &[CodesignResponse]) -> Json {
     Json::obj(vec![
         ("schema", Json::Num(SCHEMA_VERSION as f64)),
@@ -612,9 +634,30 @@ mod tests {
     #[test]
     fn envelope_schema_enforced() {
         assert!(decode_requests(r#"{"schema": 99, "requests": []}"#).is_err());
+        assert!(decode_requests(r#"{"schema": 0, "requests": []}"#).is_err());
+        assert!(decode_requests(r#"{"schema": 1.5, "requests": []}"#).is_err(),
+            "fractional versions are not a thing");
         assert!(decode_requests(r#"{"requests": []}"#).is_err());
         assert!(decode_requests("not json").is_err());
+        // Both the emitted version and the legacy v1 envelope decode.
+        assert!(decode_requests(r#"{"schema": 2, "requests": []}"#).unwrap().is_empty());
         assert!(decode_requests(r#"{"schema": 1, "requests": []}"#).unwrap().is_empty());
+    }
+
+    #[test]
+    fn parametric_class_names_decode_and_roundtrip() {
+        let spec = ScenarioSpec::parametric(
+            crate::stencil::spec::StencilSpec::star(crate::stencil::spec::Dim::D3, 2),
+        );
+        let back = spec_from_json(&spec_to_json(&spec)).unwrap();
+        assert_eq!(spec, back);
+        // Hand-written v2 field values parse too, and bad ones list options.
+        let j = parse(r#"{"class": "box2d:r1:f20"}"#).unwrap();
+        let s = spec_from_json(&j).unwrap();
+        assert_eq!(s.class.name(), "box2d:r1:f20");
+        let j = parse(r#"{"class": "pentagon2d:r1"}"#).unwrap();
+        let err = format!("{:#}", spec_from_json(&j).unwrap_err());
+        assert!(err.contains("jacobi2d"), "{err}");
     }
 
     #[test]

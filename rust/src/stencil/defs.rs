@@ -1,57 +1,79 @@
-//! The six dense stencils of the paper's workload: four 2-D (Jacobi, Heat,
-//! Laplacian, Gradient — all first order, two space dimensions + time) and
-//! two 3-D (Heat, Laplacian — three space dimensions + time).
+//! The stencil registry: the paper's six benchmark presets plus any number
+//! of registered parametric family members (see [`crate::stencil::spec`]).
 //!
-//! Per-point operation counts are derived from the canonical loop bodies (the
-//! same bodies implemented by the Pallas kernels in `python/compile/kernels/`
-//! and by the pure-jnp oracle `ref.py`). `C_iter` — the per-iteration,
-//! per-thread issue cost in cycles that the paper measures on real silicon —
-//! is carried per stencil with *paper-mode* defaults calibrated against the
-//! paper's reported GFLOP/s scale (see `timemodel::citer`), and can be
-//! overridden by measurements from the PJRT runtime.
+//! The paper's workload is four 2-D stencils (Jacobi, Heat, Laplacian,
+//! Gradient — all first order, two space dimensions + time) and two 3-D
+//! (Heat, Laplacian). Their per-point operation counts are derived from the
+//! canonical loop bodies (the same bodies implemented by the Pallas kernels
+//! in `python/compile/kernels/` and by the pure-jnp oracle `ref.py`), and
+//! their [`ALL_STENCILS`] characterizations are **bit-identical to the
+//! original hard-coded tables** — certified by `integration_stencil.rs`.
+//!
+//! `C_iter` — the per-iteration, per-thread issue cost in cycles that the
+//! paper measures on real silicon — is carried per stencil with *paper-mode*
+//! defaults calibrated against the paper's reported GFLOP/s scale (see
+//! `timemodel::citer`), and can be overridden by measurements from the PJRT
+//! runtime.
+//!
+//! A [`StencilId`] is a small copyable handle into the registry: ids `0..6`
+//! are the presets (exposed as the familiar `StencilId::Jacobi2D`-style
+//! constants), higher ids are interned parametric specs. [`Stencil::by_name`]
+//! resolves preset names *and* parses family names like `star3d:r2`,
+//! registering them on first sight.
 
-/// Identity of a benchmark stencil.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub enum StencilId {
-    Jacobi2D,
-    Heat2D,
-    Laplacian2D,
-    Gradient2D,
-    Heat3D,
-    Laplacian3D,
-}
+use crate::stencil::spec::{Dim, Shape, StencilSpec};
+use std::collections::HashMap;
+use std::sync::{OnceLock, RwLock};
 
+/// Identity of a registered stencil: presets `0..6`, then interned
+/// parametric specs in registration order.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StencilId(u16);
+
+#[allow(non_upper_case_globals)] // named after the former enum variants
 impl StencilId {
+    pub const Jacobi2D: StencilId = StencilId(0);
+    pub const Heat2D: StencilId = StencilId(1);
+    pub const Laplacian2D: StencilId = StencilId(2);
+    pub const Gradient2D: StencilId = StencilId(3);
+    pub const Heat3D: StencilId = StencilId(4);
+    pub const Laplacian3D: StencilId = StencilId(5);
+
     pub fn name(&self) -> &'static str {
-        match self {
-            StencilId::Jacobi2D => "jacobi2d",
-            StencilId::Heat2D => "heat2d",
-            StencilId::Laplacian2D => "laplacian2d",
-            StencilId::Gradient2D => "gradient2d",
-            StencilId::Heat3D => "heat3d",
-            StencilId::Laplacian3D => "laplacian3d",
-        }
+        Stencil::get(*self).name
     }
 
+    /// Resolve a preset name or parse-and-register a parametric family name.
     pub fn from_name(name: &str) -> Option<StencilId> {
-        ALL_STENCILS.iter().find(|s| s.id.name() == name).map(|s| s.id)
+        Stencil::by_name(name).map(|s| s.id)
     }
 }
 
-/// Static description of one stencil benchmark.
+impl std::fmt::Debug for StencilId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Static description of one stencil: the analytical characterization the
+/// whole model stack consumes, plus the [`StencilSpec`] it derives from.
 #[derive(Clone, Copy, Debug)]
 pub struct Stencil {
     pub id: StencilId,
+    /// Registry name (`jacobi2d`, `star3d:r2`, …).
+    pub name: &'static str,
+    /// The generating family spec (presets pin exact loop-body counts).
+    pub spec: StencilSpec,
     /// Space dimensions (2 or 3); every benchmark adds one time dimension.
     pub space_dims: u32,
-    /// Halo width per time step (all six are first-order: σ = 1).
+    /// Halo width per time step (σ — the stencil radius).
     pub sigma: u32,
     /// Floating-point operations per updated point.
     pub flops_per_point: f64,
     /// Live arrays a tile must stage in shared memory (double-buffered
     /// time planes for in/out, plus coefficient arrays where applicable).
     pub n_buffers: f64,
-    /// Bytes per cell (all benchmarks are fp32).
+    /// Bytes per cell (the presets are fp32).
     pub bytes_per_cell: f64,
     /// Paper-mode per-iteration single-thread cost, cycles (see
     /// `timemodel::citer` for calibration).
@@ -60,25 +82,127 @@ pub struct Stencil {
 
 impl Stencil {
     pub fn name(&self) -> &'static str {
-        self.id.name()
+        self.name
     }
 
     pub fn is_3d(&self) -> bool {
         self.space_dims == 3
     }
 
-    /// Look up a stencil by id.
+    /// Look up a stencil by id. Preset lookups are lock-free.
     pub fn get(id: StencilId) -> &'static Stencil {
-        ALL_STENCILS.iter().find(|s| s.id == id).expect("unknown stencil")
+        let i = id.0 as usize;
+        if i < ALL_STENCILS.len() {
+            return &ALL_STENCILS[i];
+        }
+        registry().read().unwrap().defs[i - ALL_STENCILS.len()]
     }
 
-    /// Look up a stencil by `name()`.
+    /// Look up by preset name or by parametric family name (`star3d:r2`,
+    /// `box2d:r1:f20`, …), registering parsed specs on first sight.
     pub fn by_name(name: &str) -> Option<&'static Stencil> {
-        ALL_STENCILS.iter().find(|s| s.id.name() == name)
+        Stencil::by_name_err(name).ok()
+    }
+
+    /// [`Stencil::by_name`] with a diagnosable error: unknown names report
+    /// the valid presets and the family-name grammar instead of a bare
+    /// rejection.
+    pub fn by_name_err(name: &str) -> Result<&'static Stencil, String> {
+        if let Some(s) = ALL_STENCILS.iter().find(|s| s.name == name) {
+            return Ok(s);
+        }
+        // Copy the id out before the read guard drops: `Stencil::get`
+        // re-locks, and a nested read while a writer queues can deadlock.
+        let registered = registry().read().unwrap().by_name.get(name).copied();
+        if let Some(id) = registered {
+            return Ok(Stencil::get(id));
+        }
+        match StencilSpec::parse(name) {
+            Ok(spec) => register_named(&spec, Some(name)).map(Stencil::get),
+            Err(reason) => Err(unknown_stencil_msg(name, &reason)),
+        }
     }
 }
 
-/// All six benchmarks.
+/// The "unknown stencil" diagnostic: what failed, the valid presets, and the
+/// parametric grammar.
+pub fn unknown_stencil_msg(name: &str, reason: &str) -> String {
+    let presets: Vec<&str> = ALL_STENCILS.iter().map(|s| s.name).collect();
+    format!(
+        "unknown stencil '{name}' ({reason}); valid presets: {}; or a parametric family \
+         '<star|box><2d|3d>:r<1-8>' with optional ':b<bufs>', ':w<bytes>', ':f<flops>', \
+         ':c<cycles>' overrides (e.g. star3d:r2, box2d:r1:f20)",
+        presets.join(", ")
+    )
+}
+
+struct Registry {
+    /// Non-preset definitions; `StencilId(6 + i)` indexes `defs[i]`.
+    /// Entries are leaked so `Stencil::get` can keep returning `&'static`.
+    defs: Vec<&'static Stencil>,
+    /// Canonical names *and* accepted aliases, presets included.
+    by_name: HashMap<String, StencilId>,
+}
+
+fn registry() -> &'static RwLock<Registry> {
+    static REGISTRY: OnceLock<RwLock<Registry>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        let by_name = ALL_STENCILS.iter().map(|s| (s.name.to_string(), s.id)).collect();
+        RwLock::new(Registry { defs: Vec::new(), by_name })
+    })
+}
+
+/// Intern a spec under its canonical name (idempotent). Called via
+/// [`StencilSpec::register`].
+pub(crate) fn register_spec(spec: &StencilSpec) -> StencilId {
+    register_named(spec, None).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Intern a spec, optionally under an alias spelling too. Each distinct
+/// canonical name leaks one small definition (that is what makes
+/// `Stencil::get` return `&'static`), bounded by the u16 id space — a full
+/// registry is a clean error, not a panic, because this is reachable from
+/// untrusted wire input (`stencil_from_json` → `by_name_err`).
+fn register_named(spec: &StencilSpec, alias: Option<&str>) -> Result<StencilId, String> {
+    if let Err(e) = spec.validate() {
+        return Err(format!("invalid StencilSpec: {e}"));
+    }
+    let canonical = spec.canonical_name();
+    let mut reg = registry().write().unwrap();
+    let id = match reg.by_name.get(&canonical) {
+        Some(&id) => id,
+        None => {
+            let index = ALL_STENCILS.len() + reg.defs.len();
+            if index >= u16::MAX as usize {
+                return Err(format!(
+                    "stencil registry full ({index} registered); refusing '{canonical}'"
+                ));
+            }
+            let id = StencilId(index as u16);
+            let name: &'static str = Box::leak(canonical.clone().into_boxed_str());
+            let st: &'static Stencil = Box::leak(Box::new(Stencil {
+                id,
+                name,
+                spec: *spec,
+                space_dims: spec.dim.space_dims(),
+                sigma: spec.radius,
+                flops_per_point: spec.flops_per_point(),
+                n_buffers: spec.n_buffers,
+                bytes_per_cell: spec.bytes_per_cell,
+                c_iter_cycles: spec.c_iter_cycles(),
+            }));
+            reg.defs.push(st);
+            reg.by_name.insert(canonical, id);
+            id
+        }
+    };
+    if let Some(alias) = alias {
+        reg.by_name.entry(alias.to_string()).or_insert(id);
+    }
+    Ok(id)
+}
+
+/// All six paper presets.
 ///
 /// Operation counts (per output point, fp32):
 /// * **Jacobi-2D** `o = 0.25·(N+S+E+W)`: 3 add + 1 mul = 4 flops.
@@ -93,62 +217,51 @@ impl Stencil {
 ///
 /// `n_buffers`: Jacobi/Heat/Laplacian sweep in/out planes (2); Gradient reads
 /// one plane and writes a derived field (2); none carry coefficient arrays.
+///
+/// Every preset is the corresponding radius-1 star family member with its
+/// exact loop-body flop count and measured `C_iter` pinned as overrides, so
+/// the derived characterization is bit-identical to the historical table.
 pub const ALL_STENCILS: [Stencil; 6] = [
-    Stencil {
-        id: StencilId::Jacobi2D,
-        space_dims: 2,
-        sigma: 1,
-        flops_per_point: 4.0,
-        n_buffers: 2.0,
-        bytes_per_cell: 4.0,
-        c_iter_cycles: 11.0,
-    },
-    Stencil {
-        id: StencilId::Heat2D,
-        space_dims: 2,
-        sigma: 1,
-        flops_per_point: 10.0,
-        n_buffers: 2.0,
-        bytes_per_cell: 4.0,
-        c_iter_cycles: 13.0,
-    },
-    Stencil {
-        id: StencilId::Laplacian2D,
-        space_dims: 2,
-        sigma: 1,
-        flops_per_point: 6.0,
-        n_buffers: 2.0,
-        bytes_per_cell: 4.0,
-        c_iter_cycles: 10.0,
-    },
-    Stencil {
-        id: StencilId::Gradient2D,
-        space_dims: 2,
-        sigma: 1,
-        flops_per_point: 14.0,
-        n_buffers: 2.0,
-        bytes_per_cell: 4.0,
-        c_iter_cycles: 12.0,
-    },
-    Stencil {
-        id: StencilId::Heat3D,
-        space_dims: 3,
-        sigma: 1,
-        flops_per_point: 14.0,
-        n_buffers: 2.0,
-        bytes_per_cell: 4.0,
-        c_iter_cycles: 16.0,
-    },
-    Stencil {
-        id: StencilId::Laplacian3D,
-        space_dims: 3,
-        sigma: 1,
-        flops_per_point: 8.0,
-        n_buffers: 2.0,
-        bytes_per_cell: 4.0,
-        c_iter_cycles: 15.0,
-    },
+    preset(StencilId::Jacobi2D, "jacobi2d", Dim::D2, 4.0, 11.0),
+    preset(StencilId::Heat2D, "heat2d", Dim::D2, 10.0, 13.0),
+    preset(StencilId::Laplacian2D, "laplacian2d", Dim::D2, 6.0, 10.0),
+    preset(StencilId::Gradient2D, "gradient2d", Dim::D2, 14.0, 12.0),
+    preset(StencilId::Heat3D, "heat3d", Dim::D3, 14.0, 16.0),
+    preset(StencilId::Laplacian3D, "laplacian3d", Dim::D3, 8.0, 15.0),
 ];
+
+/// Const constructor for the preset table: a first-order star with pinned
+/// loop-body flops and measured `C_iter`.
+const fn preset(
+    id: StencilId,
+    name: &'static str,
+    dim: Dim,
+    flops: f64,
+    c_iter: f64,
+) -> Stencil {
+    Stencil {
+        id,
+        name,
+        spec: StencilSpec {
+            dim,
+            shape: Shape::Star,
+            radius: 1,
+            n_buffers: 2.0,
+            bytes_per_cell: 4.0,
+            flops: Some(flops),
+            c_iter: Some(c_iter),
+        },
+        space_dims: match dim {
+            Dim::D2 => 2,
+            Dim::D3 => 3,
+        },
+        sigma: 1,
+        flops_per_point: flops,
+        n_buffers: 2.0,
+        bytes_per_cell: 4.0,
+        c_iter_cycles: c_iter,
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -171,6 +284,20 @@ mod tests {
     }
 
     #[test]
+    fn preset_spec_rederives_the_table() {
+        // The pinned spec must reproduce every characterization field —
+        // the data-driven path and the const table cannot drift apart.
+        for s in &ALL_STENCILS {
+            assert_eq!(s.spec.dim.space_dims(), s.space_dims, "{}", s.name());
+            assert_eq!(s.spec.radius, s.sigma, "{}", s.name());
+            assert_eq!(s.spec.flops_per_point().to_bits(), s.flops_per_point.to_bits());
+            assert_eq!(s.spec.c_iter_cycles().to_bits(), s.c_iter_cycles.to_bits());
+            assert_eq!(s.spec.n_buffers.to_bits(), s.n_buffers.to_bits());
+            assert_eq!(s.spec.bytes_per_cell.to_bits(), s.bytes_per_cell.to_bits());
+        }
+    }
+
+    #[test]
     fn lookup_roundtrip() {
         for s in &ALL_STENCILS {
             assert_eq!(Stencil::by_name(s.name()).unwrap().id, s.id);
@@ -186,5 +313,49 @@ mod tests {
         names.sort_unstable();
         names.dedup();
         assert_eq!(names.len(), 6);
+    }
+
+    #[test]
+    fn parametric_lookup_registers_and_interns() {
+        let a = Stencil::by_name("star3d:r2").expect("family name must parse");
+        assert_eq!(a.space_dims, 3);
+        assert_eq!(a.sigma, 2);
+        assert!(a.is_3d());
+        assert_eq!(a.flops_per_point, 2.0 * 13.0 - 1.0);
+        // Interned: same id on re-lookup, alias and canonical both resolve.
+        let b = Stencil::by_name("star3d:r2").unwrap();
+        assert_eq!(a.id, b.id);
+        assert_eq!(StencilId::from_name("star3d:r2"), Some(a.id));
+        assert_eq!(format!("{:?}", a.id), "star3d:r2");
+    }
+
+    #[test]
+    fn unknown_names_list_presets_and_grammar() {
+        let err = Stencil::by_name_err("frobnicate").unwrap_err();
+        for needle in ["jacobi2d", "laplacian3d", "star|box", "r<1-8>", "frobnicate"] {
+            assert!(err.contains(needle), "'{err}' should mention '{needle}'");
+        }
+        // A near-miss family name reports the specific parse failure too.
+        let err = Stencil::by_name_err("star3d:r99").unwrap_err();
+        assert!(err.contains("radius must be"), "{err}");
+    }
+
+    #[test]
+    fn preset_ids_are_stable_and_ordered() {
+        let ids = [
+            StencilId::Jacobi2D,
+            StencilId::Heat2D,
+            StencilId::Laplacian2D,
+            StencilId::Gradient2D,
+            StencilId::Heat3D,
+            StencilId::Laplacian3D,
+        ];
+        for (i, id) in ids.iter().enumerate() {
+            assert_eq!(Stencil::get(*id).id, *id);
+            assert_eq!(ALL_STENCILS[i].id, *id);
+        }
+        let mut sorted = ids;
+        sorted.sort();
+        assert_eq!(sorted, ids, "preset order is the historical enum order");
     }
 }

@@ -1,8 +1,17 @@
-//! The paper's benchmark stencils and the workload characterization
-//! (§II "Workload characterization", §IV-A's SZ size grids).
+//! The workload layer: stencil characterization (§II) and the SZ size grids
+//! (§IV-A).
+//!
+//! * [`spec`] — parametric stencil families (star/box × 2-D/3-D × radius)
+//!   whose characterization is derived analytically;
+//! * [`defs`] — the stencil registry: the paper's six presets plus interned
+//!   family members, addressed by copyable [`StencilId`]s;
+//! * [`workload`] — frequency-weighted sets of (stencil, size) program
+//!   instances, the input of the codesign objective (17).
 
 pub mod defs;
+pub mod spec;
 pub mod workload;
 
 pub use defs::{Stencil, StencilId, ALL_STENCILS};
+pub use spec::{Dim, Shape, StencilSpec};
 pub use workload::{ProblemSize, Workload, WorkloadEntry};

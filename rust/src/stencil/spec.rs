@@ -1,0 +1,405 @@
+//! Parametric stencil families — the open workload space beyond the paper's
+//! six kernels.
+//!
+//! The codesign model never consumes a stencil's *code*; it consumes a small
+//! analytical characterization (§II): space dimensionality, halo width per
+//! time step (σ), flops per updated point, live buffers per tile, and bytes
+//! per cell. A [`StencilSpec`] describes a whole *family* of such kernels —
+//! star or box stencils of arbitrary radius in 2-D or 3-D — and derives that
+//! characterization analytically, so any member can be explored, batched,
+//! cached and served exactly like the six paper presets.
+//!
+//! Derivations (DESIGN.md §3 documents the math):
+//!
+//! * **support** — taps read per updated point: star `2·d·r + 1`,
+//!   box `(2r+1)^d`;
+//! * **flops/point** — one multiply per tap plus the adds that combine them,
+//!   `2·support − 1` (a fully-weighted scheme; exact loop-body counts can
+//!   override);
+//! * **σ (halo)** — the dependence-cone slope equals the radius, `σ = r`;
+//! * **C_iter** — paper-scale heuristic pending silicon measurement:
+//!   `8 + flops/2` cycles in 2-D, `11 + flops/2` in 3-D (presets pin the
+//!   paper's measured values instead).
+//!
+//! Every spec has a **canonical name** that encodes all of its parameters
+//! (`star3d:r2`, `box2d:r1:f20`) and round-trips through [`StencilSpec::parse`]
+//! bit-exactly — the wire format (schema v2) carries specs as these names.
+//!
+//! # Examples
+//!
+//! ```no_run
+//! use codesign::stencil::spec::{Dim, StencilSpec};
+//!
+//! // A radius-2 star in 3-D: 13-point support, halo 2 per time step.
+//! let spec = StencilSpec::star(Dim::D3, 2);
+//! assert_eq!(spec.support_points(), 13);
+//! assert_eq!(spec.canonical_name(), "star3d:r2");
+//!
+//! // Register it and it behaves exactly like a built-in benchmark.
+//! let id = spec.register();
+//! let st = codesign::stencil::defs::Stencil::get(id);
+//! assert_eq!(st.sigma, 2);
+//! ```
+
+use crate::stencil::defs::{self, StencilId};
+
+/// Space dimensionality of a stencil family (every benchmark adds one time
+/// dimension on top).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dim {
+    D2,
+    D3,
+}
+
+impl Dim {
+    /// Number of space dimensions (2 or 3).
+    pub fn space_dims(&self) -> u32 {
+        match self {
+            Dim::D2 => 2,
+            Dim::D3 => 3,
+        }
+    }
+
+    /// The `2d` / `3d` name fragment.
+    pub fn token(&self) -> &'static str {
+        match self {
+            Dim::D2 => "2d",
+            Dim::D3 => "3d",
+        }
+    }
+}
+
+/// Neighborhood shape of a stencil family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Shape {
+    /// Axis-aligned cross: `2·d·r` neighbors plus the center.
+    Star,
+    /// Full hypercube: `(2r+1)^d` taps.
+    Box,
+}
+
+impl Shape {
+    /// The `star` / `box` name fragment.
+    pub fn token(&self) -> &'static str {
+        match self {
+            Shape::Star => "star",
+            Shape::Box => "box",
+        }
+    }
+}
+
+/// Maximum supported radius. The hybrid-hexagonal time model stays valid for
+/// any σ, but radii beyond this are outside the calibrated regime (the halo
+/// dominates every realistic tile footprint).
+pub const MAX_RADIUS: u32 = 8;
+
+/// A parametric stencil family member: shape × dimensionality × radius, plus
+/// optional characterization overrides for exact loop bodies.
+///
+/// Defaults describe a fully-weighted scheme in fp32 with double-buffered
+/// time planes — override `flops`/`c_iter` when a concrete kernel's operation
+/// count is known (the six paper presets do exactly that).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StencilSpec {
+    pub dim: Dim,
+    pub shape: Shape,
+    /// Halo width per time step, `1..=MAX_RADIUS` (σ in the tiling model).
+    pub radius: u32,
+    /// Live arrays a tile stages in shared memory (default 2: in/out planes).
+    pub n_buffers: f64,
+    /// Bytes per cell (default 4: fp32).
+    pub bytes_per_cell: f64,
+    /// Exact flops per updated point, overriding the derived count.
+    pub flops: Option<f64>,
+    /// Measured `C_iter` cycles, overriding the derived heuristic.
+    pub c_iter: Option<f64>,
+}
+
+impl StencilSpec {
+    /// A star (axis-aligned cross) family member with default
+    /// characterization.
+    pub fn star(dim: Dim, radius: u32) -> StencilSpec {
+        StencilSpec {
+            dim,
+            shape: Shape::Star,
+            radius,
+            n_buffers: 2.0,
+            bytes_per_cell: 4.0,
+            flops: None,
+            c_iter: None,
+        }
+    }
+
+    /// A box (full hypercube) family member with default characterization.
+    pub fn boxed(dim: Dim, radius: u32) -> StencilSpec {
+        StencilSpec { shape: Shape::Box, ..StencilSpec::star(dim, radius) }
+    }
+
+    /// Override the flops-per-point count (exact loop bodies).
+    pub fn with_flops(mut self, flops: f64) -> StencilSpec {
+        self.flops = Some(flops);
+        self
+    }
+
+    /// Override the `C_iter` cycle cost (measured values).
+    pub fn with_c_iter(mut self, cycles: f64) -> StencilSpec {
+        self.c_iter = Some(cycles);
+        self
+    }
+
+    /// Override the live-buffer count.
+    pub fn with_buffers(mut self, n: f64) -> StencilSpec {
+        self.n_buffers = n;
+        self
+    }
+
+    /// Override the bytes-per-cell word size.
+    pub fn with_bytes_per_cell(mut self, bytes: f64) -> StencilSpec {
+        self.bytes_per_cell = bytes;
+        self
+    }
+
+    /// Validate every parameter; `Err` carries a human-readable reason.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.radius < 1 || self.radius > MAX_RADIUS {
+            return Err(format!("radius must be 1..={MAX_RADIUS} (got {})", self.radius));
+        }
+        if !(self.n_buffers.is_finite() && self.n_buffers >= 1.0) {
+            return Err(format!("n_buffers must be finite and >= 1 (got {})", self.n_buffers));
+        }
+        if !(self.bytes_per_cell.is_finite() && self.bytes_per_cell > 0.0) {
+            return Err(format!(
+                "bytes_per_cell must be finite and positive (got {})",
+                self.bytes_per_cell
+            ));
+        }
+        if let Some(f) = self.flops {
+            if !(f.is_finite() && f > 0.0) {
+                return Err(format!("flops override must be finite and positive (got {f})"));
+            }
+        }
+        if let Some(c) = self.c_iter {
+            if !(c.is_finite() && c > 0.0) {
+                return Err(format!("c_iter override must be finite and positive (got {c})"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Taps read per updated point: star `2·d·r + 1`, box `(2r+1)^d`.
+    pub fn support_points(&self) -> u64 {
+        let d = self.dim.space_dims() as u64;
+        let r = self.radius as u64;
+        match self.shape {
+            Shape::Star => 2 * d * r + 1,
+            Shape::Box => (2 * r + 1).pow(d as u32),
+        }
+    }
+
+    /// Formal order of accuracy of the centered finite-difference scheme this
+    /// halo supports: `2·radius`.
+    pub fn order(&self) -> u32 {
+        2 * self.radius
+    }
+
+    /// Derived flops per point for a fully-weighted scheme: one multiply per
+    /// tap plus `support − 1` adds, `2·support − 1`.
+    pub fn derived_flops(&self) -> f64 {
+        2.0 * self.support_points() as f64 - 1.0
+    }
+
+    /// Effective flops per point (override, else derived).
+    pub fn flops_per_point(&self) -> f64 {
+        self.flops.unwrap_or_else(|| self.derived_flops())
+    }
+
+    /// Derived `C_iter` heuristic: per-iteration loop overhead plus half a
+    /// cycle per flop on the paper's GTX 980 scale (`8 + flops/2` in 2-D,
+    /// `11 + flops/2` in 3-D — anchored so the measured presets land within
+    /// a few cycles).
+    pub fn derived_c_iter(&self) -> f64 {
+        let base = match self.dim {
+            Dim::D2 => 8.0,
+            Dim::D3 => 11.0,
+        };
+        base + self.flops_per_point() / 2.0
+    }
+
+    /// Effective `C_iter` cycles (override, else derived).
+    pub fn c_iter_cycles(&self) -> f64 {
+        self.c_iter.unwrap_or_else(|| self.derived_c_iter())
+    }
+
+    /// The canonical name: `<shape><dim>:r<radius>` plus `:b`/`:w`/`:f`/`:c`
+    /// suffixes for every non-default parameter, in that order. Floats use
+    /// Rust's shortest round-trip formatting, so
+    /// `parse(canonical_name()) == self` bit-exactly.
+    pub fn canonical_name(&self) -> String {
+        let mut name = format!("{}{}:r{}", self.shape.token(), self.dim.token(), self.radius);
+        if self.n_buffers != 2.0 {
+            name.push_str(&format!(":b{}", self.n_buffers));
+        }
+        if self.bytes_per_cell != 4.0 {
+            name.push_str(&format!(":w{}", self.bytes_per_cell));
+        }
+        if let Some(f) = self.flops {
+            name.push_str(&format!(":f{f}"));
+        }
+        if let Some(c) = self.c_iter {
+            name.push_str(&format!(":c{c}"));
+        }
+        name
+    }
+
+    /// Parse a family name. Grammar (suffixes accepted in any order; a
+    /// repeated suffix takes its last value):
+    ///
+    /// ```text
+    /// <shape><dim> ":r" <radius> [":b" <f64>] [":w" <f64>] [":f" <f64>] [":c" <f64>]
+    /// shape  = "star" | "box"
+    /// dim    = "2d" | "3d"
+    /// radius = 1..=8
+    /// ```
+    ///
+    /// `b` = live buffers, `w` = bytes per cell (word size), `f` = flops per
+    /// point override, `c` = `C_iter` cycles override.
+    pub fn parse(name: &str) -> Result<StencilSpec, String> {
+        let mut parts = name.split(':');
+        let head = parts.next().unwrap_or_default();
+        let (shape, dim_tok) = if let Some(rest) = head.strip_prefix("star") {
+            (Shape::Star, rest)
+        } else if let Some(rest) = head.strip_prefix("box") {
+            (Shape::Box, rest)
+        } else {
+            return Err(format!("'{head}' is not a stencil family (want star… or box…)"));
+        };
+        let dim = match dim_tok {
+            "2d" => Dim::D2,
+            "3d" => Dim::D3,
+            other => return Err(format!("'{other}' is not a dimensionality (want 2d or 3d)")),
+        };
+        let mut spec = StencilSpec::star(dim, 0);
+        spec.shape = shape;
+        let mut seen_r = false;
+        for part in parts {
+            if !part.is_ascii() {
+                return Err(format!("unknown parameter in '{part}'"));
+            }
+            let (tag, value) = part.split_at(1.min(part.len()));
+            let parse_f64 = |what: &str| -> Result<f64, String> {
+                value.parse::<f64>().map_err(|_| format!("bad {what} value '{value}'"))
+            };
+            match tag {
+                "r" => {
+                    spec.radius = value
+                        .parse::<u32>()
+                        .map_err(|_| format!("bad radius '{value}'"))?;
+                    seen_r = true;
+                }
+                "b" => spec.n_buffers = parse_f64("buffer-count (b)")?,
+                "w" => spec.bytes_per_cell = parse_f64("word-size (w)")?,
+                "f" => spec.flops = Some(parse_f64("flops (f)")?),
+                "c" => spec.c_iter = Some(parse_f64("c_iter (c)")?),
+                other => return Err(format!("unknown parameter '{other}' in '{part}'")),
+            }
+        }
+        if !seen_r {
+            return Err(format!("'{name}' is missing the radius (e.g. {head}:r2)"));
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Intern this spec in the global stencil registry (idempotent: equal
+    /// canonical names return the same id) and get its [`StencilId`], usable
+    /// everywhere a preset id is — workloads, scenarios, requests, the wire.
+    ///
+    /// Panics on an invalid spec or a full registry (u16 id space); untrusted
+    /// inputs should go through the fallible
+    /// [`Stencil::by_name_err`](crate::stencil::defs::Stencil::by_name_err)
+    /// name path instead.
+    pub fn register(&self) -> StencilId {
+        defs::register_spec(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn support_counts() {
+        assert_eq!(StencilSpec::star(Dim::D2, 1).support_points(), 5);
+        assert_eq!(StencilSpec::star(Dim::D3, 1).support_points(), 7);
+        assert_eq!(StencilSpec::star(Dim::D3, 2).support_points(), 13);
+        assert_eq!(StencilSpec::boxed(Dim::D2, 1).support_points(), 9);
+        assert_eq!(StencilSpec::boxed(Dim::D3, 1).support_points(), 27);
+        assert_eq!(StencilSpec::boxed(Dim::D3, 2).support_points(), 125);
+    }
+
+    #[test]
+    fn derived_characterization_scales_with_radius() {
+        for dim in [Dim::D2, Dim::D3] {
+            let mut last_flops = 0.0;
+            for r in 1..=MAX_RADIUS {
+                let s = StencilSpec::star(dim, r);
+                assert!(s.validate().is_ok());
+                assert_eq!(s.order(), 2 * r);
+                assert!(s.flops_per_point() > last_flops, "flops must grow with radius");
+                assert!(s.c_iter_cycles() > 0.0);
+                last_flops = s.flops_per_point();
+            }
+        }
+    }
+
+    #[test]
+    fn canonical_name_roundtrips() {
+        let cases = [
+            StencilSpec::star(Dim::D3, 2),
+            StencilSpec::boxed(Dim::D2, 4),
+            StencilSpec::star(Dim::D2, 1).with_flops(4.0).with_c_iter(11.0),
+            StencilSpec::boxed(Dim::D3, 3).with_buffers(3.0).with_bytes_per_cell(8.0),
+            StencilSpec::star(Dim::D2, 2).with_flops(1.0 / 3.0),
+        ];
+        for spec in cases {
+            let name = spec.canonical_name();
+            let back = StencilSpec::parse(&name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(spec, back, "{name}");
+            assert_eq!(back.canonical_name(), name);
+        }
+    }
+
+    #[test]
+    fn parse_accepts_any_suffix_order() {
+        let a = StencilSpec::parse("star2d:r2:f20:b3").unwrap();
+        let b = StencilSpec::parse("star2d:b3:f20:r2").unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.canonical_name(), "star2d:r2:b3:f20");
+    }
+
+    #[test]
+    fn parse_rejects_garbage_with_reasons() {
+        for (name, needle) in [
+            ("sphere2d:r1", "not a stencil family"),
+            ("star4d:r1", "not a dimensionality"),
+            ("star2d", "missing the radius"),
+            ("star2d:r0", "radius must be"),
+            ("star2d:r9", "radius must be"),
+            ("star2d:rtwo", "bad radius"),
+            ("star2d:r2:q7", "unknown parameter"),
+            ("star2d:r2:f-1", "finite and positive"),
+            ("star2d:r2:b0.5", ">= 1"),
+        ] {
+            let err = StencilSpec::parse(name).unwrap_err();
+            assert!(err.contains(needle), "{name}: '{err}' should mention '{needle}'");
+        }
+    }
+
+    #[test]
+    fn registration_is_idempotent() {
+        let a = StencilSpec::star(Dim::D3, 2).register();
+        let b = StencilSpec::parse("star3d:r2").unwrap().register();
+        assert_eq!(a, b);
+        assert_eq!(a.name(), "star3d:r2");
+    }
+}

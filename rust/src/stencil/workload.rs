@@ -1,6 +1,11 @@
 //! Workload characterization (§II, §IV-A): the SZ grids of problem sizes and
 //! the frequency-weighted benchmark mix that the codesign objective (17)
 //! averages over.
+//!
+//! Workloads are built over [`StencilId`]s, so any registered stencil —
+//! preset or parametric family member — participates on equal footing:
+//! [`Workload::single`] and [`Workload::uniform_over`] pick the
+//! dimension-appropriate size grid per stencil automatically.
 
 use crate::stencil::defs::{Stencil, StencilId, ALL_STENCILS};
 
@@ -102,10 +107,33 @@ impl Workload {
 
     /// A single-benchmark workload over the dimension-appropriate size grid
     /// (Table II's "frequency one for one benchmark, zero elsewhere").
+    /// Works for any registered stencil, parametric families included.
     pub fn single(id: StencilId) -> Workload {
         let st = Stencil::get(id);
         let sizes = if st.is_3d() { sz_3d() } else { sz_2d() };
         Workload::uniform(st.name(), std::iter::once(st), &sizes)
+    }
+
+    /// A uniform workload over an arbitrary stencil set — e.g. a whole
+    /// radius family. Each stencil contributes its dimension-appropriate
+    /// size grid (so 2-D and 3-D members can mix); every (stencil, size)
+    /// instance is equally likely.
+    pub fn uniform_over(name: &str, ids: &[StencilId]) -> Workload {
+        assert!(!ids.is_empty(), "uniform_over needs at least one stencil");
+        let grid_2d = sz_2d();
+        let grid_3d = sz_3d();
+        let mut entries = Vec::new();
+        for &id in ids {
+            let sizes = if Stencil::get(id).is_3d() { &grid_3d } else { &grid_2d };
+            for &size in sizes {
+                entries.push(WorkloadEntry { stencil: id, size, weight: 0.0 });
+            }
+        }
+        let w = 1.0 / entries.len() as f64;
+        for e in &mut entries {
+            e.weight = w;
+        }
+        Workload { name: name.to_string(), entries }
     }
 
     fn uniform<'a>(
@@ -200,6 +228,23 @@ mod tests {
             .map(|e| e.weight)
             .sum();
         assert!((jac_w - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn uniform_over_mixes_dimensions_and_families() {
+        let star3d_r2 = crate::stencil::spec::StencilSpec::star(
+            crate::stencil::spec::Dim::D3,
+            2,
+        )
+        .register();
+        let w = Workload::uniform_over("family", &[StencilId::Jacobi2D, star3d_r2]);
+        assert_eq!(w.entries.len(), 16 + 9, "2-D grid + 3-D grid");
+        assert!((w.total_weight() - 1.0).abs() < 1e-9);
+        assert!(w
+            .entries
+            .iter()
+            .filter(|e| e.stencil == star3d_r2)
+            .all(|e| e.size.s3.is_some()));
     }
 
     #[test]

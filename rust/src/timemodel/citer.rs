@@ -13,8 +13,12 @@
 //!   machine's CPU backend, rescaled into model cycles.
 
 use crate::stencil::defs::{Stencil, StencilId, ALL_STENCILS};
+use crate::stencil::workload::Workload;
 
-/// A per-stencil override table for `C_iter`.
+/// A per-stencil override table for `C_iter`. Stencils not listed — e.g.
+/// freshly registered parametric family members — fall back to their own
+/// registry default (`Stencil::c_iter_cycles`), so any table works with any
+/// workload.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CIterTable {
     entries: Vec<(StencilId, f64)>,
@@ -28,25 +32,36 @@ impl CIterTable {
         }
     }
 
-    /// Build from measured (stencil, cycles) pairs; missing stencils fall
-    /// back to paper mode.
+    /// Build from measured (stencil, cycles) pairs; stencils not measured
+    /// fall back to paper mode (presets) or their spec-derived default
+    /// (parametric members). Measured pairs for non-preset stencils are
+    /// appended.
     pub fn with_measured(pairs: &[(StencilId, f64)]) -> CIterTable {
         let mut t = CIterTable::paper();
         for &(id, c) in pairs {
             assert!(c > 0.0, "C_iter must be positive");
-            if let Some(e) = t.entries.iter_mut().find(|e| e.0 == id) {
-                e.1 = c;
+            match t.entries.iter_mut().find(|e| e.0 == id) {
+                Some(e) => e.1 = c,
+                None => t.entries.push((id, c)),
             }
         }
         t
     }
 
+    /// Effective `C_iter` for `id`: the table entry, else the stencil's own
+    /// registry default.
     pub fn get(&self, id: StencilId) -> f64 {
         self.entries
             .iter()
             .find(|e| e.0 == id)
             .map(|e| e.1)
-            .expect("stencil missing from C_iter table")
+            .unwrap_or_else(|| Stencil::get(id).c_iter_cycles)
+    }
+
+    /// The explicit (stencil, cycles) entries this table carries, in table
+    /// order (what the wire format serializes).
+    pub fn entries(&self) -> &[(StencilId, f64)] {
+        &self.entries
     }
 
     /// A copy of `stencil` with this table's `C_iter` applied — what the
@@ -55,9 +70,22 @@ impl CIterTable {
         Stencil { c_iter_cycles: self.get(stencil.id), ..*stencil }
     }
 
-    /// Uniformly scale every entry (used to translate CPU-substrate
+    /// Characterize a workload's stencils under this table — one [`apply`]
+    /// per entry, aligned with `workload.entries`. This is the **single**
+    /// source of the stencils that cache keys are built from
+    /// (`coordinator::cache::CacheKey` requires the effective `C_iter`);
+    /// the batch engine's plan/serve phases and the session's tune path all
+    /// call it so keys can never diverge.
+    ///
+    /// [`apply`]: CIterTable::apply
+    pub fn characterize_workload(&self, workload: &Workload) -> Vec<Stencil> {
+        workload.entries.iter().map(|e| self.apply(Stencil::get(e.stencil))).collect()
+    }
+
+    /// Uniformly scale every explicit entry (used to translate CPU-substrate
     /// measurements onto the model's GPU-cycle scale, anchored on one
-    /// stencil's paper value — see `runtime::citer_measure`).
+    /// stencil's paper value — see `runtime::citer_measure`). Stencils not
+    /// in the table keep their unscaled registry defaults.
     pub fn scaled(&self, factor: f64) -> CIterTable {
         assert!(factor > 0.0);
         CIterTable {
@@ -109,5 +137,18 @@ mod tests {
     #[should_panic]
     fn nonpositive_measured_rejected() {
         CIterTable::with_measured(&[(StencilId::Jacobi2D, 0.0)]);
+    }
+
+    #[test]
+    fn parametric_stencils_fall_back_to_registry_default() {
+        use crate::stencil::spec::{Dim, StencilSpec};
+        let id = StencilSpec::star(Dim::D2, 3).register();
+        let t = CIterTable::paper();
+        assert_eq!(t.get(id), Stencil::get(id).c_iter_cycles);
+        // A measured override for a non-preset id is appended and applied.
+        let t = CIterTable::with_measured(&[(id, 21.5)]);
+        assert_eq!(t.get(id), 21.5);
+        assert_eq!(t.apply(Stencil::get(id)).c_iter_cycles, 21.5);
+        assert_eq!(t.entries().len(), 7);
     }
 }

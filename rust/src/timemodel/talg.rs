@@ -402,6 +402,26 @@ mod tests {
     }
 
     #[test]
+    fn model_runs_higher_radius_families() {
+        // The time model is radius-parametric end to end: a radius-2 star in
+        // 3-D evaluates feasibly and is costlier per round than radius 1 at
+        // equal software parameters (wider halo → bigger tiles → more
+        // traffic).
+        use crate::stencil::spec::{Dim, StencilSpec};
+        let m = model();
+        let r1 = *Stencil::get(StencilSpec::star(Dim::D3, 1).register());
+        let r2 = *Stencil::get(StencilSpec::star(Dim::D3, 2).register());
+        // Tiles sized so even the radius-2 footprint fits GTX 980's 96 kB:
+        // r2: (8+2·2·7+4)·(32+4)·(4+4)·2 buf·4 B = 92 160 B.
+        let sw = SoftwareParams::new(TileSizes::d3(8, 32, 4, 8), 1);
+        let size = ProblemSize::d3(256, 64);
+        let a = m.evaluate_checked(&r1, &size, &gtx(), &sw).unwrap();
+        let b = m.evaluate_checked(&r2, &size, &gtx(), &sw).unwrap();
+        assert!(a.gflops > 0.0 && b.gflops > 0.0);
+        assert!(b.mem_cycles > a.mem_cycles, "wider halo must move more bytes");
+    }
+
+    #[test]
     fn model_3d_runs() {
         let m = model();
         let sw = SoftwareParams::new(TileSizes::d3(16, 32, 4, 8), 1);

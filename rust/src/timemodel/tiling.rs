@@ -7,6 +7,11 @@
 //! concurrently), and phase B of a band depends on phase A. The remaining
 //! space dimensions are tiled classically: S2 into strips of `t_S2` (mapped
 //! to the threads of a block), and for 3-D stencils S3 into strips of `t_S3`.
+//!
+//! Every term is parametric in the stencil radius: σ = `Stencil::sigma` sets
+//! the hexagon slope, the per-dimension halo (`2σ` cells per classical
+//! dimension) and therefore the footprint/traffic of higher-order families —
+//! nothing here assumes the paper's first-order σ = 1.
 
 use crate::stencil::defs::Stencil;
 use crate::stencil::workload::ProblemSize;
@@ -237,6 +242,25 @@ mod tests {
         let traffic = tile_traffic_bytes(jac(), &t);
         assert!(traffic > 0.0);
         assert!(traffic < 2.0 * tile_footprint_bytes(jac(), &t));
+    }
+
+    #[test]
+    fn radius_widens_halo_footprint_and_traffic() {
+        // The σ-generalization: a radius-2 star must stage a wider hexagon
+        // row and a deeper halo than its radius-1 sibling, at equal tiles.
+        use crate::stencil::spec::{Dim, StencilSpec};
+        let r1 = *Stencil::get(StencilSpec::star(Dim::D2, 1).register());
+        let r2 = *Stencil::get(StencilSpec::star(Dim::D2, 2).register());
+        let tiles = TileSizes::d2(32, 64, 8);
+        assert_eq!(hex_max_width(32, 8, 2), 32.0 + 2.0 * 2.0 * 7.0);
+        assert!(tile_footprint_bytes(&r2, &tiles) > tile_footprint_bytes(&r1, &tiles));
+        assert!(tile_traffic_bytes(&r2, &tiles) > tile_traffic_bytes(&r1, &tiles));
+        // Exact footprint: w1 = 32+2·2·7+2·2 = 64, w2 = 64+4 = 68, 2 buffers.
+        assert_eq!(tile_footprint_bytes(&r2, &tiles), 4.0 * 2.0 * 64.0 * 68.0);
+        // Geometry stays consistent for σ = 2: coverage still holds.
+        let size = ProblemSize::d2(4096, 1024);
+        let g = geometry(&r2, &size, &tiles);
+        assert!(g.total_blocks() as f64 * g.points_per_block >= size.points());
     }
 
     #[test]

@@ -141,16 +141,19 @@ fn cache_accounting_matches_recomputed_ground_truth() {
     let mut uniq: HashSet<CacheKey> = HashSet::new();
     let mut serve_lookups = 0u64;
     for sc in &scenarios {
+        // Keys are built over the characterized stencil (the batch C_iter
+        // applied), via the same helper the engine uses.
+        let chars = sc.citer.characterize_workload(&sc.workload);
         let space = enumerate_space(&am, &sc.space);
         serve_lookups += ((space.len() + 2) * sc.workload.entries.len()) as u64;
         for pt in &space {
-            for e in &sc.workload.entries {
-                uniq.insert(CacheKey::new(&pt.hw, e.stencil, &e.size));
+            for (e, st) in sc.workload.entries.iter().zip(&chars) {
+                uniq.insert(CacheKey::new(&pt.hw, st, &e.size));
             }
         }
         for hw in [HwParams::gtx980(), HwParams::titanx()] {
-            for e in &sc.workload.entries {
-                uniq.insert(CacheKey::new(&hw, e.stencil, &e.size));
+            for (e, st) in sc.workload.entries.iter().zip(&chars) {
+                uniq.insert(CacheKey::new(&hw, st, &e.size));
             }
         }
     }

@@ -317,11 +317,14 @@ fn every_response_variant_roundtrips_bit_exactly() {
 
 #[test]
 fn unknown_schema_version_is_a_clean_error() {
-    let err = wire::decode_requests(r#"{"schema": 2, "requests": []}"#).unwrap_err();
+    let err = wire::decode_requests(r#"{"schema": 3, "requests": []}"#).unwrap_err();
     assert!(format!("{err:#}").contains("schema version"), "{err:#}");
     let err = wire::decode_responses(r#"{"schema": 0, "responses": []}"#).unwrap_err();
     assert!(format!("{err:#}").contains("schema version"), "{err:#}");
     assert!(wire::decode_requests(r#"[1, 2]"#).is_err(), "bare arrays lack a version");
+    // v1 envelopes (the previous emitted version) still decode.
+    assert!(wire::decode_requests(r#"{"schema": 1, "requests": []}"#).unwrap().is_empty());
+    assert!(wire::decode_responses(r#"{"schema": 1, "responses": []}"#).unwrap().is_empty());
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,268 @@
+//! Certification of the parametric stencil-family subsystem (PR 3):
+//!
+//! * **Preset bit-identity** — the six paper kernels' characterizations are
+//!   bit-identical to the seed's hard-coded tables, and an equivalently
+//!   characterized parametric spec produces bit-identical solver results
+//!   while sharing every memoized instance with the preset;
+//! * **Open workload space** — a non-preset family member (`star3d:r2`)
+//!   runs end-to-end: through the wire (`serve --requests` path), through
+//!   the batched sweep, and mixed with presets in one batch;
+//! * **Wire compatibility** — schema v1 request files still decode; v2
+//!   responses round-trip with parametric names in place.
+
+use codesign::area::AreaModel;
+use codesign::codesign::scenario::Scenario;
+use codesign::coordinator::Coordinator;
+use codesign::service::{wire, CodesignRequest, CodesignResponse, ScenarioSpec, Session};
+use codesign::stencil::defs::{Stencil, StencilId, ALL_STENCILS};
+use codesign::stencil::spec::{Dim, StencilSpec};
+use codesign::stencil::workload::Workload;
+use codesign::timemodel::{CIterTable, TimeModel};
+
+/// The seed's hard-coded characterization table, copied verbatim from the
+/// pre-refactor `ALL_STENCILS`: (name, space_dims, sigma, flops/point,
+/// n_buffers, bytes/cell, C_iter). The refactor must reproduce every value
+/// bit-for-bit — together with the unchanged solver this pins the solver
+/// results (machine, objective, front) for all six presets.
+const SEED_TABLE: [(&str, u32, u32, f64, f64, f64, f64); 6] = [
+    ("jacobi2d", 2, 1, 4.0, 2.0, 4.0, 11.0),
+    ("heat2d", 2, 1, 10.0, 2.0, 4.0, 13.0),
+    ("laplacian2d", 2, 1, 6.0, 2.0, 4.0, 10.0),
+    ("gradient2d", 2, 1, 14.0, 2.0, 4.0, 12.0),
+    ("heat3d", 3, 1, 14.0, 2.0, 4.0, 16.0),
+    ("laplacian3d", 3, 1, 8.0, 2.0, 4.0, 15.0),
+];
+
+#[test]
+fn preset_characterization_is_bit_identical_to_the_seed() {
+    assert_eq!(ALL_STENCILS.len(), SEED_TABLE.len());
+    for (s, (name, dims, sigma, flops, bufs, bytes, citer)) in
+        ALL_STENCILS.iter().zip(SEED_TABLE)
+    {
+        assert_eq!(s.name(), name);
+        assert_eq!(s.space_dims, dims, "{name}");
+        assert_eq!(s.sigma, sigma, "{name}");
+        assert_eq!(s.flops_per_point.to_bits(), flops.to_bits(), "{name}");
+        assert_eq!(s.n_buffers.to_bits(), bufs.to_bits(), "{name}");
+        assert_eq!(s.bytes_per_cell.to_bits(), bytes.to_bits(), "{name}");
+        assert_eq!(s.c_iter_cycles.to_bits(), citer.to_bits(), "{name}");
+        // The paper C_iter table serves the same values.
+        assert_eq!(CIterTable::paper().get(s.id).to_bits(), citer.to_bits(), "{name}");
+        // The data-driven path re-derives the same characterization.
+        assert_eq!(s.spec.flops_per_point().to_bits(), flops.to_bits(), "{name}");
+        assert_eq!(s.spec.c_iter_cycles().to_bits(), citer.to_bits(), "{name}");
+        assert_eq!(s.spec.radius, sigma, "{name}");
+    }
+}
+
+/// jacobi2d re-expressed as an explicit family spec: identical
+/// characterization under a different registry identity.
+fn jacobi_twin() -> StencilId {
+    StencilSpec::star(Dim::D2, 1).with_flops(4.0).with_c_iter(11.0).register()
+}
+
+#[test]
+fn equivalent_parametric_spec_is_bit_identical_and_shares_the_sweep() {
+    let twin = jacobi_twin();
+    assert_ne!(twin, StencilId::Jacobi2D, "distinct identity");
+
+    let base = Scenario::quick(Scenario::paper_2d(), 8);
+    let mut twinned = base.clone().named("2d-twin");
+    for e in &mut twinned.workload.entries {
+        if e.stencil == StencilId::Jacobi2D {
+            e.stencil = twin;
+        }
+    }
+
+    // One batch answers both scenarios; characterization-level cache keys
+    // mean the twin adds zero new instances to the shared sweep.
+    let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+    let rep = coord.run_batch_report(&[base.clone(), twinned]);
+    let [a, b] = &rep.reports[..] else { panic!("two scenarios in, two out") };
+    assert_eq!(a.result.points.len(), b.result.points.len());
+    for (pa, pb) in a.result.points.iter().zip(&b.result.points) {
+        assert_eq!(pa.hw, pb.hw);
+        assert_eq!(pa.gflops.to_bits(), pb.gflops.to_bits(), "objective must be bit-identical");
+        assert_eq!(pa.seconds.to_bits(), pb.seconds.to_bits());
+    }
+    assert_eq!(a.result.pareto, b.result.pareto, "fronts must be identical");
+
+    let solo = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+    let solo_rep = solo.run_batch_report(std::slice::from_ref(&base));
+    assert_eq!(
+        rep.unique_instances, solo_rep.unique_instances,
+        "the twin scenario must add no sweep work"
+    );
+}
+
+#[test]
+fn preset_batch_results_match_direct_run_bit_exactly() {
+    // The batched engine and the direct scenario runner still agree
+    // bit-for-bit on a preset workload after the refactor (machine,
+    // objective and front all derive from these points).
+    let sc = Scenario::quick(Scenario::paper_2d(), 8);
+    let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+    let batched = coord.run_scenario(&sc).result;
+    let direct =
+        codesign::codesign::scenario::run(&sc, &AreaModel::paper(), &TimeModel::maxwell());
+    assert_eq!(batched.points.len(), direct.points.len());
+    for (a, b) in batched.points.iter().zip(&direct.points) {
+        assert_eq!(a.hw, b.hw);
+        assert_eq!(a.gflops.to_bits(), b.gflops.to_bits());
+        assert_eq!(a.seconds.to_bits(), b.seconds.to_bits());
+    }
+    assert_eq!(batched.pareto, direct.pareto);
+    for (a, b) in batched.references.iter().zip(&direct.references) {
+        assert_eq!(a.gflops.to_bits(), b.gflops.to_bits(), "{}", a.name);
+    }
+}
+
+#[test]
+fn star3d_r2_runs_end_to_end_through_the_wire() {
+    // The serve path: a hand-written v2 request file naming a family member
+    // that exists nowhere in the preset tables.
+    let text = r#"{
+        "schema": 2,
+        "requests": [
+            {"type": "explore", "scenario": {"class": "star3d:r2", "quick_stride": 3}},
+            {"type": "what_if", "scenario": {"class": "star3d:r2", "quick_stride": 3},
+             "weights": [{"stencil": "star3d:r2", "weight": 2.5}]}
+        ]
+    }"#;
+    let requests = wire::decode_requests(text).expect("v2 parametric file must decode");
+    assert_eq!(requests.len(), 2);
+
+    let mut session = Session::paper();
+    let rep = session.submit_all(&requests);
+    let CodesignResponse::Explore(s) = &rep.answers[0].response else {
+        panic!("unexpected {:?}", rep.answers[0].response.kind());
+    };
+    assert_eq!(s.scenario, "star3d:r2");
+    assert!(s.designs > 100, "{} designs", s.designs);
+    assert!(!s.pareto.is_empty());
+    assert!(!rep.answers[1].response.is_error());
+
+    // Responses with parametric scenario names round-trip the wire.
+    let responses: Vec<CodesignResponse> =
+        rep.answers.iter().map(|a| a.response.clone()).collect();
+    let encoded = wire::encode_responses(&responses).to_string_compact();
+    assert_eq!(wire::decode_responses(&encoded).unwrap(), responses);
+
+    // A repeat submission over the warm session is pure cache service and
+    // bit-identical — parametric members memoize exactly like presets.
+    let again = session.submit_all(&requests);
+    assert!(again.cache_hit_rate() >= 0.99, "repeat hit rate {}", again.cache_hit_rate());
+    for (a, b) in rep.answers.iter().zip(&again.answers) {
+        assert_eq!(a.response, b.response);
+    }
+}
+
+#[test]
+fn mixed_preset_and_family_scenarios_batch_on_one_sweep() {
+    let spec_a = ScenarioSpec::three_d().quick(3);
+    let spec_b = ScenarioSpec::parametric(StencilSpec::star(Dim::D3, 2)).quick(3);
+    let mut session = Session::paper();
+    let rep = session.submit_all(&[
+        CodesignRequest::explore(spec_a),
+        CodesignRequest::explore(spec_b),
+    ]);
+    assert_eq!(session.partitions(), 1, "same (C_iter, SolveOpts): one batch group");
+    for a in &rep.answers {
+        let CodesignResponse::Explore(s) = &a.response else {
+            panic!("unexpected {:?}", a.response.kind());
+        };
+        assert!(s.designs > 100, "{}: {} designs", s.scenario, s.designs);
+    }
+}
+
+#[test]
+fn family_workloads_solve_like_presets() {
+    // A radius family member drives the plain (non-batched) solver stack
+    // too: Workload::single over star2d:r2 aggregates feasibly on GTX 980.
+    use codesign::area::HwParams;
+    use codesign::opt::problem::SolveOpts;
+    use codesign::opt::separable::solve_hardware_point;
+    let id = StencilSpec::star(Dim::D2, 2).register();
+    let mut w = Workload::single(id);
+    w.entries.truncate(4);
+    for e in &mut w.entries {
+        e.weight = 0.25;
+    }
+    let sol = solve_hardware_point(
+        &TimeModel::maxwell(),
+        &w,
+        &CIterTable::paper(),
+        &HwParams::gtx980(),
+        &SolveOpts::default(),
+    );
+    let g = sol.weighted_gflops.expect("radius-2 star must be feasible on GTX 980");
+    assert!(g > 50.0 && g < 10_000.0, "weighted GFLOP/s = {g}");
+    // Wider halo and more flops per point than the radius-1 Jacobi preset.
+    let st = Stencil::get(id);
+    assert_eq!(st.sigma, 2);
+    assert!(st.flops_per_point > Stencil::get(StencilId::Jacobi2D).flops_per_point);
+}
+
+#[test]
+fn v1_request_files_still_decode_and_serve() {
+    let text = r#"{
+        "schema": 1,
+        "requests": [
+            {"type": "pareto", "scenario": {"class": "heat2d", "quick_stride": 8}}
+        ]
+    }"#;
+    let requests = wire::decode_requests(text).expect("v1 envelope must stay accepted");
+    let mut session = Session::paper();
+    let rep = session.submit_all(&requests);
+    let CodesignResponse::Pareto(p) = &rep.answers[0].response else {
+        panic!("unexpected {:?}", rep.answers[0].response.kind());
+    };
+    assert_eq!(p.scenario, "heat2d");
+    assert!(!p.pareto.is_empty());
+}
+
+#[test]
+fn prop_spec_names_roundtrip_the_wire() {
+    // Generated specs survive spec → canonical name → wire class → decode →
+    // registry bit-exactly (the schema-v2 carrier for family members).
+    use codesign::util::propcheck::{forall_res, Config};
+    forall_res(Config::default().cases(60), |rng| {
+        let dim = *rng.choose(&[Dim::D2, Dim::D3]);
+        let r = rng.range_u64(1, 8) as u32;
+        let mut spec = if rng.bernoulli(0.5) {
+            StencilSpec::star(dim, r)
+        } else {
+            StencilSpec::boxed(dim, r)
+        };
+        if rng.bernoulli(0.4) {
+            spec = spec.with_flops((rng.f64() * 100.0).max(f64::MIN_POSITIVE));
+        }
+        if rng.bernoulli(0.4) {
+            spec = spec.with_c_iter((rng.f64() * 40.0).max(f64::MIN_POSITIVE));
+        }
+        if rng.bernoulli(0.3) {
+            spec = spec.with_buffers(1.0 + rng.f64() * 3.0);
+        }
+        let parsed = StencilSpec::parse(&spec.canonical_name())
+            .map_err(|e| format!("{}: {e}", spec.canonical_name()))?;
+        if parsed != spec {
+            return Err(format!("{}: parse mismatch {parsed:?}", spec.canonical_name()));
+        }
+        // Through the wire as a scenario class.
+        let req = CodesignRequest::explore(ScenarioSpec::parametric(spec));
+        let back = wire::request_from_json(&wire::request_to_json(&req))
+            .map_err(|e| format!("{e:#}"))?;
+        if back != req {
+            return Err(format!("{}: wire mismatch", spec.canonical_name()));
+        }
+        // And the registered characterization matches the spec's derivation.
+        let st = Stencil::get(spec.register());
+        if st.flops_per_point.to_bits() != spec.flops_per_point().to_bits()
+            || st.c_iter_cycles.to_bits() != spec.c_iter_cycles().to_bits()
+            || st.sigma != spec.radius
+        {
+            return Err(format!("{}: characterization drift", spec.canonical_name()));
+        }
+        Ok(())
+    });
+}

@@ -318,10 +318,42 @@ fn prop_cache_key_identity() {
         let hw2 = random_hw(rng);
         let st: &Stencil = rng.choose(&ALL_STENCILS);
         let size = if st.is_3d() { ProblemSize::d3(128, 32) } else { ProblemSize::d2(4096, 1024) };
-        let k1 = CacheKey::new(&hw1, st.id, &size);
-        let k1b = CacheKey::new(&hw1, st.id, &size);
-        let k2 = CacheKey::new(&hw2, st.id, &size);
+        let k1 = CacheKey::new(&hw1, st, &size);
+        let k1b = CacheKey::new(&hw1, st, &size);
+        let k2 = CacheKey::new(&hw2, st, &size);
         let same_relevant = hw1.n_sm == hw2.n_sm && hw1.n_v == hw2.n_v && hw1.m_sm_kb == hw2.m_sm_kb;
         k1 == k1b && ((k1 == k2) == same_relevant)
+    });
+}
+
+#[test]
+fn prop_cache_key_is_characterization() {
+    // Keys compare equal exactly when the derived characterization does —
+    // identity (registry id, name) must not leak into the key.
+    use codesign::coordinator::CacheKey;
+    use codesign::stencil::spec::{Dim, Shape, StencilSpec};
+    forall(Config::default().cases(100), |rng| {
+        let hw = HwParams::gtx980();
+        let dim = *rng.choose(&[Dim::D2, Dim::D3]);
+        let shape = *rng.choose(&[Shape::Star, Shape::Box]);
+        let r = rng.range_u64(1, 5) as u32;
+        let spec = if shape == Shape::Box {
+            StencilSpec::boxed(dim, r)
+        } else {
+            StencilSpec::star(dim, r)
+        };
+        let a = Stencil::get(spec.register());
+        // The same characterization pinned explicitly under a different
+        // canonical name (and thus a different id).
+        let twin_spec = spec
+            .with_flops(spec.flops_per_point())
+            .with_c_iter(spec.c_iter_cycles());
+        let b = Stencil::get(twin_spec.register());
+        let size = if a.is_3d() { ProblemSize::d3(64, 16) } else { ProblemSize::d2(512, 128) };
+        let keys_match = CacheKey::new(&hw, a, &size) == CacheKey::new(&hw, b, &size);
+        // And perturbing any characterization field must change the key.
+        let c = Stencil::get(twin_spec.with_flops(spec.flops_per_point() + 1.0).register());
+        let keys_differ = CacheKey::new(&hw, a, &size) != CacheKey::new(&hw, c, &size);
+        keys_match && keys_differ
     });
 }
