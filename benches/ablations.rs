@@ -17,29 +17,23 @@
 //!
 //! Run: `cargo bench --bench ablations`
 
-use codesign::area::AreaModel;
 use codesign::codesign::scenario::{run, Scenario};
-use codesign::timemodel::{MachineSpec, TimeModel};
+use codesign::platform::PlatformSpec;
 use codesign::util::bench::Bencher;
 use codesign::util::csv::Table;
 
 fn main() {
     let quick = codesign::util::bench::quick_requested();
     let mut b = Bencher::new();
-    let area_model = AreaModel::paper();
 
-    let variants: Vec<(&str, MachineSpec)> = vec![
-        ("default (lat^0.25, per-SM BW)", MachineSpec::maxwell()),
-        ("no shm latency scaling", MachineSpec { shm_latency_exponent: 0.0, ..MachineSpec::maxwell() }),
-        ("full sqrt shm latency", MachineSpec { shm_latency_exponent: 0.5, ..MachineSpec::maxwell() }),
-        (
-            "2x per-SM bandwidth",
-            MachineSpec { mem_bw_per_sm_gbs: 28.0, ..MachineSpec::maxwell() },
-        ),
-        (
-            "half per-SM bandwidth",
-            MachineSpec { mem_bw_per_sm_gbs: 7.0, ..MachineSpec::maxwell() },
-        ),
+    // Every model variant is just a platform override name — the same
+    // grammar `--platform` takes on the CLI.
+    let variants: Vec<(&str, &str)> = vec![
+        ("default (lat^0.25, per-SM BW)", "maxwell"),
+        ("no shm latency scaling", "maxwell:lexp0"),
+        ("full sqrt shm latency", "maxwell:lexp0.5"),
+        ("2x per-SM bandwidth", "maxwell:bw28"),
+        ("half per-SM bandwidth", "maxwell:bw7"),
     ];
 
     let mut t = Table::new(&[
@@ -51,10 +45,10 @@ fn main() {
         "best_gflops",
         "gain_vs_gtx980_pct",
     ]);
-    for (name, spec) in variants {
+    for (name, platform_name) in variants {
         let sc = Scenario::quick(Scenario::paper_2d(), if quick { 16 } else { 4 });
-        let tm = TimeModel::new(spec);
-        let (res, _) = b.bench_once(&format!("ablation: {name}"), || run(&sc, &area_model, &tm));
+        let platform = PlatformSpec::parse(platform_name).expect("valid override name");
+        let (res, _) = b.bench_once(&format!("ablation: {name}"), || run(&sc, &platform));
         let gtx = res.reference("gtx980").unwrap();
         let best = res.best_within(gtx.area_mm2).expect("non-empty space");
         t.push(&[

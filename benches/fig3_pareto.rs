@@ -5,11 +5,9 @@
 //! Run: `cargo bench --bench fig3_pareto` (add `-- --quick` for the reduced
 //! space; `--d2`/`--d3` restrict the class).
 
-use codesign::area::AreaModel;
 use codesign::codesign::scenario::Scenario;
 use codesign::coordinator::Coordinator;
 use codesign::report::fig3;
-use codesign::timemodel::TimeModel;
 use codesign::util::bench::Bencher;
 use std::path::Path;
 
@@ -20,8 +18,8 @@ fn main() {
     let only_3d = args.iter().any(|a| a == "--d3");
 
     let mut b = Bencher::new();
-    let area_model = AreaModel::paper();
-    let coord = Coordinator::new(area_model, TimeModel::maxwell());
+    let coord = Coordinator::paper();
+    let area_model = coord.area_model();
 
     for base in [Scenario::paper_2d(), Scenario::paper_3d()] {
         if (only_2d && base.name != "2d") || (only_3d && base.name != "3d") {

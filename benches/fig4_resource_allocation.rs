@@ -3,19 +3,17 @@
 //!
 //! Run: `cargo bench --bench fig4_resource_allocation` (add `-- --quick`)
 
-use codesign::area::AreaModel;
 use codesign::codesign::scenario::Scenario;
 use codesign::coordinator::Coordinator;
 use codesign::report::fig4;
-use codesign::timemodel::TimeModel;
 use codesign::util::bench::Bencher;
 use std::path::Path;
 
 fn main() {
     let quick = codesign::util::bench::quick_requested();
     let mut b = Bencher::new();
-    let area_model = AreaModel::paper();
-    let coord = Coordinator::new(area_model, TimeModel::maxwell());
+    let coord = Coordinator::paper();
+    let area_model = coord.area_model();
     for base in [Scenario::paper_2d(), Scenario::paper_3d()] {
         let name = base.name.clone();
         let sc = if quick { Scenario::quick(base, 8) } else { base };

@@ -4,6 +4,7 @@
 //! Run: `cargo bench --bench model_validation`
 
 use codesign::area::params::HwParams;
+use codesign::platform::Platform;
 use codesign::sim::run::simulate;
 use codesign::sim::validate_sweep;
 use codesign::stencil::defs::{Stencil, StencilId};
@@ -27,7 +28,7 @@ fn main() {
     b.bench("fluid_simulator_run", || simulate(&model.machine, black_box(&st), &size, &hw, &sw));
 
     // The validation sweep + per-case table.
-    let (rep, _) = b.bench_once("validation_sweep", || validate_sweep(&model));
+    let (rep, _) = b.bench_once("validation_sweep", || validate_sweep(Platform::default_spec()));
     println!(
         "\nmodel vs simulator: {} configs, MAPE {:.1}%, Kendall tau {:.3}",
         rep.cases.len(),

@@ -3,20 +3,19 @@
 //!
 //! Run: `cargo bench --bench table2_sensitivity` (add `-- --quick`)
 
-use codesign::area::AreaModel;
 use codesign::codesign::scenario::Scenario;
 use codesign::codesign::sensitivity::{reweighted_gflops, single_benchmark_weights};
 use codesign::coordinator::Coordinator;
 use codesign::report::table2;
 use codesign::stencil::defs::StencilId;
-use codesign::timemodel::{CIterTable, TimeModel};
+use codesign::timemodel::CIterTable;
 use codesign::util::bench::{black_box, Bencher};
 use std::path::Path;
 
 fn main() {
     let quick = codesign::util::bench::quick_requested();
     let mut b = Bencher::new();
-    let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+    let coord = Coordinator::paper();
     let make = |base: Scenario| if quick { Scenario::quick(base, 8) } else { base };
     let sc2d = make(Scenario::paper_2d());
     let sc3d = make(Scenario::paper_3d());
@@ -40,7 +39,7 @@ fn main() {
         &sc2d.workload,
         &r3d.result,
         &sc3d.workload,
-        &TimeModel::maxwell(),
+        coord.platform(),
         &CIterTable::paper(),
         band,
     );

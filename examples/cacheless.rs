@@ -7,15 +7,16 @@
 //!
 //! Run with: `cargo run --release --example cacheless [-- --quick]`
 
-use codesign::area::{AreaModel, HwParams};
+use codesign::area::HwParams;
 use codesign::codesign::cacheless::cacheless_comparison;
 use codesign::codesign::scenario::{run, Scenario};
+use codesign::platform::Platform;
 use codesign::report::fig3::paper_improvements;
-use codesign::timemodel::TimeModel;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
-    let area_model = AreaModel::paper();
+    let platform = Platform::default_spec();
+    let area_model = platform.area_model();
 
     // The area decomposition first: what do the caches cost?
     for (name, hw) in [("GTX 980", HwParams::gtx980()), ("Titan X", HwParams::titanx())] {
@@ -41,7 +42,7 @@ fn main() {
     for base in [Scenario::paper_2d(), Scenario::paper_3d()] {
         let name = base.name.clone();
         let sc = if quick { Scenario::quick(base, 4) } else { base };
-        let res = run(&sc, &area_model, &TimeModel::maxwell());
+        let res = run(&sc, platform);
         println!("\n== {name} stencils ==");
         for row in cacheless_comparison(&res, &area_model) {
             println!(

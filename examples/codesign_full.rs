@@ -6,22 +6,21 @@
 //!
 //! Run with: `cargo run --release --example codesign_full [-- --quick]`
 
-use codesign::area::AreaModel;
 use codesign::codesign::cacheless::cacheless_comparison;
 use codesign::codesign::scenario::{run, Scenario};
-use codesign::timemodel::TimeModel;
+use codesign::platform::Platform;
 use codesign::util::ascii_plot::ScatterPlot;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
-    let area_model = AreaModel::paper();
-    let time_model = TimeModel::maxwell();
+    let platform = Platform::default_spec();
+    let area_model = platform.area_model();
 
     for base in [Scenario::paper_2d(), Scenario::paper_3d()] {
         let name = base.name.clone();
         let sc = if quick { Scenario::quick(base, 4) } else { base };
         let t0 = std::time::Instant::now();
-        let res = run(&sc, &area_model, &time_model);
+        let res = run(&sc, platform);
         let dt = t0.elapsed();
 
         println!("\n================ {name} stencils ================");

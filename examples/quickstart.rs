@@ -8,8 +8,9 @@
 //!
 //! Run with: `make artifacts && cargo run --release --example quickstart`
 
-use codesign::area::{AreaModel, HwParams};
+use codesign::area::HwParams;
 use codesign::codesign::scenario::{run, Scenario};
+use codesign::platform::Platform;
 use codesign::opt::{solve_inner, InnerProblem, SolveOpts};
 use codesign::runtime::Engine;
 use codesign::stencil::defs::{Stencil, StencilId};
@@ -49,7 +50,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- 3. codesign: a better machine at the same area -------------------
     let sc = Scenario::quick(Scenario::paper_2d(), 8);
-    let res = run(&sc, &AreaModel::paper(), &TimeModel::maxwell());
+    let res = run(&sc, Platform::default_spec());
     let gtx = res.reference("gtx980").unwrap();
     let best = res.best_within(gtx.area_mm2).unwrap();
     println!(

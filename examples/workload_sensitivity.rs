@@ -5,15 +5,14 @@
 //!
 //! Run with: `cargo run --release --example workload_sensitivity [-- --quick]`
 
-use codesign::area::AreaModel;
 use codesign::codesign::scenario::Scenario;
 use codesign::coordinator::Coordinator;
 use codesign::report::table2;
-use codesign::timemodel::{CIterTable, TimeModel};
+use codesign::timemodel::CIterTable;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
-    let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell()).with_progress(1000);
+    let coord = Coordinator::paper().with_progress(1000);
     let make = |base: Scenario| if quick { Scenario::quick(base, 4) } else { base };
     let sc2d = make(Scenario::paper_2d());
     let sc3d = make(Scenario::paper_3d());
@@ -35,7 +34,7 @@ fn main() {
         &sc2d.workload,
         &r3d.result,
         &sc3d.workload,
-        &TimeModel::maxwell(),
+        coord.platform(),
         &CIterTable::paper(),
         band,
     );

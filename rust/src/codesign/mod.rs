@@ -2,9 +2,11 @@
 //!
 //! * [`space`] — enumerate the feasible hardware design space of §IV-B
 //!   (cache-less candidate accelerators on the manufacturer grid).
-//! * [`scenario`] — run a full design-space exploration for a workload:
-//!   per-point eq. (18) solves, reference GTX 980 / Titan X evaluations, and
-//!   the improvement statistics quoted in the abstract and §V-A.
+//! * [`scenario`] — run a full design-space exploration for a workload on
+//!   one platform: per-point eq. (18) solves, evaluations of the platform's
+//!   reference architectures (stock GTX 980 / Titan X on the default
+//!   baseline), and the improvement statistics quoted in the abstract and
+//!   §V-A.
 //! * [`pareto`] — Pareto-frontier extraction over (area, performance).
 //! * [`sensitivity`] — §V-B / Table II: per-benchmark optimal architectures
 //!   from re-weighted (memoized) results.

@@ -17,13 +17,15 @@
 //! to powered silicon area. They are deliberately simple — the point is the
 //! *objective structure*, as in the paper.
 
-use crate::area::model::{AreaBreakdown, AreaModel};
+use crate::area::model::AreaBreakdown;
 use crate::area::params::HwParams;
 use crate::codesign::scenario::ScenarioResult;
+use crate::platform::spec::PlatformSpec;
+use crate::timemodel::machine::MachineSpec;
 use crate::timemodel::talg::TimeEstimate;
 
 /// Power model coefficients.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PowerModel {
     /// Dynamic energy per lane-cycle at full issue, W per (lane·GHz) —
     /// i.e. watts contributed by one vector lane busy at 1 GHz.
@@ -52,15 +54,17 @@ impl PowerModel {
     /// Average power of a design running one modelled workload phase.
     ///
     /// `est` supplies the utilization (occupancy and compute/memory balance);
-    /// `clock_ghz` the rate; `active_sm_frac` supports power-gating studies
-    /// (gated SMs contribute no dynamic power and no leakage for their area
-    /// share, but the chip-level overhead keeps leaking).
+    /// `machine` the clock rate and per-SM bandwidth (historically the
+    /// Maxwell 14 GB/s was baked in here); `active_sm_frac` supports
+    /// power-gating studies (gated SMs contribute no dynamic power and no
+    /// leakage for their area share, but the chip-level overhead keeps
+    /// leaking).
     pub fn power_w(
         &self,
         hw: &HwParams,
         breakdown: &AreaBreakdown,
         est: &TimeEstimate,
-        clock_ghz: f64,
+        machine: &MachineSpec,
         active_sm_frac: f64,
     ) -> f64 {
         assert!((0.0..=1.0).contains(&active_sm_frac));
@@ -73,15 +77,16 @@ impl PowerModel {
             1.0
         };
         let util = est.occupancy.min(1.0) * compute_frac;
-        let dyn_compute = self.w_per_lane_ghz * lanes * clock_ghz * util;
+        let dyn_compute = self.w_per_lane_ghz * lanes * machine.clock_ghz * util;
 
-        // Memory traffic power from the achieved bandwidth share.
+        // Memory traffic power from the achieved share of the platform's
+        // per-SM bandwidth.
         let mem_frac = if est.compute_cycles > est.mem_cycles {
             est.mem_cycles / est.compute_cycles
         } else {
             1.0
         };
-        let bw_gbs = 14.0 * hw.n_sm as f64 * active_sm_frac * mem_frac;
+        let bw_gbs = machine.mem_bw_per_sm_gbs * hw.n_sm as f64 * active_sm_frac * mem_frac;
         let dyn_mem = self.w_per_gbs * bw_gbs;
 
         // Leakage: gated SMs are power-gated (their slice of SM-proportional
@@ -107,13 +112,11 @@ pub struct EnergyEval {
     pub gflops_per_w: f64,
 }
 
-/// Evaluate energy for every point of a scenario result.
-pub fn energy_evals(
-    result: &ScenarioResult,
-    area_model: &AreaModel,
-    power_model: &PowerModel,
-    clock_ghz: f64,
-) -> Vec<EnergyEval> {
+/// Evaluate energy for every point of a scenario result, under the
+/// platform's own area coefficients, power coefficients and machine
+/// constants.
+pub fn energy_evals(result: &ScenarioResult, platform: &PlatformSpec) -> Vec<EnergyEval> {
+    let area_model = platform.area_model();
     result
         .points
         .iter()
@@ -124,7 +127,8 @@ pub fn energy_evals(
             let mut acc_pw = 0.0;
             let mut acc_t = 0.0;
             for sol in p.per_entry.iter().flatten() {
-                let pw = power_model.power_w(&p.hw, &breakdown, &sol.est, clock_ghz, 1.0);
+                let pw =
+                    platform.power.power_w(&p.hw, &breakdown, &sol.est, &platform.machine, 1.0);
                 acc_pw += pw * sol.est.seconds;
                 acc_t += sol.est.seconds;
             }
@@ -168,12 +172,12 @@ pub fn gating_curve(
     breakdown: &AreaBreakdown,
     est: &TimeEstimate,
     power_model: &PowerModel,
-    clock_ghz: f64,
+    machine: &MachineSpec,
 ) -> Vec<(u32, f64, f64)> {
     (1..=hw.n_sm)
         .map(|active| {
             let frac = active as f64 / hw.n_sm as f64;
-            let p = power_model.power_w(hw, breakdown, est, clock_ghz, frac);
+            let p = power_model.power_w(hw, breakdown, est, machine, frac);
             // Throughput scales with active SMs (each carries its own
             // bandwidth slice in the time model).
             (active, p, frac)
@@ -184,8 +188,16 @@ pub fn gating_curve(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::area::model::AreaModel;
     use crate::codesign::scenario::testfix;
+    use crate::platform::registry::Platform;
     use crate::timemodel::talg::Bound;
+
+    /// Maxwell machine constants at the published 1.216 GHz boost clock the
+    /// 165 W TDP anchor assumes.
+    fn boost() -> MachineSpec {
+        MachineSpec { clock_ghz: 1.216, ..MachineSpec::maxwell() }
+    }
 
     fn est(occ: f64, cc: f64, mc: f64) -> TimeEstimate {
         TimeEstimate {
@@ -206,7 +218,7 @@ mod tests {
         let pm = PowerModel::maxwell();
         let hw = HwParams::gtx980();
         let b = AreaModel::paper().breakdown(&hw);
-        let p = pm.power_w(&hw, &b, &est(1.0, 1.0, 1.0), 1.216, 1.0);
+        let p = pm.power_w(&hw, &b, &est(1.0, 1.0, 1.0), &boost(), 1.0);
         assert!((140.0..190.0).contains(&p), "GTX980 busy power {p} W vs 165 W TDP");
     }
 
@@ -215,8 +227,8 @@ mod tests {
         let pm = PowerModel::maxwell();
         let hw = HwParams::gtx980();
         let b = AreaModel::paper().breakdown(&hw);
-        let busy = pm.power_w(&hw, &b, &est(1.0, 1.0, 0.1), 1.216, 1.0);
-        let starved = pm.power_w(&hw, &b, &est(0.2, 1.0, 0.1), 1.216, 1.0);
+        let busy = pm.power_w(&hw, &b, &est(1.0, 1.0, 0.1), &boost(), 1.0);
+        let starved = pm.power_w(&hw, &b, &est(0.2, 1.0, 0.1), &boost(), 1.0);
         assert!(starved < busy);
     }
 
@@ -225,7 +237,7 @@ mod tests {
         let pm = PowerModel::maxwell();
         let hw = HwParams::gtx980();
         let b = AreaModel::paper().breakdown(&hw);
-        let curve = gating_curve(&hw, &b, &est(1.0, 1.0, 0.5), &pm, 1.216);
+        let curve = gating_curve(&hw, &b, &est(1.0, 1.0, 0.5), &pm, &boost());
         assert_eq!(curve.len(), 16);
         for w in curve.windows(2) {
             assert!(w[0].1 < w[1].1, "power not monotone in active SMs");
@@ -238,7 +250,7 @@ mod tests {
     #[test]
     fn energy_objective_interpolates() {
         let r = testfix::quick_2d();
-        let evals = energy_evals(r, &AreaModel::paper(), &PowerModel::maxwell(), 1.2);
+        let evals = energy_evals(r, Platform::default_spec());
         assert_eq!(evals.len(), r.points.len());
         assert!(evals.iter().all(|e| e.power_w > 0.0 && e.energy_j > 0.0));
         let perf = best_weighted(&evals, r, 1.0).unwrap();
@@ -263,7 +275,7 @@ mod tests {
     #[test]
     fn efficiency_metric_consistent() {
         let r = testfix::quick_2d();
-        let evals = energy_evals(r, &AreaModel::paper(), &PowerModel::maxwell(), 1.2);
+        let evals = energy_evals(r, Platform::default_spec());
         for e in &evals {
             assert!((e.gflops_per_w - e.gflops / e.power_w).abs() < 1e-9);
         }

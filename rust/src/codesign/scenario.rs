@@ -1,18 +1,17 @@
 //! Full design-space exploration for one workload class (Fig 3's two
 //! panels): enumerate hardware candidates, solve eq. (18) on each, evaluate
-//! the stock GTX 980 / Titan X references under the same time model, and
+//! the platform's reference architectures under the same time model, and
 //! derive the paper's improvement statistics.
 
-use crate::area::model::AreaModel;
 use crate::area::params::HwParams;
 use crate::codesign::pareto::{best_within_area, pareto_front};
 use crate::codesign::space::{enumerate_space, SpaceSpec};
 use crate::opt::inner::InnerSolution;
 use crate::opt::problem::SolveOpts;
 use crate::opt::separable::solve_hardware_point;
+use crate::platform::spec::{PlatformSpec, ReferenceHw};
 use crate::stencil::workload::Workload;
 use crate::timemodel::citer::CIterTable;
-use crate::timemodel::talg::TimeModel;
 use crate::util::threadpool::{default_threads, parallel_map};
 
 /// One solved design point.
@@ -32,7 +31,7 @@ pub struct DesignEval {
 /// A reference (existing) architecture evaluated under the same model.
 #[derive(Clone, Debug)]
 pub struct RefEval {
-    pub name: &'static str,
+    pub name: String,
     pub hw: HwParams,
     /// Modelled area (eq. 5) and the published die area.
     pub area_mm2: f64,
@@ -164,42 +163,43 @@ impl ScenarioResult {
     }
 }
 
-/// Evaluate one reference architecture (stock Maxwell, caches and all) under
-/// the scenario's workload. The time model sees its real `n_SM`, `n_V`,
-/// `M_SM`; its caches contribute area but not performance (the HHC-generated
-/// code the model describes stages data through shared memory explicitly).
+/// Evaluate one of the platform's reference architectures (stock, caches and
+/// all) under the scenario's workload. The time model sees its real `n_SM`,
+/// `n_V`, `M_SM`; its caches contribute area but not performance (the
+/// HHC-generated code the model describes stages data through shared memory
+/// explicitly).
 pub fn evaluate_reference(
-    name: &'static str,
-    hw: HwParams,
-    published_area_mm2: f64,
+    reference: &ReferenceHw,
     scenario: &Scenario,
-    area_model: &AreaModel,
-    time_model: &TimeModel,
+    platform: &PlatformSpec,
 ) -> RefEval {
     let sol = solve_hardware_point(
-        time_model,
+        &platform.time_model(),
         &scenario.workload,
         &scenario.citer,
-        &hw,
+        &reference.hw,
         &scenario.solve_opts,
     );
     RefEval {
-        name,
-        hw,
-        area_mm2: area_model.area_mm2(&hw),
-        published_area_mm2,
+        name: reference.name.clone(),
+        hw: reference.hw,
+        area_mm2: platform.area_model().area_mm2(&reference.hw),
+        published_area_mm2: reference.published_area_mm2,
         gflops: sol.weighted_gflops.expect("reference must be feasible"),
         seconds: sol.weighted_seconds.expect("reference must be feasible"),
         per_entry: sol.per_entry,
     }
 }
 
-/// Run the full exploration.
-pub fn run(scenario: &Scenario, area_model: &AreaModel, time_model: &TimeModel) -> ScenarioResult {
-    let space = enumerate_space(area_model, &scenario.space);
+/// Run the full exploration on one platform (area pricing, time model and
+/// reference architectures all come from its [`PlatformSpec`]).
+pub fn run(scenario: &Scenario, platform: &PlatformSpec) -> ScenarioResult {
+    let area_model = platform.area_model();
+    let time_model = platform.time_model();
+    let space = enumerate_space(&area_model, &scenario.space);
     let solved = parallel_map(&space, scenario.threads, |pt| {
         let sol = solve_hardware_point(
-            time_model,
+            &time_model,
             &scenario.workload,
             &scenario.citer,
             &pt.hw,
@@ -228,10 +228,11 @@ pub fn run(scenario: &Scenario, area_model: &AreaModel, time_model: &TimeModel) 
     let xy: Vec<(f64, f64)> = points.iter().map(|p| (p.area_mm2, p.gflops)).collect();
     let pareto = pareto_front(&xy);
 
-    let references = vec![
-        evaluate_reference("gtx980", HwParams::gtx980(), 398.0, scenario, area_model, time_model),
-        evaluate_reference("titanx", HwParams::titanx(), 601.0, scenario, area_model, time_model),
-    ];
+    let references: Vec<RefEval> = platform
+        .references
+        .iter()
+        .map(|r| evaluate_reference(r, scenario, platform))
+        .collect();
 
     let vs_reference = references
         .iter()
@@ -243,7 +244,7 @@ pub fn run(scenario: &Scenario, area_model: &AreaModel, time_model: &TimeModel) 
                 }
                 None => (f64::NAN, r.hw),
             };
-            (r.name.to_string(), impr, hw)
+            (r.name.clone(), impr, hw)
         })
         .collect();
 
@@ -263,6 +264,7 @@ pub fn run(scenario: &Scenario, area_model: &AreaModel, time_model: &TimeModel) 
 #[cfg(test)]
 pub(crate) mod testfix {
     use super::*;
+    use crate::platform::registry::Platform;
     use std::sync::OnceLock;
 
     pub fn quick_2d_scenario() -> Scenario {
@@ -271,7 +273,7 @@ pub(crate) mod testfix {
 
     pub fn quick_2d() -> &'static ScenarioResult {
         static CELL: OnceLock<ScenarioResult> = OnceLock::new();
-        CELL.get_or_init(|| run(&quick_2d_scenario(), &AreaModel::paper(), &TimeModel::maxwell()))
+        CELL.get_or_init(|| run(&quick_2d_scenario(), Platform::default_spec()))
     }
 }
 

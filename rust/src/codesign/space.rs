@@ -14,8 +14,9 @@
 use crate::area::model::AreaModel;
 use crate::area::params::HwParams;
 
-/// Enumeration bounds (defaults = the paper's).
-#[derive(Clone, Copy, Debug)]
+/// Enumeration bounds (defaults = the paper's; platform presets carry their
+/// own — see [`crate::platform::PlatformSpec`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SpaceSpec {
     pub n_sm_max: u32,
     pub n_v_max: u32,
@@ -33,6 +34,21 @@ impl SpaceSpec {
     /// A reduced space for tests and quick runs.
     pub fn small() -> SpaceSpec {
         SpaceSpec { n_sm_max: 16, n_v_max: 512, m_sm_max_kb: 192.0, max_area_mm2: 650.0, r_vu_kb: 2.0 }
+    }
+
+    /// This space clamped to the quick-run grid: bounds are the minimum of
+    /// this space's and [`SpaceSpec::small`]'s, so a platform's tighter
+    /// bounds survive `--quick` while the paper space shrinks exactly as it
+    /// always has (`SpaceSpec::paper().shrunk() == SpaceSpec::small()`).
+    pub fn shrunk(&self) -> SpaceSpec {
+        let s = SpaceSpec::small();
+        SpaceSpec {
+            n_sm_max: self.n_sm_max.min(s.n_sm_max),
+            n_v_max: self.n_v_max.min(s.n_v_max),
+            m_sm_max_kb: self.m_sm_max_kb.min(s.m_sm_max_kb),
+            max_area_mm2: self.max_area_mm2,
+            r_vu_kb: self.r_vu_kb,
+        }
     }
 
     /// This space under a tighter (or looser) total-area budget. On the same
@@ -121,6 +137,15 @@ mod tests {
     fn all_points_on_manufacturer_grid() {
         let pts = enumerate_space(&AreaModel::paper(), &SpaceSpec::small());
         assert!(pts.iter().all(|p| p.hw.respects_manufacturer_patterns()));
+    }
+
+    #[test]
+    fn shrunk_is_small_on_the_paper_space_and_respects_tighter_bounds() {
+        assert_eq!(SpaceSpec::paper().shrunk(), SpaceSpec::small());
+        let tight = SpaceSpec { n_sm_max: 8, n_v_max: 128, ..SpaceSpec::paper() };
+        let q = tight.shrunk();
+        assert_eq!((q.n_sm_max, q.n_v_max), (8, 128));
+        assert_eq!(q.m_sm_max_kb, 192.0);
     }
 
     #[test]

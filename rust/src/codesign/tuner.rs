@@ -9,12 +9,12 @@
 
 use crate::area::model::AreaModel;
 use crate::area::params::HwParams;
-use crate::codesign::space::{m_sm_grid, DesignPoint};
+use crate::codesign::space::{m_sm_grid, DesignPoint, SpaceSpec};
 use crate::opt::problem::SolveOpts;
 use crate::opt::separable::solve_hardware_point;
+use crate::platform::spec::PlatformSpec;
 use crate::stencil::workload::Workload;
 use crate::timemodel::citer::CIterTable;
-use crate::timemodel::talg::TimeModel;
 
 /// Which hardware parameters are pinned.
 #[derive(Clone, Copy, Debug, Default)]
@@ -53,27 +53,41 @@ pub struct TuneResult {
 
 /// Enumerate the area-feasible completions of `pinned` within the budget, in
 /// the deterministic (n_SM, n_V, M_SM) nested order the tuner searches. The
-/// shared grid behind [`tune`] and the session service's memoized tune path
+/// free dimensions run over `space`'s bounds (historically the paper grid
+/// was hard-coded here; it is now the platform's [`SpaceSpec`]). The shared
+/// grid behind [`tune`] and the session service's memoized tune path
 /// (`service::session`), so both examine identical candidates.
-pub fn candidate_grid(pinned: &Pinned, budget_mm2: f64, area_model: &AreaModel) -> Vec<DesignPoint> {
+pub fn candidate_grid(
+    pinned: &Pinned,
+    budget_mm2: f64,
+    space: &SpaceSpec,
+    area_model: &AreaModel,
+) -> Vec<DesignPoint> {
     let n_sm_grid: Vec<u32> = match pinned.n_sm {
         Some(v) => vec![v],
-        None => (2..=32).step_by(2).collect(),
+        None => (2..=space.n_sm_max).step_by(2).collect(),
     };
     let n_v_grid: Vec<u32> = match pinned.n_v {
         Some(v) => vec![v],
-        None => (32..=2048).step_by(32).collect(),
+        None => (32..=space.n_v_max).step_by(32).collect(),
     };
     let m_grid: Vec<f64> = match pinned.m_sm_kb {
         Some(v) => vec![v],
-        None => m_sm_grid(480.0),
+        None => m_sm_grid(space.m_sm_max_kb),
     };
     let (l1, l2) = pinned.caches.unwrap_or((0.0, 0.0));
     let mut out = Vec::new();
     for &n_sm in &n_sm_grid {
         for &n_v in &n_v_grid {
             for &m_sm_kb in &m_grid {
-                let hw = HwParams { n_sm, n_v, r_vu_kb: 2.0, m_sm_kb, l1_smpair_kb: l1, l2_kb: l2 };
+                let hw = HwParams {
+                    n_sm,
+                    n_v,
+                    r_vu_kb: space.r_vu_kb,
+                    m_sm_kb,
+                    l1_smpair_kb: l1,
+                    l2_kb: l2,
+                };
                 let area = area_model.area_mm2(&hw);
                 if area <= budget_mm2 {
                     out.push(DesignPoint { hw, area_mm2: area });
@@ -84,20 +98,22 @@ pub fn candidate_grid(pinned: &Pinned, budget_mm2: f64, area_model: &AreaModel) 
     out
 }
 
-/// Search the unpinned dimensions for the best completion within the budget.
+/// Search the unpinned dimensions for the best completion within the budget,
+/// on one platform (grid bounds, area pricing and time model all come from
+/// its [`PlatformSpec`]).
 pub fn tune(
     pinned: &Pinned,
     budget_mm2: f64,
     workload: &Workload,
-    area_model: &AreaModel,
-    time_model: &TimeModel,
+    platform: &PlatformSpec,
     citer: &CIterTable,
     opts: &SolveOpts,
 ) -> Option<TuneResult> {
-    let candidates = candidate_grid(pinned, budget_mm2, area_model);
+    let candidates = candidate_grid(pinned, budget_mm2, &platform.space, &platform.area_model());
+    let time_model = platform.time_model();
     let mut best: Option<TuneResult> = None;
     for c in &candidates {
-        let sol = solve_hardware_point(time_model, workload, citer, &c.hw, opts);
+        let sol = solve_hardware_point(&time_model, workload, citer, &c.hw, opts);
         if let (Some(seconds), Some(gflops)) = (sol.weighted_seconds, sol.weighted_gflops) {
             if best.as_ref().map_or(true, |b| gflops > b.gflops) {
                 best = Some(TuneResult {
@@ -116,6 +132,7 @@ pub fn tune(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::platform::registry::Platform;
     use crate::stencil::defs::StencilId;
 
     fn small_workload() -> Workload {
@@ -129,16 +146,16 @@ mod tests {
         })
     }
 
-    fn setup() -> (AreaModel, TimeModel, CIterTable, SolveOpts) {
-        (AreaModel::paper(), TimeModel::maxwell(), CIterTable::paper(), SolveOpts::default())
+    fn setup() -> (&'static PlatformSpec, CIterTable, SolveOpts) {
+        (Platform::default_spec(), CIterTable::paper(), SolveOpts::default())
     }
 
     #[test]
     fn fully_pinned_is_tile_selection_only() {
-        let (am, tm, ci, opts) = setup();
+        let (p, ci, opts) = setup();
         let wl = small_workload();
         let gtx = HwParams::gtx980();
-        let r = tune(&Pinned::all_of(&gtx), 1e9, &wl, &am, &tm, &ci, &opts).unwrap();
+        let r = tune(&Pinned::all_of(&gtx), 1e9, &wl, p, &ci, &opts).unwrap();
         assert_eq!(r.candidates, 1);
         assert_eq!(r.hw, gtx);
         assert!(r.gflops > 100.0);
@@ -147,7 +164,7 @@ mod tests {
     #[test]
     fn tuning_n_sm_with_rest_pinned() {
         // §V-D's example: n_V and memory sizes fixed, tune the SM count.
-        let (am, tm, ci, opts) = setup();
+        let (p, ci, opts) = setup();
         let wl = small_workload();
         let pinned = Pinned {
             n_sm: None,
@@ -155,7 +172,7 @@ mod tests {
             m_sm_kb: Some(96.0),
             caches: None,
         };
-        let r = tune(&pinned, 430.0, &wl, &am, &tm, &ci, &opts).unwrap();
+        let r = tune(&pinned, 430.0, &wl, p, &ci, &opts).unwrap();
         assert!(r.candidates > 5);
         assert_eq!(r.hw.n_v, 128);
         assert_eq!(r.hw.m_sm_kb, 96.0);
@@ -167,20 +184,21 @@ mod tests {
 
     #[test]
     fn wider_budget_never_worse() {
-        let (am, tm, ci, opts) = setup();
+        let (p, ci, opts) = setup();
         let wl = small_workload();
         let pinned = Pinned { n_v: Some(128), m_sm_kb: Some(96.0), ..Default::default() };
-        let lo = tune(&pinned, 300.0, &wl, &am, &tm, &ci, &opts).unwrap();
-        let hi = tune(&pinned, 500.0, &wl, &am, &tm, &ci, &opts).unwrap();
+        let lo = tune(&pinned, 300.0, &wl, p, &ci, &opts).unwrap();
+        let hi = tune(&pinned, 500.0, &wl, p, &ci, &opts).unwrap();
         assert!(hi.gflops >= lo.gflops);
     }
 
     #[test]
     fn candidate_grid_is_area_feasible_and_deterministic() {
         let am = AreaModel::paper();
+        let space = Platform::default_spec().space;
         let pinned = Pinned { n_v: Some(128), m_sm_kb: Some(96.0), ..Default::default() };
-        let a = candidate_grid(&pinned, 430.0, &am);
-        let b = candidate_grid(&pinned, 430.0, &am);
+        let a = candidate_grid(&pinned, 430.0, &space, &am);
+        let b = candidate_grid(&pinned, 430.0, &space, &am);
         assert!(!a.is_empty());
         assert!(a.iter().all(|c| c.area_mm2 <= 430.0));
         assert!(a.iter().all(|c| c.hw.n_v == 128 && c.hw.m_sm_kb == 96.0));
@@ -192,8 +210,19 @@ mod tests {
 
     #[test]
     fn impossible_budget_returns_none() {
-        let (am, tm, ci, opts) = setup();
+        let (p, ci, opts) = setup();
         let wl = small_workload();
-        assert!(tune(&Pinned::default(), 10.0, &wl, &am, &tm, &ci, &opts).is_none());
+        assert!(tune(&Pinned::default(), 10.0, &wl, p, &ci, &opts).is_none());
+    }
+
+    #[test]
+    fn grid_bounds_come_from_the_platform_space() {
+        // A platform with a tighter space must bound the tuner's search.
+        let am = AreaModel::paper();
+        let tight = SpaceSpec { n_sm_max: 8, n_v_max: 256, ..Platform::default_spec().space };
+        let pinned = Pinned { m_sm_kb: Some(96.0), ..Default::default() };
+        let grid = candidate_grid(&pinned, 1e9, &tight, &am);
+        assert!(!grid.is_empty());
+        assert!(grid.iter().all(|c| c.hw.n_sm <= 8 && c.hw.n_v <= 256));
     }
 }

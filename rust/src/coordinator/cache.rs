@@ -33,8 +33,16 @@ use std::sync::Mutex;
 /// Two differently-named stencils with identical characterization (e.g. a
 /// preset and an equivalent parametric spec) therefore share one memoized
 /// solution, and any parametric family member caches exactly like a preset.
+///
+/// The platform enters the same way: `platform_fp` is the
+/// [`PlatformSpec::fingerprint`](crate::platform::PlatformSpec::fingerprint)
+/// of the bundle the solution was computed under, so two differently-spelled
+/// but identically-valued platforms share memoized sweeps while any model
+/// delta (a tweaked clock or bandwidth) can never alias a cached solution.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct CacheKey {
+    /// Fingerprint of the platform bundle the inner problem was posed under.
+    pub platform_fp: u64,
     pub n_sm: u32,
     pub n_v: u32,
     pub m_sm_kb_bits: u64,
@@ -53,11 +61,18 @@ pub struct CacheKey {
 }
 
 impl CacheKey {
-    /// Build the key for one (hardware, stencil, size) instance. `stencil`
-    /// must be the stencil *as solved* — i.e. with the scenario's `C_iter`
-    /// table already applied — so the key pins the exact inner problem.
-    pub fn new(hw: &HwParams, stencil: &Stencil, size: &ProblemSize) -> CacheKey {
+    /// Build the key for one (platform, hardware, stencil, size) instance.
+    /// `stencil` must be the stencil *as solved* — i.e. with the scenario's
+    /// `C_iter` table already applied — so the key pins the exact inner
+    /// problem; `platform_fp` pins the model bundle it was solved under.
+    pub fn new(
+        platform_fp: u64,
+        hw: &HwParams,
+        stencil: &Stencil,
+        size: &ProblemSize,
+    ) -> CacheKey {
         CacheKey {
+            platform_fp,
             n_sm: hw.n_sm,
             n_v: hw.n_v,
             m_sm_kb_bits: hw.m_sm_kb.to_bits(),
@@ -230,8 +245,13 @@ mod tests {
     use crate::timemodel::talg::{SoftwareParams, TimeEstimate};
     use crate::timemodel::tiling::TileSizes;
 
+    fn fp() -> u64 {
+        crate::platform::registry::Platform::default_spec().fingerprint()
+    }
+
     fn key(n_v: u32) -> CacheKey {
         CacheKey::new(
+            fp(),
             &HwParams { n_v, ..HwParams::gtx980() },
             Stencil::get(crate::stencil::defs::StencilId::Jacobi2D),
             &ProblemSize::d2(1024, 256),
@@ -269,9 +289,23 @@ mod tests {
             StencilSpec::star(Dim::D2, 1).with_flops(4.0).with_c_iter(11.0).register(),
         );
         assert_ne!(jac.id, twin.id, "distinct identities");
-        assert_eq!(CacheKey::new(&hw, jac, &size), CacheKey::new(&hw, twin, &size));
+        assert_eq!(CacheKey::new(fp(), &hw, jac, &size), CacheKey::new(fp(), &hw, twin, &size));
         let r2 = Stencil::get(StencilSpec::star(Dim::D2, 2).register());
-        assert_ne!(CacheKey::new(&hw, jac, &size), CacheKey::new(&hw, r2, &size));
+        assert_ne!(CacheKey::new(fp(), &hw, jac, &size), CacheKey::new(fp(), &hw, r2, &size));
+    }
+
+    #[test]
+    fn key_separates_platforms_by_fingerprint() {
+        use crate::platform::spec::PlatformSpec;
+        let hw = HwParams::gtx980();
+        let size = ProblemSize::d2(1024, 256);
+        let jac = Stencil::get(crate::stencil::defs::StencilId::Jacobi2D);
+        // An identity override fingerprints like the preset: same key.
+        let same = PlatformSpec::parse("maxwell:clk1.2").unwrap().fingerprint();
+        assert_eq!(CacheKey::new(fp(), &hw, jac, &size), CacheKey::new(same, &hw, jac, &size));
+        // A bandwidth tweak is a different model: distinct key.
+        let tweaked = PlatformSpec::parse("maxwell:bw20").unwrap().fingerprint();
+        assert_ne!(CacheKey::new(fp(), &hw, jac, &size), CacheKey::new(tweaked, &hw, jac, &size));
     }
 
     #[test]

@@ -27,6 +27,8 @@ use crate::coordinator::cache::{CacheKey, MemoCache};
 use crate::opt::inner::InnerSolution;
 use crate::opt::problem::SolveOpts;
 use crate::opt::separable::{aggregate_weighted, solve_entry};
+use crate::platform::registry::Platform;
+use crate::platform::spec::{PlatformSpec, ReferenceHw};
 use crate::stencil::defs::Stencil;
 use crate::stencil::workload::WorkloadEntry;
 use crate::timemodel::citer::CIterTable;
@@ -79,10 +81,26 @@ struct SweepInstance {
     stencil: Stencil,
 }
 
-/// The long-lived coordinator: owns the models and the memo store.
+/// The long-lived coordinator: owns one hardware platform — the full model
+/// bundle — and the memo store populated under it.
 pub struct Coordinator {
-    pub area_model: AreaModel,
-    pub time_model: TimeModel,
+    /// The platform every sweep of this coordinator runs on: area/time
+    /// models and reference architectures come from here. Enumeration
+    /// bounds stay with each [`Scenario`]'s own `space` (seeded from the
+    /// platform when specs are materialized via
+    /// `ScenarioSpec::to_scenario`, but free to differ — e.g. tighter area
+    /// budgets). Private: `platform_fp` and the derived models are computed
+    /// once at construction, so mutation would silently desync the cache
+    /// keys — build a fresh coordinator for a different platform.
+    platform: PlatformSpec,
+    /// The platform's area model (derived once at construction; private for
+    /// the same desync reason as `platform`).
+    area_model: AreaModel,
+    /// The platform's time model (derived once at construction; private for
+    /// the same desync reason as `platform`).
+    time_model: TimeModel,
+    /// `platform.fingerprint()`, precomputed: every cache key carries it.
+    platform_fp: u64,
     pub cache: MemoCache,
     /// The (C_iter, solver options) pair the cache was populated under.
     /// `CacheKey` deliberately omits them (one sweep serves many scenarios),
@@ -99,16 +117,55 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    pub fn new(area_model: AreaModel, time_model: TimeModel) -> Coordinator {
+    /// Build a coordinator on one platform.
+    ///
+    /// Panics if the spec fails [`PlatformSpec::validate`] — registry-parsed
+    /// platforms are always valid; only a malformed hand-built spec (e.g.
+    /// no reference architectures, out-of-range clock) can reach this, and
+    /// failing at construction beats NaN results or a panic mid-request.
+    pub fn new(platform: PlatformSpec) -> Coordinator {
+        if let Err(e) = platform.validate() {
+            panic!("invalid PlatformSpec for Coordinator: {e}");
+        }
+        let area_model = platform.area_model();
+        let time_model = platform.time_model();
+        let platform_fp = platform.fingerprint();
         Coordinator {
+            platform,
             area_model,
             time_model,
+            platform_fp,
             cache: MemoCache::new(),
             solved_under: Mutex::new(None),
             batch_lock: Mutex::new(()),
             progress_every: usize::MAX,
             done: AtomicUsize::new(0),
         }
+    }
+
+    /// A coordinator on the default baseline (the paper's Maxwell platform).
+    pub fn paper() -> Coordinator {
+        Coordinator::new(Platform::default_spec().clone())
+    }
+
+    /// The platform this coordinator sweeps on.
+    pub fn platform(&self) -> &PlatformSpec {
+        &self.platform
+    }
+
+    /// The platform's area model, as derived at construction.
+    pub fn area_model(&self) -> AreaModel {
+        self.area_model
+    }
+
+    /// The platform's time model, as derived at construction.
+    pub fn time_model(&self) -> TimeModel {
+        self.time_model
+    }
+
+    /// The fingerprint this coordinator's cache keys carry.
+    pub fn platform_fingerprint(&self) -> u64 {
+        self.platform_fp
     }
 
     /// Print a progress line every `n` solved instances.
@@ -194,18 +251,18 @@ impl Coordinator {
             let chars = citer.characterize_workload(&sc.workload);
             for pt in space {
                 for (e, st) in sc.workload.entries.iter().zip(&chars) {
-                    if seen.insert(CacheKey::new(&pt.hw, st, &e.size)) {
+                    if seen.insert(CacheKey::new(self.platform_fp, &pt.hw, st, &e.size)) {
                         instances.push(SweepInstance { hw: pt.hw, entry: *e, stencil: *st });
                     }
                 }
             }
-            // The reference architectures are answered from the same sweep
-            // (the time model ignores their caches, so sharing `CacheKey`s
-            // with same-shaped cache-less grid points is exact).
-            for hw in [HwParams::gtx980(), HwParams::titanx()] {
+            // The platform's reference architectures are answered from the
+            // same sweep (the time model ignores their caches, so sharing
+            // `CacheKey`s with same-shaped cache-less grid points is exact).
+            for r in &self.platform.references {
                 for (e, st) in sc.workload.entries.iter().zip(&chars) {
-                    if seen.insert(CacheKey::new(&hw, st, &e.size)) {
-                        instances.push(SweepInstance { hw, entry: *e, stencil: *st });
+                    if seen.insert(CacheKey::new(self.platform_fp, &r.hw, st, &e.size)) {
+                        instances.push(SweepInstance { hw: r.hw, entry: *e, stencil: *st });
                     }
                 }
             }
@@ -218,7 +275,7 @@ impl Coordinator {
         let chunk = (unique_instances / (threads * 8).max(1)).clamp(1, 128);
         let opts = &scenarios[0].solve_opts;
         parallel_map_chunked(&instances, threads, chunk, |inst| {
-            let key = CacheKey::new(&inst.hw, &inst.stencil, &inst.entry.size);
+            let key = CacheKey::new(self.platform_fp, &inst.hw, &inst.stencil, &inst.entry.size);
             self.cache.get_or_compute(key, || {
                 solve_entry(&self.time_model, citer, &inst.hw, &inst.entry, opts)
             });
@@ -268,7 +325,7 @@ impl Coordinator {
                 .iter()
                 .zip(&chars)
                 .map(|(e, st)| {
-                    let key = CacheKey::new(&pt.hw, st, &e.size);
+                    let key = CacheKey::new(self.platform_fp, &pt.hw, st, &e.size);
                     self.cache
                         .get(&key)
                         .expect("batch sweep must populate every (hw, entry) instance")
@@ -292,21 +349,23 @@ impl Coordinator {
         let pareto = front.indices();
         let xy: Vec<(f64, f64)> = points.iter().map(|p| (p.area_mm2, p.gflops)).collect();
 
-        let references = vec![
-            self.reference_from_cache("gtx980", HwParams::gtx980(), 398.0, scenario),
-            self.reference_from_cache("titanx", HwParams::titanx(), 601.0, scenario),
-        ];
+        let references: Vec<RefEval> = self
+            .platform
+            .references
+            .iter()
+            .map(|r| self.reference_from_cache(r, scenario))
+            .collect();
         let vs_reference = references
             .iter()
             .map(|r| {
                 let best = crate::codesign::pareto::best_within_area(&xy, r.area_mm2);
                 match best {
                     Some(i) => (
-                        r.name.to_string(),
+                        r.name.clone(),
                         100.0 * (points[i].gflops / r.gflops - 1.0),
                         points[i].hw,
                     ),
-                    None => (r.name.to_string(), f64::NAN, r.hw),
+                    None => (r.name.clone(), f64::NAN, r.hw),
                 }
             })
             .collect();
@@ -325,13 +384,7 @@ impl Coordinator {
     /// Evaluate one reference (stock) architecture from the shared sweep —
     /// same solutions and the same aggregation order as
     /// `codesign::scenario::evaluate_reference`, without re-solving anything.
-    fn reference_from_cache(
-        &self,
-        name: &'static str,
-        hw: HwParams,
-        published_area_mm2: f64,
-        scenario: &Scenario,
-    ) -> RefEval {
+    fn reference_from_cache(&self, reference: &ReferenceHw, scenario: &Scenario) -> RefEval {
         let chars = scenario.citer.characterize_workload(&scenario.workload);
         let per_entry: Vec<Option<InnerSolution>> = scenario
             .workload
@@ -339,7 +392,7 @@ impl Coordinator {
             .iter()
             .zip(&chars)
             .map(|(e, st)| {
-                let key = CacheKey::new(&hw, st, &e.size);
+                let key = CacheKey::new(self.platform_fp, &reference.hw, st, &e.size);
                 self.cache
                     .get(&key)
                     .expect("batch sweep must cover the reference architectures")
@@ -348,10 +401,10 @@ impl Coordinator {
         let (seconds, gflops) = aggregate_weighted(&scenario.workload, &per_entry)
             .expect("reference must be feasible");
         RefEval {
-            name,
-            hw,
-            area_mm2: self.area_model.area_mm2(&hw),
-            published_area_mm2,
+            name: reference.name.clone(),
+            hw: reference.hw,
+            area_mm2: self.area_model.area_mm2(&reference.hw),
+            published_area_mm2: reference.published_area_mm2,
             gflops,
             seconds,
             per_entry,
@@ -372,9 +425,9 @@ mod tests {
     #[test]
     fn coordinator_matches_direct_scenario_run() {
         let sc = quick();
-        let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+        let coord = Coordinator::paper();
         let rep = coord.run_scenario(&sc);
-        let direct = scenario::run(&sc, &AreaModel::paper(), &TimeModel::maxwell());
+        let direct = scenario::run(&sc, Platform::default_spec());
         assert_eq!(rep.result.points.len(), direct.points.len());
         for (a, b) in rep.result.points.iter().zip(&direct.points) {
             assert_eq!(a.hw, b.hw);
@@ -386,7 +439,7 @@ mod tests {
     #[test]
     fn second_run_is_all_hits_and_much_faster() {
         let sc = quick();
-        let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+        let coord = Coordinator::paper();
         let first = coord.run_scenario(&sc);
         let entries_after_first = coord.cache.len();
 
@@ -413,10 +466,10 @@ mod tests {
     #[test]
     fn batch_of_one_equals_run_scenario() {
         let sc = quick();
-        let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+        let coord = Coordinator::paper();
         let batch = coord.run_batch(std::slice::from_ref(&sc));
         assert_eq!(batch.len(), 1);
-        let coord2 = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+        let coord2 = Coordinator::paper();
         let single = coord2.run_scenario(&sc).result;
         assert_eq!(batch[0].points.len(), single.points.len());
         assert_eq!(batch[0].pareto, single.pareto);
@@ -427,7 +480,7 @@ mod tests {
 
     #[test]
     fn empty_batch_is_empty() {
-        let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+        let coord = Coordinator::paper();
         let rep = coord.run_batch_report(&[]);
         assert!(rep.reports.is_empty());
         assert_eq!(rep.unique_instances, 0);
@@ -441,7 +494,31 @@ mod tests {
         let a = quick();
         let mut b = quick();
         b.citer = CIterTable::with_measured(&[(StencilId::Jacobi2D, 99.0)]);
-        let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+        let coord = Coordinator::paper();
         coord.run_batch(&[a, b]);
+    }
+
+    #[test]
+    fn distinct_platform_coordinators_never_share_instances() {
+        // Same scenario, bandwidth-tweaked platform: the tweaked sweep must
+        // re-solve everything (different fingerprint ⇒ disjoint keys) and
+        // land on different objective values.
+        let sc = quick();
+        let base = Coordinator::paper();
+        let tweaked = Coordinator::new(
+            crate::platform::spec::PlatformSpec::parse("maxwell:bw7").unwrap(),
+        );
+        assert_ne!(base.platform_fingerprint(), tweaked.platform_fingerprint());
+        let a = base.run_scenario(&sc);
+        let b = tweaked.run_scenario(&sc);
+        assert_eq!(a.result.points.len(), b.result.points.len(), "same enumeration grid");
+        let moved = a
+            .result
+            .points
+            .iter()
+            .zip(&b.result.points)
+            .filter(|(x, y)| x.gflops.to_bits() != y.gflops.to_bits())
+            .count();
+        assert!(moved > 0, "halved bandwidth must move some objective values");
     }
 }

@@ -15,15 +15,19 @@
 //! # Examples
 //!
 //! ```no_run
-//! use codesign::area::AreaModel;
 //! use codesign::codesign::scenario::Scenario;
 //! use codesign::coordinator::Coordinator;
-//! use codesign::timemodel::TimeModel;
+//! use codesign::platform::PlatformSpec;
 //!
-//! let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+//! // The default baseline…
+//! let coord = Coordinator::paper();
 //! let batch = coord.run_batch(&[Scenario::paper_2d(), Scenario::paper_3d()]);
 //! // A repeated batch over the same grids is ~100% cache hits.
 //! assert_eq!(batch.len(), 2);
+//!
+//! // …or any platform: memo-cache keys carry the platform fingerprint, so
+//! // a bandwidth-tweaked coordinator can never alias the baseline's cache.
+//! let hbm = Coordinator::new(PlatformSpec::parse("maxwell:bw28").unwrap());
 //! ```
 
 pub mod cache;

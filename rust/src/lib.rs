@@ -22,12 +22,16 @@
 //!   service ([`service`]) — the typed request API everything public
 //!   routes through.
 //!
-//! ## Workloads beyond the paper
+//! ## Workloads and platforms beyond the paper
 //!
 //! The six paper kernels are presets of a parametric stencil-family
 //! subsystem ([`stencil::spec`]): any star/box stencil of radius 1–8 in
 //! 2-D/3-D is a first-class workload, addressed by names like `star3d:r2`
-//! everywhere a stencil name is accepted (CLI, wire schema v2, workloads).
+//! everywhere a stencil name is accepted (CLI, wire, workloads). The
+//! hardware baseline is parametric the same way ([`platform`]): presets
+//! `maxwell` / `maxwell+` / `maxwell-nocache` plus an override grammar
+//! (`maxwell:bw20:clk1.4`) open clocks, bandwidth, latency constants and
+//! grid bounds as scenario dimensions (CLI `--platform`, wire schema v3).
 //!
 //! See `DESIGN.md` (repo root) for the system inventory, the batched DSE
 //! engine's contract, the stencil characterization math, and the
@@ -38,6 +42,7 @@ pub mod cacti;
 pub mod codesign;
 pub mod coordinator;
 pub mod opt;
+pub mod platform;
 pub mod report;
 pub mod runtime;
 pub mod service;

@@ -9,7 +9,7 @@
 //! Subcommands map onto the experiments of DESIGN.md §6; `report --all`
 //! regenerates every paper table/figure under `reports/`.
 
-use codesign::area::AreaModel;
+use codesign::platform::{Platform, DEFAULT_PLATFORM};
 use codesign::report;
 use codesign::runtime::{measure_citer, Engine};
 use codesign::service::{
@@ -17,7 +17,7 @@ use codesign::service::{
     SubmitReport, TuneRequest, WorkloadClass,
 };
 use codesign::stencil::defs::ALL_STENCILS;
-use codesign::timemodel::{CIterTable, TimeModel};
+use codesign::timemodel::CIterTable;
 use codesign::util::cli::{Args, Cli, Command, OptSpec, Parsed};
 use codesign::util::json::Json;
 use std::path::Path;
@@ -27,6 +27,12 @@ fn cli() -> Cli {
     let quick =
         OptSpec { name: "quick", takes_value: false, default: None, help: "reduced space/workload" };
     let threads = OptSpec { name: "threads", takes_value: true, default: None, help: "worker threads" };
+    let platform = OptSpec {
+        name: "platform",
+        takes_value: true,
+        default: None,
+        help: "hardware baseline: preset (maxwell, maxwell+, maxwell-nocache) or override name (maxwell:bw20:clk1.4)",
+    };
     Cli {
         bin: "codesign",
         about: "Accelerator codesign as non-linear optimization — paper reproduction",
@@ -43,6 +49,7 @@ fn cli() -> Cli {
                     out.clone(),
                     quick.clone(),
                     threads.clone(),
+                    platform.clone(),
                     OptSpec { name: "class", takes_value: true, default: Some("both"), help: "2d | 3d | both | <stencil>" },
                     OptSpec { name: "stencil", takes_value: true, default: None, help: "single stencil: preset (jacobi2d) or family (star3d:r2)" },
                     OptSpec { name: "measured-citer", takes_value: false, default: None, help: "use PJRT-measured C_iter" },
@@ -51,7 +58,7 @@ fn cli() -> Cli {
             Command {
                 name: "sensitivity",
                 about: "E6: per-benchmark optimal architectures (Table II)",
-                opts: vec![out.clone(), quick.clone(), threads.clone()],
+                opts: vec![out.clone(), quick.clone(), threads.clone(), platform.clone()],
             },
             Command {
                 name: "solver-cost",
@@ -81,6 +88,7 @@ fn cli() -> Cli {
                 about: "§V-D: pin a subset of {n-sm, n-v, m-sm} and optimize the rest under a budget",
                 opts: vec![
                     threads.clone(),
+                    platform.clone(),
                     OptSpec { name: "budget", takes_value: true, default: Some("450"), help: "area budget, mm²" },
                     OptSpec { name: "n-sm", takes_value: true, default: None, help: "pin the SM count" },
                     OptSpec { name: "n-v", takes_value: true, default: None, help: "pin vector units per SM" },
@@ -95,13 +103,15 @@ fn cli() -> Cli {
                     out.clone(),
                     quick.clone(),
                     threads,
+                    platform.clone(),
                     OptSpec { name: "all", takes_value: false, default: None, help: "all experiments" },
                 ],
             },
             Command {
                 name: "serve",
-                about: "answer a JSON request file through one warm session (wire schema v2; v1 accepted)",
+                about: "answer a JSON request file through one warm session (wire schema v3; v1/v2 accepted)",
                 opts: vec![
+                    platform,
                     OptSpec { name: "requests", takes_value: true, default: None, help: "request file path (required)" },
                     OptSpec { name: "out", takes_value: true, default: Some("-"), help: "response file path ('-' = stdout)" },
                     OptSpec { name: "pretty", takes_value: false, default: None, help: "indent the response JSON" },
@@ -141,6 +151,22 @@ fn spec_from_args(spec: ScenarioSpec, args: &Args, citer: &CIterTable) -> Scenar
     spec
 }
 
+/// The platform a request's work is attributed to in bench stats: the
+/// request's own `platform` field, else the serving session's default. A
+/// Sensitivity request whose two scenarios name different platforms is
+/// attributed to the combined " & "-joined label (its evals span both
+/// sweeps; '+' would be ambiguous — it is valid inside platform names).
+fn request_platform_name(req: &CodesignRequest, default_name: &str) -> String {
+    let (first, second) = req.platforms();
+    let a = first.map(|i| i.name()).unwrap_or(default_name);
+    let b = second.map(|i| i.name()).unwrap_or(default_name);
+    if matches!(req, CodesignRequest::Sensitivity { .. }) && a != b {
+        format!("{a} & {b}")
+    } else {
+        a.to_string()
+    }
+}
+
 fn session_stats_line(session: &Session, rep: &SubmitReport) {
     eprintln!(
         "[service] {} request(s) answered in {:?}: {} unique instances swept, \
@@ -158,8 +184,13 @@ fn session_stats_line(session: &Session, rep: &SubmitReport) {
 fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
     let out = args.opt_or("out", "reports");
     let out = Path::new(&out);
-    let area_model = AreaModel::paper();
-    let time_model = TimeModel::maxwell();
+    // `--platform` selects the session's hardware baseline; commands without
+    // the option (and omissions) run on the default platform. Parsing may
+    // register a new override-derived platform as a side effect.
+    let platform = match args.opt("platform") {
+        Some(name) => Platform::by_name_err(name).map_err(|msg| anyhow::anyhow!("{msg}"))?,
+        None => Platform::get(DEFAULT_PLATFORM),
+    };
     match cmd {
         "calibrate" => {
             let rep = report::fig2::generate_default();
@@ -232,17 +263,17 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 });
             }
 
-            let mut session = Session::new(area_model, time_model).with_progress(500);
+            let mut session = Session::new(platform.spec.clone()).with_progress(500);
             let rep = session.submit_all(&requests);
             session_stats_line(&session, &rep);
             for answer in &rep.answers {
                 match (&answer.response, &answer.detail) {
                     (CodesignResponse::Explore(_), ResponseDetail::Scenarios(details)) => {
                         for d in details {
-                            let fig3 = report::fig3::generate(&d.result, &area_model);
+                            let fig3 = report::fig3::generate(&d.result, &d.platform.area_model());
                             print!("{}", fig3.summary);
                             fig3.save(out)?;
-                            let fig4 = report::fig4::generate(&d.result, &area_model);
+                            let fig4 = report::fig4::generate(&d.result, &d.platform.area_model());
                             print!("{}", fig4.summary);
                             fig4.save(out)?;
                         }
@@ -256,7 +287,7 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
                             &d2.scenario.workload,
                             &d3.result,
                             &d3.scenario.workload,
-                            &time_model,
+                            &d2.platform,
                             &d2.scenario.citer,
                             (425.0, 450.0),
                         );
@@ -280,7 +311,7 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
             }
         }
         "solver-cost" => {
-            let mut session = Session::new(area_model, time_model);
+            let mut session = Session::new(platform.spec.clone());
             let answer = session.submit(&CodesignRequest::solver_cost(50_000));
             match (&answer.response, &answer.detail) {
                 (CodesignResponse::SolverCost(_), ResponseDetail::Report(r)) => {
@@ -291,7 +322,7 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
             }
         }
         "validate" => {
-            let mut session = Session::new(area_model, time_model);
+            let mut session = Session::new(platform.spec.clone());
             let answer = session.submit(&CodesignRequest::validate());
             let (CodesignResponse::Validate(v), ResponseDetail::Validation(full)) =
                 (&answer.response, &answer.detail)
@@ -361,7 +392,7 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
                     .map_err(|msg| anyhow::anyhow!("{msg}"))?;
                 req.stencil = Some(st.id);
             }
-            let mut session = Session::new(area_model, time_model);
+            let mut session = Session::new(platform.spec.clone());
             let answer = session.submit(&CodesignRequest::Tune(req));
             let CodesignResponse::Tune(t) = &answer.response else {
                 anyhow::bail!("unexpected response '{}'", answer.response.kind());
@@ -385,7 +416,7 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
             let text = std::fs::read_to_string(path)
                 .map_err(|e| anyhow::anyhow!("cannot read '{path}': {e}"))?;
             let requests = wire::decode_requests(&text)?;
-            let mut session = Session::new(area_model, time_model);
+            let mut session = Session::new(platform.spec.clone());
             let rep = session.submit_all(&requests);
             session_stats_line(&session, &rep);
             let mut failed = 0usize;
@@ -413,6 +444,31 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
             if let Some(bench_path) = args.opt("bench-out") {
                 let total_evals: u64 =
                     responses.iter().map(CodesignResponse::total_evals).sum();
+                // Per-platform entries so the perf trajectory distinguishes
+                // baselines: requests and model evaluations attributed to
+                // the platform each request ran on.
+                let mut per: Vec<(String, u64, u64)> = Vec::new();
+                for (req, resp) in requests.iter().zip(&responses) {
+                    let name = request_platform_name(req, platform.name);
+                    match per.iter_mut().find(|(n, _, _)| *n == name) {
+                        Some(e) => {
+                            e.1 += 1;
+                            e.2 += resp.total_evals();
+                        }
+                        None => per.push((name, 1, resp.total_evals())),
+                    }
+                }
+                let platforms = Json::Arr(
+                    per.into_iter()
+                        .map(|(name, reqs, evals)| {
+                            Json::obj(vec![
+                                ("platform", Json::str(&name)),
+                                ("requests", Json::num(reqs as f64)),
+                                ("total_evals", Json::num(evals as f64)),
+                            ])
+                        })
+                        .collect(),
+                );
                 let bench = Json::obj(vec![
                     ("requests", Json::num(requests.len() as f64)),
                     ("wall_ms", Json::num(rep.wall.as_secs_f64() * 1e3)),
@@ -420,6 +476,8 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
                     ("lookups", Json::num(rep.lookups() as f64)),
                     ("unique_instances", Json::num(rep.unique_instances as f64)),
                     ("total_evals", Json::num(total_evals as f64)),
+                    ("default_platform", Json::str(platform.name)),
+                    ("platforms", platforms),
                 ]);
                 std::fs::write(bench_path, bench.to_string_pretty())?;
                 eprintln!("wrote {bench_path}");

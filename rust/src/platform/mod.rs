@@ -1,0 +1,31 @@
+//! First-class hardware baselines — the hardware half of the parametric
+//! scenario space.
+//!
+//! PR 3 made the *software* side of the codesign problem an open, parametric
+//! API (stencil families); this module does the same for the *hardware*
+//! baseline. A [`PlatformSpec`] bundles everything the model stack used to
+//! pull from scattered `maxwell()`/`paper()` constructors — machine
+//! constants, area and power coefficients, enumeration bounds, reference
+//! architectures — behind a registry-backed [`PlatformId`] with preset
+//! constants (`maxwell`, `maxwell+`, `maxwell-nocache`) and a canonical
+//! override grammar (`maxwell:bw20:clk1.4:sm48`) that round-trips
+//! bit-exactly.
+//!
+//! Consumers:
+//!
+//! * [`Coordinator`](crate::coordinator::Coordinator) — constructed from a
+//!   `PlatformSpec`; its memo-cache keys carry the platform
+//!   [fingerprint](PlatformSpec::fingerprint) so distinct platforms never
+//!   alias and identical ones share sweeps;
+//! * [`Session`](crate::service::Session) — auto-partitions submissions per
+//!   (platform fingerprint, C_iter, solver options);
+//! * the wire format (schema v3) — `ScenarioSpec`/`TuneRequest` carry an
+//!   optional `platform` name (older files decode and resolve to
+//!   [`DEFAULT_PLATFORM`]);
+//! * the CLI — `--platform <name>` on `explore`/`tune`/`serve`/`report`.
+
+pub mod registry;
+pub mod spec;
+
+pub use registry::{unknown_platform_msg, Platform, PlatformId, DEFAULT_PLATFORM};
+pub use spec::{PlatformSpec, ReferenceHw};

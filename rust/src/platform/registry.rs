@@ -1,0 +1,395 @@
+//! The platform registry: preset baselines plus any number of registered
+//! override-derived variants (see [`crate::platform::spec`]).
+//!
+//! Three presets ship:
+//!
+//! * **`maxwell`** — the paper's baseline, bit-identical to the historical
+//!   construction sites (`MachineSpec::maxwell()`, `AreaCoeffs::paper()`,
+//!   `PowerModel::maxwell()`, `SpaceSpec::paper()`, GTX 980 / Titan X
+//!   references at their published die areas). This is also the **default
+//!   baseline** every fallback in the codebase routes through — see
+//!   [`DEFAULT_PLATFORM`], the one line that defines it.
+//! * **`maxwell+`** — a bandwidth-scaled generation step: 2× per-SM off-chip
+//!   bandwidth (28 GB/s — the HBM-class jump Pascal/Volta took) at a
+//!   1.4 GHz clock, same silicon pricing. The knob the related work
+//!   (*Analytical Cost Metrics*, *Stencil Computations on AMD and Nvidia
+//!   GPUs*) identifies as the generation-to-generation mover for stencils.
+//! * **`maxwell-nocache`** — the §V-A cache-deletion baseline as a platform:
+//!   identical models, but the reference architectures are the
+//!   cache-stripped GTX 980 / Titan X at their *modelled* reduced areas, so
+//!   improvement statistics answer "vs the same silicon minus its caches".
+//!
+//! A [`PlatformId`] is a small copyable handle into the registry, mirroring
+//! [`StencilId`](crate::stencil::defs::StencilId): ids `0..3` are the
+//! presets, higher ids are interned override-derived specs.
+//! [`Platform::by_name`] resolves preset names *and* parses override names
+//! like `maxwell:bw20:clk1.4`, registering them on first sight.
+
+use crate::area::model::{AreaCoeffs, AreaModel};
+use crate::area::params::HwParams;
+use crate::codesign::power::PowerModel;
+use crate::codesign::space::SpaceSpec;
+use crate::platform::spec::{PlatformSpec, ReferenceHw};
+use crate::timemodel::machine::MachineSpec;
+use std::collections::HashMap;
+use std::sync::{OnceLock, RwLock};
+
+/// **The** default hardware baseline. Every fallback that needs "a platform"
+/// without being told one — `Session::paper()`, `Coordinator::paper()`, the
+/// CLI without `--platform`, wire files without a `platform` field, the
+/// simulator validation sweep — resolves through this single constant.
+pub const DEFAULT_PLATFORM: PlatformId = PlatformId::Maxwell;
+
+/// Identity of a registered platform: presets `0..3`, then interned
+/// override-derived specs in registration order.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PlatformId(u16);
+
+#[allow(non_upper_case_globals)] // named like the StencilId preset constants
+impl PlatformId {
+    pub const Maxwell: PlatformId = PlatformId(0);
+    pub const MaxwellPlus: PlatformId = PlatformId(1);
+    pub const MaxwellNoCache: PlatformId = PlatformId(2);
+
+    pub fn name(&self) -> &'static str {
+        Platform::get(*self).name
+    }
+
+    /// Resolve a preset name or parse-and-register an override name.
+    pub fn from_name(name: &str) -> Option<PlatformId> {
+        Platform::by_name(name).map(|p| p.id)
+    }
+}
+
+impl std::fmt::Debug for PlatformId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One registered platform: id, canonical name, and the spec itself.
+#[derive(Debug)]
+pub struct Platform {
+    pub id: PlatformId,
+    /// Registry name (`maxwell`, `maxwell:bw20:clk1.4`, …).
+    pub name: &'static str,
+    pub spec: PlatformSpec,
+}
+
+impl Platform {
+    /// Look up a platform by id.
+    pub fn get(id: PlatformId) -> &'static Platform {
+        registry().read().unwrap().defs[id.0 as usize]
+    }
+
+    /// The default baseline's spec (see [`DEFAULT_PLATFORM`]).
+    pub fn default_spec() -> &'static PlatformSpec {
+        &Platform::get(DEFAULT_PLATFORM).spec
+    }
+
+    /// Look up by preset name or by override name (`maxwell:bw20`, …),
+    /// registering parsed specs on first sight.
+    pub fn by_name(name: &str) -> Option<&'static Platform> {
+        Platform::by_name_err(name).ok()
+    }
+
+    /// [`Platform::by_name`] with a diagnosable error: unknown names report
+    /// the registered presets and the override grammar instead of a bare
+    /// rejection.
+    pub fn by_name_err(name: &str) -> Result<&'static Platform, String> {
+        // Copy the id out before the read guard drops: `Platform::get`
+        // re-locks, and a nested read while a writer queues can deadlock.
+        let registered = registry().read().unwrap().by_name.get(name).copied();
+        if let Some(id) = registered {
+            return Ok(Platform::get(id));
+        }
+        match PlatformSpec::parse(name) {
+            Ok(spec) => register_named(&spec).map(Platform::get),
+            Err(reason) => Err(unknown_platform_msg(name, &reason)),
+        }
+    }
+
+    /// The preset (colon-free, registry-seeded) platform of this name, if
+    /// any — the override grammar's valid heads.
+    pub(crate) fn preset_by_name(name: &str) -> Option<&'static Platform> {
+        let reg = registry().read().unwrap();
+        let id = *reg.by_name.get(name)?;
+        if (id.0 as usize) < PRESET_COUNT {
+            let p = reg.defs[id.0 as usize];
+            Some(p)
+        } else {
+            None
+        }
+    }
+
+    /// The preset names, in id order.
+    pub fn preset_names() -> Vec<&'static str> {
+        let reg = registry().read().unwrap();
+        reg.defs[..PRESET_COUNT].iter().map(|p| p.name).collect()
+    }
+}
+
+/// The "unknown platform" diagnostic: what failed, the registered presets,
+/// and the override grammar.
+pub fn unknown_platform_msg(name: &str, reason: &str) -> String {
+    format!(
+        "unknown platform '{name}' ({reason}); presets: {}; or a preset with ':<key><value>' \
+         overrides — clk (GHz), bw (GB/s per SM), lam (latency factor), lexp (shm latency \
+         exponent), sync (cycles), shmref (kB), sm (n_SM max), v (n_V max), msm (M_SM max kB), \
+         area (mm² budget), rvu (kB per vector unit) (e.g. maxwell:bw20:clk1.4:sm48)",
+        Platform::preset_names().join(", ")
+    )
+}
+
+const PRESET_COUNT: usize = 3;
+
+struct Registry {
+    /// All definitions; `PlatformId(i)` indexes `defs[i]`. Entries are
+    /// leaked so `Platform::get` can keep returning `&'static`.
+    defs: Vec<&'static Platform>,
+    /// Canonical names only, presets included (non-canonical spellings
+    /// re-parse per lookup rather than growing this map).
+    by_name: HashMap<String, PlatformId>,
+}
+
+/// The `maxwell` preset: the paper's calibrated stack, pinned bit-identical
+/// to the historical per-model constructors (certified by
+/// `integration_platform.rs`).
+fn maxwell_spec() -> PlatformSpec {
+    PlatformSpec {
+        base: "maxwell".to_string(),
+        machine: MachineSpec::maxwell(),
+        area: AreaCoeffs::paper(),
+        power: PowerModel::maxwell(),
+        space: SpaceSpec::paper(),
+        references: vec![
+            ReferenceHw::new("gtx980", HwParams::gtx980(), 398.0),
+            ReferenceHw::new("titanx", HwParams::titanx(), 601.0),
+        ],
+    }
+}
+
+fn maxwell_plus_spec() -> PlatformSpec {
+    let mut p = maxwell_spec();
+    p.base = "maxwell+".to_string();
+    p.machine.mem_bw_per_sm_gbs = 28.0;
+    p.machine.clock_ghz = 1.4;
+    p
+}
+
+fn maxwell_nocache_spec() -> PlatformSpec {
+    let mut p = maxwell_spec();
+    p.base = "maxwell-nocache".to_string();
+    let am = AreaModel::new(p.area);
+    for r in &mut p.references {
+        r.hw = r.hw.without_caches();
+        r.published_area_mm2 = am.area_mm2(&r.hw);
+    }
+    p
+}
+
+fn registry() -> &'static RwLock<Registry> {
+    static REGISTRY: OnceLock<RwLock<Registry>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        let presets = [
+            (PlatformId::Maxwell, maxwell_spec()),
+            (PlatformId::MaxwellPlus, maxwell_plus_spec()),
+            (PlatformId::MaxwellNoCache, maxwell_nocache_spec()),
+        ];
+        debug_assert_eq!(presets.len(), PRESET_COUNT);
+        let mut defs: Vec<&'static Platform> = Vec::new();
+        let mut by_name = HashMap::new();
+        for (id, spec) in presets {
+            let name: &'static str = Box::leak(spec.base.clone().into_boxed_str());
+            by_name.insert(spec.base.clone(), id);
+            defs.push(Box::leak(Box::new(Platform { id, name, spec })));
+        }
+        RwLock::new(Registry { defs, by_name })
+    })
+}
+
+/// Intern a spec under its canonical name (idempotent). Called via
+/// [`PlatformSpec::register`].
+pub(crate) fn register_spec(spec: &PlatformSpec) -> PlatformId {
+    register_named(spec).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Intern a spec under its canonical name only — non-canonical spellings
+/// are *not* cached as aliases (they re-parse on each lookup, which is
+/// cheap), so the leaked registry stays bounded by the u16 id space of
+/// distinct canonical definitions even under untrusted wire input
+/// (`platform` fields → `by_name_err`); a full registry is a clean error,
+/// not a panic.
+fn register_named(spec: &PlatformSpec) -> Result<PlatformId, String> {
+    if let Err(e) = spec.validate() {
+        return Err(format!("invalid PlatformSpec: {e}"));
+    }
+    let canonical = spec.canonical_name();
+    // A grammar-expressible name must mean exactly what the grammar says:
+    // the canonical name only encodes grammar-covered deltas, so a
+    // hand-built spec that also differs in other fields (area/power
+    // coefficients, references, fixed machine limits) may neither collapse
+    // onto an existing entry nor squat on a name future parses would
+    // define differently. Computed before the write lock — parsing takes
+    // the registry's read lock.
+    let grammar_fp = PlatformSpec::parse(&canonical).ok().map(|s| s.fingerprint());
+    if let Some(fp) = grammar_fp {
+        if fp != spec.fingerprint() {
+            return Err(format!(
+                "platform '{canonical}' carries values the override grammar cannot express \
+                 under that name; deltas outside the grammar cannot be interned — derive \
+                 from a distinct preset or change a grammar-covered field"
+            ));
+        }
+    }
+    let mut reg = registry().write().unwrap();
+    let id = match reg.by_name.get(&canonical) {
+        Some(&id) => {
+            // Defense in depth for non-grammar names (custom bases): never
+            // serve an entry whose values differ from the spec being
+            // registered under the same spelling.
+            if reg.defs[id.0 as usize].spec.fingerprint() != spec.fingerprint() {
+                return Err(format!(
+                    "platform '{canonical}' is already registered with different values"
+                ));
+            }
+            id
+        }
+        None => {
+            let index = reg.defs.len();
+            if index >= u16::MAX as usize {
+                return Err(format!(
+                    "platform registry full ({index} registered); refusing '{canonical}'"
+                ));
+            }
+            let id = PlatformId(index as u16);
+            let name: &'static str = Box::leak(canonical.clone().into_boxed_str());
+            reg.defs.push(Box::leak(Box::new(Platform { id, name, spec: spec.clone() })));
+            reg.by_name.insert(canonical, id);
+            id
+        }
+    };
+    Ok(id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_by_id_and_name() {
+        for (id, name) in [
+            (PlatformId::Maxwell, "maxwell"),
+            (PlatformId::MaxwellPlus, "maxwell+"),
+            (PlatformId::MaxwellNoCache, "maxwell-nocache"),
+        ] {
+            assert_eq!(Platform::get(id).name, name);
+            assert_eq!(id.name(), name);
+            assert_eq!(Platform::by_name(name).unwrap().id, id);
+            assert_eq!(PlatformId::from_name(name), Some(id));
+            assert_eq!(format!("{id:?}"), name);
+        }
+        assert_eq!(Platform::preset_names(), vec!["maxwell", "maxwell+", "maxwell-nocache"]);
+    }
+
+    #[test]
+    fn maxwell_preset_is_bit_identical_to_the_historical_constants() {
+        let m = Platform::default_spec();
+        assert_eq!(m.machine, MachineSpec::maxwell());
+        assert_eq!(m.area, AreaCoeffs::paper());
+        assert_eq!(m.power, PowerModel::maxwell());
+        assert_eq!(m.space, SpaceSpec::paper());
+        assert_eq!(m.references.len(), 2);
+        assert_eq!(m.references[0].name, "gtx980");
+        assert_eq!(m.references[0].hw, HwParams::gtx980());
+        assert_eq!(m.references[0].published_area_mm2, 398.0);
+        assert_eq!(m.references[1].name, "titanx");
+        assert_eq!(m.references[1].hw, HwParams::titanx());
+        assert_eq!(m.references[1].published_area_mm2, 601.0);
+    }
+
+    #[test]
+    fn derived_presets_differ_in_the_advertised_way() {
+        let m = Platform::default_spec();
+        let plus = &Platform::get(PlatformId::MaxwellPlus).spec;
+        assert_eq!(plus.machine.mem_bw_per_sm_gbs, 2.0 * m.machine.mem_bw_per_sm_gbs);
+        assert!(plus.machine.clock_ghz > m.machine.clock_ghz);
+        assert_eq!(plus.area, m.area, "same silicon pricing");
+
+        let nc = &Platform::get(PlatformId::MaxwellNoCache).spec;
+        assert_eq!(nc.machine, m.machine, "same time model");
+        for (r, mr) in nc.references.iter().zip(&m.references) {
+            assert_eq!(r.hw.l1_smpair_kb, 0.0);
+            assert_eq!(r.hw.l2_kb, 0.0);
+            assert_eq!(r.hw.n_sm, mr.hw.n_sm);
+            assert!(
+                r.published_area_mm2 < mr.published_area_mm2,
+                "cache-stripped reference must be smaller"
+            );
+        }
+    }
+
+    #[test]
+    fn by_name_registers_override_variants_and_interns() {
+        let a = Platform::by_name_err("maxwell:bw20:clk1.4").expect("override name must parse");
+        assert_eq!(a.spec.machine.mem_bw_per_sm_gbs, 20.0);
+        assert_eq!(a.spec.machine.clock_ghz, 1.4);
+        let b = Platform::by_name("maxwell:bw20:clk1.4").unwrap();
+        assert_eq!(a.id, b.id, "interned: same id on re-lookup");
+        // The canonical spelling resolves to the same entry too.
+        let canon = a.spec.canonical_name();
+        assert_eq!(Platform::by_name(&canon).unwrap().id, a.id);
+    }
+
+    #[test]
+    fn unknown_names_list_presets_and_grammar() {
+        let err = Platform::by_name_err("kepler").unwrap_err();
+        for needle in
+            ["kepler", "maxwell", "maxwell+", "maxwell-nocache", "clk (GHz)", "bw (GB/s per SM)"]
+        {
+            assert!(err.contains(needle), "'{err}' should mention '{needle}'");
+        }
+        // A near-miss override name reports the specific parse failure too.
+        let err = Platform::by_name_err("maxwell:clk99").unwrap_err();
+        assert!(err.contains("clk out of range"), "{err}");
+        let err = Platform::by_name_err("maxwell:bwfast").unwrap_err();
+        assert!(err.contains("missing a value"), "{err}");
+        let err = Platform::by_name_err("maxwell:bw1x").unwrap_err();
+        assert!(err.contains("bad numeric value"), "{err}");
+        let err = Platform::by_name_err("maxwell:q7").unwrap_err();
+        assert!(err.contains("unknown override key"), "{err}");
+    }
+
+    #[test]
+    fn non_grammar_deltas_cannot_silently_collapse_onto_a_name() {
+        // A hand-built spec that differs only in fields the override grammar
+        // cannot express must be a clean registration error, never a silent
+        // alias of the stock values.
+        let mut p = Platform::default_spec().clone();
+        p.power.w_per_lane_ghz *= 2.0;
+        assert_eq!(p.canonical_name(), "maxwell", "delta is invisible to the grammar");
+        let err = register_named(&p).unwrap_err();
+        assert!(err.contains("cannot express"), "{err}");
+        // …whether or not the name is registered yet: the same delta under a
+        // not-yet-interned grammar name is rejected before it can squat.
+        let mut q = PlatformSpec::parse("maxwell:bw19.25").unwrap();
+        q.power.w_per_lane_ghz *= 2.0;
+        assert_eq!(q.canonical_name(), "maxwell:bw19.25");
+        let err = register_named(&q).unwrap_err();
+        assert!(err.contains("cannot express"), "{err}");
+        assert!(
+            Platform::by_name_err("maxwell:bw19.25").unwrap().spec.power
+                == Platform::default_spec().power,
+            "the grammar name must keep its grammar meaning"
+        );
+        // Identical values under the same name keep interning fine.
+        let same = Platform::default_spec().clone();
+        assert_eq!(register_named(&same).unwrap(), PlatformId::Maxwell);
+    }
+
+    #[test]
+    fn default_platform_is_maxwell() {
+        assert_eq!(DEFAULT_PLATFORM, PlatformId::Maxwell);
+        assert_eq!(Platform::default_spec().base, "maxwell");
+    }
+}

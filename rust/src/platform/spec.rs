@@ -1,0 +1,505 @@
+//! [`PlatformSpec`] — one value describing a hardware baseline end to end.
+//!
+//! The codesign formulation never consumes a *GPU*; it consumes a bundle of
+//! calibrated models: machine constants the search holds fixed
+//! ([`MachineSpec`]), area coefficients ([`AreaCoeffs`]), power coefficients
+//! ([`PowerModel`]), the manufacturer grid bounds ([`SpaceSpec`]) and the
+//! reference architectures candidates are compared against. A
+//! [`PlatformSpec`] is exactly that bundle, so "which 2017 GPU generation"
+//! becomes an input of every experiment rather than a constant named at each
+//! construction site.
+//!
+//! Like stencil families (PR 3), platforms have a **canonical name** with an
+//! override grammar that round-trips bit-exactly:
+//!
+//! ```text
+//! <preset> [":" <key><value>]*          e.g.  maxwell:bw20:clk1.4:sm48
+//! ```
+//!
+//! | key      | overrides                           | range        |
+//! |----------|-------------------------------------|--------------|
+//! | `clk`    | core clock, GHz                     | (0, 10]      |
+//! | `bw`     | off-chip bandwidth per SM, GB/s     | (0, 1000]    |
+//! | `lam`    | latency-hiding factor λ             | (0, 64]      |
+//! | `lexp`   | shm latency exponent                | [0, 1]       |
+//! | `sync`   | per-wavefront sync overhead, cycles | [0, 1e6]     |
+//! | `shmref` | λ's reference shm capacity, kB      | (0, 65536]   |
+//! | `sm`     | enumeration bound `n_SM` max        | 2..=1024     |
+//! | `v`      | enumeration bound `n_V` max         | 32..=65536   |
+//! | `msm`    | enumeration bound `M_SM` max, kB    | (0, 1e6]     |
+//! | `area`   | total-area budget ceiling, mm²      | (0, 1e5]     |
+//! | `rvu`    | register file per vector unit, kB   | (0, 64]      |
+//!
+//! Floats use Rust's shortest round-trip formatting, so
+//! `parse(canonical_name()) == self` bit-exactly — the wire format (schema
+//! v3) carries platforms as these names.
+//!
+//! # Examples
+//!
+//! ```no_run
+//! use codesign::platform::{Platform, PlatformSpec};
+//!
+//! let hbm = PlatformSpec::parse("maxwell:bw28:clk1.4").unwrap();
+//! assert_eq!(hbm.canonical_name(), "maxwell:clk1.4:bw28");
+//! assert_eq!(hbm.machine.mem_bw_per_sm_gbs, 28.0);
+//! // Register it and it is addressable everywhere a platform name is.
+//! let id = hbm.register();
+//! assert_eq!(Platform::get(id).spec, hbm);
+//! ```
+
+use crate::area::model::{AreaCoeffs, AreaModel};
+use crate::area::params::HwParams;
+use crate::codesign::power::PowerModel;
+use crate::codesign::space::SpaceSpec;
+use crate::platform::registry;
+use crate::platform::registry::PlatformId;
+use crate::timemodel::machine::MachineSpec;
+use crate::timemodel::talg::TimeModel;
+
+/// One reference (existing, stock) architecture a platform's explorations
+/// compare against — evaluated under the same models as every candidate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReferenceHw {
+    /// Display name (`gtx980`, `titanx`, …) — keys `ScenarioResult`
+    /// references and improvement statistics.
+    pub name: String,
+    pub hw: HwParams,
+    /// Published die area (mm²) where one exists; the modelled area for
+    /// derived references (e.g. the cache-stripped variants).
+    pub published_area_mm2: f64,
+}
+
+impl ReferenceHw {
+    pub fn new(name: &str, hw: HwParams, published_area_mm2: f64) -> ReferenceHw {
+        ReferenceHw { name: name.to_string(), hw, published_area_mm2 }
+    }
+}
+
+/// A hardware baseline: every calibrated constant the model stack consumes,
+/// in one value.
+///
+/// Equality is field-wise (including the `base` spelling); *semantic*
+/// identity — what decides sweep sharing and session partitioning — is
+/// [`PlatformSpec::fingerprint`], which hashes only the model-visible values,
+/// so two differently-spelled but identically-valued platforms share
+/// memoized sweeps.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlatformSpec {
+    /// The preset this spec derives from (the override grammar's head).
+    pub base: String,
+    /// Machine constants the search holds fixed (clock, bandwidth, SM
+    /// limits, latency model).
+    pub machine: MachineSpec,
+    /// Area-model coefficients, eq. (5).
+    pub area: AreaCoeffs,
+    /// Power-model coefficients (§V-D extension).
+    pub power: PowerModel,
+    /// Hardware-grid enumeration bounds.
+    pub space: SpaceSpec,
+    /// Stock architectures to evaluate alongside the candidates.
+    pub references: Vec<ReferenceHw>,
+}
+
+/// The override keys, in canonical emission order.
+const OVERRIDE_KEYS: [&str; 11] =
+    ["clk", "bw", "lam", "lexp", "sync", "shmref", "sm", "v", "msm", "area", "rvu"];
+
+impl PlatformSpec {
+    /// The area model this platform prices silicon with.
+    pub fn area_model(&self) -> AreaModel {
+        AreaModel::new(self.area)
+    }
+
+    /// The execution-time model this platform evaluates candidates with.
+    pub fn time_model(&self) -> TimeModel {
+        TimeModel::new(self.machine)
+    }
+
+    /// Override the area budget ceiling (builder-style convenience).
+    pub fn with_area_budget(mut self, mm2: f64) -> PlatformSpec {
+        self.space.max_area_mm2 = mm2;
+        self
+    }
+
+    /// Deterministic 64-bit digest of every value cached results depend on:
+    /// machine constants, area/power coefficients, and the reference
+    /// architectures (names included — they key result rows). Two things
+    /// are deliberately excluded: the `base` spelling (`maxwell` and a
+    /// fully-written-out override string with identical values fingerprint
+    /// identically and therefore share memoized sweeps) and the
+    /// [`SpaceSpec`](crate::codesign::space::SpaceSpec) enumeration bounds
+    /// (they shape *which* instances get solved, not their solutions —
+    /// every instance is already pinned by its own `CacheKey` — so
+    /// bounds-only overrides like `maxwell:sm16` or `maxwell:area300` keep
+    /// sharing the baseline's memoized sweeps, exactly like a tighter
+    /// scenario area budget). Any model-visible difference — a tweaked
+    /// bandwidth, a different reference — changes the fingerprint, so
+    /// distinct platforms can never alias a cache entry.
+    pub fn fingerprint(&self) -> u64 {
+        // FNV-1a: stable across runs and platforms (no RandomState).
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |bits: u64| {
+            for b in bits.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        // Exhaustive destructuring (no `..` rest patterns): adding a field
+        // to any of these bundles fails compilation here until the
+        // fingerprint decides about it — an omission would silently merge
+        // distinct platforms, the exact bug this digest exists to prevent.
+        let MachineSpec {
+            clock_ghz,
+            mem_bw_per_sm_gbs,
+            max_blocks_per_sm,
+            max_warps_per_sm,
+            max_threads_per_block,
+            warp,
+            latency_factor,
+            shm_latency_exponent,
+            shm_ref_kb,
+            sync_cycles,
+        } = self.machine;
+        for x in [
+            clock_ghz,
+            mem_bw_per_sm_gbs,
+            latency_factor,
+            shm_latency_exponent,
+            shm_ref_kb,
+            sync_cycles,
+        ] {
+            eat(x.to_bits());
+        }
+        for x in [max_blocks_per_sm, max_warps_per_sm, max_threads_per_block, warp] {
+            eat(x as u64);
+        }
+        let AreaCoeffs {
+            beta_vu,
+            beta_r,
+            alpha_r,
+            beta_m,
+            alpha_m,
+            beta_l1,
+            alpha_l1,
+            beta_l2,
+            alpha_l2,
+            alpha_oh,
+        } = self.area;
+        for x in [
+            beta_vu, beta_r, alpha_r, beta_m, alpha_m, beta_l1, alpha_l1, beta_l2, alpha_l2,
+            alpha_oh,
+        ] {
+            eat(x.to_bits());
+        }
+        let PowerModel { w_per_lane_ghz, w_per_gbs, leakage_w_per_mm2, base_w } = self.power;
+        for x in [w_per_lane_ghz, w_per_gbs, leakage_w_per_mm2, base_w] {
+            eat(x.to_bits());
+        }
+        eat(self.references.len() as u64);
+        for r in &self.references {
+            // Length-prefix the name so the name/field boundary is
+            // unambiguous in the flat word stream.
+            eat(r.name.len() as u64);
+            for b in r.name.as_bytes() {
+                eat(*b as u64);
+            }
+            let HwParams { n_sm, n_v, r_vu_kb, m_sm_kb, l1_smpair_kb, l2_kb } = r.hw;
+            eat(n_sm as u64);
+            eat(n_v as u64);
+            eat(r_vu_kb.to_bits());
+            eat(m_sm_kb.to_bits());
+            eat(l1_smpair_kb.to_bits());
+            eat(l2_kb.to_bits());
+            eat(r.published_area_mm2.to_bits());
+        }
+        h
+    }
+
+    /// Validate every grammar-reachable parameter; `Err` carries a
+    /// human-readable reason (the same ranges the parser enforces).
+    pub fn validate(&self) -> Result<(), String> {
+        let m = &self.machine;
+        check_range("clk", m.clock_ghz, 0.0, 10.0, false)?;
+        check_range("bw", m.mem_bw_per_sm_gbs, 0.0, 1000.0, false)?;
+        check_range("lam", m.latency_factor, 0.0, 64.0, false)?;
+        check_range("lexp", m.shm_latency_exponent, 0.0, 1.0, true)?;
+        check_range("sync", m.sync_cycles, 0.0, 1e6, true)?;
+        check_range("shmref", m.shm_ref_kb, 0.0, 65536.0, false)?;
+        let s = &self.space;
+        if !(2..=1024).contains(&s.n_sm_max) {
+            return Err(format!("sm (n_SM max) must be 2..=1024 (got {})", s.n_sm_max));
+        }
+        if !(32..=65536).contains(&s.n_v_max) {
+            return Err(format!("v (n_V max) must be 32..=65536 (got {})", s.n_v_max));
+        }
+        check_range("msm", s.m_sm_max_kb, 0.0, 1e6, false)?;
+        check_range("area", s.max_area_mm2, 0.0, 1e5, false)?;
+        check_range("rvu", s.r_vu_kb, 0.0, 64.0, false)?;
+        if self.references.is_empty() {
+            return Err("platform needs at least one reference architecture".to_string());
+        }
+        Ok(())
+    }
+
+    /// The canonical name: the base preset plus one `:key<value>` suffix per
+    /// grammar-covered field that differs from that preset, in fixed key
+    /// order. Floats use shortest round-trip formatting, so
+    /// `parse(canonical_name()) == self` bit-exactly.
+    pub fn canonical_name(&self) -> String {
+        let mut name = self.base.clone();
+        let Some(base) = registry::Platform::preset_by_name(&self.base) else {
+            // A hand-built spec whose base is not a preset cannot express
+            // its deltas in the grammar; its name is just the base spelling.
+            return name;
+        };
+        let b = &base.spec;
+        for key in OVERRIDE_KEYS {
+            let (mine, theirs) = match key {
+                "clk" => (self.machine.clock_ghz, b.machine.clock_ghz),
+                "bw" => (self.machine.mem_bw_per_sm_gbs, b.machine.mem_bw_per_sm_gbs),
+                "lam" => (self.machine.latency_factor, b.machine.latency_factor),
+                "lexp" => (self.machine.shm_latency_exponent, b.machine.shm_latency_exponent),
+                "sync" => (self.machine.sync_cycles, b.machine.sync_cycles),
+                "shmref" => (self.machine.shm_ref_kb, b.machine.shm_ref_kb),
+                "sm" => (self.space.n_sm_max as f64, b.space.n_sm_max as f64),
+                "v" => (self.space.n_v_max as f64, b.space.n_v_max as f64),
+                "msm" => (self.space.m_sm_max_kb, b.space.m_sm_max_kb),
+                "area" => (self.space.max_area_mm2, b.space.max_area_mm2),
+                "rvu" => (self.space.r_vu_kb, b.space.r_vu_kb),
+                _ => unreachable!(),
+            };
+            if mine.to_bits() != theirs.to_bits() {
+                if key == "sm" || key == "v" {
+                    name.push_str(&format!(":{key}{}", mine as u64));
+                } else {
+                    name.push_str(&format!(":{key}{mine}"));
+                }
+            }
+        }
+        name
+    }
+
+    /// Parse a platform name: a preset, optionally followed by `:key<value>`
+    /// overrides (any order; a repeated key takes its last value). Unknown
+    /// presets, unknown keys, non-numeric values and out-of-range values are
+    /// all distinct, diagnosable errors.
+    pub fn parse(name: &str) -> Result<PlatformSpec, String> {
+        let mut parts = name.split(':');
+        let head = parts.next().unwrap_or_default();
+        let Some(base) = registry::Platform::preset_by_name(head) else {
+            return Err(format!("'{head}' is not a platform preset"));
+        };
+        let mut spec = base.spec.clone();
+        for part in parts {
+            if part.is_empty() {
+                return Err(format!("empty override segment in '{name}'"));
+            }
+            let split =
+                part.find(|c: char| !c.is_ascii_alphabetic()).unwrap_or(part.len());
+            let (key, value) = part.split_at(split);
+            if value.is_empty() {
+                return Err(format!("override '{part}' is missing a value"));
+            }
+            if !OVERRIDE_KEYS.contains(&key) {
+                return Err(format!(
+                    "unknown override key '{key}' in '{part}' (valid: {})",
+                    OVERRIDE_KEYS.join(", ")
+                ));
+            }
+            let v: f64 = value
+                .parse()
+                .map_err(|_| format!("bad numeric value '{value}' for '{key}'"))?;
+            match key {
+                "clk" => spec.machine.clock_ghz = v,
+                "bw" => spec.machine.mem_bw_per_sm_gbs = v,
+                "lam" => spec.machine.latency_factor = v,
+                "lexp" => spec.machine.shm_latency_exponent = v,
+                "sync" => spec.machine.sync_cycles = v,
+                "shmref" => spec.machine.shm_ref_kb = v,
+                "sm" => {
+                    spec.space.n_sm_max = parse_u32(key, value)?;
+                }
+                "v" => {
+                    spec.space.n_v_max = parse_u32(key, value)?;
+                }
+                "msm" => spec.space.m_sm_max_kb = v,
+                "area" => spec.space.max_area_mm2 = v,
+                "rvu" => spec.space.r_vu_kb = v,
+                _ => unreachable!(),
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Intern this spec in the global platform registry (idempotent: equal
+    /// canonical names with equal values return the same id) and get its
+    /// [`PlatformId`], usable everywhere a preset id is — sessions,
+    /// requests, the wire.
+    ///
+    /// Panics on an invalid spec, a full registry, or a spec whose canonical
+    /// name is already registered with *different* values (deltas outside
+    /// the override grammar cannot be interned by name); untrusted inputs
+    /// should go through the fallible
+    /// [`Platform::by_name_err`](crate::platform::Platform::by_name_err)
+    /// name path instead.
+    pub fn register(&self) -> PlatformId {
+        registry::register_spec(self)
+    }
+}
+
+fn parse_u32(key: &str, value: &str) -> Result<u32, String> {
+    value.parse::<u32>().map_err(|_| format!("bad integer value '{value}' for '{key}'"))
+}
+
+/// Finite-and-in-range check with a grammar-keyed message. `inclusive_lo`
+/// admits the lower bound itself (for keys where 0 is meaningful).
+fn check_range(
+    key: &str,
+    v: f64,
+    lo: f64,
+    hi: f64,
+    inclusive_lo: bool,
+) -> Result<(), String> {
+    let lo_ok = if inclusive_lo { v >= lo } else { v > lo };
+    if v.is_finite() && lo_ok && v <= hi {
+        Ok(())
+    } else {
+        let bracket = if inclusive_lo { '[' } else { '(' };
+        Err(format!("{key} out of range {bracket}{lo}, {hi}] (got {v})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::registry::Platform;
+
+    #[test]
+    fn canonical_name_roundtrips_bit_exactly() {
+        for name in [
+            "maxwell",
+            "maxwell+",
+            "maxwell-nocache",
+            "maxwell:bw20",
+            "maxwell:clk1.4:bw20",
+            "maxwell:clk1.4:bw20:sm48",
+            "maxwell:lexp0.3333333333333333",
+            "maxwell+:bw14",
+            "maxwell:shmref48:lam5.5:sync0",
+            "maxwell:msm96:area300.5:v256",
+            "maxwell:rvu4",
+        ] {
+            let spec = PlatformSpec::parse(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            let canon = spec.canonical_name();
+            let back = PlatformSpec::parse(&canon).unwrap_or_else(|e| panic!("{canon}: {e}"));
+            assert_eq!(spec, back, "{name} -> {canon}");
+            assert_eq!(back.canonical_name(), canon, "{name}");
+        }
+    }
+
+    #[test]
+    fn overrides_apply_in_any_order_last_wins() {
+        let a = PlatformSpec::parse("maxwell:bw20:clk1.4").unwrap();
+        let b = PlatformSpec::parse("maxwell:clk1.4:bw20").unwrap();
+        assert_eq!(a, b);
+        let c = PlatformSpec::parse("maxwell:bw7:bw20").unwrap();
+        assert_eq!(c.machine.mem_bw_per_sm_gbs, 20.0);
+    }
+
+    #[test]
+    fn bad_key_is_rejected_with_the_valid_set() {
+        for name in ["maxwell:frequency2", "maxwell:q7", "maxwell:bwx20"] {
+            let err = PlatformSpec::parse(name).unwrap_err();
+            assert!(err.contains("unknown override key"), "{name}: {err}");
+            assert!(err.contains("clk, bw"), "{name}: must list valid keys: {err}");
+        }
+    }
+
+    #[test]
+    fn non_numeric_values_are_rejected() {
+        for name in ["maxwell:bwfast", "maxwell:clk", "maxwell:smmany", "maxwell:sm1.5"] {
+            let err = PlatformSpec::parse(name).unwrap_err();
+            assert!(
+                err.contains("bad numeric value")
+                    || err.contains("bad integer value")
+                    || err.contains("missing a value"),
+                "{name}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn out_of_range_clock_and_bandwidth_are_rejected() {
+        for (name, needle) in [
+            ("maxwell:clk0", "clk out of range"),
+            ("maxwell:clk99", "clk out of range"),
+            ("maxwell:clk-1.2", "clk out of range"),
+            ("maxwell:bw0", "bw out of range"),
+            ("maxwell:bw1e9", "bw out of range"),
+            ("maxwell:lam0", "lam out of range"),
+            ("maxwell:lexp1.5", "lexp out of range"),
+            ("maxwell:sm1", "sm (n_SM max) must be"),
+            ("maxwell:v8", "v (n_V max) must be"),
+        ] {
+            let err = PlatformSpec::parse(name).unwrap_err();
+            assert!(err.contains(needle), "{name}: '{err}' should mention '{needle}'");
+        }
+    }
+
+    #[test]
+    fn unknown_preset_head_is_rejected() {
+        let err = PlatformSpec::parse("kepler:bw20").unwrap_err();
+        assert!(err.contains("not a platform preset"), "{err}");
+    }
+
+    #[test]
+    fn fingerprint_tracks_values_not_spelling() {
+        let maxwell = Platform::default_spec();
+        // The identity override spells differently but changes nothing.
+        let same = PlatformSpec::parse("maxwell:clk1.2").unwrap();
+        assert_eq!(maxwell.fingerprint(), same.fingerprint());
+        assert_eq!(same.canonical_name(), "maxwell", "identity override is elided");
+        // Any model-visible delta moves the fingerprint…
+        for name in ["maxwell:bw20", "maxwell:clk1.4", "maxwell:shmref48", "maxwell:lam5"] {
+            let other = PlatformSpec::parse(name).unwrap();
+            assert_ne!(maxwell.fingerprint(), other.fingerprint(), "{name}");
+        }
+        // …while bounds-only overrides don't: they enumerate a different
+        // slice of the same model and must keep sharing its memoized sweeps.
+        for name in ["maxwell:sm16", "maxwell:v512", "maxwell:msm192", "maxwell:area300"] {
+            let other = PlatformSpec::parse(name).unwrap();
+            assert_eq!(maxwell.fingerprint(), other.fingerprint(), "{name}");
+        }
+        // And the two derived presets are distinct baselines.
+        assert_ne!(
+            Platform::get(PlatformId::MaxwellPlus).spec.fingerprint(),
+            maxwell.fingerprint()
+        );
+        assert_ne!(
+            Platform::get(PlatformId::MaxwellNoCache).spec.fingerprint(),
+            maxwell.fingerprint()
+        );
+    }
+
+    #[test]
+    fn fingerprint_is_stable_across_calls() {
+        let a = PlatformSpec::parse("maxwell:bw20").unwrap();
+        assert_eq!(a.fingerprint(), PlatformSpec::parse("maxwell:bw20").unwrap().fingerprint());
+    }
+
+    #[test]
+    fn models_derive_from_the_bundle() {
+        let spec = PlatformSpec::parse("maxwell:clk1.5").unwrap();
+        assert_eq!(spec.time_model().machine.clock_ghz, 1.5);
+        assert_eq!(spec.area_model().coeffs, AreaCoeffs::paper());
+    }
+
+    #[test]
+    fn registration_is_idempotent() {
+        let a = PlatformSpec::parse("maxwell:bw21").unwrap().register();
+        let b = PlatformSpec::parse("maxwell:bw21").unwrap().register();
+        assert_eq!(a, b);
+        assert_eq!(a.name(), "maxwell:bw21");
+    }
+}

@@ -8,17 +8,16 @@
 //!    per-benchmark optimum is a flat ridge in (n_SM, n_V, M_SM); see
 //!    EXPERIMENTS.md).
 
-use crate::area::model::AreaModel;
 use crate::area::params::HwParams;
 use crate::codesign::scenario::ScenarioResult;
 use crate::codesign::sensitivity::{best_for_benchmark, single_benchmark_weights, Table2Row};
 use crate::opt::problem::SolveOpts;
 use crate::opt::separable::solve_hardware_point;
+use crate::platform::spec::PlatformSpec;
 use crate::report::render::Report;
 use crate::stencil::defs::StencilId;
 use crate::stencil::workload::Workload;
 use crate::timemodel::citer::CIterTable;
-use crate::timemodel::talg::TimeModel;
 use crate::util::csv::Table;
 
 /// The paper's published Table II: (stencil, n_SM, n_V, M_SM kB, area mm²,
@@ -32,9 +31,10 @@ pub const PAPER_TABLE2: [(StencilId, u32, u32, f64, f64, f64); 6] = [
     (StencilId::Laplacian3D, 8, 896, 96.0, 446.0, 1427.0),
 ];
 
-/// Evaluate one paper architecture for one benchmark under our models.
+/// Evaluate one paper architecture for one benchmark under one platform's
+/// models (time, area and register sizing all come from the bundle).
 pub fn evaluate_paper_config(
-    time_model: &TimeModel,
+    platform: &PlatformSpec,
     citer: &CIterTable,
     id: StencilId,
     n_sm: u32,
@@ -44,14 +44,20 @@ pub fn evaluate_paper_config(
     let hw = HwParams {
         n_sm,
         n_v,
-        r_vu_kb: 2.0,
+        r_vu_kb: platform.space.r_vu_kb,
         m_sm_kb,
         l1_smpair_kb: 0.0,
         l2_kb: 0.0,
     };
     let workload = Workload::single(id);
-    let sol = solve_hardware_point(time_model, &workload, citer, &hw, &SolveOpts::default());
-    let area = AreaModel::paper().area_mm2(&hw);
+    let sol = solve_hardware_point(
+        &platform.time_model(),
+        &workload,
+        citer,
+        &hw,
+        &SolveOpts::default(),
+    );
+    let area = platform.area_model().area_mm2(&hw);
     sol.weighted_gflops.map(|g| (area, g))
 }
 
@@ -61,7 +67,7 @@ pub fn generate(
     wl_2d: &Workload,
     res_3d: &ScenarioResult,
     wl_3d: &Workload,
-    time_model: &TimeModel,
+    platform: &PlatformSpec,
     citer: &CIterTable,
     band: (f64, f64),
 ) -> Report {
@@ -91,7 +97,7 @@ pub fn generate(
             (res_2d, wl_2d)
         };
         let ours: Option<Table2Row> = best_for_benchmark(res, wl, id, band);
-        let ridge = evaluate_paper_config(time_model, citer, id, p_sm, p_v, p_m);
+        let ridge = evaluate_paper_config(platform, citer, id, p_sm, p_v, p_m);
         let (o_sm, o_v, o_m, o_area, o_gf) = match &ours {
             Some(r) => (
                 r.n_sm.to_string(),
@@ -159,11 +165,11 @@ mod tests {
 
     #[test]
     fn paper_configs_evaluate_under_our_model() {
-        let tm = TimeModel::maxwell();
+        let p = crate::platform::registry::Platform::default_spec();
         let citer = CIterTable::paper();
         for &(id, sm, v, m, p_area, _) in &PAPER_TABLE2 {
             let (area, gf) =
-                evaluate_paper_config(&tm, &citer, id, sm, v, m).expect("feasible");
+                evaluate_paper_config(p, &citer, id, sm, v, m).expect("feasible");
             assert!(gf > 100.0, "{id:?}: {gf}");
             // Our area model prices the paper's configs within 20% of the
             // paper's stated areas (they used the same eq. 6).

@@ -8,13 +8,14 @@
 //!   [`CodesignResponse`] per variant.
 //! * [`session`] — the persistent [`Session`]: owns the coordinators, keeps
 //!   their memo caches warm across calls, and auto-partitions each submission
-//!   into compatible batch groups by (C_iter, solver options) so mixed
-//!   request sets batch instead of being rejected.
+//!   into compatible batch groups by (platform fingerprint, C_iter, solver
+//!   options) so mixed request sets batch instead of being rejected.
 //! * [`wire`] — the versioned JSON wire format: bit-exact request/response
-//!   round-trips and the `{"schema": 2, …}` file envelopes behind
-//!   `codesign serve --requests` (schema v1 files still decode; v2 adds
+//!   round-trips and the `{"schema": 3, …}` file envelopes behind
+//!   `codesign serve --requests` (older files still decode; v2 added
 //!   parametric stencil-family names like `star3d:r2` everywhere a stencil
-//!   name is accepted).
+//!   name is accepted, v3 adds optional `platform` names like
+//!   `maxwell:bw20:clk1.4` on scenario specs and tune requests).
 //!
 //! ```no_run
 //! use codesign::service::{CodesignRequest, ScenarioSpec, Session};

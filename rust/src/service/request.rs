@@ -11,6 +11,8 @@
 
 use crate::codesign::scenario::Scenario;
 use crate::opt::problem::SolveOpts;
+use crate::platform::registry::PlatformId;
+use crate::platform::spec::PlatformSpec;
 use crate::stencil::defs::{Stencil, StencilId};
 use crate::stencil::spec::StencilSpec;
 use crate::stencil::workload::Workload;
@@ -62,6 +64,10 @@ pub struct ScenarioSpec {
     /// Display name (derived from the modifiers when `None`).
     pub name: Option<String>,
     pub class: WorkloadClass,
+    /// Hardware baseline to evaluate on; `None` = the session's default
+    /// platform (itself defaulting to `maxwell`). Registered platforms only
+    /// — untrusted names resolve through `Platform::by_name_err` first.
+    pub platform: Option<PlatformId>,
     /// Keep every `stride`-th workload entry and shrink to the small space.
     pub quick_stride: Option<usize>,
     /// Total-silicon budget; tighter budgets enumerate a subset of the same
@@ -80,6 +86,7 @@ impl ScenarioSpec {
         ScenarioSpec {
             name: None,
             class,
+            platform: None,
             quick_stride: None,
             area_budget_mm2: None,
             stencil_weights: Vec::new(),
@@ -117,6 +124,13 @@ impl ScenarioSpec {
 
     pub fn named(mut self, name: &str) -> ScenarioSpec {
         self.name = Some(name.to_string());
+        self
+    }
+
+    /// Evaluate on a specific registered platform instead of the session
+    /// default.
+    pub fn on_platform(mut self, id: PlatformId) -> ScenarioSpec {
+        self.platform = Some(id);
         self
     }
 
@@ -164,6 +178,9 @@ impl ScenarioSpec {
             return n.clone();
         }
         let mut n = self.class.name();
+        if let Some(p) = self.platform {
+            n.push_str(&format!("@{}", p.name()));
+        }
         if !self.stencil_weights.is_empty() {
             n.push_str("-reweighted");
         }
@@ -173,10 +190,13 @@ impl ScenarioSpec {
         n
     }
 
-    /// Materialize the scenario this spec describes. Fails (instead of
-    /// panicking downstream) when the weight vector zeroes out every kept
-    /// workload entry.
-    pub fn to_scenario(&self) -> anyhow::Result<Scenario> {
+    /// Materialize the scenario this spec describes, on `platform` (the
+    /// resolution of this spec's `platform` field against the session
+    /// default — see `Session::platform_for`). The platform supplies the
+    /// enumeration bounds; its models bind at the coordinator. Fails
+    /// (instead of panicking downstream) when the weight vector zeroes out
+    /// every kept workload entry.
+    pub fn to_scenario(&self, platform: &PlatformSpec) -> anyhow::Result<Scenario> {
         let mut sc = match self.class {
             WorkloadClass::TwoD => Scenario::paper_2d(),
             WorkloadClass::ThreeD => Scenario::paper_3d(),
@@ -193,6 +213,13 @@ impl ScenarioSpec {
         if let Some(stride) = self.quick_stride {
             sc = Scenario::quick(sc, stride);
         }
+        // The platform supplies the enumeration bounds (quick runs clamp
+        // them to the historical small grid, which `Scenario::quick`
+        // hard-codes); the area budget below then tightens the ceiling.
+        sc.space = match self.quick_stride {
+            Some(_) => platform.space.shrunk(),
+            None => platform.space,
+        };
         if !self.stencil_weights.is_empty() {
             for (id, w) in &self.stencil_weights {
                 anyhow::ensure!(
@@ -239,6 +266,8 @@ pub struct TuneRequest {
     pub m_sm_kb: Option<f64>,
     /// Single-benchmark workload; `None` = the uniform 2-D mix.
     pub stencil: Option<StencilId>,
+    /// Hardware baseline to tune on; `None` = the session default.
+    pub platform: Option<PlatformId>,
     pub threads: Option<usize>,
     pub citer: CIterTable,
     pub solve_opts: SolveOpts,
@@ -252,10 +281,18 @@ impl TuneRequest {
             n_v: None,
             m_sm_kb: None,
             stencil: None,
+            platform: None,
             threads: None,
             citer: CIterTable::paper(),
             solve_opts: SolveOpts::default(),
         }
+    }
+
+    /// Tune on a specific registered platform instead of the session
+    /// default.
+    pub fn on_platform(mut self, id: PlatformId) -> TuneRequest {
+        self.platform = Some(id);
+        self
     }
 
     pub fn pin_n_sm(mut self, v: u32) -> TuneRequest {
@@ -340,6 +377,23 @@ impl CodesignRequest {
 
     pub fn solver_cost(anneal_iters: u64) -> CodesignRequest {
         CodesignRequest::SolverCost { anneal_iters, citer: CIterTable::paper() }
+    }
+
+    /// The platform this request names, if any (`None` = the serving
+    /// session's default). Sensitivity requests report the 2-D scenario's
+    /// platform first and the 3-D one second; all other variants have at
+    /// most one.
+    pub fn platforms(&self) -> (Option<PlatformId>, Option<PlatformId>) {
+        match self {
+            CodesignRequest::Explore { scenario }
+            | CodesignRequest::Pareto { scenario }
+            | CodesignRequest::WhatIf { scenario, .. } => (scenario.platform, None),
+            CodesignRequest::Sensitivity { scenario_2d, scenario_3d, .. } => {
+                (scenario_2d.platform, scenario_3d.platform)
+            }
+            CodesignRequest::Tune(t) => (t.platform, None),
+            CodesignRequest::Validate | CodesignRequest::SolverCost { .. } => (None, None),
+        }
     }
 
     /// Wire-level type tag (also used in error responses).
@@ -528,14 +582,15 @@ impl CodesignResponse {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::platform::registry::Platform;
 
     #[test]
     fn spec_builders_materialize() {
-        let sc = ScenarioSpec::two_d().quick(8).with_area_budget(300.0).to_scenario().unwrap();
+        let sc = ScenarioSpec::two_d().quick(8).with_area_budget(300.0).to_scenario(Platform::default_spec()).unwrap();
         assert_eq!(sc.name, "2d-b300");
         assert_eq!(sc.workload.entries.len(), 8);
         assert_eq!(sc.space.max_area_mm2, 300.0);
-        let named = ScenarioSpec::two_d().named("mine").to_scenario().unwrap();
+        let named = ScenarioSpec::two_d().named("mine").to_scenario(Platform::default_spec()).unwrap();
         assert_eq!(named.name, "mine");
     }
 
@@ -543,7 +598,7 @@ mod tests {
     fn spec_weights_reweight_by_stencil() {
         let sc = ScenarioSpec::two_d()
             .weighted(StencilId::Jacobi2D, 1.0)
-            .to_scenario()
+            .to_scenario(Platform::default_spec())
             .unwrap();
         let jac: f64 = sc
             .workload
@@ -562,7 +617,7 @@ mod tests {
             let err = ScenarioSpec::two_d()
                 .weighted(StencilId::Jacobi2D, 1.0)
                 .weighted(StencilId::Heat2D, bad)
-                .to_scenario()
+                .to_scenario(Platform::default_spec())
                 .unwrap_err();
             assert!(format!("{err:#}").contains("non-negative"), "{bad}: {err:#}");
         }
@@ -573,16 +628,16 @@ mod tests {
         // 3-D stencil weights over a 2-D workload leave nothing.
         let err = ScenarioSpec::two_d()
             .weighted(StencilId::Heat3D, 1.0)
-            .to_scenario()
+            .to_scenario(Platform::default_spec())
             .unwrap_err();
         assert!(format!("{err:#}").contains("zero out"));
     }
 
     #[test]
     fn single_class_uses_matching_space_dims() {
-        let s2 = ScenarioSpec::single(StencilId::Heat2D).to_scenario().unwrap();
+        let s2 = ScenarioSpec::single(StencilId::Heat2D).to_scenario(Platform::default_spec()).unwrap();
         assert!(s2.workload.entries.iter().all(|e| e.size.s3.is_none()));
-        let s3 = ScenarioSpec::single(StencilId::Heat3D).to_scenario().unwrap();
+        let s3 = ScenarioSpec::single(StencilId::Heat3D).to_scenario(Platform::default_spec()).unwrap();
         assert!(s3.workload.entries.iter().all(|e| e.size.s3.is_some()));
     }
 
@@ -610,7 +665,7 @@ mod tests {
         use crate::stencil::spec::{Dim, StencilSpec};
         let sc = ScenarioSpec::parametric(StencilSpec::star(Dim::D3, 2))
             .quick(3)
-            .to_scenario()
+            .to_scenario(Platform::default_spec())
             .unwrap();
         assert_eq!(sc.name, "star3d:r2");
         assert!(sc.workload.entries.iter().all(|e| e.size.s3.is_some()));

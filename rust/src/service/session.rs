@@ -2,14 +2,17 @@
 //! coordinators and keeps their memo caches warm across calls.
 //!
 //! A [`Session`] answers arbitrary mixes of [`CodesignRequest`]s. Scenario
-//! evaluation is defined by the (C_iter, solver-options) pair — the batch
-//! engine's `solved_under` invariant — so the session keeps **one coordinator
-//! per distinct pair** and auto-partitions each submission into compatible
-//! batch groups instead of rejecting mixed request sets. Repeat queries over
-//! the same grids are answered almost entirely from cache (~100% hits), and
-//! the partial-codesign tune path reads and feeds the same memo store.
+//! evaluation is defined by the (platform, C_iter, solver-options) triple —
+//! the platform fixes the model bundle, the pair fixes the batch engine's
+//! `solved_under` invariant — so the session keeps **one coordinator per
+//! distinct triple** and auto-partitions each submission into compatible
+//! batch groups instead of rejecting mixed request sets. Partitioning is by
+//! [`PlatformSpec::fingerprint`]: two identically-valued platform spellings
+//! share one warm coordinator (and therefore its memoized sweeps), while any
+//! model delta gets its own. Repeat queries over the same grids are answered
+//! almost entirely from cache (~100% hits), and the partial-codesign tune
+//! path reads and feeds the same memo store.
 
-use crate::area::model::AreaModel;
 use crate::codesign::scenario::{DesignEval, Scenario, ScenarioResult};
 use crate::codesign::sensitivity::best_for_benchmark;
 use crate::codesign::tuner::{candidate_grid, Pinned};
@@ -17,6 +20,8 @@ use crate::coordinator::{CacheKey, Coordinator, StatsSnapshot, SweepReport};
 use crate::opt::inner::InnerSolution;
 use crate::opt::problem::SolveOpts;
 use crate::opt::separable::{aggregate_weighted, solve_entry};
+use crate::platform::registry::{Platform, PlatformId};
+use crate::platform::spec::PlatformSpec;
 use crate::report::{self, Report};
 use crate::service::request::{
     CodesignRequest, CodesignResponse, DesignSummary, ErrorInfo, ParetoSummary,
@@ -27,7 +32,6 @@ use crate::sim::{validate_sweep, ValidationReport};
 use crate::stencil::defs::StencilId;
 use crate::stencil::workload::Workload;
 use crate::timemodel::citer::CIterTable;
-use crate::timemodel::talg::TimeModel;
 use crate::util::threadpool::{default_threads, parallel_map};
 use std::time::{Duration, Instant};
 
@@ -46,6 +50,9 @@ pub enum ResponseDetail {
 
 pub struct ScenarioDetail {
     pub scenario: Scenario,
+    /// The platform this scenario was evaluated on (its spec's platform, or
+    /// the session default when the spec named none).
+    pub platform: PlatformSpec,
     pub result: ScenarioResult,
 }
 
@@ -95,33 +102,48 @@ enum OneKind {
 enum Plan {
     /// Already answered during planning (errors, Validate, SolverCost).
     Direct(CodesignResponse, ResponseDetail),
-    /// One scenario in a batch group.
-    One { slot: Slot, kind: OneKind },
+    /// One scenario in a batch group, on its resolved platform (carried
+    /// here rather than read back from the coordinator: fingerprint-equal
+    /// platforms share a coordinator but may differ in bounds/spelling).
+    One { slot: Slot, kind: OneKind, platform: PlatformSpec },
     /// Two scenarios (2-D, 3-D) plus the Table II area band.
-    Sensitivity { s2: Slot, s3: Slot, band: (f64, f64) },
+    Sensitivity { s2: Slot, s3: Slot, p2: PlatformSpec, p3: PlatformSpec, band: (f64, f64) },
     /// Runs after the batches, against the then-warm memo store.
     Tune(TuneRequest),
 }
 
 /// The long-lived session service.
 pub struct Session {
-    pub area_model: AreaModel,
-    pub time_model: TimeModel,
-    /// One coordinator per (C_iter, solver options) pair ever submitted —
-    /// the auto-partitioning that replaces the batch engine's hard
-    /// `solved_under` rejection at this layer.
+    /// The platform requests run on when their spec names none.
+    default_platform: PlatformSpec,
+    /// One coordinator per (platform fingerprint, C_iter, solver options)
+    /// triple ever submitted — the auto-partitioning that replaces the batch
+    /// engine's hard `solved_under` rejection at this layer.
     coordinators: Vec<(CIterTable, SolveOpts, Coordinator)>,
     progress_every: Option<usize>,
 }
 
 impl Session {
-    pub fn new(area_model: AreaModel, time_model: TimeModel) -> Session {
-        Session { area_model, time_model, coordinators: Vec::new(), progress_every: None }
+    /// Build a session whose requests default to `default_platform`.
+    ///
+    /// Panics if the spec fails [`PlatformSpec::validate`] — registry-parsed
+    /// platforms are always valid; failing a malformed hand-built spec here
+    /// beats panicking later inside a long-lived service request.
+    pub fn new(default_platform: PlatformSpec) -> Session {
+        if let Err(e) = default_platform.validate() {
+            panic!("invalid PlatformSpec for Session: {e}");
+        }
+        Session { default_platform, coordinators: Vec::new(), progress_every: None }
     }
 
-    /// A session over the paper's calibrated models.
+    /// A session on the default baseline (the paper's Maxwell platform).
     pub fn paper() -> Session {
-        Session::new(AreaModel::paper(), TimeModel::maxwell())
+        Session::new(Platform::default_spec().clone())
+    }
+
+    /// The platform requests without an explicit `platform` run on.
+    pub fn default_platform(&self) -> &PlatformSpec {
+        &self.default_platform
     }
 
     /// Print a progress line every `n` solved instances (per coordinator).
@@ -130,7 +152,8 @@ impl Session {
         self
     }
 
-    /// Number of (C_iter, solver-options) partitions this session holds.
+    /// Number of (platform, C_iter, solver-options) partitions this session
+    /// holds.
     pub fn partitions(&self) -> usize {
         self.coordinators.len()
     }
@@ -150,18 +173,39 @@ impl Session {
         total
     }
 
-    fn coordinator_index(&mut self, citer: &CIterTable, opts: &SolveOpts) -> usize {
-        if let Some(i) =
-            self.coordinators.iter().position(|(c, o, _)| c == citer && o == opts)
-        {
+    fn coordinator_index(
+        &mut self,
+        platform: &PlatformSpec,
+        citer: &CIterTable,
+        opts: &SolveOpts,
+    ) -> usize {
+        let fp = platform.fingerprint();
+        if let Some(i) = self.coordinators.iter().position(|(c, o, coord)| {
+            coord.platform_fingerprint() == fp && c == citer && o == opts
+        }) {
             return i;
         }
-        let mut coord = Coordinator::new(self.area_model, self.time_model);
+        let mut coord = Coordinator::new(platform.clone());
         if let Some(n) = self.progress_every {
             coord = coord.with_progress(n);
         }
         self.coordinators.push((citer.clone(), opts.clone(), coord));
         self.coordinators.len() - 1
+    }
+
+    /// Resolve a request's optional platform id: the named registered
+    /// platform, or this session's default. The single resolution point for
+    /// both the scenario and tune paths.
+    fn resolve_platform(&self, id: Option<PlatformId>) -> PlatformSpec {
+        match id {
+            Some(id) => Platform::get(id).spec.clone(),
+            None => self.default_platform.clone(),
+        }
+    }
+
+    /// The platform a spec's scenarios run on.
+    fn platform_for(&self, spec: &ScenarioSpec) -> PlatformSpec {
+        self.resolve_platform(spec.platform)
     }
 
     /// Answer one request (a submission of one).
@@ -180,10 +224,10 @@ impl Session {
         let before = self.stats_total();
 
         // Plan: one entry per request; scenario-backed requests enqueue into
-        // per-(C_iter, SolveOpts) groups, with identical specs within this
-        // submission deduplicated onto one batch slot (e.g. `report` asks
-        // for a scenario both as Explore and inside Sensitivity — it should
-        // be served, not re-aggregated, twice).
+        // per-(platform, C_iter, SolveOpts) groups, with identical specs
+        // within this submission deduplicated onto one batch slot (e.g.
+        // `report` asks for a scenario both as Explore and inside
+        // Sensitivity — it should be served, not re-aggregated, twice).
         let mut groups: Vec<(usize, Vec<Scenario>)> = Vec::new();
         let mut seen: Vec<(ScenarioSpec, Slot)> = Vec::new();
         let mut plans: Vec<Plan> = Vec::with_capacity(requests.len());
@@ -250,19 +294,17 @@ impl Session {
                 self.plan_one(&spec, OneKind::WhatIf, req, groups, seen)
             }
             CodesignRequest::Sensitivity { scenario_2d, scenario_3d, area_band } => {
-                // Validate both specs before enqueueing either, so a bad
+                // Materialize both specs before enqueueing either, so a bad
                 // sibling can't leave an orphan scenario in a batch group
                 // (which would be swept at full cost and never consumed).
-                if let Err(e) =
-                    scenario_2d.to_scenario().and(scenario_3d.to_scenario())
-                {
-                    return Plan::Direct(error_response(req, &e), ResponseDetail::None);
-                }
-                match (
-                    self.enqueue(scenario_2d, groups, seen),
-                    self.enqueue(scenario_3d, groups, seen),
-                ) {
-                    (Ok(s2), Ok(s3)) => Plan::Sensitivity { s2, s3, band: *area_band },
+                let p2 = self.platform_for(scenario_2d);
+                let p3 = self.platform_for(scenario_3d);
+                match (scenario_2d.to_scenario(&p2), scenario_3d.to_scenario(&p3)) {
+                    (Ok(sc2), Ok(sc3)) => {
+                        let s2 = self.enqueue_materialized(scenario_2d, sc2, &p2, groups, seen);
+                        let s3 = self.enqueue_materialized(scenario_3d, sc3, &p3, groups, seen);
+                        Plan::Sensitivity { s2, s3, p2, p3, band: *area_band }
+                    }
                     (Err(e), _) | (_, Err(e)) => {
                         Plan::Direct(error_response(req, &e), ResponseDetail::None)
                     }
@@ -270,7 +312,7 @@ impl Session {
             }
             CodesignRequest::Tune(t) => Plan::Tune(t.clone()),
             CodesignRequest::Validate => {
-                let rep = validate_sweep(&self.time_model);
+                let rep = validate_sweep(&self.default_platform);
                 let summary = ValidateSummary {
                     cases: rep.cases.len(),
                     mape_pct: rep.mape_pct,
@@ -282,7 +324,11 @@ impl Session {
                 )
             }
             CodesignRequest::SolverCost { anneal_iters, citer } => {
-                let rep = report::solver_cost::generate(&self.time_model, citer, *anneal_iters);
+                let rep = report::solver_cost::generate(
+                    &self.default_platform.time_model(),
+                    citer,
+                    *anneal_iters,
+                );
                 let summary = SolverCostSummary {
                     anneal_iters: *anneal_iters,
                     summary: rep.summary.clone(),
@@ -303,27 +349,48 @@ impl Session {
         groups: &mut Vec<(usize, Vec<Scenario>)>,
         seen: &mut Vec<(ScenarioSpec, Slot)>,
     ) -> Plan {
-        match self.enqueue(spec, groups, seen) {
-            Ok(slot) => Plan::One { slot, kind },
+        let platform = self.platform_for(spec);
+        match self.enqueue(spec, &platform, groups, seen) {
+            Ok(slot) => Plan::One { slot, kind, platform },
             Err(e) => Plan::Direct(error_response(req, &e), ResponseDetail::None),
         }
     }
 
-    /// Materialize a spec and place it in the batch group matching its
-    /// (C_iter, solver options) — creating the group (and its coordinator)
-    /// on first sight. A spec identical to one already planned in this
-    /// submission reuses its slot instead of being served twice.
+    /// Materialize a spec on its resolved platform and place it in the
+    /// batch group matching its (platform, C_iter, solver options) —
+    /// creating the group (and its coordinator) on first sight. A spec
+    /// identical to one already planned in this submission reuses its slot
+    /// instead of being served twice.
     fn enqueue(
         &mut self,
         spec: &ScenarioSpec,
+        platform: &PlatformSpec,
         groups: &mut Vec<(usize, Vec<Scenario>)>,
         seen: &mut Vec<(ScenarioSpec, Slot)>,
     ) -> anyhow::Result<Slot> {
         if let Some((_, slot)) = seen.iter().find(|(s, _)| s == spec) {
             return Ok(*slot);
         }
-        let sc = spec.to_scenario()?;
-        let ci = self.coordinator_index(&sc.citer, &sc.solve_opts);
+        let sc = spec.to_scenario(platform)?;
+        Ok(self.enqueue_materialized(spec, sc, platform, groups, seen))
+    }
+
+    /// [`Self::enqueue`] for a scenario already materialized from `spec` on
+    /// `platform` (the Sensitivity path validates both siblings first and
+    /// hands the results straight in). Infallible: materialization is the
+    /// only failing step.
+    fn enqueue_materialized(
+        &mut self,
+        spec: &ScenarioSpec,
+        sc: Scenario,
+        platform: &PlatformSpec,
+        groups: &mut Vec<(usize, Vec<Scenario>)>,
+        seen: &mut Vec<(ScenarioSpec, Slot)>,
+    ) -> Slot {
+        if let Some((_, slot)) = seen.iter().find(|(s, _)| s == spec) {
+            return *slot;
+        }
+        let ci = self.coordinator_index(platform, &sc.citer, &sc.solve_opts);
         let g = match groups.iter().position(|(c, _)| *c == ci) {
             Some(g) => g,
             None => {
@@ -334,7 +401,7 @@ impl Session {
         groups[g].1.push(sc);
         let slot = (g, groups[g].1.len() - 1);
         seen.push((spec.clone(), slot));
-        Ok(slot)
+        slot
     }
 
     fn finish(
@@ -345,7 +412,7 @@ impl Session {
     ) -> SessionAnswer {
         match plan {
             Plan::Direct(response, detail) => SessionAnswer { response, detail },
-            Plan::One { slot: (g, i), kind } => {
+            Plan::One { slot: (g, i), kind, platform } => {
                 let scenario = groups[g].1[i].clone();
                 let result = batches[g][i].result.clone();
                 let response = match kind {
@@ -365,16 +432,22 @@ impl Session {
                 };
                 SessionAnswer {
                     response,
-                    detail: ResponseDetail::Scenarios(vec![ScenarioDetail { scenario, result }]),
+                    detail: ResponseDetail::Scenarios(vec![ScenarioDetail {
+                        scenario,
+                        platform,
+                        result,
+                    }]),
                 }
             }
-            Plan::Sensitivity { s2: (g2, i2), s3: (g3, i3), band } => {
+            Plan::Sensitivity { s2: (g2, i2), s3: (g3, i3), p2, p3, band } => {
                 let d2 = ScenarioDetail {
                     scenario: groups[g2].1[i2].clone(),
+                    platform: p2,
                     result: batches[g2][i2].result.clone(),
                 };
                 let d3 = ScenarioDetail {
                     scenario: groups[g3].1[i3].clone(),
+                    platform: p3,
                     result: batches[g3][i3].result.clone(),
                 };
                 let response =
@@ -396,14 +469,17 @@ impl Session {
             Some(id) => Workload::single(id),
             None => Workload::uniform_2d(),
         };
+        let platform = self.resolve_platform(req.platform);
         // Characterization-level cache keys, exactly as the batch engine
         // builds them (cache.rs: the stencil must carry its table C_iter).
         let chars = req.citer.characterize_workload(&workload);
-        let candidates = candidate_grid(&pinned, req.budget_mm2, &self.area_model);
-        let ci = self.coordinator_index(&req.citer, &req.solve_opts);
+        let candidates =
+            candidate_grid(&pinned, req.budget_mm2, &platform.space, &platform.area_model());
+        let ci = self.coordinator_index(&platform, &req.citer, &req.solve_opts);
         let coord = &self.coordinators[ci].2;
+        let fp = coord.platform_fingerprint();
         let threads = req.threads.unwrap_or_else(default_threads).max(1);
-        let time_model = &self.time_model;
+        let time_model = coord.time_model();
         let (citer, opts) = (&req.citer, &req.solve_opts);
         let solved: Vec<(Option<(f64, f64)>, u64)> = parallel_map(&candidates, threads, |cand| {
             let per_entry: Vec<Option<InnerSolution>> = workload
@@ -411,10 +487,10 @@ impl Session {
                 .iter()
                 .zip(&chars)
                 .map(|(e, st)| {
-                    let key = CacheKey::new(&cand.hw, st, &e.size);
+                    let key = CacheKey::new(fp, &cand.hw, st, &e.size);
                     coord
                         .cache
-                        .get_or_compute(key, || solve_entry(time_model, citer, &cand.hw, e, opts))
+                        .get_or_compute(key, || solve_entry(&time_model, citer, &cand.hw, e, opts))
                 })
                 .collect();
             let evals: u64 = per_entry.iter().flatten().map(|s| s.evals).sum();
@@ -484,11 +560,11 @@ fn scenario_summary(result: &ScenarioResult) -> ScenarioSummary {
                 .stats
                 .vs_reference
                 .iter()
-                .find(|(name, _, _)| name == r.name)
+                .find(|(name, _, _)| *name == r.name)
                 .map(|(_, pct, _)| *pct)
                 .filter(|pct| pct.is_finite());
             ReferenceSummary {
-                name: r.name.to_string(),
+                name: r.name.clone(),
                 area_mm2: r.area_mm2,
                 published_area_mm2: r.published_area_mm2,
                 gflops: r.gflops,

@@ -4,17 +4,28 @@
 //! `{"type": …}`-tagged object and decodes back **bit-exactly** (floats ride
 //! Rust's shortest-round-trip formatting; non-finite values encode as
 //! `null` and decode as NaN). Request and response files share one envelope,
-//! `{"schema": 2, "requests"|"responses": […]}`; an unknown schema version is
+//! `{"schema": 3, "requests"|"responses": […]}`; an unknown schema version is
 //! a clean error, never a guess.
 //!
-//! **Schema history.** v2 is a strict superset of v1 (v1 files still decode):
-//! every field where v1 accepted a stencil name (`class`, `stencil`, weights
-//! and `citer` entries) now also accepts a parametric family name like
-//! `star3d:r2` or `box2d:r1:f20` (the canonical
-//! [`StencilSpec`](crate::stencil::spec::StencilSpec) grammar), which
-//! registers the family member on decode; and
-//! `citer` tables may carry entries beyond the six presets. Encoding emits
-//! canonical names, so specs round-trip bit-exactly through their name.
+//! **Schema history.** Each version is a strict superset of its predecessor
+//! (older files still decode):
+//!
+//! * **v2** — every field where v1 accepted a stencil name (`class`,
+//!   `stencil`, weights and `citer` entries) also accepts a parametric
+//!   family name like `star3d:r2` or `box2d:r1:f20` (the canonical
+//!   [`StencilSpec`](crate::stencil::spec::StencilSpec) grammar), which
+//!   registers the family member on decode; `citer` tables may carry
+//!   entries beyond the six presets.
+//! * **v3** — scenario specs and tune requests gain an optional `platform`
+//!   field carrying a platform name: a preset (`maxwell`, `maxwell+`,
+//!   `maxwell-nocache`) or an override name like `maxwell:bw20:clk1.4` (the
+//!   canonical [`PlatformSpec`](crate::platform::PlatformSpec) grammar),
+//!   registered on decode. Absent or `null` means the serving session's
+//!   default platform — so v1/v2 files decode unchanged and resolve to
+//!   `maxwell`.
+//!
+//! Encoding emits canonical names, so specs round-trip bit-exactly through
+//! their name.
 //!
 //! # Examples
 //!
@@ -27,6 +38,7 @@
 //! ```
 
 use crate::opt::problem::SolveOpts;
+use crate::platform::registry::{Platform, PlatformId};
 use crate::service::request::{
     CodesignRequest, CodesignResponse, DesignSummary, ErrorInfo, ParetoSummary,
     ReferenceSummary, ScenarioSpec, ScenarioSummary, SensitivityRow, SensitivitySummary,
@@ -38,9 +50,9 @@ use crate::util::json::{parse, Json};
 use anyhow::{anyhow, bail, ensure, Result};
 
 /// The wire schema this build emits.
-pub const SCHEMA_VERSION: u64 = 2;
+pub const SCHEMA_VERSION: u64 = 3;
 
-/// The oldest schema this build still accepts (v2 is additive over v1).
+/// The oldest schema this build still accepts (each version is additive).
 pub const MIN_SCHEMA_VERSION: u64 = 1;
 
 // ---------------------------------------------------------------------------
@@ -222,6 +234,23 @@ fn opt_weights_from_json(obj: &Json, key: &str) -> Result<Vec<(StencilId, f64)>>
     }
 }
 
+/// A platform name on the wire (v3): a preset or an override name
+/// (`maxwell:bw20`), registered on decode. Absent or null → the serving
+/// session's default. Unknown names list the presets and the grammar.
+fn opt_platform_from_json(obj: &Json, key: &str) -> Result<Option<PlatformId>> {
+    match obj.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Str(s)) => {
+            Platform::by_name_err(s).map(|p| Some(p.id)).map_err(|msg| anyhow!("{msg}"))
+        }
+        _ => bail!("field '{key}' must be a platform name or null"),
+    }
+}
+
+fn opt_platform_to_json(p: Option<PlatformId>) -> Json {
+    p.map(|id| Json::str(id.name())).unwrap_or(Json::Null)
+}
+
 fn class_to_json(c: WorkloadClass) -> Json {
     Json::str(c.name())
 }
@@ -235,6 +264,7 @@ pub fn spec_to_json(s: &ScenarioSpec) -> Json {
     Json::obj(vec![
         ("name", s.name.as_deref().map(Json::str).unwrap_or(Json::Null)),
         ("class", class_to_json(s.class)),
+        ("platform", opt_platform_to_json(s.platform)),
         ("quick_stride", opt_unum(s.quick_stride.map(|v| v as u64))),
         ("area_budget_mm2", opt_num(s.area_budget_mm2)),
         ("weights", weights_to_json(&s.stencil_weights)),
@@ -248,6 +278,7 @@ pub fn spec_from_json(j: &Json) -> Result<ScenarioSpec> {
     Ok(ScenarioSpec {
         name: get_opt_str(j, "name")?.map(str::to_string),
         class: class_from_json(field(j, "class")?)?,
+        platform: opt_platform_from_json(j, "platform")?,
         quick_stride: get_opt_u64(j, "quick_stride")?.map(|v| v as usize),
         area_budget_mm2: get_opt_f64(j, "area_budget_mm2")?,
         stencil_weights: opt_weights_from_json(j, "weights")?,
@@ -285,6 +316,7 @@ pub fn request_to_json(r: &CodesignRequest) -> Json {
             ("n_v", opt_unum(t.n_v.map(|v| v as u64))),
             ("m_sm_kb", opt_num(t.m_sm_kb)),
             ("stencil", t.stencil.map(|id| Json::str(id.name())).unwrap_or(Json::Null)),
+            ("platform", opt_platform_to_json(t.platform)),
             ("threads", opt_unum(t.threads.map(|v| v as u64))),
             ("citer", citer_to_json(&t.citer)),
             ("solve", solve_opts_to_json(&t.solve_opts)),
@@ -328,6 +360,7 @@ pub fn request_from_json(j: &Json) -> Result<CodesignRequest> {
                 None | Some(Json::Null) => None,
                 Some(s) => Some(stencil_from_json(s)?),
             },
+            platform: opt_platform_from_json(j, "platform")?,
             threads: get_opt_u64(j, "threads")?.map(|v| v as usize),
             citer: opt_citer_from_json(j, "citer")?,
             solve_opts: opt_solve_opts_from_json(j, "solve")?,
@@ -580,7 +613,7 @@ fn check_schema(j: &Json) -> Result<()> {
     Ok(())
 }
 
-/// `{"schema": 2, "requests": […]}`.
+/// `{"schema": 3, "requests": […]}`.
 pub fn encode_requests(requests: &[CodesignRequest]) -> Json {
     Json::obj(vec![
         ("schema", Json::Num(SCHEMA_VERSION as f64)),
@@ -600,7 +633,7 @@ pub fn decode_requests(text: &str) -> Result<Vec<CodesignRequest>> {
         .collect()
 }
 
-/// `{"schema": 2, "responses": […]}`.
+/// `{"schema": 3, "responses": […]}`.
 pub fn encode_responses(responses: &[CodesignResponse]) -> Json {
     Json::obj(vec![
         ("schema", Json::Num(SCHEMA_VERSION as f64)),
@@ -639,7 +672,8 @@ mod tests {
             "fractional versions are not a thing");
         assert!(decode_requests(r#"{"requests": []}"#).is_err());
         assert!(decode_requests("not json").is_err());
-        // Both the emitted version and the legacy v1 envelope decode.
+        // The emitted version and both legacy envelopes decode.
+        assert!(decode_requests(r#"{"schema": 3, "requests": []}"#).unwrap().is_empty());
         assert!(decode_requests(r#"{"schema": 2, "requests": []}"#).unwrap().is_empty());
         assert!(decode_requests(r#"{"schema": 1, "requests": []}"#).unwrap().is_empty());
     }
@@ -665,5 +699,28 @@ mod tests {
         let j = parse(r#"{"type": "frobnicate"}"#).unwrap();
         assert!(request_from_json(&j).is_err());
         assert!(response_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn platform_names_decode_and_roundtrip() {
+        // Explicit presets and override names round-trip through the name.
+        let spec = ScenarioSpec::two_d().on_platform(PlatformId::MaxwellPlus);
+        let back = spec_from_json(&spec_to_json(&spec)).unwrap();
+        assert_eq!(spec, back);
+        let j = parse(r#"{"class": "2d", "platform": "maxwell:bw20:clk1.4"}"#).unwrap();
+        let s = spec_from_json(&j).unwrap();
+        assert_eq!(s.platform.unwrap().name(), "maxwell:clk1.4:bw20");
+        // v2-style specs without a platform field decode to None (session
+        // default = maxwell), as do explicit nulls.
+        let j = parse(r#"{"class": "2d"}"#).unwrap();
+        assert_eq!(spec_from_json(&j).unwrap().platform, None);
+        let j = parse(r#"{"class": "2d", "platform": null}"#).unwrap();
+        assert_eq!(spec_from_json(&j).unwrap().platform, None);
+        // Unknown platforms list the presets and the override grammar.
+        let j = parse(r#"{"class": "2d", "platform": "kepler"}"#).unwrap();
+        let err = format!("{:#}", spec_from_json(&j).unwrap_err());
+        for needle in ["maxwell", "maxwell+", "maxwell-nocache", "clk (GHz)"] {
+            assert!(err.contains(needle), "'{err}' should mention '{needle}'");
+        }
     }
 }

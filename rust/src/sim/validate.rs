@@ -2,10 +2,11 @@
 //! real-GPU validation of [27]).
 
 use crate::area::params::HwParams;
+use crate::platform::spec::PlatformSpec;
 use crate::sim::run::simulate;
 use crate::stencil::defs::{Stencil, StencilId};
 use crate::stencil::workload::ProblemSize;
-use crate::timemodel::talg::{SoftwareParams, TimeModel};
+use crate::timemodel::talg::SoftwareParams;
 use crate::timemodel::tiling::TileSizes;
 use crate::util::stats;
 
@@ -58,14 +59,21 @@ pub fn kendall_tau(a: &[f64], b: &[f64]) -> f64 {
 }
 
 /// The default validation sweep: a grid of hardware shapes × tile shapes ×
-/// both dimensionalities, at simulator-tractable problem sizes.
-pub fn default_cases() -> Vec<(Stencil, ProblemSize, HwParams, SoftwareParams)> {
+/// both dimensionalities, at simulator-tractable problem sizes. Hardware
+/// shapes are variations of the platform's first reference architecture
+/// (formerly a hard-coded GTX 980).
+pub fn default_cases(platform: &PlatformSpec) -> Vec<(Stencil, ProblemSize, HwParams, SoftwareParams)> {
+    let base = platform
+        .references
+        .first()
+        .map(|r| r.hw)
+        .expect("platform has no reference architectures");
     let mut cases = Vec::new();
     let hw_variants = [
-        HwParams::gtx980(),
-        HwParams { n_sm: 8, n_v: 256, ..HwParams::gtx980() },
-        HwParams { n_sm: 32, n_v: 64, ..HwParams::gtx980() },
-        HwParams { n_sm: 16, n_v: 128, m_sm_kb: 48.0, ..HwParams::gtx980() },
+        base,
+        HwParams { n_sm: 8, n_v: 256, ..base },
+        HwParams { n_sm: 32, n_v: 64, ..base },
+        HwParams { n_sm: 16, n_v: 128, m_sm_kb: 48.0, ..base },
     ];
     let sw_2d = [
         SoftwareParams::new(TileSizes::d2(32, 64, 8), 2),
@@ -93,10 +101,11 @@ pub fn default_cases() -> Vec<(Stencil, ProblemSize, HwParams, SoftwareParams)> 
     cases
 }
 
-/// Run the sweep and aggregate.
-pub fn validate_sweep(model: &TimeModel) -> ValidationReport {
+/// Run the sweep and aggregate, under the platform's time model.
+pub fn validate_sweep(platform: &PlatformSpec) -> ValidationReport {
+    let model = platform.time_model();
     let mut cases = Vec::new();
-    for (stencil, size, hw, sw) in default_cases() {
+    for (stencil, size, hw, sw) in default_cases(platform) {
         if model.feasibility(&stencil, &hw, &sw).is_err() {
             continue;
         }
@@ -140,7 +149,7 @@ mod tests {
         // The analytical model must track the independent simulator within a
         // generous envelope (the paper's own model-vs-silicon errors are
         // ~10–30% per [27]) and, crucially, preserve configuration ranking.
-        let rep = validate_sweep(&TimeModel::maxwell());
+        let rep = validate_sweep(crate::platform::registry::Platform::default_spec());
         assert!(rep.cases.len() >= 20, "only {} cases", rep.cases.len());
         assert!(rep.mape_pct < 40.0, "MAPE {}%", rep.mape_pct);
         assert!(rep.kendall_tau > 0.7, "kendall tau {}", rep.kendall_tau);

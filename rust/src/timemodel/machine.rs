@@ -28,16 +28,21 @@ pub struct MachineSpec {
     /// Warp width (32 lanes).
     pub warp: u32,
     /// Latency-hiding factor λ: an SM needs ≈ λ·n_V resident threads to
-    /// fully hide pipeline + shared-memory latency — at the reference 96 kB
-    /// shared memory.
+    /// fully hide pipeline + shared-memory latency — at the reference
+    /// shared-memory capacity `shm_ref_kb`.
     pub latency_factor: f64,
     /// Shared-memory access latency grows with capacity (Cacti's delay
     /// scales ≈ √capacity through longer word/bit lines); the effective λ is
-    /// `latency_factor · (M_SM / 96 kB)^shm_latency_exponent`. This is what
-    /// stops the optimizer from treating scratchpad capacity as free
+    /// `latency_factor · (M_SM / shm_ref_kb)^shm_latency_exponent`. This is
+    /// what stops the optimizer from treating scratchpad capacity as free
     /// performance: a 480 kB SM needs ~1.5× the resident parallelism of a
     /// 96 kB one.
     pub shm_latency_exponent: f64,
+    /// The shared-memory capacity (kB) at which `latency_factor` was
+    /// calibrated — Maxwell's 96 kB. Historically this reference was baked
+    /// into `latency_factor_for` as a literal; platforms calibrated at a
+    /// different capacity override it here.
+    pub shm_ref_kb: f64,
     /// Per-wavefront synchronization / block-dispatch overhead, cycles.
     pub sync_cycles: f64,
 }
@@ -54,13 +59,15 @@ impl MachineSpec {
             warp: 32,
             latency_factor: 4.0,
             shm_latency_exponent: 0.25,
+            shm_ref_kb: 96.0,
             sync_cycles: 600.0,
         }
     }
 
     /// Effective latency-hiding factor for a given shared-memory capacity.
     pub fn latency_factor_for(&self, m_sm_kb: f64) -> f64 {
-        self.latency_factor * (m_sm_kb.max(1.0) / 96.0).powf(self.shm_latency_exponent)
+        self.latency_factor
+            * (m_sm_kb.max(1.0) / self.shm_ref_kb).powf(self.shm_latency_exponent)
     }
 
     /// Bytes one SM's bandwidth slice delivers per core clock cycle.
@@ -83,5 +90,16 @@ mod tests {
         assert_eq!(m.mem_bw_per_sm_gbs * 24.0, 336.0);
         // 14 GB/s at 1.2 GHz ≈ 11.7 B/cycle/SM.
         assert!((m.bytes_per_cycle_per_sm() - 11.667).abs() < 0.01);
+    }
+
+    #[test]
+    fn latency_factor_scales_around_the_reference_capacity() {
+        let m = MachineSpec::maxwell();
+        // At the reference capacity the factor is the calibrated λ itself.
+        assert_eq!(m.latency_factor_for(m.shm_ref_kb), m.latency_factor);
+        // A platform calibrated at 48 kB pivots there instead.
+        let half_ref = MachineSpec { shm_ref_kb: 48.0, ..m };
+        assert_eq!(half_ref.latency_factor_for(48.0), m.latency_factor);
+        assert!(half_ref.latency_factor_for(96.0) > m.latency_factor);
     }
 }

@@ -11,13 +11,12 @@
 //!    ground truth recomputed from first principles, and a repeated batch
 //!    over the same grid is ≥99% hits.
 
-use codesign::area::{AreaModel, HwParams};
 use codesign::codesign::pareto::pareto_front;
 use codesign::codesign::scenario::{self, Scenario, ScenarioResult};
 use codesign::codesign::space::enumerate_space;
 use codesign::coordinator::{CacheKey, Coordinator};
+use codesign::platform::Platform;
 use codesign::stencil::defs::StencilId;
-use codesign::timemodel::TimeModel;
 use std::collections::HashSet;
 
 /// Four scenario shapes the batch API advertises: the base mix, a
@@ -42,7 +41,7 @@ fn batch(threads: usize) -> Vec<Scenario> {
 }
 
 fn fresh_coordinator() -> Coordinator {
-    Coordinator::new(AreaModel::paper(), TimeModel::maxwell())
+    Coordinator::paper()
 }
 
 fn assert_bit_identical(a: &ScenarioResult, b: &ScenarioResult) {
@@ -78,10 +77,8 @@ fn batch_is_deterministic_across_thread_counts() {
 fn batch_matches_direct_per_scenario_runs() {
     let scenarios = batch(8);
     let results = fresh_coordinator().run_batch(&scenarios);
-    let am = AreaModel::paper();
-    let tm = TimeModel::maxwell();
     for (sc, batched) in scenarios.iter().zip(&results) {
-        let direct = scenario::run(sc, &am, &tm);
+        let direct = scenario::run(sc, Platform::default_spec());
         assert_eq!(batched.points.len(), direct.points.len(), "{}", sc.name);
         for (a, b) in batched.points.iter().zip(&direct.points) {
             assert_eq!(a.hw, b.hw);
@@ -135,9 +132,11 @@ fn cache_accounting_matches_recomputed_ground_truth() {
 
     // Ground truth from first principles: the batch must look up each
     // deduplicated (hw, stencil, size) instance once in the sweep phase —
-    // including the two reference architectures per scenario — and
-    // (|space| + 2 references) x |entries| per scenario in the serve phase.
-    let am = AreaModel::paper();
+    // including the platform's reference architectures per scenario — and
+    // (|space| + references) x |entries| per scenario in the serve phase.
+    let platform = Platform::default_spec();
+    let am = platform.area_model();
+    let fp = platform.fingerprint();
     let mut uniq: HashSet<CacheKey> = HashSet::new();
     let mut serve_lookups = 0u64;
     for sc in &scenarios {
@@ -145,15 +144,16 @@ fn cache_accounting_matches_recomputed_ground_truth() {
         // applied), via the same helper the engine uses.
         let chars = sc.citer.characterize_workload(&sc.workload);
         let space = enumerate_space(&am, &sc.space);
-        serve_lookups += ((space.len() + 2) * sc.workload.entries.len()) as u64;
+        serve_lookups +=
+            ((space.len() + platform.references.len()) * sc.workload.entries.len()) as u64;
         for pt in &space {
             for (e, st) in sc.workload.entries.iter().zip(&chars) {
-                uniq.insert(CacheKey::new(&pt.hw, st, &e.size));
+                uniq.insert(CacheKey::new(fp, &pt.hw, st, &e.size));
             }
         }
-        for hw in [HwParams::gtx980(), HwParams::titanx()] {
+        for r in &platform.references {
             for (e, st) in sc.workload.entries.iter().zip(&chars) {
-                uniq.insert(CacheKey::new(&hw, st, &e.size));
+                uniq.insert(CacheKey::new(fp, &r.hw, st, &e.size));
             }
         }
     }

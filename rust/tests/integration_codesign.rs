@@ -2,13 +2,13 @@
 //! qualitative reproduction of every §V claim at test scale.
 
 use codesign::area::AreaModel;
+use codesign::platform::Platform;
 use codesign::codesign::allocation::{allocation_points, dispersion};
 use codesign::codesign::cacheless::cacheless_comparison;
 use codesign::codesign::scenario::{run, Scenario};
 use codesign::codesign::sensitivity::best_for_benchmark;
 use codesign::coordinator::Coordinator;
 use codesign::stencil::defs::StencilId;
-use codesign::timemodel::TimeModel;
 use std::sync::OnceLock;
 
 fn quick_scenarios() -> (&'static Scenario, &'static Scenario) {
@@ -36,9 +36,8 @@ fn results() -> &'static (
     )> = OnceLock::new();
     CELL.get_or_init(|| {
         let (s2, s3) = quick_scenarios();
-        let am = AreaModel::paper();
-        let tm = TimeModel::maxwell();
-        (run(s2, &am, &tm), run(s3, &am, &tm))
+        let p = Platform::default_spec();
+        (run(s2, p), run(s3, p))
     })
 }
 
@@ -133,7 +132,7 @@ fn claim_per_benchmark_optima_differ() {
 #[test]
 fn coordinator_reweighting_is_free_and_consistent() {
     let (s2, _) = quick_scenarios();
-    let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+    let coord = Coordinator::paper();
     let first = coord.run_scenario(s2);
     let misses_after_first = coord.cache.len();
     // Same scenario again: zero new instances.

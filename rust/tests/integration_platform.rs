@@ -1,0 +1,378 @@
+//! Certification of the first-class `Platform` API (PR 4):
+//!
+//! * **Bit-identity** — the `maxwell` preset reproduces the pre-redesign
+//!   constants exactly: a platform-driven sweep/front/tune equals one run
+//!   against a spec assembled directly from the historical constructors
+//!   (`MachineSpec::maxwell()`, `AreaCoeffs::paper()`, `PowerModel::maxwell()`,
+//!   `SpaceSpec::paper()`, GTX 980/Titan X at published areas) — the
+//!   recorded oracle;
+//! * **Wire v3** — requests round-trip bit-exactly with and without
+//!   `platform`; v1/v2 files decode and resolve to `maxwell`;
+//! * **Fingerprint sharing** — identically-fingerprinted platform spellings
+//!   share memoized sweep instances (zero new misses) while a
+//!   bandwidth-tweaked platform does not;
+//! * **Serve** — the shipped mixed-platform request file is answered from
+//!   one warm session; repeat submission is ≥99% cache hits and the
+//!   `maxwell` answers are bit-identical to the oracle.
+
+use codesign::area::{AreaCoeffs, AreaModel, HwParams};
+use codesign::codesign::power::PowerModel;
+use codesign::codesign::scenario::{self, Scenario, ScenarioResult};
+use codesign::codesign::space::SpaceSpec;
+use codesign::codesign::tuner::{tune, Pinned};
+use codesign::coordinator::Coordinator;
+use codesign::opt::problem::SolveOpts;
+use codesign::platform::{Platform, PlatformId, PlatformSpec, ReferenceHw};
+use codesign::service::{
+    wire, CodesignRequest, CodesignResponse, ScenarioSpec, Session, TuneRequest,
+};
+use codesign::stencil::defs::StencilId;
+use codesign::stencil::workload::Workload;
+use codesign::timemodel::citer::CIterTable;
+use codesign::timemodel::MachineSpec;
+
+/// The pre-redesign oracle: the exact model bundle every construction site
+/// used to assemble by hand. The historical constructors still exist, so the
+/// oracle is recorded from them directly, bypassing the registry.
+fn legacy_oracle_spec() -> PlatformSpec {
+    PlatformSpec {
+        base: "maxwell".to_string(),
+        machine: MachineSpec::maxwell(),
+        area: AreaCoeffs::paper(),
+        power: PowerModel::maxwell(),
+        space: SpaceSpec::paper(),
+        references: vec![
+            ReferenceHw::new("gtx980", HwParams::gtx980(), 398.0),
+            ReferenceHw::new("titanx", HwParams::titanx(), 601.0),
+        ],
+    }
+}
+
+fn quick() -> Scenario {
+    Scenario::quick(Scenario::paper_2d(), 8)
+}
+
+fn assert_bit_identical(a: &ScenarioResult, b: &ScenarioResult) {
+    assert_eq!(a.points.len(), b.points.len());
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.hw, pb.hw);
+        assert_eq!(pa.gflops.to_bits(), pb.gflops.to_bits());
+        assert_eq!(pa.seconds.to_bits(), pb.seconds.to_bits());
+        assert_eq!(pa.area_mm2.to_bits(), pb.area_mm2.to_bits());
+    }
+    assert_eq!(a.pareto, b.pareto);
+    assert_eq!(a.total_evals, b.total_evals);
+    assert_eq!(a.infeasible_points, b.infeasible_points);
+    assert_eq!(a.references.len(), b.references.len());
+    for (ra, rb) in a.references.iter().zip(&b.references) {
+        assert_eq!(ra.name, rb.name);
+        assert_eq!(ra.gflops.to_bits(), rb.gflops.to_bits());
+        assert_eq!(ra.area_mm2.to_bits(), rb.area_mm2.to_bits());
+        assert_eq!(ra.published_area_mm2.to_bits(), rb.published_area_mm2.to_bits());
+    }
+}
+
+#[test]
+fn maxwell_preset_is_the_recorded_oracle() {
+    let oracle = legacy_oracle_spec();
+    let preset = Platform::default_spec();
+    // Field-level bit-identity of the bundle itself…
+    assert_eq!(preset, &oracle);
+    assert_eq!(preset.fingerprint(), oracle.fingerprint());
+    // …and behavioural bit-identity of a full sweep through both paths.
+    let sc = quick();
+    let via_registry = Coordinator::paper().run_scenario(&sc).result;
+    let via_oracle = scenario::run(&sc, &oracle);
+    assert_bit_identical(&via_registry, &via_oracle);
+}
+
+#[test]
+fn maxwell_tune_matches_the_oracle_bit_exactly() {
+    let oracle = legacy_oracle_spec();
+    let pinned = Pinned { n_sm: None, n_v: Some(128), m_sm_kb: Some(96.0), caches: None };
+    let wl = Workload::single(StencilId::Heat2D);
+    let direct =
+        tune(&pinned, 430.0, &wl, &oracle, &CIterTable::paper(), &SolveOpts::default())
+            .expect("feasible");
+
+    let mut session = Session::paper();
+    let req = TuneRequest::new(430.0)
+        .pin_n_v(128)
+        .pin_m_sm_kb(96.0)
+        .for_stencil(StencilId::Heat2D)
+        .on_platform(PlatformId::Maxwell);
+    let answer = session.submit(&CodesignRequest::tune(req));
+    let CodesignResponse::Tune(t) = &answer.response else {
+        panic!("unexpected {}", answer.response.kind());
+    };
+    assert_eq!(t.candidates, direct.candidates);
+    let best = t.best.as_ref().unwrap();
+    assert_eq!(best.n_sm, direct.hw.n_sm);
+    assert_eq!(best.gflops.to_bits(), direct.gflops.to_bits());
+    assert_eq!(best.area_mm2.to_bits(), direct.area_mm2.to_bits());
+}
+
+// ---------------------------------------------------------------------------
+// Wire v3
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wire_v3_roundtrips_every_request_variant_with_and_without_platform() {
+    let platforms = [None, Some(PlatformId::Maxwell), Some(PlatformId::MaxwellPlus)];
+    for platform in platforms {
+        let with = |mut s: ScenarioSpec| {
+            s.platform = platform;
+            s
+        };
+        let mut tune_req = TuneRequest::new(431.5).pin_n_v(128);
+        tune_req.platform = platform;
+        let requests = vec![
+            CodesignRequest::explore(with(ScenarioSpec::two_d().quick(7))),
+            CodesignRequest::pareto(with(ScenarioSpec::three_d().with_area_budget(450.5))),
+            CodesignRequest::what_if(
+                with(ScenarioSpec::two_d()),
+                vec![(StencilId::Jacobi2D, 1.0 / 3.0)],
+            ),
+            CodesignRequest::sensitivity(
+                with(ScenarioSpec::two_d()),
+                with(ScenarioSpec::three_d()),
+                (425.0, 450.0),
+            ),
+            CodesignRequest::tune(tune_req),
+            CodesignRequest::validate(),
+            CodesignRequest::solver_cost(777),
+        ];
+        for r in &requests {
+            let back = wire::request_from_json(&wire::request_to_json(r)).unwrap();
+            assert_eq!(*r, back, "{} variant, platform {platform:?}", r.kind());
+        }
+        let text = wire::encode_requests(&requests).to_string_pretty();
+        assert_eq!(wire::decode_requests(&text).unwrap(), requests);
+    }
+    // Override-derived platforms ride their canonical name bit-exactly.
+    let id = Platform::by_name_err("maxwell:bw20:clk1.4").unwrap().id;
+    let spec = ScenarioSpec::two_d().on_platform(id);
+    let back = wire::decode_requests(
+        &wire::encode_requests(&[CodesignRequest::explore(spec.clone())]).to_string_compact(),
+    )
+    .unwrap();
+    assert_eq!(back, vec![CodesignRequest::explore(spec)]);
+}
+
+#[test]
+fn v2_files_decode_and_resolve_to_maxwell() {
+    // A v2-era envelope: no platform field anywhere.
+    let text = r#"{
+        "schema": 2,
+        "requests": [
+            { "type": "explore", "scenario": { "class": "2d", "quick_stride": 8 } }
+        ]
+    }"#;
+    let requests = wire::decode_requests(text).expect("v2 files must decode");
+    let CodesignRequest::Explore { scenario } = &requests[0] else { panic!("explore") };
+    assert_eq!(scenario.platform, None, "absent platform decodes to None");
+
+    // Served, it must answer bit-identically to an explicit-maxwell request
+    // (None = session default = maxwell).
+    let mut session = Session::paper();
+    let legacy = session.submit(&requests[0]);
+    let explicit = session.submit(&CodesignRequest::explore(
+        ScenarioSpec::two_d().quick(8).named("2d").on_platform(PlatformId::Maxwell),
+    ));
+    let (CodesignResponse::Explore(a), CodesignResponse::Explore(b)) =
+        (&legacy.response, &explicit.response)
+    else {
+        panic!("explore answers expected");
+    };
+    assert_eq!(a, b, "default and explicit maxwell must answer identically");
+}
+
+// ---------------------------------------------------------------------------
+// Fingerprint partitioning / sweep sharing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn identical_fingerprints_share_sweeps_tweaked_ones_do_not() {
+    let mut session = Session::paper();
+    let base = ScenarioSpec::two_d().quick(8);
+
+    let first = session.submit_all(&[CodesignRequest::explore(base.clone())]);
+    assert!(first.unique_instances > 0);
+    let entries = session.cache_entries();
+    assert_eq!(session.partitions(), 1);
+
+    // Explicit `maxwell` and the identity override `maxwell:clk1.2` spell
+    // differently but fingerprint identically: same partition, zero new
+    // memoized instances, ≥99% hits.
+    let clk_id = Platform::by_name_err("maxwell:clk1.2").unwrap().id;
+    for id in [PlatformId::Maxwell, clk_id] {
+        let rep = session
+            .submit_all(&[CodesignRequest::explore(base.clone().on_platform(id))]);
+        assert_eq!(session.partitions(), 1, "{}: same fingerprint, same partition", id.name());
+        assert_eq!(session.cache_entries(), entries, "{}: zero new instances", id.name());
+        assert!(rep.cache_hit_rate() >= 0.99, "{}: {}", id.name(), rep.cache_hit_rate());
+    }
+
+    // A bandwidth-tweaked platform is a different model: its own partition,
+    // its own sweep, different objective values.
+    let bw_id = Platform::by_name_err("maxwell:bw20").unwrap().id;
+    let rep = session.submit_all(&[CodesignRequest::explore(base.clone().on_platform(bw_id))]);
+    assert_eq!(session.partitions(), 2, "tweaked platform gets its own partition");
+    assert!(session.cache_entries() > entries, "tweaked platform must sweep anew");
+    let CodesignResponse::Explore(tweaked) = &rep.answers[0].response else { panic!() };
+    let maxwell_answer = session.submit(&CodesignRequest::explore(base));
+    let CodesignResponse::Explore(stock) = &maxwell_answer.response else { panic!() };
+    assert_eq!(tweaked.designs, stock.designs, "same enumeration grid");
+    let moved = tweaked.pareto.len() != stock.pareto.len()
+        || tweaked
+            .pareto
+            .iter()
+            .zip(&stock.pareto)
+            .any(|(a, b)| a.gflops.to_bits() != b.gflops.to_bits())
+        || tweaked.best.as_ref().unwrap().gflops.to_bits()
+            != stock.best.as_ref().unwrap().gflops.to_bits();
+    assert!(moved, "more bandwidth must move the frontier somewhere");
+}
+
+#[test]
+fn derived_presets_answer_differently_from_maxwell() {
+    // maxwell+ doubles per-SM bandwidth and raises the clock: the best
+    // design must get strictly faster. maxwell-nocache shares the machine
+    // but compares against cache-stripped (smaller) references, so its
+    // reference rows shrink in area.
+    let mut session = Session::paper();
+    let base = ScenarioSpec::two_d().quick(8);
+    let stock = session.submit(&CodesignRequest::explore(base.clone()));
+    let plus = session.submit(&CodesignRequest::explore(
+        base.clone().on_platform(PlatformId::MaxwellPlus),
+    ));
+    let nocache = session.submit(&CodesignRequest::explore(
+        base.on_platform(PlatformId::MaxwellNoCache),
+    ));
+    let (CodesignResponse::Explore(s), CodesignResponse::Explore(p), CodesignResponse::Explore(n)) =
+        (&stock.response, &plus.response, &nocache.response)
+    else {
+        panic!("explore answers expected");
+    };
+    assert!(
+        p.best.as_ref().unwrap().gflops > s.best.as_ref().unwrap().gflops,
+        "maxwell+ ({}) must beat maxwell ({})",
+        p.best.as_ref().unwrap().gflops,
+        s.best.as_ref().unwrap().gflops
+    );
+    for (rn, rs) in n.references.iter().zip(&s.references) {
+        assert_eq!(rn.name, rs.name);
+        assert!(rn.area_mm2 < rs.area_mm2, "{}: cache-stripped reference is smaller", rn.name);
+        assert_eq!(
+            rn.gflops.to_bits(),
+            rs.gflops.to_bits(),
+            "{}: performance is cache-independent in this model",
+            rn.name
+        );
+    }
+    assert_eq!(session.partitions(), 3);
+}
+
+// ---------------------------------------------------------------------------
+// The shipped mixed-platform request file
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mixed_platform_request_file_serves_warm_from_one_session() {
+    let text = include_str!("../../examples/platform_requests.json");
+    let requests = wire::decode_requests(text).expect("shipped request file must decode");
+    assert!(requests.len() >= 6, "the example promises a mixed batch");
+
+    // The batch genuinely mixes platforms: default (maxwell) plus at least
+    // one override-derived and one derived preset.
+    let mut named: Vec<&str> = Vec::new();
+    let mut defaulted = 0;
+    for r in &requests {
+        match r.platforms().0 {
+            Some(id) => named.push(id.name()),
+            None => defaulted += 1,
+        }
+    }
+    assert!(defaulted > 0, "file must exercise the default platform");
+    assert!(named.iter().any(|n| n.contains(':')), "file must exercise an override platform");
+    assert!(named.iter().any(|n| *n == "maxwell+"), "file must exercise a derived preset");
+
+    let mut session = Session::paper();
+    let rep = session.submit_all(&requests);
+    for (req, ans) in requests.iter().zip(&rep.answers) {
+        assert!(
+            !ans.response.is_error(),
+            "request '{}' failed: {:?}",
+            req.kind(),
+            ans.response
+        );
+        assert_eq!(req.kind(), ans.response.kind());
+    }
+    assert!(session.partitions() >= 3, "three platforms → three partitions");
+
+    // The maxwell answers are bit-identical to the pre-redesign oracle.
+    let oracle = legacy_oracle_spec();
+    for (req, ans) in requests.iter().zip(&rep.answers) {
+        let CodesignRequest::Explore { scenario } = req else { continue };
+        if scenario.platform.is_some() {
+            continue;
+        }
+        let sc = scenario.to_scenario(&oracle).unwrap();
+        let direct = scenario::run(&sc, &oracle);
+        let CodesignResponse::Explore(s) = &ans.response else { panic!() };
+        assert_eq!(s.designs, direct.points.len());
+        let best = direct.points.iter().map(|p| p.gflops).fold(f64::MIN, f64::max);
+        assert_eq!(
+            s.best.as_ref().unwrap().gflops.to_bits(),
+            best.to_bits(),
+            "maxwell serve answers must equal the oracle bit-for-bit"
+        );
+    }
+
+    // Repeat submission: ≥99% cache hits and bit-identical answers.
+    let again = session.submit_all(&requests);
+    assert!(again.cache_hit_rate() >= 0.99, "repeat hit rate {}", again.cache_hit_rate());
+    for (a, b) in rep.answers.iter().zip(&again.answers) {
+        assert_eq!(a.response, b.response, "warm repeat must be bit-identical");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Error UX
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unknown_platform_names_error_with_presets_and_grammar() {
+    for (name, reason_needle) in [
+        ("pascal", "not a platform preset"),
+        ("maxwell:frequency2", "unknown override key"),
+        ("maxwell:bwfast", "missing a value"),
+        ("maxwell:bw1x", "bad numeric value"),
+        ("maxwell:clk99", "clk out of range"),
+        ("maxwell:bw0", "bw out of range"),
+    ] {
+        let err = Platform::by_name_err(name).unwrap_err();
+        assert!(err.contains(reason_needle), "{name}: '{err}'");
+        for needle in ["maxwell", "maxwell+", "maxwell-nocache", "bw (GB/s per SM)"] {
+            assert!(err.contains(needle), "{name}: '{err}' should mention '{needle}'");
+        }
+    }
+    // The wire decoder surfaces the same diagnostic.
+    let j = r#"{"schema": 3, "requests": [{"type": "explore", "scenario": {"class": "2d", "platform": "volta"}}]}"#;
+    let err = format!("{:#}", wire::decode_requests(j).unwrap_err());
+    assert!(err.contains("unknown platform 'volta'"), "{err}");
+    assert!(err.contains("maxwell-nocache"), "{err}");
+}
+
+#[test]
+fn shm_ref_override_moves_the_latency_pivot() {
+    // The formerly-baked-in 96 kB reference is now a platform field: a
+    // platform calibrated at 48 kB treats a 48 kB scratchpad as nominal.
+    let p = Platform::by_name_err("maxwell:shmref48").unwrap();
+    let m48 = p.spec.machine;
+    let m96 = Platform::default_spec().machine;
+    assert_eq!(m48.latency_factor_for(48.0), m48.latency_factor);
+    assert!(m48.latency_factor_for(96.0) > m96.latency_factor_for(96.0));
+    // And only an AreaModel/TimeModel consumer sees it — pricing unchanged.
+    assert_eq!(p.spec.area_model().coeffs, AreaModel::paper().coeffs);
+}

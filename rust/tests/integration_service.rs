@@ -11,10 +11,10 @@
 //! * **Serve** — the shipped 9-request example file is answered from one
 //!   warm session with per-request responses that serialize back to JSON.
 
-use codesign::area::AreaModel;
 use codesign::codesign::tuner::{tune, Pinned};
 use codesign::coordinator::Coordinator;
 use codesign::opt::problem::SolveOpts;
+use codesign::platform::{Platform, PlatformId};
 use codesign::service::{
     wire, CodesignRequest, CodesignResponse, DesignSummary, ErrorInfo, ParetoSummary,
     ReferenceSummary, ScenarioSpec, ScenarioSummary, SensitivityRow, SensitivitySummary,
@@ -23,7 +23,6 @@ use codesign::service::{
 use codesign::stencil::defs::StencilId;
 use codesign::stencil::workload::Workload;
 use codesign::timemodel::citer::CIterTable;
-use codesign::timemodel::TimeModel;
 
 fn quick_spec() -> ScenarioSpec {
     ScenarioSpec::two_d().quick(8)
@@ -89,8 +88,8 @@ fn mixed_solve_opts_are_partitioned_not_rejected() {
 #[test]
 fn service_explore_matches_direct_coordinator_run() {
     let spec = quick_spec();
-    let sc = spec.to_scenario().unwrap();
-    let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+    let sc = spec.to_scenario(Platform::default_spec()).unwrap();
+    let coord = Coordinator::paper();
     let direct = coord.run_scenario(&sc);
 
     let mut session = Session::paper();
@@ -120,8 +119,7 @@ fn service_tune_matches_direct_tuner() {
         &pinned,
         430.0,
         &workload,
-        &AreaModel::paper(),
-        &TimeModel::maxwell(),
+        Platform::default_spec(),
         &CIterTable::paper(),
         &SolveOpts::default(),
     )
@@ -193,6 +191,9 @@ fn all_request_variants() -> Vec<CodesignRequest> {
         .with_solve_opts(SolveOpts { all_k: true, refine: false, max_t_t: 96 });
     vec![
         CodesignRequest::explore(spec.clone()),
+        CodesignRequest::explore(
+            ScenarioSpec::two_d().quick(9).on_platform(PlatformId::MaxwellPlus),
+        ),
         CodesignRequest::pareto(ScenarioSpec::three_d()),
         CodesignRequest::what_if(
             ScenarioSpec::single(StencilId::Heat3D),
@@ -204,6 +205,7 @@ fn all_request_variants() -> Vec<CodesignRequest> {
                 .pin_n_sm(16)
                 .pin_m_sm_kb(96.0)
                 .for_stencil(StencilId::Gradient2D)
+                .on_platform(PlatformId::MaxwellNoCache)
                 .with_threads(2),
         ),
         CodesignRequest::validate(),
@@ -317,13 +319,14 @@ fn every_response_variant_roundtrips_bit_exactly() {
 
 #[test]
 fn unknown_schema_version_is_a_clean_error() {
-    let err = wire::decode_requests(r#"{"schema": 3, "requests": []}"#).unwrap_err();
+    let err = wire::decode_requests(r#"{"schema": 4, "requests": []}"#).unwrap_err();
     assert!(format!("{err:#}").contains("schema version"), "{err:#}");
     let err = wire::decode_responses(r#"{"schema": 0, "responses": []}"#).unwrap_err();
     assert!(format!("{err:#}").contains("schema version"), "{err:#}");
     assert!(wire::decode_requests(r#"[1, 2]"#).is_err(), "bare arrays lack a version");
-    // v1 envelopes (the previous emitted version) still decode.
+    // v1/v2 envelopes (the previously emitted versions) still decode.
     assert!(wire::decode_requests(r#"{"schema": 1, "requests": []}"#).unwrap().is_empty());
+    assert!(wire::decode_requests(r#"{"schema": 2, "requests": []}"#).unwrap().is_empty());
     assert!(wire::decode_responses(r#"{"schema": 1, "responses": []}"#).unwrap().is_empty());
 }
 

@@ -3,6 +3,7 @@
 
 use codesign::area::HwParams;
 use codesign::sim::run::{build_wavefronts, simulate};
+use codesign::platform::Platform;
 use codesign::sim::validate::{kendall_tau, validate_sweep};
 use codesign::stencil::defs::{Stencil, StencilId};
 use codesign::stencil::workload::ProblemSize;
@@ -12,7 +13,7 @@ use codesign::timemodel::TimeModel;
 
 #[test]
 fn validation_sweep_is_tight_enough_to_rank_designs() {
-    let rep = validate_sweep(&TimeModel::maxwell());
+    let rep = validate_sweep(Platform::default_spec());
     assert!(rep.cases.len() >= 20);
     assert!(rep.mape_pct < 40.0, "MAPE {}", rep.mape_pct);
     assert!(rep.kendall_tau > 0.7, "tau {}", rep.kendall_tau);

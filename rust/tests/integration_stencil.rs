@@ -10,9 +10,9 @@
 //! * **Wire compatibility** — schema v1 request files still decode; v2
 //!   responses round-trip with parametric names in place.
 
-use codesign::area::AreaModel;
 use codesign::codesign::scenario::Scenario;
 use codesign::coordinator::Coordinator;
+use codesign::platform::Platform;
 use codesign::service::{wire, CodesignRequest, CodesignResponse, ScenarioSpec, Session};
 use codesign::stencil::defs::{Stencil, StencilId, ALL_STENCILS};
 use codesign::stencil::spec::{Dim, StencilSpec};
@@ -76,7 +76,7 @@ fn equivalent_parametric_spec_is_bit_identical_and_shares_the_sweep() {
 
     // One batch answers both scenarios; characterization-level cache keys
     // mean the twin adds zero new instances to the shared sweep.
-    let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+    let coord = Coordinator::paper();
     let rep = coord.run_batch_report(&[base.clone(), twinned]);
     let [a, b] = &rep.reports[..] else { panic!("two scenarios in, two out") };
     assert_eq!(a.result.points.len(), b.result.points.len());
@@ -87,7 +87,7 @@ fn equivalent_parametric_spec_is_bit_identical_and_shares_the_sweep() {
     }
     assert_eq!(a.result.pareto, b.result.pareto, "fronts must be identical");
 
-    let solo = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+    let solo = Coordinator::paper();
     let solo_rep = solo.run_batch_report(std::slice::from_ref(&base));
     assert_eq!(
         rep.unique_instances, solo_rep.unique_instances,
@@ -101,10 +101,10 @@ fn preset_batch_results_match_direct_run_bit_exactly() {
     // bit-for-bit on a preset workload after the refactor (machine,
     // objective and front all derive from these points).
     let sc = Scenario::quick(Scenario::paper_2d(), 8);
-    let coord = Coordinator::new(AreaModel::paper(), TimeModel::maxwell());
+    let coord = Coordinator::paper();
     let batched = coord.run_scenario(&sc).result;
     let direct =
-        codesign::codesign::scenario::run(&sc, &AreaModel::paper(), &TimeModel::maxwell());
+        codesign::codesign::scenario::run(&sc, Platform::default_spec());
     assert_eq!(batched.points.len(), direct.points.len());
     for (a, b) in batched.points.iter().zip(&direct.points) {
         assert_eq!(a.hw, b.hw);

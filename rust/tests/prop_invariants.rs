@@ -318,9 +318,10 @@ fn prop_cache_key_identity() {
         let hw2 = random_hw(rng);
         let st: &Stencil = rng.choose(&ALL_STENCILS);
         let size = if st.is_3d() { ProblemSize::d3(128, 32) } else { ProblemSize::d2(4096, 1024) };
-        let k1 = CacheKey::new(&hw1, st, &size);
-        let k1b = CacheKey::new(&hw1, st, &size);
-        let k2 = CacheKey::new(&hw2, st, &size);
+        let fp = codesign::platform::Platform::default_spec().fingerprint();
+        let k1 = CacheKey::new(fp, &hw1, st, &size);
+        let k1b = CacheKey::new(fp, &hw1, st, &size);
+        let k2 = CacheKey::new(fp, &hw2, st, &size);
         let same_relevant = hw1.n_sm == hw2.n_sm && hw1.n_v == hw2.n_v && hw1.m_sm_kb == hw2.m_sm_kb;
         k1 == k1b && ((k1 == k2) == same_relevant)
     });
@@ -350,10 +351,14 @@ fn prop_cache_key_is_characterization() {
             .with_c_iter(spec.c_iter_cycles());
         let b = Stencil::get(twin_spec.register());
         let size = if a.is_3d() { ProblemSize::d3(64, 16) } else { ProblemSize::d2(512, 128) };
-        let keys_match = CacheKey::new(&hw, a, &size) == CacheKey::new(&hw, b, &size);
+        let fp = codesign::platform::Platform::default_spec().fingerprint();
+        let keys_match = CacheKey::new(fp, &hw, a, &size) == CacheKey::new(fp, &hw, b, &size);
         // And perturbing any characterization field must change the key.
         let c = Stencil::get(twin_spec.with_flops(spec.flops_per_point() + 1.0).register());
-        let keys_differ = CacheKey::new(&hw, a, &size) != CacheKey::new(&hw, c, &size);
-        keys_match && keys_differ
+        let keys_differ = CacheKey::new(fp, &hw, a, &size) != CacheKey::new(fp, &hw, c, &size);
+        // So must perturbing the platform fingerprint itself.
+        let other_fp = codesign::platform::PlatformSpec::parse("maxwell:bw20").unwrap().fingerprint();
+        let fp_differs = CacheKey::new(fp, &hw, a, &size) != CacheKey::new(other_fp, &hw, a, &size);
+        keys_match && keys_differ && fp_differs
     });
 }
