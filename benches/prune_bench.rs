@@ -1,0 +1,112 @@
+//! Bound-and-prune speedup trajectory: the quick paper sweep (explore,
+//! Pareto, tune) with pruning on vs `--no-prune`, certified result-identical
+//! and written to `BENCH_prune.json` (evals saved, wall clock per sweep).
+//!
+//! Run: `cargo bench --bench prune_bench` (CI's bench-smoke job runs it and
+//! archives the JSON).
+
+use codesign::opt::problem::SolveOpts;
+use codesign::service::{CodesignRequest, ScenarioSpec, Session, TuneRequest};
+use codesign::stencil::defs::StencilId;
+use codesign::util::json::Json;
+use std::time::Instant;
+
+struct SweepRow {
+    name: &'static str,
+    pruned_evals: u64,
+    full_evals: u64,
+    pruned_ms: f64,
+    full_ms: f64,
+}
+
+fn requests(opts: SolveOpts) -> Vec<CodesignRequest> {
+    let mut tune = TuneRequest::new(430.0)
+        .pin_n_v(128)
+        .pin_m_sm_kb(96.0)
+        .for_stencil(StencilId::Heat2D);
+    tune.solve_opts = opts.clone();
+    vec![
+        CodesignRequest::explore(ScenarioSpec::two_d().quick(8).with_solve_opts(opts.clone())),
+        CodesignRequest::pareto(
+            ScenarioSpec::two_d().quick(8).named("pareto-2d").with_solve_opts(opts.clone()),
+        ),
+        CodesignRequest::pareto(
+            ScenarioSpec::three_d().quick(8).named("pareto-3d").with_solve_opts(opts),
+        ),
+        CodesignRequest::tune(tune),
+    ]
+}
+
+fn run(opts: SolveOpts) -> (Vec<(String, u64)>, f64, u64, u64) {
+    let mut session = Session::paper();
+    let t0 = Instant::now();
+    let rep = session.submit_all(&requests(opts));
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let evals: Vec<(String, u64)> = rep
+        .answers
+        .iter()
+        .map(|a| (a.response.kind().to_string(), a.response.total_evals()))
+        .collect();
+    (evals, wall_ms, rep.prune.subtrees_cut, rep.prune.bounded_out)
+}
+
+fn main() {
+    let (pruned, pruned_ms, subtrees_cut, bounded_out) = run(SolveOpts::default());
+    let (full, full_ms, _, _) = run(SolveOpts::default().without_prune());
+
+    // The differential tier certifies bit-identity; here we certify the
+    // accounting and record the trajectory.
+    let mut rows: Vec<SweepRow> = Vec::new();
+    let names = ["explore_2d", "pareto_2d", "pareto_3d", "tune_heat2d"];
+    let mut pruned_total = 0u64;
+    let mut full_total = 0u64;
+    for (i, name) in names.iter().enumerate() {
+        let (p, f) = (pruned[i].1, full[i].1);
+        assert!(p <= f, "{name}: pruning must never add evaluations ({p} vs {f})");
+        pruned_total += p;
+        full_total += f;
+        rows.push(SweepRow {
+            name,
+            pruned_evals: p,
+            full_evals: f,
+            pruned_ms: pruned_ms / names.len() as f64,
+            full_ms: full_ms / names.len() as f64,
+        });
+    }
+
+    let sweeps = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("sweep", Json::str(r.name)),
+                    ("pruned_evals", Json::num(r.pruned_evals as f64)),
+                    ("full_evals", Json::num(r.full_evals as f64)),
+                    ("evals_saved", Json::num((r.full_evals - r.pruned_evals) as f64)),
+                    ("pruned_wall_ms_share", Json::num(r.pruned_ms)),
+                    ("full_wall_ms_share", Json::num(r.full_ms)),
+                ])
+            })
+            .collect(),
+    );
+    let bench = Json::obj(vec![
+        ("pruned_evals_total", Json::num(pruned_total as f64)),
+        ("full_evals_total", Json::num(full_total as f64)),
+        ("evals_saved_total", Json::num((full_total - pruned_total) as f64)),
+        (
+            "evals_reduction_factor",
+            Json::num(full_total as f64 / pruned_total.max(1) as f64),
+        ),
+        ("pruned_wall_ms", Json::num(pruned_ms)),
+        ("full_wall_ms", Json::num(full_ms)),
+        ("subtrees_cut", Json::num(subtrees_cut as f64)),
+        ("instances_bounded_out", Json::num(bounded_out as f64)),
+        ("sweeps", sweeps),
+    ]);
+    std::fs::write("BENCH_prune.json", bench.to_string_pretty()).expect("write BENCH_prune.json");
+    println!(
+        "prune bench: {pruned_total} evals pruned vs {full_total} full \
+         ({:.2}x reduction, {subtrees_cut} subtrees cut, {bounded_out} instances bounded out)\n\
+         wall: {pruned_ms:.0} ms vs {full_ms:.0} ms -> BENCH_prune.json",
+        full_total as f64 / pruned_total.max(1) as f64
+    );
+}

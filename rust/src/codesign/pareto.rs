@@ -101,6 +101,16 @@ impl ParetoFront {
         self.entries.iter().map(|e| e.2).collect()
     }
 
+    /// Best performance among front entries with `area ≤ budget`, or `None`
+    /// when nothing fits. Because entries ascend strictly in both area and
+    /// perf, this is the last entry at or under the budget — an `O(log n)`
+    /// probe the bound-gated sweep uses as its domination test (a candidate
+    /// whose perf *upper bound* does not beat this cannot join the front).
+    pub fn best_perf_within(&self, budget: f64) -> Option<f64> {
+        let pos = self.entries.partition_point(|e| e.0 <= budget);
+        (pos > 0).then(|| self.entries[pos - 1].1)
+    }
+
     /// The `(area, perf, index)` entries, area-ascending.
     pub fn entries(&self) -> &[(f64, f64, usize)] {
         &self.entries
@@ -237,5 +247,28 @@ mod tests {
         assert_eq!(best_within_area(&pts, 2.5), Some(1));
         assert_eq!(best_within_area(&pts, 0.5), None);
         assert_eq!(best_within_area(&pts, 10.0), Some(2));
+    }
+
+    #[test]
+    fn incremental_best_perf_within_matches_point_scan() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(7);
+        let pts: Vec<(f64, f64)> =
+            (0..300).map(|_| (rng.range_u64(0, 40) as f64, rng.range_u64(0, 40) as f64)).collect();
+        let mut inc = ParetoFront::new();
+        for (i, &(a, p)) in pts.iter().enumerate() {
+            inc.insert(a, p, i);
+        }
+        for budget in [0.0, 3.5, 17.0, 39.0, 100.0] {
+            let scan = pts
+                .iter()
+                .filter(|p| p.0 <= budget)
+                .map(|p| p.1)
+                .fold(f64::NEG_INFINITY, f64::max);
+            match inc.best_perf_within(budget) {
+                None => assert!(scan.is_infinite(), "budget {budget}"),
+                Some(b) => assert_eq!(b, scan, "budget {budget}"),
+            }
+        }
     }
 }

@@ -47,8 +47,12 @@ pub struct TuneResult {
     pub area_mm2: f64,
     pub gflops: f64,
     pub seconds: f64,
-    /// Candidates examined.
+    /// Candidates examined (area-feasible grid completions — the bound-
+    /// pruned ones included: they were examined, just not solved).
     pub candidates: usize,
+    /// Candidates answered from their certified objective lower bound
+    /// without a single model evaluation (0 with `--no-prune`).
+    pub pruned: usize,
 }
 
 /// Enumerate the area-feasible completions of `pinned` within the budget, in
@@ -101,6 +105,16 @@ pub fn candidate_grid(
 /// Search the unpinned dimensions for the best completion within the budget,
 /// on one platform (grid bounds, area pricing and time model all come from
 /// its [`PlatformSpec`]).
+///
+/// With pruning enabled (`opts.prune`, the default) candidates are visited
+/// in ascending order of their certified objective lower bound
+/// (`Σ wᵢ · lower_bound_entry(i)` — see [`crate::opt::bounds`]); once an
+/// incumbent exists, any candidate whose bound already reaches the
+/// incumbent's weighted seconds is skipped without a model evaluation. The
+/// winner is **identical** to the unpruned scan's: the bound carries a
+/// one-sided safety margin, so a skipped candidate is *strictly* worse than
+/// the incumbent and could never have replaced it (replacement requires a
+/// strict improvement) — certified by `integration_prune.rs`.
 pub fn tune(
     pinned: &Pinned,
     budget_mm2: f64,
@@ -111,22 +125,58 @@ pub fn tune(
 ) -> Option<TuneResult> {
     let candidates = candidate_grid(pinned, budget_mm2, &platform.space, &platform.area_model());
     let time_model = platform.time_model();
-    let mut best: Option<TuneResult> = None;
-    for c in &candidates {
+    // Evaluation order: bound-ascending under pruning (pure function of the
+    // candidate set), the plain grid order otherwise.
+    let mut order: Vec<usize> = (0..candidates.len()).collect();
+    let mut lb_sums: Vec<f64> = Vec::new();
+    if opts.prune {
+        lb_sums = candidates
+            .iter()
+            .map(|c| {
+                let mut sum = 0.0f64;
+                for e in workload.entries.iter().filter(|e| e.weight > 0.0) {
+                    sum += e.weight
+                        * crate::opt::bounds::lower_bound_entry(&time_model, citer, &c.hw, e, opts);
+                }
+                sum
+            })
+            .collect();
+        order.sort_by(|&a, &b| lb_sums[a].partial_cmp(&lb_sums[b]).unwrap().then(a.cmp(&b)));
+    }
+    let mut pruned = 0usize;
+    let mut solved: Vec<(usize, f64, f64)> = Vec::new(); // (index, seconds, gflops)
+    let mut best_seconds = f64::INFINITY;
+    for &i in &order {
+        let c = &candidates[i];
+        if opts.prune && lb_sums[i] >= best_seconds {
+            pruned += 1;
+            continue;
+        }
         let sol = solve_hardware_point(&time_model, workload, citer, &c.hw, opts);
         if let (Some(seconds), Some(gflops)) = (sol.weighted_seconds, sol.weighted_gflops) {
-            if best.as_ref().map_or(true, |b| gflops > b.gflops) {
-                best = Some(TuneResult {
-                    hw: c.hw,
-                    area_mm2: c.area_mm2,
-                    gflops,
-                    seconds,
-                    candidates: 0,
-                });
+            solved.push((i, seconds, gflops));
+            if seconds < best_seconds {
+                best_seconds = seconds;
             }
         }
     }
-    best.map(|b| TuneResult { candidates: candidates.len(), ..b })
+    // Winner selection in grid order with a strict-improvement scan — the
+    // exact tie semantics of the historical unpruned loop.
+    solved.sort_by_key(|&(i, _, _)| i);
+    let mut best: Option<TuneResult> = None;
+    for &(i, seconds, gflops) in &solved {
+        if best.as_ref().map_or(true, |b| gflops > b.gflops) {
+            best = Some(TuneResult {
+                hw: candidates[i].hw,
+                area_mm2: candidates[i].area_mm2,
+                gflops,
+                seconds,
+                candidates: 0,
+                pruned: 0,
+            });
+        }
+    }
+    best.map(|b| TuneResult { candidates: candidates.len(), pruned, ..b })
 }
 
 #[cfg(test)]
@@ -206,6 +256,21 @@ mod tests {
         assert!(a.iter().zip(&b).all(|(x, y)| x.hw == y.hw));
         // n_SM ascending — the tuner's historical search order.
         assert!(a.windows(2).all(|w| w[0].hw.n_sm <= w[1].hw.n_sm));
+    }
+
+    #[test]
+    fn pruned_tune_matches_unpruned_winner_with_fewer_solves() {
+        let (p, ci, opts) = setup();
+        let wl = small_workload();
+        let pinned = Pinned { n_v: Some(128), m_sm_kb: Some(96.0), ..Default::default() };
+        let pruned = tune(&pinned, 430.0, &wl, p, &ci, &opts).unwrap();
+        let full = tune(&pinned, 430.0, &wl, p, &ci, &opts.clone().without_prune()).unwrap();
+        assert_eq!(pruned.hw, full.hw);
+        assert_eq!(pruned.gflops.to_bits(), full.gflops.to_bits());
+        assert_eq!(pruned.seconds.to_bits(), full.seconds.to_bits());
+        assert_eq!(pruned.candidates, full.candidates);
+        assert_eq!(full.pruned, 0, "--no-prune must not skip anything");
+        assert!(pruned.pruned > 0, "bound ordering should skip most of the n_SM ladder");
     }
 
     #[test]

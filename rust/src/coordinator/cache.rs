@@ -15,9 +15,21 @@
 //! never takes that path (it only reads keys its sweep populated), which is
 //! what lets the batched-sweep hit-rate tests certify the reported rate
 //! against recomputed ground truth.
+//!
+//! **`BoundedOut` contract.** The objective-driven sweep paths (tune, gated
+//! Pareto) may decide an instance cannot matter from its certified lower
+//! bound alone; they record that as [`CacheEntry::BoundedOut`] via
+//! [`MemoCache::insert_bound`]. A bounded entry is *never* served where an
+//! exact solution is expected: the exact paths ([`MemoCache::get`],
+//! [`MemoCache::get_or_compute`]) treat it as absent — a later batch that
+//! needs the instance exactly re-solves it (upgrading the slot; charged as
+//! the miss it is) instead of aliasing a bound as a solution. Bound marks
+//! themselves are bookkeeping, not lookups: `insert_bound` and
+//! [`MemoCache::bound_of`] touch no counters, and an exact entry is never
+//! downgraded to a bound.
 
 use crate::area::params::HwParams;
-use crate::opt::inner::InnerSolution;
+use crate::opt::inner::{InnerOutcome, InnerSolution};
 use crate::stencil::defs::Stencil;
 use crate::stencil::workload::ProblemSize;
 use std::collections::HashMap;
@@ -141,12 +153,24 @@ impl CacheStats {
 
 const DEFAULT_SHARDS: usize = 64;
 
+/// One memoized slot: the exact inner solution (with `Exact(None)`
+/// memoizing infeasibility), or a certified lower bound for an instance an
+/// objective-driven sweep pruned away without solving (see the module-level
+/// `BoundedOut` contract).
+#[derive(Clone, Copy, Debug)]
+pub enum CacheEntry {
+    Exact(Option<InnerSolution>),
+    BoundedOut {
+        /// The certified lower bound (seconds) that killed the instance.
+        lb_seconds: f64,
+    },
+}
+
 /// The sharded memo store: N-way lock striping keyed by the `CacheKey` hash.
-/// Values are `Option<InnerSolution>` — `None` memoizes infeasibility too.
 pub struct MemoCache {
     /// Invariant: `shards.len()` is a power of two (shard selection masks
     /// the key hash).
-    shards: Vec<Mutex<HashMap<CacheKey, Option<InnerSolution>>>>,
+    shards: Vec<Mutex<HashMap<CacheKey, CacheEntry>>>,
     pub stats: CacheStats,
 }
 
@@ -176,14 +200,17 @@ impl MemoCache {
         self.shards.len()
     }
 
-    fn shard(&self, key: &CacheKey) -> &Mutex<HashMap<CacheKey, Option<InnerSolution>>> {
+    fn shard(&self, key: &CacheKey) -> &Mutex<HashMap<CacheKey, CacheEntry>> {
         use std::hash::{Hash, Hasher};
         let mut h = std::collections::hash_map::DefaultHasher::new();
         key.hash(&mut h);
         &self.shards[(h.finish() as usize) & (self.shards.len() - 1)]
     }
 
-    /// Get the memoized solution or compute and store it.
+    /// Get the memoized **exact** solution or compute and store it. A
+    /// `BoundedOut` slot is treated as absent: the instance is re-solved
+    /// exactly and the slot upgraded (charged as a miss — real solver work
+    /// happened).
     ///
     /// The compute runs outside the lock; when two threads race on the same
     /// key both compute (deterministic result, so this is harmless), but the
@@ -194,44 +221,177 @@ impl MemoCache {
         key: CacheKey,
         compute: impl FnOnce() -> Option<InnerSolution>,
     ) -> Option<InnerSolution> {
-        if let Some(v) = self.shard(&key).lock().unwrap().get(&key) {
+        if let Some(CacheEntry::Exact(v)) = self.shard(&key).lock().unwrap().get(&key) {
             self.stats.hits.fetch_add(1, Ordering::Relaxed);
             return *v;
         }
         let v = compute();
         let mut shard = self.shard(&key).lock().unwrap();
         match shard.entry(key) {
-            std::collections::hash_map::Entry::Occupied(e) => {
-                self.stats.hits.fetch_add(1, Ordering::Relaxed);
-                *e.get()
-            }
+            std::collections::hash_map::Entry::Occupied(mut e) => match e.get() {
+                CacheEntry::Exact(v) => {
+                    self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                    *v
+                }
+                CacheEntry::BoundedOut { .. } => {
+                    // Upgrade: the bound mark never aliases as a solution.
+                    self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                    e.insert(CacheEntry::Exact(v));
+                    v
+                }
+            },
             std::collections::hash_map::Entry::Vacant(slot) => {
                 self.stats.misses.fetch_add(1, Ordering::Relaxed);
-                slot.insert(v);
+                slot.insert(CacheEntry::Exact(v));
                 v
             }
         }
     }
 
     /// Look up without computing. `None` means the instance was never
-    /// solved; `Some(None)` means it was solved and found infeasible.
-    /// Counted as a hit or miss like any other lookup.
+    /// solved exactly (absent or only `BoundedOut`); `Some(None)` means it
+    /// was solved and found infeasible. Counted as a hit or miss like any
+    /// other lookup.
     pub fn get(&self, key: &CacheKey) -> Option<Option<InnerSolution>> {
         let found = self.shard(key).lock().unwrap().get(key).copied();
         match found {
-            Some(v) => {
+            Some(CacheEntry::Exact(v)) => {
                 self.stats.hits.fetch_add(1, Ordering::Relaxed);
                 Some(v)
             }
-            None => {
+            Some(CacheEntry::BoundedOut { .. }) | None => {
                 self.stats.misses.fetch_add(1, Ordering::Relaxed);
                 None
             }
         }
     }
 
+    /// The memoizing entry point of the objective-driven sweep paths: get
+    /// the exact solution if the store has one (a hit), reuse a recorded
+    /// bound when it already meets the caller's `cutoff` (bookkeeping, no
+    /// counters), and otherwise run `solve` and record its outcome — exact
+    /// results (including infeasibility) are stored as `Exact` and charged
+    /// as the miss they are, `BoundedOut` outcomes become bound marks.
+    ///
+    /// Monotone by construction: a slot only ever goes absent → bound →
+    /// exact, never backwards, so no consumer can observe a bound where it
+    /// awaited a solution.
+    pub fn get_or_solve_cut(
+        &self,
+        key: CacheKey,
+        cutoff: Option<f64>,
+        solve: impl FnOnce() -> InnerOutcome,
+    ) -> InnerOutcome {
+        {
+            let shard = self.shard(&key).lock().unwrap();
+            match shard.get(&key) {
+                Some(CacheEntry::Exact(v)) => {
+                    self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                    return match v {
+                        Some(s) => InnerOutcome::Solved(*s),
+                        None => InnerOutcome::Infeasible,
+                    };
+                }
+                Some(CacheEntry::BoundedOut { lb_seconds }) => {
+                    // A recorded bound is a pure property of the instance:
+                    // if it meets this cutoff too, the solve is unneeded.
+                    if let Some(c) = cutoff {
+                        if *lb_seconds >= c {
+                            return InnerOutcome::BoundedOut { bound_seconds: *lb_seconds };
+                        }
+                    }
+                }
+                None => {}
+            }
+        }
+        let out = solve();
+        let mut shard = self.shard(&key).lock().unwrap();
+        match shard.entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut e) => match (*e.get(), out) {
+                // Someone exact-solved the key while we worked: their value
+                // wins (deterministic solver — it is the same value).
+                (CacheEntry::Exact(v), _) => {
+                    self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                    match v {
+                        Some(s) => InnerOutcome::Solved(s),
+                        None => InnerOutcome::Infeasible,
+                    }
+                }
+                (CacheEntry::BoundedOut { .. }, InnerOutcome::Solved(s)) => {
+                    self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                    e.insert(CacheEntry::Exact(Some(s)));
+                    InnerOutcome::Solved(s)
+                }
+                (CacheEntry::BoundedOut { .. }, InnerOutcome::Infeasible) => {
+                    self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                    e.insert(CacheEntry::Exact(None));
+                    InnerOutcome::Infeasible
+                }
+                // Keep the first mark (they are equal anyway: the bound is
+                // deterministic per instance).
+                (CacheEntry::BoundedOut { .. }, out @ InnerOutcome::BoundedOut { .. }) => out,
+            },
+            std::collections::hash_map::Entry::Vacant(slot) => {
+                match out {
+                    InnerOutcome::Solved(s) => {
+                        self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                        slot.insert(CacheEntry::Exact(Some(s)));
+                    }
+                    InnerOutcome::Infeasible => {
+                        self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                        slot.insert(CacheEntry::Exact(None));
+                    }
+                    InnerOutcome::BoundedOut { bound_seconds } => {
+                        slot.insert(CacheEntry::BoundedOut { lb_seconds: bound_seconds });
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Record a certified lower bound for an instance a pruned sweep never
+    /// solved. First mark wins; an existing entry of either kind is kept
+    /// (exact solutions are never downgraded). Not a lookup — no counters.
+    pub fn insert_bound(&self, key: CacheKey, lb_seconds: f64) {
+        self.shard(&key)
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert(CacheEntry::BoundedOut { lb_seconds });
+    }
+
+    /// The recorded bound of a `BoundedOut` slot, if that is what the slot
+    /// holds. Bookkeeping probe — no counters.
+    pub fn bound_of(&self, key: &CacheKey) -> Option<f64> {
+        match self.shard(key).lock().unwrap().get(key) {
+            Some(CacheEntry::BoundedOut { lb_seconds }) => Some(*lb_seconds),
+            _ => None,
+        }
+    }
+
+    /// Total slots, bound marks included.
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// Exactly-solved slots only (what sweep-coverage invariants count).
+    pub fn exact_len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.lock()
+                    .unwrap()
+                    .values()
+                    .filter(|e| matches!(e, CacheEntry::Exact(_)))
+                    .count()
+            })
+            .sum()
+    }
+
+    /// `BoundedOut` marks currently held.
+    pub fn bounded_len(&self) -> usize {
+        self.len() - self.exact_len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -360,6 +520,47 @@ mod tests {
         assert_eq!((d.hits, d.misses), (1, 1));
         assert_eq!(d.lookups(), 2);
         assert!((d.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bounded_out_never_aliases_as_exact() {
+        let cache = MemoCache::new();
+        cache.insert_bound(key(128), 0.125);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.exact_len(), 0);
+        assert_eq!(cache.bounded_len(), 1);
+        assert_eq!(cache.bound_of(&key(128)), Some(0.125));
+        // Bound marks are bookkeeping: no lookup was charged yet.
+        assert_eq!(cache.stats.snapshot(), StatsSnapshot::default());
+        // Exact readers see the instance as unsolved…
+        assert!(cache.get(&key(128)).is_none(), "bound must not read as solved");
+        // …and an exact demand re-solves and upgrades the slot (a miss).
+        let mut calls = 0;
+        let v = cache.get_or_compute(key(128), || {
+            calls += 1;
+            dummy_solution()
+        });
+        assert_eq!(calls, 1);
+        assert!(v.is_some());
+        assert_eq!(cache.exact_len(), 1);
+        assert_eq!(cache.bounded_len(), 0);
+        assert_eq!(cache.bound_of(&key(128)), None, "slot was upgraded");
+        // get(miss on bound), get_or_compute(miss on upgrade).
+        assert_eq!(cache.stats.snapshot(), StatsSnapshot { hits: 0, misses: 2 });
+    }
+
+    #[test]
+    fn bound_marks_never_downgrade_or_overwrite() {
+        let cache = MemoCache::new();
+        cache.get_or_compute(key(128), dummy_solution);
+        // Marking a solved instance is a no-op.
+        cache.insert_bound(key(128), 9.0);
+        assert!(cache.get(&key(128)).unwrap().is_some());
+        assert_eq!(cache.bound_of(&key(128)), None);
+        // First bound mark wins over later (possibly looser) marks.
+        cache.insert_bound(key(256), 1.0);
+        cache.insert_bound(key(256), 2.0);
+        assert_eq!(cache.bound_of(&key(256)), Some(1.0));
     }
 
     #[test]

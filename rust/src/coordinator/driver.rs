@@ -24,9 +24,10 @@ use crate::codesign::pareto::ParetoFront;
 use crate::codesign::scenario::{DesignEval, RefEval, Scenario, ScenarioResult};
 use crate::codesign::space::{enumerate_space, DesignPoint};
 use crate::coordinator::cache::{CacheKey, MemoCache};
-use crate::opt::inner::InnerSolution;
+use crate::opt::bounds::{self, PruneStats};
+use crate::opt::inner::{InnerOutcome, InnerSolution};
 use crate::opt::problem::SolveOpts;
-use crate::opt::separable::{aggregate_weighted, solve_entry};
+use crate::opt::separable::{aggregate_weighted, aggregate_weighted_entries, solve_entry_cut};
 use crate::platform::registry::Platform;
 use crate::platform::spec::{PlatformSpec, ReferenceHw};
 use crate::stencil::defs::Stencil;
@@ -35,9 +36,44 @@ use crate::timemodel::citer::CIterTable;
 use crate::timemodel::talg::TimeModel;
 use crate::util::threadpool::{parallel_map, parallel_map_chunked};
 use std::collections::HashSet;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+/// Monotonic pruning-telemetry counters (mirroring `CacheStats`): what the
+/// bound-and-prune layer did across a coordinator's lifetime, with snapshot
+/// support so batches can report their own deltas.
+#[derive(Debug, Default)]
+pub struct PruneCounters {
+    bounds_computed: AtomicU64,
+    subtrees_cut: AtomicU64,
+    bounded_out: AtomicU64,
+}
+
+impl PruneCounters {
+    pub fn add(&self, s: &PruneStats) {
+        self.bounds_computed.fetch_add(s.bounds_computed, Ordering::Relaxed);
+        self.subtrees_cut.fetch_add(s.subtrees_cut, Ordering::Relaxed);
+        self.bounded_out.fetch_add(s.bounded_out, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> PruneStats {
+        PruneStats {
+            bounds_computed: self.bounds_computed.load(Ordering::Relaxed),
+            subtrees_cut: self.subtrees_cut.load(Ordering::Relaxed),
+            bounded_out: self.bounded_out.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn delta_since(&self, since: PruneStats) -> PruneStats {
+        let now = self.snapshot();
+        PruneStats {
+            bounds_computed: now.bounds_computed - since.bounds_computed,
+            subtrees_cut: now.subtrees_cut - since.subtrees_cut,
+            bounded_out: now.bounded_out - since.bounded_out,
+        }
+    }
+}
 
 /// Sweep statistics beyond the scenario result itself.
 ///
@@ -68,6 +104,8 @@ pub struct BatchReport {
     /// Hit rate over exactly those lookups. On a fresh coordinator the
     /// misses equal `unique_instances`; a repeated batch is ~100% hits.
     pub cache_hit_rate: f64,
+    /// Bound-and-prune telemetry accumulated by this batch's inner solves.
+    pub prune: PruneStats,
     pub wall: Duration,
 }
 
@@ -102,6 +140,8 @@ pub struct Coordinator {
     /// `platform.fingerprint()`, precomputed: every cache key carries it.
     platform_fp: u64,
     pub cache: MemoCache,
+    /// Lifetime bound-and-prune telemetry (all sweeps on this coordinator).
+    pub prune: PruneCounters,
     /// The (C_iter, solver options) pair the cache was populated under.
     /// `CacheKey` deliberately omits them (one sweep serves many scenarios),
     /// so the coordinator refuses to mix them across batches: a later batch
@@ -136,6 +176,7 @@ impl Coordinator {
             time_model,
             platform_fp,
             cache: MemoCache::new(),
+            prune: PruneCounters::default(),
             solved_under: Mutex::new(None),
             batch_lock: Mutex::new(()),
             progress_every: usize::MAX,
@@ -203,6 +244,7 @@ impl Coordinator {
                 unique_instances: 0,
                 lookups: 0,
                 cache_hit_rate: 0.0,
+                prune: PruneStats::default(),
                 wall: t0.elapsed(),
             };
         }
@@ -236,6 +278,7 @@ impl Coordinator {
         // the cheap validation asserts so a rejected batch cannot poison it.
         let _batch = self.batch_lock.lock().unwrap();
         let epoch = self.cache.stats.snapshot();
+        let prune_epoch = self.prune.snapshot();
         let threads = scenarios.iter().map(|s| s.threads).max().unwrap_or(1).max(1);
 
         // Plan: per-scenario spaces, then the deduplicated instance union.
@@ -276,9 +319,12 @@ impl Coordinator {
         let opts = &scenarios[0].solve_opts;
         parallel_map_chunked(&instances, threads, chunk, |inst| {
             let key = CacheKey::new(self.platform_fp, &inst.hw, &inst.stencil, &inst.entry.size);
+            let mut ps = PruneStats::default();
             self.cache.get_or_compute(key, || {
-                solve_entry(&self.time_model, citer, &inst.hw, &inst.entry, opts)
+                solve_entry_cut(&self.time_model, citer, &inst.hw, &inst.entry, opts, None, &mut ps)
+                    .solved()
             });
+            self.prune.add(&ps);
             let n = self.done.fetch_add(1, Ordering::Relaxed) + 1;
             if n % self.progress_every == 0 {
                 eprintln!("[coordinator] {n}/{unique_instances} instances solved");
@@ -295,6 +341,7 @@ impl Coordinator {
             });
 
         let delta = self.cache.stats.delta_since(epoch);
+        let prune = self.prune.delta_since(prune_epoch);
         let wall = t0.elapsed();
         let cache_entries = self.cache.len();
         let cache_hit_rate = delta.hit_rate();
@@ -307,6 +354,7 @@ impl Coordinator {
             unique_instances,
             lookups: delta.lookups(),
             cache_hit_rate,
+            prune,
             wall,
         }
     }
@@ -410,7 +458,326 @@ impl Coordinator {
             per_entry,
         }
     }
+
+    /// Bound-gated Pareto sweep: the objective-driven fast path behind
+    /// standalone `Pareto` requests.
+    ///
+    /// Design points are processed in ascending order of their certified
+    /// objective lower bound (`Σ wᵢ · lower_bound_entry(i)`), so the front
+    /// is strong after a handful of exact solves; every later point whose
+    /// throughput *upper* bound (flops-weighted work over the bound) cannot
+    /// beat the front at its area is skipped whole, its entries recorded
+    /// [`BoundedOut`](crate::coordinator::cache::CacheEntry::BoundedOut) in
+    /// the memo store. The final front is rebuilt from the solved points in
+    /// enumeration order, which makes it **bit-identical** to the full
+    /// sweep's (`integration_prune.rs` certifies): a skipped point is
+    /// strictly dominated — the bounds carry a one-sided safety margin —
+    /// so it can appear on neither front, and among exact front duplicates
+    /// the full path's first-in-enumeration winner is always solved.
+    ///
+    /// Feasibility needs no solving either: an instance's bound is finite
+    /// exactly when it has a feasible software point (certified by
+    /// `prop_lower_bound_finite_iff_feasible`), so `designs`/`infeasible`
+    /// counts match the full sweep's.
+    ///
+    /// With `scenario.solve_opts.prune == false` nothing is gated: every
+    /// point is solved exactly (the `--no-prune` audit path), same results.
+    pub fn run_pareto_gated(&self, scenario: &Scenario) -> GatedParetoResult {
+        let t0 = Instant::now();
+        {
+            let mut guard = self.solved_under.lock().unwrap();
+            match &*guard {
+                Some((citer, opts)) => assert!(
+                    *citer == scenario.citer && *opts == scenario.solve_opts,
+                    "this coordinator's cache was populated under a different C_iter \
+                     table / solver options; use a fresh Coordinator"
+                ),
+                None => *guard = Some((scenario.citer.clone(), scenario.solve_opts.clone())),
+            }
+        }
+        let _batch = self.batch_lock.lock().unwrap();
+        let prune_epoch = self.prune.snapshot();
+        let citer = &scenario.citer;
+        let opts = &scenario.solve_opts;
+        let threads = scenario.threads.max(1);
+        let space = enumerate_space(&self.area_model, &scenario.space);
+        let chars = citer.characterize_workload(&scenario.workload);
+        let entries = &scenario.workload.entries;
+        // The flops-weighted numerator is hardware-independent, so a bound
+        // on weighted seconds is an upper bound on weighted GFLOP/s.
+        let flops_weighted: f64 = entries
+            .iter()
+            .filter(|e| e.weight > 0.0)
+            .map(|e| e.weight * Stencil::get(e.stencil).flops_per_point * e.size.points())
+            .sum();
+
+        // Per-point objective lower bounds (infinite = provably infeasible),
+        // fanned across the pool: the precompute is the gated sweep's only
+        // full-space pass.
+        let mut stats = PruneStats::default();
+        let point_bounds: Vec<(Vec<f64>, f64)> =
+            parallel_map(&space, threads.min(space.len().max(1)), |pt| {
+                let mut per = Vec::with_capacity(entries.len());
+                let mut sum = 0.0f64;
+                for (e, st) in entries.iter().zip(&chars) {
+                    if e.weight > 0.0 {
+                        let lb = bounds::lower_bound(&self.time_model, st, &e.size, &pt.hw, opts);
+                        per.push(lb);
+                        sum += e.weight * lb;
+                    } else {
+                        per.push(f64::NAN); // never read: zero-weight entries are not solved
+                    }
+                }
+                (per, sum)
+            });
+        if opts.prune {
+            // (The audit path computes ordering bounds too but reports
+            // all-zero pruning telemetry, like the rest of the engine.)
+            stats.bounds_computed +=
+                (space.len() * entries.iter().filter(|e| e.weight > 0.0).count()) as u64;
+        }
+        // Best-bound-first processing order (pure function of the instance
+        // set — identical across thread counts and repeats). The audit path
+        // (`--no-prune`) keeps even provably-infeasible points in the order:
+        // it must not lean on the bound layer for anything, so feasibility
+        // is re-derived from the solver outcomes below.
+        let mut order: Vec<usize> = (0..space.len())
+            .filter(|&i| !opts.prune || point_bounds[i].1.is_finite())
+            .collect();
+        order.sort_by(|&a, &b| {
+            point_bounds[a].1.partial_cmp(&point_bounds[b].1).unwrap().then(a.cmp(&b))
+        });
+        let mut solver_infeasible = 0usize;
+
+        // Gate + solve in ramp-up chunks (1, 2, 4, … up to 32): sizes are a
+        // pure function of the candidate count (never the thread count) so
+        // the gating decisions — and therefore the telemetry — are
+        // bit-identical across thread counts; parallelism lives inside the
+        // chunk, and the single-item first chunk seeds the front before any
+        // wider window is decided cold.
+        let mut gate = ParetoFront::new();
+        let mut solved: Vec<(usize, f64, f64)> = Vec::new(); // (index, seconds, gflops)
+        let mut total_evals = 0u64;
+        let mut bounded_points = 0usize;
+        for range in rampup_chunks(order.len(), 32) {
+            let chunk = &order[range];
+            let survivors: Vec<usize> = chunk
+                .iter()
+                .copied()
+                .filter(|&i| {
+                    if !opts.prune {
+                        return true;
+                    }
+                    let gflops_ub = flops_weighted / point_bounds[i].1 / 1e9;
+                    let dominated = gate
+                        .best_perf_within(space[i].area_mm2)
+                        .is_some_and(|best| best >= gflops_ub);
+                    if dominated {
+                        bounded_points += 1;
+                        for (j, e) in entries.iter().enumerate() {
+                            if e.weight > 0.0 {
+                                // One instance answered from its bound.
+                                stats.bounded_out += 1;
+                                let key = CacheKey::new(
+                                    self.platform_fp,
+                                    &space[i].hw,
+                                    &chars[j],
+                                    &e.size,
+                                );
+                                self.cache.insert_bound(key, point_bounds[i].0[j]);
+                            }
+                        }
+                    }
+                    !dominated
+                })
+                .collect();
+            // The per-point cutoff: the weighted seconds above which the
+            // point is dominated at its area (from the chunk-start front).
+            let results: Vec<(Option<(f64, f64)>, u64, PruneStats)> =
+                parallel_map(&survivors, threads.min(survivors.len().max(1)), |&i| {
+                    self.solve_point_gated(
+                        &space[i],
+                        &point_bounds[i].0,
+                        entries,
+                        &chars,
+                        citer,
+                        opts,
+                        flops_weighted,
+                        gate.best_perf_within(space[i].area_mm2),
+                    )
+                });
+            for (&i, (outcome, evals, ps)) in survivors.iter().zip(&results) {
+                total_evals += evals;
+                self.prune.add(ps);
+                if let Some((seconds, gflops)) = outcome {
+                    gate.insert(space[i].area_mm2, *gflops, i);
+                    solved.push((i, *seconds, *gflops));
+                } else if opts.prune {
+                    bounded_points += 1;
+                } else {
+                    solver_infeasible += 1;
+                }
+            }
+        }
+        self.prune.add(&stats);
+        // Feasibility counts: from the bound layer when gating (certified
+        // equivalent to solving), from the solver itself on the audit path.
+        let infeasible = if opts.prune {
+            point_bounds.iter().filter(|(_, s)| s.is_infinite()).count()
+        } else {
+            solver_infeasible
+        };
+
+        // Final front: feed the solved points in enumeration order — the
+        // exact insertion sequence (and therefore tie handling) of the full
+        // sweep, restricted to a subset that provably contains every front
+        // member.
+        solved.sort_by_key(|&(i, _, _)| i);
+        let mut front = ParetoFront::new();
+        for (slot, &(i, _, gflops)) in solved.iter().enumerate() {
+            front.insert(space[i].area_mm2, gflops, slot);
+        }
+        let front: Vec<GatedFrontPoint> = front
+            .indices()
+            .into_iter()
+            .map(|slot| {
+                let (i, seconds, gflops) = solved[slot];
+                GatedFrontPoint {
+                    hw: space[i].hw,
+                    area_mm2: space[i].area_mm2,
+                    gflops,
+                    seconds,
+                }
+            })
+            .collect();
+        GatedParetoResult {
+            scenario_name: scenario.name.clone(),
+            front,
+            designs: space.len() - infeasible,
+            infeasible,
+            total_evals,
+            bounded_out: bounded_points,
+            prune: self.prune.delta_since(prune_epoch),
+            wall: t0.elapsed(),
+        }
+    }
+
+    /// Solve one gated design point: entries sequentially, each with a
+    /// progressive cutoff (exact values replace bounds as they land, so a
+    /// point can still be bounded out mid-way). Returns `None` when the
+    /// point cannot join the front — infeasible or bounded out.
+    #[allow(clippy::too_many_arguments)]
+    fn solve_point_gated(
+        &self,
+        pt: &DesignPoint,
+        entry_bounds: &[f64],
+        entries: &[WorkloadEntry],
+        chars: &[Stencil],
+        citer: &CIterTable,
+        opts: &SolveOpts,
+        flops_weighted: f64,
+        front_perf: Option<f64>,
+    ) -> (Option<(f64, f64)>, u64, PruneStats) {
+        let mut ps = PruneStats::default();
+        let mut evals = 0u64;
+        // Weighted-seconds threshold above which the point is dominated.
+        let dominated_at =
+            front_perf.filter(|_| opts.prune).map(|perf| flops_weighted / perf / 1e9);
+        let mut partial: f64 = entries
+            .iter()
+            .zip(entry_bounds)
+            .filter(|(e, _)| e.weight > 0.0)
+            .map(|(e, lb)| e.weight * lb)
+            .sum();
+        let mut per_entry: Vec<Option<InnerSolution>> = vec![None; entries.len()];
+        for (j, (e, st)) in entries.iter().zip(chars).enumerate() {
+            if e.weight == 0.0 {
+                continue;
+            }
+            let key = CacheKey::new(self.platform_fp, &pt.hw, st, &e.size);
+            // Progressive cutoff for this entry: what its seconds would
+            // have to reach for the whole point to be dominated, given the
+            // bounds still standing in for the unsolved remainder.
+            let cutoff = dominated_at.map(|d| (d - (partial - e.weight * entry_bounds[j])) / e.weight);
+            let out = self.cache.get_or_solve_cut(key, cutoff, || {
+                solve_entry_cut(&self.time_model, citer, &pt.hw, e, opts, cutoff, &mut ps)
+            });
+            match out {
+                InnerOutcome::Solved(s) => {
+                    evals += s.evals;
+                    partial += e.weight * (s.est.seconds - entry_bounds[j]);
+                    per_entry[j] = Some(s);
+                }
+                InnerOutcome::BoundedOut { .. } => {
+                    // The whole point is dominated; record the remaining
+                    // entries' bounds too, so the store tells the full story.
+                    for (jj, ee) in entries.iter().enumerate().skip(j + 1) {
+                        if ee.weight > 0.0 {
+                            let k = CacheKey::new(self.platform_fp, &pt.hw, &chars[jj], &ee.size);
+                            self.cache.insert_bound(k, entry_bounds[jj]);
+                        }
+                    }
+                    return (None, evals, ps);
+                }
+                InnerOutcome::Infeasible => return (None, evals, ps),
+            }
+        }
+        // Zero-weight entries stay `None` — the aggregation skips them, so
+        // the result is identical to the full path's.
+        match aggregate_weighted_entries(entries, &per_entry) {
+            Some(v) => (Some(v), evals, ps),
+            None => (None, evals, ps),
+        }
+    }
 }
+
+/// One member of a gated front (the full per-entry detail stays unsolved for
+/// dominated points — that is the point).
+#[derive(Clone, Debug)]
+pub struct GatedFrontPoint {
+    pub hw: HwParams,
+    pub area_mm2: f64,
+    pub gflops: f64,
+    pub seconds: f64,
+}
+
+/// What [`Coordinator::run_pareto_gated`] reports.
+#[derive(Clone, Debug)]
+pub struct GatedParetoResult {
+    pub scenario_name: String,
+    /// The Pareto front, area-ascending — bit-identical to the full sweep's.
+    pub front: Vec<GatedFrontPoint>,
+    /// Feasible design points (certified from bounds without solving).
+    pub designs: usize,
+    pub infeasible: usize,
+    /// Model evaluations actually spent.
+    pub total_evals: u64,
+    /// Design points answered purely from bounds.
+    pub bounded_out: usize,
+    pub prune: PruneStats,
+    pub wall: Duration,
+}
+
+/// Ramp-up chunk boundaries for bound-gated sweeps: 1, 2, 4, … doubling up
+/// to `cap`. The first chunk is a single item — the best-bound candidate —
+/// so an incumbent exists before the second decision is ever made (a flat
+/// chunk would evaluate its whole first window cold), while later chunks
+/// grow to keep the intra-chunk parallelism. A pure function of the item
+/// count: gating decisions never depend on the thread count.
+pub fn rampup_chunks(n: usize, cap: usize) -> Vec<std::ops::Range<usize>> {
+    let cap = cap.max(1);
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut size = 1;
+    while start < n {
+        let end = (start + size).min(n);
+        out.push(start..end);
+        start = end;
+        size = (size * 2).min(cap);
+    }
+    out
+}
+
 
 #[cfg(test)]
 mod tests {
@@ -496,6 +863,71 @@ mod tests {
         b.citer = CIterTable::with_measured(&[(StencilId::Jacobi2D, 99.0)]);
         let coord = Coordinator::paper();
         coord.run_batch(&[a, b]);
+    }
+
+    #[test]
+    fn gated_pareto_front_is_bit_identical_to_full_sweep() {
+        let sc = quick();
+        let full = Coordinator::paper().run_scenario(&sc).result;
+        let coord = Coordinator::paper();
+        let gated = coord.run_pareto_gated(&sc);
+        assert_eq!(gated.designs, full.points.len());
+        assert_eq!(gated.infeasible, full.infeasible_points);
+        assert_eq!(gated.front.len(), full.pareto.len());
+        for (g, &i) in gated.front.iter().zip(&full.pareto) {
+            assert_eq!(g.hw, full.points[i].hw);
+            assert_eq!(g.area_mm2.to_bits(), full.points[i].area_mm2.to_bits());
+            assert_eq!(g.gflops.to_bits(), full.points[i].gflops.to_bits());
+            assert_eq!(g.seconds.to_bits(), full.points[i].seconds.to_bits());
+        }
+        // The gating did real work: instances were answered from bounds and
+        // their marks are in the store, never aliasing as solutions.
+        assert!(gated.bounded_out > 0, "gating should skip dominated points");
+        assert!(gated.total_evals < full.total_evals);
+        assert!(coord.cache.bounded_len() > 0);
+        assert_eq!(coord.cache.len(), coord.cache.exact_len() + coord.cache.bounded_len());
+        // An exact batch afterwards re-solves the bounded instances and
+        // serves results bit-identical to the fresh full sweep.
+        let after = coord.run_scenario(&sc).result;
+        assert_eq!(after.points.len(), full.points.len());
+        for (a, b) in after.points.iter().zip(&full.points) {
+            assert_eq!(a.gflops.to_bits(), b.gflops.to_bits());
+        }
+        assert_eq!(after.pareto, full.pareto);
+        assert_eq!(coord.cache.bounded_len(), 0, "every mark was upgraded");
+    }
+
+    #[test]
+    fn rampup_chunks_cover_exactly_once_and_start_single() {
+        for (n, cap) in [(0usize, 32usize), (1, 32), (5, 32), (14, 32), (100, 32), (7, 1)] {
+            let chunks = super::rampup_chunks(n, cap);
+            let mut covered = 0;
+            for (k, r) in chunks.iter().enumerate() {
+                assert_eq!(r.start, covered, "contiguous");
+                assert!(r.end > r.start || n == 0);
+                assert!(r.end - r.start <= cap);
+                if k == 0 && n > 0 {
+                    assert_eq!(r.end - r.start, 1, "first chunk seeds the incumbent");
+                }
+                covered = r.end;
+            }
+            assert_eq!(covered, n, "n={n} cap={cap}");
+        }
+    }
+
+    #[test]
+    fn batch_report_carries_prune_telemetry() {
+        let sc = quick();
+        let coord = Coordinator::paper();
+        let rep = coord.run_batch_report(std::slice::from_ref(&sc));
+        // The default path computes bounds and cuts subtrees inside the
+        // exact inner solves.
+        assert!(rep.prune.bounds_computed > 0);
+        assert!(rep.prune.subtrees_cut > 0);
+        assert_eq!(rep.prune.bounded_out, 0, "exact sweeps never bound out instances");
+        // A repeat batch is served from cache: no new pruning work.
+        let again = coord.run_batch_report(std::slice::from_ref(&sc));
+        assert_eq!(again.prune, crate::opt::bounds::PruneStats::default());
     }
 
     #[test]

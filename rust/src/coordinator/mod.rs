@@ -33,5 +33,7 @@
 pub mod cache;
 pub mod driver;
 
-pub use cache::{CacheKey, CacheStats, MemoCache, StatsSnapshot};
-pub use driver::{BatchReport, Coordinator, SweepReport};
+pub use cache::{CacheEntry, CacheKey, CacheStats, MemoCache, StatsSnapshot};
+pub use driver::{
+    BatchReport, Coordinator, GatedFrontPoint, GatedParetoResult, PruneCounters, SweepReport,
+};

@@ -6,7 +6,7 @@
 //! [`CodesignRequest`]s and routes them through one [`Session::submit`]
 //! path, so all of them share the warm memo store and the batched sweep
 //! engine; `serve` answers a JSON request file through the same session.
-//! Subcommands map onto the experiments of DESIGN.md §6; `report --all`
+//! Subcommands map onto the experiments DESIGN.md catalogues; `report --all`
 //! regenerates every paper table/figure under `reports/`.
 
 use codesign::platform::{Platform, DEFAULT_PLATFORM};
@@ -33,6 +33,12 @@ fn cli() -> Cli {
         default: None,
         help: "hardware baseline: preset (maxwell, maxwell+, maxwell-nocache) or override name (maxwell:bw20:clk1.4)",
     };
+    let no_prune = OptSpec {
+        name: "no-prune",
+        takes_value: false,
+        default: None,
+        help: "disable bound-and-prune: evaluate every instance in full (bit-identical results, more model evaluations)",
+    };
     Cli {
         bin: "codesign",
         about: "Accelerator codesign as non-linear optimization — paper reproduction",
@@ -50,6 +56,7 @@ fn cli() -> Cli {
                     quick.clone(),
                     threads.clone(),
                     platform.clone(),
+                    no_prune.clone(),
                     OptSpec { name: "class", takes_value: true, default: Some("both"), help: "2d | 3d | both | <stencil>" },
                     OptSpec { name: "stencil", takes_value: true, default: None, help: "single stencil: preset (jacobi2d) or family (star3d:r2)" },
                     OptSpec { name: "measured-citer", takes_value: false, default: None, help: "use PJRT-measured C_iter" },
@@ -89,6 +96,7 @@ fn cli() -> Cli {
                 opts: vec![
                     threads.clone(),
                     platform.clone(),
+                    no_prune.clone(),
                     OptSpec { name: "budget", takes_value: true, default: Some("450"), help: "area budget, mm²" },
                     OptSpec { name: "n-sm", takes_value: true, default: None, help: "pin the SM count" },
                     OptSpec { name: "n-v", takes_value: true, default: None, help: "pin vector units per SM" },
@@ -109,9 +117,10 @@ fn cli() -> Cli {
             },
             Command {
                 name: "serve",
-                about: "answer a JSON request file through one warm session (wire schema v3; v1/v2 accepted)",
+                about: "answer a JSON request file through one warm session (wire schema v4; v1-v3 accepted)",
                 opts: vec![
                     platform,
+                    no_prune,
                     OptSpec { name: "requests", takes_value: true, default: None, help: "request file path (required)" },
                     OptSpec { name: "out", takes_value: true, default: Some("-"), help: "response file path ('-' = stdout)" },
                     OptSpec { name: "pretty", takes_value: false, default: None, help: "indent the response JSON" },
@@ -139,7 +148,8 @@ fn main() {
     }
 }
 
-/// A scenario spec from the shared CLI options (`--quick`, `--threads`).
+/// A scenario spec from the shared CLI options (`--quick`, `--threads`,
+/// `--no-prune`).
 fn spec_from_args(spec: ScenarioSpec, args: &Args, citer: &CIterTable) -> ScenarioSpec {
     let mut spec = spec.with_citer(citer.clone());
     if args.flag("quick") {
@@ -148,7 +158,28 @@ fn spec_from_args(spec: ScenarioSpec, args: &Args, citer: &CIterTable) -> Scenar
     if let Some(t) = args.opt_usize("threads") {
         spec = spec.with_threads(t);
     }
+    if args.flag("no-prune") {
+        let opts = spec.solve_opts.clone().without_prune();
+        spec = spec.with_solve_opts(opts);
+    }
     spec
+}
+
+/// Force the `--no-prune` audit path onto every solver-option set a decoded
+/// request carries (the `serve --no-prune` knob: same answers, full
+/// evaluation).
+fn strip_prune(req: &mut CodesignRequest) {
+    match req {
+        CodesignRequest::Explore { scenario }
+        | CodesignRequest::Pareto { scenario }
+        | CodesignRequest::WhatIf { scenario, .. } => scenario.solve_opts.prune = false,
+        CodesignRequest::Sensitivity { scenario_2d, scenario_3d, .. } => {
+            scenario_2d.solve_opts.prune = false;
+            scenario_3d.solve_opts.prune = false;
+        }
+        CodesignRequest::Tune(t) => t.solve_opts.prune = false,
+        CodesignRequest::Validate | CodesignRequest::SolverCost { .. } => {}
+    }
 }
 
 /// The platform a request's work is attributed to in bench stats: the
@@ -170,7 +201,8 @@ fn request_platform_name(req: &CodesignRequest, default_name: &str) -> String {
 fn session_stats_line(session: &Session, rep: &SubmitReport) {
     eprintln!(
         "[service] {} request(s) answered in {:?}: {} unique instances swept, \
-         {} lookups ({:.1}% cache hits), {} cached entries across {} partition(s)",
+         {} lookups ({:.1}% cache hits), {} cached entries across {} partition(s); \
+         prune: {} bounds, {} subtrees cut, {} instances bounded out",
         rep.answers.len(),
         rep.wall,
         rep.unique_instances,
@@ -178,6 +210,9 @@ fn session_stats_line(session: &Session, rep: &SubmitReport) {
         100.0 * rep.cache_hit_rate(),
         session.cache_entries(),
         session.partitions(),
+        rep.prune.bounds_computed,
+        rep.prune.subtrees_cut,
+        rep.prune.bounded_out,
     );
 }
 
@@ -387,6 +422,9 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
             req.n_v = args.opt_usize("n-v").map(|v| v as u32);
             req.m_sm_kb = args.opt_f64("m-sm");
             req.threads = args.opt_usize("threads");
+            if args.flag("no-prune") {
+                req.solve_opts.prune = false;
+            }
             if let Some(name) = args.opt("stencil") {
                 let st = codesign::stencil::defs::Stencil::by_name_err(name)
                     .map_err(|msg| anyhow::anyhow!("{msg}"))?;
@@ -415,7 +453,12 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 .ok_or_else(|| anyhow::anyhow!("serve needs --requests <file.json>"))?;
             let text = std::fs::read_to_string(path)
                 .map_err(|e| anyhow::anyhow!("cannot read '{path}': {e}"))?;
-            let requests = wire::decode_requests(&text)?;
+            let mut requests = wire::decode_requests(&text)?;
+            if args.flag("no-prune") {
+                for req in &mut requests {
+                    strip_prune(req);
+                }
+            }
             let mut session = Session::new(platform.spec.clone());
             let rep = session.submit_all(&requests);
             session_stats_line(&session, &rep);
@@ -476,6 +519,15 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
                     ("lookups", Json::num(rep.lookups() as f64)),
                     ("unique_instances", Json::num(rep.unique_instances as f64)),
                     ("total_evals", Json::num(total_evals as f64)),
+                    (
+                        "prune",
+                        Json::obj(vec![
+                            ("enabled", Json::Bool(!args.flag("no-prune"))),
+                            ("bounds_computed", Json::num(rep.prune.bounds_computed as f64)),
+                            ("subtrees_cut", Json::num(rep.prune.subtrees_cut as f64)),
+                            ("bounded_out", Json::num(rep.prune.bounded_out as f64)),
+                        ]),
+                    ),
                     ("default_platform", Json::str(platform.name)),
                     ("platforms", platforms),
                 ]);

@@ -1,0 +1,328 @@
+//! Certified analytical lower bounds on `T_alg` — the bound-and-prune
+//! substrate of the sweep engine.
+//!
+//! Every bound here is provably ≤ the model value of **every feasible
+//! [`SoftwareParams`](crate::timemodel::talg::SoftwareParams)** in its scope
+//! (the whole instance, one `t_T` subtree, or one `(t_T, t_S2, t_S3)` group),
+//! so skipping a subtree whose bound exceeds the incumbent can never change
+//! which optimum a search returns. The derivation walks the exact terms of
+//! [`TimeModel::evaluate_pre`] (DESIGN.md §5 has the full argument):
+//!
+//! * **Compute roofline.** A round's compute phase issues at
+//!   `issue_lanes = min(n_V, resident/λ)` lane-ops per cycle per SM, and the
+//!   lane-work charged over all rounds is at least the real iteration count:
+//!   tile coverage satisfies `total_blocks · threads · iters_per_thread ≥
+//!   S1·S2(·S3)·T` (each ceil only over-covers). Hence total compute cycles
+//!   `≥ points · C_iter / (n_SM · issue_cap)`.
+//! * **Resident-thread cap.** `issue_cap` itself is bounded by shared
+//!   memory: `k · M_tile ≤ M_SM` with `threads ≤ w2·w3` gives `resident =
+//!   k·threads ≤ M_SM / (bytes · n_buf · w1_min)` where `w1_min =
+//!   1 + 2σ(t_T − 1) + 2σ` is the narrowest possible staged hexagon row at
+//!   this `t_T`. Large time tiles therefore *cannot* hide latency — the term
+//!   that gives the per-`t_T` bound its interior minimum.
+//! * **Bandwidth roofline.** Per block, `traffic ≥ 2 · out_bytes` (the
+//!   staged footprint is never smaller than the written face), and summed
+//!   over all blocks `out ≥ bytes · points / t_T`; each SM streams its own
+//!   bandwidth slice, so total memory cycles `≥ 2 · bytes · points /
+//!   (t_T · n_SM · B_cyc)`.
+//! * **Sync floor.** Every wavefront dispatches at least one round:
+//!   `rounds ≥ 2 · ceil(T / t_T)`.
+//!
+//! Compute and memory phases overlap (`max`), sync does not, so
+//! `cycles ≥ max(compute_lb, mem_lb) + sync_lb`. A final `1 − 1e-9` safety
+//! factor absorbs f64 rounding in the derivation chain; it only ever makes
+//! the bound smaller (= prune less), never unsound.
+//!
+//! The instance-level bound additionally needs the *feasible* `t_T` range:
+//! `t_T ≤ opts.max_t_t` (nothing the solver — grid or refinement — ever
+//! evaluates exceeds it) and the shared-memory cap from `w1_min` above.
+//! [`lower_bound`] returning `f64::INFINITY` is *equivalent* to the instance
+//! having no feasible software point at all (certified by
+//! `prop_lower_bound_finite_iff_feasible`), which is what lets the gated
+//! Pareto path count feasible/infeasible designs without solving them.
+
+use crate::area::params::HwParams;
+use crate::opt::problem::{self, SolveOpts};
+use crate::stencil::defs::Stencil;
+use crate::stencil::workload::{ProblemSize, WorkloadEntry};
+use crate::timemodel::citer::CIterTable;
+use crate::timemodel::talg::TimeModel;
+
+/// Subtree-pruning slack: a grid subtree is skipped only when its bound
+/// exceeds `incumbent × PRUNE_SLACK`. The value is pinned to the refinement
+/// phase's start-retention cutoff in `opt::inner` (starts with
+/// `est > best × 1.25` are discarded there), which is exactly what makes
+/// pruning invisible: every pruned point is strictly worse than
+/// `final_best × 1.25`, so it could neither become the incumbent nor survive
+/// as a refinement start.
+pub const PRUNE_SLACK: f64 = 1.25;
+
+/// One-sided f64 safety margin on every bound (see module docs).
+const SAFETY: f64 = 1.0 - 1e-9;
+
+/// Pruning telemetry: how much bound-and-prune work a solve / sweep did.
+/// All counters are zero on the `--no-prune` path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PruneStats {
+    /// Lower-bound evaluations (each a handful of flops). Granularity
+    /// follows the consumer: the inner solver ticks once per subtree/group
+    /// bound, the gated sweep paths once per instance-level [`lower_bound`]
+    /// (itself a loop of per-`t_T` bounds) — a work indicator, not a count
+    /// of comparable units.
+    pub bounds_computed: u64,
+    /// Grid subtrees ((t_T) or (t_T, t_S2, t_S3)) skipped inside the inner
+    /// solver.
+    pub subtrees_cut: u64,
+    /// Whole instances answered `BoundedOut` (never evaluated) because their
+    /// bound already exceeded the caller's cutoff.
+    pub bounded_out: u64,
+}
+
+impl PruneStats {
+    pub fn add(&mut self, other: &PruneStats) {
+        self.bounds_computed += other.bounds_computed;
+        self.subtrees_cut += other.subtrees_cut;
+        self.bounded_out += other.bounded_out;
+    }
+}
+
+/// Largest `t_T` any feasible software point of this instance can carry:
+/// the solver's own cap, clamped by shared memory (`w1_min(t_T)` staged at
+/// `t_S2 = 32`, `t_S3 = 1` must fit `M_SM` — larger tiles only grow the
+/// footprint). Returns 0 when not even `t_T = 2` fits (no feasible point).
+pub fn t_t_cap(stencil: &Stencil, hw: &HwParams, max_t_t: u64) -> u64 {
+    let sigma = stencil.sigma as f64;
+    let w3 = if stencil.is_3d() { 1.0 + 2.0 * sigma } else { 1.0 };
+    let denom = stencil.bytes_per_cell * stencil.n_buffers * (32.0 + 2.0 * sigma) * w3;
+    if denom <= 0.0 {
+        return 0;
+    }
+    // footprint(t_S1 = 1, t_T) = denom · (1 + 2σ(t_T − 1) + 2σ) ≤ M_SM·1024.
+    let a = hw.m_sm_kb * 1024.0 / denom - 1.0 - 2.0 * sigma;
+    if a < 2.0 * sigma {
+        return 0; // t_T = 2 already busts shared memory
+    }
+    let cap = (1.0 + a / (2.0 * sigma)).floor() as u64;
+    cap.min(max_t_t)
+}
+
+/// Lower bound (seconds) over every feasible software point whose time-tile
+/// height is exactly `t_t`. `INFINITY` when no such point exists.
+pub fn lower_bound_tt(
+    model: &TimeModel,
+    stencil: &Stencil,
+    size: &ProblemSize,
+    hw: &HwParams,
+    t_t: u64,
+) -> f64 {
+    let m = &model.machine;
+    let sigma = stencil.sigma as f64;
+    let points = size.points();
+    // Shared memory caps resident threads per SM (see module docs).
+    let w1_min = 1.0 + 2.0 * sigma * (t_t as f64 - 1.0) + 2.0 * sigma;
+    let mut resident_cap =
+        hw.m_sm_kb * 1024.0 / (stencil.bytes_per_cell * stencil.n_buffers * w1_min);
+    resident_cap = resident_cap.min((m.max_warps_per_sm * m.warp) as f64);
+    if resident_cap < 1.0 {
+        return f64::INFINITY;
+    }
+    let lam = m.latency_factor_for(hw.m_sm_kb);
+    let issue_cap = (hw.n_v as f64).min(resident_cap / lam);
+    let cc_lb = points * stencil.c_iter_cycles / (hw.n_sm as f64 * issue_cap);
+    let mem_lb = 2.0 * stencil.bytes_per_cell * points
+        / t_t as f64
+        / (hw.n_sm as f64 * m.bytes_per_cycle_per_sm());
+    let sync_lb = 2.0 * (size.t as f64 / t_t as f64).ceil() * m.sync_cycles;
+    let cycles = cc_lb.max(mem_lb) + sync_lb;
+    cycles / (m.clock_ghz * 1e9) * SAFETY
+}
+
+/// Lower bound (seconds) over every feasible `(t_S1, k)` completion of one
+/// `(t_T, t_S2, t_S3)` grid group. Tighter than [`lower_bound_tt`]: with the
+/// thread shape known, the resource-maximal `k` (blocks, warps, shared
+/// memory at the minimal `t_S1 = 1` footprint) caps the issue rate exactly.
+pub fn lower_bound_group(
+    model: &TimeModel,
+    stencil: &Stencil,
+    size: &ProblemSize,
+    hw: &HwParams,
+    t_t: u64,
+    t_s2: u64,
+    t_s3: Option<u64>,
+) -> f64 {
+    use crate::timemodel::tiling::{self, TileSizes};
+    let m = &model.machine;
+    let threads = t_s2 * t_s3.unwrap_or(1);
+    if threads > m.max_threads_per_block as u64 {
+        return f64::INFINITY;
+    }
+    let min_tile = TileSizes { t_s1: 1, t_s2, t_s3, t_t };
+    let min_fp = tiling::tile_footprint_bytes(stencil, &min_tile);
+    let k_cap = problem::k_max_for(model, hw, threads, min_fp);
+    if k_cap == 0 {
+        return f64::INFINITY;
+    }
+    let points = size.points();
+    let lam = m.latency_factor_for(hw.m_sm_kb);
+    let issue_cap = (hw.n_v as f64).min(k_cap as f64 * threads as f64 / lam);
+    let cc_lb = points * stencil.c_iter_cycles / (hw.n_sm as f64 * issue_cap);
+    let mem_lb = 2.0 * stencil.bytes_per_cell * points
+        / t_t as f64
+        / (hw.n_sm as f64 * m.bytes_per_cycle_per_sm());
+    let sync_lb = 2.0 * (size.t as f64 / t_t as f64).ceil() * m.sync_cycles;
+    let cycles = cc_lb.max(mem_lb) + sync_lb;
+    cycles / (m.clock_ghz * 1e9) * SAFETY
+}
+
+/// Certified lower bound (seconds) on the inner problem's optimum: the
+/// minimum of [`lower_bound_tt`] over every even `t_T` the instance can
+/// feasibly carry under `opts`. `INFINITY` iff no feasible software point
+/// exists at all (the inner solver would return `None`).
+pub fn lower_bound(
+    model: &TimeModel,
+    stencil: &Stencil,
+    size: &ProblemSize,
+    hw: &HwParams,
+    opts: &SolveOpts,
+) -> f64 {
+    let cap = t_t_cap(stencil, hw, opts.max_t_t);
+    if cap < 2 {
+        return f64::INFINITY;
+    }
+    let mut best = f64::INFINITY;
+    let mut t_t = 2;
+    while t_t <= cap {
+        let b = lower_bound_tt(model, stencil, size, hw, t_t);
+        if b < best {
+            best = b;
+        }
+        t_t += 2;
+    }
+    best
+}
+
+/// [`lower_bound`] for one workload entry, with the scenario's `C_iter`
+/// applied — the per-entry term of an objective-level cutoff
+/// `Σ wᵢ · lower_bound_entry(i) ≤ Σ wᵢ · Tᵢ`.
+pub fn lower_bound_entry(
+    model: &TimeModel,
+    citer: &CIterTable,
+    hw: &HwParams,
+    entry: &WorkloadEntry,
+    opts: &SolveOpts,
+) -> f64 {
+    let stencil = citer.apply(Stencil::get(entry.stencil));
+    lower_bound(model, &stencil, &entry.size, hw, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::defs::StencilId;
+    use crate::timemodel::talg::SoftwareParams;
+    use crate::timemodel::tiling::TileSizes;
+
+    fn model() -> TimeModel {
+        TimeModel::maxwell()
+    }
+
+    #[test]
+    fn bound_is_below_sample_evaluations() {
+        let m = model();
+        let st = Stencil::get(StencilId::Jacobi2D);
+        let hw = HwParams::gtx980();
+        let size = ProblemSize::d2(8192, 4096);
+        let lb = lower_bound(&m, st, &size, &hw, &SolveOpts::default());
+        assert!(lb.is_finite() && lb > 0.0);
+        for (tiles, k) in [
+            (TileSizes::d2(32, 64, 8), 2),
+            (TileSizes::d2(64, 128, 16), 4),
+            (TileSizes::d2(1, 96, 12), 5),
+        ] {
+            let sw = SoftwareParams::new(tiles, k);
+            assert!(m.feasibility(st, &hw, &sw).is_ok());
+            let est = m.evaluate(st, &size, &hw, &sw);
+            assert!(lb <= est.seconds, "lb {lb} vs {}", est.seconds);
+            let tt_lb = lower_bound_tt(&m, st, &size, &hw, tiles.t_t);
+            assert!(tt_lb <= est.seconds, "tt lb {tt_lb} vs {}", est.seconds);
+            let g_lb =
+                lower_bound_group(&m, st, &size, &hw, tiles.t_t, tiles.t_s2, tiles.t_s3);
+            assert!(g_lb <= est.seconds, "group lb {g_lb} vs {}", est.seconds);
+        }
+    }
+
+    #[test]
+    fn group_bound_dominates_subtree_bound() {
+        // The group bound only adds information, so it can never be below
+        // the t_T bound it refines.
+        let m = model();
+        let st = Stencil::get(StencilId::Heat3D);
+        let hw = HwParams::gtx980();
+        let size = ProblemSize::d3(256, 128);
+        for t_t in [2u64, 8, 16] {
+            let tt = lower_bound_tt(&m, st, &size, &hw, t_t);
+            for t_s2 in [32u64, 128] {
+                let g = lower_bound_group(&m, st, &size, &hw, t_t, t_s2, Some(4));
+                assert!(g >= tt, "t_t {t_t} t_s2 {t_s2}: group {g} < subtree {tt}");
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_instance_bounds_to_infinity() {
+        let m = model();
+        let st = Stencil::get(StencilId::Jacobi2D);
+        let mut hw = HwParams::gtx980();
+        hw.m_sm_kb = 0.25; // nothing fits — same setup inner.rs certifies as None
+        let lb = lower_bound(&m, st, &ProblemSize::d2(4096, 1024), &hw, &SolveOpts::default());
+        assert!(lb.is_infinite());
+        assert_eq!(t_t_cap(st, &hw, 128), 0);
+    }
+
+    #[test]
+    fn t_t_cap_shrinks_with_radius_and_memory() {
+        let st1 = Stencil::get(StencilId::Jacobi2D);
+        let hw = HwParams::gtx980();
+        let cap1 = t_t_cap(st1, &hw, 1 << 20);
+        assert!(cap1 > 128, "96 kB allows deep time tiles at sigma 1: {cap1}");
+        let mut small = hw;
+        small.m_sm_kb = 12.0;
+        assert!(t_t_cap(st1, &small, 1 << 20) < cap1);
+        // The solver cap clamps.
+        assert_eq!(t_t_cap(st1, &hw, 128), 128);
+    }
+
+    #[test]
+    fn instance_bound_has_interior_minimum() {
+        // The resident-thread cap makes very deep time tiles latency-starved,
+        // so the best t_T is interior — neither 2 nor the cap.
+        let m = model();
+        let st = Stencil::get(StencilId::Jacobi2D);
+        let hw = HwParams { n_sm: 8, n_v: 256, m_sm_kb: 96.0, ..HwParams::gtx980() };
+        let size = ProblemSize::d2(12288, 2048);
+        let opts = SolveOpts::default();
+        let lb = lower_bound(&m, st, &size, &hw, &opts);
+        let at_2 = lower_bound_tt(&m, st, &size, &hw, 2);
+        let cap = t_t_cap(st, &hw, opts.max_t_t);
+        let at_cap = lower_bound_tt(&m, st, &size, &hw, cap);
+        assert!(lb < at_2, "lb {lb} vs t_T=2 {at_2}");
+        assert!(lb < at_cap, "lb {lb} vs t_T=cap {at_cap}");
+    }
+
+    #[test]
+    fn entry_bound_respects_citer_override() {
+        // Doubling C_iter can only raise (or keep) the bound.
+        let m = model();
+        let hw = HwParams::gtx980();
+        let entry = WorkloadEntry {
+            stencil: StencilId::Jacobi2D,
+            size: ProblemSize::d2(8192, 4096),
+            weight: 1.0,
+        };
+        let opts = SolveOpts::default();
+        let base = lower_bound_entry(&m, &CIterTable::paper(), &hw, &entry, &opts);
+        let doubled = CIterTable::with_measured(&[(StencilId::Jacobi2D, 22.0)]);
+        let scaled = lower_bound_entry(&m, &doubled, &hw, &entry, &opts);
+        assert!(scaled >= base);
+    }
+}

@@ -76,6 +76,64 @@ mod tests {
     }
 
     #[test]
+    fn smart_solver_matches_exhaustive_on_radius2_3d_family() {
+        // PR 3 opened the workload space beyond the six radius-1 presets;
+        // the oracle certification follows: on a fully-enumerated small
+        // grid (all_k removes the k heuristic from the comparison), the
+        // production solver must land on the radius-2 3-D family optimum.
+        use crate::stencil::spec::{Dim, StencilSpec};
+        let model = TimeModel::maxwell();
+        let st = *Stencil::get(StencilSpec::star(Dim::D3, 2).register());
+        let size = ProblemSize::d3(32, 8);
+        let opts = SolveOpts { all_k: true, refine: true, max_t_t: 8, ..SolveOpts::default() };
+        let p = InnerProblem { stencil: st, size, hw: HwParams::gtx980() };
+        let brute =
+            solve_exhaustive(&model, &p, size.s1, size.s2, size.s3.unwrap(), opts.max_t_t)
+                .expect("radius-2 star fits GTX 980 shared memory");
+        let smart = solve_inner(&model, &p, &opts).expect("solver must agree on feasibility");
+        assert!(
+            smart.est.seconds <= brute.est.seconds * (1.0 + 1e-9),
+            "smart {} ({:?}) worse than exhaustive {} ({:?})",
+            smart.est.seconds,
+            smart.sw,
+            brute.est.seconds,
+            brute.sw
+        );
+        let on_grid =
+            smart.sw.tiles.t_s2 <= size.s2 && smart.sw.k <= model.machine.max_blocks_per_sm;
+        if on_grid {
+            let rel = (smart.est.seconds - brute.est.seconds).abs() / brute.est.seconds;
+            assert!(rel < 1e-9, "rel {rel:e}: {:?} vs {:?}", smart.sw, brute.sw);
+        }
+        assert!(smart.evals < brute.evals, "smart {} vs brute {}", smart.evals, brute.evals);
+    }
+
+    #[test]
+    fn smart_solver_matches_exhaustive_on_maxwell_nocache_hardware() {
+        // PR 4 opened the platform space; certify the inner solver against
+        // brute force under the maxwell-nocache platform's time model on a
+        // cache-stripped reference point.
+        let platform = crate::platform::registry::Platform::by_name("maxwell-nocache")
+            .expect("preset platform");
+        let model = platform.spec.time_model();
+        let hw = HwParams::gtx980().without_caches();
+        let p = InnerProblem {
+            stencil: *Stencil::get(StencilId::Heat2D),
+            size: ProblemSize::d2(1024, 256),
+            hw,
+        };
+        let brute = solve_exhaustive(&model, &p, 96, 256, 1, 24).unwrap();
+        let smart = solve_inner(&model, &p, &SolveOpts::default()).unwrap();
+        assert!(
+            smart.est.seconds <= brute.est.seconds * 1.03,
+            "smart {} vs brute {}",
+            smart.est.seconds,
+            brute.est.seconds
+        );
+        assert!(smart.evals < brute.evals);
+    }
+
+    #[test]
     fn smart_solver_matches_exhaustive_on_small_instance() {
         // On an instance whose optimum lies inside the smart solver's grid
         // coverage, the two must agree closely; the smart solver may even be

@@ -3,17 +3,29 @@
 //!
 //! Strategy (replacing the paper's bonmin):
 //! 1. enumerate the constraint-pruned candidate grid
-//!    (`t_T × t_S2 [× t_S3] × t_S1`), skipping whole subtrees whose minimal
+//!    (`t_T × t_S2 [× t_S3] × t_S1`), `t_T` subtrees in ascending order of
+//!    their certified lower bound ([`crate::opt::bounds`]) so the incumbent
+//!    tightens as early as possible, skipping whole subtrees whose minimal
 //!    footprint already violates the shared-memory constraint;
-//! 2. per tile vector, evaluate only the candidate `k` values where the
+//! 2. with pruning enabled (the default), skip `t_T` subtrees and
+//!    `(t_T, t_S2, t_S3)` groups whose lower bound exceeds
+//!    `incumbent × PRUNE_SLACK` — provably invisible: every skipped point is
+//!    strictly worse than `final_best × 1.25`, so it could neither become
+//!    the incumbent (updates require a strict improvement) nor survive as a
+//!    refinement start (the start filter discards anything above
+//!    `best × 1.25`). `--no-prune` evaluates the identical enumeration
+//!    without the skips; results are certified bit-identical by
+//!    `integration_prune.rs`;
+//! 3. per tile vector, evaluate only the candidate `k` values where the
 //!    piecewise round model can turn ([`problem::k_candidates`]);
-//! 3. optionally hill-climb integer refinement around the incumbent
+//! 4. optionally hill-climb integer refinement around the incumbent
 //!    (`t_S1 ± δ`, `t_T ± 2`, `t_S2 ± 32`, `k ± 1`).
 //!
 //! The result is certified against brute force by `exhaustive` in the
 //! property tests, and is typically 4–6 orders of magnitude faster than the
 //! paper's 19 s/instance average.
 
+use crate::opt::bounds::{self, PruneStats, PRUNE_SLACK};
 use crate::opt::problem::{self, InnerProblem, SolveOpts};
 use crate::timemodel::talg::{SoftwareParams, TimeEstimate, TimeModel};
 use crate::timemodel::tiling::{self, TileSizes};
@@ -27,6 +39,34 @@ pub struct InnerSolution {
     pub evals: u64,
 }
 
+/// What a cutoff-aware inner solve can answer (see [`solve_inner_cut`]).
+#[derive(Clone, Copy, Debug)]
+pub enum InnerOutcome {
+    /// The exact optimum, identical to what [`solve_inner`] returns.
+    Solved(InnerSolution),
+    /// No feasible software point exists.
+    Infeasible,
+    /// The instance's certified lower bound already meets the caller's
+    /// cutoff: its exact optimum is **strictly** above every bound (the
+    /// bound carries a one-sided safety margin), so it cannot beat — or even
+    /// tie — an incumbent at the cutoff. Nothing was evaluated.
+    BoundedOut {
+        /// The instance-level bound that killed it (what the memo cache
+        /// records so later exact consumers re-solve instead of aliasing).
+        bound_seconds: f64,
+    },
+}
+
+impl InnerOutcome {
+    /// The exact solution, if this outcome carries one.
+    pub fn solved(self) -> Option<InnerSolution> {
+        match self {
+            InnerOutcome::Solved(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
 /// Number of distinct (t_S2, t_S3) groups whose incumbents seed the
 /// refinement phase. Single-start refinement gets trapped in local minima of
 /// the ceil-quantized landscape (e.g. the grid optimum at t_S2 = 32 hiding a
@@ -37,6 +77,40 @@ const REFINE_STARTS: usize = 12;
 /// Solve one inner instance. Returns `None` when no feasible software point
 /// exists (e.g. the minimal tile footprint exceeds `M_SM`).
 pub fn solve_inner(model: &TimeModel, p: &InnerProblem, opts: &SolveOpts) -> Option<InnerSolution> {
+    solve_inner_cut(model, p, opts, None, &mut PruneStats::default()).solved()
+}
+
+/// [`solve_inner`] with an optional objective cutoff and pruning telemetry.
+///
+/// With `cutoff: Some(c)` and pruning enabled, the solver first evaluates
+/// the instance's certified lower bound; when it already reaches `c`, the
+/// instance is answered [`InnerOutcome::BoundedOut`] without a single model
+/// evaluation — the fast-exit the objective-driven sweep paths (tune,
+/// gated Pareto) lean on. Otherwise the exact search runs, and the
+/// `Solved` result is **bit-identical** to [`solve_inner`]'s (subtree
+/// pruning is invisible by construction — see the module docs).
+pub fn solve_inner_cut(
+    model: &TimeModel,
+    p: &InnerProblem,
+    opts: &SolveOpts,
+    cutoff: Option<f64>,
+    stats: &mut PruneStats,
+) -> InnerOutcome {
+    if opts.prune {
+        if let Some(c) = cutoff {
+            let b0 = bounds::lower_bound(model, &p.stencil, &p.size, &p.hw, opts);
+            stats.bounds_computed += 1;
+            if b0.is_infinite() {
+                // Certified equivalent to the search finding nothing
+                // (`prop_lower_bound_finite_iff_feasible`).
+                return InnerOutcome::Infeasible;
+            }
+            if b0 >= c {
+                stats.bounded_out += 1;
+                return InnerOutcome::BoundedOut { bound_seconds: b0 };
+            }
+        }
+    }
     let mut best: Option<InnerSolution> = None;
     // Group refinement starts by (t_S2, t_T): the two axes whose ceil
     // interactions create distinct local basins. BTreeMap keeps the start
@@ -46,7 +120,24 @@ pub fn solve_inner(model: &TimeModel, p: &InnerProblem, opts: &SolveOpts) -> Opt
         std::collections::BTreeMap::new();
     let mut evals = 0u64;
 
+    // t_T subtrees in ascending order of their certified lower bound: the
+    // best-bound subtree almost always holds the optimum, so the incumbent
+    // is tight after one subtree and the remaining bounds can cut. The
+    // order is a pure function of the instance (shared by the pruned and
+    // `--no-prune` paths, so both enumerate identically and tie-winners
+    // can never diverge).
     let t_t_grid = problem::t_t_grid(p.size.t, opts.max_t_t);
+    if opts.prune {
+        // The ordering bounds are computed either way (both paths share the
+        // enumeration order); only the pruning path reports them, so
+        // `--no-prune` telemetry reads all-zeros as expected.
+        stats.bounds_computed += t_t_grid.len() as u64;
+    }
+    let mut keyed: Vec<(f64, u64)> = t_t_grid
+        .iter()
+        .map(|&t| (bounds::lower_bound_tt(model, &p.stencil, &p.size, &p.hw, t), t))
+        .collect();
+    keyed.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
     let t_s2_grid = problem::t_s2_grid(p.size.s2, model.machine.max_threads_per_block);
     let t_s3_grid: Vec<Option<u64>> = if p.stencil.is_3d() {
         problem::t_s3_grid(p.size.s3.expect("3-D size")).into_iter().map(Some).collect()
@@ -56,7 +147,7 @@ pub fn solve_inner(model: &TimeModel, p: &InnerProblem, opts: &SolveOpts) -> Opt
     let t_s1_grid = problem::t_s1_grid(p.size.s1);
     let m_sm_bytes = p.hw.m_sm_kb * 1024.0;
 
-    for &t_t in &t_t_grid {
+    for &(tt_lb, t_t) in &keyed {
         // Minimal footprint at this t_T (t_S1 = 1, t_S2 = 32, t_S3 = 1): if
         // even that cannot fit, no larger tile can — prune the subtree.
         let min_tile = TileSizes {
@@ -68,11 +159,37 @@ pub fn solve_inner(model: &TimeModel, p: &InnerProblem, opts: &SolveOpts) -> Opt
         if tiling::tile_footprint_bytes(&p.stencil, &min_tile) > m_sm_bytes {
             continue;
         }
+        // Bound-and-prune: a subtree whose bound exceeds the incumbent by
+        // more than the slack cannot contain the final optimum nor any
+        // surviving refinement start (see module docs) — skip it whole.
+        if opts.prune {
+            if let Some(b) = &best {
+                if tt_lb > b.est.seconds * PRUNE_SLACK {
+                    stats.subtrees_cut += 1;
+                    continue;
+                }
+            }
+        }
         for &t_s2 in &t_s2_grid {
             for &t_s3 in &t_s3_grid {
                 let threads = t_s2 * t_s3.unwrap_or(1);
                 if threads > model.machine.max_threads_per_block as u64 {
                     continue;
+                }
+                // Group-level bound: the thread shape pins the resource-
+                // maximal k, so latency-starved groups (small blocks on
+                // wide SMs) bound far above the incumbent and are cut.
+                if opts.prune {
+                    if let Some(b) = &best {
+                        let g_lb = bounds::lower_bound_group(
+                            model, &p.stencil, &p.size, &p.hw, t_t, t_s2, t_s3,
+                        );
+                        stats.bounds_computed += 1;
+                        if g_lb > b.est.seconds * PRUNE_SLACK {
+                            stats.subtrees_cut += 1;
+                            continue;
+                        }
+                    }
                 }
                 for &t_s1 in &t_s1_grid {
                     let tiles = TileSizes { t_s1, t_s2, t_s3, t_t };
@@ -127,9 +244,12 @@ pub fn solve_inner(model: &TimeModel, p: &InnerProblem, opts: &SolveOpts) -> Opt
         // >25% off the global incumbent has never been observed to refine
         // past it (certified by the brute-force property test); skipping
         // them removes most of the multi-start cost on production instances
-        // (§Perf).
+        // (§Perf). The retention factor IS `PRUNE_SLACK` — the subtree
+        // pruning above is invisible precisely because everything it skips
+        // would be discarded here; never let the two constants diverge
+        // (pruning harder than retention would break bit-identity).
         if let Some(b) = &best {
-            let cutoff = b.est.seconds * 1.25;
+            let cutoff = b.est.seconds * PRUNE_SLACK;
             starts.retain(|s| s.est.seconds <= cutoff);
         }
         for start in starts {
@@ -142,7 +262,10 @@ pub fn solve_inner(model: &TimeModel, p: &InnerProblem, opts: &SolveOpts) -> Opt
             }
         }
     }
-    best.map(|b| InnerSolution { evals, ..b })
+    match best {
+        Some(b) => InnerOutcome::Solved(InnerSolution { evals, ..b }),
+        None => InnerOutcome::Infeasible,
+    }
 }
 
 /// Evaluate one tile vector across its candidate `k`s, updating the global
@@ -367,6 +490,84 @@ mod tests {
         )
         .unwrap();
         assert!(big.est.seconds <= small.est.seconds * 1.0001);
+    }
+
+    #[test]
+    fn pruned_and_unpruned_results_are_bit_identical() {
+        // The whole point of the bound-and-prune layer: identical results,
+        // strictly fewer model evaluations (same instances as the paper
+        // sweep samples, plus a 3-D one).
+        let model = TimeModel::maxwell();
+        let cases = [
+            prob(StencilId::Jacobi2D, ProblemSize::d2(8192, 4096), HwParams::gtx980()),
+            prob(StencilId::Gradient2D, ProblemSize::d2(12288, 2048), HwParams {
+                n_sm: 8,
+                n_v: 256,
+                ..HwParams::gtx980()
+            }),
+            prob(StencilId::Heat3D, ProblemSize::d3(256, 128), HwParams::gtx980()),
+        ];
+        for p in cases {
+            let pruned = solve_inner(&model, &p, &SolveOpts::default()).unwrap();
+            let full =
+                solve_inner(&model, &p, &SolveOpts::default().without_prune()).unwrap();
+            assert_eq!(
+                pruned.est.seconds.to_bits(),
+                full.est.seconds.to_bits(),
+                "{:?}: pruned {} vs full {}",
+                p.stencil.id,
+                pruned.est.seconds,
+                full.est.seconds
+            );
+            assert_eq!(pruned.sw, full.sw, "{:?}", p.stencil.id);
+            assert!(pruned.evals <= full.evals, "{:?}", p.stencil.id);
+        }
+    }
+
+    #[test]
+    fn cutoff_fast_exit_spends_no_evals() {
+        use crate::opt::bounds::PruneStats;
+        let model = TimeModel::maxwell();
+        let p = prob(StencilId::Jacobi2D, ProblemSize::d2(8192, 4096), HwParams::gtx980());
+        let opts = SolveOpts::default();
+        let exact = solve_inner(&model, &p, &opts).unwrap();
+        // A cutoff below the certified bound: the instance is bounded out
+        // without a single evaluation, and the recorded bound is a true
+        // lower bound on the exact optimum.
+        let mut stats = PruneStats::default();
+        let out = solve_inner_cut(&model, &p, &opts, Some(1e-12), &mut stats);
+        let InnerOutcome::BoundedOut { bound_seconds } = out else {
+            panic!("tiny cutoff must bound out, got {out:?}");
+        };
+        assert!(bound_seconds <= exact.est.seconds);
+        assert_eq!(stats.bounded_out, 1);
+        // A cutoff the instance can beat: the exact solution comes back
+        // bit-identical to the cutoff-free solve.
+        let mut stats = PruneStats::default();
+        let out =
+            solve_inner_cut(&model, &p, &opts, Some(exact.est.seconds * 2.0), &mut stats);
+        let sol = out.solved().expect("achievable cutoff must solve exactly");
+        assert_eq!(sol.est.seconds.to_bits(), exact.est.seconds.to_bits());
+        assert_eq!(sol.sw, exact.sw);
+        assert_eq!(stats.bounded_out, 0);
+        assert!(stats.bounds_computed > 0);
+    }
+
+    #[test]
+    fn cutoff_on_infeasible_instance_reports_infeasible() {
+        use crate::opt::bounds::PruneStats;
+        let model = TimeModel::maxwell();
+        let mut hw = HwParams::gtx980();
+        hw.m_sm_kb = 0.25;
+        let p = prob(StencilId::Jacobi2D, ProblemSize::d2(4096, 1024), hw);
+        let out = solve_inner_cut(
+            &model,
+            &p,
+            &SolveOpts::default(),
+            Some(1.0),
+            &mut PruneStats::default(),
+        );
+        assert!(matches!(out, InnerOutcome::Infeasible));
     }
 
     #[test]

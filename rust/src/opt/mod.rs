@@ -12,6 +12,10 @@
 //! * [`inner`] — the production inner solver: constraint-directed candidate
 //!   enumeration with a monotonicity-based `k` selection and local integer
 //!   refinement around the grid optimum (µs–ms per instance).
+//! * [`bounds`] — certified analytical lower bounds on `T_alg`
+//!   (compute/bandwidth rooflines tightened by the shared-memory resident
+//!   cap): the bound-and-prune substrate behind [`inner`]'s subtree pruning
+//!   and the sweep engine's `BoundedOut` fast path.
 //! * [`exhaustive`] — a brute-force reference solver over a *fine* grid,
 //!   used by tests and the solver-cost bench to certify [`inner`].
 //! * [`separable`] — the eq. (18) driver: workload-weighted objective for
@@ -22,11 +26,13 @@
 //!   infeasible (E8).
 
 pub mod anneal;
+pub mod bounds;
 pub mod exhaustive;
 pub mod inner;
 pub mod problem;
 pub mod separable;
 
-pub use inner::{solve_inner, InnerSolution};
+pub use bounds::{lower_bound, lower_bound_entry, PruneStats, PRUNE_SLACK};
+pub use inner::{solve_inner, solve_inner_cut, InnerOutcome, InnerSolution};
 pub use problem::{InnerProblem, SolveOpts};
 pub use separable::{aggregate_weighted, solve_entry, solve_hardware_point, HardwarePointSolution};

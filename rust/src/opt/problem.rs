@@ -24,11 +24,29 @@ pub struct SolveOpts {
     pub refine: bool,
     /// Cap on the hexagon time height grid.
     pub max_t_t: u64,
+    /// Bound-and-prune (default on): skip grid subtrees whose certified
+    /// lower bound exceeds the incumbent, and let objective-driven sweep
+    /// paths answer `BoundedOut` from the bound alone. Results are
+    /// bit-identical either way (certified by `integration_prune.rs`);
+    /// `--no-prune` forces the full-evaluation path for auditing. Included
+    /// here (rather than as an engine flag) so pruned and unpruned sweeps
+    /// can never share a memo store: the session partitions coordinators by
+    /// `SolveOpts`, and `evals` telemetry differs between the two paths.
+    pub prune: bool,
 }
 
 impl Default for SolveOpts {
     fn default() -> Self {
-        SolveOpts { all_k: false, refine: true, max_t_t: 128 }
+        SolveOpts { all_k: false, refine: true, max_t_t: 128, prune: true }
+    }
+}
+
+impl SolveOpts {
+    /// This option set with bound-and-prune disabled (the `--no-prune` CLI
+    /// path).
+    pub fn without_prune(mut self) -> SolveOpts {
+        self.prune = false;
+        self
     }
 }
 

@@ -3,7 +3,8 @@
 //! minimizations per (stencil, size) entry.
 
 use crate::area::params::HwParams;
-use crate::opt::inner::{solve_inner, InnerSolution};
+use crate::opt::bounds::PruneStats;
+use crate::opt::inner::{solve_inner, solve_inner_cut, InnerOutcome, InnerSolution};
 use crate::opt::problem::{InnerProblem, SolveOpts};
 use crate::stencil::defs::Stencil;
 use crate::stencil::workload::{Workload, WorkloadEntry};
@@ -60,11 +61,21 @@ pub fn aggregate_weighted(
     workload: &Workload,
     per_entry: &[Option<InnerSolution>],
 ) -> Option<(f64, f64)> {
-    debug_assert_eq!(workload.entries.len(), per_entry.len(), "entry/solution mismatch");
+    aggregate_weighted_entries(&workload.entries, per_entry)
+}
+
+/// [`aggregate_weighted`] over a bare entry slice — the same accumulation,
+/// for callers (the bound-gated sweep paths) that hold entries without a
+/// `Workload` wrapper.
+pub fn aggregate_weighted_entries(
+    entries: &[WorkloadEntry],
+    per_entry: &[Option<InnerSolution>],
+) -> Option<(f64, f64)> {
+    debug_assert_eq!(entries.len(), per_entry.len(), "entry/solution mismatch");
     let mut t_weighted = 0.0;
     let mut flops_weighted = 0.0;
     let mut feasible = true;
-    for (entry, sol) in workload.entries.iter().zip(per_entry) {
+    for (entry, sol) in entries.iter().zip(per_entry) {
         if entry.weight == 0.0 {
             continue;
         }
@@ -91,6 +102,23 @@ pub fn solve_entry(
     let stencil = citer.apply(Stencil::get(entry.stencil));
     let p = InnerProblem { stencil, size: entry.size, hw: *hw };
     solve_inner(model, &p, opts)
+}
+
+/// [`solve_entry`] with an objective cutoff and pruning telemetry — the
+/// per-entry step of the objective-driven sweep paths. `Solved` outcomes
+/// are bit-identical to [`solve_entry`]'s.
+pub fn solve_entry_cut(
+    model: &TimeModel,
+    citer: &CIterTable,
+    hw: &HwParams,
+    entry: &WorkloadEntry,
+    opts: &SolveOpts,
+    cutoff: Option<f64>,
+    stats: &mut PruneStats,
+) -> InnerOutcome {
+    let stencil = citer.apply(Stencil::get(entry.stencil));
+    let p = InnerProblem { stencil, size: entry.size, hw: *hw };
+    solve_inner_cut(model, &p, opts, cutoff, stats)
 }
 
 /// Re-aggregate an already-solved hardware point under a different workload

@@ -470,6 +470,10 @@ pub struct ParetoSummary {
     pub infeasible: usize,
     pub pareto: Vec<DesignSummary>,
     pub total_evals: u64,
+    /// Design points answered from certified bounds without solving
+    /// (pruning telemetry; 0 on the batch/`--no-prune` path and on files
+    /// written before wire schema v4).
+    pub bounded_out: u64,
 }
 
 /// One Table II row.
@@ -498,6 +502,10 @@ pub struct TuneSummary {
     /// `None` when no candidate fits the budget with a feasible tiling.
     pub best: Option<DesignSummary>,
     pub total_evals: u64,
+    /// Candidates answered from certified objective bounds without a model
+    /// evaluation (pruning telemetry; 0 on the `--no-prune` path and on
+    /// files written before wire schema v4).
+    pub candidates_pruned: u64,
 }
 
 #[derive(Clone, Debug, PartialEq)]

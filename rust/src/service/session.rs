@@ -17,9 +17,10 @@ use crate::codesign::scenario::{DesignEval, Scenario, ScenarioResult};
 use crate::codesign::sensitivity::best_for_benchmark;
 use crate::codesign::tuner::{candidate_grid, Pinned};
 use crate::coordinator::{CacheKey, Coordinator, StatsSnapshot, SweepReport};
-use crate::opt::inner::InnerSolution;
+use crate::opt::bounds::{lower_bound_entry, PruneStats};
+use crate::opt::inner::{InnerOutcome, InnerSolution};
 use crate::opt::problem::SolveOpts;
-use crate::opt::separable::{aggregate_weighted, solve_entry};
+use crate::opt::separable::{aggregate_weighted, solve_entry, solve_entry_cut};
 use crate::platform::registry::{Platform, PlatformId};
 use crate::platform::spec::PlatformSpec;
 use crate::report::{self, Report};
@@ -71,6 +72,10 @@ pub struct SubmitReport {
     pub cache: StatsSnapshot,
     /// Distinct (hardware, stencil, size) instances the batch sweeps covered.
     pub unique_instances: usize,
+    /// Bound-and-prune telemetry summed over every partition this
+    /// submission touched (inner-solver subtree cuts plus instances the
+    /// objective-driven paths answered from bounds alone).
+    pub prune: PruneStats,
     pub wall: Duration,
 }
 
@@ -106,6 +111,10 @@ enum Plan {
     /// here rather than read back from the coordinator: fingerprint-equal
     /// platforms share a coordinator but may differ in bounds/spelling).
     One { slot: Slot, kind: OneKind, platform: PlatformSpec },
+    /// A standalone Pareto request on the bound-gated fast path: runs after
+    /// the batches (so it rides any sweep this submission warmed) through
+    /// [`Coordinator::run_pareto_gated`] on its partition's coordinator.
+    ParetoGated { ci: usize, scenario: Box<Scenario> },
     /// Two scenarios (2-D, 3-D) plus the Table II area band.
     Sensitivity { s2: Slot, s3: Slot, p2: PlatformSpec, p3: PlatformSpec, band: (f64, f64) },
     /// Runs after the batches, against the then-warm memo store.
@@ -173,6 +182,21 @@ impl Session {
         total
     }
 
+    fn prune_total(&self) -> PruneStats {
+        let mut total = PruneStats::default();
+        for (_, _, c) in &self.coordinators {
+            total.add(&c.prune.snapshot());
+        }
+        total
+    }
+
+    /// `BoundedOut` marks currently held across every partition's memo
+    /// store (instances a pruned sweep answered from bounds; an exact
+    /// demand upgrades them in place).
+    pub fn bounded_entries(&self) -> usize {
+        self.coordinators.iter().map(|(_, _, c)| c.cache.bounded_len()).sum()
+    }
+
     fn coordinator_index(
         &mut self,
         platform: &PlatformSpec,
@@ -222,17 +246,28 @@ impl Session {
     pub fn submit_all(&mut self, requests: &[CodesignRequest]) -> SubmitReport {
         let t0 = Instant::now();
         let before = self.stats_total();
+        let prune_before = self.prune_total();
 
         // Plan: one entry per request; scenario-backed requests enqueue into
         // per-(platform, C_iter, SolveOpts) groups, with identical specs
         // within this submission deduplicated onto one batch slot (e.g.
         // `report` asks for a scenario both as Explore and inside
         // Sensitivity — it should be served, not re-aggregated, twice).
+        // Specs any Explore in this submission will sweep in full anyway:
+        // a Pareto over the same spec stays on the batch path regardless of
+        // request order, instead of paying a redundant bound-gating pass.
+        let explored: Vec<&ScenarioSpec> = requests
+            .iter()
+            .filter_map(|r| match r {
+                CodesignRequest::Explore { scenario } => Some(scenario),
+                _ => None,
+            })
+            .collect();
         let mut groups: Vec<(usize, Vec<Scenario>)> = Vec::new();
         let mut seen: Vec<(ScenarioSpec, Slot)> = Vec::new();
         let mut plans: Vec<Plan> = Vec::with_capacity(requests.len());
         for req in requests {
-            let plan = self.plan(req, &mut groups, &mut seen);
+            let plan = self.plan(req, &explored, &mut groups, &mut seen);
             plans.push(plan);
         }
 
@@ -253,6 +288,7 @@ impl Session {
         }
 
         let after = self.stats_total();
+        let prune_after = self.prune_total();
         SubmitReport {
             answers,
             cache: StatsSnapshot {
@@ -260,6 +296,11 @@ impl Session {
                 misses: after.misses - before.misses,
             },
             unique_instances,
+            prune: PruneStats {
+                bounds_computed: prune_after.bounds_computed - prune_before.bounds_computed,
+                subtrees_cut: prune_after.subtrees_cut - prune_before.subtrees_cut,
+                bounded_out: prune_after.bounded_out - prune_before.bounded_out,
+            },
             wall: t0.elapsed(),
         }
     }
@@ -267,6 +308,7 @@ impl Session {
     fn plan(
         &mut self,
         req: &CodesignRequest,
+        explored: &[&ScenarioSpec],
         groups: &mut Vec<(usize, Vec<Scenario>)>,
         seen: &mut Vec<(ScenarioSpec, Slot)>,
     ) -> Plan {
@@ -275,7 +317,26 @@ impl Session {
                 self.plan_one(scenario, OneKind::Explore, req, groups, seen)
             }
             CodesignRequest::Pareto { scenario } => {
-                self.plan_one(scenario, OneKind::Pareto, req, groups, seen)
+                // Standalone Pareto requests ride the bound-gated fast path:
+                // only the front is needed, so dominated design points are
+                // answered from their certified bounds without solving. A
+                // spec this submission needs in full anyway (an identical
+                // spec already planned, or an Explore over it anywhere in
+                // the request list) stays on the batch path, as does a
+                // request that disabled pruning (`--no-prune`).
+                let already_batched = seen.iter().any(|(s, _)| s == scenario)
+                    || explored.iter().any(|s| *s == scenario);
+                if !scenario.solve_opts.prune || already_batched {
+                    return self.plan_one(scenario, OneKind::Pareto, req, groups, seen);
+                }
+                let platform = self.platform_for(scenario);
+                match scenario.to_scenario(&platform) {
+                    Ok(sc) => {
+                        let ci = self.coordinator_index(&platform, &sc.citer, &sc.solve_opts);
+                        Plan::ParetoGated { ci, scenario: Box::new(sc) }
+                    }
+                    Err(e) => Plan::Direct(error_response(req, &e), ResponseDetail::None),
+                }
             }
             CodesignRequest::WhatIf { scenario, weights } => {
                 let mut spec = scenario.clone().with_weights(weights.clone());
@@ -428,6 +489,7 @@ impl Session {
                             .map(|&i| design_summary(&result.points[i]))
                             .collect(),
                         total_evals: result.total_evals,
+                        bounded_out: 0, // batch path: every point solved exactly
                     }),
                 };
                 SessionAnswer {
@@ -438,6 +500,29 @@ impl Session {
                         result,
                     }]),
                 }
+            }
+            Plan::ParetoGated { ci, scenario } => {
+                let gated = self.coordinators[ci].2.run_pareto_gated(&scenario);
+                let response = CodesignResponse::Pareto(ParetoSummary {
+                    scenario: gated.scenario_name.clone(),
+                    designs: gated.designs,
+                    infeasible: gated.infeasible,
+                    pareto: gated
+                        .front
+                        .iter()
+                        .map(|p| DesignSummary {
+                            n_sm: p.hw.n_sm,
+                            n_v: p.hw.n_v,
+                            m_sm_kb: p.hw.m_sm_kb,
+                            area_mm2: p.area_mm2,
+                            gflops: p.gflops,
+                            seconds: p.seconds,
+                        })
+                        .collect(),
+                    total_evals: gated.total_evals,
+                    bounded_out: gated.bounded_out as u64,
+                });
+                SessionAnswer { response, detail: ResponseDetail::None }
             }
             Plan::Sensitivity { s2: (g2, i2), s3: (g3, i3), p2, p3, band } => {
                 let d2 = ScenarioDetail {
@@ -459,9 +544,20 @@ impl Session {
     }
 
     /// §V-D tuning through the session's memo store: the same candidate grid
-    /// and best-selection order as `codesign::tuner::tune`, but every
-    /// (hardware, entry) instance is read from / written to the partition's
-    /// cache, so tunes ride on prior sweeps and warm future ones.
+    /// and best-selection (tie) semantics as `codesign::tuner::tune`, but
+    /// every (hardware, entry) instance is read from / written to the
+    /// partition's cache, so tunes ride on prior sweeps and warm future
+    /// ones.
+    ///
+    /// With pruning enabled (the default), candidates are visited in
+    /// ascending order of their certified objective lower bound and skipped
+    /// — entries recorded `BoundedOut` in the memo store — once the bound
+    /// already reaches the incumbent's weighted seconds; the winner is
+    /// provably the unpruned scan's (skipped candidates are *strictly*
+    /// worse — the bound carries a one-sided safety margin — so they could
+    /// never replace the incumbent under its strict-improvement rule, and
+    /// any exact tie for the winning objective is always solved, keeping
+    /// first-in-grid-order tie-breaking intact).
     fn run_tune(&mut self, req: &TuneRequest) -> SessionAnswer {
         let pinned =
             Pinned { n_sm: req.n_sm, n_v: req.n_v, m_sm_kb: req.m_sm_kb, caches: None };
@@ -481,31 +577,129 @@ impl Session {
         let threads = req.threads.unwrap_or_else(default_threads).max(1);
         let time_model = coord.time_model();
         let (citer, opts) = (&req.citer, &req.solve_opts);
-        let solved: Vec<(Option<(f64, f64)>, u64)> = parallel_map(&candidates, threads, |cand| {
-            let per_entry: Vec<Option<InnerSolution>> = workload
-                .entries
-                .iter()
-                .zip(&chars)
-                .map(|(e, st)| {
-                    let key = CacheKey::new(fp, &cand.hw, st, &e.size);
-                    coord
-                        .cache
-                        .get_or_compute(key, || solve_entry(&time_model, citer, &cand.hw, e, opts))
-                })
-                .collect();
-            let evals: u64 = per_entry.iter().flatten().map(|s| s.evals).sum();
-            (aggregate_weighted(&workload, &per_entry), evals)
-        });
-        let total_evals: u64 = solved.iter().map(|(_, e)| *e).sum();
-        let mut best: Option<(usize, f64, f64)> = None;
-        for (i, (s, _)) in solved.iter().enumerate() {
-            if let Some((seconds, gflops)) = *s {
-                if best.map_or(true, |(_, bg, _)| gflops > bg) {
-                    best = Some((i, gflops, seconds));
+
+        let mut candidates_pruned = 0u64;
+        let mut total_evals = 0u64;
+        // (candidate index, weighted seconds, weighted gflops)
+        let mut solved: Vec<(usize, f64, f64)> = Vec::new();
+        if !opts.prune {
+            // The historical full scan: every candidate solved, in parallel.
+            let results: Vec<(Option<(f64, f64)>, u64)> =
+                parallel_map(&candidates, threads, |cand| {
+                    let per_entry: Vec<Option<InnerSolution>> = workload
+                        .entries
+                        .iter()
+                        .zip(&chars)
+                        .map(|(e, st)| {
+                            let key = CacheKey::new(fp, &cand.hw, st, &e.size);
+                            coord.cache.get_or_compute(key, || {
+                                solve_entry(&time_model, citer, &cand.hw, e, opts)
+                            })
+                        })
+                        .collect();
+                    let evals: u64 = per_entry.iter().flatten().map(|s| s.evals).sum();
+                    (aggregate_weighted(&workload, &per_entry), evals)
+                });
+            for (i, (s, evals)) in results.iter().enumerate() {
+                total_evals += evals;
+                if let Some((seconds, gflops)) = *s {
+                    solved.push((i, seconds, gflops));
                 }
             }
+        } else {
+            // Bound-gated scan: lower bounds first, candidates in
+            // bound-ascending order, ramp-up chunks (sized by candidate
+            // count, never thread count) so the gating and its telemetry
+            // are identical across thread counts — and an incumbent exists
+            // after the single-candidate first chunk.
+            let mut stats = PruneStats::default();
+            let entry_bounds: Vec<(Vec<f64>, f64)> =
+                parallel_map(&candidates, threads.min(candidates.len().max(1)), |cand| {
+                    let mut per = Vec::with_capacity(workload.entries.len());
+                    let mut sum = 0.0f64;
+                    for e in &workload.entries {
+                        if e.weight > 0.0 {
+                            let lb = lower_bound_entry(&time_model, citer, &cand.hw, e, opts);
+                            per.push(lb);
+                            sum += e.weight * lb;
+                        } else {
+                            per.push(f64::NAN); // never read
+                        }
+                    }
+                    (per, sum)
+                });
+            stats.bounds_computed += (candidates.len()
+                * workload.entries.iter().filter(|e| e.weight > 0.0).count())
+                as u64;
+            let mut order: Vec<usize> =
+                (0..candidates.len()).filter(|&i| entry_bounds[i].1.is_finite()).collect();
+            order.sort_by(|&a, &b| {
+                entry_bounds[a].1.partial_cmp(&entry_bounds[b].1).unwrap().then(a.cmp(&b))
+            });
+            let mut best_seconds = f64::INFINITY;
+            for range in crate::coordinator::driver::rampup_chunks(order.len(), 32) {
+                let chunk = &order[range];
+                let survivors: Vec<usize> = chunk
+                    .iter()
+                    .copied()
+                    .filter(|&i| {
+                        if entry_bounds[i].1 >= best_seconds {
+                            candidates_pruned += 1;
+                            for (j, e) in workload.entries.iter().enumerate() {
+                                if e.weight > 0.0 {
+                                    stats.bounded_out += 1;
+                                    let key =
+                                        CacheKey::new(fp, &candidates[i].hw, &chars[j], &e.size);
+                                    coord.cache.insert_bound(key, entry_bounds[i].0[j]);
+                                }
+                            }
+                            return false;
+                        }
+                        true
+                    })
+                    .collect();
+                let cutoff_at = best_seconds;
+                let results: Vec<(Option<(f64, f64)>, u64, PruneStats)> =
+                    parallel_map(&survivors, threads.min(survivors.len().max(1)), |&i| {
+                        solve_tune_candidate(
+                            coord,
+                            fp,
+                            &time_model,
+                            citer,
+                            opts,
+                            &workload,
+                            &chars,
+                            &candidates[i].hw,
+                            &entry_bounds[i].0,
+                            cutoff_at,
+                        )
+                    });
+                for (&i, (outcome, evals, ps)) in survivors.iter().zip(&results) {
+                    total_evals += evals;
+                    coord.prune.add(ps);
+                    if let Some((seconds, gflops)) = outcome {
+                        solved.push((i, *seconds, *gflops));
+                        if *seconds < best_seconds {
+                            best_seconds = *seconds;
+                        }
+                    } else {
+                        // Bounded out mid-candidate (progressive cutoff).
+                        candidates_pruned += 1;
+                    }
+                }
+            }
+            coord.prune.add(&stats);
+            // Winner semantics need grid order below.
+            solved.sort_by_key(|&(i, _, _)| i);
         }
-        let best = best.map(|(i, gflops, seconds)| DesignSummary {
+
+        let mut best: Option<(usize, f64, f64)> = None;
+        for &(i, seconds, gflops) in &solved {
+            if best.map_or(true, |(_, _, bg)| gflops > bg) {
+                best = Some((i, seconds, gflops));
+            }
+        }
+        let best = best.map(|(i, seconds, gflops)| DesignSummary {
             n_sm: candidates[i].hw.n_sm,
             n_v: candidates[i].hw.n_v,
             m_sm_kb: candidates[i].hw.m_sm_kb,
@@ -519,10 +713,70 @@ impl Session {
                 candidates: candidates.len(),
                 best,
                 total_evals,
+                candidates_pruned,
             }),
             detail: ResponseDetail::None,
         }
     }
+}
+
+/// Solve one tune candidate's entries sequentially with progressive
+/// cutoffs: exact values replace bounds as they land, so a candidate can be
+/// bounded out mid-way once it provably cannot beat `incumbent_seconds`.
+/// Returns `None` when the candidate is out (bounded or infeasible).
+#[allow(clippy::too_many_arguments)]
+fn solve_tune_candidate(
+    coord: &Coordinator,
+    fp: u64,
+    time_model: &crate::timemodel::talg::TimeModel,
+    citer: &CIterTable,
+    opts: &SolveOpts,
+    workload: &Workload,
+    chars: &[crate::stencil::defs::Stencil],
+    hw: &crate::area::params::HwParams,
+    entry_bounds: &[f64],
+    incumbent_seconds: f64,
+) -> (Option<(f64, f64)>, u64, PruneStats) {
+    let mut ps = PruneStats::default();
+    let mut evals = 0u64;
+    let mut partial: f64 = workload
+        .entries
+        .iter()
+        .zip(entry_bounds)
+        .filter(|(e, _)| e.weight > 0.0)
+        .map(|(e, lb)| e.weight * lb)
+        .sum();
+    let mut per_entry: Vec<Option<InnerSolution>> = vec![None; workload.entries.len()];
+    for (j, (e, st)) in workload.entries.iter().zip(chars).enumerate() {
+        if e.weight == 0.0 {
+            continue;
+        }
+        let key = CacheKey::new(fp, hw, st, &e.size);
+        let cutoff = incumbent_seconds
+            .is_finite()
+            .then(|| (incumbent_seconds - (partial - e.weight * entry_bounds[j])) / e.weight);
+        let out = coord.cache.get_or_solve_cut(key, cutoff, || {
+            solve_entry_cut(time_model, citer, hw, e, opts, cutoff, &mut ps)
+        });
+        match out {
+            InnerOutcome::Solved(s) => {
+                evals += s.evals;
+                partial += e.weight * (s.est.seconds - entry_bounds[j]);
+                per_entry[j] = Some(s);
+            }
+            InnerOutcome::BoundedOut { .. } => {
+                for (jj, ee) in workload.entries.iter().enumerate().skip(j + 1) {
+                    if ee.weight > 0.0 {
+                        let k = CacheKey::new(fp, hw, &chars[jj], &ee.size);
+                        coord.cache.insert_bound(k, entry_bounds[jj]);
+                    }
+                }
+                return (None, evals, ps);
+            }
+            InnerOutcome::Infeasible => return (None, evals, ps),
+        }
+    }
+    (aggregate_weighted(workload, &per_entry), evals, ps)
 }
 
 fn error_response(req: &CodesignRequest, err: &anyhow::Error) -> CodesignResponse {

@@ -4,7 +4,7 @@
 //! `{"type": …}`-tagged object and decodes back **bit-exactly** (floats ride
 //! Rust's shortest-round-trip formatting; non-finite values encode as
 //! `null` and decode as NaN). Request and response files share one envelope,
-//! `{"schema": 3, "requests"|"responses": […]}`; an unknown schema version is
+//! `{"schema": 4, "requests"|"responses": […]}`; an unknown schema version is
 //! a clean error, never a guess.
 //!
 //! **Schema history.** Each version is a strict superset of its predecessor
@@ -23,6 +23,11 @@
 //!   registered on decode. Absent or `null` means the serving session's
 //!   default platform — so v1/v2 files decode unchanged and resolve to
 //!   `maxwell`.
+//! * **v4** — bound-and-prune: solver options gain an optional `prune`
+//!   boolean (absent = `true`, the default path; `--no-prune` writes
+//!   `false`), and Pareto / Tune responses gain optional pruning-telemetry
+//!   counters (`bounded_out`, `candidates_pruned`; absent = 0). Older files
+//!   decode unchanged.
 //!
 //! Encoding emits canonical names, so specs round-trip bit-exactly through
 //! their name.
@@ -50,7 +55,7 @@ use crate::util::json::{parse, Json};
 use anyhow::{anyhow, bail, ensure, Result};
 
 /// The wire schema this build emits.
-pub const SCHEMA_VERSION: u64 = 3;
+pub const SCHEMA_VERSION: u64 = 4;
 
 /// The oldest schema this build still accepts (each version is additive).
 pub const MIN_SCHEMA_VERSION: u64 = 1;
@@ -207,7 +212,18 @@ fn solve_opts_to_json(o: &SolveOpts) -> Json {
         ("all_k", Json::Bool(o.all_k)),
         ("refine", Json::Bool(o.refine)),
         ("max_t_t", Json::Num(o.max_t_t as f64)),
+        ("prune", Json::Bool(o.prune)),
     ])
+}
+
+/// Absent / null `prune` → `true` (the default path), so pre-v4 files keep
+/// decoding to the options they always meant.
+fn get_opt_bool_or(obj: &Json, key: &str, default: bool) -> Result<bool> {
+    match obj.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(Json::Bool(b)) => Ok(*b),
+        _ => bail!("field '{key}' must be a boolean or null"),
+    }
 }
 
 fn solve_opts_from_json(j: &Json) -> Result<SolveOpts> {
@@ -215,6 +231,7 @@ fn solve_opts_from_json(j: &Json) -> Result<SolveOpts> {
         all_k: get_bool(j, "all_k")?,
         refine: get_bool(j, "refine")?,
         max_t_t: get_u64(j, "max_t_t")?,
+        prune: get_opt_bool_or(j, "prune", true)?,
     })
 }
 
@@ -477,6 +494,7 @@ pub fn response_to_json(r: &CodesignResponse) -> Json {
             ("infeasible", Json::Num(p.infeasible as f64)),
             ("pareto", Json::Arr(p.pareto.iter().map(design_to_json).collect())),
             ("total_evals", Json::Num(p.total_evals as f64)),
+            ("bounded_out", Json::Num(p.bounded_out as f64)),
         ]),
         CodesignResponse::Sensitivity(s) => Json::obj(vec![
             tag,
@@ -507,6 +525,7 @@ pub fn response_to_json(r: &CodesignResponse) -> Json {
             ("candidates", Json::Num(t.candidates as f64)),
             ("best", t.best.as_ref().map(design_to_json).unwrap_or(Json::Null)),
             ("total_evals", Json::Num(t.total_evals as f64)),
+            ("candidates_pruned", Json::Num(t.candidates_pruned as f64)),
         ]),
         CodesignResponse::Validate(v) => Json::obj(vec![
             tag,
@@ -542,6 +561,8 @@ pub fn response_from_json(j: &Json) -> Result<CodesignResponse> {
                 .map(design_from_json)
                 .collect::<Result<Vec<_>>>()?,
             total_evals: get_u64(j, "total_evals")?,
+            // v4 telemetry: absent on older files = no gating happened.
+            bounded_out: get_opt_u64(j, "bounded_out")?.unwrap_or(0),
         })),
         "sensitivity" => {
             let band = field(j, "band")?
@@ -579,6 +600,8 @@ pub fn response_from_json(j: &Json) -> Result<CodesignResponse> {
                 d => Some(design_from_json(d)?),
             },
             total_evals: get_u64(j, "total_evals")?,
+            // v4 telemetry: absent on older files = nothing was pruned.
+            candidates_pruned: get_opt_u64(j, "candidates_pruned")?.unwrap_or(0),
         })),
         "validate" => Ok(CodesignResponse::Validate(ValidateSummary {
             cases: get_usize(j, "cases")?,
@@ -613,7 +636,7 @@ fn check_schema(j: &Json) -> Result<()> {
     Ok(())
 }
 
-/// `{"schema": 3, "requests": […]}`.
+/// `{"schema": 4, "requests": […]}`.
 pub fn encode_requests(requests: &[CodesignRequest]) -> Json {
     Json::obj(vec![
         ("schema", Json::Num(SCHEMA_VERSION as f64)),
@@ -633,7 +656,7 @@ pub fn decode_requests(text: &str) -> Result<Vec<CodesignRequest>> {
         .collect()
 }
 
-/// `{"schema": 3, "responses": […]}`.
+/// `{"schema": 4, "responses": […]}`.
 pub fn encode_responses(responses: &[CodesignResponse]) -> Json {
     Json::obj(vec![
         ("schema", Json::Num(SCHEMA_VERSION as f64)),
@@ -672,7 +695,8 @@ mod tests {
             "fractional versions are not a thing");
         assert!(decode_requests(r#"{"requests": []}"#).is_err());
         assert!(decode_requests("not json").is_err());
-        // The emitted version and both legacy envelopes decode.
+        // The emitted version and every legacy envelope decode.
+        assert!(decode_requests(r#"{"schema": 4, "requests": []}"#).unwrap().is_empty());
         assert!(decode_requests(r#"{"schema": 3, "requests": []}"#).unwrap().is_empty());
         assert!(decode_requests(r#"{"schema": 2, "requests": []}"#).unwrap().is_empty());
         assert!(decode_requests(r#"{"schema": 1, "requests": []}"#).unwrap().is_empty());

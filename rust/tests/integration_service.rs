@@ -188,7 +188,7 @@ fn all_request_variants() -> Vec<CodesignRequest> {
         .weighted(StencilId::Jacobi2D, 1.0 / 3.0)
         .weighted(StencilId::Heat2D, 1e-17)
         .with_citer(CIterTable::paper().scaled(1.000000000000003))
-        .with_solve_opts(SolveOpts { all_k: true, refine: false, max_t_t: 96 });
+        .with_solve_opts(SolveOpts { all_k: true, refine: false, max_t_t: 96, ..SolveOpts::default() });
     vec![
         CodesignRequest::explore(spec.clone()),
         CodesignRequest::explore(
@@ -265,6 +265,7 @@ fn all_response_variants() -> Vec<CodesignResponse> {
             infeasible: 0,
             pareto: vec![design.clone()],
             total_evals: 41_557,
+            bounded_out: 9,
         }),
         CodesignResponse::Sensitivity(SensitivitySummary {
             band: (425.0, 450.0),
@@ -283,12 +284,14 @@ fn all_response_variants() -> Vec<CodesignResponse> {
             candidates: 193,
             best: None,
             total_evals: 0,
+            candidates_pruned: 0,
         }),
         CodesignResponse::Tune(TuneSummary {
             budget_mm2: 450.0,
             candidates: 193,
             best: Some(design),
             total_evals: 77_003,
+            candidates_pruned: 151,
         }),
         CodesignResponse::Validate(ValidateSummary {
             cases: 240,
@@ -319,14 +322,17 @@ fn every_response_variant_roundtrips_bit_exactly() {
 
 #[test]
 fn unknown_schema_version_is_a_clean_error() {
-    let err = wire::decode_requests(r#"{"schema": 4, "requests": []}"#).unwrap_err();
+    let err = wire::decode_requests(r#"{"schema": 5, "requests": []}"#).unwrap_err();
     assert!(format!("{err:#}").contains("schema version"), "{err:#}");
     let err = wire::decode_responses(r#"{"schema": 0, "responses": []}"#).unwrap_err();
     assert!(format!("{err:#}").contains("schema version"), "{err:#}");
     assert!(wire::decode_requests(r#"[1, 2]"#).is_err(), "bare arrays lack a version");
-    // v1/v2 envelopes (the previously emitted versions) still decode.
+    // v1–v3 envelopes (the previously emitted versions) still decode, as
+    // does the current v4.
     assert!(wire::decode_requests(r#"{"schema": 1, "requests": []}"#).unwrap().is_empty());
     assert!(wire::decode_requests(r#"{"schema": 2, "requests": []}"#).unwrap().is_empty());
+    assert!(wire::decode_requests(r#"{"schema": 3, "requests": []}"#).unwrap().is_empty());
+    assert!(wire::decode_requests(r#"{"schema": 4, "requests": []}"#).unwrap().is_empty());
     assert!(wire::decode_responses(r#"{"schema": 1, "responses": []}"#).unwrap().is_empty());
 }
 

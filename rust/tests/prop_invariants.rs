@@ -243,7 +243,7 @@ fn certify_solve_entry_matches_exhaustive_on_all_six_stencils() {
     // smart can never be better — equality certifies exact optimality.
     let model = TimeModel::maxwell();
     let citer = CIterTable::paper();
-    let opts = SolveOpts { all_k: true, refine: true, max_t_t: 16 };
+    let opts = SolveOpts { all_k: true, refine: true, max_t_t: 16, ..SolveOpts::default() };
     let hw = HwParams {
         n_sm: 8,
         n_v: 128,
@@ -307,6 +307,127 @@ fn certify_solve_entry_matches_exhaustive_on_all_six_stencils() {
                 b.is_some()
             ),
         }
+    }
+}
+
+#[test]
+fn prop_lower_bound_sound_on_fully_enumerated_small_grid() {
+    // The soundness invariant the whole bound-and-prune tentpole rests on:
+    // on a fully-enumerated small grid, every bound level (instance, t_T
+    // subtree, (t_T, t_S2, t_S3) group) is ≤ T_alg(sw) for EVERY feasible
+    // software point — for all six presets plus radius-2 family members.
+    use codesign::opt::bounds::{lower_bound, lower_bound_group, lower_bound_tt};
+    use codesign::stencil::spec::{Dim, StencilSpec};
+    let model = TimeModel::maxwell();
+    let opts = SolveOpts::default();
+    let mut ids: Vec<StencilId> = ALL_STENCILS.iter().map(|s| s.id).collect();
+    ids.push(StencilSpec::star(Dim::D3, 2).register());
+    ids.push(StencilSpec::boxed(Dim::D2, 2).register());
+    let hws = [
+        HwParams::gtx980(),
+        HwParams { n_sm: 4, n_v: 512, m_sm_kb: 24.0, ..HwParams::gtx980() },
+    ];
+    for id in ids {
+        let st = Stencil::get(id);
+        let size = if st.is_3d() { ProblemSize::d3(32, 8) } else { ProblemSize::d2(128, 32) };
+        for hw in &hws {
+            let instance_lb = lower_bound(&model, st, &size, hw, &opts);
+            let s3_grid: Vec<Option<u64>> =
+                if st.is_3d() { vec![Some(1), Some(2), Some(4)] } else { vec![None] };
+            for t_t in (2..=16u64).step_by(2) {
+                let tt_lb = lower_bound_tt(&model, st, &size, hw, t_t);
+                for t_s2 in (32..=96u64).step_by(32) {
+                    for &t_s3 in &s3_grid {
+                        let g_lb = lower_bound_group(&model, st, &size, hw, t_t, t_s2, t_s3);
+                        for t_s1 in 1..=16u64 {
+                            let tiles = TileSizes { t_s1, t_s2, t_s3, t_t };
+                            for k in 1..=8u32 {
+                                let sw = SoftwareParams::new(tiles, k);
+                                if model.feasibility(st, hw, &sw).is_err() {
+                                    continue;
+                                }
+                                let est = model.evaluate(st, &size, hw, &sw);
+                                let ctx = format!(
+                                    "{id:?} hw({},{},{}) sw({t_s1},{t_s2},{t_s3:?},{t_t},k{k})",
+                                    hw.n_sm, hw.n_v, hw.m_sm_kb
+                                );
+                                assert!(
+                                    instance_lb <= est.seconds,
+                                    "{ctx}: instance lb {instance_lb} > {}",
+                                    est.seconds
+                                );
+                                assert!(
+                                    tt_lb <= est.seconds,
+                                    "{ctx}: t_T lb {tt_lb} > {}",
+                                    est.seconds
+                                );
+                                assert!(
+                                    g_lb <= est.seconds,
+                                    "{ctx}: group lb {g_lb} > {}",
+                                    est.seconds
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_lower_bound_finite_iff_feasible() {
+    // The feasibility equivalence the gated Pareto path's design counts
+    // rest on: the instance bound is finite exactly when the inner solver
+    // finds a feasible software point.
+    use codesign::opt::bounds::lower_bound;
+    let model = TimeModel::maxwell();
+    let opts = SolveOpts { refine: false, ..SolveOpts::default() };
+    forall_res(Config::default().cases(60), |rng| {
+        let st: &Stencil = rng.choose(&ALL_STENCILS);
+        let mut hw = random_hw(rng);
+        // Mix in pathologically small scratchpads so both sides of the
+        // equivalence are exercised.
+        if rng.bernoulli(0.3) {
+            hw.m_sm_kb = *rng.choose(&[0.25, 1.0, 2.0, 4.0]);
+        }
+        let size = if st.is_3d() { ProblemSize::d3(64, 16) } else { ProblemSize::d2(512, 128) };
+        let p = InnerProblem { stencil: *st, size, hw };
+        let finite = lower_bound(&model, st, &size, &hw, &opts).is_finite();
+        let solved = solve_inner(&model, &p, &opts).is_some();
+        if finite != solved {
+            return Err(format!(
+                "{:?} on {}: bound finite = {finite} but solver feasible = {solved}",
+                st.id,
+                hw.label()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pruned_batches_bit_identical_across_thread_counts() {
+    // Warm-start determinism: the pruned default path at 1/2/8 worker
+    // threads returns bit-identical batches (values AND eval counters —
+    // nothing in the bound-guided search is thread-shaped).
+    use codesign::codesign::scenario::Scenario;
+    use codesign::coordinator::Coordinator;
+    let run = |threads: usize| {
+        let sc = Scenario::quick(Scenario::paper_2d(), 16).with_threads(threads);
+        Coordinator::paper().run_batch(std::slice::from_ref(&sc)).pop().unwrap()
+    };
+    let base = run(1);
+    for threads in [2usize, 8] {
+        let other = run(threads);
+        assert_eq!(base.points.len(), other.points.len());
+        for (a, b) in base.points.iter().zip(&other.points) {
+            assert_eq!(a.hw, b.hw, "{threads} threads");
+            assert_eq!(a.gflops.to_bits(), b.gflops.to_bits(), "{threads} threads");
+            assert_eq!(a.seconds.to_bits(), b.seconds.to_bits(), "{threads} threads");
+        }
+        assert_eq!(base.pareto, other.pareto, "{threads} threads");
+        assert_eq!(base.total_evals, other.total_evals, "{threads} threads");
     }
 }
 
