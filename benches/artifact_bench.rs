@@ -1,0 +1,87 @@
+//! Artifact round-trip trajectory: the quick paper sweep cold vs
+//! save → warm-start → replay, certified answer-identical and written to
+//! `BENCH_artifacts.json` (wall clock per leg, artifact size, warm hit rate).
+//!
+//! Run: `cargo bench --bench artifact_bench` (CI's bench-smoke job runs it
+//! and archives the JSON).
+
+use codesign::service::{CodesignRequest, ScenarioSpec, Session, TuneRequest};
+use codesign::stencil::defs::StencilId;
+use codesign::util::json::Json;
+use std::time::Instant;
+
+fn requests() -> Vec<CodesignRequest> {
+    vec![
+        CodesignRequest::explore(ScenarioSpec::two_d().quick(12)),
+        CodesignRequest::pareto(
+            ScenarioSpec::two_d().quick(12).with_area_budget(380.0).named("pareto-2d"),
+        ),
+        CodesignRequest::tune(
+            TuneRequest::new(430.0)
+                .pin_n_v(128)
+                .pin_m_sm_kb(96.0)
+                .for_stencil(StencilId::Heat2D),
+        ),
+    ]
+}
+
+fn main() {
+    let dir = std::env::temp_dir().join(format!("codesign-artifact-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Cold leg: solve everything from scratch, then persist the sweep state.
+    let mut cold = Session::paper();
+    let t0 = Instant::now();
+    let cold_report = cold.submit_all(&requests());
+    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let cold_responses = cold_report.into_responses();
+
+    let t0 = Instant::now();
+    let manifest = cold.save_artifact(&dir).expect("save artifact");
+    let save_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let artifact_bytes: u64 = manifest.shards.iter().map(|s| s.bytes).sum();
+
+    // Warm leg: a fresh session loads the artifact and replays the sweep.
+    let mut warm = Session::paper();
+    let t0 = Instant::now();
+    let load = warm.warm_start(&dir).expect("warm start");
+    let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let t0 = Instant::now();
+    let warm_report = warm.submit_all(&requests());
+    let warm_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let hit_rate = warm_report.cache_hit_rate();
+    let warm_responses = warm_report.into_responses();
+
+    // The integration tier certifies bit-identity; re-assert it here so the
+    // recorded speedup can never come from answering a different question.
+    assert_eq!(cold_responses, warm_responses, "warm replay must match cold recompute");
+    assert!(hit_rate >= 0.99, "warm replay must be cache-served (hit rate {hit_rate:.4})");
+
+    let replay_speedup = cold_ms / warm_ms.max(1e-9);
+    let bench = Json::obj(vec![
+        ("cold_wall_ms", Json::num(cold_ms)),
+        ("save_wall_ms", Json::num(save_ms)),
+        ("load_wall_ms", Json::num(load_ms)),
+        ("warm_replay_wall_ms", Json::num(warm_ms)),
+        ("replay_speedup", Json::num(replay_speedup)),
+        ("shards", Json::num(manifest.shards.len() as f64)),
+        ("entries", Json::num(load.entries_installed as f64)),
+        ("exact_entries", Json::num(load.exact_entries as f64)),
+        ("bounded_entries", Json::num(load.bounded_entries as f64)),
+        ("artifact_bytes", Json::num(artifact_bytes as f64)),
+        ("warm_hit_rate", Json::num(hit_rate)),
+    ]);
+    std::fs::write("BENCH_artifacts.json", bench.to_string_pretty())
+        .expect("write BENCH_artifacts.json");
+    println!(
+        "artifact bench: cold {cold_ms:.0} ms -> save {save_ms:.1} ms \
+         ({} shard(s), {} entries, {artifact_bytes} B) -> load {load_ms:.1} ms \
+         -> warm replay {warm_ms:.0} ms ({replay_speedup:.1}x, hit rate {hit_rate:.4}) \
+         -> BENCH_artifacts.json",
+        manifest.shards.len(),
+        load.entries_installed,
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,205 @@
+//! Artifact manifest: schema versions plus per-shard integrity and
+//! provenance records.
+//!
+//! The manifest is the load-side gatekeeper: before any shard payload is
+//! parsed, the loader checks the artifact schema version, the wire schema
+//! range, and each shard's recorded byte length and FNV-1a checksum against
+//! the file on disk. Provenance fields (platform canonical name, recorded
+//! fingerprint, prune partition flag) are then cross-checked against the
+//! shard's own header so an edit to either side is caught no matter which
+//! copy was tampered with.
+
+use crate::artifact::payload::{hex64, hex64_parse};
+use crate::artifact::ArtifactError;
+use crate::util::json::Json;
+
+/// Version of the artifact container format itself (manifest layout, shard
+/// header layout, entry encoding). Bump on any incompatible change.
+pub const ARTIFACT_SCHEMA_VERSION: u64 = 1;
+
+/// File name of the manifest inside an artifact directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// Integrity + provenance record for one payload shard.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardMeta {
+    /// File name relative to the artifact directory.
+    pub file: String,
+    /// Exact byte length of the shard file.
+    pub bytes: u64,
+    /// FNV-1a 64-bit checksum over the shard file bytes.
+    pub checksum: u64,
+    /// Canonical platform name ([`PlatformSpec::canonical_name`]) — parseable
+    /// back into the platform the shard was swept under.
+    ///
+    /// [`PlatformSpec::canonical_name`]: crate::platform::spec::PlatformSpec::canonical_name
+    pub platform: String,
+    /// The platform fingerprint the shard's cache keys were minted under.
+    pub platform_fp: u64,
+    /// Whether the shard's sweep ran with bound-and-prune enabled (the prune
+    /// partition of the memo store).
+    pub prune: bool,
+    /// Number of `Exact` entries in the shard (informational, re-derived and
+    /// cross-checked on load).
+    pub exact_entries: u64,
+    /// Number of `BoundedOut` entries in the shard.
+    pub bounded_entries: u64,
+}
+
+/// The parsed `manifest.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    /// [`ARTIFACT_SCHEMA_VERSION`] at save time.
+    pub artifact_schema: u64,
+    /// [`wire::SCHEMA_VERSION`](crate::service::wire::SCHEMA_VERSION) at save
+    /// time — the shard's `C_iter`/`SolveOpts` provenance and f64 formatting
+    /// ride the wire codecs, so their version gates the load too.
+    pub wire_schema: u64,
+    /// One record per payload shard, sorted by file name at save time.
+    pub shards: Vec<ShardMeta>,
+}
+
+impl Manifest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("artifact_schema", Json::Num(self.artifact_schema as f64)),
+            ("wire_schema", Json::Num(self.wire_schema as f64)),
+            (
+                "shards",
+                Json::Arr(
+                    self.shards
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("file", Json::str(&s.file)),
+                                ("bytes", Json::Num(s.bytes as f64)),
+                                ("checksum", Json::str(hex64(s.checksum))),
+                                ("platform", Json::str(&s.platform)),
+                                ("platform_fp", Json::str(hex64(s.platform_fp))),
+                                ("prune", Json::Bool(s.prune)),
+                                ("exact_entries", Json::Num(s.exact_entries as f64)),
+                                ("bounded_entries", Json::Num(s.bounded_entries as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse a manifest from JSON. `path` is used only in error messages.
+    pub fn from_json(j: &Json, path: &str) -> Result<Manifest, ArtifactError> {
+        let bad = |detail: String| ArtifactError::BadManifest {
+            path: path.to_string(),
+            detail,
+        };
+        let num = |j: &Json, key: &str| -> Result<u64, ArtifactError> {
+            match j.get(key) {
+                Some(Json::Num(x)) if x.is_finite() && *x >= 0.0 && x.fract() == 0.0 => {
+                    Ok(*x as u64)
+                }
+                Some(_) => Err(bad(format!("field '{key}' must be a non-negative integer"))),
+                None => Err(bad(format!("missing field '{key}'"))),
+            }
+        };
+        let string = |j: &Json, key: &str| -> Result<String, ArtifactError> {
+            j.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| bad(format!("missing string field '{key}'")))
+        };
+        let artifact_schema = num(j, "artifact_schema")?;
+        let wire_schema = num(j, "wire_schema")?;
+        let shards_json = match j.get("shards") {
+            Some(Json::Arr(items)) => items,
+            _ => return Err(bad("missing array field 'shards'".to_string())),
+        };
+        let mut shards = Vec::with_capacity(shards_json.len());
+        for s in shards_json {
+            let prune = match s.get("prune") {
+                Some(Json::Bool(b)) => *b,
+                _ => return Err(bad("missing boolean field 'prune' in shard record".into())),
+            };
+            shards.push(ShardMeta {
+                file: string(s, "file")?,
+                bytes: num(s, "bytes")?,
+                checksum: hex64_parse(&string(s, "checksum")?, "checksum")
+                    .map_err(&bad)?,
+                platform: string(s, "platform")?,
+                platform_fp: hex64_parse(&string(s, "platform_fp")?, "platform_fp")
+                    .map_err(&bad)?,
+                prune,
+                exact_entries: num(s, "exact_entries")?,
+                bounded_entries: num(s, "bounded_entries")?,
+            });
+        }
+        Ok(Manifest { artifact_schema, wire_schema, shards })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn sample() -> Manifest {
+        Manifest {
+            artifact_schema: ARTIFACT_SCHEMA_VERSION,
+            wire_schema: 4,
+            shards: vec![
+                ShardMeta {
+                    file: "shard-00000000deadbeef-0000000000000007.json".into(),
+                    bytes: 12345,
+                    checksum: 0xcafe_f00d_1234_5678,
+                    platform: "maxwell".into(),
+                    platform_fp: 0xdead_beef,
+                    prune: true,
+                    exact_entries: 40,
+                    bounded_entries: 2,
+                },
+                ShardMeta {
+                    file: "shard-00000000deadbef0-0000000000000007.json".into(),
+                    bytes: 999,
+                    checksum: u64::MAX, // must survive the f64-unsafe range
+                    platform: "maxwell:bw20".into(),
+                    platform_fp: 0xdead_bef0,
+                    prune: false,
+                    exact_entries: 3,
+                    bounded_entries: 0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips_through_json_text() {
+        let m = sample();
+        let text = m.to_json().to_string_pretty();
+        let back = Manifest::from_json(&parse(&text).unwrap(), "manifest.json").unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn manifest_serialization_is_deterministic() {
+        let a = sample().to_json().to_string_pretty();
+        let b = sample().to_json().to_string_pretty();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bad_manifests_name_the_offending_field() {
+        let missing = parse(r#"{"artifact_schema": 1, "shards": []}"#).unwrap();
+        let err = Manifest::from_json(&missing, "m.json").unwrap_err();
+        assert!(err.to_string().contains("wire_schema"), "{err}");
+
+        let bad_checksum = parse(
+            r#"{"artifact_schema": 1, "wire_schema": 4, "shards": [{
+                "file": "f", "bytes": 1, "checksum": "xyz",
+                "platform": "maxwell", "platform_fp": "0000000000000001",
+                "prune": true, "exact_entries": 0, "bounded_entries": 0}]}"#,
+        )
+        .unwrap();
+        let err = Manifest::from_json(&bad_checksum, "m.json").unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+}

@@ -1,0 +1,170 @@
+//! Persisted, sharded, checksummed sweep artifacts.
+//!
+//! Every cold process re-pays the full hardware sweep before it can answer a
+//! single scenario, even though the memo store is already deduplicated,
+//! fingerprinted and prune-partitioned — exactly the provenance needed to
+//! persist it safely. This module serializes a [`Session`]'s memoized sweep
+//! state to a versioned on-disk artifact and loads it back **certified
+//! bit-identical**: a warm-started session produces the same points, fronts,
+//! tune winners and telemetry-visible results as a cold recompute
+//! (`integration_artifact.rs` certifies against the shipped request files).
+//!
+//! # Layout
+//!
+//! ```text
+//! <dir>/
+//!   manifest.json                      schema + per-shard integrity/provenance
+//!   shard-<fp16>-<digest16>.json       one payload per session partition
+//! ```
+//!
+//! One shard per session partition — a `(platform fingerprint, C_iter table,
+//! solver options)` triple — named by the platform fingerprint and a digest
+//! of the partition's `(C_iter, SolveOpts)` provenance, so a fleet can load
+//! only the shards a request mixture needs. The manifest carries, per shard:
+//! file name, byte length, FNV-1a checksum over the file bytes
+//! ([`util::fnv`](crate::util::fnv)), platform canonical name + recorded
+//! fingerprint, the prune partition flag, and entry counts. Each shard
+//! repeats its own provenance header (platform, fingerprint, `C_iter`,
+//! solver options, the stencil characterization set its keys draw from) plus
+//! the entry payload in deterministic key order — floats ride the wire
+//! format's shortest-round-trip JSON path, with `-0.0` and non-finite values
+//! escaping to explicit bit literals ([`payload`]), so save→load→save is
+//! **byte-identical**.
+//!
+//! # The refuse-to-alias contract
+//!
+//! A load either installs every validated entry or touches nothing: all
+//! shards are read, checksummed and fully decoded **before** the first cache
+//! slot is written, so a failed load provably leaves session cache statistics
+//! unchanged. Every staleness or corruption mode is a distinct
+//! [`ArtifactError`] naming the mismatched field:
+//!
+//! * unsupported artifact schema version → [`ArtifactError::SchemaMismatch`]
+//! * wire-schema skew → [`ArtifactError::WireSchemaMismatch`]
+//! * shorter/longer file than the manifest recorded →
+//!   [`ArtifactError::TruncatedShard`]
+//! * any byte flip (same length) → [`ArtifactError::ChecksumMismatch`]
+//! * an edited manifest field that no longer matches the shard's own header
+//!   → [`ArtifactError::ManifestShardMismatch`] (the `prune` flag gets its
+//!   own [`ArtifactError::PruneMismatch`] — mixing prune partitions is the
+//!   one staleness mode the live engine also guards against)
+//! * a recorded platform fingerprint that no longer matches the named
+//!   platform's current fingerprint → [`ArtifactError::StaleFingerprint`]
+//! * a key whose characterization is outside the shard's declared set →
+//!   [`ArtifactError::CharacterizationMismatch`]
+//!
+//! Never a silent partial load.
+//!
+//! [`Session`]: crate::service::Session
+
+pub mod manifest;
+pub mod payload;
+pub mod store;
+
+pub use manifest::{Manifest, ShardMeta, ARTIFACT_SCHEMA_VERSION, MANIFEST_FILE};
+pub use store::{inspect, load, save, ArtifactInfo, LoadReport};
+
+/// Everything that can go wrong saving, inspecting or loading an artifact.
+/// Load-side variants are deliberately fine-grained: the corruption test
+/// matrix asserts each staleness mode maps to its own variant, and the
+/// Display text names the mismatched field so an operator can see *what*
+/// diverged, not just that something did.
+#[derive(Debug)]
+pub enum ArtifactError {
+    /// Filesystem trouble (missing directory, unreadable file, write
+    /// failure).
+    Io { path: String, detail: String },
+    /// The manifest is unparsable or structurally invalid; `detail` names
+    /// the offending field.
+    BadManifest { path: String, detail: String },
+    /// The artifact schema version is not one this build writes.
+    SchemaMismatch { found: u64, supported: u64 },
+    /// The artifact was written under a wire schema this build does not
+    /// speak (f64 formatting and codec semantics ride the wire contract).
+    WireSchemaMismatch { found: u64, min: u64, max: u64 },
+    /// Shard file length differs from the manifest record — a truncated
+    /// (or padded) payload.
+    TruncatedShard { file: String, manifest_bytes: u64, actual_bytes: u64 },
+    /// Shard bytes hash differently than the manifest recorded.
+    ChecksumMismatch { file: String, manifest_checksum: u64, actual_checksum: u64 },
+    /// A manifest field contradicts the shard's own provenance header —
+    /// one of the two was edited after save.
+    ManifestShardMismatch { file: String, field: &'static str, manifest: String, shard: String },
+    /// The named platform's *current* fingerprint no longer matches the one
+    /// the artifact was saved under: the platform definition has changed,
+    /// so the cached solutions belong to a model this process doesn't run.
+    StaleFingerprint { platform: String, recorded: u64, current: u64 },
+    /// The manifest and shard disagree on the prune partition — pruned and
+    /// unpruned sweeps may never share a store.
+    PruneMismatch { file: String, manifest_prune: bool, shard_prune: bool },
+    /// The shard payload is unparsable or structurally invalid.
+    BadShard { file: String, detail: String },
+    /// An entry key's stencil characterization is not in the shard's
+    /// declared characterization set.
+    CharacterizationMismatch { file: String, detail: String },
+    /// The receiving session refused a partition (e.g. its coordinator was
+    /// already populated under different provenance).
+    PartitionConflict { detail: String },
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactError::Io { path, detail } => {
+                write!(f, "artifact I/O error at '{path}': {detail}")
+            }
+            ArtifactError::BadManifest { path, detail } => {
+                write!(f, "bad artifact manifest '{path}': {detail}")
+            }
+            ArtifactError::SchemaMismatch { found, supported } => write!(
+                f,
+                "unsupported artifact schema version {found} (this build speaks {supported})"
+            ),
+            ArtifactError::WireSchemaMismatch { found, min, max } => write!(
+                f,
+                "artifact wire schema {found} outside this build's supported range {min}..={max}"
+            ),
+            ArtifactError::TruncatedShard { file, manifest_bytes, actual_bytes } => write!(
+                f,
+                "shard '{file}' is {actual_bytes} bytes but the manifest recorded \
+                 {manifest_bytes} (truncated or padded payload)"
+            ),
+            ArtifactError::ChecksumMismatch { file, manifest_checksum, actual_checksum } => {
+                write!(
+                    f,
+                    "shard '{file}' checksum mismatch: manifest recorded \
+                     {manifest_checksum:016x}, file hashes to {actual_checksum:016x}"
+                )
+            }
+            ArtifactError::ManifestShardMismatch { file, field, manifest, shard } => write!(
+                f,
+                "manifest/shard provenance mismatch on field '{field}' for '{file}': \
+                 manifest says '{manifest}', shard says '{shard}'"
+            ),
+            ArtifactError::StaleFingerprint { platform, recorded, current } => write!(
+                f,
+                "stale platform fingerprint for '{platform}': artifact was saved under \
+                 {recorded:016x} but the platform now fingerprints to {current:016x} — \
+                 refusing to alias cached solutions across model definitions"
+            ),
+            ArtifactError::PruneMismatch { file, manifest_prune, shard_prune } => write!(
+                f,
+                "prune partition mismatch for '{file}': manifest field 'prune' says \
+                 {manifest_prune}, shard solver options say {shard_prune} — pruned and \
+                 unpruned sweeps may never share a store"
+            ),
+            ArtifactError::BadShard { file, detail } => {
+                write!(f, "bad artifact shard '{file}': {detail}")
+            }
+            ArtifactError::CharacterizationMismatch { file, detail } => write!(
+                f,
+                "characterization mismatch in shard '{file}': {detail}"
+            ),
+            ArtifactError::PartitionConflict { detail } => {
+                write!(f, "artifact partition conflict: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}

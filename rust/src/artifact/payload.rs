@@ -1,0 +1,439 @@
+//! Bit-exact JSON codecs for persisted cache entries.
+//!
+//! The artifact payload must satisfy a stronger contract than the wire
+//! format: **every** `f64` bit pattern round-trips, including `-0.0`
+//! (whose shortest decimal repr `0` would decode to `+0.0`) and non-finite
+//! values (which the wire maps to `null`/NaN, erasing NaN payloads). The
+//! codec here rides the same shortest-round-trip path as the wire for the
+//! common case — a finite, non-negative-zero value is a plain JSON number,
+//! written with Rust's shortest representation and re-parsed by the strict
+//! correctly-rounding `str::parse::<f64>` — and escapes everything else to
+//! an explicit `"bits:<16 hex digits>"` literal. Unsigned 64-bit fields
+//! that could exceed 2^53 (where `f64` stops being exact) escape to
+//! `"u64:<decimal>"` the same way.
+
+use crate::coordinator::cache::{CacheEntry, CacheKey};
+use crate::opt::inner::InnerSolution;
+use crate::timemodel::talg::{Bound, SoftwareParams, TimeEstimate};
+use crate::timemodel::tiling::TileSizes;
+use crate::util::json::Json;
+
+/// Encode an `f64` preserving its exact bit pattern: finite non-negative-zero
+/// values as plain numbers (shortest-repr round-trip), everything else —
+/// `-0.0`, infinities, any NaN payload — as a `"bits:…"` literal.
+pub fn exact_f64_to_json(x: f64) -> Json {
+    if x.is_finite() && !(x == 0.0 && x.is_sign_negative()) {
+        Json::Num(x)
+    } else {
+        Json::Str(format!("bits:{:016x}", x.to_bits()))
+    }
+}
+
+/// Decode [`exact_f64_to_json`]. `what` names the field in error messages.
+pub fn exact_f64_from_json(j: &Json, what: &str) -> Result<f64, String> {
+    match j {
+        Json::Num(x) => Ok(*x),
+        Json::Str(s) => match s.strip_prefix("bits:") {
+            Some(hex) if hex.len() == 16 => u64::from_str_radix(hex, 16)
+                .map(f64::from_bits)
+                .map_err(|_| format!("field '{what}': bad f64 bits literal '{s}'")),
+            _ => Err(format!("field '{what}': expected a number or 'bits:<16 hex>' literal")),
+        },
+        _ => Err(format!("field '{what}' must be a number or bits literal")),
+    }
+}
+
+/// Encode a `u64` exactly: values `f64` can carry losslessly as plain
+/// numbers, larger ones as a `"u64:…"` decimal literal.
+pub fn exact_u64_to_json(x: u64) -> Json {
+    if x < (1u64 << 53) {
+        Json::Num(x as f64)
+    } else {
+        Json::Str(format!("u64:{x}"))
+    }
+}
+
+/// Decode [`exact_u64_to_json`].
+pub fn exact_u64_from_json(j: &Json, what: &str) -> Result<u64, String> {
+    match j {
+        Json::Num(x) => {
+            if x.is_finite() && *x >= 0.0 && x.fract() == 0.0 && *x < (1u64 << 53) as f64 {
+                Ok(*x as u64)
+            } else {
+                Err(format!("field '{what}': {x} is not an exactly-representable u64"))
+            }
+        }
+        Json::Str(s) => match s.strip_prefix("u64:") {
+            Some(dec) => dec
+                .parse::<u64>()
+                .map_err(|_| format!("field '{what}': bad u64 literal '{s}'")),
+            None => Err(format!("field '{what}': expected a number or 'u64:<decimal>' literal")),
+        },
+        _ => Err(format!("field '{what}' must be a number or u64 literal")),
+    }
+}
+
+/// 16-hex-digit rendering for fingerprints, checksums and digests — they are
+/// opaque 64-bit identities, not quantities, and `Json::Num`'s f64 carrier
+/// cannot hold all of them exactly.
+pub fn hex64(x: u64) -> String {
+    format!("{x:016x}")
+}
+
+/// Parse [`hex64`] output (exactly 16 hex digits).
+pub fn hex64_parse(s: &str, what: &str) -> Result<u64, String> {
+    if s.len() != 16 {
+        return Err(format!("field '{what}': expected 16 hex digits, got '{s}'"));
+    }
+    u64::from_str_radix(s, 16).map_err(|_| format!("field '{what}': bad hex literal '{s}'"))
+}
+
+fn get<'a>(j: &'a Json, key: &str) -> Result<&'a Json, String> {
+    j.get(key).ok_or_else(|| format!("missing field '{key}'"))
+}
+
+fn get_f64(j: &Json, key: &str) -> Result<f64, String> {
+    exact_f64_from_json(get(j, key)?, key)
+}
+
+fn get_u64(j: &Json, key: &str) -> Result<u64, String> {
+    exact_u64_from_json(get(j, key)?, key)
+}
+
+fn get_u32(j: &Json, key: &str) -> Result<u32, String> {
+    let x = get_u64(j, key)?;
+    u32::try_from(x).map_err(|_| format!("field '{key}': {x} exceeds u32"))
+}
+
+// ---------------------------------------------------------------------------
+// The stencil characterization a key carries (the shard's provenance set)
+// ---------------------------------------------------------------------------
+
+/// The six characterization values a [`CacheKey`] pins its stencil by, as
+/// bit patterns — a shard declares the distinct set its keys draw from, and
+/// the loader cross-checks every key against it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Characterization {
+    pub space_dims: u32,
+    pub sigma: u32,
+    pub flops_bits: u64,
+    pub n_buffers_bits: u64,
+    pub bytes_bits: u64,
+    pub c_iter_bits: u64,
+}
+
+impl Characterization {
+    pub fn of_key(key: &CacheKey) -> Characterization {
+        Characterization {
+            space_dims: key.space_dims,
+            sigma: key.sigma,
+            flops_bits: key.flops_bits,
+            n_buffers_bits: key.n_buffers_bits,
+            bytes_bits: key.bytes_bits,
+            c_iter_bits: key.c_iter_bits,
+        }
+    }
+}
+
+pub fn characterization_to_json(c: &Characterization) -> Json {
+    Json::obj(vec![
+        ("dims", Json::Num(c.space_dims as f64)),
+        ("sigma", Json::Num(c.sigma as f64)),
+        ("flops", exact_f64_to_json(f64::from_bits(c.flops_bits))),
+        ("n_buffers", exact_f64_to_json(f64::from_bits(c.n_buffers_bits))),
+        ("bytes", exact_f64_to_json(f64::from_bits(c.bytes_bits))),
+        ("c_iter", exact_f64_to_json(f64::from_bits(c.c_iter_bits))),
+    ])
+}
+
+pub fn characterization_from_json(j: &Json) -> Result<Characterization, String> {
+    Ok(Characterization {
+        space_dims: get_u32(j, "dims")?,
+        sigma: get_u32(j, "sigma")?,
+        flops_bits: get_f64(j, "flops")?.to_bits(),
+        n_buffers_bits: get_f64(j, "n_buffers")?.to_bits(),
+        bytes_bits: get_f64(j, "bytes")?.to_bits(),
+        c_iter_bits: get_f64(j, "c_iter")?.to_bits(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Keys
+// ---------------------------------------------------------------------------
+
+/// Encode a key **without** its platform fingerprint: all keys in a shard
+/// share it, so the shard header carries it once and the decoder
+/// reconstructs it — which also makes an in-shard fingerprint mismatch
+/// structurally impossible.
+pub fn key_to_json(key: &CacheKey) -> Json {
+    Json::obj(vec![
+        ("n_sm", Json::Num(key.n_sm as f64)),
+        ("n_v", Json::Num(key.n_v as f64)),
+        ("m_sm_kb", exact_f64_to_json(f64::from_bits(key.m_sm_kb_bits))),
+        ("dims", Json::Num(key.space_dims as f64)),
+        ("sigma", Json::Num(key.sigma as f64)),
+        ("flops", exact_f64_to_json(f64::from_bits(key.flops_bits))),
+        ("n_buffers", exact_f64_to_json(f64::from_bits(key.n_buffers_bits))),
+        ("bytes", exact_f64_to_json(f64::from_bits(key.bytes_bits))),
+        ("c_iter", exact_f64_to_json(f64::from_bits(key.c_iter_bits))),
+        ("s1", exact_u64_to_json(key.s1)),
+        ("s2", exact_u64_to_json(key.s2)),
+        ("s3", exact_u64_to_json(key.s3)),
+        ("t", exact_u64_to_json(key.t)),
+    ])
+}
+
+/// Decode [`key_to_json`], stamping the shard's `platform_fp` back in.
+pub fn key_from_json(j: &Json, platform_fp: u64) -> Result<CacheKey, String> {
+    Ok(CacheKey {
+        platform_fp,
+        n_sm: get_u32(j, "n_sm")?,
+        n_v: get_u32(j, "n_v")?,
+        m_sm_kb_bits: get_f64(j, "m_sm_kb")?.to_bits(),
+        space_dims: get_u32(j, "dims")?,
+        sigma: get_u32(j, "sigma")?,
+        flops_bits: get_f64(j, "flops")?.to_bits(),
+        n_buffers_bits: get_f64(j, "n_buffers")?.to_bits(),
+        bytes_bits: get_f64(j, "bytes")?.to_bits(),
+        c_iter_bits: get_f64(j, "c_iter")?.to_bits(),
+        s1: get_u64(j, "s1")?,
+        s2: get_u64(j, "s2")?,
+        s3: get_u64(j, "s3")?,
+        t: get_u64(j, "t")?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Entries
+// ---------------------------------------------------------------------------
+
+fn bound_name(b: Bound) -> &'static str {
+    match b {
+        Bound::Compute => "compute",
+        Bound::Memory => "memory",
+        Bound::Latency => "latency",
+    }
+}
+
+fn bound_from_name(s: &str) -> Result<Bound, String> {
+    match s {
+        "compute" => Ok(Bound::Compute),
+        "memory" => Ok(Bound::Memory),
+        "latency" => Ok(Bound::Latency),
+        other => Err(format!("field 'bound': unknown binding constraint '{other}'")),
+    }
+}
+
+/// Encode one memo slot: `{"kind": "exact" | "infeasible" | "bound", …}`.
+pub fn entry_to_json(entry: &CacheEntry) -> Json {
+    match entry {
+        CacheEntry::Exact(None) => Json::obj(vec![("kind", Json::str("infeasible"))]),
+        CacheEntry::Exact(Some(s)) => Json::obj(vec![
+            ("kind", Json::str("exact")),
+            ("t_s1", exact_u64_to_json(s.sw.tiles.t_s1)),
+            ("t_s2", exact_u64_to_json(s.sw.tiles.t_s2)),
+            ("t_s3", s.sw.tiles.t_s3.map(exact_u64_to_json).unwrap_or(Json::Null)),
+            ("t_t", exact_u64_to_json(s.sw.tiles.t_t)),
+            ("k", Json::Num(s.sw.k as f64)),
+            ("cycles", exact_f64_to_json(s.est.cycles)),
+            ("seconds", exact_f64_to_json(s.est.seconds)),
+            ("gflops", exact_f64_to_json(s.est.gflops)),
+            ("m_tile_bytes", exact_f64_to_json(s.est.m_tile_bytes)),
+            ("compute_cycles", exact_f64_to_json(s.est.compute_cycles)),
+            ("mem_cycles", exact_f64_to_json(s.est.mem_cycles)),
+            ("rounds", exact_f64_to_json(s.est.rounds)),
+            ("bound", Json::str(bound_name(s.est.bound))),
+            ("occupancy", exact_f64_to_json(s.est.occupancy)),
+            ("evals", exact_u64_to_json(s.evals)),
+        ]),
+        CacheEntry::BoundedOut { lb_seconds } => Json::obj(vec![
+            ("kind", Json::str("bound")),
+            ("lb_seconds", exact_f64_to_json(*lb_seconds)),
+        ]),
+    }
+}
+
+/// Decode [`entry_to_json`].
+pub fn entry_from_json(j: &Json) -> Result<CacheEntry, String> {
+    let kind = get(j, "kind")?
+        .as_str()
+        .ok_or_else(|| "field 'kind' must be a string".to_string())?;
+    match kind {
+        "infeasible" => Ok(CacheEntry::Exact(None)),
+        "bound" => Ok(CacheEntry::BoundedOut { lb_seconds: get_f64(j, "lb_seconds")? }),
+        "exact" => {
+            let t_s3 = match get(j, "t_s3")? {
+                Json::Null => None,
+                v => Some(exact_u64_from_json(v, "t_s3")?),
+            };
+            let tiles = TileSizes {
+                t_s1: get_u64(j, "t_s1")?,
+                t_s2: get_u64(j, "t_s2")?,
+                t_s3,
+                t_t: get_u64(j, "t_t")?,
+            };
+            let est = TimeEstimate {
+                cycles: get_f64(j, "cycles")?,
+                seconds: get_f64(j, "seconds")?,
+                gflops: get_f64(j, "gflops")?,
+                m_tile_bytes: get_f64(j, "m_tile_bytes")?,
+                compute_cycles: get_f64(j, "compute_cycles")?,
+                mem_cycles: get_f64(j, "mem_cycles")?,
+                rounds: get_f64(j, "rounds")?,
+                bound: bound_from_name(
+                    get(j, "bound")?
+                        .as_str()
+                        .ok_or_else(|| "field 'bound' must be a string".to_string())?,
+                )?,
+                occupancy: get_f64(j, "occupancy")?,
+            };
+            Ok(CacheEntry::Exact(Some(InnerSolution {
+                sw: SoftwareParams::new(tiles, get_u32(j, "k")?),
+                est,
+                evals: get_u64(j, "evals")?,
+            })))
+        }
+        other => Err(format!("field 'kind': unknown entry kind '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn roundtrip_f64(x: f64) -> f64 {
+        let text = exact_f64_to_json(x).to_string_compact();
+        exact_f64_from_json(&parse(&text).unwrap(), "x").unwrap()
+    }
+
+    #[test]
+    fn f64_codec_is_bit_exact_for_every_class() {
+        for x in [
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            0.1,
+            1.0 / 3.0,
+            f64::MIN_POSITIVE,
+            f64::MIN_POSITIVE / 4.0, // subnormal
+            f64::MAX,
+            9e15,
+            9.007199254740993e15,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            f64::from_bits(0x7ff8_dead_beef_0001), // NaN with payload
+        ] {
+            assert_eq!(roundtrip_f64(x).to_bits(), x.to_bits(), "{x}");
+        }
+    }
+
+    #[test]
+    fn negative_zero_escapes_the_integer_fast_path() {
+        // The JSON writer prints integral f64s as integers, which would turn
+        // -0.0 into "0"; the codec must sidestep that.
+        match exact_f64_to_json(-0.0) {
+            Json::Str(s) => assert_eq!(s, "bits:8000000000000000"),
+            other => panic!("-0.0 must escape to a bits literal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn u64_codec_is_exact_across_the_2_53_boundary() {
+        for x in [0u64, 1, 1 << 52, (1 << 53) - 1, 1 << 53, u64::MAX] {
+            let text = exact_u64_to_json(x).to_string_compact();
+            let back = exact_u64_from_json(&parse(&text).unwrap(), "x").unwrap();
+            assert_eq!(back, x);
+        }
+    }
+
+    #[test]
+    fn hex64_roundtrips() {
+        for x in [0u64, 1, 0xdead_beef, u64::MAX] {
+            assert_eq!(hex64_parse(&hex64(x), "fp").unwrap(), x);
+        }
+        assert!(hex64_parse("abc", "fp").is_err());
+        assert!(hex64_parse("zzzzzzzzzzzzzzzz", "fp").is_err());
+    }
+
+    #[test]
+    fn entry_kinds_roundtrip_bit_exactly() {
+        use crate::timemodel::tiling::TileSizes;
+        let exact = CacheEntry::Exact(Some(InnerSolution {
+            sw: SoftwareParams::new(TileSizes::d3(32, 64, 4, 8), 3),
+            est: TimeEstimate {
+                cycles: 1.5e9,
+                seconds: 0.125,
+                gflops: 123.456,
+                m_tile_bytes: 49152.0,
+                compute_cycles: 1e6,
+                mem_cycles: 2e6 + 0.5,
+                rounds: 42.0,
+                bound: Bound::Memory,
+                occupancy: 0.875,
+            },
+            evals: 12345,
+        }));
+        let infeasible = CacheEntry::Exact(None);
+        let bounded = CacheEntry::BoundedOut { lb_seconds: 3.0e-4 };
+        for e in [exact, infeasible, bounded] {
+            let text = entry_to_json(&e).to_string_compact();
+            let back = entry_from_json(&parse(&text).unwrap()).unwrap();
+            match (&e, &back) {
+                (CacheEntry::Exact(Some(a)), CacheEntry::Exact(Some(b))) => {
+                    assert_eq!(a.sw.tiles, b.sw.tiles);
+                    assert_eq!(a.sw.k, b.sw.k);
+                    assert_eq!(a.est.seconds.to_bits(), b.est.seconds.to_bits());
+                    assert_eq!(a.est.gflops.to_bits(), b.est.gflops.to_bits());
+                    assert_eq!(a.est.occupancy.to_bits(), b.est.occupancy.to_bits());
+                    assert!(matches!(b.est.bound, Bound::Memory));
+                    assert_eq!(a.evals, b.evals);
+                }
+                (CacheEntry::Exact(None), CacheEntry::Exact(None)) => {}
+                (CacheEntry::BoundedOut { lb_seconds: a }, CacheEntry::BoundedOut { lb_seconds: b }) => {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                other => panic!("entry kind changed: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn key_roundtrips_and_restamps_fingerprint() {
+        let key = CacheKey {
+            platform_fp: 0xdead_beef_cafe_f00d,
+            n_sm: 16,
+            n_v: 128,
+            m_sm_kb_bits: 96.0f64.to_bits(),
+            space_dims: 3,
+            sigma: 2,
+            flops_bits: 25.0f64.to_bits(),
+            n_buffers_bits: 2.0f64.to_bits(),
+            bytes_bits: 4.0f64.to_bits(),
+            c_iter_bits: 23.5f64.to_bits(),
+            s1: 1 << 54, // exercise the u64 escape
+            s2: 512,
+            s3: 64,
+            t: 100,
+        };
+        let text = key_to_json(&key).to_string_compact();
+        let back = key_from_json(&parse(&text).unwrap(), key.platform_fp).unwrap();
+        assert_eq!(back, key);
+        // The fingerprint comes from the shard header, not the entry.
+        let restamped = key_from_json(&parse(&text).unwrap(), 7).unwrap();
+        assert_eq!(restamped.platform_fp, 7);
+    }
+
+    #[test]
+    fn malformed_payloads_name_the_field() {
+        let err = entry_from_json(&parse(r#"{"kind": "exotic"}"#).unwrap()).unwrap_err();
+        assert!(err.contains("kind"), "{err}");
+        let err = entry_from_json(&parse(r#"{"kind": "bound"}"#).unwrap()).unwrap_err();
+        assert!(err.contains("lb_seconds"), "{err}");
+        let err =
+            exact_f64_from_json(&Json::Str("bits:xyz".into()), "seconds").unwrap_err();
+        assert!(err.contains("seconds"), "{err}");
+    }
+}

@@ -1,0 +1,418 @@
+//! Save / load / inspect for sweep artifacts.
+//!
+//! `save` serializes every non-empty session partition to one shard plus a
+//! manifest; `load` is all-or-nothing — every shard is read, checksummed and
+//! fully decoded **before** the first cache slot is written, so a failed load
+//! leaves the receiving session untouched (the corruption test matrix holds
+//! this as a property over cache statistics); `inspect` verifies integrity
+//! without decoding payloads.
+
+use crate::artifact::manifest::{Manifest, ShardMeta, ARTIFACT_SCHEMA_VERSION, MANIFEST_FILE};
+use crate::artifact::payload::{
+    characterization_from_json, characterization_to_json, entry_from_json, entry_to_json,
+    hex64, hex64_parse, key_from_json, key_to_json, Characterization,
+};
+use crate::artifact::ArtifactError;
+use crate::coordinator::cache::{CacheEntry, CacheKey};
+use crate::opt::problem::SolveOpts;
+use crate::platform::spec::PlatformSpec;
+use crate::service::session::Session;
+use crate::service::wire;
+use crate::timemodel::citer::CIterTable;
+use crate::util::fnv::fnv64;
+use crate::util::json::{parse, Json};
+use std::collections::BTreeSet;
+use std::path::Path;
+
+/// What [`load`] installed.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadReport {
+    /// Shards validated and absorbed.
+    pub shards: usize,
+    /// Cache slots actually installed (existing slots are never downgraded,
+    /// so a warm session absorbing an older artifact may install fewer).
+    pub entries_installed: usize,
+    /// `Exact` entries carried by the artifact.
+    pub exact_entries: usize,
+    /// `BoundedOut` entries carried by the artifact.
+    pub bounded_entries: usize,
+}
+
+/// What [`inspect`] verified: the parsed manifest after every shard's byte
+/// length and checksum have been re-checked against disk.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub artifact_schema: u64,
+    pub wire_schema: u64,
+    pub shards: Vec<ShardMeta>,
+}
+
+impl ArtifactInfo {
+    pub fn total_entries(&self) -> u64 {
+        self.shards.iter().map(|s| s.exact_entries + s.bounded_entries).sum()
+    }
+}
+
+fn io_err(path: &Path, e: std::io::Error) -> ArtifactError {
+    ArtifactError::Io { path: path.display().to_string(), detail: e.to_string() }
+}
+
+// ---------------------------------------------------------------------------
+// Save
+// ---------------------------------------------------------------------------
+
+/// Serialize every non-empty partition of `session` into `dir` (created if
+/// missing), returning the manifest that was written. Deterministic: saving
+/// the same session state twice produces byte-identical files, and so does
+/// saving a session that was itself warm-started from this artifact.
+pub fn save(session: &Session, dir: &Path) -> Result<Manifest, ArtifactError> {
+    std::fs::create_dir_all(dir).map_err(|e| io_err(dir, e))?;
+    let mut shards: Vec<ShardMeta> = Vec::new();
+    for snap in session.partition_snapshots() {
+        if snap.entries.is_empty() {
+            continue;
+        }
+        let platform_fp = snap.platform.fingerprint();
+        let citer_json = wire::citer_to_json(&snap.citer);
+        let solve_json = wire::solve_opts_to_json(&snap.opts);
+        // The file name pins the partition identity: platform fingerprint
+        // plus a digest of its (C_iter, SolveOpts) provenance, so a fleet
+        // can pick shards by name without opening them.
+        let digest = fnv64(
+            Json::Arr(vec![citer_json.clone(), solve_json.clone()])
+                .to_string_compact()
+                .as_bytes(),
+        );
+        let file = format!("shard-{}-{}.json", hex64(platform_fp), hex64(digest));
+
+        let mut characterizations: BTreeSet<Characterization> = BTreeSet::new();
+        let mut exact_entries = 0u64;
+        let mut bounded_entries = 0u64;
+        for (key, entry) in &snap.entries {
+            characterizations.insert(Characterization::of_key(key));
+            match entry {
+                CacheEntry::Exact(_) => exact_entries += 1,
+                CacheEntry::BoundedOut { .. } => bounded_entries += 1,
+            }
+        }
+        let body = Json::obj(vec![
+            ("artifact_schema", Json::Num(ARTIFACT_SCHEMA_VERSION as f64)),
+            ("wire_schema", Json::Num(wire::SCHEMA_VERSION as f64)),
+            ("platform", Json::str(snap.platform.canonical_name())),
+            ("platform_fp", Json::str(hex64(platform_fp))),
+            ("solve", solve_json),
+            ("citer", citer_json),
+            (
+                "characterizations",
+                Json::Arr(characterizations.iter().map(characterization_to_json).collect()),
+            ),
+            (
+                "entries",
+                Json::Arr(
+                    snap.entries
+                        .iter()
+                        .map(|(k, e)| {
+                            Json::obj(vec![("key", key_to_json(k)), ("entry", entry_to_json(e))])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        let bytes = body.to_string_compact().into_bytes();
+        let path = dir.join(&file);
+        std::fs::write(&path, &bytes).map_err(|e| io_err(&path, e))?;
+        shards.push(ShardMeta {
+            file,
+            bytes: bytes.len() as u64,
+            checksum: fnv64(&bytes),
+            platform: snap.platform.canonical_name(),
+            platform_fp,
+            prune: snap.opts.prune,
+            exact_entries,
+            bounded_entries,
+        });
+    }
+    shards.sort_by(|a, b| a.file.cmp(&b.file));
+    let manifest = Manifest {
+        artifact_schema: ARTIFACT_SCHEMA_VERSION,
+        wire_schema: wire::SCHEMA_VERSION,
+        shards,
+    };
+    let path = dir.join(MANIFEST_FILE);
+    std::fs::write(&path, manifest.to_json().to_string_pretty())
+        .map_err(|e| io_err(&path, e))?;
+    Ok(manifest)
+}
+
+// ---------------------------------------------------------------------------
+// Load
+// ---------------------------------------------------------------------------
+
+/// One fully validated, fully decoded shard, ready to absorb.
+struct DecodedShard {
+    platform: PlatformSpec,
+    citer: CIterTable,
+    opts: SolveOpts,
+    entries: Vec<(CacheKey, CacheEntry)>,
+}
+
+fn read_manifest(dir: &Path) -> Result<Manifest, ArtifactError> {
+    let path = dir.join(MANIFEST_FILE);
+    let text = std::fs::read_to_string(&path).map_err(|e| io_err(&path, e))?;
+    let json = parse(&text).map_err(|e| ArtifactError::BadManifest {
+        path: path.display().to_string(),
+        detail: format!("{e:?}"),
+    })?;
+    let manifest = Manifest::from_json(&json, &path.display().to_string())?;
+    if manifest.artifact_schema != ARTIFACT_SCHEMA_VERSION {
+        return Err(ArtifactError::SchemaMismatch {
+            found: manifest.artifact_schema,
+            supported: ARTIFACT_SCHEMA_VERSION,
+        });
+    }
+    if manifest.wire_schema < wire::MIN_SCHEMA_VERSION
+        || manifest.wire_schema > wire::SCHEMA_VERSION
+    {
+        return Err(ArtifactError::WireSchemaMismatch {
+            found: manifest.wire_schema,
+            min: wire::MIN_SCHEMA_VERSION,
+            max: wire::SCHEMA_VERSION,
+        });
+    }
+    Ok(manifest)
+}
+
+/// Read one shard's bytes and check them against the manifest record.
+fn read_shard_bytes(dir: &Path, meta: &ShardMeta) -> Result<Vec<u8>, ArtifactError> {
+    let path = dir.join(&meta.file);
+    let bytes = std::fs::read(&path).map_err(|e| io_err(&path, e))?;
+    if bytes.len() as u64 != meta.bytes {
+        return Err(ArtifactError::TruncatedShard {
+            file: meta.file.clone(),
+            manifest_bytes: meta.bytes,
+            actual_bytes: bytes.len() as u64,
+        });
+    }
+    let actual = fnv64(&bytes);
+    if actual != meta.checksum {
+        return Err(ArtifactError::ChecksumMismatch {
+            file: meta.file.clone(),
+            manifest_checksum: meta.checksum,
+            actual_checksum: actual,
+        });
+    }
+    Ok(bytes)
+}
+
+/// Validate and decode one shard against its manifest record. Pure: no
+/// session state is touched.
+fn decode_shard(dir: &Path, meta: &ShardMeta) -> Result<DecodedShard, ArtifactError> {
+    let bad = |detail: String| ArtifactError::BadShard { file: meta.file.clone(), detail };
+    let bytes = read_shard_bytes(dir, meta)?;
+    let text = String::from_utf8(bytes).map_err(|e| bad(e.to_string()))?;
+    let json = parse(&text).map_err(|e| bad(format!("{e:?}")))?;
+
+    let num = |key: &str| -> Result<u64, ArtifactError> {
+        match json.get(key) {
+            Some(Json::Num(x)) if x.is_finite() && *x >= 0.0 && x.fract() == 0.0 => {
+                Ok(*x as u64)
+            }
+            _ => Err(bad(format!("missing integer field '{key}'"))),
+        }
+    };
+    let string = |key: &str| -> Result<&str, ArtifactError> {
+        json.get(key)
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad(format!("missing string field '{key}'")))
+    };
+
+    // Schema gates first: an incompatible shard must not be interpreted.
+    let artifact_schema = num("artifact_schema")?;
+    if artifact_schema != ARTIFACT_SCHEMA_VERSION {
+        return Err(ArtifactError::SchemaMismatch {
+            found: artifact_schema,
+            supported: ARTIFACT_SCHEMA_VERSION,
+        });
+    }
+    let wire_schema = num("wire_schema")?;
+    if wire_schema < wire::MIN_SCHEMA_VERSION || wire_schema > wire::SCHEMA_VERSION {
+        return Err(ArtifactError::WireSchemaMismatch {
+            found: wire_schema,
+            min: wire::MIN_SCHEMA_VERSION,
+            max: wire::SCHEMA_VERSION,
+        });
+    }
+
+    // Manifest-vs-shard provenance: both copies were written at save time,
+    // so any disagreement means one of them was edited afterwards.
+    let platform_name = string("platform")?;
+    if platform_name != meta.platform {
+        return Err(ArtifactError::ManifestShardMismatch {
+            file: meta.file.clone(),
+            field: "platform",
+            manifest: meta.platform.clone(),
+            shard: platform_name.to_string(),
+        });
+    }
+    let shard_fp = hex64_parse(string("platform_fp")?, "platform_fp").map_err(&bad)?;
+    if shard_fp != meta.platform_fp {
+        return Err(ArtifactError::ManifestShardMismatch {
+            file: meta.file.clone(),
+            field: "platform_fp",
+            manifest: hex64(meta.platform_fp),
+            shard: hex64(shard_fp),
+        });
+    }
+    let opts = wire::solve_opts_from_json(
+        json.get("solve").ok_or_else(|| bad("missing field 'solve'".into()))?,
+    )
+    .map_err(|e| bad(format!("bad solver options: {e:#}")))?;
+    if opts.prune != meta.prune {
+        return Err(ArtifactError::PruneMismatch {
+            file: meta.file.clone(),
+            manifest_prune: meta.prune,
+            shard_prune: opts.prune,
+        });
+    }
+
+    // Staleness: the named platform must fingerprint today to the value the
+    // keys were minted under, else the cached solutions describe a model
+    // this build doesn't run.
+    let platform = PlatformSpec::parse(platform_name).map_err(|e| {
+        ArtifactError::BadManifest {
+            path: meta.file.clone(),
+            detail: format!("unparsable platform '{platform_name}': {e}"),
+        }
+    })?;
+    let current = platform.fingerprint();
+    if current != meta.platform_fp {
+        return Err(ArtifactError::StaleFingerprint {
+            platform: platform_name.to_string(),
+            recorded: meta.platform_fp,
+            current,
+        });
+    }
+
+    let citer = wire::citer_from_json(
+        json.get("citer").ok_or_else(|| bad("missing field 'citer'".into()))?,
+    )
+    .map_err(|e| bad(format!("bad C_iter table: {e:#}")))?;
+
+    let declared: BTreeSet<Characterization> = match json.get("characterizations") {
+        Some(Json::Arr(items)) => items
+            .iter()
+            .map(|j| characterization_from_json(j).map_err(&bad))
+            .collect::<Result<_, _>>()?,
+        _ => return Err(bad("missing array field 'characterizations'".into())),
+    };
+
+    let entry_items = match json.get("entries") {
+        Some(Json::Arr(items)) => items,
+        _ => return Err(bad("missing array field 'entries'".into())),
+    };
+    let mut entries = Vec::with_capacity(entry_items.len());
+    let (mut exact, mut bounded) = (0u64, 0u64);
+    for item in entry_items {
+        let key = key_from_json(
+            item.get("key").ok_or_else(|| bad("entry record missing 'key'".into()))?,
+            meta.platform_fp,
+        )
+        .map_err(&bad)?;
+        let entry = entry_from_json(
+            item.get("entry").ok_or_else(|| bad("entry record missing 'entry'".into()))?,
+        )
+        .map_err(&bad)?;
+        if !declared.contains(&Characterization::of_key(&key)) {
+            return Err(ArtifactError::CharacterizationMismatch {
+                file: meta.file.clone(),
+                detail: format!(
+                    "entry key (dims={}, sigma={}, s=({},{},{}), t={}) uses a stencil \
+                     characterization outside the shard's declared set",
+                    key.space_dims, key.sigma, key.s1, key.s2, key.s3, key.t
+                ),
+            });
+        }
+        match entry {
+            CacheEntry::Exact(_) => exact += 1,
+            CacheEntry::BoundedOut { .. } => bounded += 1,
+        }
+        entries.push((key, entry));
+    }
+    // The manifest's entry counts are informational but must still agree —
+    // an edited count is provenance skew like any other.
+    if exact != meta.exact_entries {
+        return Err(ArtifactError::ManifestShardMismatch {
+            file: meta.file.clone(),
+            field: "exact_entries",
+            manifest: meta.exact_entries.to_string(),
+            shard: exact.to_string(),
+        });
+    }
+    if bounded != meta.bounded_entries {
+        return Err(ArtifactError::ManifestShardMismatch {
+            file: meta.file.clone(),
+            field: "bounded_entries",
+            manifest: meta.bounded_entries.to_string(),
+            shard: bounded.to_string(),
+        });
+    }
+    Ok(DecodedShard { platform, citer, opts, entries })
+}
+
+/// Warm-start `session` from the artifact in `dir`.
+///
+/// All-or-nothing: every shard is read, checksummed and fully decoded before
+/// anything is absorbed, and absorption itself validates each partition's
+/// provenance against the receiving coordinator before mutating it — so on
+/// `Err`, the session's caches and their statistics are exactly as before.
+pub fn load(session: &mut Session, dir: &Path) -> Result<LoadReport, ArtifactError> {
+    let manifest = read_manifest(dir)?;
+    let mut decoded = Vec::with_capacity(manifest.shards.len());
+    for meta in &manifest.shards {
+        decoded.push(decode_shard(dir, meta)?);
+    }
+    let mut report = LoadReport::default();
+    for shard in &decoded {
+        report.exact_entries +=
+            shard.entries.iter().filter(|(_, e)| matches!(e, CacheEntry::Exact(_))).count();
+        report.bounded_entries += shard
+            .entries
+            .iter()
+            .filter(|(_, e)| matches!(e, CacheEntry::BoundedOut { .. }))
+            .count();
+    }
+    // Dry-run the partition provenance checks against the session before any
+    // absorb mutates it: a conflict on shard k must not leave shards 0..k
+    // installed.
+    for shard in &decoded {
+        session
+            .check_partition(&shard.platform, &shard.citer, &shard.opts)
+            .map_err(|e| ArtifactError::PartitionConflict { detail: format!("{e:#}") })?;
+    }
+    for shard in decoded {
+        let installed = session
+            .absorb_partition(&shard.platform, &shard.citer, &shard.opts, &shard.entries)
+            .map_err(|e| ArtifactError::PartitionConflict { detail: format!("{e:#}") })?;
+        report.entries_installed += installed;
+        report.shards += 1;
+    }
+    Ok(report)
+}
+
+// ---------------------------------------------------------------------------
+// Inspect
+// ---------------------------------------------------------------------------
+
+/// Parse the manifest and re-verify every shard's byte length and checksum
+/// against disk, without decoding payloads or touching any session.
+pub fn inspect(dir: &Path) -> Result<ArtifactInfo, ArtifactError> {
+    let manifest = read_manifest(dir)?;
+    for meta in &manifest.shards {
+        read_shard_bytes(dir, meta)?;
+    }
+    Ok(ArtifactInfo {
+        artifact_schema: manifest.artifact_schema,
+        wire_schema: manifest.wire_schema,
+        shards: manifest.shards,
+    })
+}

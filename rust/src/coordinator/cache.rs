@@ -51,7 +51,7 @@ use std::sync::Mutex;
 /// of the bundle the solution was computed under, so two differently-spelled
 /// but identically-valued platforms share memoized sweeps while any model
 /// delta (a tweaked clock or bandwidth) can never alias a cached solution.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct CacheKey {
     /// Fingerprint of the platform bundle the inner problem was posed under.
     pub platform_fp: u64,
@@ -397,6 +397,47 @@ impl MemoCache {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Every slot — exact solutions, memoized infeasibilities and bound
+    /// marks alike — in deterministic key order (`CacheKey` derives `Ord`
+    /// field-wise). This is the persistence surface: a saved artifact's
+    /// payload is exactly this sequence, so save→load→save is byte-stable
+    /// regardless of shard layout or insertion history. Bookkeeping, no
+    /// counters.
+    pub fn export_entries(&self) -> Vec<(CacheKey, CacheEntry)> {
+        let mut out: Vec<(CacheKey, CacheEntry)> = Vec::with_capacity(self.len());
+        for shard in &self.shards {
+            out.extend(shard.lock().unwrap().iter().map(|(k, v)| (*k, *v)));
+        }
+        out.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Install one persisted slot, honoring the monotone contract: a vacant
+    /// slot takes the entry, a bound mark may upgrade to `Exact`, and an
+    /// existing `Exact` entry is never downgraded or overwritten (the solver
+    /// is deterministic — an equal-keyed exact value is the same value).
+    /// Returns whether the store changed. Imports are neither hits nor
+    /// misses: no counters, so warm-started sessions keep exact accounting
+    /// for the work they actually perform.
+    pub fn import_entry(&self, key: CacheKey, entry: CacheEntry) -> bool {
+        let mut shard = self.shard(&key).lock().unwrap();
+        match shard.entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                match (e.get(), &entry) {
+                    (CacheEntry::BoundedOut { .. }, CacheEntry::Exact(_)) => {
+                        e.insert(entry);
+                        true
+                    }
+                    _ => false,
+                }
+            }
+            std::collections::hash_map::Entry::Vacant(slot) => {
+                slot.insert(entry);
+                true
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -561,6 +602,78 @@ mod tests {
         cache.insert_bound(key(256), 1.0);
         cache.insert_bound(key(256), 2.0);
         assert_eq!(cache.bound_of(&key(256)), Some(1.0));
+    }
+
+    #[test]
+    fn export_is_key_sorted_and_complete() {
+        let cache = MemoCache::with_shards(4);
+        cache.get_or_compute(key(256), dummy_solution);
+        cache.get_or_compute(key(64), || None);
+        cache.insert_bound(key(128), 0.25);
+        let entries = cache.export_entries();
+        assert_eq!(entries.len(), 3);
+        let keys: Vec<u32> = entries.iter().map(|(k, _)| k.n_v).collect();
+        assert_eq!(keys, vec![64, 128, 256], "deterministic key order");
+        assert!(matches!(entries[0].1, CacheEntry::Exact(None)));
+        assert!(matches!(entries[1].1, CacheEntry::BoundedOut { lb_seconds } if lb_seconds == 0.25));
+        assert!(matches!(entries[2].1, CacheEntry::Exact(Some(_))));
+        // Export is bookkeeping: no counters moved beyond the three inserts.
+        assert_eq!(cache.stats.snapshot(), StatsSnapshot { hits: 0, misses: 2 });
+    }
+
+    #[test]
+    fn import_honors_monotone_contract_without_counters() {
+        let cache = MemoCache::new();
+        // Vacant slots take either kind.
+        assert!(cache.import_entry(key(32), CacheEntry::BoundedOut { lb_seconds: 0.5 }));
+        assert!(cache.import_entry(key(64), CacheEntry::Exact(dummy_solution())));
+        // A bound mark upgrades to exact…
+        assert!(cache.import_entry(key(32), CacheEntry::Exact(None)));
+        assert!(matches!(cache.get(&key(32)), Some(None)));
+        // …but exact never downgrades to a bound or gets overwritten.
+        assert!(!cache.import_entry(key(32), CacheEntry::BoundedOut { lb_seconds: 9.0 }));
+        assert!(!cache.import_entry(key(64), CacheEntry::Exact(None)));
+        assert!(cache.get(&key(64)).unwrap().is_some());
+        // Duplicate bound marks keep the first.
+        assert!(cache.import_entry(key(96), CacheEntry::BoundedOut { lb_seconds: 1.0 }));
+        assert!(!cache.import_entry(key(96), CacheEntry::BoundedOut { lb_seconds: 2.0 }));
+        assert_eq!(cache.bound_of(&key(96)), Some(1.0));
+        // Imports charged nothing; only the two explicit `get` probes did.
+        assert_eq!(cache.stats.snapshot().misses + cache.stats.snapshot().hits, 2);
+    }
+
+    #[test]
+    fn export_import_roundtrip_preserves_every_slot() {
+        let src = MemoCache::with_shards(8);
+        src.get_or_compute(key(128), dummy_solution);
+        src.get_or_compute(key(192), || None);
+        src.insert_bound(key(320), 0.125);
+        let dst = MemoCache::with_shards(2);
+        for (k, e) in src.export_entries() {
+            assert!(dst.import_entry(k, e));
+        }
+        assert_eq!(dst.len(), src.len());
+        assert_eq!(dst.exact_len(), src.exact_len());
+        assert_eq!(dst.bounded_len(), src.bounded_len());
+        // Shard layout is irrelevant to the exported view.
+        let a = src.export_entries();
+        let b = dst.export_entries();
+        assert_eq!(a.len(), b.len());
+        for ((ka, ea), (kb, eb)) in a.iter().zip(b.iter()) {
+            assert_eq!(ka, kb);
+            match (ea, eb) {
+                (CacheEntry::Exact(Some(x)), CacheEntry::Exact(Some(y))) => {
+                    assert_eq!(x.est.seconds.to_bits(), y.est.seconds.to_bits());
+                    assert_eq!(x.evals, y.evals);
+                }
+                (CacheEntry::Exact(None), CacheEntry::Exact(None)) => {}
+                (CacheEntry::BoundedOut { lb_seconds: x }, CacheEntry::BoundedOut { lb_seconds: y }) => {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+                other => panic!("slot kind changed across round-trip: {other:?}"),
+            }
+        }
+        assert_eq!(dst.stats.snapshot(), StatsSnapshot::default(), "imports are not lookups");
     }
 
     #[test]

@@ -729,6 +729,77 @@ impl Coordinator {
             None => (None, evals, ps),
         }
     }
+
+    /// Dry-run [`Self::import_entries`]'s `solved_under` check without
+    /// mutating anything, so a multi-shard loader can vet every partition
+    /// before absorbing any.
+    pub fn can_import(&self, citer: &CIterTable, opts: &SolveOpts) -> anyhow::Result<()> {
+        let guard = self.solved_under.lock().unwrap();
+        if let Some((c, o)) = &*guard {
+            anyhow::ensure!(
+                c == citer && o == opts,
+                "refusing import: this coordinator's cache was populated under a \
+                 different C_iter table / solver options (prune partition)"
+            );
+        }
+        Ok(())
+    }
+
+    /// Install persisted cache entries (a warm-start from a sweep artifact).
+    ///
+    /// The `(citer, opts)` pair the entries were solved under participates in
+    /// the `solved_under` contract exactly like a batch: an empty coordinator
+    /// adopts it, a populated one refuses any mismatch — persisted state can
+    /// no more mix C_iter tables or prune partitions than live batches can.
+    /// Every key must carry this coordinator's platform fingerprint (the
+    /// artifact loader verifies provenance before calling here; this is the
+    /// last line of defense). Entries import counter-free via
+    /// [`MemoCache::import_entry`], honoring the monotone slot contract.
+    /// Returns the number of slots actually installed.
+    pub fn import_entries(
+        &self,
+        citer: &CIterTable,
+        opts: &SolveOpts,
+        entries: &[(CacheKey, crate::coordinator::cache::CacheEntry)],
+    ) -> anyhow::Result<usize> {
+        // Validate everything before mutating anything — a rejected import
+        // must leave the coordinator (cache *and* `solved_under`) exactly as
+        // it found it.
+        for (key, _) in entries {
+            anyhow::ensure!(
+                key.platform_fp == self.platform_fp,
+                "refusing import: cache key platform fingerprint {:016x} does not match \
+                 this coordinator's platform fingerprint {:016x}",
+                key.platform_fp,
+                self.platform_fp
+            );
+        }
+        {
+            let mut guard = self.solved_under.lock().unwrap();
+            match &*guard {
+                Some((c, o)) => anyhow::ensure!(
+                    c == citer && o == opts,
+                    "refusing import: this coordinator's cache was populated under a \
+                     different C_iter table / solver options (prune partition)"
+                ),
+                None => *guard = Some((citer.clone(), opts.clone())),
+            }
+        }
+        let _batch = self.batch_lock.lock().unwrap();
+        let mut installed = 0usize;
+        for (key, entry) in entries {
+            if self.cache.import_entry(*key, *entry) {
+                installed += 1;
+            }
+        }
+        Ok(installed)
+    }
+
+    /// The persistence view of this coordinator's memo store: every slot in
+    /// deterministic key order (see [`MemoCache::export_entries`]).
+    pub fn export_entries(&self) -> Vec<(CacheKey, crate::coordinator::cache::CacheEntry)> {
+        self.cache.export_entries()
+    }
 }
 
 /// One member of a gated front (the full per-entry detail stays unsolved for
@@ -928,6 +999,56 @@ mod tests {
         // A repeat batch is served from cache: no new pruning work.
         let again = coord.run_batch_report(std::slice::from_ref(&sc));
         assert_eq!(again.prune, crate::opt::bounds::PruneStats::default());
+    }
+
+    #[test]
+    fn import_entries_round_trips_a_sweep_and_guards_partitions() {
+        let sc = quick();
+        let src = Coordinator::paper();
+        let first = src.run_scenario(&sc);
+        let exported = src.export_entries();
+        assert_eq!(exported.len(), src.cache.len());
+
+        // A fresh coordinator warm-started from the export serves the same
+        // scenario bit-identically, with zero new instances solved.
+        let dst = Coordinator::paper();
+        let installed =
+            dst.import_entries(&sc.citer, &sc.solve_opts, &exported).unwrap();
+        assert_eq!(installed, exported.len());
+        assert_eq!(
+            dst.cache.stats.snapshot(),
+            crate::coordinator::cache::StatsSnapshot::default(),
+            "imports are not lookups"
+        );
+        let warm = dst.run_scenario(&sc);
+        assert_eq!(warm.result.points.len(), first.result.points.len());
+        for (a, b) in warm.result.points.iter().zip(&first.result.points) {
+            assert_eq!(a.gflops.to_bits(), b.gflops.to_bits());
+            assert_eq!(a.seconds.to_bits(), b.seconds.to_bits());
+        }
+        assert_eq!(warm.result.pareto, first.result.pareto);
+        assert!(warm.cache_hit_rate > 0.999, "hit rate {}", warm.cache_hit_rate);
+
+        // Partition guard: a coordinator populated under different solver
+        // options refuses the import instead of aliasing.
+        let other = Coordinator::paper();
+        other
+            .run_scenario(&{
+                let mut s = quick();
+                s.solve_opts = crate::opt::problem::SolveOpts::default().without_prune();
+                s
+            });
+        let err = other.import_entries(&sc.citer, &sc.solve_opts, &exported).unwrap_err();
+        assert!(err.to_string().contains("prune partition"), "{err}");
+
+        // Fingerprint guard: keys from another platform are rejected whole.
+        let alien = Coordinator::new(
+            crate::platform::spec::PlatformSpec::parse("maxwell:bw7").unwrap(),
+        );
+        let before = alien.cache.len();
+        let err = alien.import_entries(&sc.citer, &sc.solve_opts, &exported).unwrap_err();
+        assert!(err.to_string().contains("platform fingerprint"), "{err}");
+        assert_eq!(alien.cache.len(), before, "rejected import must not mutate the cache");
     }
 
     #[test]

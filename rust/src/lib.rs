@@ -18,9 +18,10 @@
 //!   ([`cacti`]), execution-time model ([`timemodel`]), MINLP optimizer
 //!   ([`opt`]), codesign engine ([`codesign`]), cycle-approximate GPU
 //!   simulator ([`sim`]), PJRT runtime ([`runtime`]), DSE coordinator
-//!   ([`coordinator`]), report generation ([`report`]), and the session
+//!   ([`coordinator`]), report generation ([`report`]), the session
 //!   service ([`service`]) — the typed request API everything public
-//!   routes through.
+//!   routes through — and persisted sweep artifacts ([`artifact`]) that
+//!   warm-start a session certified bit-identical to cold recompute.
 //!
 //! ## Workloads and platforms beyond the paper
 //!
@@ -38,6 +39,7 @@
 //! per-experiment index.
 
 pub mod area;
+pub mod artifact;
 pub mod cacti;
 pub mod codesign;
 pub mod coordinator;

@@ -7,7 +7,10 @@
 //! path, so all of them share the warm memo store and the batched sweep
 //! engine; `serve` answers a JSON request file through the same session.
 //! Subcommands map onto the experiments DESIGN.md catalogues; `report --all`
-//! regenerates every paper table/figure under `reports/`.
+//! regenerates every paper table/figure under `reports/`. The session's
+//! memoized sweeps persist across processes via `artifact save/load/inspect`
+//! and `--warm-start` / `--save-artifact` on `explore`, `tune` and `serve`
+//! (see DESIGN.md §6 for the format and the refuse-to-alias contract).
 
 use codesign::platform::{Platform, DEFAULT_PLATFORM};
 use codesign::report;
@@ -39,6 +42,18 @@ fn cli() -> Cli {
         default: None,
         help: "disable bound-and-prune: evaluate every instance in full (bit-identical results, more model evaluations)",
     };
+    let warm_start = OptSpec {
+        name: "warm-start",
+        takes_value: true,
+        default: None,
+        help: "load a sweep artifact directory before answering (refuses stale/corrupt artifacts)",
+    };
+    let save_artifact = OptSpec {
+        name: "save-artifact",
+        takes_value: true,
+        default: None,
+        help: "persist the session's memoized sweeps to this artifact directory afterwards",
+    };
     Cli {
         bin: "codesign",
         about: "Accelerator codesign as non-linear optimization — paper reproduction",
@@ -57,6 +72,8 @@ fn cli() -> Cli {
                     threads.clone(),
                     platform.clone(),
                     no_prune.clone(),
+                    warm_start.clone(),
+                    save_artifact.clone(),
                     OptSpec { name: "class", takes_value: true, default: Some("both"), help: "2d | 3d | both | <stencil>" },
                     OptSpec { name: "stencil", takes_value: true, default: None, help: "single stencil: preset (jacobi2d) or family (star3d:r2)" },
                     OptSpec { name: "measured-citer", takes_value: false, default: None, help: "use PJRT-measured C_iter" },
@@ -97,6 +114,8 @@ fn cli() -> Cli {
                     threads.clone(),
                     platform.clone(),
                     no_prune.clone(),
+                    warm_start.clone(),
+                    save_artifact.clone(),
                     OptSpec { name: "budget", takes_value: true, default: Some("450"), help: "area budget, mm²" },
                     OptSpec { name: "n-sm", takes_value: true, default: None, help: "pin the SM count" },
                     OptSpec { name: "n-v", takes_value: true, default: None, help: "pin vector units per SM" },
@@ -110,7 +129,7 @@ fn cli() -> Cli {
                 opts: vec![
                     out.clone(),
                     quick.clone(),
-                    threads,
+                    threads.clone(),
                     platform.clone(),
                     OptSpec { name: "all", takes_value: false, default: None, help: "all experiments" },
                 ],
@@ -119,12 +138,25 @@ fn cli() -> Cli {
                 name: "serve",
                 about: "answer a JSON request file through one warm session (wire schema v4; v1-v3 accepted)",
                 opts: vec![
-                    platform,
-                    no_prune,
+                    platform.clone(),
+                    no_prune.clone(),
+                    warm_start.clone(),
+                    save_artifact.clone(),
                     OptSpec { name: "requests", takes_value: true, default: None, help: "request file path (required)" },
                     OptSpec { name: "out", takes_value: true, default: Some("-"), help: "response file path ('-' = stdout)" },
                     OptSpec { name: "pretty", takes_value: false, default: None, help: "indent the response JSON" },
                     OptSpec { name: "bench-out", takes_value: true, default: None, help: "write wall/cache/eval stats JSON here" },
+                ],
+            },
+            Command {
+                name: "artifact",
+                about: "save / load / inspect persisted sweep artifacts (warm-start state)",
+                opts: vec![
+                    platform,
+                    no_prune,
+                    threads,
+                    OptSpec { name: "dir", takes_value: true, default: None, help: "artifact directory (required)" },
+                    OptSpec { name: "requests", takes_value: true, default: None, help: "request file whose sweeps to persist (save)" },
                 ],
             },
         ],
@@ -216,6 +248,36 @@ fn session_stats_line(session: &Session, rep: &SubmitReport) {
     );
 }
 
+/// `--warm-start <dir>`: load a sweep artifact into the session before any
+/// request runs. Fatal on any staleness or corruption — a warm start either
+/// aliases certified-identical state or nothing at all.
+fn warm_start_from_args(session: &mut Session, args: &Args) -> anyhow::Result<()> {
+    if let Some(dir) = args.opt("warm-start") {
+        let rep = session.warm_start(Path::new(dir))?;
+        eprintln!(
+            "[artifact] warm start from {dir}: {} shard(s), {} slot(s) installed \
+             ({} exact, {} bounded)",
+            rep.shards, rep.entries_installed, rep.exact_entries, rep.bounded_entries
+        );
+    }
+    Ok(())
+}
+
+/// `--save-artifact <dir>`: persist the session's memoized sweeps after the
+/// command's requests are answered.
+fn save_artifact_from_args(session: &Session, args: &Args) -> anyhow::Result<()> {
+    if let Some(dir) = args.opt("save-artifact") {
+        let manifest = session.save_artifact(Path::new(dir))?;
+        let entries: u64 =
+            manifest.shards.iter().map(|s| s.exact_entries + s.bounded_entries).sum();
+        eprintln!(
+            "[artifact] saved {} shard(s), {entries} entr(ies) to {dir}",
+            manifest.shards.len()
+        );
+    }
+    Ok(())
+}
+
 fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
     let out = args.opt_or("out", "reports");
     let out = Path::new(&out);
@@ -299,8 +361,10 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
             }
 
             let mut session = Session::new(platform.spec.clone()).with_progress(500);
+            warm_start_from_args(&mut session, args)?;
             let rep = session.submit_all(&requests);
             session_stats_line(&session, &rep);
+            save_artifact_from_args(&session, args)?;
             for answer in &rep.answers {
                 match (&answer.response, &answer.detail) {
                     (CodesignResponse::Explore(_), ResponseDetail::Scenarios(details)) => {
@@ -431,7 +495,9 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 req.stencil = Some(st.id);
             }
             let mut session = Session::new(platform.spec.clone());
+            warm_start_from_args(&mut session, args)?;
             let answer = session.submit(&CodesignRequest::Tune(req));
+            save_artifact_from_args(&session, args)?;
             let CodesignResponse::Tune(t) = &answer.response else {
                 anyhow::bail!("unexpected response '{}'", answer.response.kind());
             };
@@ -460,8 +526,10 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 }
             }
             let mut session = Session::new(platform.spec.clone());
+            warm_start_from_args(&mut session, args)?;
             let rep = session.submit_all(&requests);
             session_stats_line(&session, &rep);
+            save_artifact_from_args(&session, args)?;
             let mut failed = 0usize;
             for (i, a) in rep.answers.iter().enumerate() {
                 if let CodesignResponse::Error(e) = &a.response {
@@ -541,6 +609,92 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
                 "{failed} of {} request(s) answered with an error",
                 requests.len()
             );
+        }
+        "artifact" => {
+            let action = args.positional.first().map(String::as_str).ok_or_else(|| {
+                anyhow::anyhow!("artifact needs an action: save | load | inspect")
+            })?;
+            let dir_of = || -> anyhow::Result<&str> {
+                args.opt("dir")
+                    .ok_or_else(|| anyhow::anyhow!("artifact {action} needs --dir <directory>"))
+            };
+            match action {
+                "save" => {
+                    // Run a request file through a fresh session, then persist
+                    // the sweeps it memoized.
+                    let dir = dir_of()?;
+                    let path = args.opt("requests").ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "artifact save needs --requests <file.json> \
+                             (the workload whose sweeps to persist)"
+                        )
+                    })?;
+                    let text = std::fs::read_to_string(path)
+                        .map_err(|e| anyhow::anyhow!("cannot read '{path}': {e}"))?;
+                    let mut requests = wire::decode_requests(&text)?;
+                    if args.flag("no-prune") {
+                        for req in &mut requests {
+                            strip_prune(req);
+                        }
+                    }
+                    let mut session = Session::new(platform.spec.clone());
+                    let rep = session.submit_all(&requests);
+                    session_stats_line(&session, &rep);
+                    let manifest = session.save_artifact(Path::new(dir))?;
+                    let entries: u64 = manifest
+                        .shards
+                        .iter()
+                        .map(|s| s.exact_entries + s.bounded_entries)
+                        .sum();
+                    println!(
+                        "saved {} shard(s), {entries} entr(ies) to {dir}",
+                        manifest.shards.len()
+                    );
+                }
+                "load" => {
+                    // Certify an artifact by loading it into a fresh session:
+                    // every integrity and staleness gate runs; failure exits
+                    // nonzero with the precise mismatch.
+                    let dir = dir_of()?;
+                    let mut session = Session::new(platform.spec.clone());
+                    let rep = session.warm_start(Path::new(dir))?;
+                    println!(
+                        "loaded {} shard(s) from {dir}: {} slot(s) installed \
+                         ({} exact, {} bounded) across {} partition(s)",
+                        rep.shards,
+                        rep.entries_installed,
+                        rep.exact_entries,
+                        rep.bounded_entries,
+                        session.partitions()
+                    );
+                }
+                "inspect" => {
+                    let dir = dir_of()?;
+                    let info = codesign::artifact::inspect(Path::new(dir))?;
+                    println!(
+                        "artifact at {dir}: schema {} (wire {}), {} shard(s), {} entr(ies), \
+                         checksums verified",
+                        info.artifact_schema,
+                        info.wire_schema,
+                        info.shards.len(),
+                        info.total_entries()
+                    );
+                    for s in &info.shards {
+                        println!(
+                            "  {}  platform {} (fp {:016x})  prune={}  {} exact + {} bounded  \
+                             {} bytes",
+                            s.file,
+                            s.platform,
+                            s.platform_fp,
+                            s.prune,
+                            s.exact_entries,
+                            s.bounded_entries,
+                            s.bytes
+                        );
+                    }
+                }
+                other => anyhow::bail!("unknown artifact action '{other}' (save | load | inspect)"),
+            }
         }
         other => anyhow::bail!("unhandled command {other}"),
     }

@@ -136,14 +136,11 @@ impl PlatformSpec {
     /// bandwidth, a different reference — changes the fingerprint, so
     /// distinct platforms can never alias a cache entry.
     pub fn fingerprint(&self) -> u64 {
-        // FNV-1a: stable across runs and platforms (no RandomState).
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        let mut eat = |bits: u64| {
-            for b in bits.to_le_bytes() {
-                h ^= b as u64;
-                h = h.wrapping_mul(0x0000_0100_0000_01b3);
-            }
-        };
+        // FNV-1a via util::fnv: stable across runs and platforms (no
+        // RandomState). The word stream below is a persistence contract —
+        // artifact shards are keyed by this digest on disk.
+        let mut h = crate::util::fnv::Fnv64::new();
+        let mut eat = |bits: u64| h.write_u64(bits);
         // Exhaustive destructuring (no `..` rest patterns): adding a field
         // to any of these bundles fails compilation here until the
         // fingerprint decides about it — an omission would silently merge
@@ -212,7 +209,7 @@ impl PlatformSpec {
             eat(l2_kb.to_bits());
             eat(r.published_area_mm2.to_bits());
         }
-        h
+        h.finish()
     }
 
     /// Validate every grammar-reachable parameter; `Err` carries a

@@ -37,7 +37,7 @@ pub use request::{
     SolverCostSummary, TuneRequest, TuneSummary, ValidateSummary, WorkloadClass,
 };
 pub use session::{
-    ResponseDetail, ScenarioDetail, Session, SessionAnswer, SubmitReport,
+    PartitionSnapshot, ResponseDetail, ScenarioDetail, Session, SessionAnswer, SubmitReport,
 };
 pub use wire::{
     decode_requests, decode_responses, encode_requests, encode_responses, request_from_json,

@@ -16,7 +16,7 @@
 use crate::codesign::scenario::{DesignEval, Scenario, ScenarioResult};
 use crate::codesign::sensitivity::best_for_benchmark;
 use crate::codesign::tuner::{candidate_grid, Pinned};
-use crate::coordinator::{CacheKey, Coordinator, StatsSnapshot, SweepReport};
+use crate::coordinator::{CacheEntry, CacheKey, Coordinator, StatsSnapshot, SweepReport};
 use crate::opt::bounds::{lower_bound_entry, PruneStats};
 use crate::opt::inner::{InnerOutcome, InnerSolution};
 use crate::opt::problem::SolveOpts;
@@ -93,6 +93,19 @@ impl SubmitReport {
     pub fn into_responses(self) -> Vec<CodesignResponse> {
         self.answers.into_iter().map(|a| a.response).collect()
     }
+}
+
+/// One session partition's full provenance and memo contents: everything the
+/// artifact subsystem needs to persist it and later re-identify it. Entries
+/// are in deterministic key order ([`MemoCache::export_entries`]), so two
+/// snapshots of equal state serialize byte-identically.
+///
+/// [`MemoCache::export_entries`]: crate::coordinator::MemoCache::export_entries
+pub struct PartitionSnapshot {
+    pub platform: PlatformSpec,
+    pub citer: CIterTable,
+    pub opts: SolveOpts,
+    pub entries: Vec<(CacheKey, CacheEntry)>,
 }
 
 /// Where a planned request's scenarios sit in the group batches.
@@ -195,6 +208,75 @@ impl Session {
     /// demand upgrades them in place).
     pub fn bounded_entries(&self) -> usize {
         self.coordinators.iter().map(|(_, _, c)| c.cache.bounded_len()).sum()
+    }
+
+    /// Snapshot every partition's full provenance and memo contents, in
+    /// deterministic per-partition key order — the save side of the artifact
+    /// subsystem ([`crate::artifact`]).
+    pub fn partition_snapshots(&self) -> Vec<PartitionSnapshot> {
+        self.coordinators
+            .iter()
+            .map(|(citer, opts, coord)| PartitionSnapshot {
+                platform: coord.platform().clone(),
+                citer: citer.clone(),
+                opts: opts.clone(),
+                entries: coord.export_entries(),
+            })
+            .collect()
+    }
+
+    /// Dry-run the provenance checks [`Self::absorb_partition`] would apply,
+    /// without creating a coordinator or mutating anything — the artifact
+    /// loader calls this for *every* shard before absorbing *any*, so a
+    /// conflict on a later shard can't leave earlier ones installed.
+    pub fn check_partition(
+        &self,
+        platform: &PlatformSpec,
+        citer: &CIterTable,
+        opts: &SolveOpts,
+    ) -> anyhow::Result<()> {
+        let fp = platform.fingerprint();
+        match self.coordinators.iter().find(|(c, o, coord)| {
+            coord.platform_fingerprint() == fp && c == citer && o == opts
+        }) {
+            Some((_, _, coord)) => coord.can_import(citer, opts),
+            None => Ok(()), // a fresh coordinator accepts any partition
+        }
+    }
+
+    /// Install a decoded artifact partition into the matching coordinator
+    /// (created on first sight, exactly as live submissions partition).
+    /// Returns the number of cache slots actually installed; existing slots
+    /// are never downgraded and hit/miss counters are untouched, so the
+    /// warm-started session's telemetry replays a cold run bit-identically.
+    pub fn absorb_partition(
+        &mut self,
+        platform: &PlatformSpec,
+        citer: &CIterTable,
+        opts: &SolveOpts,
+        entries: &[(CacheKey, CacheEntry)],
+    ) -> anyhow::Result<usize> {
+        let ci = self.coordinator_index(platform, citer, opts);
+        self.coordinators[ci].2.import_entries(citer, opts, entries)
+    }
+
+    /// Persist this session's memoized sweep state to an artifact directory
+    /// (see [`crate::artifact`] for the format and guarantees).
+    pub fn save_artifact(
+        &self,
+        dir: &std::path::Path,
+    ) -> Result<crate::artifact::Manifest, crate::artifact::ArtifactError> {
+        crate::artifact::save(self, dir)
+    }
+
+    /// Warm-start this session from an artifact directory. All-or-nothing:
+    /// on `Err` the session is exactly as before (see [`crate::artifact`]
+    /// for the refuse-to-alias contract).
+    pub fn warm_start(
+        &mut self,
+        dir: &std::path::Path,
+    ) -> Result<crate::artifact::LoadReport, crate::artifact::ArtifactError> {
+        crate::artifact::load(self, dir)
     }
 
     fn coordinator_index(

@@ -169,7 +169,11 @@ fn weights_from_json(j: &Json) -> Result<Vec<(StencilId, f64)>> {
         .collect()
 }
 
-fn citer_to_json(t: &CIterTable) -> Json {
+/// Encode a `C_iter` table as its entry list. Public beyond the wire: the
+/// sweep-artifact shards (`crate::artifact`) persist partition provenance
+/// through these exact codecs, so a table round-trips identically whether it
+/// travels in a request file or a warm-start artifact.
+pub fn citer_to_json(t: &CIterTable) -> Json {
     // The table's own entries, in table order: the paper table serializes
     // exactly as under schema v1 (the six presets), measured tables carry
     // any parametric extras too (v2).
@@ -195,7 +199,8 @@ fn opt_citer_from_json(obj: &Json, key: &str) -> Result<CIterTable> {
     }
 }
 
-fn citer_from_json(j: &Json) -> Result<CIterTable> {
+/// Decode a `C_iter` table (see [`citer_to_json`]).
+pub fn citer_from_json(j: &Json) -> Result<CIterTable> {
     let arr = j.as_arr().ok_or_else(|| anyhow!("citer must be an array"))?;
     let mut pairs = Vec::with_capacity(arr.len());
     for item in arr {
@@ -207,7 +212,10 @@ fn citer_from_json(j: &Json) -> Result<CIterTable> {
     Ok(CIterTable::with_measured(&pairs))
 }
 
-fn solve_opts_to_json(o: &SolveOpts) -> Json {
+/// Encode solver options. Public beyond the wire for the same reason as
+/// [`citer_to_json`]: artifact shards persist their prune partition through
+/// this codec.
+pub fn solve_opts_to_json(o: &SolveOpts) -> Json {
     Json::obj(vec![
         ("all_k", Json::Bool(o.all_k)),
         ("refine", Json::Bool(o.refine)),
@@ -226,7 +234,8 @@ fn get_opt_bool_or(obj: &Json, key: &str, default: bool) -> Result<bool> {
     }
 }
 
-fn solve_opts_from_json(j: &Json) -> Result<SolveOpts> {
+/// Decode solver options (see [`solve_opts_to_json`]).
+pub fn solve_opts_from_json(j: &Json) -> Result<SolveOpts> {
     Ok(SolveOpts {
         all_k: get_bool(j, "all_k")?,
         refine: get_bool(j, "refine")?,

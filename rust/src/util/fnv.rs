@@ -1,0 +1,97 @@
+//! FNV-1a 64-bit — the repo's one stable hash.
+//!
+//! Everything that needs a deterministic, platform-independent 64-bit
+//! digest routes through here: platform fingerprints
+//! ([`PlatformSpec::fingerprint`](crate::platform::PlatformSpec::fingerprint)),
+//! artifact shard checksums and partition digests
+//! ([`artifact`](crate::artifact)). FNV-1a is tiny, has no seed state
+//! (unlike `RandomState`-backed `DefaultHasher`, whose output varies per
+//! process), and its byte-at-a-time structure makes the hashed byte stream
+//! easy to keep stable across refactors — which is the actual contract:
+//! **changing the byte stream of an existing caller invalidates every
+//! persisted fingerprint and artifact in the wild.**
+
+/// The FNV-1a 64-bit offset basis.
+pub const OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// The FNV-1a 64-bit prime.
+pub const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Streaming FNV-1a 64-bit hasher.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64 {
+    state: u64,
+}
+
+impl Default for Fnv64 {
+    fn default() -> Fnv64 {
+        Fnv64::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64 { state: OFFSET_BASIS }
+    }
+
+    /// Absorb raw bytes.
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(PRIME);
+        }
+    }
+
+    /// Absorb one 64-bit word as its little-endian bytes (the word-stream
+    /// convention platform fingerprints use).
+    pub fn write_u64(&mut self, word: u64) {
+        self.write(&word.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// One-shot digest of a byte slice.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_published_fnv1a_vectors() {
+        // Reference vectors from the FNV specification (Noll's test suite).
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn streaming_equals_one_shot() {
+        let mut h = Fnv64::new();
+        h.write(b"foo");
+        h.write(b"bar");
+        assert_eq!(h.finish(), fnv64(b"foobar"));
+    }
+
+    #[test]
+    fn write_u64_is_le_bytes() {
+        let mut a = Fnv64::new();
+        a.write_u64(0x0102_0304_0506_0708);
+        let mut b = Fnv64::new();
+        b.write(&[0x08, 0x07, 0x06, 0x05, 0x04, 0x03, 0x02, 0x01]);
+        assert_eq!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn distinct_streams_distinct_digests() {
+        assert_ne!(fnv64(b"maxwell"), fnv64(b"maxwell+"));
+        assert_ne!(fnv64(&[0, 1]), fnv64(&[1, 0]));
+    }
+}

@@ -10,6 +10,7 @@
 //! * [`regression`] — least-squares linear fits (the paper's calibration tool)
 //! * [`json`] — minimal JSON value model, writer and parser (replaces `serde_json`)
 //! * [`csv`] — CSV table writer
+//! * [`fnv`] — stable FNV-1a 64-bit hash (fingerprints, artifact checksums)
 //! * [`threadpool`] — scoped parallel map + persistent worker pool (replaces `rayon`)
 //! * [`propcheck`] — mini property-based testing harness (replaces `proptest`)
 //! * [`bench`] — mini-criterion used by the `benches/` targets (replaces `criterion`)
@@ -21,6 +22,7 @@ pub mod ascii_plot;
 pub mod bench;
 pub mod cli;
 pub mod csv;
+pub mod fnv;
 pub mod json;
 pub mod prng;
 pub mod propcheck;

@@ -1,0 +1,384 @@
+//! Certification of the persisted-sweep-artifact subsystem.
+//!
+//! The load contract is **certified bit-identity**: a session warm-started
+//! from an artifact must answer every request exactly as a cold session that
+//! recomputes from scratch — points, fronts, tune winners and the
+//! telemetry-visible counters included — while answering repeat grids almost
+//! entirely from the imported cache (≥99% hits). And the refuse-to-alias
+//! contract: every corruption or staleness mode (truncation, byte flip,
+//! edited manifest field, stale platform fingerprint, schema skew, prune
+//! partition mismatch) is rejected with its own distinct error and zero
+//! partial mutation of the receiving session.
+
+use codesign::artifact::{ArtifactError, Manifest, MANIFEST_FILE};
+use codesign::platform::{Platform, PlatformId};
+use codesign::service::{
+    wire, CodesignRequest, CodesignResponse, ScenarioSpec, Session, TuneRequest,
+    WorkloadClass,
+};
+use codesign::stencil::defs::StencilId;
+use codesign::util::fnv::fnv64;
+use codesign::util::json::parse;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+/// A per-test scratch directory under the system temp dir (no tempfile
+/// dependency). Callers remove it when done; leftovers from a killed run are
+/// clobbered on reuse.
+fn scratch_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "codesign-artifact-{tag}-{}-{}",
+        std::process::id(),
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn copy_dir(src: &Path, dst: &Path) {
+    std::fs::create_dir_all(dst).unwrap();
+    for entry in std::fs::read_dir(src).unwrap() {
+        let entry = entry.unwrap();
+        std::fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
+    }
+}
+
+fn on(name: &str) -> PlatformId {
+    Platform::by_name_err(name).expect("test platform").id
+}
+
+fn session_for(id: PlatformId) -> Session {
+    Session::new(Platform::get(id).spec.clone())
+}
+
+fn read_manifest(dir: &Path) -> Manifest {
+    let text = std::fs::read_to_string(dir.join(MANIFEST_FILE)).unwrap();
+    Manifest::from_json(&parse(&text).unwrap(), MANIFEST_FILE).unwrap()
+}
+
+fn write_manifest(dir: &Path, m: &Manifest) {
+    std::fs::write(dir.join(MANIFEST_FILE), m.to_json().to_string_pretty()).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Bit-identity vs cold recompute: platforms × preset + parametric workloads
+// ---------------------------------------------------------------------------
+
+#[test]
+fn warm_started_sessions_answer_bit_identically_across_platforms_and_workloads() {
+    // Three platforms (baseline, bandwidth-tweaked, cache-deletion) × the
+    // 2-D preset mix and the parametric star3d:r2 family. Pareto requests
+    // leave BoundedOut marks in the store, so the artifact round-trips both
+    // entry kinds.
+    for platform in ["maxwell", "maxwell:bw20", "maxwell-nocache"] {
+        let id = on(platform);
+        let requests = vec![
+            CodesignRequest::explore(ScenarioSpec::two_d().quick(16).on_platform(id)),
+            CodesignRequest::explore(
+                ScenarioSpec::new(WorkloadClass::parse("star3d:r2").unwrap())
+                    .quick(6)
+                    .on_platform(id),
+            ),
+            CodesignRequest::pareto(
+                ScenarioSpec::two_d().quick(16).with_area_budget(380.0).on_platform(id),
+            ),
+        ];
+        let dir = scratch_dir("bitident");
+
+        let mut cold = session_for(id);
+        let cold_responses = cold.submit_all(&requests).into_responses();
+        let manifest = cold.save_artifact(&dir).unwrap_or_else(|e| panic!("{platform}: {e}"));
+        assert!(!manifest.shards.is_empty(), "{platform}: artifact must carry shards");
+
+        let mut warm = session_for(id);
+        let rep = warm.warm_start(&dir).unwrap_or_else(|e| panic!("{platform}: {e}"));
+        assert_eq!(rep.shards, manifest.shards.len());
+        assert_eq!(
+            rep.entries_installed,
+            warm.cache_entries(),
+            "{platform}: a fresh session installs every artifact slot"
+        );
+        assert!(rep.bounded_entries > 0, "{platform}: pareto marks must persist");
+
+        let warm_responses = warm.submit_all(&requests).into_responses();
+        assert_eq!(
+            cold_responses, warm_responses,
+            "{platform}: warm answers must be bit-identical to cold recompute \
+             (PartialEq covers every numeric and telemetry field)"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn warm_start_replays_tune_winners_and_serves_repeat_grids_from_cache() {
+    let requests = vec![
+        CodesignRequest::explore(ScenarioSpec::two_d().quick(16)),
+        CodesignRequest::tune(
+            TuneRequest::new(430.0)
+                .pin_n_v(128)
+                .pin_m_sm_kb(96.0)
+                .for_stencil(StencilId::Heat2D),
+        ),
+    ];
+    let dir = scratch_dir("tune");
+
+    let mut cold = session_for(PlatformId::Maxwell);
+    let cold_responses = cold.submit_all(&requests).into_responses();
+    cold.save_artifact(&dir).unwrap();
+
+    let mut warm = session_for(PlatformId::Maxwell);
+    warm.warm_start(&dir).unwrap();
+    let warm_rep = warm.submit_all(&requests);
+    assert_eq!(cold_responses, warm_rep.into_responses(), "tune winner + telemetry replay");
+
+    // The acceptance bar: a warm-started session answers the same request
+    // mix almost entirely from the imported cache.
+    let mut warm2 = session_for(PlatformId::Maxwell);
+    warm2.warm_start(&dir).unwrap();
+    let rep = warm2.submit_all(&requests);
+    assert!(
+        rep.cache_hit_rate() >= 0.99,
+        "warm repeat-hit rate {:.4} must be >= 0.99 ({} lookups)",
+        rep.cache_hit_rate(),
+        rep.lookups()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Load-then-serve == cold-serve on the shipped request file
+// ---------------------------------------------------------------------------
+
+#[test]
+fn load_then_serve_matches_cold_serve_on_shipped_platform_requests() {
+    // The exact flow CI's artifact round-trip job runs: answer the shipped
+    // v3 example file cold, persist the session, warm-start a fresh one and
+    // answer again — the encoded response files must be byte-identical.
+    let text = include_str!("../../examples/platform_requests.json");
+    let requests = wire::decode_requests(text).unwrap();
+    let dir = scratch_dir("serve");
+
+    let mut cold = Session::paper();
+    let cold_responses = cold.submit_all(&requests).into_responses();
+    let cold_encoded = wire::encode_responses(&cold_responses).to_string_compact();
+    cold.save_artifact(&dir).unwrap();
+
+    let mut warm = Session::paper();
+    let rep = warm.warm_start(&dir).unwrap();
+    assert!(rep.entries_installed > 0);
+    let warm_responses = warm.submit_all(&requests).into_responses();
+    let warm_encoded = wire::encode_responses(&warm_responses).to_string_compact();
+    assert_eq!(cold_encoded, warm_encoded, "serve output must be byte-identical");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Corruption / staleness matrix: distinct errors, no partial mutation
+// ---------------------------------------------------------------------------
+
+/// Build one good artifact (exact + bounded entries) to corrupt per case.
+fn build_artifact(dir: &Path) {
+    let mut session = Session::paper();
+    session.submit_all(&[
+        CodesignRequest::explore(ScenarioSpec::two_d().quick(16)),
+        CodesignRequest::pareto(ScenarioSpec::two_d().quick(16).with_area_budget(380.0)),
+    ]);
+    session.save_artifact(dir).unwrap();
+}
+
+/// Attempt a load that must fail; certify the receiving session is untouched
+/// (no partitions created, no cache slots installed, no bounds recorded) and
+/// still serves correctly afterwards.
+fn assert_rejected(dir: &Path, case: &str, check: impl FnOnce(&ArtifactError)) {
+    let mut session = Session::paper();
+    let err = session.warm_start(dir).expect_err(case);
+    check(&err);
+    assert_eq!(session.partitions(), 0, "{case}: no partition may be created");
+    assert_eq!(session.cache_entries(), 0, "{case}: no cache slot may be installed");
+    assert_eq!(session.bounded_entries(), 0, "{case}: no bound may be recorded");
+}
+
+#[test]
+fn every_corruption_and_staleness_mode_is_rejected_distinctly_without_aliasing() {
+    let base = scratch_dir("corrupt-base");
+    build_artifact(&base);
+    let manifest = read_manifest(&base);
+    let shard_file = manifest.shards[0].file.clone();
+    let mut seen = Vec::new();
+
+    // Case 1: truncated payload → TruncatedShard (caught before hashing).
+    {
+        let dir = scratch_dir("trunc");
+        copy_dir(&base, &dir);
+        let bytes = std::fs::read(dir.join(&shard_file)).unwrap();
+        std::fs::write(dir.join(&shard_file), &bytes[..bytes.len() - 10]).unwrap();
+        assert_rejected(&dir, "truncated", |e| {
+            assert!(matches!(e, ArtifactError::TruncatedShard { .. }), "{e}");
+            assert!(e.to_string().contains("bytes"), "{e}");
+            seen.push(std::mem::discriminant(e).clone());
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // Case 2: one flipped byte, same length → ChecksumMismatch.
+    {
+        let dir = scratch_dir("flip");
+        copy_dir(&base, &dir);
+        let mut bytes = std::fs::read(dir.join(&shard_file)).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(dir.join(&shard_file), &bytes).unwrap();
+        assert_rejected(&dir, "flipped byte", |e| {
+            assert!(matches!(e, ArtifactError::ChecksumMismatch { .. }), "{e}");
+            assert!(e.to_string().contains("checksum"), "{e}");
+            seen.push(std::mem::discriminant(e).clone());
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // Case 3: an edited manifest provenance field (platform name) that the
+    // shard's own header contradicts → ManifestShardMismatch naming it.
+    {
+        let dir = scratch_dir("edited");
+        copy_dir(&base, &dir);
+        let mut m = read_manifest(&dir);
+        m.shards[0].platform = "maxwell+".into();
+        write_manifest(&dir, &m);
+        assert_rejected(&dir, "edited manifest platform", |e| {
+            assert!(matches!(
+                e,
+                ArtifactError::ManifestShardMismatch { field: "platform", .. }
+            ), "{e}");
+            assert!(e.to_string().contains("platform"), "{e}");
+            seen.push(std::mem::discriminant(e).clone());
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // Case 4: a stale platform fingerprint — consistently recorded in both
+    // manifest and shard (bytes + checksum re-sealed), but no longer what
+    // the named platform fingerprints to → StaleFingerprint.
+    {
+        let dir = scratch_dir("stale");
+        copy_dir(&base, &dir);
+        let mut m = read_manifest(&dir);
+        let real_fp = m.shards[0].platform_fp;
+        let stale_fp = real_fp ^ 1;
+        let text = std::fs::read_to_string(dir.join(&shard_file)).unwrap();
+        let resealed =
+            text.replace(&format!("{real_fp:016x}"), &format!("{stale_fp:016x}"));
+        assert_ne!(text, resealed, "the shard must carry its fingerprint");
+        std::fs::write(dir.join(&shard_file), &resealed).unwrap();
+        m.shards[0].platform_fp = stale_fp;
+        m.shards[0].bytes = resealed.len() as u64;
+        m.shards[0].checksum = fnv64(resealed.as_bytes());
+        write_manifest(&dir, &m);
+        assert_rejected(&dir, "stale fingerprint", |e| {
+            let ArtifactError::StaleFingerprint { recorded, current, .. } = e else {
+                panic!("stale fingerprint: wrong variant: {e}");
+            };
+            assert_eq!(*recorded, stale_fp);
+            assert_eq!(*current, real_fp);
+            assert!(e.to_string().contains("fingerprint"), "{e}");
+            seen.push(std::mem::discriminant(e).clone());
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // Case 5: wrong artifact schema version → SchemaMismatch.
+    {
+        let dir = scratch_dir("schema");
+        copy_dir(&base, &dir);
+        let mut m = read_manifest(&dir);
+        m.artifact_schema = 99;
+        write_manifest(&dir, &m);
+        assert_rejected(&dir, "wrong schema", |e| {
+            assert!(matches!(e, ArtifactError::SchemaMismatch { found: 99, .. }), "{e}");
+            assert!(e.to_string().contains("schema"), "{e}");
+            seen.push(std::mem::discriminant(e).clone());
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // Case 6: prune partition mismatch — the manifest claims the unpruned
+    // partition while the shard's solver options say pruned → PruneMismatch.
+    {
+        let dir = scratch_dir("prune");
+        copy_dir(&base, &dir);
+        let mut m = read_manifest(&dir);
+        assert!(m.shards[0].prune, "the artifact was swept with pruning on");
+        m.shards[0].prune = false;
+        write_manifest(&dir, &m);
+        assert_rejected(&dir, "prune mismatch", |e| {
+            assert!(matches!(e, ArtifactError::PruneMismatch { .. }), "{e}");
+            assert!(e.to_string().contains("prune"), "{e}");
+            seen.push(std::mem::discriminant(e).clone());
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // Every rejection mode is a *distinct* error variant.
+    for (i, a) in seen.iter().enumerate() {
+        for b in &seen[i + 1..] {
+            assert_ne!(a, b, "corruption cases must map to distinct error variants");
+        }
+    }
+    assert_eq!(seen.len(), 6);
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn failed_load_leaves_a_warm_session_exactly_as_it_was() {
+    // The no-partial-mutation property on a session that already holds
+    // state: a rejected load changes neither entry counts nor the hit/miss
+    // accounting of a subsequent repeat submission.
+    let dir = scratch_dir("warm-reject");
+    build_artifact(&dir);
+    // Corrupt it: schema skew (rejected before any shard is read).
+    let mut m = read_manifest(&dir);
+    m.artifact_schema = 2;
+    write_manifest(&dir, &m);
+
+    let requests = [CodesignRequest::explore(ScenarioSpec::two_d().quick(16))];
+    let mut session = Session::paper();
+    session.submit_all(&requests);
+    let (partitions, entries, bounded) =
+        (session.partitions(), session.cache_entries(), session.bounded_entries());
+
+    let err = session.warm_start(&dir).expect_err("schema skew must reject");
+    assert!(matches!(err, ArtifactError::SchemaMismatch { found: 2, .. }), "{err}");
+    assert_eq!(session.partitions(), partitions);
+    assert_eq!(session.cache_entries(), entries);
+    assert_eq!(session.bounded_entries(), bounded);
+    let rep = session.submit_all(&requests);
+    assert_eq!(rep.cache.misses, 0, "the repeat run must still be all hits");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Inspect
+// ---------------------------------------------------------------------------
+
+#[test]
+fn inspect_verifies_checksums_and_reports_the_manifest() {
+    let dir = scratch_dir("inspect");
+    build_artifact(&dir);
+    let info = codesign::artifact::inspect(&dir).unwrap();
+    assert_eq!(info.artifact_schema, codesign::artifact::ARTIFACT_SCHEMA_VERSION);
+    assert_eq!(info.wire_schema, wire::SCHEMA_VERSION);
+    assert_eq!(info.shards.len(), 1, "one partition → one shard");
+    assert!(info.total_entries() > 0);
+    assert!(info.shards[0].file.starts_with("shard-"));
+
+    // Inspect applies the same integrity gates as load.
+    let mut bytes = std::fs::read(dir.join(&info.shards[0].file)).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(dir.join(&info.shards[0].file), &bytes).unwrap();
+    let err = codesign::artifact::inspect(&dir).expect_err("flipped byte");
+    assert!(matches!(err, ArtifactError::ChecksumMismatch { .. }), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,6 +1,7 @@
 //! Property-based tests over the coordinator-level invariants: Pareto
 //! semantics, optimizer optimality vs brute force, area-model structure,
-//! feasibility-constraint coherence and cache-key identity.
+//! feasibility-constraint coherence, cache-key identity and artifact
+//! persistence (bit-exact slot round-trips, byte-idempotent save→load→save).
 
 use codesign::area::{AreaModel, HwParams};
 use codesign::codesign::pareto::{best_within_area, pareto_front, ParetoFront};
@@ -446,6 +447,237 @@ fn prop_cache_key_identity() {
         let same_relevant = hw1.n_sm == hw2.n_sm && hw1.n_v == hw2.n_v && hw1.m_sm_kb == hw2.m_sm_kb;
         k1 == k1b && ((k1 == k2) == same_relevant)
     });
+}
+
+#[test]
+fn prop_cache_entry_persistence_roundtrips_bit_exactly() {
+    // The persistence surface under the artifact subsystem: every slot kind
+    // (exact solution, memoized infeasibility, BoundedOut mark) must survive
+    // both the JSON payload codec (serialize → text → parse → deserialize)
+    // and a MemoCache export/import across a different shard layout with
+    // every bit intact — including negative zero, infinities, NaN payloads,
+    // subnormals and u64 values past 2^53, which a naive float-through-JSON
+    // path would silently corrupt.
+    use codesign::artifact::payload::{entry_from_json, entry_to_json, key_from_json, key_to_json};
+    use codesign::coordinator::{CacheEntry, CacheKey, MemoCache};
+    use codesign::opt::InnerSolution;
+    use codesign::timemodel::talg::Bound;
+    use codesign::timemodel::TimeEstimate;
+    use codesign::util::json::parse;
+    use codesign::util::prng::Rng;
+
+    fn any_f64(rng: &mut Rng) -> f64 {
+        if rng.bernoulli(0.3) {
+            *rng.choose(&[
+                0.0,
+                -0.0,
+                f64::INFINITY,
+                f64::NEG_INFINITY,
+                f64::NAN,
+                f64::from_bits(0x7ff8_dead_beef_0001), // NaN with payload bits
+                f64::MIN_POSITIVE,
+                f64::MIN_POSITIVE / 8.0, // subnormal
+                f64::MAX,
+                1.0 / 3.0,
+            ])
+        } else {
+            f64::from_bits(rng.next_u64())
+        }
+    }
+
+    fn any_key(rng: &mut Rng, tag: u64) -> CacheKey {
+        CacheKey {
+            platform_fp: rng.next_u64(),
+            n_sm: rng.next_u64() as u32,
+            n_v: rng.next_u64() as u32,
+            m_sm_kb_bits: rng.next_u64(),
+            space_dims: rng.range_u64(2, 3) as u32,
+            sigma: rng.next_u64() as u32,
+            flops_bits: rng.next_u64(),
+            n_buffers_bits: rng.next_u64(),
+            bytes_bits: rng.next_u64(),
+            c_iter_bits: rng.next_u64(),
+            s1: rng.next_u64(),
+            s2: rng.next_u64(),
+            s3: rng.next_u64(),
+            // Embedding the index guarantees key distinctness, so the
+            // export-order comparison below is exact.
+            t: tag,
+        }
+    }
+
+    fn any_entry(rng: &mut Rng) -> CacheEntry {
+        match rng.range_u64(0, 3) {
+            0 => CacheEntry::Exact(None),
+            1 => CacheEntry::BoundedOut { lb_seconds: any_f64(rng) },
+            _ => CacheEntry::Exact(Some(InnerSolution {
+                sw: SoftwareParams::new(
+                    TileSizes {
+                        t_s1: rng.next_u64(),
+                        t_s2: rng.next_u64(),
+                        t_s3: if rng.bernoulli(0.5) { Some(rng.next_u64()) } else { None },
+                        t_t: rng.next_u64(),
+                    },
+                    rng.next_u64() as u32,
+                ),
+                est: TimeEstimate {
+                    cycles: any_f64(rng),
+                    seconds: any_f64(rng),
+                    gflops: any_f64(rng),
+                    m_tile_bytes: any_f64(rng),
+                    compute_cycles: any_f64(rng),
+                    mem_cycles: any_f64(rng),
+                    rounds: any_f64(rng),
+                    bound: *rng.choose(&[Bound::Compute, Bound::Memory, Bound::Latency]),
+                    occupancy: any_f64(rng),
+                },
+                evals: rng.next_u64(),
+            })),
+        }
+    }
+
+    fn entry_bits_eq(a: &CacheEntry, b: &CacheEntry) -> Result<(), String> {
+        match (a, b) {
+            (CacheEntry::Exact(None), CacheEntry::Exact(None)) => Ok(()),
+            (CacheEntry::Exact(Some(x)), CacheEntry::Exact(Some(y))) => {
+                let floats = [
+                    ("cycles", x.est.cycles, y.est.cycles),
+                    ("seconds", x.est.seconds, y.est.seconds),
+                    ("gflops", x.est.gflops, y.est.gflops),
+                    ("m_tile_bytes", x.est.m_tile_bytes, y.est.m_tile_bytes),
+                    ("compute_cycles", x.est.compute_cycles, y.est.compute_cycles),
+                    ("mem_cycles", x.est.mem_cycles, y.est.mem_cycles),
+                    ("rounds", x.est.rounds, y.est.rounds),
+                    ("occupancy", x.est.occupancy, y.est.occupancy),
+                ];
+                for (name, fx, fy) in floats {
+                    if fx.to_bits() != fy.to_bits() {
+                        return Err(format!(
+                            "{name} changed: {:#018x} -> {:#018x}",
+                            fx.to_bits(),
+                            fy.to_bits()
+                        ));
+                    }
+                }
+                if x.sw != y.sw {
+                    return Err(format!("software params changed: {:?} -> {:?}", x.sw, y.sw));
+                }
+                if x.est.bound != y.est.bound {
+                    return Err(format!("bound changed: {:?} -> {:?}", x.est.bound, y.est.bound));
+                }
+                if x.evals != y.evals {
+                    return Err(format!("evals changed: {} -> {}", x.evals, y.evals));
+                }
+                Ok(())
+            }
+            (CacheEntry::BoundedOut { lb_seconds: x }, CacheEntry::BoundedOut { lb_seconds: y }) => {
+                if x.to_bits() == y.to_bits() {
+                    Ok(())
+                } else {
+                    Err(format!("lb_seconds changed: {:#018x} -> {:#018x}", x.to_bits(), y.to_bits()))
+                }
+            }
+            (a, b) => Err(format!("slot kind changed: {a:?} -> {b:?}")),
+        }
+    }
+
+    forall_res(Config::default().cases(100), |rng| {
+        let n = rng.range_u64(1, 24) as usize;
+        let slots: Vec<(CacheKey, CacheEntry)> =
+            (0..n).map(|i| (any_key(rng, i as u64), any_entry(rng))).collect();
+
+        // Leg 1: the JSON payload codec, through actual serialized text.
+        for (key, entry) in &slots {
+            let text = key_to_json(key).to_string_compact();
+            let back = key_from_json(&parse(&text).map_err(|e| format!("key parse: {e}"))?, key.platform_fp)
+                .map_err(|e| format!("key decode: {e}"))?;
+            if back != *key {
+                return Err(format!("key changed across codec: {key:?} -> {back:?}"));
+            }
+            let text = entry_to_json(entry).to_string_compact();
+            let back = entry_from_json(&parse(&text).map_err(|e| format!("entry parse: {e}"))?)
+                .map_err(|e| format!("entry decode: {e}"))?;
+            entry_bits_eq(entry, &back).map_err(|e| format!("payload codec: {e} in {text}"))?;
+        }
+
+        // Leg 2: export/import across a different (random) shard layout.
+        let cache = MemoCache::with_shards(1 << rng.range_u64(0, 4));
+        for (key, entry) in &slots {
+            if !cache.import_entry(*key, *entry) {
+                return Err("import of a vacant slot must report a change".into());
+            }
+        }
+        let exported = cache.export_entries();
+        if exported.len() != slots.len() {
+            return Err(format!("export lost slots: {} -> {}", slots.len(), exported.len()));
+        }
+        let mut expect = slots.clone();
+        expect.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+        for ((ka, ea), (kb, eb)) in expect.iter().zip(exported.iter()) {
+            if ka != kb {
+                return Err(format!("export key order wrong: {ka:?} vs {kb:?}"));
+            }
+            entry_bits_eq(ea, eb).map_err(|e| format!("export/import: {e}"))?;
+        }
+
+        // Re-importing the exported view is a no-op (monotone contract):
+        // exact slots refuse the overwrite, bound marks keep the first mark.
+        for (key, entry) in &exported {
+            if cache.import_entry(*key, *entry) {
+                return Err("re-import of an existing slot must be a no-op".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn certify_artifact_save_load_save_is_byte_idempotent() {
+    // Saving a warm-started session must reproduce the artifact byte-for-byte
+    // — manifest and every shard file — so artifacts can be re-saved, diffed
+    // and content-addressed without drift. This pins the whole deterministic
+    // chain: key-sorted export, BTreeMap-ordered JSON, stable shard naming.
+    use codesign::service::{CodesignRequest, ScenarioSpec, Session};
+
+    let dir_a = std::env::temp_dir()
+        .join(format!("codesign-prop-idem-a-{}", std::process::id()));
+    let dir_b = std::env::temp_dir()
+        .join(format!("codesign-prop-idem-b-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+
+    let requests = vec![
+        CodesignRequest::explore(ScenarioSpec::two_d().quick(12)),
+        // A budgeted Pareto leaves BoundedOut marks, so idempotence covers
+        // both slot kinds.
+        CodesignRequest::pareto(ScenarioSpec::two_d().quick(12).with_area_budget(380.0)),
+    ];
+    let mut cold = Session::paper();
+    cold.submit_all(&requests);
+    cold.save_artifact(&dir_a).expect("save A");
+
+    let mut warm = Session::paper();
+    let rep = warm.warm_start(&dir_a).expect("load A");
+    assert!(rep.entries_installed > 0 && rep.bounded_entries > 0);
+    warm.save_artifact(&dir_b).expect("save B");
+
+    let listing = |dir: &std::path::Path| -> Vec<String> {
+        let mut names: Vec<String> = std::fs::read_dir(dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        names.sort();
+        names
+    };
+    let names_a = listing(&dir_a);
+    assert_eq!(names_a, listing(&dir_b), "same file set");
+    for name in &names_a {
+        let a = std::fs::read(dir_a.join(name)).unwrap();
+        let b = std::fs::read(dir_b.join(name)).unwrap();
+        assert_eq!(a, b, "{name} must be byte-identical across save→load→save");
+    }
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
 }
 
 #[test]
