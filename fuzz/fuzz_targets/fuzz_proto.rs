@@ -1,0 +1,164 @@
+//! Randomized robustness harness for the serve daemon's frame decoder.
+//!
+//! Contract under fuzz: [`decode_frame`] and [`read_frame_line`] must never
+//! panic, never recurse unboundedly, and must classify every input as either
+//! a valid frame or a diagnosable error — on arbitrary bytes, on mutations
+//! of valid frames, and on adversarial shapes (deep nesting, NUL bytes,
+//! truncations, oversized lines, tiny reader buffers).
+//!
+//!     cargo run --manifest-path fuzz/Cargo.toml --release -- [iterations] [seed]
+//!
+//! Defaults: 200_000 iterations, seed 0xC0DE. Any panic is a finding; the
+//! failing case's seed and iteration index are printed on every run so a
+//! repro is one command away.
+
+use codesign::serve::proto::{decode_frame, read_frame_line, FrameLimits, ReadLine};
+use codesign::util::prng::Rng;
+use std::io::BufReader;
+
+/// A well-formed frame to mutate (ids, schema, a small request payload).
+const TEMPLATE: &[u8] = br#"{"id": "fz-1", "schema": 4, "request": {"type": "pareto", "scenario": {"class": "2d", "quick_stride": 8}}}"#;
+
+const INTERESTING: &[u8] = br#"{}[]":,\x00nulltrue1e308"#;
+
+fn mutate(rng: &mut Rng, base: &[u8]) -> Vec<u8> {
+    let mut bytes = base.to_vec();
+    for _ in 0..=rng.index(8) {
+        if bytes.is_empty() {
+            break;
+        }
+        match rng.index(5) {
+            // Flip a byte to anything (including NUL and invalid UTF-8).
+            0 => {
+                let i = rng.index(bytes.len());
+                bytes[i] = rng.range_u64(0, 255) as u8;
+            }
+            // Truncate mid-token.
+            1 => bytes.truncate(rng.index(bytes.len())),
+            // Duplicate a span (breeds repeated keys and nested brackets).
+            2 => {
+                let i = rng.index(bytes.len());
+                let j = i + rng.index(bytes.len() - i);
+                let span: Vec<u8> = bytes[i..j].to_vec();
+                bytes.splice(i..i, span);
+            }
+            // Insert an interesting structural byte.
+            3 => {
+                let i = rng.index(bytes.len() + 1);
+                bytes.insert(i, *rng.choose(INTERESTING));
+            }
+            // Remove a span.
+            _ => {
+                let i = rng.index(bytes.len());
+                let j = i + rng.index(bytes.len() - i);
+                bytes.drain(i..j);
+            }
+        }
+    }
+    bytes
+}
+
+fn raw_noise(rng: &mut Rng) -> Vec<u8> {
+    (0..rng.index(512)).map(|_| rng.range_u64(0, 255) as u8).collect()
+}
+
+fn adversarial(rng: &mut Rng) -> Vec<u8> {
+    match rng.index(4) {
+        // Nesting far past any sane limit — must be rejected by the depth
+        // scan, not by blowing the stack.
+        0 => {
+            let depth = 1_000 + rng.index(200_000);
+            let mut v = br#"{"id": "d", "request": "#.to_vec();
+            v.extend(std::iter::repeat(b'[').take(depth));
+            v
+        }
+        // Brackets inside strings (the depth scan must not count these).
+        1 => {
+            let n = rng.index(4_000);
+            let mut v = br#"{"id": ""#.to_vec();
+            v.extend(std::iter::repeat(b'[').take(n));
+            v.extend(br#"", "request": {"type": "stats"}}"#);
+            v
+        }
+        // A line of NULs.
+        2 => vec![0u8; rng.index(256) + 1],
+        // Escape-sequence soup.
+        _ => {
+            let mut v = br#"{"id": ""#.to_vec();
+            for _ in 0..rng.index(64) {
+                v.extend(br"\");
+                v.push(*rng.choose(b"\"\\/bfnrtuxq"));
+            }
+            v.extend(br#""}"#);
+            v
+        }
+    }
+}
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let iterations: u64 =
+        args.next().and_then(|a| a.parse().ok()).unwrap_or(200_000);
+    let seed: u64 = args.next().and_then(|a| a.parse().ok()).unwrap_or(0xC0DE);
+    println!("fuzz_proto: {iterations} iterations, seed {seed}");
+
+    let limits = FrameLimits::default();
+    let mut rng = Rng::new(seed);
+    let mut decoded_ok = 0u64;
+    let mut errors = 0u64;
+
+    for i in 0..iterations {
+        let line = match rng.index(10) {
+            0..=5 => mutate(&mut rng, TEMPLATE),
+            6..=7 => raw_noise(&mut rng),
+            _ => adversarial(&mut rng),
+        };
+
+        // 1. Single-frame decode: never panics, always classifies.
+        match decode_frame(&line, &limits) {
+            Ok(_) => decoded_ok += 1,
+            Err(e) => {
+                errors += 1;
+                assert!(!e.message.is_empty(), "iteration {i}: empty error message");
+            }
+        }
+
+        // 2. The bounded reader over a chunked stream (tiny buffers exercise
+        //    the fill_buf/consume loop): must terminate and account for every
+        //    byte, whatever the line contents.
+        if i % 16 == 0 {
+            let mut stream = line.clone();
+            stream.push(b'\n');
+            stream.extend_from_slice(&line);
+            let cap = 1 + rng.index(32);
+            let max_line = 1 + rng.index(2 * line.len().max(1));
+            let mut reader = BufReader::with_capacity(cap, &stream[..]);
+            let mut lines = 0usize;
+            loop {
+                match read_frame_line(&mut reader, max_line) {
+                    Ok(ReadLine::Eof) => break,
+                    Ok(ReadLine::Line(_)) | Ok(ReadLine::Oversized { .. }) => {
+                        lines += 1;
+                        assert!(lines <= 2, "iteration {i}: phantom line");
+                    }
+                    Err(e) => panic!("iteration {i}: in-memory read failed: {e}"),
+                }
+            }
+        }
+
+        // The pristine template must always decode — guards against a
+        // mutation harness bug silently fuzzing garbage only.
+        if i % 10_000 == 0 {
+            assert!(
+                decode_frame(TEMPLATE, &limits).is_ok(),
+                "iteration {i}: template no longer decodes"
+            );
+        }
+    }
+
+    println!(
+        "done: {decoded_ok} decoded, {errors} classified errors, 0 panics \
+         ({:.1}% still-valid after mutation)",
+        100.0 * decoded_ok as f64 / iterations as f64
+    );
+}

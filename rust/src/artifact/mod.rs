@@ -62,7 +62,9 @@ pub mod payload;
 pub mod store;
 
 pub use manifest::{Manifest, ShardMeta, ARTIFACT_SCHEMA_VERSION, MANIFEST_FILE};
-pub use store::{inspect, load, save, ArtifactInfo, LoadReport};
+pub use store::{
+    inspect, load, load_partitions, save, ArtifactInfo, DecodedPartition, LoadReport,
+};
 
 /// Everything that can go wrong saving, inspecting or loading an artifact.
 /// Load-side variants are deliberately fine-grained: the corruption test

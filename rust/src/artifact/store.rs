@@ -148,12 +148,16 @@ pub fn save(session: &Session, dir: &Path) -> Result<Manifest, ArtifactError> {
 // Load
 // ---------------------------------------------------------------------------
 
-/// One fully validated, fully decoded shard, ready to absorb.
-struct DecodedShard {
-    platform: PlatformSpec,
-    citer: CIterTable,
-    opts: SolveOpts,
-    entries: Vec<(CacheKey, CacheEntry)>,
+/// One fully validated, fully decoded shard, ready to absorb — the exact
+/// provenance triple plus entry payload [`Session::absorb_partition`] takes.
+/// Public so consumers that hold *several* sessions (the serve daemon keeps
+/// one per partition key) can route each shard to the right one instead of
+/// funnelling everything through a single [`load`] target.
+pub struct DecodedPartition {
+    pub platform: PlatformSpec,
+    pub citer: CIterTable,
+    pub opts: SolveOpts,
+    pub entries: Vec<(CacheKey, CacheEntry)>,
 }
 
 fn read_manifest(dir: &Path) -> Result<Manifest, ArtifactError> {
@@ -206,7 +210,7 @@ fn read_shard_bytes(dir: &Path, meta: &ShardMeta) -> Result<Vec<u8>, ArtifactErr
 
 /// Validate and decode one shard against its manifest record. Pure: no
 /// session state is touched.
-fn decode_shard(dir: &Path, meta: &ShardMeta) -> Result<DecodedShard, ArtifactError> {
+fn decode_shard(dir: &Path, meta: &ShardMeta) -> Result<DecodedPartition, ArtifactError> {
     let bad = |detail: String| ArtifactError::BadShard { file: meta.file.clone(), detail };
     let bytes = read_shard_bytes(dir, meta)?;
     let text = String::from_utf8(bytes).map_err(|e| bad(e.to_string()))?;
@@ -356,7 +360,22 @@ fn decode_shard(dir: &Path, meta: &ShardMeta) -> Result<DecodedShard, ArtifactEr
             shard: bounded.to_string(),
         });
     }
-    Ok(DecodedShard { platform, citer, opts, entries })
+    Ok(DecodedPartition { platform, citer, opts, entries })
+}
+
+/// Read, checksum and fully decode every shard of the artifact in `dir`,
+/// without touching any session. This is [`load`]'s validation front half,
+/// exposed so a multi-session consumer (the serve daemon) can absorb each
+/// partition into its own session; all integrity and staleness gates of the
+/// refuse-to-alias contract run here — only the receiving-session provenance
+/// checks remain for the caller's absorb step.
+pub fn load_partitions(dir: &Path) -> Result<Vec<DecodedPartition>, ArtifactError> {
+    let manifest = read_manifest(dir)?;
+    let mut decoded = Vec::with_capacity(manifest.shards.len());
+    for meta in &manifest.shards {
+        decoded.push(decode_shard(dir, meta)?);
+    }
+    Ok(decoded)
 }
 
 /// Warm-start `session` from the artifact in `dir`.
@@ -366,11 +385,7 @@ fn decode_shard(dir: &Path, meta: &ShardMeta) -> Result<DecodedShard, ArtifactEr
 /// provenance against the receiving coordinator before mutating it — so on
 /// `Err`, the session's caches and their statistics are exactly as before.
 pub fn load(session: &mut Session, dir: &Path) -> Result<LoadReport, ArtifactError> {
-    let manifest = read_manifest(dir)?;
-    let mut decoded = Vec::with_capacity(manifest.shards.len());
-    for meta in &manifest.shards {
-        decoded.push(decode_shard(dir, meta)?);
-    }
+    let decoded = load_partitions(dir)?;
     let mut report = LoadReport::default();
     for shard in &decoded {
         report.exact_entries +=

@@ -27,13 +27,45 @@
 //! themselves are bookkeeping, not lookups: `insert_bound` and
 //! [`MemoCache::bound_of`] touch no counters, and an exact entry is never
 //! downgraded to a bound.
+//!
+//! **Memory budget & eviction.** By default the store is unbounded — the
+//! right default for one-shot batch runs, and the only mode before the
+//! serve daemon existed. A cache built with a [`MemoBudget`] evicts down
+//! to its entry budget whenever an insert pushes it over, under three
+//! rules:
+//!
+//! 1. **Pinned entries are never evicted.** A batch in flight holds a
+//!    [`MemoPin`]; every slot it touches (reads or writes) after the pin
+//!    was taken is stamped with a generation at or above the pin's, and
+//!    eviction only considers slots stamped strictly below the oldest
+//!    live pin. This preserves the batch engine's invariant that its
+//!    serve phase finds every instance its sweep phase populated.
+//! 2. **`BoundedOut` marks evict before `Exact` solutions** (a bound is
+//!    one certified-lower-bound evaluation to reconstruct; an exact slot
+//!    is a full inner solve), and within a segment the oldest-touched
+//!    slots go first.
+//! 3. **Eviction changes cost, never answers.** An evicted instance is
+//!    simply absent: the next demand re-solves it and the deterministic
+//!    solver returns the same value bit-for-bit — certified by the
+//!    daemon's budget differential tests.
+//!
+//! Enforcement is amortized with hysteresis (evict a little *below* the
+//! budget so the O(n) scan pays for many inserts), and a pass that finds
+//! every over-budget slot pinned suspends further scans until a pin drops
+//! — the budget is best-effort while a bigger-than-budget batch is in
+//! flight. Warm starts interact lazily: [`MemoCache::import_entry`] never
+//! triggers eviction, so loading an artifact larger than the budget is
+//! legal and the excess is shed by the first on-budget insert pass.
+//! Conversely the persistence surface ([`MemoCache::export_entries`])
+//! exports exactly what is resident — a snapshot taken after evictions
+//! contains only the survivors.
 
 use crate::area::params::HwParams;
 use crate::opt::inner::{InnerOutcome, InnerSolution};
 use crate::stencil::defs::Stencil;
 use crate::stencil::workload::ProblemSize;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Exact instance key. `f64` fields are stored as bits — they come from
@@ -166,12 +198,122 @@ pub enum CacheEntry {
     },
 }
 
+/// Resident form of a slot: the entry plus the generation stamp of its
+/// last use, which is what segment-aware eviction orders and pins protect.
+#[derive(Clone, Copy, Debug)]
+struct Slot {
+    entry: CacheEntry,
+    touched: u64,
+}
+
+/// Estimated resident bytes per memo slot: key + slot payload + hash-map
+/// bucket overhead. An estimate, not an accounting — it exists so byte
+/// budgets can be expressed without walking allocator internals.
+pub fn entry_footprint_bytes() -> usize {
+    std::mem::size_of::<CacheKey>()
+        + std::mem::size_of::<Slot>()
+        + 2 * std::mem::size_of::<u64>()
+}
+
+/// Entry budget for a [`MemoCache`]. Construct from an entry count
+/// ([`MemoBudget::entries`]) or a byte target ([`MemoBudget::bytes`],
+/// converted through [`entry_footprint_bytes`]). The floor is one entry —
+/// a cache that can hold nothing cannot answer anything.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemoBudget {
+    /// Maximum resident slots (exact solutions and bound marks alike) the
+    /// cache aims to hold. Best-effort while pinned batches are in flight.
+    pub max_entries: usize,
+}
+
+impl MemoBudget {
+    pub fn entries(n: usize) -> MemoBudget {
+        MemoBudget { max_entries: n.max(1) }
+    }
+
+    pub fn bytes(b: usize) -> MemoBudget {
+        MemoBudget::entries(b / entry_footprint_bytes())
+    }
+
+    /// The estimated resident bytes this budget corresponds to.
+    pub fn approx_bytes(&self) -> usize {
+        self.max_entries * entry_footprint_bytes()
+    }
+}
+
+/// Monotonic eviction counters (see [`MemoCache::eviction_snapshot`]).
+#[derive(Debug, Default)]
+pub struct EvictionCounters {
+    pub evicted_exact: AtomicU64,
+    pub evicted_bounded: AtomicU64,
+    pub passes: AtomicU64,
+    pub futile_passes: AtomicU64,
+}
+
+/// A point-in-time copy of the eviction counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EvictionSnapshot {
+    /// Exact slots (solutions and memoized infeasibilities) evicted.
+    pub evicted_exact: u64,
+    /// `BoundedOut` marks evicted.
+    pub evicted_bounded: u64,
+    /// Enforcement passes that scanned the store.
+    pub passes: u64,
+    /// Passes that found every over-budget slot pinned (budget suspended
+    /// until a pin dropped).
+    pub futile_passes: u64,
+}
+
+impl EvictionSnapshot {
+    pub fn evicted(&self) -> u64 {
+        self.evicted_exact + self.evicted_bounded
+    }
+}
+
+/// RAII pin protecting in-flight work from eviction, from
+/// [`MemoCache::pin`]. While the pin lives, every slot touched (read,
+/// inserted, or upgraded) after its creation is ineligible for eviction;
+/// dropping the pin releases them and re-arms budget enforcement.
+pub struct MemoPin<'a> {
+    cache: &'a MemoCache,
+    generation: u64,
+}
+
+impl Drop for MemoPin<'_> {
+    fn drop(&mut self) {
+        let mut pins = self.cache.pins.lock().unwrap();
+        if let Some(i) = pins.iter().position(|g| *g == self.generation) {
+            pins.swap_remove(i);
+        }
+        drop(pins);
+        // A futile pass may have suspended enforcement while this batch
+        // held everything pinned; re-arm it now that slots were released.
+        self.cache.evict_suspended.store(false, Ordering::Relaxed);
+    }
+}
+
 /// The sharded memo store: N-way lock striping keyed by the `CacheKey` hash.
 pub struct MemoCache {
     /// Invariant: `shards.len()` is a power of two (shard selection masks
     /// the key hash).
-    shards: Vec<Mutex<HashMap<CacheKey, CacheEntry>>>,
+    shards: Vec<Mutex<HashMap<CacheKey, Slot>>>,
     pub stats: CacheStats,
+    /// Entry budget; `None` (the default) leaves the store unbounded.
+    budget: Option<MemoBudget>,
+    /// Use-stamp source. Touches stamp the current value; a [`MemoPin`]
+    /// allocates the *next* value, so "touched at or after a live pin's
+    /// generation" is exactly "used by a batch still in flight".
+    generation: AtomicU64,
+    /// Resident slot count, maintained at insert/evict (fast budget probe;
+    /// `len()` stays the exact per-shard sum).
+    resident: AtomicUsize,
+    /// Generations of live pins (unordered; min is the protection floor).
+    pins: Mutex<Vec<u64>>,
+    /// Serializes enforcement passes; contenders skip rather than queue.
+    evict_gate: Mutex<()>,
+    /// Set by a futile pass (everything pinned), cleared on pin drop.
+    evict_suspended: AtomicBool,
+    pub evictions: EvictionCounters,
 }
 
 impl Default for MemoCache {
@@ -189,10 +331,28 @@ impl MemoCache {
     /// two, minimum 1). More stripes buy concurrency at a fixed small memory
     /// cost; the default suits typical core counts.
     pub fn with_shards(n: usize) -> MemoCache {
+        MemoCache::with_shards_and_budget(n, None)
+    }
+
+    /// An unbounded cache (`budget: None`) or one that evicts down to
+    /// `budget` whenever an insert pushes it over — see the module docs
+    /// for the eviction rules.
+    pub fn with_budget(budget: Option<MemoBudget>) -> MemoCache {
+        MemoCache::with_shards_and_budget(DEFAULT_SHARDS, budget)
+    }
+
+    pub fn with_shards_and_budget(n: usize, budget: Option<MemoBudget>) -> MemoCache {
         let n = n.max(1).next_power_of_two();
         MemoCache {
             shards: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
             stats: CacheStats::default(),
+            budget,
+            generation: AtomicU64::new(0),
+            resident: AtomicUsize::new(0),
+            pins: Mutex::new(Vec::new()),
+            evict_gate: Mutex::new(()),
+            evict_suspended: AtomicBool::new(false),
+            evictions: EvictionCounters::default(),
         }
     }
 
@@ -200,11 +360,38 @@ impl MemoCache {
         self.shards.len()
     }
 
-    fn shard(&self, key: &CacheKey) -> &Mutex<HashMap<CacheKey, CacheEntry>> {
+    /// The configured entry budget, if any.
+    pub fn budget(&self) -> Option<MemoBudget> {
+        self.budget
+    }
+
+    fn shard(&self, key: &CacheKey) -> &Mutex<HashMap<CacheKey, Slot>> {
         use std::hash::{Hash, Hasher};
         let mut h = std::collections::hash_map::DefaultHasher::new();
         key.hash(&mut h);
         &self.shards[(h.finish() as usize) & (self.shards.len() - 1)]
+    }
+
+    /// The stamp a touch records: the current generation. Reads of the
+    /// counter are linearized with eviction by the shard locks both sides
+    /// hold — a slot stamped while a pin is live can never scan as below
+    /// that pin's floor.
+    fn stamp(&self) -> u64 {
+        self.generation.load(Ordering::Relaxed)
+    }
+
+    /// Pin the cache for a batch about to run. Everything the batch
+    /// touches from here until the guard drops is protected from eviction.
+    pub fn pin(&self) -> MemoPin<'_> {
+        let generation = self.generation.fetch_add(1, Ordering::Relaxed) + 1;
+        self.pins.lock().unwrap().push(generation);
+        MemoPin { cache: self, generation }
+    }
+
+    /// The oldest live pin generation; slots stamped at or above it are
+    /// protected. `u64::MAX` (everything evictable) when nothing is pinned.
+    fn pin_floor(&self) -> u64 {
+        self.pins.lock().unwrap().iter().copied().min().unwrap_or(u64::MAX)
     }
 
     /// Get the memoized **exact** solution or compute and store it. A
@@ -221,31 +408,52 @@ impl MemoCache {
         key: CacheKey,
         compute: impl FnOnce() -> Option<InnerSolution>,
     ) -> Option<InnerSolution> {
-        if let Some(CacheEntry::Exact(v)) = self.shard(&key).lock().unwrap().get(&key) {
-            self.stats.hits.fetch_add(1, Ordering::Relaxed);
-            return *v;
-        }
-        let v = compute();
-        let mut shard = self.shard(&key).lock().unwrap();
-        match shard.entry(key) {
-            std::collections::hash_map::Entry::Occupied(mut e) => match e.get() {
-                CacheEntry::Exact(v) => {
+        {
+            let mut shard = self.shard(&key).lock().unwrap();
+            if let Some(slot) = shard.get_mut(&key) {
+                if let CacheEntry::Exact(v) = slot.entry {
+                    slot.touched = self.stamp();
                     self.stats.hits.fetch_add(1, Ordering::Relaxed);
-                    *v
+                    return v;
                 }
-                CacheEntry::BoundedOut { .. } => {
-                    // Upgrade: the bound mark never aliases as a solution.
-                    self.stats.misses.fetch_add(1, Ordering::Relaxed);
-                    e.insert(CacheEntry::Exact(v));
-                    v
-                }
-            },
-            std::collections::hash_map::Entry::Vacant(slot) => {
-                self.stats.misses.fetch_add(1, Ordering::Relaxed);
-                slot.insert(CacheEntry::Exact(v));
-                v
             }
         }
+        let v = compute();
+        let mut grew = false;
+        let out = {
+            let mut shard = self.shard(&key).lock().unwrap();
+            let stamp = self.stamp();
+            match shard.entry(key) {
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    let slot = e.get_mut();
+                    match slot.entry {
+                        CacheEntry::Exact(v) => {
+                            slot.touched = stamp;
+                            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                            v
+                        }
+                        CacheEntry::BoundedOut { .. } => {
+                            // Upgrade: the bound mark never aliases as a
+                            // solution.
+                            self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                            *slot = Slot { entry: CacheEntry::Exact(v), touched: stamp };
+                            v
+                        }
+                    }
+                }
+                std::collections::hash_map::Entry::Vacant(slot) => {
+                    self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                    slot.insert(Slot { entry: CacheEntry::Exact(v), touched: stamp });
+                    self.resident.fetch_add(1, Ordering::Relaxed);
+                    grew = true;
+                    v
+                }
+            }
+        };
+        if grew {
+            self.maybe_evict();
+        }
+        out
     }
 
     /// Look up without computing. `None` means the instance was never
@@ -253,13 +461,20 @@ impl MemoCache {
     /// was solved and found infeasible. Counted as a hit or miss like any
     /// other lookup.
     pub fn get(&self, key: &CacheKey) -> Option<Option<InnerSolution>> {
-        let found = self.shard(key).lock().unwrap().get(key).copied();
-        match found {
-            Some(CacheEntry::Exact(v)) => {
-                self.stats.hits.fetch_add(1, Ordering::Relaxed);
-                Some(v)
-            }
-            Some(CacheEntry::BoundedOut { .. }) | None => {
+        let mut shard = self.shard(key).lock().unwrap();
+        match shard.get_mut(key) {
+            Some(slot) => match slot.entry {
+                CacheEntry::Exact(v) => {
+                    slot.touched = self.stamp();
+                    self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                    Some(v)
+                }
+                CacheEntry::BoundedOut { .. } => {
+                    self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                    None
+                }
+            },
+            None => {
                 self.stats.misses.fetch_add(1, Ordering::Relaxed);
                 None
             }
@@ -283,89 +498,126 @@ impl MemoCache {
         solve: impl FnOnce() -> InnerOutcome,
     ) -> InnerOutcome {
         {
-            let shard = self.shard(&key).lock().unwrap();
-            match shard.get(&key) {
-                Some(CacheEntry::Exact(v)) => {
-                    self.stats.hits.fetch_add(1, Ordering::Relaxed);
-                    return match v {
-                        Some(s) => InnerOutcome::Solved(*s),
-                        None => InnerOutcome::Infeasible,
-                    };
-                }
-                Some(CacheEntry::BoundedOut { lb_seconds }) => {
-                    // A recorded bound is a pure property of the instance:
-                    // if it meets this cutoff too, the solve is unneeded.
-                    if let Some(c) = cutoff {
-                        if *lb_seconds >= c {
-                            return InnerOutcome::BoundedOut { bound_seconds: *lb_seconds };
+            let mut shard = self.shard(&key).lock().unwrap();
+            if let Some(slot) = shard.get_mut(&key) {
+                match slot.entry {
+                    CacheEntry::Exact(v) => {
+                        slot.touched = self.stamp();
+                        self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                        return match v {
+                            Some(s) => InnerOutcome::Solved(s),
+                            None => InnerOutcome::Infeasible,
+                        };
+                    }
+                    CacheEntry::BoundedOut { lb_seconds } => {
+                        // A recorded bound is a pure property of the
+                        // instance: if it meets this cutoff too, the solve
+                        // is unneeded.
+                        if let Some(c) = cutoff {
+                            if lb_seconds >= c {
+                                slot.touched = self.stamp();
+                                return InnerOutcome::BoundedOut { bound_seconds: lb_seconds };
+                            }
                         }
                     }
                 }
-                None => {}
             }
         }
         let out = solve();
-        let mut shard = self.shard(&key).lock().unwrap();
-        match shard.entry(key) {
-            std::collections::hash_map::Entry::Occupied(mut e) => match (*e.get(), out) {
-                // Someone exact-solved the key while we worked: their value
-                // wins (deterministic solver — it is the same value).
-                (CacheEntry::Exact(v), _) => {
-                    self.stats.hits.fetch_add(1, Ordering::Relaxed);
-                    match v {
-                        Some(s) => InnerOutcome::Solved(s),
-                        None => InnerOutcome::Infeasible,
+        let mut grew = false;
+        let out = {
+            let mut shard = self.shard(&key).lock().unwrap();
+            let stamp = self.stamp();
+            match shard.entry(key) {
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    let slot = e.get_mut();
+                    match (slot.entry, out) {
+                        // Someone exact-solved the key while we worked:
+                        // their value wins (deterministic solver — it is
+                        // the same value).
+                        (CacheEntry::Exact(v), _) => {
+                            slot.touched = stamp;
+                            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                            match v {
+                                Some(s) => InnerOutcome::Solved(s),
+                                None => InnerOutcome::Infeasible,
+                            }
+                        }
+                        (CacheEntry::BoundedOut { .. }, InnerOutcome::Solved(s)) => {
+                            self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                            *slot = Slot { entry: CacheEntry::Exact(Some(s)), touched: stamp };
+                            InnerOutcome::Solved(s)
+                        }
+                        (CacheEntry::BoundedOut { .. }, InnerOutcome::Infeasible) => {
+                            self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                            *slot = Slot { entry: CacheEntry::Exact(None), touched: stamp };
+                            InnerOutcome::Infeasible
+                        }
+                        // Keep the first mark (they are equal anyway: the
+                        // bound is deterministic per instance).
+                        (CacheEntry::BoundedOut { .. }, out @ InnerOutcome::BoundedOut { .. }) => {
+                            slot.touched = stamp;
+                            out
+                        }
                     }
                 }
-                (CacheEntry::BoundedOut { .. }, InnerOutcome::Solved(s)) => {
-                    self.stats.misses.fetch_add(1, Ordering::Relaxed);
-                    e.insert(CacheEntry::Exact(Some(s)));
-                    InnerOutcome::Solved(s)
-                }
-                (CacheEntry::BoundedOut { .. }, InnerOutcome::Infeasible) => {
-                    self.stats.misses.fetch_add(1, Ordering::Relaxed);
-                    e.insert(CacheEntry::Exact(None));
-                    InnerOutcome::Infeasible
-                }
-                // Keep the first mark (they are equal anyway: the bound is
-                // deterministic per instance).
-                (CacheEntry::BoundedOut { .. }, out @ InnerOutcome::BoundedOut { .. }) => out,
-            },
-            std::collections::hash_map::Entry::Vacant(slot) => {
-                match out {
-                    InnerOutcome::Solved(s) => {
-                        self.stats.misses.fetch_add(1, Ordering::Relaxed);
-                        slot.insert(CacheEntry::Exact(Some(s)));
+                std::collections::hash_map::Entry::Vacant(slot) => {
+                    match out {
+                        InnerOutcome::Solved(s) => {
+                            self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                            slot.insert(Slot { entry: CacheEntry::Exact(Some(s)), touched: stamp });
+                        }
+                        InnerOutcome::Infeasible => {
+                            self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                            slot.insert(Slot { entry: CacheEntry::Exact(None), touched: stamp });
+                        }
+                        InnerOutcome::BoundedOut { bound_seconds } => {
+                            slot.insert(Slot {
+                                entry: CacheEntry::BoundedOut { lb_seconds: bound_seconds },
+                                touched: stamp,
+                            });
+                        }
                     }
-                    InnerOutcome::Infeasible => {
-                        self.stats.misses.fetch_add(1, Ordering::Relaxed);
-                        slot.insert(CacheEntry::Exact(None));
-                    }
-                    InnerOutcome::BoundedOut { bound_seconds } => {
-                        slot.insert(CacheEntry::BoundedOut { lb_seconds: bound_seconds });
-                    }
+                    self.resident.fetch_add(1, Ordering::Relaxed);
+                    grew = true;
+                    out
                 }
-                out
             }
+        };
+        if grew {
+            self.maybe_evict();
         }
+        out
     }
 
     /// Record a certified lower bound for an instance a pruned sweep never
     /// solved. First mark wins; an existing entry of either kind is kept
     /// (exact solutions are never downgraded). Not a lookup — no counters.
     pub fn insert_bound(&self, key: CacheKey, lb_seconds: f64) {
-        self.shard(&key)
-            .lock()
-            .unwrap()
-            .entry(key)
-            .or_insert(CacheEntry::BoundedOut { lb_seconds });
+        let grew = {
+            let mut shard = self.shard(&key).lock().unwrap();
+            match shard.entry(key) {
+                std::collections::hash_map::Entry::Occupied(_) => false,
+                std::collections::hash_map::Entry::Vacant(slot) => {
+                    slot.insert(Slot {
+                        entry: CacheEntry::BoundedOut { lb_seconds },
+                        touched: self.stamp(),
+                    });
+                    self.resident.fetch_add(1, Ordering::Relaxed);
+                    true
+                }
+            }
+        };
+        if grew {
+            self.maybe_evict();
+        }
     }
 
     /// The recorded bound of a `BoundedOut` slot, if that is what the slot
     /// holds. Bookkeeping probe — no counters.
     pub fn bound_of(&self, key: &CacheKey) -> Option<f64> {
         match self.shard(key).lock().unwrap().get(key) {
-            Some(CacheEntry::BoundedOut { lb_seconds }) => Some(*lb_seconds),
+            Some(Slot { entry: CacheEntry::BoundedOut { lb_seconds }, .. }) => Some(*lb_seconds),
             _ => None,
         }
     }
@@ -383,7 +635,7 @@ impl MemoCache {
                 s.lock()
                     .unwrap()
                     .values()
-                    .filter(|e| matches!(e, CacheEntry::Exact(_)))
+                    .filter(|slot| matches!(slot.entry, CacheEntry::Exact(_)))
                     .count()
             })
             .sum()
@@ -398,16 +650,111 @@ impl MemoCache {
         self.len() == 0
     }
 
+    /// A point-in-time copy of the eviction counters.
+    pub fn eviction_snapshot(&self) -> EvictionSnapshot {
+        EvictionSnapshot {
+            evicted_exact: self.evictions.evicted_exact.load(Ordering::Relaxed),
+            evicted_bounded: self.evictions.evicted_bounded.load(Ordering::Relaxed),
+            passes: self.evictions.passes.load(Ordering::Relaxed),
+            futile_passes: self.evictions.futile_passes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Budget trigger, called after any insert that grew the store. Cheap
+    /// when under budget or suspended; at most one enforcement pass runs
+    /// at a time (contenders skip — the winner brings the count down).
+    fn maybe_evict(&self) {
+        let Some(budget) = self.budget else { return };
+        if self.resident.load(Ordering::Relaxed) <= budget.max_entries {
+            return;
+        }
+        if self.evict_suspended.load(Ordering::Relaxed) {
+            return;
+        }
+        let Ok(_gate) = self.evict_gate.try_lock() else { return };
+        // Loop: inserts racing past the held gate skip their own pass, so
+        // the gate holder re-checks until the store is at budget (or a
+        // futile pass suspends enforcement).
+        while self.resident.load(Ordering::Relaxed) > budget.max_entries {
+            if self.enforce_budget(budget) == 0 {
+                break;
+            }
+        }
+    }
+
+    /// One enforcement pass: snapshot evictable candidates shard by shard
+    /// (locks never nest with each other), order them `BoundedOut` first
+    /// then oldest-touched, and remove until the store is a sixteenth
+    /// *below* budget — the hysteresis that amortizes the O(n) scan over
+    /// many subsequent inserts. Removal re-checks each victim under its
+    /// shard lock (same stamp, still below the current pin floor), so a
+    /// slot touched by a batch that pinned after the snapshot survives.
+    /// Returns how many slots it removed.
+    fn enforce_budget(&self, budget: MemoBudget) -> u64 {
+        let target = budget.max_entries - budget.max_entries / 16;
+        let mut need = self.resident.load(Ordering::Relaxed).saturating_sub(target);
+        if need == 0 {
+            return 0;
+        }
+        self.evictions.passes.fetch_add(1, Ordering::Relaxed);
+        let mut candidates: Vec<(usize, CacheKey, u64, bool)> = Vec::new();
+        for (i, shard) in self.shards.iter().enumerate() {
+            let shard = shard.lock().unwrap();
+            let floor = self.pin_floor();
+            for (k, slot) in shard.iter() {
+                if slot.touched < floor {
+                    let bounded = matches!(slot.entry, CacheEntry::BoundedOut { .. });
+                    candidates.push((i, *k, slot.touched, bounded));
+                }
+            }
+        }
+        // Segment policy: bound marks first (one bound evaluation to
+        // reconstruct vs a full inner solve), oldest-touched within a
+        // segment, key order for determinism on ties.
+        candidates.sort_unstable_by_key(|&(_, k, touched, bounded)| (!bounded, touched, k));
+        let (mut evicted_exact, mut evicted_bounded) = (0u64, 0u64);
+        for (i, k, touched, bounded) in candidates {
+            if need == 0 {
+                break;
+            }
+            let mut shard = self.shards[i].lock().unwrap();
+            let floor = self.pin_floor();
+            let still_evictable =
+                matches!(shard.get(&k), Some(slot) if slot.touched == touched && touched < floor);
+            if still_evictable {
+                shard.remove(&k);
+                self.resident.fetch_sub(1, Ordering::Relaxed);
+                if bounded {
+                    evicted_bounded += 1;
+                } else {
+                    evicted_exact += 1;
+                }
+                need -= 1;
+            }
+        }
+        self.evictions.evicted_exact.fetch_add(evicted_exact, Ordering::Relaxed);
+        self.evictions.evicted_bounded.fetch_add(evicted_bounded, Ordering::Relaxed);
+        if evicted_exact + evicted_bounded == 0 {
+            // Every over-budget slot is pinned by in-flight work: the
+            // budget is best-effort until a pin drops, and re-scanning on
+            // every insert until then would be pure overhead.
+            self.evictions.futile_passes.fetch_add(1, Ordering::Relaxed);
+            self.evict_suspended.store(true, Ordering::Relaxed);
+        }
+        evicted_exact + evicted_bounded
+    }
+
     /// Every slot — exact solutions, memoized infeasibilities and bound
     /// marks alike — in deterministic key order (`CacheKey` derives `Ord`
     /// field-wise). This is the persistence surface: a saved artifact's
     /// payload is exactly this sequence, so save→load→save is byte-stable
-    /// regardless of shard layout or insertion history. Bookkeeping, no
-    /// counters.
+    /// regardless of shard layout or insertion history — and under a
+    /// budget it is exactly the *resident* set, evicted slots included
+    /// only if re-solved since. Bookkeeping, no counters.
     pub fn export_entries(&self) -> Vec<(CacheKey, CacheEntry)> {
         let mut out: Vec<(CacheKey, CacheEntry)> = Vec::with_capacity(self.len());
         for shard in &self.shards {
-            out.extend(shard.lock().unwrap().iter().map(|(k, v)| (*k, *v)));
+            out.extend(shard.lock().unwrap().iter().map(|(k, slot)| (*k, slot.entry)));
         }
         out.sort_unstable_by(|a, b| a.0.cmp(&b.0));
         out
@@ -419,21 +766,25 @@ impl MemoCache {
     /// is deterministic — an equal-keyed exact value is the same value).
     /// Returns whether the store changed. Imports are neither hits nor
     /// misses: no counters, so warm-started sessions keep exact accounting
-    /// for the work they actually perform.
+    /// for the work they actually perform. Imports also never trigger
+    /// eviction — a warm start larger than the budget loads whole and
+    /// evicts lazily on the first on-budget insert (see the module docs).
     pub fn import_entry(&self, key: CacheKey, entry: CacheEntry) -> bool {
         let mut shard = self.shard(&key).lock().unwrap();
+        let stamp = self.stamp();
         match shard.entry(key) {
             std::collections::hash_map::Entry::Occupied(mut e) => {
-                match (e.get(), &entry) {
+                match (e.get().entry, &entry) {
                     (CacheEntry::BoundedOut { .. }, CacheEntry::Exact(_)) => {
-                        e.insert(entry);
+                        e.insert(Slot { entry, touched: stamp });
                         true
                     }
                     _ => false,
                 }
             }
             std::collections::hash_map::Entry::Vacant(slot) => {
-                slot.insert(entry);
+                slot.insert(Slot { entry, touched: stamp });
+                self.resident.fetch_add(1, Ordering::Relaxed);
                 true
             }
         }
@@ -722,5 +1073,192 @@ mod tests {
         assert_eq!(cache.len(), 16);
         assert_eq!(snap.misses, 16, "misses must equal distinct instances");
         assert_eq!(snap.lookups(), 8 * 400);
+    }
+
+    // --- budget & eviction -------------------------------------------------
+
+    #[test]
+    fn budget_floors_at_one_entry_and_converts_bytes() {
+        assert_eq!(MemoBudget::entries(0).max_entries, 1);
+        assert_eq!(MemoBudget::entries(7).max_entries, 7);
+        assert_eq!(MemoBudget::bytes(0).max_entries, 1);
+        let per = entry_footprint_bytes();
+        assert!(per > 0);
+        assert_eq!(MemoBudget::bytes(10 * per).max_entries, 10);
+        assert_eq!(MemoBudget::bytes(10 * per).approx_bytes(), 10 * per);
+    }
+
+    #[test]
+    fn unbounded_cache_never_evicts() {
+        let cache = MemoCache::new();
+        for i in 0..200 {
+            cache.get_or_compute(key(i + 1), dummy_solution);
+        }
+        assert_eq!(cache.len(), 200);
+        assert_eq!(cache.eviction_snapshot(), EvictionSnapshot::default());
+    }
+
+    #[test]
+    fn budget_evicts_bounded_marks_before_exact_solutions() {
+        // Budget 8 (hysteresis degenerates: 8/16 == 0, target == 8). Four
+        // bound marks then eight exact slots: the ninth insert must shed a
+        // slot, and the victims must come from the BoundedOut segment.
+        let cache = MemoCache::with_shards_and_budget(4, Some(MemoBudget::entries(8)));
+        for i in 0..4 {
+            cache.insert_bound(key(1000 + i), 0.5);
+        }
+        for i in 0..8 {
+            cache.get_or_compute(key(i + 1), dummy_solution);
+        }
+        assert!(cache.len() <= 8, "budget enforced, got {}", cache.len());
+        let snap = cache.eviction_snapshot();
+        assert!(snap.evicted() >= 4, "four slots over budget were inserted");
+        assert_eq!(snap.evicted_exact, 0, "exact slots survive while bounds remain");
+        assert_eq!(snap.evicted_bounded, snap.evicted());
+        // All exact answers are still resident and still correct.
+        for i in 0..8 {
+            assert!(cache.get(&key(i + 1)).unwrap().is_some());
+        }
+    }
+
+    #[test]
+    fn eviction_prefers_oldest_touched_within_a_segment() {
+        let cache = MemoCache::with_shards_and_budget(1, Some(MemoBudget::entries(4)));
+        for i in 0..4 {
+            cache.get_or_compute(key(i + 1), dummy_solution);
+        }
+        // Refresh keys 1 and 2 by pinning an (empty) epoch boundary first:
+        // the pin bumps the generation, so the re-reads stamp newer than
+        // keys 3 and 4, whose stamps predate it.
+        drop(cache.pin());
+        assert!(cache.get(&key(1)).unwrap().is_some());
+        assert!(cache.get(&key(2)).unwrap().is_some());
+        cache.get_or_compute(key(5), dummy_solution);
+        assert!(cache.len() <= 4);
+        // The freshly-touched keys and the new insert survive; a stale one
+        // was the victim.
+        assert!(cache.bound_of(&key(1)).is_none());
+        let resident: Vec<u32> = cache.export_entries().iter().map(|(k, _)| k.n_v).collect();
+        assert!(resident.contains(&1), "key(1) recently touched");
+        assert!(resident.contains(&2), "key(2) recently touched");
+        assert!(resident.contains(&5), "fresh insert survives");
+    }
+
+    #[test]
+    fn pinned_batch_slots_survive_eviction() {
+        let cache = MemoCache::with_shards_and_budget(2, Some(MemoBudget::entries(4)));
+        // Stale, unpinned population.
+        for i in 0..4 {
+            cache.get_or_compute(key(100 + i), dummy_solution);
+        }
+        let pin = cache.pin();
+        // The in-flight batch touches two fresh instances…
+        cache.get_or_compute(key(1), dummy_solution);
+        cache.get_or_compute(key(2), dummy_solution);
+        // …and enough further traffic arrives to force evictions.
+        for i in 0..6 {
+            cache.insert_bound(key(200 + i), 0.25);
+        }
+        // The batch's serve phase must still find what its sweep touched.
+        assert!(cache.get(&key(1)).unwrap().is_some());
+        assert!(cache.get(&key(2)).unwrap().is_some());
+        let evicted_while_pinned = cache.eviction_snapshot().evicted();
+        assert!(evicted_while_pinned > 0, "unpinned slots were evictable");
+        drop(pin);
+        assert!(cache.get(&key(1)).unwrap().is_some(), "answers survive the pin drop");
+    }
+
+    #[test]
+    fn futile_pass_suspends_until_pin_drops() {
+        let cache = MemoCache::with_shards_and_budget(1, Some(MemoBudget::entries(2)));
+        let pin = cache.pin();
+        // Everything inserted under the pin is protected: the budget is
+        // best-effort and the store legitimately overshoots.
+        for i in 0..6 {
+            cache.get_or_compute(key(i + 1), dummy_solution);
+        }
+        assert_eq!(cache.len(), 6, "pinned slots are never evicted");
+        let snap = cache.eviction_snapshot();
+        assert!(snap.futile_passes >= 1, "over-budget pass found everything pinned");
+        assert_eq!(snap.evicted(), 0);
+        drop(pin);
+        // The next insert re-arms enforcement and sheds the excess.
+        cache.get_or_compute(key(7), dummy_solution);
+        assert!(cache.len() <= 2, "budget enforced after pin drop, got {}", cache.len());
+        assert!(cache.eviction_snapshot().evicted() >= 5);
+    }
+
+    #[test]
+    fn warm_start_imports_evict_lazily() {
+        // An artifact larger than the budget loads whole (imports never
+        // trigger eviction)…
+        let cache = MemoCache::with_shards_and_budget(2, Some(MemoBudget::entries(4)));
+        for i in 0..10 {
+            assert!(cache.import_entry(key(i + 1), CacheEntry::Exact(dummy_solution())));
+        }
+        assert_eq!(cache.len(), 10, "imports are lazy about the budget");
+        assert_eq!(cache.eviction_snapshot().passes, 0);
+        // …and the first on-budget insert sheds the excess.
+        cache.get_or_compute(key(99), dummy_solution);
+        assert!(cache.len() <= 4, "budget enforced on first insert, got {}", cache.len());
+        assert!(cache.eviction_snapshot().evicted() >= 7);
+    }
+
+    #[test]
+    fn eviction_changes_cost_never_answers() {
+        let cache = MemoCache::with_shards_and_budget(1, Some(MemoBudget::entries(2)));
+        let first = cache.get_or_compute(key(1), dummy_solution).unwrap();
+        // Push key(1) out…
+        for i in 0..8 {
+            cache.get_or_compute(key(10 + i), dummy_solution);
+        }
+        // …then demand it again: a recompute (miss), bit-identical value.
+        let before = cache.stats.snapshot();
+        let mut recomputed = false;
+        let again = cache
+            .get_or_compute(key(1), || {
+                recomputed = true;
+                dummy_solution()
+            })
+            .unwrap();
+        assert!(recomputed, "evicted instance must be re-solved");
+        assert_eq!(cache.stats.delta_since(before).misses, 1);
+        assert_eq!(first.est.seconds.to_bits(), again.est.seconds.to_bits());
+        assert_eq!(first.evals, again.evals);
+    }
+
+    #[test]
+    fn export_snapshots_only_resident_slots() {
+        let cache = MemoCache::with_shards_and_budget(1, Some(MemoBudget::entries(3)));
+        for i in 0..9 {
+            cache.get_or_compute(key(i + 1), dummy_solution);
+        }
+        let exported = cache.export_entries();
+        assert_eq!(exported.len(), cache.len(), "export is exactly the resident set");
+        assert!(exported.len() <= 3, "evicted slots are not snapshotted");
+    }
+
+    #[test]
+    fn concurrent_budget_enforcement_keeps_store_consistent() {
+        use std::sync::Arc;
+        let cache = Arc::new(MemoCache::with_shards_and_budget(4, Some(MemoBudget::entries(16))));
+        std::thread::scope(|s| {
+            for t in 0..8u32 {
+                let cache = Arc::clone(&cache);
+                s.spawn(move || {
+                    for i in 0..200u32 {
+                        cache.get_or_compute(key(1 + t * 200 + i), dummy_solution);
+                    }
+                });
+            }
+        });
+        // The resident counter and the exact per-shard sum agree after the
+        // storm (inserts racing the final enforcement pass may leave a
+        // transient overshoot; one quiescent insert settles it).
+        assert_eq!(cache.resident.load(Ordering::Relaxed), cache.len());
+        cache.get_or_compute(key(5000), dummy_solution);
+        assert_eq!(cache.resident.load(Ordering::Relaxed), cache.len());
+        assert!(cache.len() <= 16, "budget holds once quiescent, got {}", cache.len());
+        assert!(cache.eviction_snapshot().evicted() > 0);
     }
 }

@@ -23,7 +23,7 @@ use crate::area::params::HwParams;
 use crate::codesign::pareto::ParetoFront;
 use crate::codesign::scenario::{DesignEval, RefEval, Scenario, ScenarioResult};
 use crate::codesign::space::{enumerate_space, DesignPoint};
-use crate::coordinator::cache::{CacheKey, MemoCache};
+use crate::coordinator::cache::{CacheKey, MemoBudget, MemoCache};
 use crate::opt::bounds::{self, PruneStats};
 use crate::opt::inner::{InnerOutcome, InnerSolution};
 use crate::opt::problem::SolveOpts;
@@ -164,6 +164,14 @@ impl Coordinator {
     /// no reference architectures, out-of-range clock) can reach this, and
     /// failing at construction beats NaN results or a panic mid-request.
     pub fn new(platform: PlatformSpec) -> Coordinator {
+        Coordinator::with_memo_budget(platform, None)
+    }
+
+    /// [`Self::new`] with an optional memo-store budget: `None` keeps the
+    /// cache unbounded (the one-shot default), `Some` caps resident entries
+    /// with segment-aware eviction — see [`MemoCache`]'s module docs for
+    /// the policy and the pinning that keeps in-flight batches safe.
+    pub fn with_memo_budget(platform: PlatformSpec, budget: Option<MemoBudget>) -> Coordinator {
         if let Err(e) = platform.validate() {
             panic!("invalid PlatformSpec for Coordinator: {e}");
         }
@@ -175,7 +183,7 @@ impl Coordinator {
             area_model,
             time_model,
             platform_fp,
-            cache: MemoCache::new(),
+            cache: MemoCache::with_budget(budget),
             prune: PruneCounters::default(),
             solved_under: Mutex::new(None),
             batch_lock: Mutex::new(()),
@@ -277,6 +285,10 @@ impl Coordinator {
         // One batch at a time per coordinator (see `batch_lock`); taken after
         // the cheap validation asserts so a rejected batch cannot poison it.
         let _batch = self.batch_lock.lock().unwrap();
+        // Pin the memo store for the batch: under a budget, everything the
+        // sweep phase touches must still be resident when the serve phase
+        // reads it back (its lookups `expect` presence).
+        let _pin = self.cache.pin();
         let epoch = self.cache.stats.snapshot();
         let prune_epoch = self.prune.snapshot();
         let threads = scenarios.iter().map(|s| s.threads).max().unwrap_or(1).max(1);
@@ -496,6 +508,9 @@ impl Coordinator {
             }
         }
         let _batch = self.batch_lock.lock().unwrap();
+        // Pin for the gated sweep: exact solves and bound marks recorded
+        // along the way must survive until the front is finalized.
+        let _pin = self.cache.pin();
         let prune_epoch = self.prune.snapshot();
         let citer = &scenario.citer;
         let opts = &scenario.solve_opts;
@@ -662,10 +677,10 @@ impl Coordinator {
         }
     }
 
-    /// Solve one gated design point: entries sequentially, each with a
-    /// progressive cutoff (exact values replace bounds as they land, so a
-    /// point can still be bounded out mid-way). Returns `None` when the
-    /// point cannot join the front — infeasible or bounded out.
+    /// Solve one gated design point: a thin adapter over
+    /// [`Self::solve_candidate_gated`] that converts the front's best
+    /// throughput at this point's area into the weighted-seconds budget the
+    /// shared core cuts against.
     #[allow(clippy::too_many_arguments)]
     fn solve_point_gated(
         &self,
@@ -678,11 +693,35 @@ impl Coordinator {
         flops_weighted: f64,
         front_perf: Option<f64>,
     ) -> (Option<(f64, f64)>, u64, PruneStats) {
-        let mut ps = PruneStats::default();
-        let mut evals = 0u64;
         // Weighted-seconds threshold above which the point is dominated.
         let dominated_at =
             front_perf.filter(|_| opts.prune).map(|perf| flops_weighted / perf / 1e9);
+        self.solve_candidate_gated(&pt.hw, entries, chars, citer, opts, entry_bounds, dominated_at)
+    }
+
+    /// The shared progressive-cutoff core behind both objective-driven
+    /// candidate scans — the gated Pareto sweep (per design point, budget =
+    /// the weighted seconds at which the front dominates it) and the
+    /// session's tune path (per candidate, budget = the incumbent's
+    /// weighted seconds). Entries are solved sequentially; as each exact
+    /// value replaces its lower bound, the per-entry cutoff tightens, so a
+    /// candidate can still be bounded out mid-way. When that happens the
+    /// remaining entries' bounds are recorded in the memo store too, so the
+    /// store tells the full story. Returns `None` when the candidate is
+    /// out (bounded or infeasible); `budget_seconds: None` disables the
+    /// cutoffs (every entry solved exactly).
+    pub(crate) fn solve_candidate_gated(
+        &self,
+        hw: &HwParams,
+        entries: &[WorkloadEntry],
+        chars: &[Stencil],
+        citer: &CIterTable,
+        opts: &SolveOpts,
+        entry_bounds: &[f64],
+        budget_seconds: Option<f64>,
+    ) -> (Option<(f64, f64)>, u64, PruneStats) {
+        let mut ps = PruneStats::default();
+        let mut evals = 0u64;
         let mut partial: f64 = entries
             .iter()
             .zip(entry_bounds)
@@ -694,13 +733,14 @@ impl Coordinator {
             if e.weight == 0.0 {
                 continue;
             }
-            let key = CacheKey::new(self.platform_fp, &pt.hw, st, &e.size);
+            let key = CacheKey::new(self.platform_fp, hw, st, &e.size);
             // Progressive cutoff for this entry: what its seconds would
-            // have to reach for the whole point to be dominated, given the
-            // bounds still standing in for the unsolved remainder.
-            let cutoff = dominated_at.map(|d| (d - (partial - e.weight * entry_bounds[j])) / e.weight);
+            // have to reach for the whole candidate to exceed the budget,
+            // given the bounds still standing in for the unsolved remainder.
+            let cutoff =
+                budget_seconds.map(|b| (b - (partial - e.weight * entry_bounds[j])) / e.weight);
             let out = self.cache.get_or_solve_cut(key, cutoff, || {
-                solve_entry_cut(&self.time_model, citer, &pt.hw, e, opts, cutoff, &mut ps)
+                solve_entry_cut(&self.time_model, citer, hw, e, opts, cutoff, &mut ps)
             });
             match out {
                 InnerOutcome::Solved(s) => {
@@ -709,11 +749,11 @@ impl Coordinator {
                     per_entry[j] = Some(s);
                 }
                 InnerOutcome::BoundedOut { .. } => {
-                    // The whole point is dominated; record the remaining
+                    // The whole candidate is out; record the remaining
                     // entries' bounds too, so the store tells the full story.
                     for (jj, ee) in entries.iter().enumerate().skip(j + 1) {
                         if ee.weight > 0.0 {
-                            let k = CacheKey::new(self.platform_fp, &pt.hw, &chars[jj], &ee.size);
+                            let k = CacheKey::new(self.platform_fp, hw, &chars[jj], &ee.size);
                             self.cache.insert_bound(k, entry_bounds[jj]);
                         }
                     }

@@ -33,7 +33,10 @@
 pub mod cache;
 pub mod driver;
 
-pub use cache::{CacheEntry, CacheKey, CacheStats, MemoCache, StatsSnapshot};
+pub use cache::{
+    entry_footprint_bytes, CacheEntry, CacheKey, CacheStats, EvictionSnapshot, MemoBudget,
+    MemoCache, MemoPin, StatsSnapshot,
+};
 pub use driver::{
     BatchReport, Coordinator, GatedFrontPoint, GatedParetoResult, PruneCounters, SweepReport,
 };

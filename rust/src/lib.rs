@@ -20,8 +20,11 @@
 //!   simulator ([`sim`]), PJRT runtime ([`runtime`]), DSE coordinator
 //!   ([`coordinator`]), report generation ([`report`]), the session
 //!   service ([`service`]) — the typed request API everything public
-//!   routes through — and persisted sweep artifacts ([`artifact`]) that
-//!   warm-start a session certified bit-identical to cold recompute.
+//!   routes through — persisted sweep artifacts ([`artifact`]) that
+//!   warm-start a session certified bit-identical to cold recompute, and
+//!   the persistent serve daemon ([`serve`]): a streaming request loop
+//!   with concurrent batch groups, bounded admission and memo-memory
+//!   budgets, all certified to change cost, never answers.
 //!
 //! ## Workloads and platforms beyond the paper
 //!
@@ -47,6 +50,7 @@ pub mod opt;
 pub mod platform;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod service;
 pub mod sim;
 pub mod stencil;

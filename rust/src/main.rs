@@ -5,7 +5,12 @@
 //! `report`, `tune`, `validate`, `solver-cost`) builds typed
 //! [`CodesignRequest`]s and routes them through one [`Session::submit`]
 //! path, so all of them share the warm memo store and the batched sweep
-//! engine; `serve` answers a JSON request file through the same session.
+//! engine; `serve --requests` answers a JSON request file through the same
+//! session, and `serve --listen <stdin|socket>` runs the persistent daemon
+//! ([`codesign::serve`]): newline-delimited request frames in, response
+//! frames streamed back in completion order, with bounded admission
+//! (`--mailbox-depth`), concurrent batch groups (`--max-groups`) and
+//! memo-memory budgets (`--memo-entries` / `--memo-mb`).
 //! Subcommands map onto the experiments DESIGN.md catalogues; `report --all`
 //! regenerates every paper table/figure under `reports/`. The session's
 //! memoized sweeps persist across processes via `artifact save/load/inspect`
@@ -15,6 +20,7 @@
 use codesign::platform::{Platform, DEFAULT_PLATFORM};
 use codesign::report;
 use codesign::runtime::{measure_citer, Engine};
+use codesign::serve::{budget_from_flags, strip_prune, Daemon, DaemonConfig, DaemonReport};
 use codesign::service::{
     wire, CodesignRequest, CodesignResponse, ResponseDetail, ScenarioSpec, Session,
     SubmitReport, TuneRequest, WorkloadClass,
@@ -136,16 +142,21 @@ fn cli() -> Cli {
             },
             Command {
                 name: "serve",
-                about: "answer a JSON request file through one warm session (wire schema v4; v1-v3 accepted)",
+                about: "answer a JSON request file (--requests) or run as a streaming daemon (--listen) through one warm session (wire schema v4; v1-v3 accepted)",
                 opts: vec![
                     platform.clone(),
                     no_prune.clone(),
                     warm_start.clone(),
                     save_artifact.clone(),
-                    OptSpec { name: "requests", takes_value: true, default: None, help: "request file path (required)" },
-                    OptSpec { name: "out", takes_value: true, default: Some("-"), help: "response file path ('-' = stdout)" },
-                    OptSpec { name: "pretty", takes_value: false, default: None, help: "indent the response JSON" },
-                    OptSpec { name: "bench-out", takes_value: true, default: None, help: "write wall/cache/eval stats JSON here" },
+                    OptSpec { name: "requests", takes_value: true, default: None, help: "one-shot mode: request file path" },
+                    OptSpec { name: "listen", takes_value: true, default: None, help: "daemon mode: 'stdin' or a Unix socket path; newline-delimited request frames in, response frames streamed out in completion order" },
+                    OptSpec { name: "mailbox-depth", takes_value: true, default: None, help: "daemon: max outstanding requests before admissions are rejected (default 64)" },
+                    OptSpec { name: "max-groups", takes_value: true, default: None, help: "daemon: concurrently running batch groups (default: worker threads, capped at 8)" },
+                    OptSpec { name: "memo-entries", takes_value: true, default: None, help: "per-partition memo-store budget in entries (evicts beyond it; answers unchanged)" },
+                    OptSpec { name: "memo-mb", takes_value: true, default: None, help: "per-partition memo-store budget in megabytes (exclusive with --memo-entries)" },
+                    OptSpec { name: "out", takes_value: true, default: Some("-"), help: "one-shot: response file path ('-' = stdout)" },
+                    OptSpec { name: "pretty", takes_value: false, default: None, help: "one-shot: indent the response JSON" },
+                    OptSpec { name: "bench-out", takes_value: true, default: None, help: "write wall/cache/eval stats JSON here (daemon: throughput, latency tails, backpressure and eviction counters)" },
                 ],
             },
             Command {
@@ -195,23 +206,6 @@ fn spec_from_args(spec: ScenarioSpec, args: &Args, citer: &CIterTable) -> Scenar
         spec = spec.with_solve_opts(opts);
     }
     spec
-}
-
-/// Force the `--no-prune` audit path onto every solver-option set a decoded
-/// request carries (the `serve --no-prune` knob: same answers, full
-/// evaluation).
-fn strip_prune(req: &mut CodesignRequest) {
-    match req {
-        CodesignRequest::Explore { scenario }
-        | CodesignRequest::Pareto { scenario }
-        | CodesignRequest::WhatIf { scenario, .. } => scenario.solve_opts.prune = false,
-        CodesignRequest::Sensitivity { scenario_2d, scenario_3d, .. } => {
-            scenario_2d.solve_opts.prune = false;
-            scenario_3d.solve_opts.prune = false;
-        }
-        CodesignRequest::Tune(t) => t.solve_opts.prune = false,
-        CodesignRequest::Validate | CodesignRequest::SolverCost { .. } => {}
-    }
 }
 
 /// The platform a request's work is attributed to in bench stats: the
@@ -274,6 +268,113 @@ fn save_artifact_from_args(session: &Session, args: &Args) -> anyhow::Result<()>
             "[artifact] saved {} shard(s), {entries} entr(ies) to {dir}",
             manifest.shards.len()
         );
+    }
+    Ok(())
+}
+
+/// `serve --listen`: run the persistent daemon over stdin or a Unix socket.
+/// Stdin serves one stream and exits at EOF; a socket path accepts
+/// connections sequentially forever — one warm daemon, so every partition's
+/// memo store stays hot across connections.
+fn serve_daemon(
+    listen: &str,
+    platform: &'static Platform,
+    memo_budget: Option<codesign::coordinator::MemoBudget>,
+    args: &Args,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        args.opt("save-artifact").is_none(),
+        "--save-artifact is not supported in daemon mode (the daemon holds one session \
+         per batch group; snapshot sweeps via one-shot serve or `artifact save`)"
+    );
+    let mut config = DaemonConfig::new(platform.spec.clone());
+    config.no_prune = args.flag("no-prune");
+    config.memo_budget = memo_budget;
+    if let Some(d) = args.opt_usize("mailbox-depth") {
+        config.mailbox_depth = d;
+    }
+    if let Some(g) = args.opt_usize("max-groups") {
+        config.max_groups = g;
+    }
+    let daemon = Daemon::new(config);
+    if let Some(dir) = args.opt("warm-start") {
+        let rep = daemon.warm_start(Path::new(dir))?;
+        eprintln!(
+            "[artifact] warm start from {dir}: {} shard(s), {} slot(s) installed \
+             ({} exact, {} bounded)",
+            rep.shards, rep.entries_installed, rep.exact_entries, rep.bounded_entries
+        );
+    }
+    match listen {
+        "stdin" => {
+            let stdin = std::io::stdin();
+            let stdout = std::io::stdout();
+            let mut out = stdout.lock();
+            let report = daemon
+                .run(stdin.lock(), &mut out)
+                .map_err(|e| anyhow::anyhow!("daemon stream error: {e}"))?;
+            drop(out);
+            daemon_stats_line(&report);
+            bench_out_daemon(&report, args)?;
+        }
+        path => {
+            let sock = Path::new(path);
+            if sock.exists() {
+                std::fs::remove_file(sock)
+                    .map_err(|e| anyhow::anyhow!("cannot replace stale socket '{path}': {e}"))?;
+            }
+            let listener = std::os::unix::net::UnixListener::bind(sock)
+                .map_err(|e| anyhow::anyhow!("cannot bind '{path}': {e}"))?;
+            eprintln!(
+                "[serve] listening on {path} (sequential connections, one warm daemon; \
+                 ^C to stop)"
+            );
+            for stream in listener.incoming() {
+                let stream = stream?;
+                let reader = std::io::BufReader::new(stream.try_clone()?);
+                let mut writer = stream;
+                match daemon.run(reader, &mut writer) {
+                    Ok(report) => {
+                        daemon_stats_line(&report);
+                        bench_out_daemon(&report, args)?;
+                    }
+                    // A dropped connection must not kill the daemon.
+                    Err(e) => eprintln!("[serve] connection error: {e}"),
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn daemon_stats_line(report: &DaemonReport) {
+    eprintln!(
+        "[serve] {} response(s) streamed in {:?} ({:.1} req/s): {} line(s) read, \
+         {} malformed, {} rejected, {} stats probe(s), {} error answer(s); \
+         cache {:.1}% hits over {} lookups; {} resident entr(ies) across \
+         {} partition(s), {} evicted",
+        report.responses,
+        report.wall,
+        report.throughput_rps(),
+        report.lines_read,
+        report.error_lines,
+        report.rejected,
+        report.stats_probes,
+        report.error_responses,
+        100.0 * report.cache.hit_rate(),
+        report.cache.lookups(),
+        report.memory.resident_entries,
+        report.memory.partitions,
+        report.memory.eviction.evicted(),
+    );
+}
+
+/// Daemon-mode `--bench-out`: written once per served stream (a socket
+/// daemon overwrites it per connection, leaving the latest figures).
+fn bench_out_daemon(report: &DaemonReport, args: &Args) -> anyhow::Result<()> {
+    if let Some(path) = args.opt("bench-out") {
+        std::fs::write(path, report.bench_json().to_string_pretty())?;
+        eprintln!("wrote {path}");
     }
     Ok(())
 }
@@ -514,9 +615,18 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
             );
         }
         "serve" => {
-            let path = args
-                .opt("requests")
-                .ok_or_else(|| anyhow::anyhow!("serve needs --requests <file.json>"))?;
+            let memo_budget =
+                budget_from_flags(args.opt_usize("memo-entries"), args.opt_f64("memo-mb"))?;
+            if let Some(listen) = args.opt("listen") {
+                anyhow::ensure!(
+                    args.opt("requests").is_none(),
+                    "--listen and --requests are mutually exclusive (daemon vs one-shot)"
+                );
+                return serve_daemon(listen, platform, memo_budget, args);
+            }
+            let path = args.opt("requests").ok_or_else(|| {
+                anyhow::anyhow!("serve needs --requests <file.json> or --listen <stdin|socket>")
+            })?;
             let text = std::fs::read_to_string(path)
                 .map_err(|e| anyhow::anyhow!("cannot read '{path}': {e}"))?;
             let mut requests = wire::decode_requests(&text)?;
@@ -525,7 +635,7 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
                     strip_prune(req);
                 }
             }
-            let mut session = Session::new(platform.spec.clone());
+            let mut session = Session::new(platform.spec.clone()).with_memo_budget(memo_budget);
             warm_start_from_args(&mut session, args)?;
             let rep = session.submit_all(&requests);
             session_stats_line(&session, &rep);

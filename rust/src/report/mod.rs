@@ -1,6 +1,6 @@
 //! Report generation: every table and figure of the paper's evaluation is
 //! regenerated as CSV (data), SVG (plot) and an ASCII summary, written under
-//! `reports/` (see DESIGN.md §7 for the experiment index).
+//! `reports/` (see DESIGN.md §8 for the target index).
 
 pub mod fig2;
 pub mod fig3;

@@ -1,0 +1,830 @@
+//! The long-running serve daemon: a streaming request loop over [`Session`].
+//!
+//! [`Daemon::run`] reads newline-delimited request frames ([`super::proto`])
+//! continuously from any `BufRead` (stdin, a Unix-socket connection, an
+//! in-process pipe in tests), answers them on worker threads, and streams
+//! each response frame back the moment its request completes — tagged by the
+//! client's `id`, **not** in arrival order.
+//!
+//! # Concurrency model
+//!
+//! The daemon keys every request to its compatible batch group — the
+//! `(platform fingerprint, C_iter table, solver options)` partition triple
+//! PR 2's session partitioning defined — and holds **one [`Session`] per
+//! partition key**, each behind its own mutex. Requests for different
+//! partitions run fully concurrently (their coordinators share nothing);
+//! requests for the same partition serialize on its session, which is
+//! exactly the batch-compatibility constraint. `Validate`/`SolverCost`
+//! requests touch no coordinator and ride a separate direct-lane session.
+//! A counting gate caps concurrently-running groups at
+//! [`DaemonConfig::max_groups`]; inside a group, the coordinator's own
+//! data-parallel sweep (the existing thread pool) is untouched.
+//!
+//! One deliberate cost: a `Sensitivity` request spans two scenarios but is
+//! keyed by its 2-D scenario, so when its 3-D scenario names a different
+//! platform the daemon may build a coordinator that duplicates one living
+//! in another partition session. That duplicates *work*, never answers —
+//! the memo stores can't alias, so results stay bit-identical to one-shot
+//! serving either way.
+//!
+//! # Backpressure
+//!
+//! Admission is explicit: a bounded [`Mailbox`] caps **outstanding** work
+//! (queued + in-flight). When full, the request is answered immediately
+//! with a `rejected: "overloaded"` frame carrying the mailbox counters, and
+//! in-flight work is untouched. A `{"type": "stats"}` probe is answered
+//! synchronously by the reader thread — it bypasses the mailbox and never
+//! blocks behind a running solve (its memory figures are the post-request
+//! mirrors, not a live cache walk, for the same reason).
+//!
+//! # Bit-identity
+//!
+//! Answers equal one-shot `serve --requests` for the same request set: the
+//! response payload is the same [`wire`](crate::service::wire) encoding of
+//! the same [`Session`] answer, partitions can't alias each other's memo
+//! stores, and a memo budget changes only *where* answers come from (cache
+//! vs re-solve), never what they are. `integration_daemon.rs` certifies
+//! this under 1 and 8 threads, including budgets small enough to evict.
+
+use crate::artifact::{self, ArtifactError, LoadReport};
+use crate::coordinator::{entry_footprint_bytes, EvictionSnapshot, MemoBudget, StatsSnapshot};
+use crate::opt::problem::SolveOpts;
+use crate::platform::registry::{Platform, PlatformId};
+use crate::platform::spec::PlatformSpec;
+use crate::serve::evict::{memory_telemetry, MemoryTelemetry};
+use crate::serve::mailbox::{Mailbox, MailboxSnapshot};
+use crate::serve::proto::{
+    decode_frame, error_frame, read_frame_line, rejected_frame, response_frame, stats_frame,
+    Frame, FrameLimits, ReadLine,
+};
+use crate::service::request::{CodesignRequest, CodesignResponse};
+use crate::service::{Session, SubmitReport};
+use crate::timemodel::citer::CIterTable;
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+use crate::util::threadpool::default_threads;
+use std::io::{BufRead, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Force the `--no-prune` audit path onto every solver-option set a decoded
+/// request carries: same answers, full evaluation. Shared by one-shot
+/// `serve --requests` and the daemon (where it runs at admission, *before*
+/// partition keying — pruned and unpruned option sets are distinct keys).
+pub fn strip_prune(req: &mut CodesignRequest) {
+    match req {
+        CodesignRequest::Explore { scenario }
+        | CodesignRequest::Pareto { scenario }
+        | CodesignRequest::WhatIf { scenario, .. } => scenario.solve_opts.prune = false,
+        CodesignRequest::Sensitivity { scenario_2d, scenario_3d, .. } => {
+            scenario_2d.solve_opts.prune = false;
+            scenario_3d.solve_opts.prune = false;
+        }
+        CodesignRequest::Tune(t) => t.solve_opts.prune = false,
+        CodesignRequest::Validate | CodesignRequest::SolverCost { .. } => {}
+    }
+}
+
+/// Daemon tuning knobs. Every field has a serving-sane default; the CLI maps
+/// `--mailbox-depth`, `--max-groups`, `--memo-entries`/`--memo-mb` and
+/// `--no-prune` onto it.
+#[derive(Clone, Debug)]
+pub struct DaemonConfig {
+    /// The platform requests run on when they name none.
+    pub default_platform: PlatformSpec,
+    /// Outstanding-request bound (queued + in-flight) before admissions are
+    /// answered `rejected`.
+    pub mailbox_depth: usize,
+    /// Concurrently-running batch groups (each group still parallelizes
+    /// internally over the sweep pool).
+    pub max_groups: usize,
+    /// Per-partition memo-store budget; `None` = unbounded.
+    pub memo_budget: Option<MemoBudget>,
+    /// Strip pruning from every admitted request (the `--no-prune` audit
+    /// knob).
+    pub no_prune: bool,
+    /// Hostile-input bounds for the frame decoder.
+    pub limits: FrameLimits,
+}
+
+impl DaemonConfig {
+    pub fn new(default_platform: PlatformSpec) -> DaemonConfig {
+        DaemonConfig {
+            default_platform,
+            mailbox_depth: 64,
+            max_groups: default_threads().clamp(1, 8),
+            memo_budget: None,
+            no_prune: false,
+            limits: FrameLimits::default(),
+        }
+    }
+
+    /// A daemon on the paper's default platform.
+    pub fn paper() -> DaemonConfig {
+        DaemonConfig::new(Platform::default_spec().clone())
+    }
+}
+
+/// One partition: its key triple, its session, and post-request telemetry
+/// mirrors the stats probe can read without touching the session lock.
+struct Partition {
+    fp: u64,
+    citer: CIterTable,
+    opts: SolveOpts,
+    session: Mutex<Session>,
+    resident: AtomicUsize,
+    bounded: AtomicUsize,
+    evicted: AtomicU64,
+}
+
+/// Per-run counters, all updated atomically from reader and worker threads.
+#[derive(Default)]
+struct RunCounters {
+    lines_read: AtomicU64,
+    responses: AtomicU64,
+    error_lines: AtomicU64,
+    rejected: AtomicU64,
+    stats_probes: AtomicU64,
+    error_responses: AtomicU64,
+    write_errors: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    unique_instances: AtomicU64,
+}
+
+/// A counting semaphore bounding concurrently-running batch groups.
+struct Gate {
+    permits: Mutex<usize>,
+    freed: Condvar,
+}
+
+impl Gate {
+    fn new(n: usize) -> Gate {
+        Gate { permits: Mutex::new(n.max(1)), freed: Condvar::new() }
+    }
+
+    fn acquire(&self) {
+        let mut p = self.permits.lock().unwrap();
+        while *p == 0 {
+            p = self.freed.wait(p).unwrap();
+        }
+        *p -= 1;
+    }
+
+    fn release(&self) {
+        *self.permits.lock().unwrap() += 1;
+        self.freed.notify_one();
+    }
+}
+
+/// An admitted request on its way to a worker.
+struct Job {
+    id: String,
+    request: CodesignRequest,
+    admitted: Instant,
+}
+
+enum Lane {
+    /// A scenario/tune request, keyed to its compatible batch group.
+    Partition(u64, CIterTable, SolveOpts),
+    /// Validate / SolverCost: no coordinator state, separate session.
+    Direct,
+}
+
+/// What one [`Daemon::run`] observed, plus the daemon's end-of-run memory
+/// picture. `latencies_ms` is per answered request, admission to response
+/// written.
+pub struct DaemonReport {
+    pub lines_read: u64,
+    pub responses: u64,
+    pub error_lines: u64,
+    pub rejected: u64,
+    pub stats_probes: u64,
+    /// Answered requests whose response was a wire-level `error`.
+    pub error_responses: u64,
+    pub write_errors: u64,
+    pub wall: Duration,
+    pub latencies_ms: Vec<f64>,
+    pub mailbox: MailboxSnapshot,
+    pub cache: StatsSnapshot,
+    pub unique_instances: u64,
+    pub memory: MemoryTelemetry,
+}
+
+impl DaemonReport {
+    pub fn throughput_rps(&self) -> f64 {
+        let s = self.wall.as_secs_f64();
+        if s > 0.0 {
+            self.responses as f64 / s
+        } else {
+            0.0
+        }
+    }
+
+    /// The `BENCH_serve_daemon.json` payload: throughput, latency tails, hit
+    /// rate, eviction and backpressure counters.
+    pub fn bench_json(&self) -> Json {
+        let (p50, p95) = if self.latencies_ms.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (percentile(&self.latencies_ms, 50.0), percentile(&self.latencies_ms, 95.0))
+        };
+        Json::obj(vec![
+            ("mode", Json::str("daemon")),
+            ("lines_read", Json::Num(self.lines_read as f64)),
+            ("responses", Json::Num(self.responses as f64)),
+            ("error_lines", Json::Num(self.error_lines as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("stats_probes", Json::Num(self.stats_probes as f64)),
+            ("error_responses", Json::Num(self.error_responses as f64)),
+            ("write_errors", Json::Num(self.write_errors as f64)),
+            ("wall_ms", Json::Num(self.wall.as_secs_f64() * 1e3)),
+            ("throughput_rps", Json::Num(self.throughput_rps())),
+            ("latency_p50_ms", Json::Num(p50)),
+            ("latency_p95_ms", Json::Num(p95)),
+            ("cache_hit_rate", Json::Num(self.cache.hit_rate())),
+            ("lookups", Json::Num(self.cache.lookups() as f64)),
+            ("unique_instances", Json::Num(self.unique_instances as f64)),
+            ("mailbox", self.mailbox.to_json()),
+            ("memory", self.memory.to_json()),
+        ])
+    }
+}
+
+/// The persistent serve daemon. Construct once, [`Daemon::run`] per stream
+/// (a Unix-socket accept loop reuses one daemon across connections, keeping
+/// every partition warm).
+pub struct Daemon {
+    config: DaemonConfig,
+    partitions: Mutex<Vec<Arc<Partition>>>,
+    direct: Mutex<Session>,
+}
+
+impl Daemon {
+    pub fn new(config: DaemonConfig) -> Daemon {
+        let direct = Session::new(config.default_platform.clone());
+        Daemon { config, partitions: Mutex::new(Vec::new()), direct: Mutex::new(direct) }
+    }
+
+    pub fn config(&self) -> &DaemonConfig {
+        &self.config
+    }
+
+    fn resolve_platform(&self, id: Option<PlatformId>) -> PlatformSpec {
+        match id {
+            Some(id) => Platform::get(id).spec.clone(),
+            None => self.config.default_platform.clone(),
+        }
+    }
+
+    fn lane_of(&self, req: &CodesignRequest) -> Lane {
+        match req {
+            CodesignRequest::Explore { scenario }
+            | CodesignRequest::Pareto { scenario }
+            | CodesignRequest::WhatIf { scenario, .. } => Lane::Partition(
+                self.resolve_platform(scenario.platform).fingerprint(),
+                scenario.citer.clone(),
+                scenario.solve_opts.clone(),
+            ),
+            CodesignRequest::Sensitivity { scenario_2d, .. } => Lane::Partition(
+                self.resolve_platform(scenario_2d.platform).fingerprint(),
+                scenario_2d.citer.clone(),
+                scenario_2d.solve_opts.clone(),
+            ),
+            CodesignRequest::Tune(t) => Lane::Partition(
+                self.resolve_platform(t.platform).fingerprint(),
+                t.citer.clone(),
+                t.solve_opts.clone(),
+            ),
+            CodesignRequest::Validate | CodesignRequest::SolverCost { .. } => Lane::Direct,
+        }
+    }
+
+    /// Find or create the partition for a key triple. Lock order everywhere:
+    /// the partitions list first, then (after the list lock is dropped) one
+    /// partition's session — never a session inside the list lock.
+    fn partition_for(&self, fp: u64, citer: &CIterTable, opts: &SolveOpts) -> Arc<Partition> {
+        let mut parts = self.partitions.lock().unwrap();
+        if let Some(p) =
+            parts.iter().find(|p| p.fp == fp && p.citer == *citer && p.opts == *opts)
+        {
+            return Arc::clone(p);
+        }
+        let session = Session::new(self.config.default_platform.clone())
+            .with_memo_budget(self.config.memo_budget);
+        let p = Arc::new(Partition {
+            fp,
+            citer: citer.clone(),
+            opts: opts.clone(),
+            session: Mutex::new(session),
+            resident: AtomicUsize::new(0),
+            bounded: AtomicUsize::new(0),
+            evicted: AtomicU64::new(0),
+        });
+        parts.push(Arc::clone(&p));
+        p
+    }
+
+    /// Warm-start the daemon from a sweep artifact: every shard is decoded
+    /// and integrity-checked up front ([`artifact::load_partitions`]), then
+    /// routed to its own partition session. Call before serving begins — on
+    /// a fresh daemon every receiving partition is new, so the per-shard
+    /// provenance absorb cannot conflict partway.
+    pub fn warm_start(&self, dir: &Path) -> Result<LoadReport, ArtifactError> {
+        let decoded = artifact::load_partitions(dir)?;
+        let mut report = LoadReport::default();
+        for shard in decoded {
+            let exact = shard
+                .entries
+                .iter()
+                .filter(|(_, e)| matches!(e, crate::coordinator::CacheEntry::Exact(_)))
+                .count();
+            report.exact_entries += exact;
+            report.bounded_entries += shard.entries.len() - exact;
+            let part = self.partition_for(shard.platform.fingerprint(), &shard.citer, &shard.opts);
+            let mut session = part.session.lock().unwrap();
+            let installed = session
+                .absorb_partition(&shard.platform, &shard.citer, &shard.opts, &shard.entries)
+                .map_err(|e| ArtifactError::PartitionConflict { detail: format!("{e:#}") })?;
+            part.resident.store(session.cache_entries(), Ordering::Relaxed);
+            part.bounded.store(session.bounded_entries(), Ordering::Relaxed);
+            report.entries_installed += installed;
+            report.shards += 1;
+        }
+        Ok(report)
+    }
+
+    /// Answer one admitted request on its lane. Returns the wire response;
+    /// telemetry lands in `counters` and the partition mirrors.
+    fn answer(&self, request: &CodesignRequest, counters: &RunCounters) -> CodesignResponse {
+        let absorb = |rep: &SubmitReport| {
+            counters.hits.fetch_add(rep.cache.hits, Ordering::Relaxed);
+            counters.misses.fetch_add(rep.cache.misses, Ordering::Relaxed);
+            counters.unique_instances.fetch_add(rep.unique_instances as u64, Ordering::Relaxed);
+        };
+        match self.lane_of(request) {
+            Lane::Direct => {
+                let mut session = self.direct.lock().unwrap();
+                let rep = session.submit_all(std::slice::from_ref(request));
+                absorb(&rep);
+                rep.into_responses().pop().expect("one request in, one response out")
+            }
+            Lane::Partition(fp, citer, opts) => {
+                let part = self.partition_for(fp, &citer, &opts);
+                let mut session = part.session.lock().unwrap();
+                let rep = session.submit_all(std::slice::from_ref(request));
+                absorb(&rep);
+                part.resident.store(session.cache_entries(), Ordering::Relaxed);
+                part.bounded.store(session.bounded_entries(), Ordering::Relaxed);
+                part.evicted.store(session.eviction_total().evicted(), Ordering::Relaxed);
+                rep.into_responses().pop().expect("one request in, one response out")
+            }
+        }
+    }
+
+    /// The live `stats` probe body: run counters, mailbox state, and the
+    /// post-request memory mirrors — no session lock is taken, so a probe
+    /// never waits behind an in-flight solve.
+    fn live_stats(&self, mailbox: &Mailbox<Job>, c: &RunCounters) -> Json {
+        let parts = self.partitions.lock().unwrap();
+        let partitions = parts.len();
+        let resident: usize = parts.iter().map(|p| p.resident.load(Ordering::Relaxed)).sum();
+        let bounded: usize = parts.iter().map(|p| p.bounded.load(Ordering::Relaxed)).sum();
+        let evicted: u64 = parts.iter().map(|p| p.evicted.load(Ordering::Relaxed)).sum();
+        drop(parts);
+        let (hits, misses) =
+            (c.hits.load(Ordering::Relaxed), c.misses.load(Ordering::Relaxed));
+        let cache = StatsSnapshot { hits, misses };
+        Json::obj(vec![
+            ("mailbox", mailbox.snapshot().to_json()),
+            ("responses", Json::Num(c.responses.load(Ordering::Relaxed) as f64)),
+            ("error_lines", Json::Num(c.error_lines.load(Ordering::Relaxed) as f64)),
+            ("rejected", Json::Num(c.rejected.load(Ordering::Relaxed) as f64)),
+            ("partitions", Json::Num(partitions as f64)),
+            ("resident_entries", Json::Num(resident as f64)),
+            ("bounded_entries", Json::Num(bounded as f64)),
+            ("evicted", Json::Num(evicted as f64)),
+            ("cache_hits", Json::Num(hits as f64)),
+            ("cache_misses", Json::Num(misses as f64)),
+            ("cache_hit_rate", Json::Num(cache.hit_rate())),
+            (
+                "memo_budget_entries",
+                match self.config.memo_budget {
+                    Some(b) => Json::Num(b.max_entries as f64),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// End-of-run memory telemetry, summed over every partition session plus
+    /// the direct lane (locks each session; call only when workers are done).
+    fn memory_total(&self) -> MemoryTelemetry {
+        let mut total = MemoryTelemetry {
+            partitions: 0,
+            resident_entries: 0,
+            bounded_entries: 0,
+            budget_entries: self.config.memo_budget.map(|b| b.max_entries),
+            approx_resident_bytes: 0,
+            eviction: EvictionSnapshot::default(),
+        };
+        let parts = self.partitions.lock().unwrap();
+        for p in parts.iter() {
+            let session = p.session.lock().unwrap();
+            let t = memory_telemetry(&session);
+            total.partitions += t.partitions;
+            total.resident_entries += t.resident_entries;
+            total.bounded_entries += t.bounded_entries;
+            total.eviction.evicted_exact += t.eviction.evicted_exact;
+            total.eviction.evicted_bounded += t.eviction.evicted_bounded;
+            total.eviction.passes += t.eviction.passes;
+            total.eviction.futile_passes += t.eviction.futile_passes;
+        }
+        total.approx_resident_bytes = total.resident_entries * entry_footprint_bytes();
+        total
+    }
+
+    /// Serve one request stream to completion: read frames until EOF, answer
+    /// concurrently, stream responses (in completion order) to `output`.
+    ///
+    /// Write failures never abort in-flight work — they are counted in
+    /// [`DaemonReport::write_errors`] (a client that hung up mid-stream
+    /// shouldn't kill work other clients of a shared daemon are waiting on).
+    /// Read errors abort after draining what was already admitted.
+    pub fn run<R: BufRead, W: Write + Send>(
+        &self,
+        mut input: R,
+        output: &mut W,
+    ) -> std::io::Result<DaemonReport> {
+        let t0 = Instant::now();
+        let mailbox: Mailbox<Job> = Mailbox::new(self.config.mailbox_depth);
+        let gate = Gate::new(self.config.max_groups);
+        let writer = Mutex::new(output);
+        let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+        let counters = RunCounters::default();
+        let mut read_error: Option<std::io::Error> = None;
+
+        std::thread::scope(|scope| {
+            let dispatcher = {
+                let (mailbox, gate, writer, latencies, counters) =
+                    (&mailbox, &gate, &writer, &latencies, &counters);
+                let daemon = self;
+                scope.spawn(move || {
+                    // Claim a group slot *before* spawning, so at most
+                    // `max_groups` workers ever exist; the worker releases it.
+                    while let Some(job) = mailbox.recv() {
+                        gate.acquire();
+                        scope.spawn(move || {
+                            let response = daemon.answer(&job.request, counters);
+                            if response.is_error() {
+                                counters.error_responses.fetch_add(1, Ordering::Relaxed);
+                            }
+                            write_line(writer, &response_frame(&job.id, &response), counters);
+                            counters.responses.fetch_add(1, Ordering::Relaxed);
+                            latencies
+                                .lock()
+                                .unwrap()
+                                .push(job.admitted.elapsed().as_secs_f64() * 1e3);
+                            mailbox.complete();
+                            gate.release();
+                        });
+                    }
+                })
+            };
+
+            let mut line_no = 0u64;
+            loop {
+                let read = match read_frame_line(&mut input, self.config.limits.max_line_bytes) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        read_error = Some(e);
+                        break;
+                    }
+                };
+                match read {
+                    ReadLine::Eof => break,
+                    ReadLine::Oversized { consumed } => {
+                        line_no += 1;
+                        counters.lines_read.fetch_add(1, Ordering::Relaxed);
+                        counters.error_lines.fetch_add(1, Ordering::Relaxed);
+                        let msg = format!(
+                            "line exceeds {} bytes (got {consumed})",
+                            self.config.limits.max_line_bytes
+                        );
+                        write_line(&writer, &error_frame(line_no, None, &msg), &counters);
+                    }
+                    ReadLine::Line(bytes) => {
+                        line_no += 1;
+                        if bytes.iter().all(|b| b.is_ascii_whitespace()) {
+                            continue; // blank lines are inter-frame padding
+                        }
+                        counters.lines_read.fetch_add(1, Ordering::Relaxed);
+                        match decode_frame(&bytes, &self.config.limits) {
+                            Err(fe) => {
+                                counters.error_lines.fetch_add(1, Ordering::Relaxed);
+                                write_line(
+                                    &writer,
+                                    &error_frame(line_no, fe.id.as_deref(), &fe.message),
+                                    &counters,
+                                );
+                            }
+                            Ok(Frame::Stats { id }) => {
+                                counters.stats_probes.fetch_add(1, Ordering::Relaxed);
+                                let body = self.live_stats(&mailbox, &counters);
+                                write_line(&writer, &stats_frame(&id, body), &counters);
+                            }
+                            Ok(Frame::Request { id, mut request }) => {
+                                if self.config.no_prune {
+                                    strip_prune(&mut request);
+                                }
+                                let job = Job { id, request, admitted: Instant::now() };
+                                if let Err(job) = mailbox.try_send(job) {
+                                    counters.rejected.fetch_add(1, Ordering::Relaxed);
+                                    write_line(
+                                        &writer,
+                                        &rejected_frame(&job.id, mailbox.snapshot().to_json()),
+                                        &counters,
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // EOF (or a read error): stop admissions, drain what's in.
+            mailbox.close();
+            dispatcher.join().expect("daemon dispatcher panicked");
+        });
+
+        let load = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        let report = DaemonReport {
+            lines_read: load(&counters.lines_read),
+            responses: load(&counters.responses),
+            error_lines: load(&counters.error_lines),
+            rejected: load(&counters.rejected),
+            stats_probes: load(&counters.stats_probes),
+            error_responses: load(&counters.error_responses),
+            write_errors: load(&counters.write_errors),
+            wall: t0.elapsed(),
+            latencies_ms: latencies.into_inner().unwrap(),
+            mailbox: mailbox.snapshot(),
+            cache: StatsSnapshot { hits: load(&counters.hits), misses: load(&counters.misses) },
+            unique_instances: load(&counters.unique_instances),
+            memory: self.memory_total(),
+        };
+        match read_error {
+            Some(e) => Err(e),
+            None => Ok(report),
+        }
+    }
+}
+
+/// Write one frame line and flush it out immediately (streaming contract:
+/// a response is visible the moment it exists). Failures count, not abort.
+fn write_line<W: Write>(writer: &Mutex<W>, line: &str, counters: &RunCounters) {
+    let mut w = writer.lock().unwrap();
+    let wrote = writeln!(w, "{line}").and_then(|_| w.flush());
+    if wrote.is_err() {
+        counters.write_errors.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::request::ScenarioSpec;
+    use crate::service::wire;
+    use crate::stencil::defs::StencilId;
+    use crate::util::json::parse;
+
+    fn frame_line(id: &str, req: &CodesignRequest) -> String {
+        Json::obj(vec![("id", Json::str(id)), ("request", wire::request_to_json(req))])
+            .to_string_compact()
+    }
+
+    fn run_daemon(config: DaemonConfig, input: &str) -> (DaemonReport, Vec<Json>) {
+        let daemon = Daemon::new(config);
+        let mut out: Vec<u8> = Vec::new();
+        let report = daemon.run(input.as_bytes(), &mut out).expect("stream reads cleanly");
+        let frames = String::from_utf8(out)
+            .expect("frames are UTF-8")
+            .lines()
+            .map(|l| match parse(l) {
+                Ok(j) => j,
+                Err(e) => panic!("unparsable output line '{l}': {e}"),
+            })
+            .collect();
+        (report, frames)
+    }
+
+    fn frame_id<'a>(f: &'a Json) -> Option<&'a str> {
+        f.get("id").and_then(|v| v.as_str())
+    }
+
+    #[test]
+    fn streams_a_response_frame_per_request() {
+        let r1 = CodesignRequest::pareto(ScenarioSpec::two_d().quick(16));
+        let r2 =
+            CodesignRequest::pareto(ScenarioSpec::two_d().quick(16).with_area_budget(400.0));
+        let input = format!("{}\n{}\n", frame_line("a", &r1), frame_line("b", &r2));
+        let (report, frames) = run_daemon(DaemonConfig::paper(), &input);
+
+        assert_eq!(report.responses, 2);
+        assert_eq!(report.error_lines, 0);
+        assert_eq!(report.rejected, 0);
+        assert_eq!(report.write_errors, 0);
+        assert_eq!(report.latencies_ms.len(), 2);
+        assert_eq!(report.mailbox.accepted, 2);
+        assert_eq!(report.mailbox.completed, 2);
+        assert_eq!(report.mailbox.queued, 0);
+        assert_eq!(report.mailbox.in_flight, 0);
+        assert!(report.memory.resident_entries > 0, "the sweep memoized something");
+        assert!(report.cache.lookups() > 0);
+        assert!(report.throughput_rps() > 0.0);
+
+        let mut ids: Vec<&str> = frames.iter().filter_map(frame_id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, ["a", "b"]);
+        for f in &frames {
+            assert!(f.get("response").is_some(), "{f:?} is not a response frame");
+            assert_eq!(f.get("schema").and_then(|v| v.as_f64()), Some(4.0));
+        }
+
+        let bench = report.bench_json();
+        for field in [
+            "mode",
+            "lines_read",
+            "responses",
+            "error_lines",
+            "rejected",
+            "wall_ms",
+            "throughput_rps",
+            "latency_p50_ms",
+            "latency_p95_ms",
+            "cache_hit_rate",
+            "unique_instances",
+            "mailbox",
+            "memory",
+        ] {
+            assert!(bench.get(field).is_some(), "bench json missing '{field}'");
+        }
+    }
+
+    #[test]
+    fn hostile_and_stats_lines_do_not_disturb_serving() {
+        let good = frame_line("ok", &CodesignRequest::pareto(ScenarioSpec::two_d().quick(16)));
+        let input = format!(
+            "\n{{\"id\":\"s1\",\"request\":{{\"type\":\"stats\"}}}}\nnot json\n{good}\n{{\"id\":7,\"request\":{{}}}}\n"
+        );
+        let (report, frames) = run_daemon(DaemonConfig::paper(), &input);
+
+        assert_eq!(report.responses, 1);
+        assert_eq!(report.stats_probes, 1);
+        assert_eq!(report.error_lines, 2);
+        assert_eq!(report.lines_read, 4, "blank lines are not counted");
+        assert_eq!(report.error_responses, 0);
+
+        let stats = frames.iter().find(|f| f.get("stats").is_some()).expect("a stats frame");
+        assert_eq!(frame_id(stats), Some("s1"));
+        for field in ["mailbox", "partitions", "resident_entries", "cache_hit_rate"] {
+            assert!(
+                stats.get("stats").unwrap().get(field).is_some(),
+                "stats body missing '{field}'"
+            );
+        }
+
+        let errors: Vec<&Json> = frames.iter().filter(|f| f.get("error").is_some()).collect();
+        assert_eq!(errors.len(), 2);
+        for e in &errors {
+            assert!(e.get("line").and_then(|v| v.as_f64()).is_some(), "{e:?} lacks a line");
+        }
+
+        assert!(
+            frames.iter().any(|f| frame_id(f) == Some("ok") && f.get("response").is_some()),
+            "the well-formed request was still answered"
+        );
+    }
+
+    #[test]
+    fn daemon_answers_equal_a_oneshot_session() {
+        let reqs = vec![
+            CodesignRequest::pareto(ScenarioSpec::two_d().quick(16)),
+            CodesignRequest::what_if(
+                ScenarioSpec::two_d().quick(16),
+                vec![(StencilId::Jacobi2D, 1.0)],
+            ),
+        ];
+        let input: String = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| format!("{}\n", frame_line(&format!("r{i}"), r)))
+            .collect();
+        let (_, frames) = run_daemon(DaemonConfig::paper(), &input);
+
+        let mut session = Session::new(Platform::default_spec().clone());
+        let expect = session.submit_all(&reqs).into_responses();
+        for (i, want) in expect.iter().enumerate() {
+            let id = format!("r{i}");
+            let got = frames
+                .iter()
+                .find(|f| frame_id(f) == Some(id.as_str()))
+                .unwrap_or_else(|| panic!("no frame for id '{id}'"));
+            assert_eq!(
+                got.get("response").unwrap().to_string_compact(),
+                wire::response_to_json(want).to_string_compact(),
+                "daemon answer for '{id}' diverged from one-shot serving"
+            );
+        }
+    }
+
+    #[test]
+    fn memo_budget_changes_cost_never_answers() {
+        let reqs = vec![
+            CodesignRequest::pareto(ScenarioSpec::two_d().quick(8)),
+            CodesignRequest::pareto(ScenarioSpec::two_d().quick(8).with_area_budget(420.0)),
+        ];
+        let input: String = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| format!("{}\n", frame_line(&format!("r{i}"), r)))
+            .collect();
+        let mut config = DaemonConfig::paper();
+        config.memo_budget = Some(MemoBudget::entries(16));
+        let (report, frames) = run_daemon(config, &input);
+        assert!(
+            report.memory.resident_entries <= 16 || report.memory.eviction.futile_passes > 0,
+            "budget enforced (or provably suspended): resident {} evicted {}",
+            report.memory.resident_entries,
+            report.memory.eviction.evicted()
+        );
+
+        let mut session = Session::new(Platform::default_spec().clone());
+        let expect = session.submit_all(&reqs).into_responses();
+        for (i, want) in expect.iter().enumerate() {
+            let id = format!("r{i}");
+            let got = frames.iter().find(|f| frame_id(f) == Some(id.as_str())).unwrap();
+            assert_eq!(
+                got.get("response").unwrap().to_string_compact(),
+                wire::response_to_json(want).to_string_compact(),
+            );
+        }
+    }
+
+    #[test]
+    fn strip_prune_covers_every_scenario_carrying_variant() {
+        let spec = ScenarioSpec::two_d().quick(8);
+        assert!(spec.solve_opts.prune, "pruning is the default this test relies on");
+        let mut reqs = vec![
+            CodesignRequest::explore(spec.clone()),
+            CodesignRequest::pareto(spec.clone()),
+            CodesignRequest::what_if(spec.clone(), vec![(StencilId::Jacobi2D, 1.0)]),
+            CodesignRequest::sensitivity(spec.clone(), ScenarioSpec::three_d(), (400.0, 450.0)),
+            CodesignRequest::tune(crate::service::request::TuneRequest::new(430.0)),
+        ];
+        for r in &mut reqs {
+            strip_prune(r);
+        }
+        for r in &reqs {
+            match r {
+                CodesignRequest::Explore { scenario }
+                | CodesignRequest::Pareto { scenario }
+                | CodesignRequest::WhatIf { scenario, .. } => {
+                    assert!(!scenario.solve_opts.prune)
+                }
+                CodesignRequest::Sensitivity { scenario_2d, scenario_3d, .. } => {
+                    assert!(!scenario_2d.solve_opts.prune);
+                    assert!(!scenario_3d.solve_opts.prune);
+                }
+                CodesignRequest::Tune(t) => assert!(!t.solve_opts.prune),
+                CodesignRequest::Validate | CodesignRequest::SolverCost { .. } => {}
+            }
+        }
+    }
+
+    #[test]
+    fn partition_keying_separates_incompatible_groups() {
+        let daemon = Daemon::new(DaemonConfig::paper());
+        let a = CodesignRequest::pareto(ScenarioSpec::two_d().quick(16));
+        let b = CodesignRequest::pareto(
+            ScenarioSpec::two_d()
+                .quick(16)
+                .with_solve_opts(SolveOpts { max_t_t: 96, ..SolveOpts::default() }),
+        );
+        let (Lane::Partition(fa, ca, oa), Lane::Partition(fb, cb, ob)) =
+            (daemon.lane_of(&a), daemon.lane_of(&b))
+        else {
+            panic!("scenario requests key to partitions");
+        };
+        assert_eq!(fa, fb, "same platform");
+        assert_eq!(ca, cb, "same C_iter");
+        assert_ne!(oa, ob, "solver options split the partition");
+        assert!(matches!(daemon.lane_of(&CodesignRequest::validate()), Lane::Direct));
+        let p1 = daemon.partition_for(fa, &ca, &oa);
+        let p2 = daemon.partition_for(fa, &ca, &oa);
+        assert!(Arc::ptr_eq(&p1, &p2), "same key reuses the partition");
+        let p3 = daemon.partition_for(fb, &cb, &ob);
+        assert!(!Arc::ptr_eq(&p1, &p3));
+    }
+}

@@ -1,0 +1,161 @@
+//! Memory-budget policy glue: CLI flag parsing and session-level telemetry.
+//!
+//! The eviction mechanism itself lives in the memo store
+//! ([`MemoCache`](crate::coordinator::MemoCache): generation-stamped LRU with
+//! pinned in-flight batches, `BoundedOut` marks evicted before `Exact`
+//! solutions, hysteresis, and the guarantee that eviction changes *cost*,
+//! never *answers*). This module is the serving layer's view of it: turn
+//! `--memo-entries` / `--memo-mb` flags into a [`MemoBudget`], and aggregate
+//! per-partition residency + eviction counters into the one
+//! [`MemoryTelemetry`] record the daemon's `stats` probe and `--bench-out`
+//! report.
+//!
+//! Interaction with artifacts (PR 6), documented here because this is where
+//! both meet operationally:
+//!
+//! * a warm-started session under budget evicts **lazily** — importing an
+//!   artifact never triggers an eviction pass, so a budget smaller than the
+//!   artifact only bites when live inserts land;
+//! * `save_artifact` snapshots only what is **resident** — entries already
+//!   evicted under budget are simply absent from the shard, which re-solves
+//!   them on demand after a warm start (cost, not answers).
+
+use crate::coordinator::{entry_footprint_bytes, EvictionSnapshot, MemoBudget};
+use crate::service::Session;
+use crate::util::json::Json;
+
+/// Resolve the two budget flags into at most one budget. `entries` wins the
+/// tie by being rejected: passing both is an operator error, not a merge.
+pub fn budget_from_flags(
+    entries: Option<usize>,
+    megabytes: Option<f64>,
+) -> anyhow::Result<Option<MemoBudget>> {
+    match (entries, megabytes) {
+        (Some(_), Some(_)) => {
+            anyhow::bail!("--memo-entries and --memo-mb are mutually exclusive")
+        }
+        (Some(n), None) => {
+            anyhow::ensure!(n > 0, "--memo-entries must be at least 1");
+            Ok(Some(MemoBudget::entries(n)))
+        }
+        (None, Some(mb)) => {
+            anyhow::ensure!(
+                mb.is_finite() && mb > 0.0,
+                "--memo-mb must be a positive number (got {mb})"
+            );
+            Ok(Some(MemoBudget::bytes((mb * 1024.0 * 1024.0) as usize)))
+        }
+        (None, None) => Ok(None),
+    }
+}
+
+/// Session-wide memory picture: residency, approximate footprint, budget and
+/// eviction telemetry summed over every partition.
+#[derive(Clone, Copy, Debug)]
+pub struct MemoryTelemetry {
+    pub partitions: usize,
+    pub resident_entries: usize,
+    pub bounded_entries: usize,
+    /// Per-partition entry cap, when the session runs under budget.
+    pub budget_entries: Option<usize>,
+    /// `resident_entries` × the accounting footprint per slot.
+    pub approx_resident_bytes: usize,
+    pub eviction: EvictionSnapshot,
+}
+
+pub fn memory_telemetry(session: &Session) -> MemoryTelemetry {
+    let resident = session.cache_entries();
+    MemoryTelemetry {
+        partitions: session.partitions(),
+        resident_entries: resident,
+        bounded_entries: session.bounded_entries(),
+        budget_entries: session.memo_budget().map(|b| b.max_entries),
+        approx_resident_bytes: resident * entry_footprint_bytes(),
+        eviction: session.eviction_total(),
+    }
+}
+
+impl MemoryTelemetry {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("partitions", Json::Num(self.partitions as f64)),
+            ("resident_entries", Json::Num(self.resident_entries as f64)),
+            ("bounded_entries", Json::Num(self.bounded_entries as f64)),
+            (
+                "budget_entries",
+                match self.budget_entries {
+                    Some(n) => Json::Num(n as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("approx_resident_bytes", Json::Num(self.approx_resident_bytes as f64)),
+            ("evicted_exact", Json::Num(self.eviction.evicted_exact as f64)),
+            ("evicted_bounded", Json::Num(self.eviction.evicted_bounded as f64)),
+            ("eviction_passes", Json::Num(self.eviction.passes as f64)),
+            ("futile_passes", Json::Num(self.eviction.futile_passes as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_resolution_rules() {
+        assert!(budget_from_flags(None, None).unwrap().is_none());
+        assert_eq!(
+            budget_from_flags(Some(500), None).unwrap().map(|b| b.max_entries),
+            Some(500)
+        );
+        let by_mb = budget_from_flags(None, Some(1.0)).unwrap().unwrap();
+        assert_eq!(by_mb.max_entries, (1 << 20) / entry_footprint_bytes());
+        assert!(budget_from_flags(Some(1), Some(1.0)).is_err(), "mutually exclusive");
+        assert!(budget_from_flags(Some(0), None).is_err());
+        for bad in [0.0, -2.0, f64::NAN, f64::INFINITY] {
+            assert!(budget_from_flags(None, Some(bad)).is_err(), "{bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn tiny_byte_budget_floors_at_one_entry() {
+        let b = budget_from_flags(None, Some(0.0001)).unwrap().unwrap();
+        assert_eq!(b.max_entries, 1);
+    }
+
+    #[test]
+    fn fresh_session_telemetry_is_zero() {
+        let t = memory_telemetry(&Session::paper());
+        assert_eq!(t.partitions, 0);
+        assert_eq!(t.resident_entries, 0);
+        assert_eq!(t.bounded_entries, 0);
+        assert_eq!(t.approx_resident_bytes, 0);
+        assert_eq!(t.budget_entries, None);
+        assert_eq!(t.eviction.evicted(), 0);
+    }
+
+    #[test]
+    fn budgeted_session_reports_its_cap() {
+        let s = Session::paper().with_memo_budget(Some(MemoBudget::entries(64)));
+        assert_eq!(memory_telemetry(&s).budget_entries, Some(64));
+    }
+
+    #[test]
+    fn telemetry_serializes_every_field() {
+        let j = memory_telemetry(&Session::paper()).to_json();
+        for field in [
+            "partitions",
+            "resident_entries",
+            "bounded_entries",
+            "budget_entries",
+            "approx_resident_bytes",
+            "evicted_exact",
+            "evicted_bounded",
+            "eviction_passes",
+            "futile_passes",
+        ] {
+            assert!(j.get(field).is_some(), "missing '{field}'");
+        }
+        assert_eq!(j.get("budget_entries"), Some(&Json::Null));
+    }
+}

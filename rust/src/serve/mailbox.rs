@@ -1,0 +1,269 @@
+//! Bounded admission queue for the serve daemon.
+//!
+//! The mailbox bounds **outstanding** work — queued *plus* in-flight — not
+//! just queue length. The daemon's dispatcher drains the queue eagerly (a
+//! job leaves the queue the moment a worker picks it up), so a queue-only
+//! bound would admit unbounded work as fast as workers could claim it; the
+//! outstanding bound is what actually caps the daemon's concurrent memory
+//! and CPU exposure. [`Mailbox::try_send`] never blocks: when the bound is
+//! hit the item comes straight back and the daemon answers `rejected` —
+//! explicit backpressure the client can see, instead of an invisible stall.
+//!
+//! Backpressure telemetry (accepted, rejected, completed, max-depth-seen)
+//! lives inside the same mutex as the queue, so a [`MailboxSnapshot`] is
+//! always internally consistent — counters can't be observed mid-transition.
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct State<T> {
+    queue: VecDeque<T>,
+    in_flight: usize,
+    closed: bool,
+    accepted: u64,
+    rejected: u64,
+    completed: u64,
+    max_depth_seen: usize,
+}
+
+/// A bounded MPMC mailbox: non-blocking send, blocking receive.
+pub struct Mailbox<T> {
+    state: Mutex<State<T>>,
+    available: Condvar,
+    depth: usize,
+}
+
+/// One consistent observation of the mailbox (the `stats` request kind and
+/// `--bench-out` both serialize this).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MailboxSnapshot {
+    pub depth: usize,
+    pub queued: usize,
+    pub in_flight: usize,
+    pub accepted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub max_depth_seen: usize,
+}
+
+impl MailboxSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("depth", Json::Num(self.depth as f64)),
+            ("queued", Json::Num(self.queued as f64)),
+            ("in_flight", Json::Num(self.in_flight as f64)),
+            ("accepted", Json::Num(self.accepted as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("max_depth_seen", Json::Num(self.max_depth_seen as f64)),
+        ])
+    }
+}
+
+impl<T> Mailbox<T> {
+    /// A mailbox admitting at most `depth` outstanding items (floored at 1).
+    pub fn new(depth: usize) -> Mailbox<T> {
+        Mailbox {
+            state: Mutex::new(State {
+                queue: VecDeque::new(),
+                in_flight: 0,
+                closed: false,
+                accepted: 0,
+                rejected: 0,
+                completed: 0,
+                max_depth_seen: 0,
+            }),
+            available: Condvar::new(),
+            depth: depth.max(1),
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Admit `item`, or hand it back when the outstanding bound is hit (or
+    /// the mailbox is closed). Never blocks.
+    pub fn try_send(&self, item: T) -> Result<(), T> {
+        let mut s = self.state.lock().unwrap();
+        let outstanding = s.queue.len() + s.in_flight;
+        if s.closed || outstanding >= self.depth {
+            s.rejected += 1;
+            return Err(item);
+        }
+        s.queue.push_back(item);
+        s.accepted += 1;
+        s.max_depth_seen = s.max_depth_seen.max(outstanding + 1);
+        drop(s);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Block until an item is available (it moves to in-flight — pair every
+    /// `Some` with a [`Mailbox::complete`]) or the mailbox is closed *and*
+    /// drained, which returns `None` forever after.
+    pub fn recv(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = s.queue.pop_front() {
+                s.in_flight += 1;
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.available.wait(s).unwrap();
+        }
+    }
+
+    /// Mark one received item finished, freeing its slot of the outstanding
+    /// bound.
+    pub fn complete(&self) {
+        let mut s = self.state.lock().unwrap();
+        debug_assert!(s.in_flight > 0, "complete() without a matching recv()");
+        s.in_flight = s.in_flight.saturating_sub(1);
+        s.completed += 1;
+    }
+
+    /// Stop admissions; receivers drain what's queued, then see `None`.
+    pub fn close(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.closed = true;
+        drop(s);
+        self.available.notify_all();
+    }
+
+    pub fn snapshot(&self) -> MailboxSnapshot {
+        let s = self.state.lock().unwrap();
+        MailboxSnapshot {
+            depth: self.depth,
+            queued: s.queue.len(),
+            in_flight: s.in_flight,
+            accepted: s.accepted,
+            rejected: s.rejected,
+            completed: s.completed,
+            max_depth_seen: s.max_depth_seen,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn bounds_outstanding_not_queue_length() {
+        let mb = Mailbox::new(2);
+        assert!(mb.try_send(1).is_ok());
+        assert!(mb.try_send(2).is_ok());
+        assert!(mb.try_send(3).is_err(), "queue full");
+        // Draining the queue does NOT free capacity: the items are now
+        // in-flight, still outstanding.
+        assert_eq!(mb.recv(), Some(1));
+        assert_eq!(mb.recv(), Some(2));
+        assert!(mb.try_send(4).is_err(), "in-flight work still counts");
+        // Completion is what frees a slot.
+        mb.complete();
+        assert!(mb.try_send(5).is_ok());
+        let snap = mb.snapshot();
+        assert_eq!(snap.accepted, 3);
+        assert_eq!(snap.rejected, 2);
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.max_depth_seen, 2);
+        assert_eq!(snap.queued, 1);
+        assert_eq!(snap.in_flight, 1);
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let mb = Mailbox::new(8);
+        mb.try_send("a").unwrap();
+        mb.try_send("b").unwrap();
+        mb.close();
+        assert!(mb.try_send("c").is_err(), "closed mailbox admits nothing");
+        assert_eq!(mb.recv(), Some("a"));
+        assert_eq!(mb.recv(), Some("b"));
+        assert_eq!(mb.recv(), None);
+        assert_eq!(mb.recv(), None, "None is sticky");
+    }
+
+    #[test]
+    fn depth_floors_at_one() {
+        let mb = Mailbox::new(0);
+        assert_eq!(mb.depth(), 1);
+        assert!(mb.try_send(1).is_ok());
+        assert!(mb.try_send(2).is_err());
+    }
+
+    #[test]
+    fn blocked_receivers_wake_on_close() {
+        let mb = Arc::new(Mailbox::<u32>::new(4));
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let mb = Arc::clone(&mb);
+                std::thread::spawn(move || while mb.recv().is_some() {})
+            })
+            .collect();
+        mb.close();
+        for h in handles {
+            h.join().unwrap(); // hangs forever if close doesn't wake them
+        }
+    }
+
+    #[test]
+    fn concurrent_producers_and_consumers_conserve_items() {
+        let mb = Arc::new(Mailbox::<u64>::new(16));
+        let consumed = Arc::new(AtomicU64::new(0));
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let mb = Arc::clone(&mb);
+                let consumed = Arc::clone(&consumed);
+                std::thread::spawn(move || {
+                    while let Some(v) = mb.recv() {
+                        consumed.fetch_add(v, Ordering::Relaxed);
+                        mb.complete();
+                    }
+                })
+            })
+            .collect();
+        let mut sent = 0u64;
+        let mut delivered = 0u64;
+        for v in 1..=500u64 {
+            if mb.try_send(v).is_ok() {
+                sent += v;
+                delivered += 1;
+            }
+            if v % 7 == 0 {
+                std::thread::yield_now();
+            }
+        }
+        mb.close();
+        for c in consumers {
+            c.join().unwrap();
+        }
+        assert_eq!(consumed.load(Ordering::Relaxed), sent, "every accepted item is consumed");
+        let snap = mb.snapshot();
+        assert_eq!(snap.accepted, delivered);
+        assert_eq!(snap.completed, delivered);
+        assert_eq!(snap.accepted + snap.rejected, 500);
+        assert_eq!(snap.queued, 0);
+        assert_eq!(snap.in_flight, 0);
+        assert!(snap.max_depth_seen <= 16);
+    }
+
+    #[test]
+    fn snapshot_serializes_every_counter() {
+        let mb = Mailbox::new(3);
+        mb.try_send(1).unwrap();
+        let j = mb.snapshot().to_json();
+        for field in
+            ["depth", "queued", "in_flight", "accepted", "rejected", "completed", "max_depth_seen"]
+        {
+            assert!(j.get(field).is_some(), "missing '{field}'");
+        }
+        assert_eq!(j.get("accepted").and_then(|v| v.as_f64()), Some(1.0));
+    }
+}

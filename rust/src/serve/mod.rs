@@ -1,0 +1,48 @@
+//! The persistent serve daemon (PR 7): a streaming, concurrent, bounded
+//! front-end over the session service.
+//!
+//! One-shot `serve --requests` answers a fixed envelope and exits — every
+//! caller pays process startup and (without an artifact) the full sweep.
+//! This module turns the same [`Session`](crate::service::Session) machinery
+//! into a long-running server:
+//!
+//! * [`proto`] — the newline-delimited frame grammar over the existing wire
+//!   schema (one request envelope per line, client-supplied `id`, responses
+//!   streamed back tagged by `id` in completion order), hardened against
+//!   hostile input: oversized lines, truncated JSON, NUL bytes, pathological
+//!   nesting and unknown request kinds each produce a per-line error frame,
+//!   never a crash and never a stalled stream.
+//! * [`mailbox`] — explicit admission control: a bounded queue over
+//!   *outstanding* work with non-blocking sends, `rejected` answers when
+//!   full, and backpressure telemetry (queued, in-flight, accepted,
+//!   rejected, max-depth-seen).
+//! * [`daemon`] — the request loop itself: one session per compatible batch
+//!   group (the partition triple), independent groups dispatched
+//!   concurrently under a group cap, a synchronous `stats` probe, artifact
+//!   warm starts, and a `--bench-out` report (throughput, latency tails,
+//!   hit rate, eviction + backpressure counters).
+//! * [`evict`] — the memory story's serving-layer glue: `--memo-entries` /
+//!   `--memo-mb` flag resolution into a
+//!   [`MemoBudget`](crate::coordinator::MemoBudget), and the aggregated
+//!   [`MemoryTelemetry`](evict::MemoryTelemetry) record both the `stats`
+//!   probe and the bench report serialize.
+//!
+//! Everything here preserves the engine's core contract: serving mode,
+//! concurrency, admission pressure and memory budgets change *cost* —
+//! wall-clock, cache traffic, re-solves — never *answers*.
+//! `integration_daemon.rs` certifies streamed daemon responses bit-identical
+//! to one-shot serving under 1 and 8 threads, including memo budgets small
+//! enough to force evictions mid-stream.
+
+pub mod daemon;
+pub mod evict;
+pub mod mailbox;
+pub mod proto;
+
+pub use daemon::{strip_prune, Daemon, DaemonConfig, DaemonReport};
+pub use evict::{budget_from_flags, memory_telemetry, MemoryTelemetry};
+pub use mailbox::{Mailbox, MailboxSnapshot};
+pub use proto::{
+    decode_frame, error_frame, read_frame_line, rejected_frame, response_frame, stats_frame,
+    Frame, FrameError, FrameLimits, ReadLine,
+};

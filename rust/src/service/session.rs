@@ -16,11 +16,13 @@
 use crate::codesign::scenario::{DesignEval, Scenario, ScenarioResult};
 use crate::codesign::sensitivity::best_for_benchmark;
 use crate::codesign::tuner::{candidate_grid, Pinned};
-use crate::coordinator::{CacheEntry, CacheKey, Coordinator, StatsSnapshot, SweepReport};
+use crate::coordinator::{
+    CacheEntry, CacheKey, Coordinator, EvictionSnapshot, MemoBudget, StatsSnapshot, SweepReport,
+};
 use crate::opt::bounds::{lower_bound_entry, PruneStats};
-use crate::opt::inner::{InnerOutcome, InnerSolution};
+use crate::opt::inner::InnerSolution;
 use crate::opt::problem::SolveOpts;
-use crate::opt::separable::{aggregate_weighted, solve_entry, solve_entry_cut};
+use crate::opt::separable::{aggregate_weighted, solve_entry};
 use crate::platform::registry::{Platform, PlatformId};
 use crate::platform::spec::PlatformSpec;
 use crate::report::{self, Report};
@@ -143,6 +145,9 @@ pub struct Session {
     /// engine's hard `solved_under` rejection at this layer.
     coordinators: Vec<(CIterTable, SolveOpts, Coordinator)>,
     progress_every: Option<usize>,
+    /// Memo-store budget applied to every partition coordinator this
+    /// session creates (`None` = unbounded, the one-shot default).
+    memo_budget: Option<MemoBudget>,
 }
 
 impl Session {
@@ -155,7 +160,12 @@ impl Session {
         if let Err(e) = default_platform.validate() {
             panic!("invalid PlatformSpec for Session: {e}");
         }
-        Session { default_platform, coordinators: Vec::new(), progress_every: None }
+        Session {
+            default_platform,
+            coordinators: Vec::new(),
+            progress_every: None,
+            memo_budget: None,
+        }
     }
 
     /// A session on the default baseline (the paper's Maxwell platform).
@@ -172,6 +182,35 @@ impl Session {
     pub fn with_progress(mut self, n: usize) -> Session {
         self.progress_every = Some(n.max(1));
         self
+    }
+
+    /// Bound every partition's memo store (see
+    /// [`MemoCache`](crate::coordinator::MemoCache) for the eviction
+    /// policy). Applies to coordinators created from here on — set it
+    /// before the first submission (as the CLI and the serve daemon do);
+    /// partitions that already exist keep the budget they were built with.
+    /// `None` keeps new partitions unbounded.
+    pub fn with_memo_budget(mut self, budget: Option<MemoBudget>) -> Session {
+        self.memo_budget = budget;
+        self
+    }
+
+    /// The memo budget new partitions are created with.
+    pub fn memo_budget(&self) -> Option<MemoBudget> {
+        self.memo_budget
+    }
+
+    /// Eviction telemetry summed over every partition's memo store.
+    pub fn eviction_total(&self) -> EvictionSnapshot {
+        let mut total = EvictionSnapshot::default();
+        for (_, _, c) in &self.coordinators {
+            let s = c.cache.eviction_snapshot();
+            total.evicted_exact += s.evicted_exact;
+            total.evicted_bounded += s.evicted_bounded;
+            total.passes += s.passes;
+            total.futile_passes += s.futile_passes;
+        }
+        total
     }
 
     /// Number of (platform, C_iter, solver-options) partitions this session
@@ -291,7 +330,7 @@ impl Session {
         }) {
             return i;
         }
-        let mut coord = Coordinator::new(platform.clone());
+        let mut coord = Coordinator::with_memo_budget(platform.clone(), self.memo_budget);
         if let Some(n) = self.progress_every {
             coord = coord.with_progress(n);
         }
@@ -659,6 +698,9 @@ impl Session {
         let threads = req.threads.unwrap_or_else(default_threads).max(1);
         let time_model = coord.time_model();
         let (citer, opts) = (&req.citer, &req.solve_opts);
+        // Pin the memo store for the scan: under a budget, the instances a
+        // tune reads and records must stay resident until it finishes.
+        let _pin = coord.cache.pin();
 
         let mut candidates_pruned = 0u64;
         let mut total_evals = 0u64;
@@ -740,20 +782,20 @@ impl Session {
                         true
                     })
                     .collect();
+                // The incumbent's weighted seconds is this chunk's budget;
+                // the shared progressive-cutoff core (also behind the gated
+                // Pareto sweep) does the rest.
                 let cutoff_at = best_seconds;
                 let results: Vec<(Option<(f64, f64)>, u64, PruneStats)> =
                     parallel_map(&survivors, threads.min(survivors.len().max(1)), |&i| {
-                        solve_tune_candidate(
-                            coord,
-                            fp,
-                            &time_model,
+                        coord.solve_candidate_gated(
+                            &candidates[i].hw,
+                            &workload.entries,
+                            &chars,
                             citer,
                             opts,
-                            &workload,
-                            &chars,
-                            &candidates[i].hw,
                             &entry_bounds[i].0,
-                            cutoff_at,
+                            cutoff_at.is_finite().then_some(cutoff_at),
                         )
                     });
                 for (&i, (outcome, evals, ps)) in survivors.iter().zip(&results) {
@@ -800,65 +842,6 @@ impl Session {
             detail: ResponseDetail::None,
         }
     }
-}
-
-/// Solve one tune candidate's entries sequentially with progressive
-/// cutoffs: exact values replace bounds as they land, so a candidate can be
-/// bounded out mid-way once it provably cannot beat `incumbent_seconds`.
-/// Returns `None` when the candidate is out (bounded or infeasible).
-#[allow(clippy::too_many_arguments)]
-fn solve_tune_candidate(
-    coord: &Coordinator,
-    fp: u64,
-    time_model: &crate::timemodel::talg::TimeModel,
-    citer: &CIterTable,
-    opts: &SolveOpts,
-    workload: &Workload,
-    chars: &[crate::stencil::defs::Stencil],
-    hw: &crate::area::params::HwParams,
-    entry_bounds: &[f64],
-    incumbent_seconds: f64,
-) -> (Option<(f64, f64)>, u64, PruneStats) {
-    let mut ps = PruneStats::default();
-    let mut evals = 0u64;
-    let mut partial: f64 = workload
-        .entries
-        .iter()
-        .zip(entry_bounds)
-        .filter(|(e, _)| e.weight > 0.0)
-        .map(|(e, lb)| e.weight * lb)
-        .sum();
-    let mut per_entry: Vec<Option<InnerSolution>> = vec![None; workload.entries.len()];
-    for (j, (e, st)) in workload.entries.iter().zip(chars).enumerate() {
-        if e.weight == 0.0 {
-            continue;
-        }
-        let key = CacheKey::new(fp, hw, st, &e.size);
-        let cutoff = incumbent_seconds
-            .is_finite()
-            .then(|| (incumbent_seconds - (partial - e.weight * entry_bounds[j])) / e.weight);
-        let out = coord.cache.get_or_solve_cut(key, cutoff, || {
-            solve_entry_cut(time_model, citer, hw, e, opts, cutoff, &mut ps)
-        });
-        match out {
-            InnerOutcome::Solved(s) => {
-                evals += s.evals;
-                partial += e.weight * (s.est.seconds - entry_bounds[j]);
-                per_entry[j] = Some(s);
-            }
-            InnerOutcome::BoundedOut { .. } => {
-                for (jj, ee) in workload.entries.iter().enumerate().skip(j + 1) {
-                    if ee.weight > 0.0 {
-                        let k = CacheKey::new(fp, hw, &chars[jj], &ee.size);
-                        coord.cache.insert_bound(k, entry_bounds[jj]);
-                    }
-                }
-                return (None, evals, ps);
-            }
-            InnerOutcome::Infeasible => return (None, evals, ps),
-        }
-    }
-    (aggregate_weighted(workload, &per_entry), evals, ps)
 }
 
 fn error_response(req: &CodesignRequest, err: &anyhow::Error) -> CodesignResponse {

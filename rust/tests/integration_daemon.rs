@@ -1,0 +1,316 @@
+//! Certification of the persistent serve daemon (PR 7):
+//!
+//! * **Bit-identity** — responses streamed by the daemon equal one-shot
+//!   `serve --requests` answers for the same request set, wire-byte for
+//!   wire-byte, under 1 and 8 sweep threads and with concurrent batch
+//!   groups;
+//! * **Memory budget** — a memo budget small enough to force evictions
+//!   mid-stream changes cost (evictions observably fire), never answers;
+//! * **Backpressure** — mailbox overflow answers `rejected` without
+//!   corrupting in-flight work;
+//! * **Id mapping** — responses are tagged with the client's ids even when
+//!   completion order differs from arrival order;
+//! * **Stats probe** — `{"type": "stats"}` is answered inline with a
+//!   consistent counter snapshot;
+//! * **Hostile lines** — malformed input mixed into a live stream yields
+//!   per-line error frames while well-formed requests are still answered;
+//! * **Warm start** — a daemon warm-started from a sweep artifact under a
+//!   budget smaller than the artifact still answers bit-identically
+//!   (lazy eviction).
+
+use codesign::coordinator::MemoBudget;
+use codesign::platform::Platform;
+use codesign::serve::{Daemon, DaemonConfig, DaemonReport};
+use codesign::service::{wire, CodesignRequest, ScenarioSpec, Session};
+use codesign::stencil::defs::StencilId;
+use codesign::util::json::{parse, Json};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+/// A per-test scratch directory under the system temp dir (no tempfile
+/// dependency). Callers remove it when done.
+fn scratch_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "codesign-daemon-{tag}-{}-{}",
+        std::process::id(),
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Frame a request stream: one `{"id", "request"}` line per request, ids
+/// `r0`, `r1`, ….
+fn frame_stream(requests: &[CodesignRequest]) -> String {
+    requests
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            Json::obj(vec![
+                ("id", Json::str(&format!("r{i}"))),
+                ("request", wire::request_to_json(r)),
+            ])
+            .to_string_compact()
+                + "\n"
+        })
+        .collect()
+}
+
+fn run_daemon(daemon: &Daemon, input: &str) -> (DaemonReport, Vec<Json>) {
+    let mut out: Vec<u8> = Vec::new();
+    let report = daemon.run(input.as_bytes(), &mut out).expect("in-memory stream reads cleanly");
+    let frames = String::from_utf8(out)
+        .expect("frames are UTF-8")
+        .lines()
+        .map(|l| match parse(l) {
+            Ok(j) => j,
+            Err(e) => panic!("unparsable frame '{l}': {e}"),
+        })
+        .collect();
+    (report, frames)
+}
+
+fn frame_id<'a>(f: &'a Json) -> Option<&'a str> {
+    f.get("id").and_then(|v| v.as_str())
+}
+
+fn find_frame<'a>(frames: &'a [Json], id: &str) -> &'a Json {
+    frames
+        .iter()
+        .find(|f| frame_id(f) == Some(id))
+        .unwrap_or_else(|| panic!("no frame tagged '{id}'"))
+}
+
+/// Assert every daemon response frame equals the corresponding one-shot
+/// session answer at the wire level. `SolverCost` answers carry timing text
+/// and are compared by kind only.
+fn assert_bit_identical(frames: &[Json], requests: &[CodesignRequest]) {
+    let mut session = Session::new(Platform::default_spec().clone());
+    let expect = session.submit_all(requests).into_responses();
+    for (i, want) in expect.iter().enumerate() {
+        let id = format!("r{i}");
+        let got = find_frame(frames, &id)
+            .get("response")
+            .unwrap_or_else(|| panic!("frame '{id}' is not a response frame"));
+        let want_json = wire::response_to_json(want);
+        if matches!(requests[i], CodesignRequest::SolverCost { .. }) {
+            assert_eq!(
+                got.get("type").and_then(|v| v.as_str()),
+                want_json.get("type").and_then(|v| v.as_str()),
+                "frame '{id}' kind"
+            );
+        } else {
+            assert_eq!(
+                got.to_string_compact(),
+                want_json.to_string_compact(),
+                "daemon answer '{id}' diverged from one-shot serving"
+            );
+        }
+    }
+}
+
+fn mixed_requests(threads: usize) -> Vec<CodesignRequest> {
+    let spec = ScenarioSpec::two_d().quick(8).with_threads(threads);
+    vec![
+        CodesignRequest::explore(spec.clone()),
+        CodesignRequest::pareto(spec.clone().with_area_budget(420.0)),
+        CodesignRequest::what_if(spec, vec![(StencilId::Jacobi2D, 1.0)]),
+        CodesignRequest::validate(),
+        CodesignRequest::solver_cost(2_000),
+    ]
+}
+
+#[test]
+fn daemon_stream_is_bit_identical_to_oneshot_serve() {
+    for (threads, max_groups) in [(1usize, 1usize), (8, 8)] {
+        let requests = mixed_requests(threads);
+        let mut config = DaemonConfig::paper();
+        config.max_groups = max_groups;
+        let daemon = Daemon::new(config);
+        let (report, frames) = run_daemon(&daemon, &frame_stream(&requests));
+
+        assert_eq!(report.responses, requests.len() as u64, "threads={threads}");
+        assert_eq!(report.error_lines, 0);
+        assert_eq!(report.rejected, 0);
+        assert_eq!(report.write_errors, 0);
+        assert_bit_identical(&frames, &requests);
+    }
+}
+
+#[test]
+fn ids_map_correctly_under_out_of_order_completion() {
+    // Two lanes with very different service times: the direct-lane Validate
+    // typically finishes while the Explore sweep is still running, so
+    // completion order differs from arrival order. Correctness is judged by
+    // per-id content, never by stream position.
+    let requests = vec![
+        CodesignRequest::explore(ScenarioSpec::two_d().quick(8)),
+        CodesignRequest::validate(),
+        CodesignRequest::pareto(ScenarioSpec::two_d().quick(8)),
+        CodesignRequest::validate(),
+    ];
+    let mut config = DaemonConfig::paper();
+    config.max_groups = 8;
+    let daemon = Daemon::new(config);
+    let (report, frames) = run_daemon(&daemon, &frame_stream(&requests));
+
+    assert_eq!(report.responses, 4);
+    let mut ids: Vec<&str> = frames.iter().filter_map(frame_id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, ["r0", "r1", "r2", "r3"], "every id answered exactly once");
+    assert_bit_identical(&frames, &requests);
+}
+
+#[test]
+fn memo_budget_evicts_mid_stream_without_changing_answers() {
+    // Same partition twice: the 2-D sweep populates the store, then the 3-D
+    // sweep's inserts push it over budget and evict the (by then unpinned)
+    // 2-D entries. A budget this small *must* observably evict — and must
+    // not change a single answer bit vs an unbudgeted one-shot session.
+    let requests = vec![
+        CodesignRequest::explore(ScenarioSpec::two_d().quick(8)),
+        CodesignRequest::explore(ScenarioSpec::three_d().quick(8)),
+        CodesignRequest::pareto(ScenarioSpec::two_d().quick(8).with_area_budget(430.0)),
+    ];
+    let mut config = DaemonConfig::paper();
+    config.memo_budget = Some(MemoBudget::entries(24));
+    config.max_groups = 1; // serialize groups so the eviction story is exact
+    let daemon = Daemon::new(config);
+    let (report, frames) = run_daemon(&daemon, &frame_stream(&requests));
+
+    assert!(
+        report.memory.eviction.evicted() > 0,
+        "a 24-entry budget must evict under this stream (resident {}, passes {})",
+        report.memory.resident_entries,
+        report.memory.eviction.passes
+    );
+    assert!(
+        report.memory.resident_entries <= 24 || report.memory.eviction.futile_passes > 0,
+        "budget enforced or provably pin-suspended (resident {})",
+        report.memory.resident_entries
+    );
+    assert_bit_identical(&frames, &requests);
+}
+
+#[test]
+fn mailbox_overflow_rejects_without_corrupting_in_flight_work() {
+    // depth=1, one group: the first request is admitted and occupies the
+    // only outstanding slot for its whole (multi-millisecond) solve, while
+    // the reader ingests the remaining (in-memory) lines within
+    // microseconds — so every later request deterministically finds the
+    // mailbox full and is rejected.
+    let requests = vec![
+        CodesignRequest::explore(ScenarioSpec::two_d().quick(8)),
+        CodesignRequest::validate(),
+        CodesignRequest::validate(),
+    ];
+    let mut config = DaemonConfig::paper();
+    config.mailbox_depth = 1;
+    config.max_groups = 1;
+    let daemon = Daemon::new(config);
+    let (report, frames) = run_daemon(&daemon, &frame_stream(&requests));
+
+    assert_eq!(report.responses, 1, "only the admitted request is answered");
+    assert_eq!(report.rejected, 2);
+    assert_eq!(report.mailbox.rejected, 2);
+    assert_eq!(report.mailbox.accepted, 1);
+    assert_eq!(report.mailbox.completed, 1);
+    assert_eq!(report.mailbox.max_depth_seen, 1);
+
+    for id in ["r1", "r2"] {
+        let f = find_frame(&frames, id);
+        assert_eq!(
+            f.get("rejected").and_then(|v| v.as_str()),
+            Some("overloaded"),
+            "{id} must be rejected"
+        );
+        assert!(f.get("mailbox").is_some(), "{id} rejection carries the mailbox counters");
+    }
+
+    // The in-flight answer is uncorrupted: it equals a clean one-shot run.
+    let mut session = Session::new(Platform::default_spec().clone());
+    let want = wire::response_to_json(
+        &session.submit_all(&requests[..1]).into_responses().pop().unwrap(),
+    );
+    let got = find_frame(&frames, "r0").get("response").expect("r0 is a response frame");
+    assert_eq!(got.to_string_compact(), want.to_string_compact());
+}
+
+#[test]
+fn stats_probe_and_hostile_lines_ride_a_live_stream() {
+    let good = frame_stream(&[CodesignRequest::pareto(ScenarioSpec::two_d().quick(8))]);
+    let input = format!(
+        "{{\"id\":\"s0\",\"request\":{{\"type\":\"stats\"}}}}\n\
+         garbage that is not JSON\n\
+         {{\"request\":{{\"type\":\"validate\"}}}}\n\
+         {good}\
+         {{\"id\":\"s1\",\"request\":{{\"type\":\"stats\"}}}}\n"
+    );
+    let daemon = Daemon::new(DaemonConfig::paper());
+    let (report, frames) = run_daemon(&daemon, &input);
+
+    assert_eq!(report.responses, 1);
+    assert_eq!(report.stats_probes, 2);
+    assert_eq!(report.error_lines, 2, "garbage + missing id");
+    assert_eq!(report.lines_read, 5);
+
+    for id in ["s0", "s1"] {
+        let stats = find_frame(&frames, id).get("stats").expect("a stats body");
+        for field in
+            ["mailbox", "partitions", "resident_entries", "cache_hit_rate", "rejected"]
+        {
+            assert!(stats.get(field).is_some(), "stats body missing '{field}'");
+        }
+    }
+    let errors: Vec<&Json> = frames.iter().filter(|f| f.get("error").is_some()).collect();
+    assert_eq!(errors.len(), 2);
+    for e in &errors {
+        assert!(e.get("line").and_then(|v| v.as_f64()).is_some());
+    }
+    assert!(
+        find_frame(&frames, "r0").get("response").is_some(),
+        "the well-formed request is still answered"
+    );
+}
+
+#[test]
+fn warm_started_daemon_under_budget_answers_bit_identically() {
+    // Persist a sweep, then serve from it through a daemon whose budget is
+    // far smaller than the artifact. Warm-start import is lazy — loading
+    // never evicts — so the full artifact is resident until live inserts
+    // arrive; answers must equal one-shot serving either way.
+    let dir = scratch_dir("warm");
+    let seed_requests = vec![CodesignRequest::explore(ScenarioSpec::two_d().quick(8))];
+    let mut seed = Session::new(Platform::default_spec().clone());
+    seed.submit_all(&seed_requests);
+    let resident = seed.cache_entries();
+    assert!(resident > 24, "seed sweep must exceed the daemon budget");
+    seed.save_artifact(&dir).expect("artifact save");
+
+    let requests = vec![
+        CodesignRequest::pareto(ScenarioSpec::two_d().quick(8).with_area_budget(430.0)),
+        CodesignRequest::explore(ScenarioSpec::three_d().quick(8)),
+    ];
+    let mut config = DaemonConfig::paper();
+    config.memo_budget = Some(MemoBudget::entries(24));
+    let daemon = Daemon::new(config);
+    let load = daemon.warm_start(&dir).expect("warm start");
+    assert_eq!(load.entries_installed, resident, "lazy import installs everything");
+
+    let (report, frames) = run_daemon(&daemon, &frame_stream(&requests));
+    assert_eq!(report.responses, 2);
+    assert!(
+        report.cache.hits > 0,
+        "the warm-started store must serve hits to the first request"
+    );
+    assert!(
+        report.memory.eviction.evicted() > 0,
+        "live inserts under a 24-entry budget must evict artifact entries"
+    );
+
+    // One-shot reference: cold, unbudgeted.
+    assert_bit_identical(&frames, &requests);
+    let _ = std::fs::remove_dir_all(&dir);
+}
