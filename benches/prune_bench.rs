@@ -1,6 +1,9 @@
 //! Bound-and-prune speedup trajectory: the quick paper sweep (explore,
 //! Pareto, tune) with pruning on vs `--no-prune`, certified result-identical
 //! and written to `BENCH_prune.json` (evals saved, wall clock per sweep).
+//! A third leg replays the pruned sweep through `--scalar-eval` (the legacy
+//! point-at-a-time loop) and records the batched-vs-scalar evals/sec delta —
+//! the number `scripts/perf_compare.sh` gates in CI.
 //!
 //! Run: `cargo bench --bench prune_bench` (CI's bench-smoke job runs it and
 //! archives the JSON).
@@ -53,6 +56,7 @@ fn run(opts: SolveOpts) -> (Vec<(String, u64)>, f64, u64, u64) {
 fn main() {
     let (pruned, pruned_ms, subtrees_cut, bounded_out) = run(SolveOpts::default());
     let (full, full_ms, _, _) = run(SolveOpts::default().without_prune());
+    let (scalar, scalar_ms, _, _) = run(SolveOpts::default().with_scalar_eval());
 
     // The differential tier certifies bit-identity; here we certify the
     // accounting and record the trajectory.
@@ -63,6 +67,10 @@ fn main() {
     for (i, name) in names.iter().enumerate() {
         let (p, f) = (pruned[i].1, full[i].1);
         assert!(p <= f, "{name}: pruning must never add evaluations ({p} vs {f})");
+        assert_eq!(
+            p, scalar[i].1,
+            "{name}: batched and scalar paths must count identical evaluations"
+        );
         pruned_total += p;
         full_total += f;
         rows.push(SweepRow {
@@ -100,13 +108,29 @@ fn main() {
         ("full_wall_ms", Json::num(full_ms)),
         ("subtrees_cut", Json::num(subtrees_cut as f64)),
         ("instances_bounded_out", Json::num(bounded_out as f64)),
+        // Batched-vs-scalar leg: same pruned request set, identical eval
+        // counts (asserted above), so evals/sec compares pure loop cost.
+        ("batched_wall_ms", Json::num(pruned_ms)),
+        ("scalar_wall_ms", Json::num(scalar_ms)),
+        ("batched_evals_per_sec", Json::num(evals_per_sec(pruned_total, pruned_ms))),
+        ("scalar_evals_per_sec", Json::num(evals_per_sec(pruned_total, scalar_ms))),
+        ("batched_speedup", Json::num(scalar_ms / pruned_ms.max(1e-9))),
         ("sweeps", sweeps),
     ]);
     std::fs::write("BENCH_prune.json", bench.to_string_pretty()).expect("write BENCH_prune.json");
     println!(
         "prune bench: {pruned_total} evals pruned vs {full_total} full \
          ({:.2}x reduction, {subtrees_cut} subtrees cut, {bounded_out} instances bounded out)\n\
-         wall: {pruned_ms:.0} ms vs {full_ms:.0} ms -> BENCH_prune.json",
-        full_total as f64 / pruned_total.max(1) as f64
+         wall: {pruned_ms:.0} ms vs {full_ms:.0} ms -> BENCH_prune.json\n\
+         batched vs scalar: {pruned_ms:.0} ms vs {scalar_ms:.0} ms \
+         ({:.2}x, {:.0} vs {:.0} evals/sec)",
+        full_total as f64 / pruned_total.max(1) as f64,
+        scalar_ms / pruned_ms.max(1e-9),
+        evals_per_sec(pruned_total, pruned_ms),
+        evals_per_sec(pruned_total, scalar_ms),
     );
+}
+
+fn evals_per_sec(evals: u64, wall_ms: f64) -> f64 {
+    evals as f64 / (wall_ms.max(1e-9) / 1e3)
 }

@@ -48,6 +48,8 @@ pub struct PruneCounters {
     bounds_computed: AtomicU64,
     subtrees_cut: AtomicU64,
     bounded_out: AtomicU64,
+    groups_evaluated: AtomicU64,
+    lanes_evaluated: AtomicU64,
 }
 
 impl PruneCounters {
@@ -55,6 +57,8 @@ impl PruneCounters {
         self.bounds_computed.fetch_add(s.bounds_computed, Ordering::Relaxed);
         self.subtrees_cut.fetch_add(s.subtrees_cut, Ordering::Relaxed);
         self.bounded_out.fetch_add(s.bounded_out, Ordering::Relaxed);
+        self.groups_evaluated.fetch_add(s.groups_evaluated, Ordering::Relaxed);
+        self.lanes_evaluated.fetch_add(s.lanes_evaluated, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> PruneStats {
@@ -62,6 +66,8 @@ impl PruneCounters {
             bounds_computed: self.bounds_computed.load(Ordering::Relaxed),
             subtrees_cut: self.subtrees_cut.load(Ordering::Relaxed),
             bounded_out: self.bounded_out.load(Ordering::Relaxed),
+            groups_evaluated: self.groups_evaluated.load(Ordering::Relaxed),
+            lanes_evaluated: self.lanes_evaluated.load(Ordering::Relaxed),
         }
     }
 
@@ -71,6 +77,8 @@ impl PruneCounters {
             bounds_computed: now.bounds_computed - since.bounds_computed,
             subtrees_cut: now.subtrees_cut - since.subtrees_cut,
             bounded_out: now.bounded_out - since.bounded_out,
+            groups_evaluated: now.groups_evaluated - since.groups_evaluated,
+            lanes_evaluated: now.lanes_evaluated - since.lanes_evaluated,
         }
     }
 }

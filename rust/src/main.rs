@@ -20,7 +20,9 @@
 use codesign::platform::{Platform, DEFAULT_PLATFORM};
 use codesign::report;
 use codesign::runtime::{measure_citer, Engine};
-use codesign::serve::{budget_from_flags, strip_prune, Daemon, DaemonConfig, DaemonReport};
+use codesign::serve::{
+    budget_from_flags, force_scalar_eval, strip_prune, Daemon, DaemonConfig, DaemonReport,
+};
 use codesign::service::{
     wire, CodesignRequest, CodesignResponse, ResponseDetail, ScenarioSpec, Session,
     SubmitReport, TuneRequest, WorkloadClass,
@@ -47,6 +49,12 @@ fn cli() -> Cli {
         takes_value: false,
         default: None,
         help: "disable bound-and-prune: evaluate every instance in full (bit-identical results, more model evaluations)",
+    };
+    let scalar_eval = OptSpec {
+        name: "scalar-eval",
+        takes_value: false,
+        default: None,
+        help: "use the legacy point-at-a-time evaluation loop instead of batched SoA groups (bit-identical results; audit/bench knob)",
     };
     let warm_start = OptSpec {
         name: "warm-start",
@@ -78,6 +86,7 @@ fn cli() -> Cli {
                     threads.clone(),
                     platform.clone(),
                     no_prune.clone(),
+                    scalar_eval.clone(),
                     warm_start.clone(),
                     save_artifact.clone(),
                     OptSpec { name: "class", takes_value: true, default: Some("both"), help: "2d | 3d | both | <stencil>" },
@@ -120,6 +129,7 @@ fn cli() -> Cli {
                     threads.clone(),
                     platform.clone(),
                     no_prune.clone(),
+                    scalar_eval.clone(),
                     warm_start.clone(),
                     save_artifact.clone(),
                     OptSpec { name: "budget", takes_value: true, default: Some("450"), help: "area budget, mm²" },
@@ -142,10 +152,11 @@ fn cli() -> Cli {
             },
             Command {
                 name: "serve",
-                about: "answer a JSON request file (--requests) or run as a streaming daemon (--listen) through one warm session (wire schema v4; v1-v3 accepted)",
+                about: "answer a JSON request file (--requests) or run as a streaming daemon (--listen) through one warm session (wire schema v5; v1-v4 accepted)",
                 opts: vec![
                     platform.clone(),
                     no_prune.clone(),
+                    scalar_eval.clone(),
                     warm_start.clone(),
                     save_artifact.clone(),
                     OptSpec { name: "requests", takes_value: true, default: None, help: "one-shot mode: request file path" },
@@ -165,6 +176,7 @@ fn cli() -> Cli {
                 opts: vec![
                     platform,
                     no_prune,
+                    scalar_eval,
                     threads,
                     OptSpec { name: "dir", takes_value: true, default: None, help: "artifact directory (required)" },
                     OptSpec { name: "requests", takes_value: true, default: None, help: "request file whose sweeps to persist (save)" },
@@ -192,7 +204,7 @@ fn main() {
 }
 
 /// A scenario spec from the shared CLI options (`--quick`, `--threads`,
-/// `--no-prune`).
+/// `--no-prune`, `--scalar-eval`).
 fn spec_from_args(spec: ScenarioSpec, args: &Args, citer: &CIterTable) -> ScenarioSpec {
     let mut spec = spec.with_citer(citer.clone());
     if args.flag("quick") {
@@ -203,6 +215,10 @@ fn spec_from_args(spec: ScenarioSpec, args: &Args, citer: &CIterTable) -> Scenar
     }
     if args.flag("no-prune") {
         let opts = spec.solve_opts.clone().without_prune();
+        spec = spec.with_solve_opts(opts);
+    }
+    if args.flag("scalar-eval") {
+        let opts = spec.solve_opts.clone().with_scalar_eval();
         spec = spec.with_solve_opts(opts);
     }
     spec
@@ -289,6 +305,7 @@ fn serve_daemon(
     );
     let mut config = DaemonConfig::new(platform.spec.clone());
     config.no_prune = args.flag("no-prune");
+    config.scalar_eval = args.flag("scalar-eval");
     config.memo_budget = memo_budget;
     if let Some(d) = args.opt_usize("mailbox-depth") {
         config.mailbox_depth = d;
@@ -590,6 +607,9 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
             if args.flag("no-prune") {
                 req.solve_opts.prune = false;
             }
+            if args.flag("scalar-eval") {
+                req.solve_opts.scalar_eval = true;
+            }
             if let Some(name) = args.opt("stencil") {
                 let st = codesign::stencil::defs::Stencil::by_name_err(name)
                     .map_err(|msg| anyhow::anyhow!("{msg}"))?;
@@ -633,6 +653,11 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
             if args.flag("no-prune") {
                 for req in &mut requests {
                     strip_prune(req);
+                }
+            }
+            if args.flag("scalar-eval") {
+                for req in &mut requests {
+                    force_scalar_eval(req);
                 }
             }
             let mut session = Session::new(platform.spec.clone()).with_memo_budget(memo_budget);
@@ -704,8 +729,11 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
                             ("bounds_computed", Json::num(rep.prune.bounds_computed as f64)),
                             ("subtrees_cut", Json::num(rep.prune.subtrees_cut as f64)),
                             ("bounded_out", Json::num(rep.prune.bounded_out as f64)),
+                            ("groups_evaluated", Json::num(rep.prune.groups_evaluated as f64)),
+                            ("lanes_evaluated", Json::num(rep.prune.lanes_evaluated as f64)),
                         ]),
                     ),
+                    ("scalar_eval", Json::Bool(args.flag("scalar-eval"))),
                     ("default_platform", Json::str(platform.name)),
                     ("platforms", platforms),
                 ]);
@@ -745,6 +773,11 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
                     if args.flag("no-prune") {
                         for req in &mut requests {
                             strip_prune(req);
+                        }
+                    }
+                    if args.flag("scalar-eval") {
+                        for req in &mut requests {
+                            force_scalar_eval(req);
                         }
                     }
                     let mut session = Session::new(platform.spec.clone());

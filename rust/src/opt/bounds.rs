@@ -60,8 +60,16 @@ pub const PRUNE_SLACK: f64 = 1.25;
 /// One-sided f64 safety margin on every bound (see module docs).
 const SAFETY: f64 = 1.0 - 1e-9;
 
-/// Pruning telemetry: how much bound-and-prune work a solve / sweep did.
-/// All counters are zero on the `--no-prune` path.
+/// Pruning + evaluation-shape telemetry: how much bound-and-prune work a
+/// solve / sweep did, and the shape of the grid enumeration it ran.
+///
+/// The three prune counters (`bounds_computed`, `subtrees_cut`,
+/// `bounded_out`) are zero on the `--no-prune` path. The two shape counters
+/// (`groups_evaluated`, `lanes_evaluated`) tick on every path — and tick
+/// **identically** on the batched and `--scalar-eval` evaluation paths;
+/// every counter here is path-invariant by design, which is what lets the
+/// batched-evaluation differential tier (`integration_batch_eval.rs`)
+/// assert whole-struct equality instead of carving out exceptions.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PruneStats {
     /// Lower-bound evaluations (each a handful of flops). Granularity
@@ -76,6 +84,14 @@ pub struct PruneStats {
     /// Whole instances answered `BoundedOut` (never evaluated) because their
     /// bound already exceeded the caller's cutoff.
     pub bounded_out: u64,
+    /// `(t_T, t_S2[, t_S3])` grid groups whose candidate lanes were
+    /// evaluated (survived the subtree + group prunes). Identical across
+    /// the batched and scalar evaluation paths.
+    pub groups_evaluated: u64,
+    /// Candidate `(t_S1, k)` lanes evaluated in the grid phase (refinement
+    /// evaluations are counted in `evals`, not here). Identical across the
+    /// batched and scalar evaluation paths.
+    pub lanes_evaluated: u64,
 }
 
 impl PruneStats {
@@ -83,6 +99,8 @@ impl PruneStats {
         self.bounds_computed += other.bounds_computed;
         self.subtrees_cut += other.subtrees_cut;
         self.bounded_out += other.bounded_out;
+        self.groups_evaluated += other.groups_evaluated;
+        self.lanes_evaluated += other.lanes_evaluated;
     }
 }
 

@@ -134,6 +134,73 @@ mod tests {
     }
 
     #[test]
+    fn batched_path_certified_exactly_on_radius2_3d_star() {
+        // The exhaustive oracle pins the batched SoA path (PR 8) on the same
+        // radius-2 3-D point the scalar path was certified on: batched and
+        // scalar land on bit-identical optima, and on a fully-enumerated
+        // grid both match brute force exactly.
+        use crate::stencil::spec::{Dim, StencilSpec};
+        let model = TimeModel::maxwell();
+        let st = *Stencil::get(StencilSpec::star(Dim::D3, 2).register());
+        let size = ProblemSize::d3(32, 8);
+        let opts = SolveOpts { all_k: true, refine: false, max_t_t: 8, ..SolveOpts::default() };
+        let p = InnerProblem { stencil: st, size, hw: HwParams::gtx980() };
+        let brute =
+            solve_exhaustive(&model, &p, size.s1, size.s2, size.s3.unwrap(), opts.max_t_t)
+                .expect("radius-2 star fits GTX 980 shared memory");
+        let batched = solve_inner(&model, &p, &opts).expect("batched path feasible");
+        let scalar = solve_inner(&model, &p, &opts.clone().with_scalar_eval())
+            .expect("scalar path feasible");
+        assert_eq!(
+            batched.est.seconds.to_bits(),
+            scalar.est.seconds.to_bits(),
+            "batched {:?} vs scalar {:?}",
+            batched.sw,
+            scalar.sw
+        );
+        assert_eq!(batched.sw, scalar.sw);
+        assert_eq!(batched.evals, scalar.evals);
+        let rel = (batched.est.seconds - brute.est.seconds).abs() / brute.est.seconds;
+        assert!(
+            batched.est.seconds <= brute.est.seconds * (1.0 + 1e-9) && rel < 1e-9,
+            "batched {} ({:?}) vs exhaustive {} ({:?})",
+            batched.est.seconds,
+            batched.sw,
+            brute.est.seconds,
+            brute.sw
+        );
+    }
+
+    #[test]
+    fn batched_path_certified_on_maxwell_nocache_point() {
+        // Same oracle discipline on a cache-stripped platform point: the
+        // batched path must answer bit-identically to scalar and stay within
+        // the established 3% envelope of brute force.
+        let platform = crate::platform::registry::Platform::by_name("maxwell-nocache")
+            .expect("preset platform");
+        let model = platform.spec.time_model();
+        let hw = HwParams::gtx980().without_caches();
+        let p = InnerProblem {
+            stencil: *Stencil::get(StencilId::Heat2D),
+            size: ProblemSize::d2(1024, 256),
+            hw,
+        };
+        let brute = solve_exhaustive(&model, &p, 96, 256, 1, 24).unwrap();
+        let batched = solve_inner(&model, &p, &SolveOpts::default()).unwrap();
+        let scalar =
+            solve_inner(&model, &p, &SolveOpts::default().with_scalar_eval()).unwrap();
+        assert_eq!(batched.est.seconds.to_bits(), scalar.est.seconds.to_bits());
+        assert_eq!(batched.sw, scalar.sw);
+        assert_eq!(batched.evals, scalar.evals);
+        assert!(
+            batched.est.seconds <= brute.est.seconds * 1.03,
+            "batched {} vs brute {}",
+            batched.est.seconds,
+            brute.est.seconds
+        );
+    }
+
+    #[test]
     fn smart_solver_matches_exhaustive_on_small_instance() {
         // On an instance whose optimum lies inside the smart solver's grid
         // coverage, the two must agree closely; the smart solver may even be

@@ -18,7 +18,20 @@
 //!    `integration_prune.rs`;
 //! 3. per tile vector, evaluate only the candidate `k` values where the
 //!    piecewise round model can turn ([`problem::k_candidates`]);
-//! 4. optionally hill-climb integer refinement around the incumbent
+//! 4. evaluate each surviving `(t_T, t_S2[, t_S3])` group as one SoA batch
+//!    (DESIGN.md §8): *fill* the group's candidate `(t_S1, k)` lanes into
+//!    [`LaneBatch`] columns in canonical enumeration order, *eval* them
+//!    through the shared [`crate::timemodel::talg::eval_lane`] kernel in
+//!    one flat loop with the instance invariants
+//!    ([`TimeModel::invariants`]) and the group
+//!    geometry ([`tiling::group_geometry`]) hoisted, then *scan* the
+//!    results in lane order for the strict-improvement incumbent updates.
+//!    Bounds are only consulted at subtree/group entry — never between the
+//!    lanes of a group — so the batched incumbent trajectory is the scalar
+//!    one. `--scalar-eval` ([`SolveOpts::scalar_eval`]) keeps the legacy
+//!    point-at-a-time loop callable; `integration_batch_eval.rs` certifies
+//!    the two paths bit-identical (solutions, ties, telemetry);
+//! 5. optionally hill-climb integer refinement around the incumbent
 //!    (`t_S1 ± δ`, `t_T ± 2`, `t_S2 ± 32`, `k ± 1`).
 //!
 //! The result is certified against brute force by `exhaustive` in the
@@ -27,6 +40,7 @@
 
 use crate::opt::bounds::{self, PruneStats, PRUNE_SLACK};
 use crate::opt::problem::{self, InnerProblem, SolveOpts};
+use crate::timemodel::batch::{LaneBatch, LANE_CAPACITY_HINT};
 use crate::timemodel::talg::{SoftwareParams, TimeEstimate, TimeModel};
 use crate::timemodel::tiling::{self, TileSizes};
 
@@ -146,6 +160,15 @@ pub fn solve_inner_cut(
     };
     let t_s1_grid = problem::t_s1_grid(p.size.s1);
     let m_sm_bytes = p.hw.m_sm_kb * 1024.0;
+    // Instance-level invariant hoist (§4 of the module docs): every subterm
+    // of T_alg that depends only on (machine, stencil, size, hw), computed
+    // once per solve. The scalar audit path recomputes them per point via
+    // `evaluate_pre` — same expressions, same bits, more work.
+    let inv = model.invariants(&p.stencil, &p.size, &p.hw);
+    // One reusable SoA buffer for the whole solve (capacity 0 on the scalar
+    // path, where it is never filled and must not allocate).
+    let mut batch =
+        LaneBatch::with_capacity(if opts.scalar_eval { 0 } else { LANE_CAPACITY_HINT });
 
     for &(tt_lb, t_t) in &keyed {
         // Minimal footprint at this t_T (t_S1 = 1, t_S2 = 32, t_S3 = 1): if
@@ -191,33 +214,50 @@ pub fn solve_inner_cut(
                         }
                     }
                 }
-                for &t_s1 in &t_s1_grid {
-                    let tiles = TileSizes { t_s1, t_s2, t_s3, t_t };
-                    try_tiles(model, p, &tiles, opts, &mut best, &mut group_best, &mut evals);
-                }
-                // Wavefront-quantization candidates: on small domains the
-                // optimum often sits exactly where the per-phase tile count
-                // drops to m (tiles = ceil((S1+w)/2w) ≤ m ⇔ avg width
-                // w ≥ S1/(2m−1)), a basin a coarse grid plus local descent
-                // cannot reach. Enumerate those widths directly; for the
-                // production SZ sizes (S1 ≥ 4096) wavefronts hold hundreds
-                // of tiles and the effect is < 1%, so gate on S1.
-                if p.size.s1 <= 2048 {
-                    let sigma = p.stencil.sigma as u64;
-                    let slope = sigma * (t_t - 1);
-                    let mut cands = std::collections::BTreeSet::new();
-                    for m in 1..=96u64 {
-                        let w = p.size.s1.div_ceil(2 * m - 1);
-                        if w > slope {
-                            cands.insert(w - slope);
-                        }
-                    }
-                    for t_s1 in cands {
-                        if t_s1_grid.contains(&t_s1) {
-                            continue; // already evaluated above
-                        }
+                // Both evaluation paths see the identical candidate stream
+                // (`for_each_t_s1`) and consult bounds only above this
+                // point, so their incumbent trajectories — and therefore
+                // the prune decisions on *later* groups — cannot diverge.
+                stats.groups_evaluated += 1;
+                if opts.scalar_eval {
+                    // Legacy point-at-a-time loop (the `--scalar-eval`
+                    // audit path).
+                    for_each_t_s1(p, &t_s1_grid, t_t, |t_s1| {
                         let tiles = TileSizes { t_s1, t_s2, t_s3, t_t };
-                        try_tiles(model, p, &tiles, opts, &mut best, &mut group_best, &mut evals);
+                        try_tiles(
+                            model,
+                            p,
+                            &tiles,
+                            opts,
+                            &mut best,
+                            &mut group_best,
+                            &mut evals,
+                            stats,
+                        );
+                    });
+                } else {
+                    // Fill: stage this group's candidate lanes in canonical
+                    // order, with the t_S1-invariant geometry hoisted.
+                    let g = tiling::group_geometry(&p.stencil, &p.size, t_s2, t_s3, t_t);
+                    let n_wavefronts = (2 * g.n_bands) as f64;
+                    batch.clear();
+                    for_each_t_s1(p, &t_s1_grid, t_t, |t_s1| {
+                        let tiles = TileSizes { t_s1, t_s2, t_s3, t_t };
+                        stage_lanes(model, p, &tiles, opts, &g, &mut batch);
+                    });
+                    // Eval: one flat branch-free kernel loop over the SoA
+                    // columns.
+                    batch.evaluate(&inv, g.threads_per_block, n_wavefronts);
+                    // Scan: lane order == scalar enumeration order, so the
+                    // strict-improvement updates replay the identical
+                    // incumbent trajectory (and the identical `evals`
+                    // stamps on every solution).
+                    for i in 0..batch.len() {
+                        evals += 1;
+                        stats.lanes_evaluated += 1;
+                        let tiles = TileSizes { t_s1: batch.t_s1[i], t_s2, t_s3, t_t };
+                        let sw = SoftwareParams::new(tiles, batch.k[i]);
+                        update_incumbents(sw, batch.est[i], evals, &mut best, &mut group_best);
                     }
                 }
             }
@@ -268,25 +308,54 @@ pub fn solve_inner_cut(
     }
 }
 
-/// Evaluate one tile vector across its candidate `k`s, updating the global
-/// incumbent and the per-(t_S2, t_S3) group incumbents.
-fn try_tiles(
+/// Drive `f` over every candidate `t_S1` of one grid group, in the solver's
+/// canonical order: the coarse grid first, then the wavefront-quantization
+/// extras. Shared by the batched fill phase and the `--scalar-eval` loop, so
+/// the two paths cannot enumerate differently.
+///
+/// Wavefront-quantization candidates: on small domains the optimum often
+/// sits exactly where the per-phase tile count drops to m
+/// (tiles = ceil((S1+w)/2w) ≤ m ⇔ avg width w ≥ S1/(2m−1)), a basin a coarse
+/// grid plus local descent cannot reach. Enumerate those widths directly;
+/// for the production SZ sizes (S1 ≥ 4096) wavefronts hold hundreds of tiles
+/// and the effect is < 1%, so gate on S1.
+fn for_each_t_s1(p: &InnerProblem, t_s1_grid: &[u64], t_t: u64, mut f: impl FnMut(u64)) {
+    for &t_s1 in t_s1_grid {
+        f(t_s1);
+    }
+    if p.size.s1 <= 2048 {
+        let sigma = p.stencil.sigma as u64;
+        let slope = sigma * (t_t - 1);
+        let mut cands = std::collections::BTreeSet::new();
+        for m in 1..=96u64 {
+            let w = p.size.s1.div_ceil(2 * m - 1);
+            if w > slope {
+                cands.insert(w - slope);
+            }
+        }
+        for t_s1 in cands {
+            if t_s1_grid.contains(&t_s1) {
+                continue; // already enumerated above
+            }
+            f(t_s1);
+        }
+    }
+}
+
+/// The candidate `k` list for one tile vector, written into the
+/// allocation-free `buf` (hot path: millions of tile vectors). Returns the
+/// candidate count; 0 means the tile admits no resident block at all.
+/// Shared by both evaluation paths — the list, like the enumeration order,
+/// must be one implementation.
+fn k_list(
     model: &TimeModel,
     p: &InnerProblem,
-    tiles: &TileSizes,
+    threads: u64,
+    m_tile: f64,
     opts: &SolveOpts,
-    best: &mut Option<InnerSolution>,
-    group_best: &mut std::collections::BTreeMap<(u64, u64), InnerSolution>,
-    evals: &mut u64,
-) {
-    let m_tile = tiling::tile_footprint_bytes(&p.stencil, tiles);
-    if m_tile > p.hw.m_sm_kb * 1024.0 {
-        return;
-    }
-    let threads = tiles.t_s2 * tiles.t_s3.unwrap_or(1);
-    // Allocation-free candidate list (hot path: millions of tile vectors).
-    let mut buf = [0u32; 32];
-    let n_ks = if opts.all_k {
+    buf: &mut [u32; 32],
+) -> usize {
+    if opts.all_k {
         let n = model.machine.max_blocks_per_sm as usize;
         for (i, slot) in buf.iter_mut().enumerate().take(n) {
             *slot = i as u32 + 1;
@@ -295,7 +364,7 @@ fn try_tiles(
     } else {
         let k_max = problem::k_max_for(model, &p.hw, threads, m_tile);
         if k_max == 0 {
-            return;
+            return 0;
         }
         let k_occ = ((model.machine.latency_factor_for(p.hw.m_sm_kb) * p.hw.n_v as f64)
             / threads as f64)
@@ -303,7 +372,112 @@ fn try_tiles(
         let (arr, n) = problem::k_candidates_inline(k_max, k_occ);
         buf[..n].copy_from_slice(&arr[..n]);
         n
-    };
+    }
+}
+
+/// One strict-improvement incumbent update: the global incumbent plus the
+/// per-(t_S2, t_S3) refinement-start incumbents. Shared by the scalar k-loop
+/// and the batched scan phase — the update rule (strict `<`, deterministic
+/// BTreeMap keying) is what makes tie-winners enumeration-order-defined, so
+/// it must exist exactly once.
+fn update_incumbents(
+    sw: SoftwareParams,
+    est: TimeEstimate,
+    evals: u64,
+    best: &mut Option<InnerSolution>,
+    group_best: &mut std::collections::BTreeMap<(u64, u64), InnerSolution>,
+) {
+    let sol = InnerSolution { sw, est, evals };
+    if best.as_ref().map_or(true, |b| est.seconds < b.est.seconds) {
+        *best = Some(sol);
+    }
+    let key = (sw.tiles.t_s2 * 64 + sw.tiles.t_s3.unwrap_or(0), sw.tiles.t_t);
+    match group_best.entry(key) {
+        std::collections::btree_map::Entry::Occupied(mut e) => {
+            if est.seconds < e.get().est.seconds {
+                e.insert(sol);
+            }
+        }
+        std::collections::btree_map::Entry::Vacant(e) => {
+            e.insert(sol);
+        }
+    }
+}
+
+/// Fill-phase twin of [`try_tiles`]: run the identical per-tile admission
+/// pipeline (footprint, k candidates, tile-level feasibility, per-k resource
+/// limits) but stage the surviving lanes into the SoA batch instead of
+/// evaluating them. The `t_S1`-invariant geometry arrives precomputed in
+/// `g`; [`tiling::complete_geometry`] adds only the `t_S1`-dependent terms
+/// (bit-identical to the full [`tiling::geometry`] by construction — they
+/// are one implementation).
+fn stage_lanes(
+    model: &TimeModel,
+    p: &InnerProblem,
+    tiles: &TileSizes,
+    opts: &SolveOpts,
+    g: &tiling::GroupGeometry,
+    batch: &mut LaneBatch,
+) {
+    let m_tile = tiling::tile_footprint_bytes(&p.stencil, tiles);
+    if m_tile > p.hw.m_sm_kb * 1024.0 {
+        return;
+    }
+    let threads = tiles.t_s2 * tiles.t_s3.unwrap_or(1);
+    let mut buf = [0u32; 32];
+    let n_ks = k_list(model, p, threads, m_tile, opts, &mut buf);
+    if n_ks == 0 {
+        return;
+    }
+    let ks = &buf[..n_ks];
+    // Tile-level feasibility once (patterns, thread limits); geometry and
+    // traffic are k-invariant — staged once per tile, shared by its lanes.
+    if model.feasibility(&p.stencil, &p.hw, &SoftwareParams::new(*tiles, 1)).is_err() {
+        return;
+    }
+    let geo = tiling::complete_geometry(&p.stencil, &p.size, tiles.t_s1, tiles.t_t, g);
+    let traffic = tiling::tile_traffic_bytes(&p.stencil, tiles);
+    let bpw = geo.blocks_per_wavefront() as f64;
+    let m = &model.machine;
+    for &k in ks {
+        // k-dependent resource limits (already satisfied by k_candidates;
+        // needed for the all_k reference mode). A rejected k stages no lane,
+        // exactly as the scalar loop spends no evaluation on it.
+        if k > m.max_blocks_per_sm
+            || (k as u64 * threads) / m.warp as u64 > m.max_warps_per_sm as u64
+            || k as f64 * m_tile > p.hw.m_sm_kb * 1024.0
+        {
+            continue;
+        }
+        batch.push(tiles.t_s1, k, geo.iters_per_thread, traffic, bpw, m_tile);
+    }
+}
+
+/// Evaluate one tile vector across its candidate `k`s, updating the global
+/// incumbent and the per-(t_S2, t_S3) group incumbents — the legacy
+/// `--scalar-eval` evaluation loop, kept callable so the differential tier
+/// can compare both live paths in one binary.
+#[allow(clippy::too_many_arguments)]
+fn try_tiles(
+    model: &TimeModel,
+    p: &InnerProblem,
+    tiles: &TileSizes,
+    opts: &SolveOpts,
+    best: &mut Option<InnerSolution>,
+    group_best: &mut std::collections::BTreeMap<(u64, u64), InnerSolution>,
+    evals: &mut u64,
+    stats: &mut PruneStats,
+) {
+    let m_tile = tiling::tile_footprint_bytes(&p.stencil, tiles);
+    if m_tile > p.hw.m_sm_kb * 1024.0 {
+        return;
+    }
+    let threads = tiles.t_s2 * tiles.t_s3.unwrap_or(1);
+    let mut buf = [0u32; 32];
+    let n_ks = k_list(model, p, threads, m_tile, opts, &mut buf);
+    if n_ks == 0 {
+        return;
+    }
     let ks = &buf[..n_ks];
     // Tile-level feasibility once (patterns, thread limits); geometry and
     // traffic are k-invariant — hoist them out of the k loop (§Perf).
@@ -315,8 +489,6 @@ fn try_tiles(
     let m = &model.machine;
     for &k in ks {
         let sw = SoftwareParams::new(*tiles, k);
-        // k-dependent resource limits (already satisfied by k_candidates;
-        // needed for the all_k reference mode).
         if k > m.max_blocks_per_sm
             || (k as u64 * threads) / m.warp as u64 > m.max_warps_per_sm as u64
             || k as f64 * m_tile > p.hw.m_sm_kb * 1024.0
@@ -324,22 +496,9 @@ fn try_tiles(
             continue;
         }
         *evals += 1;
+        stats.lanes_evaluated += 1;
         let est = model.evaluate_pre(&p.stencil, &p.size, &p.hw, &sw, &geo, m_tile, traffic);
-        let sol = InnerSolution { sw, est, evals: *evals };
-        if best.as_ref().map_or(true, |b| est.seconds < b.est.seconds) {
-            *best = Some(sol);
-        }
-        let key = (tiles.t_s2 * 64 + tiles.t_s3.unwrap_or(0), tiles.t_t);
-        match group_best.entry(key) {
-            std::collections::btree_map::Entry::Occupied(mut e) => {
-                if est.seconds < e.get().est.seconds {
-                    e.insert(sol);
-                }
-            }
-            std::collections::btree_map::Entry::Vacant(e) => {
-                e.insert(sol);
-            }
-        }
+        update_incumbents(sw, est, *evals, best, group_best);
     }
 }
 
@@ -522,6 +681,73 @@ mod tests {
             assert_eq!(pruned.sw, full.sw, "{:?}", p.stencil.id);
             assert!(pruned.evals <= full.evals, "{:?}", p.stencil.id);
         }
+    }
+
+    #[test]
+    fn batched_and_scalar_eval_are_bit_identical() {
+        // The batched SoA path vs the --scalar-eval legacy loop: solutions,
+        // eval counts and the *whole* telemetry struct must match to the
+        // bit, with pruning on and off (four path combinations per case).
+        let model = TimeModel::maxwell();
+        let cases = [
+            prob(StencilId::Jacobi2D, ProblemSize::d2(8192, 4096), HwParams::gtx980()),
+            prob(StencilId::Gradient2D, ProblemSize::d2(12288, 2048), HwParams {
+                n_sm: 8,
+                n_v: 256,
+                ..HwParams::gtx980()
+            }),
+            prob(StencilId::Heat3D, ProblemSize::d3(256, 128), HwParams::gtx980()),
+            // Small domain: exercises the wavefront-quantization extras.
+            prob(StencilId::Heat2D, ProblemSize::d2(1024, 256), HwParams::gtx980()),
+        ];
+        for p in cases {
+            for base in [SolveOpts::default(), SolveOpts::default().without_prune()] {
+                let mut batched_stats = PruneStats::default();
+                let mut scalar_stats = PruneStats::default();
+                let batched =
+                    solve_inner_cut(&model, &p, &base, None, &mut batched_stats)
+                        .solved()
+                        .unwrap();
+                let scalar = solve_inner_cut(
+                    &model,
+                    &p,
+                    &base.clone().with_scalar_eval(),
+                    None,
+                    &mut scalar_stats,
+                )
+                .solved()
+                .unwrap();
+                assert_eq!(
+                    batched.est.seconds.to_bits(),
+                    scalar.est.seconds.to_bits(),
+                    "{:?} prune={}: batched {} vs scalar {}",
+                    p.stencil.id,
+                    base.prune,
+                    batched.est.seconds,
+                    scalar.est.seconds
+                );
+                assert_eq!(batched.sw, scalar.sw, "{:?}", p.stencil.id);
+                assert_eq!(batched.evals, scalar.evals, "{:?}", p.stencil.id);
+                assert_eq!(batched_stats, scalar_stats, "{:?}", p.stencil.id);
+                assert!(batched_stats.groups_evaluated > 0);
+                assert!(batched_stats.lanes_evaluated > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn all_k_batched_matches_scalar() {
+        // all_k floods a group with up to 32 lanes per tile — the widest
+        // batches the solver ever builds; the scan must still replay the
+        // scalar trajectory exactly.
+        let model = TimeModel::maxwell();
+        let p = prob(StencilId::Laplacian2D, ProblemSize::d2(4096, 1024), HwParams::gtx980());
+        let opts = SolveOpts { all_k: true, refine: false, ..Default::default() };
+        let batched = solve_inner(&model, &p, &opts).unwrap();
+        let scalar = solve_inner(&model, &p, &opts.clone().with_scalar_eval()).unwrap();
+        assert_eq!(batched.est.seconds.to_bits(), scalar.est.seconds.to_bits());
+        assert_eq!(batched.sw, scalar.sw);
+        assert_eq!(batched.evals, scalar.evals);
     }
 
     #[test]

@@ -33,11 +33,21 @@ pub struct SolveOpts {
     /// can never share a memo store: the session partitions coordinators by
     /// `SolveOpts`, and `evals` telemetry differs between the two paths.
     pub prune: bool,
+    /// Route the inner solver's grid phase through the legacy point-at-a-time
+    /// evaluation loop instead of the SoA group batches (the `--scalar-eval`
+    /// audit knob). Results — solutions, tie-winners, eval counts and prune
+    /// telemetry — are bit-identical either way (certified by
+    /// `integration_batch_eval.rs`); the batched default only changes wall
+    /// clock. A `SolveOpts` field for the same reason as `prune`: the
+    /// session partitions coordinators by `SolveOpts`, so the differential
+    /// tier can hold both live paths in one binary without sharing a memo
+    /// store between them.
+    pub scalar_eval: bool,
 }
 
 impl Default for SolveOpts {
     fn default() -> Self {
-        SolveOpts { all_k: false, refine: true, max_t_t: 128, prune: true }
+        SolveOpts { all_k: false, refine: true, max_t_t: 128, prune: true, scalar_eval: false }
     }
 }
 
@@ -46,6 +56,13 @@ impl SolveOpts {
     /// path).
     pub fn without_prune(mut self) -> SolveOpts {
         self.prune = false;
+        self
+    }
+
+    /// This option set routed through the scalar evaluation loop (the
+    /// `--scalar-eval` CLI path).
+    pub fn with_scalar_eval(mut self) -> SolveOpts {
+        self.scalar_eval = true;
         self
     }
 }

@@ -87,6 +87,26 @@ pub fn strip_prune(req: &mut CodesignRequest) {
     }
 }
 
+/// Force the `--scalar-eval` audit path onto every solver-option set a decoded
+/// request carries: same answers, legacy point-at-a-time evaluation instead of
+/// the batched SoA loop. Applied at the same admission point as
+/// [`strip_prune`], and like it runs *before* partition keying — scalar and
+/// batched option sets are distinct keys, so the two paths never share memo
+/// stores.
+pub fn force_scalar_eval(req: &mut CodesignRequest) {
+    match req {
+        CodesignRequest::Explore { scenario }
+        | CodesignRequest::Pareto { scenario }
+        | CodesignRequest::WhatIf { scenario, .. } => scenario.solve_opts.scalar_eval = true,
+        CodesignRequest::Sensitivity { scenario_2d, scenario_3d, .. } => {
+            scenario_2d.solve_opts.scalar_eval = true;
+            scenario_3d.solve_opts.scalar_eval = true;
+        }
+        CodesignRequest::Tune(t) => t.solve_opts.scalar_eval = true,
+        CodesignRequest::Validate | CodesignRequest::SolverCost { .. } => {}
+    }
+}
+
 /// Daemon tuning knobs. Every field has a serving-sane default; the CLI maps
 /// `--mailbox-depth`, `--max-groups`, `--memo-entries`/`--memo-mb` and
 /// `--no-prune` onto it.
@@ -105,6 +125,9 @@ pub struct DaemonConfig {
     /// Strip pruning from every admitted request (the `--no-prune` audit
     /// knob).
     pub no_prune: bool,
+    /// Route every admitted request down the legacy scalar evaluation loop
+    /// (the `--scalar-eval` audit knob).
+    pub scalar_eval: bool,
     /// Hostile-input bounds for the frame decoder.
     pub limits: FrameLimits,
 }
@@ -117,6 +140,7 @@ impl DaemonConfig {
             max_groups: default_threads().clamp(1, 8),
             memo_budget: None,
             no_prune: false,
+            scalar_eval: false,
             limits: FrameLimits::default(),
         }
     }
@@ -539,6 +563,9 @@ impl Daemon {
                                 if self.config.no_prune {
                                     strip_prune(&mut request);
                                 }
+                                if self.config.scalar_eval {
+                                    force_scalar_eval(&mut request);
+                                }
                                 let job = Job { id, request, admitted: Instant::now() };
                                 if let Err(job) = mailbox.try_send(job) {
                                     counters.rejected.fetch_add(1, Ordering::Relaxed);
@@ -798,6 +825,37 @@ mod tests {
                     assert!(!scenario_3d.solve_opts.prune);
                 }
                 CodesignRequest::Tune(t) => assert!(!t.solve_opts.prune),
+                CodesignRequest::Validate | CodesignRequest::SolverCost { .. } => {}
+            }
+        }
+    }
+
+    #[test]
+    fn force_scalar_eval_covers_every_scenario_carrying_variant() {
+        let spec = ScenarioSpec::two_d().quick(8);
+        assert!(!spec.solve_opts.scalar_eval, "batched is the default this test relies on");
+        let mut reqs = vec![
+            CodesignRequest::explore(spec.clone()),
+            CodesignRequest::pareto(spec.clone()),
+            CodesignRequest::what_if(spec.clone(), vec![(StencilId::Jacobi2D, 1.0)]),
+            CodesignRequest::sensitivity(spec.clone(), ScenarioSpec::three_d(), (400.0, 450.0)),
+            CodesignRequest::tune(crate::service::request::TuneRequest::new(430.0)),
+        ];
+        for r in &mut reqs {
+            force_scalar_eval(r);
+        }
+        for r in &reqs {
+            match r {
+                CodesignRequest::Explore { scenario }
+                | CodesignRequest::Pareto { scenario }
+                | CodesignRequest::WhatIf { scenario, .. } => {
+                    assert!(scenario.solve_opts.scalar_eval)
+                }
+                CodesignRequest::Sensitivity { scenario_2d, scenario_3d, .. } => {
+                    assert!(scenario_2d.solve_opts.scalar_eval);
+                    assert!(scenario_3d.solve_opts.scalar_eval);
+                }
+                CodesignRequest::Tune(t) => assert!(t.solve_opts.scalar_eval),
                 CodesignRequest::Validate | CodesignRequest::SolverCost { .. } => {}
             }
         }

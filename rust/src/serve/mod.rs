@@ -39,7 +39,7 @@ pub mod evict;
 pub mod mailbox;
 pub mod proto;
 
-pub use daemon::{strip_prune, Daemon, DaemonConfig, DaemonReport};
+pub use daemon::{force_scalar_eval, strip_prune, Daemon, DaemonConfig, DaemonReport};
 pub use evict::{budget_from_flags, memory_telemetry, MemoryTelemetry};
 pub use mailbox::{Mailbox, MailboxSnapshot};
 pub use proto::{

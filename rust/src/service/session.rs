@@ -421,6 +421,8 @@ impl Session {
                 bounds_computed: prune_after.bounds_computed - prune_before.bounds_computed,
                 subtrees_cut: prune_after.subtrees_cut - prune_before.subtrees_cut,
                 bounded_out: prune_after.bounded_out - prune_before.bounded_out,
+                groups_evaluated: prune_after.groups_evaluated - prune_before.groups_evaluated,
+                lanes_evaluated: prune_after.lanes_evaluated - prune_before.lanes_evaluated,
             },
             wall: t0.elapsed(),
         }

@@ -4,7 +4,7 @@
 //! `{"type": …}`-tagged object and decodes back **bit-exactly** (floats ride
 //! Rust's shortest-round-trip formatting; non-finite values encode as
 //! `null` and decode as NaN). Request and response files share one envelope,
-//! `{"schema": 4, "requests"|"responses": […]}`; an unknown schema version is
+//! `{"schema": 5, "requests"|"responses": […]}`; an unknown schema version is
 //! a clean error, never a guess.
 //!
 //! **Schema history.** Each version is a strict superset of its predecessor
@@ -28,6 +28,11 @@
 //!   `false`), and Pareto / Tune responses gain optional pruning-telemetry
 //!   counters (`bounded_out`, `candidates_pruned`; absent = 0). Older files
 //!   decode unchanged.
+//! * **v5** — batched evaluation: solver options gain an optional
+//!   `scalar_eval` boolean (absent = `false`, the batched SoA default;
+//!   `--scalar-eval` writes `true` to route the legacy point-at-a-time
+//!   loop). The two paths answer bit-identically, so the field only selects
+//!   *how* — and partitions memo stores. Older files decode unchanged.
 //!
 //! Encoding emits canonical names, so specs round-trip bit-exactly through
 //! their name.
@@ -55,7 +60,7 @@ use crate::util::json::{parse, Json};
 use anyhow::{anyhow, bail, ensure, Result};
 
 /// The wire schema this build emits.
-pub const SCHEMA_VERSION: u64 = 4;
+pub const SCHEMA_VERSION: u64 = 5;
 
 /// The oldest schema this build still accepts (each version is additive).
 pub const MIN_SCHEMA_VERSION: u64 = 1;
@@ -221,6 +226,7 @@ pub fn solve_opts_to_json(o: &SolveOpts) -> Json {
         ("refine", Json::Bool(o.refine)),
         ("max_t_t", Json::Num(o.max_t_t as f64)),
         ("prune", Json::Bool(o.prune)),
+        ("scalar_eval", Json::Bool(o.scalar_eval)),
     ])
 }
 
@@ -241,6 +247,9 @@ pub fn solve_opts_from_json(j: &Json) -> Result<SolveOpts> {
         refine: get_bool(j, "refine")?,
         max_t_t: get_u64(j, "max_t_t")?,
         prune: get_opt_bool_or(j, "prune", true)?,
+        // Absent / null → the batched default (pre-v5 files keep meaning
+        // what they always meant: answers are path-independent).
+        scalar_eval: get_opt_bool_or(j, "scalar_eval", false)?,
     })
 }
 
@@ -645,7 +654,7 @@ fn check_schema(j: &Json) -> Result<()> {
     Ok(())
 }
 
-/// `{"schema": 4, "requests": […]}`.
+/// `{"schema": 5, "requests": […]}`.
 pub fn encode_requests(requests: &[CodesignRequest]) -> Json {
     Json::obj(vec![
         ("schema", Json::Num(SCHEMA_VERSION as f64)),
@@ -665,7 +674,7 @@ pub fn decode_requests(text: &str) -> Result<Vec<CodesignRequest>> {
         .collect()
 }
 
-/// `{"schema": 4, "responses": […]}`.
+/// `{"schema": 5, "responses": […]}`.
 pub fn encode_responses(responses: &[CodesignResponse]) -> Json {
     Json::obj(vec![
         ("schema", Json::Num(SCHEMA_VERSION as f64)),

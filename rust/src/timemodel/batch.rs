@@ -1,0 +1,204 @@
+//! Structure-of-arrays batched evaluation of `T_alg` (DESIGN.md §8).
+//!
+//! The inner solver's hot path evaluates every candidate `(t_S1, k)` lane of
+//! one `(t_T, t_S2[, t_S3])` grid group under identical group context:
+//! thread shape, band count and S2/S3 block grids are `t_S1`-invariant
+//! ([`crate::timemodel::tiling::GroupGeometry`]), and the machine/instance constants are
+//! invariant across the whole solve ([`talg::EvalInvariants`]). This module
+//! holds the flat lane buffers that exploit that: the solver fills one
+//! [`LaneBatch`] per group (fill phase), evaluates every lane through the
+//! shared [`talg::eval_lane`] kernel in one branch-free loop over parallel
+//! arrays (eval phase), and then scans the results in enumeration order
+//! (scan phase, back in `opt::inner`).
+//!
+//! No explicit SIMD: the win is layout. Per-lane inputs live in parallel
+//! `Vec<f64>`/`Vec<u32>` columns, the kernel has no data-dependent branches
+//! (the `bound` label is a select), and the eval loop indexes all columns by
+//! one counter — the shape auto-vectorizers and prefetchers like. Buffers
+//! are allocated once per solve at a fixed capacity hint and reused
+//! (`clear()` keeps the allocation), so the steady state is allocation-free
+//! even in `all_k` mode where a group can carry thousands of lanes.
+//!
+//! **Bit-identity.** Every lane value is computed by the same kernel, from
+//! the same hoisted invariants, in the same f64 expression order as the
+//! scalar path ([`crate::timemodel::TimeModel::evaluate_pre`] is itself a
+//! one-lane shim over [`talg::eval_lane`]) — so batching changes *when*
+//! values are computed, never *what* they are. `integration_batch_eval.rs`
+//! certifies this end to end against the `--scalar-eval` escape hatch.
+
+use crate::timemodel::talg::{self, EvalInvariants, EvalLane, TimeEstimate};
+
+/// Capacity hint for one group's lane buffers: the default solver visits at
+/// most ~17 grid + ~96 wavefront `t_S1` candidates × ≤3 `k` candidates; the
+/// `all_k` reference mode can reach 113 × 32 ≈ 3.6k lanes. Starting at 512
+/// keeps the common case in one allocation and lets `all_k` grow once —
+/// `Vec` growth is correctness-neutral, the capacity is purely a perf hint.
+pub const LANE_CAPACITY_HINT: usize = 512;
+
+/// SoA buffers for one group's candidate lanes, plus the evaluated results.
+///
+/// Parallel arrays: index `i` of every column describes lane `i`, pushed in
+/// the solver's canonical enumeration order (`t_S1` grid then wavefront
+/// extras, `k` candidates innermost) — the scan phase relies on that order
+/// to reproduce the scalar path's strict-improvement incumbent trajectory.
+#[derive(Debug, Default)]
+pub struct LaneBatch {
+    /// Hexagon base width of the lane's tile vector.
+    pub t_s1: Vec<u64>,
+    /// Hyperthreading factor.
+    pub k: Vec<u32>,
+    /// Hexagon area (iterations per thread) — `t_S1`-dependent.
+    pub iters_per_thread: Vec<f64>,
+    /// Global-memory traffic per block, bytes — `t_S1`-dependent.
+    pub traffic: Vec<f64>,
+    /// Blocks per wavefront as f64 — `t_S1`-dependent.
+    pub blocks_per_wavefront: Vec<f64>,
+    /// Shared-memory footprint per block, bytes — `t_S1`-dependent.
+    pub m_tile: Vec<f64>,
+    /// Evaluated estimates, filled by [`LaneBatch::evaluate`]; parallel to
+    /// the input columns.
+    pub est: Vec<TimeEstimate>,
+}
+
+impl LaneBatch {
+    /// A batch whose columns start at `capacity` lanes each.
+    pub fn with_capacity(capacity: usize) -> LaneBatch {
+        LaneBatch {
+            t_s1: Vec::with_capacity(capacity),
+            k: Vec::with_capacity(capacity),
+            iters_per_thread: Vec::with_capacity(capacity),
+            traffic: Vec::with_capacity(capacity),
+            blocks_per_wavefront: Vec::with_capacity(capacity),
+            m_tile: Vec::with_capacity(capacity),
+            est: Vec::with_capacity(capacity),
+        }
+    }
+
+    /// Drop all lanes, keeping every allocation (the per-group reset).
+    pub fn clear(&mut self) {
+        self.t_s1.clear();
+        self.k.clear();
+        self.iters_per_thread.clear();
+        self.traffic.clear();
+        self.blocks_per_wavefront.clear();
+        self.m_tile.clear();
+        self.est.clear();
+    }
+
+    /// Lanes currently staged.
+    pub fn len(&self) -> usize {
+        self.t_s1.len()
+    }
+
+    /// True when no lanes are staged.
+    pub fn is_empty(&self) -> bool {
+        self.t_s1.is_empty()
+    }
+
+    /// Stage one candidate lane (fill phase).
+    #[allow(clippy::too_many_arguments)]
+    pub fn push(
+        &mut self,
+        t_s1: u64,
+        k: u32,
+        iters_per_thread: f64,
+        traffic: f64,
+        blocks_per_wavefront: f64,
+        m_tile: f64,
+    ) {
+        self.t_s1.push(t_s1);
+        self.k.push(k);
+        self.iters_per_thread.push(iters_per_thread);
+        self.traffic.push(traffic);
+        self.blocks_per_wavefront.push(blocks_per_wavefront);
+        self.m_tile.push(m_tile);
+    }
+
+    /// Eval phase: run the shared lane kernel across every staged lane in
+    /// one flat loop. `threads_per_block` and `n_wavefronts` are the group
+    /// scalars every lane shares; `inv` is the solve-level invariant set.
+    /// Results land in [`LaneBatch::est`], parallel to the inputs.
+    pub fn evaluate(&mut self, inv: &EvalInvariants, threads_per_block: u64, n_wavefronts: f64) {
+        self.est.clear();
+        let n = self.len();
+        self.est.reserve(n);
+        for i in 0..n {
+            let lane = EvalLane {
+                k: self.k[i],
+                threads_per_block,
+                iters_per_thread: self.iters_per_thread[i],
+                traffic: self.traffic[i],
+                blocks_per_wavefront: self.blocks_per_wavefront[i],
+                n_wavefronts,
+                m_tile: self.m_tile[i],
+            };
+            self.est.push(talg::eval_lane(inv, &lane));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::area::params::HwParams;
+    use crate::stencil::defs::{Stencil, StencilId};
+    use crate::stencil::workload::ProblemSize;
+    use crate::timemodel::talg::{SoftwareParams, TimeModel};
+    use crate::timemodel::tiling::{self, TileSizes};
+
+    #[test]
+    fn batch_matches_scalar_evaluate_bit_exactly() {
+        // Fill a batch the way the solver does (group scalars hoisted, lane
+        // columns per (t_S1, k)) and check every lane against the scalar
+        // evaluate() — the contract the whole module exists to keep.
+        let model = TimeModel::maxwell();
+        let st = Stencil::get(StencilId::Jacobi2D);
+        let hw = HwParams::gtx980();
+        let size = ProblemSize::d2(4096, 1024);
+        let (t_s2, t_s3, t_t) = (64u64, None, 8u64);
+        let g = tiling::group_geometry(st, &size, t_s2, t_s3, t_t);
+        let inv = model.invariants(st, &size, &hw);
+        let mut batch = LaneBatch::with_capacity(8);
+        let lanes: Vec<(u64, u32)> =
+            vec![(1, 1), (1, 3), (16, 1), (16, 2), (32, 1), (32, 2), (48, 1)];
+        for &(t_s1, k) in &lanes {
+            let tiles = TileSizes { t_s1, t_s2, t_s3, t_t };
+            let geo = tiling::complete_geometry(st, &size, t_s1, t_t, &g);
+            batch.push(
+                t_s1,
+                k,
+                geo.iters_per_thread,
+                tiling::tile_traffic_bytes(st, &tiles),
+                geo.blocks_per_wavefront() as f64,
+                tiling::tile_footprint_bytes(st, &tiles),
+            );
+        }
+        let n_wavefronts = 2 * g.n_bands;
+        batch.evaluate(&inv, g.threads_per_block, n_wavefronts as f64);
+        assert_eq!(batch.est.len(), lanes.len());
+        for (i, &(t_s1, k)) in lanes.iter().enumerate() {
+            let sw = SoftwareParams::new(TileSizes { t_s1, t_s2, t_s3, t_t }, k);
+            let reference = model.evaluate(st, &size, &hw, &sw);
+            assert_eq!(
+                batch.est[i].seconds.to_bits(),
+                reference.seconds.to_bits(),
+                "lane {i} (t_s1={t_s1}, k={k})"
+            );
+            assert_eq!(batch.est[i].gflops.to_bits(), reference.gflops.to_bits());
+            assert_eq!(batch.est[i].bound, reference.bound);
+        }
+    }
+
+    #[test]
+    fn clear_keeps_capacity() {
+        let mut b = LaneBatch::with_capacity(LANE_CAPACITY_HINT);
+        for i in 0..100u64 {
+            b.push(i, 1, 1.0, 1.0, 1.0, 1.0);
+        }
+        assert_eq!(b.len(), 100);
+        let cap = b.t_s1.capacity();
+        b.clear();
+        assert!(b.is_empty());
+        assert_eq!(b.t_s1.capacity(), cap, "clear must keep the allocation");
+    }
+}

@@ -8,12 +8,14 @@
 //! problem "non-linear optimization" (§IV-A) and what the inner solver
 //! ([`crate::opt`]) must cope with.
 
+pub mod batch;
 pub mod citer;
 pub mod machine;
 pub mod talg;
 pub mod tiling;
 
+pub use batch::LaneBatch;
 pub use citer::CIterTable;
 pub use machine::MachineSpec;
-pub use talg::{Infeasibility, SoftwareParams, TimeEstimate, TimeModel};
+pub use talg::{eval_lane, EvalInvariants, EvalLane, Infeasibility, SoftwareParams, TimeEstimate, TimeModel};
 pub use tiling::TileSizes;

@@ -81,6 +81,122 @@ pub struct TimeEstimate {
     pub occupancy: f64,
 }
 
+/// The instance-level invariants of `T_alg`: every subterm of
+/// [`TimeModel::evaluate_pre`] that depends only on `(machine, stencil,
+/// size, hw)` — never on the tile vector or `k` — hoisted once per inner
+/// solve so batched evaluation ([`crate::timemodel::batch`]) pays for them
+/// once instead of per candidate lane.
+///
+/// **Bit-identity contract.** Each field is the *exact* expression the
+/// scalar model computes, cached — never an algebraic rearrangement. IEEE
+/// f64 arithmetic makes compute-once-reuse safe but reassociation unsafe
+/// (e.g. pre-multiplying `iters_per_thread · c_iter` would change the
+/// rounding of `lane_work`), so anything whose association order involves a
+/// per-lane factor stays in [`eval_lane`].
+#[derive(Clone, Copy, Debug)]
+pub struct EvalInvariants {
+    /// Latency factor λ at this shared-memory size.
+    pub lam: f64,
+    /// `λ · n_V` — resident threads needed to fully hide latency.
+    pub needed: f64,
+    /// `n_V` as f64 (the issue-rate cap).
+    pub n_v: f64,
+    /// `C_iter` cycles per point iteration (after any `CIterTable` override).
+    pub c_iter: f64,
+    /// Off-chip bytes per cycle per SM.
+    pub bytes_per_cycle: f64,
+    /// Per-round sync/dispatch overhead, cycles.
+    pub sync_cycles: f64,
+    /// `clock_ghz · 1e9` — the cycles→seconds divisor.
+    pub clock_hz: f64,
+    /// `flops_per_point · points` — the GFLOP/s numerator.
+    pub total_flops: f64,
+    /// SM count (kept integral: `n_SM · k` multiplies in u32 exactly as the
+    /// scalar path does before the f64 cast).
+    pub n_sm: u32,
+}
+
+/// One candidate lane of a batched `T_alg` evaluation: the per-`(tiles, k)`
+/// inputs [`eval_lane`] consumes. The group-batched inner solver fills these
+/// from SoA buffers; [`TimeModel::evaluate_pre`] builds one on the fly — both
+/// paths run the identical kernel.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalLane {
+    /// Hyperthreading factor (resident blocks per SM).
+    pub k: u32,
+    /// Threads per block (`t_S2 · t_S3`).
+    pub threads_per_block: u64,
+    /// Iterations per thread (the hexagon area — `t_S1`-dependent).
+    pub iters_per_thread: f64,
+    /// Global-memory traffic per block, bytes.
+    pub traffic: f64,
+    /// `blocks_per_wavefront` as f64 (`t_S1`-dependent through the per-phase
+    /// tile count).
+    pub blocks_per_wavefront: f64,
+    /// `n_wavefronts` as f64 (`2 · n_bands`, group-invariant).
+    pub n_wavefronts: f64,
+    /// Shared-memory footprint per block, bytes (reported, not consumed).
+    pub m_tile: f64,
+}
+
+/// The `T_alg` lane kernel: one round/wavefront model evaluation from
+/// precomputed invariants and one candidate lane. This is **the** model —
+/// [`TimeModel::evaluate_pre`] (scalar path) and
+/// [`crate::timemodel::batch::LaneBatch::evaluate`] (batched path) both
+/// delegate here, so the two paths are bit-identical by construction rather
+/// than by parallel maintenance. Branch-free except for the bound
+/// classification (a reported label, not a control dependency), which is what
+/// lets the batched caller run it across a flat SoA loop the vectorizer can
+/// chew on.
+#[inline(always)]
+pub fn eval_lane(inv: &EvalInvariants, lane: &EvalLane) -> TimeEstimate {
+    // Resident threads per SM and achievable issue rate.
+    let resident = (lane.k as u64 * lane.threads_per_block) as f64;
+    let occupancy = (resident / inv.needed).min(1.0);
+    let issue_lanes = inv.n_v.min(resident / inv.lam);
+
+    // One round = n_SM·k blocks; each block runs iters_per_thread
+    // iterations of C_iter cycles on each of its threads.
+    let lane_work = resident * lane.iters_per_thread * inv.c_iter;
+    let compute_cycles = lane_work / issue_lanes;
+
+    // Each SM streams its k resident blocks' footprints through its own
+    // bandwidth slice (the memory system scales with n_SM; see
+    // `MachineSpec::mem_bw_per_sm_gbs`).
+    let sm_bytes = lane.k as f64 * lane.traffic;
+    let mem_cycles = sm_bytes / inv.bytes_per_cycle;
+
+    let round_cycles = compute_cycles.max(mem_cycles) + inv.sync_cycles;
+    let bound = if compute_cycles >= mem_cycles {
+        if occupancy < 1.0 {
+            Bound::Latency
+        } else {
+            Bound::Compute
+        }
+    } else {
+        Bound::Memory
+    };
+
+    let concurrent = (inv.n_sm * lane.k) as f64;
+    let rounds_per_wavefront = (lane.blocks_per_wavefront / concurrent).ceil();
+    let rounds = lane.n_wavefronts * rounds_per_wavefront;
+    let cycles = rounds * round_cycles;
+    let seconds = cycles / inv.clock_hz;
+    let gflops = inv.total_flops / seconds / 1e9;
+
+    TimeEstimate {
+        cycles,
+        seconds,
+        gflops,
+        m_tile_bytes: lane.m_tile,
+        compute_cycles,
+        mem_cycles,
+        rounds,
+        bound,
+        occupancy,
+    }
+}
+
 /// The model: machine constants + evaluation.
 #[derive(Clone, Copy, Debug)]
 pub struct TimeModel {
@@ -176,10 +292,42 @@ impl TimeModel {
         self.evaluate_pre(stencil, size, hw, sw, &geo, m_tile, traffic)
     }
 
+    /// Hoist every tile- and `k`-invariant subterm of the model for one
+    /// `(stencil, size, hw)` instance — see [`EvalInvariants`]. The inner
+    /// solver computes this once per solve; [`evaluate_pre`] recomputes it
+    /// per call (the expressions are a handful of flops, and sharing one
+    /// code path is what certifies the hoisting).
+    ///
+    /// [`evaluate_pre`]: TimeModel::evaluate_pre
+    pub fn invariants(
+        &self,
+        stencil: &Stencil,
+        size: &ProblemSize,
+        hw: &HwParams,
+    ) -> EvalInvariants {
+        let m = &self.machine;
+        let lam = m.latency_factor_for(hw.m_sm_kb);
+        EvalInvariants {
+            lam,
+            needed: lam * hw.n_v as f64,
+            n_v: hw.n_v as f64,
+            c_iter: stencil.c_iter_cycles,
+            bytes_per_cycle: m.bytes_per_cycle_per_sm(),
+            sync_cycles: m.sync_cycles,
+            clock_hz: m.clock_ghz * 1e9,
+            total_flops: stencil.flops_per_point * size.points(),
+            n_sm: hw.n_sm,
+        }
+    }
+
     /// Hot-path variant of [`TimeModel::evaluate`] with the tile-dependent
     /// (k-independent) quantities precomputed: the inner solver evaluates
     /// several `k` candidates per tile vector, and geometry + footprint +
     /// traffic are invariant across them (§Perf in EXPERIMENTS.md).
+    ///
+    /// Thin shim over [`eval_lane`]: the invariant hoisting + lane assembly
+    /// here is exactly what the batched path does across whole SoA groups,
+    /// so scalar and batched evaluation share one arithmetic kernel.
     pub fn evaluate_pre(
         &self,
         stencil: &Stencil,
@@ -190,55 +338,17 @@ impl TimeModel {
         m_tile: f64,
         traffic: f64,
     ) -> TimeEstimate {
-        let m = &self.machine;
-
-        // Resident threads per SM and achievable issue rate.
-        let resident = (sw.k as u64 * geo.threads_per_block) as f64;
-        let lam = m.latency_factor_for(hw.m_sm_kb);
-        let needed = lam * hw.n_v as f64;
-        let occupancy = (resident / needed).min(1.0);
-        let issue_lanes = (hw.n_v as f64).min(resident / lam);
-
-        // One round = n_SM·k blocks; each block runs iters_per_thread
-        // iterations of C_iter cycles on each of its threads.
-        let lane_work = resident * geo.iters_per_thread * stencil.c_iter_cycles;
-        let compute_cycles = lane_work / issue_lanes;
-
-        // Each SM streams its k resident blocks' footprints through its own
-        // bandwidth slice (the memory system scales with n_SM; see
-        // `MachineSpec::mem_bw_per_sm_gbs`).
-        let sm_bytes = sw.k as f64 * traffic;
-        let mem_cycles = sm_bytes / m.bytes_per_cycle_per_sm();
-
-        let round_cycles = compute_cycles.max(mem_cycles) + m.sync_cycles;
-        let bound = if compute_cycles >= mem_cycles {
-            if occupancy < 1.0 {
-                Bound::Latency
-            } else {
-                Bound::Compute
-            }
-        } else {
-            Bound::Memory
+        let inv = self.invariants(stencil, size, hw);
+        let lane = EvalLane {
+            k: sw.k,
+            threads_per_block: geo.threads_per_block,
+            iters_per_thread: geo.iters_per_thread,
+            traffic,
+            blocks_per_wavefront: geo.blocks_per_wavefront() as f64,
+            n_wavefronts: geo.n_wavefronts() as f64,
+            m_tile,
         };
-
-        let concurrent = (hw.n_sm * sw.k) as f64;
-        let rounds_per_wavefront = (geo.blocks_per_wavefront() as f64 / concurrent).ceil();
-        let rounds = geo.n_wavefronts() as f64 * rounds_per_wavefront;
-        let cycles = rounds * round_cycles;
-        let seconds = cycles / (m.clock_ghz * 1e9);
-        let gflops = stencil.flops_per_point * size.points() / seconds / 1e9;
-
-        TimeEstimate {
-            cycles,
-            seconds,
-            gflops,
-            m_tile_bytes: m_tile,
-            compute_cycles,
-            mem_cycles,
-            rounds,
-            bound,
-            occupancy,
-        }
+        eval_lane(&inv, &lane)
     }
 
     /// Feasibility-checked evaluation.
@@ -419,6 +529,44 @@ mod tests {
         let b = m.evaluate_checked(&r2, &size, &gtx(), &sw).unwrap();
         assert!(a.gflops > 0.0 && b.gflops > 0.0);
         assert!(b.mem_cycles > a.mem_cycles, "wider halo must move more bytes");
+    }
+
+    #[test]
+    fn lane_kernel_matches_evaluate_bit_exactly() {
+        // The shared-kernel contract: assembling an EvalLane by hand from
+        // the tiling helpers and running eval_lane must reproduce
+        // evaluate()'s result to the bit — this is what makes the batched
+        // solver path structurally identical to the scalar one.
+        let m = model();
+        let size = ProblemSize::d2(4096, 1024);
+        for (tiles, k) in [
+            (TileSizes::d2(32, 64, 8), 2u32),
+            (TileSizes::d2(64, 128, 16), 4),
+            (TileSizes::d2(1, 96, 12), 5),
+        ] {
+            let sw = SoftwareParams::new(tiles, k);
+            let reference = m.evaluate(jac(), &size, &gtx(), &sw);
+            let inv = m.invariants(jac(), &size, &gtx());
+            let geo = tiling::geometry(jac(), &size, &tiles);
+            let lane = EvalLane {
+                k,
+                threads_per_block: geo.threads_per_block,
+                iters_per_thread: geo.iters_per_thread,
+                traffic: tiling::tile_traffic_bytes(jac(), &tiles),
+                blocks_per_wavefront: geo.blocks_per_wavefront() as f64,
+                n_wavefronts: geo.n_wavefronts() as f64,
+                m_tile: tiling::tile_footprint_bytes(jac(), &tiles),
+            };
+            let batched = eval_lane(&inv, &lane);
+            assert_eq!(batched.seconds.to_bits(), reference.seconds.to_bits());
+            assert_eq!(batched.cycles.to_bits(), reference.cycles.to_bits());
+            assert_eq!(batched.gflops.to_bits(), reference.gflops.to_bits());
+            assert_eq!(batched.compute_cycles.to_bits(), reference.compute_cycles.to_bits());
+            assert_eq!(batched.mem_cycles.to_bits(), reference.mem_cycles.to_bits());
+            assert_eq!(batched.rounds.to_bits(), reference.rounds.to_bits());
+            assert_eq!(batched.occupancy.to_bits(), reference.occupancy.to_bits());
+            assert_eq!(batched.bound, reference.bound);
+        }
     }
 
     #[test]

@@ -103,6 +103,68 @@ pub fn hex_area(t_s1: u64, t_t: u64, sigma: u32) -> f64 {
     t_t as f64 * hex_avg_width(t_s1, t_t, sigma)
 }
 
+/// The `t_S1`-invariant part of a tiling geometry: everything one
+/// `(t_T, t_S2[, t_S3])` grid group of the inner solver shares across its
+/// candidate hexagon widths. The group-batched solver computes this once per
+/// group and completes it per `t_S1` lane via [`complete_geometry`];
+/// [`geometry`] itself is the composition of the two, so both paths run the
+/// identical expressions (the bit-identity argument in DESIGN.md §8).
+#[derive(Clone, Copy, Debug)]
+pub struct GroupGeometry {
+    /// Time bands: `ceil(T / t_T)`.
+    pub n_bands: u64,
+    /// Classical blocks across S2.
+    pub blocks_s2: u64,
+    /// Classical blocks across S3 (1 for 2-D).
+    pub blocks_s3: u64,
+    /// Threads per block (`t_S2 · t_S3`).
+    pub threads_per_block: u64,
+}
+
+/// Compute the `t_S1`-invariant geometry of one `(t_T, t_S2[, t_S3])` group.
+/// Panics on a stencil/size/tile dimensionality mismatch, exactly as
+/// [`geometry`] does (it is the same check, hoisted).
+pub fn group_geometry(
+    stencil: &Stencil,
+    size: &ProblemSize,
+    t_s2: u64,
+    t_s3: Option<u64>,
+    t_t: u64,
+) -> GroupGeometry {
+    let n_bands = div_ceil_f(size.t as f64, t_t as f64);
+    let blocks_s2 = div_ceil_f(size.s2 as f64, t_s2 as f64);
+    let blocks_s3 = match (stencil.is_3d(), size.s3, t_s3) {
+        (true, Some(s3), Some(t_s3)) => div_ceil_f(s3 as f64, t_s3 as f64),
+        (false, None, None) => 1,
+        _ => panic!("dimensionality mismatch between stencil, size and tiles"),
+    };
+    GroupGeometry { n_bands, blocks_s2, blocks_s3, threads_per_block: t_s2 * t_s3.unwrap_or(1) }
+}
+
+/// Complete a [`GroupGeometry`] with the `t_S1`-dependent terms (average
+/// hexagon width, per-phase tile count, hexagon area).
+pub fn complete_geometry(
+    stencil: &Stencil,
+    size: &ProblemSize,
+    t_s1: u64,
+    t_t: u64,
+    g: &GroupGeometry,
+) -> TilingGeometry {
+    let sigma = stencil.sigma;
+    let avg_w = hex_avg_width(t_s1, t_t, sigma);
+    let tiles_s1_per_phase = div_ceil_f(size.s1 as f64 + avg_w, 2.0 * avg_w);
+    let area = hex_area(t_s1, t_t, sigma);
+    TilingGeometry {
+        n_bands: g.n_bands,
+        tiles_s1_per_phase,
+        blocks_s2: g.blocks_s2,
+        blocks_s3: g.blocks_s3,
+        points_per_block: area * g.threads_per_block as f64,
+        iters_per_thread: area,
+        threads_per_block: g.threads_per_block,
+    }
+}
+
 /// Compute the tiling geometry of `tiles` applied to `(stencil, size)`.
 ///
 /// A phase pair covers `2·avg_width` of S1 per band period, so each phase
@@ -110,27 +172,8 @@ pub fn hex_area(t_s1: u64, t_t: u64, sigma: u32) -> f64 {
 /// phase whose hexagons straddle the band edge — folded into the ceil by
 /// adding the half-period offset).
 pub fn geometry(stencil: &Stencil, size: &ProblemSize, tiles: &TileSizes) -> TilingGeometry {
-    let sigma = stencil.sigma;
-    let avg_w = hex_avg_width(tiles.t_s1, tiles.t_t, sigma);
-    let n_bands = div_ceil_f(size.t as f64, tiles.t_t as f64);
-    let tiles_s1_per_phase = div_ceil_f(size.s1 as f64 + avg_w, 2.0 * avg_w);
-    let blocks_s2 = div_ceil_f(size.s2 as f64, tiles.t_s2 as f64);
-    let blocks_s3 = match (stencil.is_3d(), size.s3, tiles.t_s3) {
-        (true, Some(s3), Some(t_s3)) => div_ceil_f(s3 as f64, t_s3 as f64),
-        (false, None, None) => 1,
-        _ => panic!("dimensionality mismatch between stencil, size and tiles"),
-    };
-    let area = hex_area(tiles.t_s1, tiles.t_t, sigma);
-    let threads_per_block = tiles.t_s2 * tiles.t_s3.unwrap_or(1);
-    TilingGeometry {
-        n_bands,
-        tiles_s1_per_phase,
-        blocks_s2,
-        blocks_s3,
-        points_per_block: area * threads_per_block as f64,
-        iters_per_thread: area,
-        threads_per_block,
-    }
+    let g = group_geometry(stencil, size, tiles.t_s2, tiles.t_s3, tiles.t_t);
+    complete_geometry(stencil, size, tiles.t_s1, tiles.t_t, &g)
 }
 
 /// Shared-memory footprint of one threadblock, bytes: the hexagon's widest
@@ -206,6 +249,30 @@ mod tests {
         assert_eq!(g.threads_per_block, 256);
         let covered = g.total_blocks() as f64 * g.points_per_block;
         assert!(covered >= size.points());
+    }
+
+    #[test]
+    fn group_split_composes_to_geometry() {
+        // group_geometry + complete_geometry must agree with the one-shot
+        // geometry() for every field — the two are one implementation, so
+        // any drift here is a refactor bug, not a tolerance question.
+        let cases: [(&Stencil, ProblemSize, TileSizes); 3] = [
+            (jac(), ProblemSize::d2(4096, 1024), TileSizes::d2(64, 128, 16)),
+            (jac(), ProblemSize::d2(333, 77), TileSizes::d2(7, 32, 6)),
+            (heat3d(), ProblemSize::d3(256, 64), TileSizes::d3(16, 32, 8, 8)),
+        ];
+        for (st, size, tiles) in cases {
+            let whole = geometry(st, &size, &tiles);
+            let g = group_geometry(st, &size, tiles.t_s2, tiles.t_s3, tiles.t_t);
+            assert_eq!(g.n_bands, whole.n_bands);
+            assert_eq!(g.blocks_s2, whole.blocks_s2);
+            assert_eq!(g.blocks_s3, whole.blocks_s3);
+            assert_eq!(g.threads_per_block, whole.threads_per_block);
+            let done = complete_geometry(st, &size, tiles.t_s1, tiles.t_t, &g);
+            assert_eq!(done.tiles_s1_per_phase, whole.tiles_s1_per_phase);
+            assert_eq!(done.iters_per_thread.to_bits(), whole.iters_per_thread.to_bits());
+            assert_eq!(done.points_per_block.to_bits(), whole.points_per_block.to_bits());
+        }
     }
 
     #[test]

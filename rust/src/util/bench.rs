@@ -5,7 +5,7 @@
 //!
 //! The `benches/` targets are `harness = false` binaries that mix *timing*
 //! benchmarks (this module) with *figure regeneration* (module `report`),
-//! one per paper table/figure, per DESIGN.md §8.
+//! one per paper table/figure, per DESIGN.md §9.
 
 use crate::util::stats;
 use std::hint::black_box as std_black_box;

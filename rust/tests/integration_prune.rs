@@ -343,7 +343,7 @@ fn shipped_request_files_roundtrip_bit_exactly_across_schema_versions() {
                 assert!(flag, "{name}: pre-v4 files default to pruning on");
             }
         }
-        // Re-encode (emits v4) → decode → bit-exact equality, f64 fields
+        // Re-encode (emits v5) → decode → bit-exact equality, f64 fields
         // (budgets, weights, C_iter cycles) included.
         for pretty in [false, true] {
             let encoded = if pretty {

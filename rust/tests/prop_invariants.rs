@@ -377,6 +377,110 @@ fn prop_lower_bound_sound_on_fully_enumerated_small_grid() {
 }
 
 #[test]
+fn prop_batched_eval_bit_identical_to_scalar_on_small_grids() {
+    // The PR 8 tentpole's core contract, certified property-style: over
+    // randomized hardware, solver options and fully-enumerable small grids,
+    // the batched SoA path and the legacy scalar loop return bit-identical
+    // solutions — value, tile/k winner AND eval counter — for all six
+    // presets plus radius-2 family members (8 stencils).
+    use codesign::stencil::spec::{Dim, StencilSpec};
+    let model = TimeModel::maxwell();
+    let mut ids: Vec<StencilId> = ALL_STENCILS.iter().map(|s| s.id).collect();
+    ids.push(StencilSpec::star(Dim::D3, 2).register());
+    ids.push(StencilSpec::boxed(Dim::D2, 2).register());
+    forall_res(Config::default().cases(60), |rng| {
+        let id = *rng.choose(&ids);
+        let st = Stencil::get(id);
+        let hw = random_hw(rng);
+        let size = if st.is_3d() {
+            ProblemSize::d3(32 * rng.range_u64(1, 2), 8 * rng.range_u64(1, 2))
+        } else {
+            ProblemSize::d2(128 * rng.range_u64(1, 4), 32 * rng.range_u64(1, 4))
+        };
+        let opts = SolveOpts {
+            all_k: rng.bernoulli(0.3),
+            refine: rng.bernoulli(0.5),
+            max_t_t: *rng.choose(&[8, 16, 32]),
+            prune: rng.bernoulli(0.5),
+            scalar_eval: false,
+        };
+        let p = InnerProblem { stencil: *st, size, hw };
+        let batched = solve_inner(&model, &p, &opts);
+        let scalar = solve_inner(&model, &p, &opts.clone().with_scalar_eval());
+        match (batched, scalar) {
+            (None, None) => Ok(()),
+            (Some(b), Some(s)) => {
+                if b.est.seconds.to_bits() != s.est.seconds.to_bits() {
+                    return Err(format!(
+                        "{id:?} {}: seconds {} vs {} ({:?} vs {:?}, opts {opts:?})",
+                        hw.label(),
+                        b.est.seconds,
+                        s.est.seconds,
+                        b.sw,
+                        s.sw
+                    ));
+                }
+                if b.est.gflops.to_bits() != s.est.gflops.to_bits()
+                    || b.est.cycles.to_bits() != s.est.cycles.to_bits()
+                    || b.est.occupancy.to_bits() != s.est.occupancy.to_bits()
+                {
+                    return Err(format!("{id:?}: estimate fields diverge"));
+                }
+                if b.sw != s.sw {
+                    return Err(format!("{id:?}: winner {:?} vs {:?}", b.sw, s.sw));
+                }
+                if b.evals != s.evals {
+                    return Err(format!("{id:?}: evals {} vs {}", b.evals, s.evals));
+                }
+                Ok(())
+            }
+            (b, s) => Err(format!(
+                "{id:?}: feasibility diverges — batched {:?} vs scalar {:?}",
+                b.is_some(),
+                s.is_some()
+            )),
+        }
+    });
+}
+
+#[test]
+fn prop_lower_bound_still_sound_for_batched_path() {
+    // PR 5's bound must keep lower-bounding what the solver actually
+    // computes now that the default path is batched: whenever the instance
+    // bound is finite, the batched solution's seconds sit at or above it.
+    use codesign::opt::bounds::lower_bound;
+    use codesign::stencil::spec::{Dim, StencilSpec};
+    let model = TimeModel::maxwell();
+    let mut ids: Vec<StencilId> = ALL_STENCILS.iter().map(|s| s.id).collect();
+    ids.push(StencilSpec::star(Dim::D3, 2).register());
+    ids.push(StencilSpec::boxed(Dim::D2, 2).register());
+    forall_res(Config::default().cases(60), |rng| {
+        let id = *rng.choose(&ids);
+        let st = Stencil::get(id);
+        let hw = random_hw(rng);
+        let size = if st.is_3d() { ProblemSize::d3(32, 8) } else { ProblemSize::d2(256, 64) };
+        let opts = SolveOpts { refine: rng.bernoulli(0.5), ..SolveOpts::default() };
+        let lb = lower_bound(&model, st, &size, &hw, &opts);
+        let p = InnerProblem { stencil: *st, size, hw };
+        match solve_inner(&model, &p, &opts) {
+            None => Ok(()), // bound-vs-feasibility equivalence has its own test
+            Some(sol) => {
+                if lb <= sol.est.seconds {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "{id:?} {}: bound {lb} above batched value {} ({:?})",
+                        hw.label(),
+                        sol.est.seconds,
+                        sol.sw
+                    ))
+                }
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_lower_bound_finite_iff_feasible() {
     // The feasibility equivalence the gated Pareto path's design counts
     // rest on: the instance bound is finite exactly when the inner solver

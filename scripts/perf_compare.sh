@@ -1,0 +1,97 @@
+#!/usr/bin/env bash
+# perf_compare.sh BASELINE.json FRESH.json
+#
+# CI perf gate for the bench-smoke job: compare a freshly generated bench
+# report (BENCH_prune.json, BENCH_service.json, BENCH_serve_daemon.json)
+# against the committed baseline under benches/baselines/ and fail on a
+# >10% regression in any gated metric:
+#
+#   higher-is-better: evals/sec (recorded or derived as
+#                     total_evals / wall_ms), batched_speedup
+#   lower-is-better:  p95 latency (daemon reports)
+#
+# Metrics present in only one of the two files are reported but not gated
+# (schemas may grow). A baseline carrying `"provisional": true` switches the
+# script to informational mode: everything is printed, nothing fails, and
+# the refresh instructions are shown — this is how first-ever baselines land
+# before a CI runner has produced measured numbers (see
+# benches/baselines/README.md for the promotion step).
+set -euo pipefail
+
+if [ $# -ne 2 ]; then
+    echo "usage: $0 BASELINE.json FRESH.json" >&2
+    exit 2
+fi
+
+BASELINE="$1" FRESH="$2" python3 - <<'PY'
+import json, os, sys
+
+TOLERANCE = 0.10  # >10% regression fails
+
+baseline_path = os.environ["BASELINE"]
+fresh_path = os.environ["FRESH"]
+with open(baseline_path) as f:
+    baseline = json.load(f)
+with open(fresh_path) as f:
+    fresh = json.load(f)
+
+
+def metrics(doc):
+    """Gated metrics of a bench report: {name: (value, higher_is_better)}."""
+    out = {}
+    # Recorded throughput/ratio metrics (BENCH_prune.json).
+    for key in ("batched_evals_per_sec", "scalar_evals_per_sec", "batched_speedup"):
+        if isinstance(doc.get(key), (int, float)):
+            out[key] = (float(doc[key]), True)
+    # Derived throughput for reports that record totals + wall clock
+    # (BENCH_service.json and friends).
+    evals, wall = doc.get("total_evals"), doc.get("wall_ms")
+    if isinstance(evals, (int, float)) and isinstance(wall, (int, float)) and wall > 0:
+        out["evals_per_sec"] = (float(evals) / (wall / 1e3), True)
+    # Latency tails (daemon bench reports), whatever nesting they use.
+    def find_p95(node, prefix=""):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                name = f"{prefix}{k}"
+                if isinstance(v, (int, float)) and "p95" in k:
+                    out[name] = (float(v), False)
+                elif isinstance(v, dict):
+                    find_p95(v, name + ".")
+    find_p95(doc)
+    return out
+
+
+base_m, fresh_m = metrics(baseline), metrics(fresh)
+provisional = baseline.get("provisional") is True
+failures = []
+
+print(f"perf gate: {fresh_path} vs baseline {baseline_path}"
+      + (" [PROVISIONAL — informational only]" if provisional else ""))
+for name in sorted(set(base_m) | set(fresh_m)):
+    if name not in base_m or name not in fresh_m:
+        where = "baseline" if name in base_m else "fresh"
+        print(f"  ~ {name}: only in {where}, not gated")
+        continue
+    (b, higher), (f_, _) = base_m[name], fresh_m[name]
+    if b <= 0:
+        print(f"  ~ {name}: baseline {b} not positive, not gated")
+        continue
+    ratio = f_ / b
+    regressed = ratio < (1 - TOLERANCE) if higher else ratio > (1 + TOLERANCE)
+    arrow = "higher=better" if higher else "lower=better"
+    mark = "FAIL" if regressed and not provisional else ("warn" if regressed else "ok")
+    print(f"  {mark:>4} {name}: baseline {b:.4g} fresh {f_:.4g} "
+          f"({100 * (ratio - 1):+.1f}%, {arrow})")
+    if regressed and not provisional:
+        failures.append(name)
+
+if provisional:
+    print("baseline is provisional: no gating. To promote it, replace "
+          f"{baseline_path} with a CI-produced {os.path.basename(fresh_path)} "
+          "and delete the \"provisional\" flag (benches/baselines/README.md).")
+    sys.exit(0)
+if failures:
+    print(f"perf gate FAILED: >{TOLERANCE:.0%} regression in: {', '.join(failures)}")
+    sys.exit(1)
+print("perf gate passed.")
+PY
