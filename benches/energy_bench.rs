@@ -1,0 +1,134 @@
+//! Tri-objective (area × perf × energy) sweep trajectory: the quick paper
+//! scenarios served as `pareto_energy` requests with the 3-D bound gate on
+//! vs `--no-prune`, certified front-identical and written to
+//! `BENCH_energy.json` (evals saved, wall clock, front sizes, gated
+//! throughput in evals/sec — the number `scripts/perf_compare.sh` gates).
+//!
+//! Run: `cargo bench --bench energy_bench` (CI's bench-smoke job runs it and
+//! archives the JSON).
+
+use codesign::opt::problem::SolveOpts;
+use codesign::service::{
+    CodesignRequest, CodesignResponse, ParetoEnergySummary, ScenarioSpec, Session,
+};
+use codesign::util::json::Json;
+use std::time::Instant;
+
+fn requests(opts: SolveOpts) -> Vec<CodesignRequest> {
+    vec![
+        CodesignRequest::pareto_energy(
+            ScenarioSpec::two_d().quick(8).named("energy-2d").with_solve_opts(opts.clone()),
+        ),
+        CodesignRequest::pareto_energy(
+            ScenarioSpec::three_d().quick(8).named("energy-3d").with_solve_opts(opts),
+        ),
+    ]
+}
+
+fn run(opts: SolveOpts) -> (Vec<ParetoEnergySummary>, f64, u64, u64) {
+    let mut session = Session::paper();
+    let t0 = Instant::now();
+    let rep = session.submit_all(&requests(opts));
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let fronts: Vec<ParetoEnergySummary> = rep
+        .answers
+        .iter()
+        .map(|a| match &a.response {
+            CodesignResponse::ParetoEnergy(p) => p.clone(),
+            other => panic!("expected pareto_energy response, got {}", other.kind()),
+        })
+        .collect();
+    (fronts, wall_ms, rep.prune.subtrees_cut, rep.prune.bounded_out)
+}
+
+fn main() {
+    let (pruned, pruned_ms, subtrees_cut, bounded_out) = run(SolveOpts::default());
+    let (full, full_ms, _, _) = run(SolveOpts::default().without_prune());
+
+    // The differential tier (`integration_energy`) certifies bit-identity
+    // across platforms and thread counts; here we re-certify the two legs we
+    // actually timed, then record the trajectory.
+    assert_eq!(pruned.len(), full.len());
+    let mut pruned_total = 0u64;
+    let mut full_total = 0u64;
+    let mut front_points = 0usize;
+    let mut sweeps = Vec::new();
+    for (p, f) in pruned.iter().zip(&full) {
+        assert_eq!(p.scenario, f.scenario);
+        assert_eq!(p.designs, f.designs, "{}: design counts must agree", p.scenario);
+        assert_eq!(p.infeasible, f.infeasible, "{}: infeasible counts must agree", p.scenario);
+        assert!(
+            p.total_evals <= f.total_evals,
+            "{}: the gate must never add evaluations ({} vs {})",
+            p.scenario,
+            p.total_evals,
+            f.total_evals
+        );
+        assert_eq!(p.pareto.len(), f.pareto.len(), "{}: front sizes must agree", p.scenario);
+        for (a, b) in p.pareto.iter().zip(&f.pareto) {
+            assert_eq!((a.n_sm, a.n_v), (b.n_sm, b.n_v), "{}: front designs differ", p.scenario);
+            for (name, x, y) in [
+                ("m_sm_kb", a.m_sm_kb, b.m_sm_kb),
+                ("area_mm2", a.area_mm2, b.area_mm2),
+                ("gflops", a.gflops, b.gflops),
+                ("seconds", a.seconds, b.seconds),
+                ("power_w", a.power_w, b.power_w),
+                ("energy_j", a.energy_j, b.energy_j),
+            ] {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{}: {name} must be bit-identical with the gate on ({x} vs {y})",
+                    p.scenario
+                );
+            }
+        }
+        pruned_total += p.total_evals;
+        full_total += f.total_evals;
+        front_points += p.pareto.len();
+        sweeps.push(Json::obj(vec![
+            ("sweep", Json::str(p.scenario.as_str())),
+            ("designs", Json::num(p.designs as f64)),
+            ("infeasible", Json::num(p.infeasible as f64)),
+            ("front_points", Json::num(p.pareto.len() as f64)),
+            ("pruned_evals", Json::num(p.total_evals as f64)),
+            ("full_evals", Json::num(f.total_evals as f64)),
+            ("evals_saved", Json::num((f.total_evals - p.total_evals) as f64)),
+            ("bounded_out", Json::num(p.bounded_out as f64)),
+        ]));
+    }
+
+    let bench = Json::obj(vec![
+        ("pruned_evals_total", Json::num(pruned_total as f64)),
+        ("full_evals_total", Json::num(full_total as f64)),
+        ("evals_saved_total", Json::num((full_total - pruned_total) as f64)),
+        (
+            "evals_reduction_factor",
+            Json::num(full_total as f64 / pruned_total.max(1) as f64),
+        ),
+        ("pruned_wall_ms", Json::num(pruned_ms)),
+        ("full_wall_ms", Json::num(full_ms)),
+        ("subtrees_cut", Json::num(subtrees_cut as f64)),
+        ("instances_bounded_out", Json::num(bounded_out as f64)),
+        ("front_points_total", Json::num(front_points as f64)),
+        ("gated_evals_per_sec", Json::num(evals_per_sec(pruned_total, pruned_ms))),
+        ("full_evals_per_sec", Json::num(evals_per_sec(full_total, full_ms))),
+        ("sweeps", Json::Arr(sweeps)),
+    ]);
+    std::fs::write("BENCH_energy.json", bench.to_string_pretty())
+        .expect("write BENCH_energy.json");
+    println!(
+        "energy bench: {pruned_total} evals gated vs {full_total} full \
+         ({:.2}x reduction, {subtrees_cut} subtrees cut, {bounded_out} instances bounded out)\n\
+         {front_points} tri-objective front points, bit-identical across both legs\n\
+         wall: {pruned_ms:.0} ms vs {full_ms:.0} ms \
+         ({:.0} vs {:.0} evals/sec) -> BENCH_energy.json",
+        full_total as f64 / pruned_total.max(1) as f64,
+        evals_per_sec(pruned_total, pruned_ms),
+        evals_per_sec(full_total, full_ms),
+    );
+}
+
+fn evals_per_sec(evals: u64, wall_ms: f64) -> f64 {
+    evals as f64 / (wall_ms.max(1e-9) / 1e3)
+}

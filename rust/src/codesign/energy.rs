@@ -1,0 +1,163 @@
+//! The energy objective: per-design energy points for tri-objective
+//! (area × perf × energy) Pareto fronts.
+//!
+//! [`crate::codesign::power`] models per-phase power; this module turns that
+//! into the third front axis. One accumulation path — [`weighted_power_w`] —
+//! produces a design's workload-average power from its per-entry inner
+//! solutions, and [`energy_point`] multiplies it by the design's weighted
+//! execution time (`T_alg`, eq. 17) to get joules per sweep-unit. Both the
+//! batch-derived reporting path (`power::energy_evals`) and the gated
+//! tri-objective sweep (`Coordinator::run_pareto_energy_gated`) call this
+//! exact function on the same inputs, so their energies are bit-identical
+//! **structurally** — same IEEE-754 expressions in the same association
+//! order, never two re-derivations that happen to agree.
+//!
+//! Determinism contract: per-entry solutions iterate in workload-entry
+//! order (`per_entry.iter().flatten()`), the accumulators are plain `f64`
+//! sums in that order, and nothing here depends on thread count, prune
+//! state or evaluation path — an energy value is a pure function of the
+//! design's solved entries.
+
+use crate::area::model::AreaBreakdown;
+use crate::area::params::HwParams;
+use crate::codesign::power::PowerModel;
+use crate::opt::inner::InnerSolution;
+use crate::timemodel::machine::MachineSpec;
+
+/// The energy view of one solved design point: the third objective of a
+/// tri-objective front (area ↓, perf ↑, energy ↓).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EnergyPoint {
+    /// Workload-average power, W: each solved entry's
+    /// [`PowerModel::power_w`] weighted by its share of the total modelled
+    /// time. `NaN` when no entry contributed time (nothing solved).
+    pub power_w: f64,
+    /// Workload energy, J per sweep-unit: `power_w × weighted_seconds`
+    /// (`T_alg`, eq. 17).
+    pub energy_j: f64,
+}
+
+/// Workload-average power of one design: per-entry powers weighted by each
+/// entry's share of the summed modelled seconds. Iterates `per_entry` in
+/// entry order, skipping unsolved (`None`) slots — exactly the accumulation
+/// `power::energy_evals` has always used, now shared.
+///
+/// Returns `NaN` when no entry contributed time (all slots `None`).
+pub fn weighted_power_w(
+    hw: &HwParams,
+    breakdown: &AreaBreakdown,
+    per_entry: &[Option<InnerSolution>],
+    power: &PowerModel,
+    machine: &MachineSpec,
+) -> f64 {
+    let mut acc_pw = 0.0;
+    let mut acc_t = 0.0;
+    for sol in per_entry.iter().flatten() {
+        let pw = power.power_w(hw, breakdown, &sol.est, machine, 1.0);
+        acc_pw += pw * sol.est.seconds;
+        acc_t += sol.est.seconds;
+    }
+    if acc_t > 0.0 {
+        acc_pw / acc_t
+    } else {
+        f64::NAN
+    }
+}
+
+/// The per-design [`EnergyPoint`]: average power from [`weighted_power_w`],
+/// energy as that power × the design's workload-weighted seconds.
+pub fn energy_point(
+    hw: &HwParams,
+    breakdown: &AreaBreakdown,
+    per_entry: &[Option<InnerSolution>],
+    power: &PowerModel,
+    machine: &MachineSpec,
+    weighted_seconds: f64,
+) -> EnergyPoint {
+    let power_w = weighted_power_w(hw, breakdown, per_entry, power, machine);
+    EnergyPoint { power_w, energy_j: power_w * weighted_seconds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::area::model::AreaModel;
+    use crate::codesign::power::energy_evals;
+    use crate::codesign::scenario::testfix;
+    use crate::platform::registry::Platform;
+
+    #[test]
+    fn energy_point_is_bit_identical_to_energy_evals() {
+        // The shared-function contract: recomputing every point of a
+        // scenario result through `energy_point` reproduces
+        // `power::energy_evals` bit-for-bit — same power, same energy.
+        let r = testfix::quick_2d();
+        let platform = Platform::default_spec();
+        let area_model = platform.area_model();
+        let evals = energy_evals(r, platform);
+        assert_eq!(evals.len(), r.points.len());
+        for (p, e) in r.points.iter().zip(&evals) {
+            let breakdown = area_model.breakdown(&p.hw);
+            let ep = energy_point(
+                &p.hw,
+                &breakdown,
+                &p.per_entry,
+                &platform.power,
+                &platform.machine,
+                p.seconds,
+            );
+            assert_eq!(ep.power_w.to_bits(), e.power_w.to_bits());
+            assert_eq!(ep.energy_j.to_bits(), e.energy_j.to_bits());
+        }
+    }
+
+    #[test]
+    fn unsolved_slots_do_not_contribute() {
+        // Zero-weight entries ride as `None` on the gated path; masking an
+        // entry must change only the average's composition, never poison it.
+        let r = testfix::quick_2d();
+        let platform = Platform::default_spec();
+        let breakdown = AreaModel::paper().breakdown(&r.points[0].hw);
+        let full = weighted_power_w(
+            &r.points[0].hw,
+            &breakdown,
+            &r.points[0].per_entry,
+            &platform.power,
+            &platform.machine,
+        );
+        assert!(full.is_finite() && full > 0.0);
+        let mut masked = r.points[0].per_entry.clone();
+        let n = masked.len();
+        for slot in masked.iter_mut().take(n / 2) {
+            *slot = None;
+        }
+        let half = weighted_power_w(
+            &r.points[0].hw,
+            &breakdown,
+            &masked,
+            &platform.power,
+            &platform.machine,
+        );
+        assert!(half.is_finite() && half > 0.0);
+        let none = weighted_power_w(
+            &r.points[0].hw,
+            &breakdown,
+            &vec![None; n],
+            &platform.power,
+            &platform.machine,
+        );
+        assert!(none.is_nan(), "no solved entries must read as NaN, not 0");
+    }
+
+    #[test]
+    fn energy_scales_linearly_with_weighted_seconds() {
+        let r = testfix::quick_2d();
+        let platform = Platform::default_spec();
+        let p = &r.points[0];
+        let breakdown = AreaModel::paper().breakdown(&p.hw);
+        let e1 = energy_point(&p.hw, &breakdown, &p.per_entry, &platform.power, &platform.machine, 1.0);
+        let e2 = energy_point(&p.hw, &breakdown, &p.per_entry, &platform.power, &platform.machine, 2.0);
+        assert_eq!(e1.power_w.to_bits(), e2.power_w.to_bits());
+        assert!((e2.energy_j - 2.0 * e1.energy_j).abs() < 1e-12 * e1.energy_j.abs());
+    }
+}

@@ -7,7 +7,12 @@
 //!   reference architectures (stock GTX 980 / Titan X on the default
 //!   baseline), and the improvement statistics quoted in the abstract and
 //!   §V-A.
-//! * [`pareto`] — Pareto-frontier extraction over (area, performance).
+//! * [`pareto`] — Pareto-frontier extraction over (area, performance), and
+//!   the tri-objective (area, performance, energy) fronts behind
+//!   `ParetoEnergy` requests.
+//! * [`energy`] — the energy objective: per-design joules from the power
+//!   model × weighted execution time, shared by the reporting and gated
+//!   sweep paths.
 //! * [`sensitivity`] — §V-B / Table II: per-benchmark optimal architectures
 //!   from re-weighted (memoized) results.
 //! * [`allocation`] — §V-C / Fig 4: chip-area resource allocation of every
@@ -20,6 +25,7 @@
 
 pub mod allocation;
 pub mod cacheless;
+pub mod energy;
 pub mod pareto;
 pub mod power;
 pub mod scenario;
@@ -27,6 +33,7 @@ pub mod sensitivity;
 pub mod space;
 pub mod tuner;
 
-pub use pareto::{pareto_front, ParetoFront};
+pub use energy::{energy_point, weighted_power_w, EnergyPoint};
+pub use pareto::{pareto_front, pareto_front3, ParetoFront, ParetoFront3};
 pub use scenario::{DesignEval, Scenario, ScenarioResult};
 pub use space::{enumerate_space, DesignPoint, SpaceSpec};

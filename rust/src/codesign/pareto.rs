@@ -125,6 +125,122 @@ impl ParetoFront {
     }
 }
 
+/// Brute-force tri-objective Pareto front over `(area ↓, perf ↑, energy ↓)`.
+///
+/// A point is kept iff no other point weakly dominates it with at least one
+/// strict inequality, and — among exact all-equal duplicates — only the
+/// first occurrence survives (matching [`pareto_front`]'s tie rule and
+/// [`ParetoFront3`]'s first-seen-wins insert). Returns indices into
+/// `points` in ascending index (enumeration) order: `O(n²)`, the oracle
+/// the certification tier checks the incremental front against.
+pub fn pareto_front3(points: &[(f64, f64, f64)]) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| {
+            let p = points[i];
+            !points.iter().enumerate().any(|(j, &q)| {
+                if j == i {
+                    return false;
+                }
+                let weak = q.0 <= p.0 && q.1 >= p.1 && q.2 <= p.2;
+                if !weak {
+                    return false;
+                }
+                let strict = q.0 < p.0 || q.1 > p.1 || q.2 < p.2;
+                // Strict domination kills `i`; an all-equal duplicate kills
+                // it only when the duplicate came first.
+                strict || j < i
+            })
+        })
+        .collect()
+}
+
+/// Incrementally maintained tri-objective Pareto front over
+/// `(area ↓ good, perf ↑ good, energy ↓ good)`.
+///
+/// The 3-D counterpart of [`ParetoFront`], with the same streaming contract:
+/// feeding every point of a slice in index order yields exactly
+/// [`pareto_front3`]'s output, ties included (certified by
+/// `prop_incremental_pareto_front3_matches_batch` and the exhaustive-grid
+/// oracle in `integration_energy.rs`). Unlike the 2-D front there is no
+/// total order that keeps 3-D entries in one sorted run, so entries are
+/// held in insertion order and both the insert scan and the eviction pass
+/// are linear in the front size — still cheap, because tri-objective fronts
+/// stay a small fraction of the enumerated space.
+#[derive(Clone, Debug, Default)]
+pub struct ParetoFront3 {
+    /// `(area, perf, energy, caller index)` in insertion order; no entry
+    /// weakly dominates another.
+    entries: Vec<(f64, f64, f64, usize)>,
+}
+
+impl ParetoFront3 {
+    pub fn new() -> ParetoFront3 {
+        ParetoFront3 { entries: Vec::new() }
+    }
+
+    /// Offer one point. Returns `true` if it joined the front (evicting any
+    /// entries it now dominates), `false` if an existing entry dominates or
+    /// exactly duplicates it (first-seen index kept, matching
+    /// [`pareto_front3`]).
+    pub fn insert(&mut self, area: f64, perf: f64, energy: f64, index: usize) -> bool {
+        assert!(
+            area.is_finite() && perf.is_finite() && energy.is_finite(),
+            "ParetoFront3 requires finite coordinates \
+             (got area {area}, perf {perf}, energy {energy})"
+        );
+        // Weak domination-or-tie by any resident entry rejects the
+        // candidate: strictly worse somewhere, or an exact duplicate.
+        if self
+            .entries
+            .iter()
+            .any(|e| e.0 <= area && e.1 >= perf && e.2 <= energy)
+        {
+            return false;
+        }
+        // No survivor of the check above can tie the candidate on all three
+        // axes, so everything this retain drops is strictly dominated.
+        self.entries.retain(|e| !(area <= e.0 && perf >= e.1 && energy <= e.2));
+        self.entries.push((area, perf, energy, index));
+        true
+    }
+
+    /// `true` iff some front entry weakly dominates the *optimistic* corner
+    /// `(area, perf_ub, energy_lb)` of a candidate. Because `perf_ub` and
+    /// `energy_lb` carry the bounds' one-sided safety margin (strictly above
+    /// the true perf / strictly below the true energy of any feasible
+    /// design), a `true` here means the entry **strictly** dominates the
+    /// candidate's true point — it can never join the front, and skipping
+    /// its solve cannot change the result. This is the gated sweep's 3-D
+    /// domination probe, the tri-objective analogue of
+    /// [`ParetoFront::best_perf_within`].
+    pub fn dominates_bound(&self, area: f64, perf_ub: f64, energy_lb: f64) -> bool {
+        self.entries
+            .iter()
+            .any(|e| e.0 <= area && e.1 >= perf_ub && e.2 <= energy_lb)
+    }
+
+    /// Caller indices of the current front, ascending (enumeration order) —
+    /// the same shape [`pareto_front3`] returns.
+    pub fn indices(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = self.entries.iter().map(|e| e.3).collect();
+        idx.sort_unstable();
+        idx
+    }
+
+    /// The `(area, perf, energy, index)` entries in insertion order.
+    pub fn entries(&self) -> &[(f64, f64, f64, usize)] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
 /// Best performance among points with `area ≤ budget`. Returns the index.
 pub fn best_within_area(points: &[(f64, f64)], budget: f64) -> Option<usize> {
     points
@@ -247,6 +363,110 @@ mod tests {
         assert_eq!(best_within_area(&pts, 2.5), Some(1));
         assert_eq!(best_within_area(&pts, 0.5), None);
         assert_eq!(best_within_area(&pts, 10.0), Some(2));
+    }
+
+    #[test]
+    fn front3_simple() {
+        // (area ↓, perf ↑, energy ↓)
+        let pts = vec![
+            (1.0, 1.0, 1.0), // on front
+            (2.0, 3.0, 2.0), // on front
+            (3.0, 2.0, 3.0), // dominated by index 1
+            (2.0, 2.0, 1.5), // on front: cheaper energy than 1, better perf than 0
+            (4.0, 4.0, 4.0), // on front: best perf
+        ];
+        assert_eq!(pareto_front3(&pts), vec![0, 1, 3, 4]);
+        let mut inc = ParetoFront3::new();
+        for (i, &(a, p, e)) in pts.iter().enumerate() {
+            inc.insert(a, p, e, i);
+        }
+        assert_eq!(inc.indices(), vec![0, 1, 3, 4]);
+    }
+
+    #[test]
+    fn front3_energy_axis_rescues_perf_dominated_points() {
+        // Same area and worse perf, but lower energy → incomparable, kept.
+        // This is exactly the case that makes a pure perf-gate unsound in 3-D.
+        let pts = vec![(2.0, 5.0, 10.0), (2.0, 3.0, 4.0)];
+        assert_eq!(pareto_front3(&pts), vec![0, 1]);
+        let mut inc = ParetoFront3::new();
+        for (i, &(a, p, e)) in pts.iter().enumerate() {
+            inc.insert(a, p, e, i);
+        }
+        assert_eq!(inc.indices(), vec![0, 1]);
+    }
+
+    #[test]
+    fn front3_duplicates_keep_first_index() {
+        let pts = vec![(1.0, 2.0, 3.0), (1.0, 2.0, 3.0), (1.0, 2.0, 2.0)];
+        // Index 0 beats its duplicate 1; index 2 strictly dominates both.
+        assert_eq!(pareto_front3(&pts), vec![2]);
+        let mut inc = ParetoFront3::new();
+        assert!(inc.insert(1.0, 2.0, 3.0, 0));
+        assert!(!inc.insert(1.0, 2.0, 3.0, 1), "duplicate keeps the first index");
+        assert!(inc.insert(1.0, 2.0, 2.0, 2), "strict dominator evicts");
+        assert_eq!(inc.indices(), vec![2]);
+    }
+
+    #[test]
+    fn incremental_front3_matches_batch_on_quantized_random_points() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(0x3d0f);
+        for case in 0..40 {
+            // Heavy quantization forces ties on every axis.
+            let n = 1 + (case % 7) * 30;
+            let pts: Vec<(f64, f64, f64)> = (0..n)
+                .map(|_| {
+                    (
+                        rng.range_u64(0, 8) as f64,
+                        rng.range_u64(0, 8) as f64,
+                        rng.range_u64(0, 8) as f64,
+                    )
+                })
+                .collect();
+            let mut inc = ParetoFront3::new();
+            for (i, &(a, p, e)) in pts.iter().enumerate() {
+                inc.insert(a, p, e, i);
+            }
+            assert_eq!(inc.indices(), pareto_front3(&pts), "case {case}: {pts:?}");
+            assert_eq!(inc.len(), inc.indices().len());
+        }
+    }
+
+    #[test]
+    fn front3_no_entry_dominates_another() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(77);
+        let mut inc = ParetoFront3::new();
+        for i in 0..1500 {
+            let a = rng.range_u64(0, 20) as f64;
+            let p = rng.range_u64(0, 20) as f64;
+            let e = rng.range_u64(0, 20) as f64;
+            inc.insert(a, p, e, i);
+        }
+        assert!(!inc.is_empty());
+        let entries = inc.entries();
+        for x in entries {
+            for y in entries {
+                if x.3 != y.3 {
+                    let weak = x.0 <= y.0 && x.1 >= y.1 && x.2 <= y.2;
+                    assert!(!weak, "front entry {x:?} weakly dominates {y:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn front3_dominates_bound_probe() {
+        let mut inc = ParetoFront3::new();
+        inc.insert(2.0, 5.0, 3.0, 0);
+        // Optimistic corner worse-or-equal on all axes → prunable.
+        assert!(inc.dominates_bound(2.0, 5.0, 3.0));
+        assert!(inc.dominates_bound(3.0, 4.0, 4.0));
+        // Any axis where the corner beats the entry → must solve.
+        assert!(!inc.dominates_bound(1.5, 4.0, 4.0), "smaller area escapes");
+        assert!(!inc.dominates_bound(3.0, 6.0, 4.0), "higher perf UB escapes");
+        assert!(!inc.dominates_bound(3.0, 4.0, 2.0), "lower energy LB escapes");
     }
 
     #[test]

@@ -122,24 +122,25 @@ pub fn energy_evals(result: &ScenarioResult, platform: &PlatformSpec) -> Vec<Ene
         .iter()
         .map(|p| {
             let breakdown = area_model.breakdown(&p.hw);
-            // Workload-weighted average power: weight each entry's power by
-            // its share of the total time.
-            let mut acc_pw = 0.0;
-            let mut acc_t = 0.0;
-            for sol in p.per_entry.iter().flatten() {
-                let pw =
-                    platform.power.power_w(&p.hw, &breakdown, &sol.est, &platform.machine, 1.0);
-                acc_pw += pw * sol.est.seconds;
-                acc_t += sol.est.seconds;
-            }
-            let power_w = if acc_t > 0.0 { acc_pw / acc_t } else { f64::NAN };
+            // Workload-weighted average power and energy via the shared
+            // accumulation (`codesign::energy`) — the gated tri-objective
+            // sweep runs the same function on the same inputs, which is
+            // what keeps the two paths' energies bit-identical.
+            let ep = crate::codesign::energy::energy_point(
+                &p.hw,
+                &breakdown,
+                &p.per_entry,
+                &platform.power,
+                &platform.machine,
+                p.seconds,
+            );
             EnergyEval {
                 hw: p.hw,
                 area_mm2: p.area_mm2,
                 gflops: p.gflops,
-                power_w,
-                energy_j: power_w * p.seconds,
-                gflops_per_w: p.gflops / power_w,
+                power_w: ep.power_w,
+                energy_j: ep.energy_j,
+                gflops_per_w: p.gflops / ep.power_w,
             }
         })
         .collect()

@@ -682,6 +682,29 @@ impl MemoCache {
         }
     }
 
+    /// Explicit enforcement entry point for idle-time sweeps: run passes
+    /// until the store is back at budget, returning the slots evicted. The
+    /// serve daemon calls this (via `Session::sweep_idle`) when its mailbox
+    /// drains, so eviction debt deferred by pinned batches is paid while
+    /// idle instead of at the start of the next request. Cheap no-op (0)
+    /// when the store is unbounded, already at budget, or another pass
+    /// holds the gate. Unlike the insert-time trigger this ignores the
+    /// futile-pass suspension — a pin may have dropped with no insert
+    /// since, and idle time is exactly when re-checking costs nothing.
+    pub fn sweep_to_budget(&self) -> u64 {
+        let Some(budget) = self.budget else { return 0 };
+        let Ok(_gate) = self.evict_gate.try_lock() else { return 0 };
+        let mut evicted = 0u64;
+        while self.resident.load(Ordering::Relaxed) > budget.max_entries {
+            let n = self.enforce_budget(budget);
+            if n == 0 {
+                break;
+            }
+            evicted += n;
+        }
+        evicted
+    }
+
     /// One enforcement pass: snapshot evictable candidates shard by shard
     /// (locks never nest with each other), order them `BoundedOut` first
     /// then oldest-touched, and remove until the store is a sixteenth
@@ -1186,6 +1209,37 @@ mod tests {
         cache.get_or_compute(key(7), dummy_solution);
         assert!(cache.len() <= 2, "budget enforced after pin drop, got {}", cache.len());
         assert!(cache.eviction_snapshot().evicted() >= 5);
+    }
+
+    #[test]
+    fn idle_sweep_pays_deferred_eviction_debt() {
+        let cache = MemoCache::with_shards_and_budget(1, Some(MemoBudget::entries(2)));
+        let pin = cache.pin();
+        for i in 0..6 {
+            cache.get_or_compute(key(i + 1), dummy_solution);
+        }
+        assert_eq!(cache.len(), 6, "pinned batch overshoots legally");
+        drop(pin);
+        // No insert arrives after the pin drop; an explicit idle sweep
+        // sheds the excess anyway.
+        let evicted = cache.sweep_to_budget();
+        assert!(evicted >= 4, "sweep pays the deferred debt, evicted {evicted}");
+        assert!(cache.len() <= 2, "store back at budget, got {}", cache.len());
+        // At budget, a sweep is a cheap no-op.
+        assert_eq!(cache.sweep_to_budget(), 0);
+        // While a pin protects everything, the sweep evicts nothing.
+        let pinned = MemoCache::with_shards_and_budget(1, Some(MemoBudget::entries(2)));
+        let hold = pinned.pin();
+        for i in 0..4 {
+            pinned.get_or_compute(key(i + 1), dummy_solution);
+        }
+        assert_eq!(pinned.sweep_to_budget(), 0);
+        assert_eq!(pinned.len(), 4);
+        drop(hold);
+        // Unbounded stores never sweep.
+        let unbounded = MemoCache::new();
+        unbounded.get_or_compute(key(1), dummy_solution);
+        assert_eq!(unbounded.sweep_to_budget(), 0);
     }
 
     #[test]

@@ -685,6 +685,241 @@ impl Coordinator {
         }
     }
 
+    /// Bound-gated **tri-objective** Pareto sweep (area ↓, perf ↑,
+    /// energy ↓): the engine behind `ParetoEnergy` requests.
+    ///
+    /// Structure follows [`Self::run_pareto_gated`] — best-bound-first
+    /// ramp-up chunks, front-dominance gating on certified bounds,
+    /// `BoundedOut` marks for skipped instances, final front rebuilt from
+    /// the solved points in enumeration order — with two deliberate
+    /// differences the third axis forces:
+    ///
+    /// * **The gate is 3-D.** A candidate is skipped only when some front
+    ///   entry weakly dominates its *optimistic corner*
+    ///   `(area, perf_ub, energy_lb)`, where `perf_ub` comes from the
+    ///   weighted-seconds bound and `energy_lb` is
+    ///   [`bounds::energy_lower_bound`] (power floor × the same seconds
+    ///   bound). Both bounds carry the one-sided safety margin, so a skip
+    ///   means strict domination of the candidate's true point — it could
+    ///   join neither the front nor a tie (`codesign::pareto` documents the
+    ///   argument on [`ParetoFront3::dominates_bound`]).
+    /// * **No progressive per-candidate cutoff.** The 2-D path hands
+    ///   [`Self::solve_candidate_gated`] a seconds budget past which a
+    ///   candidate is abandoned mid-solve; under three objectives a
+    ///   perf-dominated candidate can still join the front on lower energy,
+    ///   so that cutoff is *unsound* here. Survivors are solved in full
+    ///   (`budget_seconds: None`) and pruning happens only at candidate
+    ///   granularity, before any solving starts.
+    ///
+    /// Per-design energy is computed by `codesign::energy::energy_point` on
+    /// the exact per-entry solutions read back from the memo store — the
+    /// same shared accumulation the batch-derived reporting path uses — so
+    /// gated and audit (`--no-prune`) runs are bit-identical structurally,
+    /// not coincidentally. Zero-weight entries stay unsolved (`None`) on
+    /// both arms and contribute no phase time to the average.
+    pub fn run_pareto_energy_gated(&self, scenario: &Scenario) -> GatedParetoEnergyResult {
+        use crate::codesign::energy::{self, EnergyPoint};
+        use crate::codesign::pareto::ParetoFront3;
+        let t0 = Instant::now();
+        {
+            let mut guard = self.solved_under.lock().unwrap();
+            match &*guard {
+                Some((citer, opts)) => assert!(
+                    *citer == scenario.citer && *opts == scenario.solve_opts,
+                    "this coordinator's cache was populated under a different C_iter \
+                     table / solver options; use a fresh Coordinator"
+                ),
+                None => *guard = Some((scenario.citer.clone(), scenario.solve_opts.clone())),
+            }
+        }
+        let _batch = self.batch_lock.lock().unwrap();
+        // Pin for the whole sweep: the energy computation reads every
+        // survivor's exact entries back out of the store after its solve.
+        let _pin = self.cache.pin();
+        let prune_epoch = self.prune.snapshot();
+        let citer = &scenario.citer;
+        let opts = &scenario.solve_opts;
+        let threads = scenario.threads.max(1);
+        let space = enumerate_space(&self.area_model, &scenario.space);
+        let chars = citer.characterize_workload(&scenario.workload);
+        let entries = &scenario.workload.entries;
+        let flops_weighted: f64 = entries
+            .iter()
+            .filter(|e| e.weight > 0.0)
+            .map(|e| e.weight * Stencil::get(e.stencil).flops_per_point * e.size.points())
+            .sum();
+
+        // Per-point objective lower bounds — identical precompute to the
+        // 2-D path — plus each point's certified power floor (a pure
+        // function of its silicon breakdown), which turns the seconds bound
+        // into the energy bound.
+        let mut stats = PruneStats::default();
+        let point_bounds: Vec<(Vec<f64>, f64)> =
+            parallel_map(&space, threads.min(space.len().max(1)), |pt| {
+                let mut per = Vec::with_capacity(entries.len());
+                let mut sum = 0.0f64;
+                for (e, st) in entries.iter().zip(&chars) {
+                    if e.weight > 0.0 {
+                        let lb = bounds::lower_bound(&self.time_model, st, &e.size, &pt.hw, opts);
+                        per.push(lb);
+                        sum += e.weight * lb;
+                    } else {
+                        per.push(f64::NAN); // never read: zero-weight entries are not solved
+                    }
+                }
+                (per, sum)
+            });
+        let floors: Vec<f64> = space
+            .iter()
+            .map(|pt| {
+                bounds::power_floor_w(&self.platform.power, &self.area_model.breakdown(&pt.hw))
+            })
+            .collect();
+        if opts.prune {
+            stats.bounds_computed +=
+                (space.len() * entries.iter().filter(|e| e.weight > 0.0).count()) as u64;
+        }
+        let mut order: Vec<usize> = (0..space.len())
+            .filter(|&i| !opts.prune || point_bounds[i].1.is_finite())
+            .collect();
+        order.sort_by(|&a, &b| {
+            point_bounds[a].1.partial_cmp(&point_bounds[b].1).unwrap().then(a.cmp(&b))
+        });
+        let mut solver_infeasible = 0usize;
+
+        let mut gate = ParetoFront3::new();
+        // (index, seconds, gflops, energy)
+        let mut solved: Vec<(usize, f64, f64, EnergyPoint)> = Vec::new();
+        let mut total_evals = 0u64;
+        let mut bounded_points = 0usize;
+        for range in rampup_chunks(order.len(), 32) {
+            let chunk = &order[range];
+            let survivors: Vec<usize> = chunk
+                .iter()
+                .copied()
+                .filter(|&i| {
+                    if !opts.prune {
+                        return true;
+                    }
+                    let gflops_ub = flops_weighted / point_bounds[i].1 / 1e9;
+                    let energy_lb = floors[i] * point_bounds[i].1;
+                    let dominated =
+                        gate.dominates_bound(space[i].area_mm2, gflops_ub, energy_lb);
+                    if dominated {
+                        bounded_points += 1;
+                        for (j, e) in entries.iter().enumerate() {
+                            if e.weight > 0.0 {
+                                stats.bounded_out += 1;
+                                let key = CacheKey::new(
+                                    self.platform_fp,
+                                    &space[i].hw,
+                                    &chars[j],
+                                    &e.size,
+                                );
+                                self.cache.insert_bound(key, point_bounds[i].0[j]);
+                            }
+                        }
+                    }
+                    !dominated
+                })
+                .collect();
+            let results: Vec<(Option<(f64, f64, EnergyPoint)>, u64, PruneStats)> =
+                parallel_map(&survivors, threads.min(survivors.len().max(1)), |&i| {
+                    let (outcome, evals, ps) = self.solve_candidate_gated(
+                        &space[i].hw,
+                        entries,
+                        &chars,
+                        citer,
+                        opts,
+                        &point_bounds[i].0,
+                        None, // see the method docs: a seconds cutoff is unsound in 3-D
+                    );
+                    let out = outcome.map(|(seconds, gflops)| {
+                        let per_entry: Vec<Option<InnerSolution>> = entries
+                            .iter()
+                            .zip(&chars)
+                            .map(|(e, st)| {
+                                if e.weight == 0.0 {
+                                    return None;
+                                }
+                                let key = CacheKey::new(
+                                    self.platform_fp,
+                                    &space[i].hw,
+                                    st,
+                                    &e.size,
+                                );
+                                self.cache.get(&key).expect(
+                                    "a fully-solved candidate must leave exact entries resident",
+                                )
+                            })
+                            .collect();
+                        let breakdown = self.area_model.breakdown(&space[i].hw);
+                        let ep = energy::energy_point(
+                            &space[i].hw,
+                            &breakdown,
+                            &per_entry,
+                            &self.platform.power,
+                            &self.platform.machine,
+                            seconds,
+                        );
+                        (seconds, gflops, ep)
+                    });
+                    (out, evals, ps)
+                });
+            for (&i, (outcome, evals, ps)) in survivors.iter().zip(&results) {
+                total_evals += evals;
+                self.prune.add(ps);
+                if let Some((seconds, gflops, ep)) = outcome {
+                    gate.insert(space[i].area_mm2, *gflops, ep.energy_j, i);
+                    solved.push((i, *seconds, *gflops, *ep));
+                } else if opts.prune {
+                    bounded_points += 1;
+                } else {
+                    solver_infeasible += 1;
+                }
+            }
+        }
+        self.prune.add(&stats);
+        let infeasible = if opts.prune {
+            point_bounds.iter().filter(|(_, s)| s.is_infinite()).count()
+        } else {
+            solver_infeasible
+        };
+
+        // Final front: solved points in enumeration order, the insertion
+        // sequence (and tie handling) an ungated full sweep would use.
+        solved.sort_by_key(|&(i, _, _, _)| i);
+        let mut front = ParetoFront3::new();
+        for (slot, &(i, _, gflops, ep)) in solved.iter().enumerate() {
+            front.insert(space[i].area_mm2, gflops, ep.energy_j, slot);
+        }
+        let front: Vec<GatedEnergyFrontPoint> = front
+            .indices()
+            .into_iter()
+            .map(|slot| {
+                let (i, seconds, gflops, ep) = solved[slot];
+                GatedEnergyFrontPoint {
+                    hw: space[i].hw,
+                    area_mm2: space[i].area_mm2,
+                    gflops,
+                    seconds,
+                    power_w: ep.power_w,
+                    energy_j: ep.energy_j,
+                }
+            })
+            .collect();
+        GatedParetoEnergyResult {
+            scenario_name: scenario.name.clone(),
+            front,
+            designs: space.len() - infeasible,
+            infeasible,
+            total_evals,
+            bounded_out: bounded_points,
+            prune: self.prune.delta_since(prune_epoch),
+            wall: t0.elapsed(),
+        }
+    }
+
     /// Solve one gated design point: a thin adapter over
     /// [`Self::solve_candidate_gated`] that converts the front's best
     /// throughput at this point's area into the weighted-seconds budget the
@@ -877,6 +1112,38 @@ pub struct GatedParetoResult {
     pub wall: Duration,
 }
 
+/// One member of a gated tri-objective front: [`GatedFrontPoint`] plus the
+/// energy axis.
+#[derive(Clone, Debug)]
+pub struct GatedEnergyFrontPoint {
+    pub hw: HwParams,
+    pub area_mm2: f64,
+    pub gflops: f64,
+    pub seconds: f64,
+    /// Workload-average power, W.
+    pub power_w: f64,
+    /// Workload energy, J per sweep-unit.
+    pub energy_j: f64,
+}
+
+/// What [`Coordinator::run_pareto_energy_gated`] reports.
+#[derive(Clone, Debug)]
+pub struct GatedParetoEnergyResult {
+    pub scenario_name: String,
+    /// The tri-objective Pareto front in enumeration order — bit-identical
+    /// between the gated and `--no-prune` audit arms.
+    pub front: Vec<GatedEnergyFrontPoint>,
+    /// Feasible design points (certified from bounds without solving).
+    pub designs: usize,
+    pub infeasible: usize,
+    /// Model evaluations actually spent.
+    pub total_evals: u64,
+    /// Design points answered purely from bounds.
+    pub bounded_out: usize,
+    pub prune: PruneStats,
+    pub wall: Duration,
+}
+
 /// Ramp-up chunk boundaries for bound-gated sweeps: 1, 2, 4, … doubling up
 /// to `cap`. The first chunk is a single item — the best-bound candidate —
 /// so an incumbent exists before the second decision is ever made (a flat
@@ -1014,6 +1281,87 @@ mod tests {
         }
         assert_eq!(after.pareto, full.pareto);
         assert_eq!(coord.cache.bounded_len(), 0, "every mark was upgraded");
+    }
+
+    #[test]
+    fn gated_energy_front_is_bit_identical_to_audit_and_batch_oracle() {
+        use crate::codesign::pareto::pareto_front3;
+        use crate::codesign::power::energy_evals;
+        let sc = quick();
+
+        // Independent oracle: the batch sweep's full point set, energies
+        // from the reporting path (`energy_evals`), front by brute force.
+        let full = Coordinator::paper().run_scenario(&sc).result;
+        let evals = energy_evals(&full, Platform::default_spec());
+        let pts3: Vec<(f64, f64, f64)> =
+            evals.iter().map(|e| (e.area_mm2, e.gflops, e.energy_j)).collect();
+        let oracle = pareto_front3(&pts3);
+
+        // Audit arm: same request, pruning off.
+        let mut no_prune = sc.clone();
+        no_prune.solve_opts = no_prune.solve_opts.without_prune();
+        let audit = Coordinator::paper().run_pareto_energy_gated(&no_prune);
+
+        // Gated arm.
+        let coord = Coordinator::paper();
+        let gated = coord.run_pareto_energy_gated(&sc);
+
+        assert_eq!(gated.designs, full.points.len());
+        assert_eq!(gated.infeasible, full.infeasible_points);
+        assert_eq!(audit.designs, gated.designs);
+        assert_eq!(audit.infeasible, gated.infeasible);
+
+        // Gated == audit, bit for bit, every axis.
+        assert_eq!(gated.front.len(), audit.front.len());
+        for (g, a) in gated.front.iter().zip(&audit.front) {
+            assert_eq!(g.hw, a.hw);
+            assert_eq!(g.area_mm2.to_bits(), a.area_mm2.to_bits());
+            assert_eq!(g.gflops.to_bits(), a.gflops.to_bits());
+            assert_eq!(g.seconds.to_bits(), a.seconds.to_bits());
+            assert_eq!(g.power_w.to_bits(), a.power_w.to_bits());
+            assert_eq!(g.energy_j.to_bits(), a.energy_j.to_bits());
+        }
+
+        // Gated == brute-force oracle over the batch path's energies.
+        assert_eq!(gated.front.len(), oracle.len());
+        for (g, &i) in gated.front.iter().zip(&oracle) {
+            assert_eq!(g.hw, evals[i].hw);
+            assert_eq!(g.area_mm2.to_bits(), evals[i].area_mm2.to_bits());
+            assert_eq!(g.gflops.to_bits(), evals[i].gflops.to_bits());
+            assert_eq!(g.power_w.to_bits(), evals[i].power_w.to_bits());
+            assert_eq!(g.energy_j.to_bits(), evals[i].energy_j.to_bits());
+        }
+
+        // The 3-D gate did real work, and its bound marks re-solve cleanly.
+        assert!(gated.bounded_out > 0, "3-D gating should skip dominated points");
+        assert!(gated.total_evals < audit.total_evals);
+        assert!(coord.cache.bounded_len() > 0);
+        let after = coord.run_scenario(&sc).result;
+        for (a, b) in after.points.iter().zip(&full.points) {
+            assert_eq!(a.gflops.to_bits(), b.gflops.to_bits());
+        }
+        assert_eq!(coord.cache.bounded_len(), 0, "every mark was upgraded");
+    }
+
+    #[test]
+    fn energy_front_contains_the_2d_front_projection_winners() {
+        // Every member of the 2-D (area, perf) front is Pareto-optimal in
+        // 3-D too — adding an objective can only grow the front.
+        let sc = quick();
+        let coord = Coordinator::paper();
+        let front2 = coord.run_pareto_gated(&sc);
+        let front3 = coord.run_pareto_energy_gated(&sc);
+        assert!(front3.front.len() >= front2.front.len());
+        for g in &front2.front {
+            // Exact membership, or — only possible under an exact
+            // (area, perf) tie — a tied twin that won on energy.
+            assert!(
+                front3.front.iter().any(|h| h.area_mm2.to_bits() == g.area_mm2.to_bits()
+                    && h.gflops.to_bits() == g.gflops.to_bits()),
+                "2-D front member {:?} has no (area, perf) representative on the 3-D front",
+                g.hw
+            );
+        }
     }
 
     #[test]

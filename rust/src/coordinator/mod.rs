@@ -38,5 +38,6 @@ pub use cache::{
     MemoCache, MemoPin, StatsSnapshot,
 };
 pub use driver::{
-    BatchReport, Coordinator, GatedFrontPoint, GatedParetoResult, PruneCounters, SweepReport,
+    BatchReport, Coordinator, GatedEnergyFrontPoint, GatedFrontPoint, GatedParetoEnergyResult,
+    GatedParetoResult, PruneCounters, SweepReport,
 };

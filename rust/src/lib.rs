@@ -37,6 +37,15 @@
 //! (`maxwell:bw20:clk1.4`) open clocks, bandwidth, latency constants and
 //! grid bounds as scenario dimensions (CLI `--platform`, wire schema v3).
 //!
+//! ## Energy as a third objective
+//!
+//! Beyond the paper's area/perf trade-off, `pareto_energy` requests (wire
+//! schema v6, CLI `explore --objective energy`) answer with tri-objective
+//! (area ↓, perf ↑, energy ↓) Pareto fronts ([`codesign::energy`],
+//! [`codesign::pareto::ParetoFront3`]), swept under a certified energy
+//! roofline bound ([`opt::bounds::energy_lower_bound`]) and certified
+//! bit-identical to the ungated path against a brute-force oracle.
+//!
 //! See `DESIGN.md` (repo root) for the system inventory, the batched DSE
 //! engine's contract, the stencil characterization math, and the
 //! per-experiment index.

@@ -91,6 +91,7 @@ fn cli() -> Cli {
                     save_artifact.clone(),
                     OptSpec { name: "class", takes_value: true, default: Some("both"), help: "2d | 3d | both | <stencil>" },
                     OptSpec { name: "stencil", takes_value: true, default: None, help: "single stencil: preset (jacobi2d) or family (star3d:r2)" },
+                    OptSpec { name: "objective", takes_value: true, default: Some("perf"), help: "perf (best-throughput exploration) | area-perf (2-objective Pareto front) | energy (tri-objective area x perf x energy front)" },
                     OptSpec { name: "measured-citer", takes_value: false, default: None, help: "use PJRT-measured C_iter" },
                 ],
             },
@@ -148,11 +149,12 @@ fn cli() -> Cli {
                     threads.clone(),
                     platform.clone(),
                     OptSpec { name: "all", takes_value: false, default: None, help: "all experiments" },
+                    OptSpec { name: "power-gating", takes_value: false, default: None, help: "print the §V-D power-gating curve for the platform's reference hardware and exit" },
                 ],
             },
             Command {
                 name: "serve",
-                about: "answer a JSON request file (--requests) or run as a streaming daemon (--listen) through one warm session (wire schema v5; v1-v4 accepted)",
+                about: "answer a JSON request file (--requests) or run as a streaming daemon (--listen) through one warm session (wire schema v6; v1-v5 accepted)",
                 opts: vec![
                     platform.clone(),
                     no_prune.clone(),
@@ -396,6 +398,50 @@ fn bench_out_daemon(report: &DaemonReport, args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `report --power-gating`: the §V-D closing query — sweep the number of
+/// powered SMs on the platform's reference hardware and print the average
+/// power and surviving relative throughput at each gating level. The
+/// workload estimate comes from the inner solver's optimum for jacobi2d at
+/// a paper-scale grid, so the utilization entering the power model
+/// (occupancy, compute/memory balance) is the modelled one, not an assumed
+/// constant.
+fn power_gating_report(platform: &'static Platform) -> anyhow::Result<()> {
+    use codesign::codesign::power::gating_curve;
+    use codesign::opt::inner::solve_inner;
+    use codesign::opt::problem::{InnerProblem, SolveOpts};
+    use codesign::stencil::defs::Stencil;
+    use codesign::stencil::workload::ProblemSize;
+
+    let spec = &platform.spec;
+    let (ref_name, hw) = match spec.references.first() {
+        Some(r) => (r.name.clone(), r.hw),
+        None => ("gtx980".to_string(), codesign::area::params::HwParams::gtx980()),
+    };
+    let stencil = *Stencil::by_name_err("jacobi2d").map_err(|msg| anyhow::anyhow!("{msg}"))?;
+    let size = ProblemSize::d2(8192, 4096);
+    let sol =
+        solve_inner(&spec.time_model(), &InnerProblem { stencil, size, hw }, &SolveOpts::default())
+            .ok_or_else(|| {
+                anyhow::anyhow!("no feasible jacobi2d tiling on reference '{ref_name}'")
+            })?;
+    let breakdown = spec.area_model().breakdown(&hw);
+    let curve = gating_curve(&hw, &breakdown, &sol.est, &spec.power, &spec.machine);
+    println!(
+        "power-gating curve on {} ({ref_name}, {} SMs): jacobi2d {}x{}, T={}",
+        platform.name, hw.n_sm, size.s1, size.s2, size.t
+    );
+    println!("  {:>9}  {:>9}  {:>9}", "active", "power W", "rel perf");
+    for (active, watts, rel) in &curve {
+        println!("  {active:>6} SM  {watts:>9.1}  {:>8.0}%", rel * 100.0);
+    }
+    let full = curve.last().expect("gating curve covers 1..=n_sm");
+    println!(
+        "  (gated floor {:.1} W at 1 SM; full tilt {:.1} W at {} SMs)",
+        curve[0].1, full.1, hw.n_sm
+    );
+    Ok(())
+}
+
 fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
     let out = args.opt_or("out", "reports");
     let out = Path::new(&out);
@@ -415,6 +461,9 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
             }
         }
         "explore" | "sensitivity" | "report" => {
+            if cmd == "report" && args.flag("power-gating") {
+                return power_gating_report(platform);
+            }
             let class = args.opt_or("class", "both");
             // `--class both` fans out to the two paper panels; anything else
             // (2d, 3d, a preset name, a parametric family like star3d:r2)
@@ -454,13 +503,30 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
             let spec_2d = want_2d.then(|| spec_from_args(ScenarioSpec::two_d(), args, &citer));
             let spec_3d = want_3d.then(|| spec_from_args(ScenarioSpec::three_d(), args, &citer));
 
+            // `--objective` picks the request family explore submits:
+            // `perf` keeps the paper's best-throughput exploration,
+            // `area-perf` asks for the 2-objective Pareto front, `energy`
+            // for the tri-objective (area, perf, energy) front certified by
+            // the energy roofline bound. Only explore has the option; the
+            // other commands always take the perf path.
+            let objective = args.opt_or("objective", "perf");
+            anyhow::ensure!(
+                matches!(objective.as_str(), "perf" | "area-perf" | "energy"),
+                "unknown --objective '{objective}' (choose: perf | area-perf | energy)"
+            );
+            let to_request = |spec: ScenarioSpec| match objective.as_str() {
+                "area-perf" => CodesignRequest::pareto(spec),
+                "energy" => CodesignRequest::pareto_energy(spec),
+                _ => CodesignRequest::explore(spec),
+            };
+
             let mut requests = Vec::new();
             if let Some(c) = single_class {
                 let spec = spec_from_args(ScenarioSpec::new(c), args, &citer);
-                requests.push(CodesignRequest::explore(spec));
+                requests.push(to_request(spec));
             }
             for spec in [&spec_2d, &spec_3d].into_iter().flatten() {
-                requests.push(CodesignRequest::explore(spec.clone()));
+                requests.push(to_request(spec.clone()));
             }
             if cmd != "explore" {
                 if let (Some(s2), Some(s3)) = (&spec_2d, &spec_3d) {
@@ -514,6 +580,47 @@ fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
                     (CodesignResponse::SolverCost(_), ResponseDetail::Report(r)) => {
                         print!("{}", r.summary);
                         r.save(out)?;
+                    }
+                    (CodesignResponse::Pareto(p), _) => {
+                        println!(
+                            "{}: area/perf Pareto front — {} design(s) evaluated \
+                             ({} infeasible, {} bounded out), {} on the front:",
+                            p.scenario,
+                            p.designs,
+                            p.infeasible,
+                            p.bounded_out,
+                            p.pareto.len()
+                        );
+                        for d in &p.pareto {
+                            println!(
+                                "  {:<36} {:>8.1} mm²  {:>8.0} GFLOP/s",
+                                d.label(),
+                                d.area_mm2,
+                                d.gflops
+                            );
+                        }
+                    }
+                    (CodesignResponse::ParetoEnergy(p), _) => {
+                        println!(
+                            "{}: tri-objective (area, perf, energy) Pareto front — \
+                             {} design(s) evaluated ({} infeasible, {} bounded out), \
+                             {} on the front:",
+                            p.scenario,
+                            p.designs,
+                            p.infeasible,
+                            p.bounded_out,
+                            p.pareto.len()
+                        );
+                        for d in &p.pareto {
+                            println!(
+                                "  {:<36} {:>8.1} mm²  {:>8.0} GFLOP/s  {:>7.1} W  {:>10.4} J",
+                                d.label(),
+                                d.area_mm2,
+                                d.gflops,
+                                d.power_w,
+                                d.energy_j
+                            );
+                        }
                     }
                     (CodesignResponse::Error(e), _) => {
                         anyhow::bail!("{} request failed: {}", e.request, e.message)

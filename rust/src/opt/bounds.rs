@@ -41,7 +41,9 @@
 //! `prop_lower_bound_finite_iff_feasible`), which is what lets the gated
 //! Pareto path count feasible/infeasible designs without solving them.
 
+use crate::area::model::AreaBreakdown;
 use crate::area::params::HwParams;
+use crate::codesign::power::PowerModel;
 use crate::opt::problem::{self, SolveOpts};
 use crate::stencil::defs::Stencil;
 use crate::stencil::workload::{ProblemSize, WorkloadEntry};
@@ -233,6 +235,40 @@ pub fn lower_bound_entry(
     lower_bound(model, &stencil, &entry.size, hw, opts)
 }
 
+/// Certified floor (W) on [`PowerModel::power_w`] at `active_sm_frac = 1`
+/// — the configuration the energy objective charges
+/// (`codesign::energy::weighted_power_w` evaluates every phase fully
+/// active): leakage over the whole die (`leakage · (sm_area + l2) =
+/// leakage · total`) plus the constant baseboard draw. Both dynamic terms
+/// are ≥ 0, so every per-phase power — and therefore every time-weighted
+/// average of them — is ≥ this floor. Per-design, not per-entry: the floor
+/// depends only on the hardware point's area breakdown.
+pub fn power_floor_w(power: &PowerModel, breakdown: &AreaBreakdown) -> f64 {
+    power.leakage_w_per_mm2 * breakdown.total() + power.base_w
+}
+
+/// Certified lower bound (J per sweep-unit) on a design's workload energy:
+/// [`power_floor_w`] × a certified lower bound on its weighted seconds
+/// (`Σ wᵢ · lower_bound_entry(i)`).
+///
+/// Soundness composes one-sidedly: true energy is
+/// `avg_power × weighted_seconds`, the average of per-phase powers each
+/// ≥ the floor is ≥ the floor, and `weighted_seconds ≥ weighted_seconds_lb`
+/// (each with the seconds bound's strict `1 − 1e-9` safety margin). The
+/// product is therefore **strictly below** the measured energy of any
+/// feasible design — which is what lets the tri-objective gate treat
+/// "some front entry is ≤ the candidate's optimistic energy corner" as
+/// strict domination. Finite ⟺ feasible is inherited from the seconds
+/// bound: the floor is finite and positive, so the energy bound is
+/// `INFINITY` exactly when [`lower_bound`] is.
+pub fn energy_lower_bound(
+    power: &PowerModel,
+    breakdown: &AreaBreakdown,
+    weighted_seconds_lb: f64,
+) -> f64 {
+    power_floor_w(power, breakdown) * weighted_seconds_lb
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -325,6 +361,70 @@ mod tests {
         let at_cap = lower_bound_tt(&m, st, &size, &hw, cap);
         assert!(lb < at_2, "lb {lb} vs t_T=2 {at_2}");
         assert!(lb < at_cap, "lb {lb} vs t_T=cap {at_cap}");
+    }
+
+    #[test]
+    fn power_floor_is_below_power_of_sampled_phases() {
+        // Every fully-active power evaluation the energy accumulation can
+        // produce sits at or above the floor — over real solver-shaped
+        // estimates from several stencils, sizes and software points.
+        let m = model();
+        let hw = HwParams::gtx980();
+        let power = PowerModel::maxwell();
+        let breakdown = crate::area::model::AreaModel::paper().breakdown(&hw);
+        let floor = power_floor_w(&power, &breakdown);
+        assert!(floor.is_finite() && floor > 0.0);
+        for (st_id, size) in [
+            (StencilId::Jacobi2D, ProblemSize::d2(8192, 4096)),
+            (StencilId::Heat2D, ProblemSize::d2(4096, 1024)),
+        ] {
+            let st = Stencil::get(st_id);
+            for (tiles, k) in [
+                (TileSizes::d2(32, 64, 8), 2),
+                (TileSizes::d2(64, 128, 16), 4),
+                (TileSizes::d2(1, 96, 12), 5),
+            ] {
+                let sw = SoftwareParams::new(tiles, k);
+                assert!(m.feasibility(st, &hw, &sw).is_ok());
+                let est = m.evaluate(st, &size, &hw, &sw);
+                let pw = power.power_w(&hw, &breakdown, &est, &m.machine, 1.0);
+                assert!(
+                    floor <= pw,
+                    "{st_id:?} {tiles:?}: floor {floor} above power {pw}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn energy_bound_composes_one_sidedly() {
+        // energy_lb = floor × ws_lb ≤ avg_power × ws whenever
+        // avg_power ≥ floor and ws ≥ ws_lb — the exact shape the gated
+        // sweep relies on. Also: finite ⟺ feasible inherited from the
+        // seconds bound.
+        let m = model();
+        let st = Stencil::get(StencilId::Jacobi2D);
+        let hw = HwParams::gtx980();
+        let power = PowerModel::maxwell();
+        let breakdown = crate::area::model::AreaModel::paper().breakdown(&hw);
+        let size = ProblemSize::d2(8192, 4096);
+        let ws_lb = lower_bound(&m, st, &size, &hw, &SolveOpts::default());
+        assert!(ws_lb.is_finite() && ws_lb > 0.0);
+        let elb = energy_lower_bound(&power, &breakdown, ws_lb);
+        assert!(elb.is_finite() && elb > 0.0);
+        let sw = SoftwareParams::new(TileSizes::d2(32, 64, 8), 2);
+        let est = m.evaluate(st, &size, &hw, &sw);
+        let pw = power.power_w(&hw, &breakdown, &est, &m.machine, 1.0);
+        assert!(ws_lb <= est.seconds);
+        assert!(elb <= pw * est.seconds, "energy lb {elb} above {}", pw * est.seconds);
+
+        // Infeasible instance → infinite seconds bound → infinite energy bound.
+        let mut tiny = hw;
+        tiny.m_sm_kb = 0.25;
+        let inf = lower_bound(&m, st, &ProblemSize::d2(4096, 1024), &tiny, &SolveOpts::default());
+        assert!(inf.is_infinite());
+        let tiny_breakdown = crate::area::model::AreaModel::paper().breakdown(&tiny);
+        assert!(energy_lower_bound(&power, &tiny_breakdown, inf).is_infinite());
     }
 
     #[test]

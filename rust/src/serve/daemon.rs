@@ -77,6 +77,7 @@ pub fn strip_prune(req: &mut CodesignRequest) {
     match req {
         CodesignRequest::Explore { scenario }
         | CodesignRequest::Pareto { scenario }
+        | CodesignRequest::ParetoEnergy { scenario }
         | CodesignRequest::WhatIf { scenario, .. } => scenario.solve_opts.prune = false,
         CodesignRequest::Sensitivity { scenario_2d, scenario_3d, .. } => {
             scenario_2d.solve_opts.prune = false;
@@ -97,6 +98,7 @@ pub fn force_scalar_eval(req: &mut CodesignRequest) {
     match req {
         CodesignRequest::Explore { scenario }
         | CodesignRequest::Pareto { scenario }
+        | CodesignRequest::ParetoEnergy { scenario }
         | CodesignRequest::WhatIf { scenario, .. } => scenario.solve_opts.scalar_eval = true,
         CodesignRequest::Sensitivity { scenario_2d, scenario_3d, .. } => {
             scenario_2d.solve_opts.scalar_eval = true;
@@ -307,6 +309,7 @@ impl Daemon {
         match req {
             CodesignRequest::Explore { scenario }
             | CodesignRequest::Pareto { scenario }
+            | CodesignRequest::ParetoEnergy { scenario }
             | CodesignRequest::WhatIf { scenario, .. } => Lane::Partition(
                 self.resolve_platform(scenario.platform).fingerprint(),
                 scenario.citer.clone(),
@@ -443,6 +446,26 @@ impl Daemon {
         ])
     }
 
+    /// Idle-time eviction sweep: called by a worker that just drained the
+    /// mailbox (no queued or in-flight work), to pay eviction debt the last
+    /// batches deferred while their pins suspended budget enforcement.
+    /// Best-effort and non-blocking — a partition whose session lock is
+    /// contended (new work just arrived) is skipped; the next idle moment or
+    /// the on-insert trigger catches it. Returns the entries evicted.
+    fn sweep_idle(&self) -> u64 {
+        let parts: Vec<Arc<Partition>> =
+            self.partitions.lock().unwrap().iter().map(Arc::clone).collect();
+        let mut evicted = 0u64;
+        for p in parts {
+            let Ok(session) = p.session.try_lock() else { continue };
+            evicted += session.sweep_idle();
+            p.resident.store(session.cache_entries(), Ordering::Relaxed);
+            p.bounded.store(session.bounded_entries(), Ordering::Relaxed);
+            p.evicted.store(session.eviction_total().evicted(), Ordering::Relaxed);
+        }
+        evicted
+    }
+
     /// End-of-run memory telemetry, summed over every partition session plus
     /// the direct lane (locks each session; call only when workers are done).
     fn memory_total(&self) -> MemoryTelemetry {
@@ -513,6 +536,14 @@ impl Daemon {
                                 .push(job.admitted.elapsed().as_secs_f64() * 1e3);
                             mailbox.complete();
                             gate.release();
+                            // The worker that drains the mailbox pays any
+                            // deferred eviction debt while the daemon idles,
+                            // so the next request starts at budget instead
+                            // of evicting on its own first inserts.
+                            let snap = mailbox.snapshot();
+                            if snap.queued == 0 && snap.in_flight == 0 {
+                                daemon.sweep_idle();
+                            }
                         });
                     }
                 })
@@ -676,7 +707,10 @@ mod tests {
         assert_eq!(ids, ["a", "b"]);
         for f in &frames {
             assert!(f.get("response").is_some(), "{f:?} is not a response frame");
-            assert_eq!(f.get("schema").and_then(|v| v.as_f64()), Some(4.0));
+            assert_eq!(
+                f.get("schema").and_then(|v| v.as_f64()),
+                Some(wire::SCHEMA_VERSION as f64)
+            );
         }
 
         let bench = report.bench_json();
@@ -806,6 +840,7 @@ mod tests {
         let mut reqs = vec![
             CodesignRequest::explore(spec.clone()),
             CodesignRequest::pareto(spec.clone()),
+            CodesignRequest::pareto_energy(spec.clone()),
             CodesignRequest::what_if(spec.clone(), vec![(StencilId::Jacobi2D, 1.0)]),
             CodesignRequest::sensitivity(spec.clone(), ScenarioSpec::three_d(), (400.0, 450.0)),
             CodesignRequest::tune(crate::service::request::TuneRequest::new(430.0)),
@@ -817,6 +852,7 @@ mod tests {
             match r {
                 CodesignRequest::Explore { scenario }
                 | CodesignRequest::Pareto { scenario }
+                | CodesignRequest::ParetoEnergy { scenario }
                 | CodesignRequest::WhatIf { scenario, .. } => {
                     assert!(!scenario.solve_opts.prune)
                 }
@@ -837,6 +873,7 @@ mod tests {
         let mut reqs = vec![
             CodesignRequest::explore(spec.clone()),
             CodesignRequest::pareto(spec.clone()),
+            CodesignRequest::pareto_energy(spec.clone()),
             CodesignRequest::what_if(spec.clone(), vec![(StencilId::Jacobi2D, 1.0)]),
             CodesignRequest::sensitivity(spec.clone(), ScenarioSpec::three_d(), (400.0, 450.0)),
             CodesignRequest::tune(crate::service::request::TuneRequest::new(430.0)),
@@ -848,6 +885,7 @@ mod tests {
             match r {
                 CodesignRequest::Explore { scenario }
                 | CodesignRequest::Pareto { scenario }
+                | CodesignRequest::ParetoEnergy { scenario }
                 | CodesignRequest::WhatIf { scenario, .. } => {
                     assert!(scenario.solve_opts.scalar_eval)
                 }
@@ -859,6 +897,32 @@ mod tests {
                 CodesignRequest::Validate | CodesignRequest::SolverCost { .. } => {}
             }
         }
+    }
+
+    #[test]
+    fn idle_mailbox_triggers_eviction_sweep() {
+        // A budget far smaller than one sweep's footprint: during the
+        // request the batch pin defers enforcement (futile passes suspend
+        // it), and no insert arrives afterwards to re-trigger it. The
+        // worker that drains the mailbox must pay the debt itself, so the
+        // end-of-run store sits at budget with zero in-flight work.
+        let req = CodesignRequest::pareto(ScenarioSpec::two_d().quick(8));
+        let input = format!("{}\n", frame_line("a", &req));
+        let mut config = DaemonConfig::paper();
+        config.memo_budget = Some(MemoBudget::entries(4));
+        let (report, _) = run_daemon(config, &input);
+        assert_eq!(report.responses, 1);
+        assert_eq!(report.mailbox.queued, 0);
+        assert_eq!(report.mailbox.in_flight, 0);
+        assert!(
+            report.memory.eviction.evicted() > 0,
+            "the idle sweep evicted the over-budget slots"
+        );
+        assert!(
+            report.memory.resident_entries <= 4,
+            "store at budget after the idle sweep, got {}",
+            report.memory.resident_entries
+        );
     }
 
     #[test]

@@ -19,6 +19,11 @@
 //! * `save_artifact` snapshots only what is **resident** — entries already
 //!   evicted under budget are simply absent from the shard, which re-solves
 //!   them on demand after a warm start (cost, not answers).
+//!
+//! Budget enforcement is insert-triggered, so a batch whose pin suspended
+//! it can leave the store over budget with nothing left to re-arm it. The
+//! idle path pays that debt: [`Session::sweep_idle`] sweeps every partition
+//! back to budget, and the daemon calls it whenever its mailbox drains.
 
 use crate::coordinator::{entry_footprint_bytes, EvictionSnapshot, MemoBudget};
 use crate::service::Session;
@@ -138,6 +143,23 @@ mod tests {
     fn budgeted_session_reports_its_cap() {
         let s = Session::paper().with_memo_budget(Some(MemoBudget::entries(64)));
         assert_eq!(memory_telemetry(&s).budget_entries, Some(64));
+    }
+
+    #[test]
+    fn session_idle_sweep_pays_deferred_debt() {
+        use crate::service::{CodesignRequest, ScenarioSpec};
+        let mut s = Session::paper().with_memo_budget(Some(MemoBudget::entries(4)));
+        s.submit(&CodesignRequest::pareto(ScenarioSpec::two_d().quick(8)));
+        // The sweep's pin deferred enforcement and no insert follows it, so
+        // the store sits over budget until something sweeps.
+        let before = memory_telemetry(&s);
+        assert!(before.resident_entries > 4, "sweep left deferred debt");
+        let evicted = s.sweep_idle();
+        assert!(evicted > 0, "idle sweep pays the debt");
+        let after = memory_telemetry(&s);
+        assert!(after.resident_entries <= 4, "store back at budget, got {}", after.resident_entries);
+        // A second sweep finds nothing to do.
+        assert_eq!(s.sweep_idle(), 0);
     }
 
     #[test]

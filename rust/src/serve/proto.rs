@@ -3,7 +3,7 @@
 //! The daemon speaks one JSON object per line. A request frame is
 //!
 //! ```text
-//! {"id": "r07", "schema": 4, "request": {"type": "pareto", …}}
+//! {"id": "r07", "schema": 6, "request": {"type": "pareto", …}}
 //! ```
 //!
 //! where `id` is a required, client-chosen correlation string (responses
@@ -14,7 +14,7 @@
 //! daemon-local `{"type": "stats"}` probe. Response frames are
 //!
 //! ```text
-//! {"id": "r07", "response": {…}, "schema": 4}           answered request
+//! {"id": "r07", "response": {…}, "schema": 6}           answered request
 //! {"error": "…", "line": 12}                            malformed line
 //! {"id": "r07", "mailbox": {…}, "rejected": "overloaded"} admission refusal
 //! {"id": "s1", "stats": {…}}                            stats probe

@@ -3,19 +3,21 @@
 //! Three pieces:
 //!
 //! * [`request`] — the typed vocabulary: a [`CodesignRequest`] variant per
-//!   experiment (Explore, Pareto, WhatIf, Sensitivity, Tune, Validate,
-//!   SolverCost), builder-style [`ScenarioSpec`] construction, and a typed
-//!   [`CodesignResponse`] per variant.
+//!   experiment (Explore, Pareto, ParetoEnergy, WhatIf, Sensitivity, Tune,
+//!   Validate, SolverCost), builder-style [`ScenarioSpec`] construction, and
+//!   a typed [`CodesignResponse`] per variant.
 //! * [`session`] — the persistent [`Session`]: owns the coordinators, keeps
 //!   their memo caches warm across calls, and auto-partitions each submission
 //!   into compatible batch groups by (platform fingerprint, C_iter, solver
 //!   options) so mixed request sets batch instead of being rejected.
 //! * [`wire`] — the versioned JSON wire format: bit-exact request/response
-//!   round-trips and the `{"schema": 3, …}` file envelopes behind
+//!   round-trips and the `{"schema": 6, …}` file envelopes behind
 //!   `codesign serve --requests` (older files still decode; v2 added
 //!   parametric stencil-family names like `star3d:r2` everywhere a stencil
-//!   name is accepted, v3 adds optional `platform` names like
-//!   `maxwell:bw20:clk1.4` on scenario specs and tune requests).
+//!   name is accepted, v3 optional `platform` names like
+//!   `maxwell:bw20:clk1.4` on scenario specs and tune requests, v4 pruning
+//!   controls/telemetry, v5 `scalar_eval`, v6 the `pareto_energy` request
+//!   plus per-design energy telemetry).
 //!
 //! ```no_run
 //! use codesign::service::{CodesignRequest, ScenarioSpec, Session};
@@ -32,9 +34,10 @@ pub mod session;
 pub mod wire;
 
 pub use request::{
-    CodesignRequest, CodesignResponse, DesignSummary, ErrorInfo, ParetoSummary,
-    ReferenceSummary, ScenarioSpec, ScenarioSummary, SensitivityRow, SensitivitySummary,
-    SolverCostSummary, TuneRequest, TuneSummary, ValidateSummary, WorkloadClass,
+    CodesignRequest, CodesignResponse, DesignSummary, EnergyDesignSummary, ErrorInfo,
+    ParetoEnergySummary, ParetoSummary, ReferenceSummary, ScenarioSpec, ScenarioSummary,
+    SensitivityRow, SensitivitySummary, SolverCostSummary, TuneRequest, TuneSummary,
+    ValidateSummary, WorkloadClass,
 };
 pub use session::{
     PartitionSnapshot, ResponseDetail, ScenarioDetail, Session, SessionAnswer, SubmitReport,

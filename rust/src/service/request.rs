@@ -329,6 +329,10 @@ pub enum CodesignRequest {
     Explore { scenario: ScenarioSpec },
     /// Pareto front only — the cheap production query.
     Pareto { scenario: ScenarioSpec },
+    /// Tri-objective (area × perf × energy) Pareto front: the energy
+    /// subsystem's production query, answered by the coordinator's
+    /// 3-D-gated sweep (`run_pareto_energy_gated`).
+    ParetoEnergy { scenario: ScenarioSpec },
     /// §V-B what-if: the base scenario under new per-stencil weights. Over a
     /// warm session this is pure re-aggregation — no new inner solves.
     WhatIf { scenario: ScenarioSpec, weights: Vec<(StencilId, f64)> },
@@ -353,6 +357,10 @@ impl CodesignRequest {
 
     pub fn pareto(scenario: ScenarioSpec) -> CodesignRequest {
         CodesignRequest::Pareto { scenario }
+    }
+
+    pub fn pareto_energy(scenario: ScenarioSpec) -> CodesignRequest {
+        CodesignRequest::ParetoEnergy { scenario }
     }
 
     pub fn what_if(scenario: ScenarioSpec, weights: Vec<(StencilId, f64)>) -> CodesignRequest {
@@ -387,6 +395,7 @@ impl CodesignRequest {
         match self {
             CodesignRequest::Explore { scenario }
             | CodesignRequest::Pareto { scenario }
+            | CodesignRequest::ParetoEnergy { scenario }
             | CodesignRequest::WhatIf { scenario, .. } => (scenario.platform, None),
             CodesignRequest::Sensitivity { scenario_2d, scenario_3d, .. } => {
                 (scenario_2d.platform, scenario_3d.platform)
@@ -401,6 +410,7 @@ impl CodesignRequest {
         match self {
             CodesignRequest::Explore { .. } => "explore",
             CodesignRequest::Pareto { .. } => "pareto",
+            CodesignRequest::ParetoEnergy { .. } => "pareto_energy",
             CodesignRequest::WhatIf { .. } => "what_if",
             CodesignRequest::Sensitivity { .. } => "sensitivity",
             CodesignRequest::Tune(_) => "tune",
@@ -476,6 +486,43 @@ pub struct ParetoSummary {
     pub bounded_out: u64,
 }
 
+/// One tri-objective front member: a [`DesignSummary`] plus the energy
+/// axis.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EnergyDesignSummary {
+    pub n_sm: u32,
+    pub n_v: u32,
+    pub m_sm_kb: f64,
+    pub area_mm2: f64,
+    pub gflops: f64,
+    pub seconds: f64,
+    /// Workload-average power, W.
+    pub power_w: f64,
+    /// Workload energy, J per sweep-unit.
+    pub energy_j: f64,
+}
+
+impl EnergyDesignSummary {
+    /// Short human-readable identifier, matching [`DesignSummary::label`].
+    pub fn label(&self) -> String {
+        format!("{}sm x {}v, {}kB shm, cacheless", self.n_sm, self.n_v, self.m_sm_kb)
+    }
+}
+
+/// What a ParetoEnergy request answers with.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParetoEnergySummary {
+    pub scenario: String,
+    pub designs: usize,
+    pub infeasible: usize,
+    /// The tri-objective front, enumeration-ordered.
+    pub pareto: Vec<EnergyDesignSummary>,
+    pub total_evals: u64,
+    /// Design points answered from certified 3-D bounds without solving
+    /// (pruning telemetry; 0 on the `--no-prune` path).
+    pub bounded_out: u64,
+}
+
 /// One Table II row.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SensitivityRow {
@@ -537,6 +584,7 @@ pub struct ErrorInfo {
 pub enum CodesignResponse {
     Explore(ScenarioSummary),
     Pareto(ParetoSummary),
+    ParetoEnergy(ParetoEnergySummary),
     WhatIf(ScenarioSummary),
     Sensitivity(SensitivitySummary),
     Tune(TuneSummary),
@@ -550,6 +598,7 @@ impl CodesignResponse {
         match self {
             CodesignResponse::Explore(_) => "explore",
             CodesignResponse::Pareto(_) => "pareto",
+            CodesignResponse::ParetoEnergy(_) => "pareto_energy",
             CodesignResponse::WhatIf(_) => "what_if",
             CodesignResponse::Sensitivity(_) => "sensitivity",
             CodesignResponse::Tune(_) => "tune",
@@ -578,6 +627,7 @@ impl CodesignResponse {
         match self {
             CodesignResponse::Explore(s) | CodesignResponse::WhatIf(s) => s.total_evals,
             CodesignResponse::Pareto(p) => p.total_evals,
+            CodesignResponse::ParetoEnergy(p) => p.total_evals,
             CodesignResponse::Sensitivity(s) => s.total_evals,
             CodesignResponse::Tune(t) => t.total_evals,
             CodesignResponse::Validate(_)
@@ -682,6 +732,7 @@ mod tests {
     #[test]
     fn request_kinds_are_stable() {
         assert_eq!(CodesignRequest::explore(ScenarioSpec::two_d()).kind(), "explore");
+        assert_eq!(CodesignRequest::pareto_energy(ScenarioSpec::two_d()).kind(), "pareto_energy");
         assert_eq!(CodesignRequest::validate().kind(), "validate");
         assert_eq!(CodesignRequest::solver_cost(10).kind(), "solver_cost");
         assert_eq!(CodesignRequest::tune(TuneRequest::new(450.0)).kind(), "tune");

@@ -27,9 +27,10 @@ use crate::platform::registry::{Platform, PlatformId};
 use crate::platform::spec::PlatformSpec;
 use crate::report::{self, Report};
 use crate::service::request::{
-    CodesignRequest, CodesignResponse, DesignSummary, ErrorInfo, ParetoSummary,
-    ReferenceSummary, ScenarioSpec, ScenarioSummary, SensitivityRow, SensitivitySummary,
-    SolverCostSummary, TuneRequest, TuneSummary, ValidateSummary,
+    CodesignRequest, CodesignResponse, DesignSummary, EnergyDesignSummary, ErrorInfo,
+    ParetoEnergySummary, ParetoSummary, ReferenceSummary, ScenarioSpec, ScenarioSummary,
+    SensitivityRow, SensitivitySummary, SolverCostSummary, TuneRequest, TuneSummary,
+    ValidateSummary,
 };
 use crate::sim::{validate_sweep, ValidationReport};
 use crate::stencil::defs::StencilId;
@@ -130,6 +131,11 @@ enum Plan {
     /// the batches (so it rides any sweep this submission warmed) through
     /// [`Coordinator::run_pareto_gated`] on its partition's coordinator.
     ParetoGated { ci: usize, scenario: Box<Scenario> },
+    /// A tri-objective (area, perf, energy) Pareto request. Always routed
+    /// through [`Coordinator::run_pareto_energy_gated`] — with pruning off
+    /// the same entry point runs its audit arm (every candidate solved), so
+    /// one code path owns the energy accumulation in both prune states.
+    ParetoEnergyGated { ci: usize, scenario: Box<Scenario> },
     /// Two scenarios (2-D, 3-D) plus the Table II area band.
     Sensitivity { s2: Slot, s3: Slot, p2: PlatformSpec, p3: PlatformSpec, band: (f64, f64) },
     /// Runs after the batches, against the then-warm memo store.
@@ -211,6 +217,17 @@ impl Session {
             total.futile_passes += s.futile_passes;
         }
         total
+    }
+
+    /// Sweep every partition's memo store down to its configured budget
+    /// ([`MemoCache::sweep_to_budget`](crate::coordinator::MemoCache::sweep_to_budget)),
+    /// returning the number of entries evicted. The serve daemon calls this
+    /// when its mailbox drains, so eviction debt deferred by pinned sweeps
+    /// is paid during idle time instead of at the start of the next request.
+    /// A no-op (returns 0) for unbounded partitions or when any sweep holds
+    /// a pin.
+    pub fn sweep_idle(&self) -> u64 {
+        self.coordinators.iter().map(|(_, _, c)| c.cache.sweep_to_budget()).sum()
     }
 
     /// Number of (platform, C_iter, solver-options) partitions this session
@@ -461,6 +478,21 @@ impl Session {
                     Err(e) => Plan::Direct(error_response(req, &e), ResponseDetail::None),
                 }
             }
+            CodesignRequest::ParetoEnergy { scenario } => {
+                // Unlike the 2-D fast path there is no batch fallback:
+                // tri-objective fronts need per-design energy, which only the
+                // gated sweep (and its no-prune audit arm) computes. Sharing
+                // a spec with an Explore costs nothing extra — the gated run
+                // rides the warmed memo store.
+                let platform = self.platform_for(scenario);
+                match scenario.to_scenario(&platform) {
+                    Ok(sc) => {
+                        let ci = self.coordinator_index(&platform, &sc.citer, &sc.solve_opts);
+                        Plan::ParetoEnergyGated { ci, scenario: Box::new(sc) }
+                    }
+                    Err(e) => Plan::Direct(error_response(req, &e), ResponseDetail::None),
+                }
+            }
             CodesignRequest::WhatIf { scenario, weights } => {
                 let mut spec = scenario.clone().with_weights(weights.clone());
                 if spec.name.is_none() {
@@ -640,6 +672,31 @@ impl Session {
                             area_mm2: p.area_mm2,
                             gflops: p.gflops,
                             seconds: p.seconds,
+                        })
+                        .collect(),
+                    total_evals: gated.total_evals,
+                    bounded_out: gated.bounded_out as u64,
+                });
+                SessionAnswer { response, detail: ResponseDetail::None }
+            }
+            Plan::ParetoEnergyGated { ci, scenario } => {
+                let gated = self.coordinators[ci].2.run_pareto_energy_gated(&scenario);
+                let response = CodesignResponse::ParetoEnergy(ParetoEnergySummary {
+                    scenario: gated.scenario_name.clone(),
+                    designs: gated.designs,
+                    infeasible: gated.infeasible,
+                    pareto: gated
+                        .front
+                        .iter()
+                        .map(|p| EnergyDesignSummary {
+                            n_sm: p.hw.n_sm,
+                            n_v: p.hw.n_v,
+                            m_sm_kb: p.hw.m_sm_kb,
+                            area_mm2: p.area_mm2,
+                            gflops: p.gflops,
+                            seconds: p.seconds,
+                            power_w: p.power_w,
+                            energy_j: p.energy_j,
                         })
                         .collect(),
                     total_evals: gated.total_evals,

@@ -4,7 +4,7 @@
 //! `{"type": …}`-tagged object and decodes back **bit-exactly** (floats ride
 //! Rust's shortest-round-trip formatting; non-finite values encode as
 //! `null` and decode as NaN). Request and response files share one envelope,
-//! `{"schema": 5, "requests"|"responses": […]}`; an unknown schema version is
+//! `{"schema": 6, "requests"|"responses": […]}`; an unknown schema version is
 //! a clean error, never a guess.
 //!
 //! **Schema history.** Each version is a strict superset of its predecessor
@@ -33,6 +33,11 @@
 //!   `--scalar-eval` writes `true` to route the legacy point-at-a-time
 //!   loop). The two paths answer bit-identically, so the field only selects
 //!   *how* — and partitions memo stores. Older files decode unchanged.
+//! * **v6** — the energy objective: a `pareto_energy` request (same scenario
+//!   payload as `pareto`) asking for the tri-objective (area, performance,
+//!   energy) front, and its response whose designs carry two extra fields,
+//!   `power_w` and `energy_j`. No existing field changed meaning, so v1–v5
+//!   files decode unchanged.
 //!
 //! Encoding emits canonical names, so specs round-trip bit-exactly through
 //! their name.
@@ -50,9 +55,10 @@
 use crate::opt::problem::SolveOpts;
 use crate::platform::registry::{Platform, PlatformId};
 use crate::service::request::{
-    CodesignRequest, CodesignResponse, DesignSummary, ErrorInfo, ParetoSummary,
-    ReferenceSummary, ScenarioSpec, ScenarioSummary, SensitivityRow, SensitivitySummary,
-    SolverCostSummary, TuneRequest, TuneSummary, ValidateSummary, WorkloadClass,
+    CodesignRequest, CodesignResponse, DesignSummary, EnergyDesignSummary, ErrorInfo,
+    ParetoEnergySummary, ParetoSummary, ReferenceSummary, ScenarioSpec, ScenarioSummary,
+    SensitivityRow, SensitivitySummary, SolverCostSummary, TuneRequest, TuneSummary,
+    ValidateSummary, WorkloadClass,
 };
 use crate::stencil::defs::{Stencil, StencilId};
 use crate::timemodel::citer::CIterTable;
@@ -60,7 +66,7 @@ use crate::util::json::{parse, Json};
 use anyhow::{anyhow, bail, ensure, Result};
 
 /// The wire schema this build emits.
-pub const SCHEMA_VERSION: u64 = 5;
+pub const SCHEMA_VERSION: u64 = 6;
 
 /// The oldest schema this build still accepts (each version is additive).
 pub const MIN_SCHEMA_VERSION: u64 = 1;
@@ -330,7 +336,9 @@ pub fn spec_from_json(j: &Json) -> Result<ScenarioSpec> {
 pub fn request_to_json(r: &CodesignRequest) -> Json {
     let tag = ("type", Json::str(r.kind()));
     match r {
-        CodesignRequest::Explore { scenario } | CodesignRequest::Pareto { scenario } => {
+        CodesignRequest::Explore { scenario }
+        | CodesignRequest::Pareto { scenario }
+        | CodesignRequest::ParetoEnergy { scenario } => {
             Json::obj(vec![tag, ("scenario", spec_to_json(scenario))])
         }
         CodesignRequest::WhatIf { scenario, weights } => Json::obj(vec![
@@ -369,6 +377,9 @@ pub fn request_from_json(j: &Json) -> Result<CodesignRequest> {
     match get_str(j, "type")? {
         "explore" => Ok(CodesignRequest::Explore { scenario: spec_from_json(field(j, "scenario")?)? }),
         "pareto" => Ok(CodesignRequest::Pareto { scenario: spec_from_json(field(j, "scenario")?)? }),
+        "pareto_energy" => Ok(CodesignRequest::ParetoEnergy {
+            scenario: spec_from_json(field(j, "scenario")?)?,
+        }),
         "what_if" => Ok(CodesignRequest::WhatIf {
             scenario: spec_from_json(field(j, "scenario")?)?,
             weights: weights_from_json(field(j, "weights")?)?,
@@ -432,6 +443,32 @@ fn design_from_json(j: &Json) -> Result<DesignSummary> {
         area_mm2: get_f64(j, "area_mm2")?,
         gflops: get_f64(j, "gflops")?,
         seconds: get_f64(j, "seconds")?,
+    })
+}
+
+fn energy_design_to_json(d: &EnergyDesignSummary) -> Json {
+    Json::obj(vec![
+        ("n_sm", Json::Num(d.n_sm as f64)),
+        ("n_v", Json::Num(d.n_v as f64)),
+        ("m_sm_kb", fnum(d.m_sm_kb)),
+        ("area_mm2", fnum(d.area_mm2)),
+        ("gflops", fnum(d.gflops)),
+        ("seconds", fnum(d.seconds)),
+        ("power_w", fnum(d.power_w)),
+        ("energy_j", fnum(d.energy_j)),
+    ])
+}
+
+fn energy_design_from_json(j: &Json) -> Result<EnergyDesignSummary> {
+    Ok(EnergyDesignSummary {
+        n_sm: get_u64(j, "n_sm")? as u32,
+        n_v: get_u64(j, "n_v")? as u32,
+        m_sm_kb: get_f64(j, "m_sm_kb")?,
+        area_mm2: get_f64(j, "area_mm2")?,
+        gflops: get_f64(j, "gflops")?,
+        seconds: get_f64(j, "seconds")?,
+        power_w: get_f64(j, "power_w")?,
+        energy_j: get_f64(j, "energy_j")?,
     })
 }
 
@@ -514,6 +551,15 @@ pub fn response_to_json(r: &CodesignResponse) -> Json {
             ("total_evals", Json::Num(p.total_evals as f64)),
             ("bounded_out", Json::Num(p.bounded_out as f64)),
         ]),
+        CodesignResponse::ParetoEnergy(p) => Json::obj(vec![
+            tag,
+            ("scenario", Json::str(p.scenario.as_str())),
+            ("designs", Json::Num(p.designs as f64)),
+            ("infeasible", Json::Num(p.infeasible as f64)),
+            ("pareto", Json::Arr(p.pareto.iter().map(energy_design_to_json).collect())),
+            ("total_evals", Json::Num(p.total_evals as f64)),
+            ("bounded_out", Json::Num(p.bounded_out as f64)),
+        ]),
         CodesignResponse::Sensitivity(s) => Json::obj(vec![
             tag,
             ("band", Json::Arr(vec![fnum(s.band.0), fnum(s.band.1)])),
@@ -580,6 +626,19 @@ pub fn response_from_json(j: &Json) -> Result<CodesignResponse> {
                 .collect::<Result<Vec<_>>>()?,
             total_evals: get_u64(j, "total_evals")?,
             // v4 telemetry: absent on older files = no gating happened.
+            bounded_out: get_opt_u64(j, "bounded_out")?.unwrap_or(0),
+        })),
+        "pareto_energy" => Ok(CodesignResponse::ParetoEnergy(ParetoEnergySummary {
+            scenario: get_str(j, "scenario")?.to_string(),
+            designs: get_usize(j, "designs")?,
+            infeasible: get_usize(j, "infeasible")?,
+            pareto: field(j, "pareto")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("pareto must be an array"))?
+                .iter()
+                .map(energy_design_from_json)
+                .collect::<Result<Vec<_>>>()?,
+            total_evals: get_u64(j, "total_evals")?,
             bounded_out: get_opt_u64(j, "bounded_out")?.unwrap_or(0),
         })),
         "sensitivity" => {
@@ -654,7 +713,7 @@ fn check_schema(j: &Json) -> Result<()> {
     Ok(())
 }
 
-/// `{"schema": 5, "requests": […]}`.
+/// `{"schema": 6, "requests": […]}`.
 pub fn encode_requests(requests: &[CodesignRequest]) -> Json {
     Json::obj(vec![
         ("schema", Json::Num(SCHEMA_VERSION as f64)),
@@ -674,7 +733,7 @@ pub fn decode_requests(text: &str) -> Result<Vec<CodesignRequest>> {
         .collect()
 }
 
-/// `{"schema": 5, "responses": […]}`.
+/// `{"schema": 6, "responses": […]}`.
 pub fn encode_responses(responses: &[CodesignResponse]) -> Json {
     Json::obj(vec![
         ("schema", Json::Num(SCHEMA_VERSION as f64)),
@@ -714,10 +773,46 @@ mod tests {
         assert!(decode_requests(r#"{"requests": []}"#).is_err());
         assert!(decode_requests("not json").is_err());
         // The emitted version and every legacy envelope decode.
+        assert!(decode_requests(r#"{"schema": 5, "requests": []}"#).unwrap().is_empty());
         assert!(decode_requests(r#"{"schema": 4, "requests": []}"#).unwrap().is_empty());
         assert!(decode_requests(r#"{"schema": 3, "requests": []}"#).unwrap().is_empty());
         assert!(decode_requests(r#"{"schema": 2, "requests": []}"#).unwrap().is_empty());
         assert!(decode_requests(r#"{"schema": 1, "requests": []}"#).unwrap().is_empty());
+    }
+
+    #[test]
+    fn pareto_energy_request_and_response_roundtrip() {
+        let req = CodesignRequest::pareto_energy(ScenarioSpec::two_d().quick());
+        let back = request_from_json(&request_to_json(&req)).unwrap();
+        assert_eq!(req, back);
+        let resp = CodesignResponse::ParetoEnergy(ParetoEnergySummary {
+            scenario: "paper-2d".to_string(),
+            designs: 700,
+            infeasible: 3,
+            pareto: vec![EnergyDesignSummary {
+                n_sm: 16,
+                n_v: 128,
+                m_sm_kb: 96.0,
+                area_mm2: 398.25,
+                gflops: 1234.5,
+                seconds: 0.0625,
+                power_w: 151.75,
+                energy_j: 9.484375,
+            }],
+            total_evals: 123456,
+            bounded_out: 42,
+        });
+        let back = response_from_json(&response_to_json(&resp)).unwrap();
+        assert_eq!(resp, back);
+        // Telemetry absent on the wire decodes to 0, like the 2-D front's.
+        let mut j = response_to_json(&resp);
+        if let Json::Obj(m) = &mut j {
+            m.remove("bounded_out");
+        }
+        match response_from_json(&j).unwrap() {
+            CodesignResponse::ParetoEnergy(p) => assert_eq!(p.bounded_out, 0),
+            other => panic!("unexpected response {}", other.kind()),
+        }
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! Certification tier for the tri-objective energy subsystem.
+//!
+//! The energy objective rides the same exactness contract as everything
+//! else in this reproduction, so the gated `(area, perf, energy)` sweep is
+//! held to bit-identity and oracle equality on every surface:
+//!
+//! * prune-on vs `--no-prune` ParetoEnergy requests — identical fronts,
+//!   feasibility counts and per-design bits (area, gflops, seconds, power,
+//!   energy) across the paper mixes, parametric stencil families and the
+//!   `maxwell` / `maxwell:bw20` / `maxwell-nocache` platforms;
+//! * thread counts 1/8 — fully identical responses, telemetry included;
+//! * the exhaustive oracle — on fully-enumerated small grids (six presets
+//!   plus two parametric families × three platforms), the incremental
+//!   [`ParetoFront3`] equals the `O(n²)` brute force, and the served gated
+//!   front equals both, bit for bit;
+//! * bound soundness — the certified energy lower bound
+//!   (power floor × weighted-seconds bound) never exceeds any solved
+//!   design's measured energy, and is finite exactly where the design is
+//!   feasible;
+//! * wire schema v6 — the shipped `energy_requests.json` decodes,
+//!   re-encodes bit-exactly, and serves end to end.
+
+use codesign::codesign::pareto::{pareto_front3, ParetoFront3};
+use codesign::codesign::power;
+use codesign::codesign::scenario;
+use codesign::opt::bounds::{energy_lower_bound, power_floor_w};
+use codesign::opt::lower_bound;
+use codesign::opt::problem::SolveOpts;
+use codesign::platform::{Platform, PlatformId};
+use codesign::service::{
+    wire, CodesignRequest, CodesignResponse, EnergyDesignSummary, ParetoEnergySummary,
+    ScenarioSpec, Session, WorkloadClass,
+};
+
+fn no_prune() -> SolveOpts {
+    SolveOpts::default().without_prune()
+}
+
+fn on(name: &str) -> PlatformId {
+    Platform::by_name_err(name).expect("test platform").id
+}
+
+fn session_for(id: PlatformId) -> Session {
+    Session::new(Platform::get(id).spec.clone())
+}
+
+fn assert_design_bits(a: &EnergyDesignSummary, b: &EnergyDesignSummary, what: &str) {
+    assert_eq!(a.n_sm, b.n_sm, "{what}: n_sm");
+    assert_eq!(a.n_v, b.n_v, "{what}: n_v");
+    assert_eq!(a.m_sm_kb.to_bits(), b.m_sm_kb.to_bits(), "{what}: m_sm");
+    assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits(), "{what}: area");
+    assert_eq!(a.gflops.to_bits(), b.gflops.to_bits(), "{what}: gflops");
+    assert_eq!(a.seconds.to_bits(), b.seconds.to_bits(), "{what}: seconds");
+    assert_eq!(a.power_w.to_bits(), b.power_w.to_bits(), "{what}: power");
+    assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{what}: energy");
+}
+
+/// Everything but the eval/gating counters (which are exactly what pruning
+/// is allowed — required — to change).
+fn assert_front_bit_identical(pruned: &ParetoEnergySummary, full: &ParetoEnergySummary) {
+    let what = &pruned.scenario;
+    assert_eq!(pruned.scenario, full.scenario);
+    assert_eq!(pruned.designs, full.designs, "{what}: designs");
+    assert_eq!(pruned.infeasible, full.infeasible, "{what}: infeasible");
+    assert_eq!(pruned.pareto.len(), full.pareto.len(), "{what}: front size");
+    for (a, b) in pruned.pareto.iter().zip(&full.pareto) {
+        assert_design_bits(a, b, what);
+    }
+    assert!(
+        pruned.total_evals <= full.total_evals,
+        "{what}: pruning must never add evaluations ({} vs {})",
+        pruned.total_evals,
+        full.total_evals
+    );
+}
+
+fn energy_front(resp: &CodesignResponse) -> &ParetoEnergySummary {
+    let CodesignResponse::ParetoEnergy(p) = resp else {
+        panic!("pareto_energy response expected, got '{}'", resp.kind());
+    };
+    p
+}
+
+// ---------------------------------------------------------------------------
+// Prune on/off bit-identity: mixes × platforms, parametric families
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pruned_energy_fronts_are_bit_identical_across_platforms() {
+    for platform in ["maxwell", "maxwell:bw20", "maxwell-nocache"] {
+        let id = on(platform);
+        let specs = [
+            ScenarioSpec::two_d().quick(16).on_platform(id),
+            ScenarioSpec::three_d().quick(8).on_platform(id),
+        ];
+        let requests: Vec<CodesignRequest> =
+            specs.iter().cloned().map(CodesignRequest::pareto_energy).collect();
+        let full_requests: Vec<CodesignRequest> = specs
+            .iter()
+            .cloned()
+            .map(|s| CodesignRequest::pareto_energy(s.with_solve_opts(no_prune())))
+            .collect();
+        let pruned = session_for(id).submit_all(&requests);
+        let full = session_for(id).submit_all(&full_requests);
+        for (p, f) in pruned.answers.iter().zip(&full.answers) {
+            let (ps, fs) = (energy_front(&p.response), energy_front(&f.response));
+            assert_front_bit_identical(ps, fs);
+            assert_eq!(fs.bounded_out, 0, "{platform}: --no-prune must not gate");
+        }
+    }
+}
+
+#[test]
+fn pruned_energy_fronts_are_bit_identical_on_parametric_families() {
+    for (family, stride) in [("star3d:r2", 6), ("box2d:r2", 8)] {
+        let spec = ScenarioSpec::new(WorkloadClass::parse(family).unwrap()).quick(stride);
+        let pruned = session_for(PlatformId::Maxwell)
+            .submit(&CodesignRequest::pareto_energy(spec.clone()));
+        let full = session_for(PlatformId::Maxwell)
+            .submit(&CodesignRequest::pareto_energy(spec.with_solve_opts(no_prune())));
+        assert_front_bit_identical(energy_front(&pruned.response), energy_front(&full.response));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Determinism across thread counts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn energy_fronts_are_bit_identical_across_thread_counts() {
+    // Gating decisions are made chunk-sequentially over a bound-sorted
+    // order that is a pure function of the candidate set, so worker threads
+    // change wall time only — responses, telemetry included, are identical.
+    let answers: Vec<Vec<CodesignResponse>> = [1usize, 8]
+        .iter()
+        .map(|&threads| {
+            let requests = vec![
+                CodesignRequest::pareto_energy(
+                    ScenarioSpec::two_d().quick(16).with_threads(threads),
+                ),
+                CodesignRequest::pareto_energy(
+                    ScenarioSpec::three_d().quick(8).with_threads(threads),
+                ),
+            ];
+            session_for(PlatformId::Maxwell).submit_all(&requests).into_responses()
+        })
+        .collect();
+    assert_eq!(
+        answers[0], answers[1],
+        "thread count must not change any response field (telemetry included)"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Exhaustive oracle: incremental == brute force == served gated front,
+// plus energy-bound soundness on every enumerated instance
+// ---------------------------------------------------------------------------
+
+#[test]
+fn incremental_front_matches_brute_force_and_served_front_on_exhaustive_grids() {
+    // Six paper presets + two parametric families — the "8 stencils" of the
+    // acceptance criteria — each as a single-stencil workload over the
+    // small exhaustive grid, on all three platforms.
+    let stencils = [
+        "jacobi2d",
+        "heat2d",
+        "laplacian2d",
+        "gradient2d",
+        "heat3d",
+        "laplacian3d",
+        "star3d:r2",
+        "box2d:r2",
+    ];
+    for platform in ["maxwell", "maxwell:bw20", "maxwell-nocache"] {
+        let pspec = &Platform::get(on(platform)).spec;
+        let time_model = pspec.time_model();
+        let area_model = pspec.area_model();
+        for name in stencils {
+            let what = format!("{platform}/{name}");
+            let spec = ScenarioSpec::new(WorkloadClass::parse(name).unwrap()).quick(8);
+            let sc = spec.to_scenario(pspec).expect("scenario materializes");
+
+            // Oracle: the ungated exhaustive sweep, its per-design energies,
+            // and the O(n²) brute-force front over the raw triples.
+            let result = scenario::run(&sc, pspec);
+            assert!(!result.points.is_empty(), "{what}: exhaustive grid is empty");
+            let evals = power::energy_evals(&result, pspec);
+            let triples: Vec<(f64, f64, f64)> = result
+                .points
+                .iter()
+                .zip(&evals)
+                .map(|(p, e)| (p.area_mm2, p.gflops, e.energy_j))
+                .collect();
+            let brute = pareto_front3(&triples);
+            let mut inc = ParetoFront3::new();
+            for (i, &(a, g, e)) in triples.iter().enumerate() {
+                inc.insert(a, g, e, i);
+            }
+            assert_eq!(inc.indices(), brute, "{what}: incremental front vs brute force");
+
+            // Bound soundness, on every solved instance of the grid: the
+            // certified energy lower bound (power floor × weighted-seconds
+            // bound) is finite and never exceeds the measured energy, and
+            // the power floor never exceeds the measured average power.
+            let chars = sc.citer.characterize_workload(&sc.workload);
+            for (p, e) in result.points.iter().zip(&evals) {
+                let ws_lb: f64 = sc
+                    .workload
+                    .entries
+                    .iter()
+                    .zip(&chars)
+                    .filter(|(entry, _)| entry.weight > 0.0)
+                    .map(|(entry, st)| {
+                        entry.weight
+                            * lower_bound(&time_model, st, &entry.size, &p.hw, &sc.solve_opts)
+                    })
+                    .sum();
+                assert!(ws_lb.is_finite(), "{what}: feasible design must have a finite bound");
+                assert!(ws_lb <= p.seconds, "{what}: seconds bound above measured seconds");
+                let breakdown = area_model.breakdown(&p.hw);
+                let floor = power_floor_w(&pspec.power, &breakdown);
+                assert!(floor <= e.power_w, "{what}: power floor above measured power");
+                let lb = energy_lower_bound(&pspec.power, &breakdown, ws_lb);
+                assert!(
+                    lb <= e.energy_j,
+                    "{what}: energy bound {lb} above measured energy {}",
+                    e.energy_j
+                );
+            }
+
+            // End to end: the served gated front is the same set, bit for
+            // bit, in the same (enumeration) order, with matching counts.
+            let answer =
+                Session::new(pspec.clone()).submit(&CodesignRequest::pareto_energy(spec));
+            let served = energy_front(&answer.response);
+            assert_eq!(served.designs, result.points.len(), "{what}: solved count");
+            assert_eq!(served.infeasible, result.infeasible_points, "{what}: infeasible count");
+            assert_eq!(served.pareto.len(), brute.len(), "{what}: served front size");
+            for (d, &i) in served.pareto.iter().zip(&brute) {
+                let (p, e) = (&result.points[i], &evals[i]);
+                assert_eq!(d.n_sm, p.hw.n_sm, "{what}: n_sm");
+                assert_eq!(d.n_v, p.hw.n_v, "{what}: n_v");
+                assert_eq!(d.m_sm_kb.to_bits(), p.hw.m_sm_kb.to_bits(), "{what}: m_sm");
+                assert_eq!(d.area_mm2.to_bits(), p.area_mm2.to_bits(), "{what}: area");
+                assert_eq!(d.gflops.to_bits(), p.gflops.to_bits(), "{what}: gflops");
+                assert_eq!(d.seconds.to_bits(), p.seconds.to_bits(), "{what}: seconds");
+                assert_eq!(d.power_w.to_bits(), e.power_w.to_bits(), "{what}: power");
+                assert_eq!(d.energy_j.to_bits(), e.energy_j.to_bits(), "{what}: energy");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire schema v6: the shipped request file round-trips and serves
+// ---------------------------------------------------------------------------
+
+#[test]
+fn energy_request_file_roundtrips_and_serves_end_to_end() {
+    let text = include_str!("../../examples/energy_requests.json");
+    let requests = wire::decode_requests(text).expect("shipped file decodes");
+    assert_eq!(requests.len(), 4);
+    assert!(
+        matches!(requests[0], CodesignRequest::ParetoEnergy { .. })
+            && matches!(requests[3], CodesignRequest::Pareto { .. }),
+        "file mixes energy and plain pareto requests"
+    );
+    // Re-encode → decode → bit-exact equality, both renderings.
+    for pretty in [false, true] {
+        let encoded = if pretty {
+            wire::encode_requests(&requests).to_string_pretty()
+        } else {
+            wire::encode_requests(&requests).to_string_compact()
+        };
+        let back = wire::decode_requests(&encoded).unwrap();
+        assert_eq!(requests, back, "request re-encode round trip (pretty={pretty})");
+    }
+
+    // Serve the file through one session (the bw20 override partitions
+    // automatically), then round-trip the typed responses.
+    let report = Session::paper().submit_all(&requests);
+    let responses: Vec<CodesignResponse> = report.into_responses();
+    assert_eq!(responses.len(), 4);
+    for (i, resp) in responses.iter().enumerate() {
+        assert!(!resp.is_error(), "request {i} answered with an error");
+    }
+    assert!(energy_front(&responses[0]).pareto.len() > 0, "2-D energy front is non-trivial");
+    let encoded = wire::encode_responses(&responses).to_string_pretty();
+    let back = wire::decode_responses(&encoded).unwrap();
+    assert_eq!(responses, back, "response round trip");
+}
+
+#[test]
+fn legacy_envelopes_and_missing_energy_telemetry_decode() {
+    // A v5 (previous-schema) request envelope still decodes…
+    let v5 = r#"{"schema": 5, "requests": [
+        {"type": "pareto", "scenario": {"class": "2d", "quick_stride": 8}}
+    ]}"#;
+    assert_eq!(wire::decode_requests(v5).unwrap().len(), 1);
+    // …and a pareto_energy response missing the optional gating counter
+    // (e.g. written by a tool that elides zero fields) defaults it to 0.
+    let resp = r#"{"schema": 6, "responses": [
+        {"type": "pareto_energy", "scenario": "e", "designs": 3, "infeasible": 1,
+         "pareto": [{"n_sm": 8, "n_v": 64, "m_sm_kb": 96.0, "area_mm2": 200.5,
+                     "gflops": 900.0, "seconds": 0.125, "power_w": 80.0,
+                     "energy_j": 10.0}],
+         "total_evals": 42}
+    ]}"#;
+    let responses = wire::decode_responses(resp).unwrap();
+    let p = energy_front(&responses[0]);
+    assert_eq!(p.bounded_out, 0);
+    assert_eq!(p.total_evals, 42);
+    assert_eq!(p.pareto[0].energy_j.to_bits(), 10.0f64.to_bits());
+}

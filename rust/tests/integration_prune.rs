@@ -317,6 +317,7 @@ fn request_prune_flags(req: &CodesignRequest) -> Vec<bool> {
     match req {
         CodesignRequest::Explore { scenario }
         | CodesignRequest::Pareto { scenario }
+        | CodesignRequest::ParetoEnergy { scenario }
         | CodesignRequest::WhatIf { scenario, .. } => vec![scenario.solve_opts.prune],
         CodesignRequest::Sensitivity { scenario_2d, scenario_3d, .. } => {
             vec![scenario_2d.solve_opts.prune, scenario_3d.solve_opts.prune]

@@ -4,7 +4,9 @@
 //! persistence (bit-exact slot round-trips, byte-idempotent save→load→save).
 
 use codesign::area::{AreaModel, HwParams};
-use codesign::codesign::pareto::{best_within_area, pareto_front, ParetoFront};
+use codesign::codesign::pareto::{
+    best_within_area, pareto_front, pareto_front3, ParetoFront, ParetoFront3,
+};
 use codesign::opt::exhaustive::solve_exhaustive;
 use codesign::opt::separable::solve_entry;
 use codesign::opt::{solve_inner, InnerProblem, SolveOpts};
@@ -86,6 +88,72 @@ fn prop_incremental_pareto_front_matches_batch() {
         // at least the surviving members must have reported so.
         if members < inc.len() {
             return Err("fewer reported insertions than survivors".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_incremental_pareto_front3_matches_batch() {
+    // The tri-objective analogue: the gated energy sweep maintains its
+    // (area ↓, perf ↑, energy ↓) front incrementally, and feeding any point
+    // sequence in index order must reproduce the batch `pareto_front3`
+    // exactly — ties, duplicates and first-seen retention included
+    // (quantized axes force plenty of exact collisions).
+    forall_res(Config::default().cases(200), |rng| {
+        let n = rng.range_u64(1, 150) as usize;
+        let quantized = rng.bernoulli(0.5);
+        let pts: Vec<(f64, f64, f64)> = (0..n)
+            .map(|_| {
+                if quantized {
+                    (
+                        rng.range_u64(0, 8) as f64,
+                        rng.range_u64(0, 8) as f64,
+                        rng.range_u64(0, 8) as f64,
+                    )
+                } else {
+                    (rng.f64() * 100.0, rng.f64() * 100.0, rng.f64() * 100.0)
+                }
+            })
+            .collect();
+        let mut inc = ParetoFront3::new();
+        let mut members = 0usize;
+        for (i, &(a, p, e)) in pts.iter().enumerate() {
+            if inc.insert(a, p, e, i) {
+                members += 1;
+            }
+        }
+        let batch = pareto_front3(&pts);
+        if inc.indices() != batch {
+            return Err(format!(
+                "incremental {:?} != batch {:?} on {pts:?}",
+                inc.indices(),
+                batch
+            ));
+        }
+        if members < inc.len() {
+            return Err("fewer reported insertions than survivors".into());
+        }
+        // Soundness/completeness of the batch oracle itself: no front point
+        // dominated, every off-front point dominated (or an exact duplicate
+        // of a front point).
+        let dom = |a: (f64, f64, f64), b: (f64, f64, f64)| {
+            a.0 <= b.0
+                && a.1 >= b.1
+                && a.2 <= b.2
+                && (a.0 < b.0 || a.1 > b.1 || a.2 < b.2)
+        };
+        for &i in &batch {
+            if batch.iter().any(|&j| j != i && dom(pts[j], pts[i])) {
+                return Err(format!("front point {i} dominated"));
+            }
+        }
+        for i in 0..n {
+            if !batch.contains(&i)
+                && !batch.iter().any(|&j| dom(pts[j], pts[i]) || pts[j] == pts[i])
+            {
+                return Err(format!("non-front point {i} neither dominated nor duplicate"));
+            }
         }
         Ok(())
     });
@@ -817,5 +885,127 @@ fn prop_cache_key_is_characterization() {
         let other_fp = codesign::platform::PlatformSpec::parse("maxwell:bw20").unwrap().fingerprint();
         let fp_differs = CacheKey::new(fp, &hw, a, &size) != CacheKey::new(other_fp, &hw, a, &size);
         keys_match && keys_differ && fp_differs
+    });
+}
+
+#[test]
+fn prop_best_weighted_minimizes_the_weighted_objective() {
+    // §V-D's λ·T + (1−λ)·E selector: at every λ — the pure-performance and
+    // pure-energy extremes included — the returned index must beat (or tie)
+    // a brute-force scan of the same normalized score, and an empty eval
+    // set must yield None.
+    use codesign::codesign::power::{best_weighted, energy_evals};
+    use codesign::codesign::scenario::{self, Scenario};
+    let spec = codesign::platform::Platform::default_spec();
+    let result = scenario::run(&Scenario::quick(Scenario::paper_2d(), 16), spec);
+    let evals = energy_evals(&result, spec);
+    assert_eq!(evals.len(), result.points.len());
+    assert!(!evals.is_empty(), "quick 2-D grid must have feasible designs");
+    assert_eq!(best_weighted(&[], &result, 0.5), None, "no designs, no pick");
+    let t_min = result.points.iter().map(|p| p.seconds).fold(f64::INFINITY, f64::min);
+    let e_min = evals.iter().map(|e| e.energy_j).fold(f64::INFINITY, f64::min);
+    forall_res(Config::default().cases(80), |rng| {
+        // Weight the draw toward the extremes: λ = 0 (pure energy) and
+        // λ = 1 (pure performance) are the paper's two named problems.
+        let lambda = match rng.range_u64(0, 5) {
+            0 => 0.0,
+            1 => 1.0,
+            _ => rng.f64(),
+        };
+        let best =
+            best_weighted(&evals, &result, lambda).ok_or("non-empty evals must pick a design")?;
+        let score = |i: usize| {
+            lambda * result.points[i].seconds / t_min + (1.0 - lambda) * evals[i].energy_j / e_min
+        };
+        for i in 0..evals.len() {
+            if score(i) < score(best) {
+                return Err(format!(
+                    "λ={lambda}: design {i} scores {} below pick {best} at {}",
+                    score(i),
+                    score(best)
+                ));
+            }
+        }
+        if lambda == 0.0 && (evals[best].energy_j - e_min).abs() > 1e-12 * e_min {
+            return Err(format!("λ=0 must pick minimum energy, got {}", evals[best].energy_j));
+        }
+        if lambda == 1.0 && (result.points[best].seconds - t_min).abs() > 1e-12 * t_min {
+            return Err(format!("λ=1 must pick minimum time, got {}", result.points[best].seconds));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_energy_bound_sound_and_zero_weight_inert_on_random_hw() {
+    // The energy roofline the tri-objective gate prunes with: for any
+    // random design × workload entry, the certified bound
+    // (`power_floor_w × seconds lower bound`) never exceeds the modelled
+    // energy, the floor never exceeds the workload-average power, the bound
+    // is finite exactly when the entry is feasible, and a zero-weight
+    // companion slot (`None`, as the gated path encodes it) cannot move the
+    // energy axis.
+    use codesign::codesign::energy::energy_point;
+    use codesign::opt::bounds::{energy_lower_bound, lower_bound, power_floor_w};
+    let spec = codesign::platform::Platform::default_spec();
+    let model = spec.time_model();
+    let area_model = spec.area_model();
+    let citer = CIterTable::paper();
+    let opts = SolveOpts { refine: false, ..SolveOpts::default() };
+    forall_res(Config::default().cases(60), |rng| {
+        let st: &Stencil = rng.choose(&ALL_STENCILS);
+        let mut hw = random_hw(rng);
+        // Mix in pathologically small scratchpads so the infeasible side of
+        // the bound equivalence is exercised too.
+        if rng.bernoulli(0.3) {
+            hw.m_sm_kb = *rng.choose(&[0.25, 1.0, 2.0, 4.0]);
+        }
+        let size = if st.is_3d() { ProblemSize::d3(32, 8) } else { ProblemSize::d2(256, 64) };
+        let entry = WorkloadEntry { stencil: st.id, size, weight: 1.0 };
+        let stc = citer.apply(st);
+        let ws_lb = lower_bound(&model, &stc, &size, &hw, &opts);
+        let breakdown = area_model.breakdown(&hw);
+        let floor = power_floor_w(&spec.power, &breakdown);
+        if !(floor.is_finite() && floor > 0.0) {
+            return Err(format!("power floor must be a positive wattage, got {floor}"));
+        }
+        let Some(sol) = solve_entry(&model, &citer, &hw, &entry, &opts) else {
+            // Infeasible entry: both the seconds bound and the composed
+            // energy bound must read as +∞, never a finite underestimate
+            // of nothing.
+            if ws_lb.is_finite() {
+                return Err(format!("{:?} infeasible but seconds bound {ws_lb} finite", st.id));
+            }
+            if energy_lower_bound(&spec.power, &breakdown, ws_lb).is_finite() {
+                return Err("energy bound finite on an infeasible entry".into());
+            }
+            return Ok(());
+        };
+        if !(ws_lb.is_finite() && ws_lb <= sol.est.seconds) {
+            return Err(format!("seconds bound {ws_lb} vs solved {}", sol.est.seconds));
+        }
+        let secs = sol.est.seconds;
+        let single = vec![Some(sol.clone())];
+        let ep = energy_point(&hw, &breakdown, &single, &spec.power, &spec.machine, secs);
+        if !(ep.power_w.is_finite() && ep.energy_j.is_finite() && ep.energy_j > 0.0) {
+            return Err(format!("degenerate energy point {ep:?}"));
+        }
+        if floor > ep.power_w {
+            return Err(format!("power floor {floor} above average power {}", ep.power_w));
+        }
+        let e_lb = energy_lower_bound(&spec.power, &breakdown, ws_lb);
+        if e_lb > ep.energy_j {
+            return Err(format!("energy bound {e_lb} above modelled energy {}", ep.energy_j));
+        }
+        // Zero-weight entries ride as `None` slots on the gated path; they
+        // must leave both axes bit-identical.
+        let padded = vec![None, Some(sol), None];
+        let ep2 = energy_point(&hw, &breakdown, &padded, &spec.power, &spec.machine, secs);
+        if ep2.power_w.to_bits() != ep.power_w.to_bits()
+            || ep2.energy_j.to_bits() != ep.energy_j.to_bits()
+        {
+            return Err(format!("None slots moved the energy point: {ep:?} vs {ep2:?}"));
+        }
+        Ok(())
     });
 }

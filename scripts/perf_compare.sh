@@ -39,10 +39,13 @@ with open(fresh_path) as f:
 def metrics(doc):
     """Gated metrics of a bench report: {name: (value, higher_is_better)}."""
     out = {}
-    # Recorded throughput/ratio metrics (BENCH_prune.json).
-    for key in ("batched_evals_per_sec", "scalar_evals_per_sec", "batched_speedup"):
-        if isinstance(doc.get(key), (int, float)):
-            out[key] = (float(doc[key]), True)
+    # Recorded throughput metrics (BENCH_prune.json, BENCH_energy.json):
+    # any top-level *evals_per_sec counter gates higher-is-better.
+    for key, val in doc.items():
+        if isinstance(val, (int, float)) and key.endswith("evals_per_sec"):
+            out[key] = (float(val), True)
+    if isinstance(doc.get("batched_speedup"), (int, float)):
+        out["batched_speedup"] = (float(doc["batched_speedup"]), True)
     # Derived throughput for reports that record totals + wall clock
     # (BENCH_service.json and friends).
     evals, wall = doc.get("total_evals"), doc.get("wall_ms")
