@@ -3,7 +3,10 @@
 //! and written to `BENCH_prune.json` (evals saved, wall clock per sweep).
 //! A third leg replays the pruned sweep through `--scalar-eval` (the legacy
 //! point-at-a-time loop) and records the batched-vs-scalar evals/sec delta —
-//! the number `scripts/perf_compare.sh` gates in CI.
+//! the number `scripts/perf_compare.sh` gates in CI. A fourth leg sweeps a
+//! fused multi-stencil chain (`fuse:heat2d+laplacian2d:t2`) pruned vs
+//! `--no-prune`, recording `fused_evals_per_sec` so the chain path rides the
+//! same CI throughput gate.
 //!
 //! Run: `cargo bench --bench prune_bench` (CI's bench-smoke job runs it and
 //! archives the JSON).
@@ -53,10 +56,37 @@ fn run(opts: SolveOpts) -> (Vec<(String, u64)>, f64, u64, u64) {
     (evals, wall_ms, rep.prune.subtrees_cut, rep.prune.bounded_out)
 }
 
+/// The PR 10 fused-chain leg: explore + Pareto over a two-stage chain
+/// (σ_eff = 4) through the same session machinery.
+fn run_fused(opts: SolveOpts) -> (u64, f64) {
+    let spec = || {
+        ScenarioSpec::new(
+            codesign::service::WorkloadClass::parse("fuse:heat2d+laplacian2d:t2")
+                .expect("chain name must parse"),
+        )
+    };
+    let requests = vec![
+        CodesignRequest::explore(spec().quick(8).with_solve_opts(opts.clone())),
+        CodesignRequest::pareto(spec().quick(8).named("fused-pareto").with_solve_opts(opts)),
+    ];
+    let mut session = Session::paper();
+    let t0 = Instant::now();
+    let rep = session.submit_all(&requests);
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let evals = rep.answers.iter().map(|a| a.response.total_evals()).sum();
+    (evals, wall_ms)
+}
+
 fn main() {
     let (pruned, pruned_ms, subtrees_cut, bounded_out) = run(SolveOpts::default());
     let (full, full_ms, _, _) = run(SolveOpts::default().without_prune());
     let (scalar, scalar_ms, _, _) = run(SolveOpts::default().with_scalar_eval());
+    let (fused_evals, fused_ms) = run_fused(SolveOpts::default());
+    let (fused_full_evals, fused_full_ms) = run_fused(SolveOpts::default().without_prune());
+    assert!(
+        fused_evals <= fused_full_evals,
+        "fused chain: pruning must never add evaluations ({fused_evals} vs {fused_full_evals})"
+    );
 
     // The differential tier certifies bit-identity; here we certify the
     // accounting and record the trajectory.
@@ -115,6 +145,14 @@ fn main() {
         ("batched_evals_per_sec", Json::num(evals_per_sec(pruned_total, pruned_ms))),
         ("scalar_evals_per_sec", Json::num(evals_per_sec(pruned_total, scalar_ms))),
         ("batched_speedup", Json::num(scalar_ms / pruned_ms.max(1e-9))),
+        // Fused-chain leg: explore + Pareto over fuse:heat2d+laplacian2d:t2.
+        // `fused_evals_per_sec` matches perf_compare.sh's `*evals_per_sec`
+        // harvest, so the chain path is throughput-gated like the others.
+        ("fused_evals", Json::num(fused_evals as f64)),
+        ("fused_full_evals", Json::num(fused_full_evals as f64)),
+        ("fused_wall_ms", Json::num(fused_ms)),
+        ("fused_full_wall_ms", Json::num(fused_full_ms)),
+        ("fused_evals_per_sec", Json::num(evals_per_sec(fused_evals, fused_ms))),
         ("sweeps", sweeps),
     ]);
     std::fs::write("BENCH_prune.json", bench.to_string_pretty()).expect("write BENCH_prune.json");
@@ -123,11 +161,14 @@ fn main() {
          ({:.2}x reduction, {subtrees_cut} subtrees cut, {bounded_out} instances bounded out)\n\
          wall: {pruned_ms:.0} ms vs {full_ms:.0} ms -> BENCH_prune.json\n\
          batched vs scalar: {pruned_ms:.0} ms vs {scalar_ms:.0} ms \
-         ({:.2}x, {:.0} vs {:.0} evals/sec)",
+         ({:.2}x, {:.0} vs {:.0} evals/sec)\n\
+         fused chain: {fused_evals} evals pruned vs {fused_full_evals} full \
+         ({fused_ms:.0} ms vs {fused_full_ms:.0} ms, {:.0} evals/sec)",
         full_total as f64 / pruned_total.max(1) as f64,
         scalar_ms / pruned_ms.max(1e-9),
         evals_per_sec(pruned_total, pruned_ms),
         evals_per_sec(pruned_total, scalar_ms),
+        evals_per_sec(fused_evals, fused_ms),
     );
 }
 

@@ -870,6 +870,24 @@ mod tests {
     }
 
     #[test]
+    fn identically_characterized_chains_share_keys() {
+        use crate::stencil::spec::FusedChain;
+        let hw = HwParams::gtx980();
+        let size = ProblemSize::d2(1024, 256);
+        // Two distinct chain names with the same derived characterization
+        // (swapping equal-radius stages keeps every effective field, halo
+        // trapezoid included) share the key — and therefore every memoized
+        // sweep; a deeper chain does not.
+        let ab = Stencil::get(FusedChain::parse("fuse:heat2d+laplacian2d:t2").unwrap().register());
+        let ba = Stencil::get(FusedChain::parse("fuse:laplacian2d+heat2d:t2").unwrap().register());
+        assert_ne!(ab.id, ba.id, "distinct identities");
+        assert_eq!(CacheKey::new(fp(), &hw, ab, &size), CacheKey::new(fp(), &hw, ba, &size));
+        let deeper =
+            Stencil::get(FusedChain::parse("fuse:heat2d+laplacian2d:t4").unwrap().register());
+        assert_ne!(CacheKey::new(fp(), &hw, ab, &size), CacheKey::new(fp(), &hw, deeper, &size));
+    }
+
+    #[test]
     fn key_separates_platforms_by_fingerprint() {
         use crate::platform::spec::PlatformSpec;
         let hw = HwParams::gtx980();

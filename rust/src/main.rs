@@ -90,7 +90,7 @@ fn cli() -> Cli {
                     warm_start.clone(),
                     save_artifact.clone(),
                     OptSpec { name: "class", takes_value: true, default: Some("both"), help: "2d | 3d | both | <stencil>" },
-                    OptSpec { name: "stencil", takes_value: true, default: None, help: "single stencil: preset (jacobi2d) or family (star3d:r2)" },
+                    OptSpec { name: "stencil", takes_value: true, default: None, help: "single stencil: preset (jacobi2d), family (star3d:r2) or fused chain (fuse:heat2d+laplacian2d:t4)" },
                     OptSpec { name: "objective", takes_value: true, default: Some("perf"), help: "perf (best-throughput exploration) | area-perf (2-objective Pareto front) | energy (tri-objective area x perf x energy front)" },
                     OptSpec { name: "measured-citer", takes_value: false, default: None, help: "use PJRT-measured C_iter" },
                 ],
@@ -137,7 +137,7 @@ fn cli() -> Cli {
                     OptSpec { name: "n-sm", takes_value: true, default: None, help: "pin the SM count" },
                     OptSpec { name: "n-v", takes_value: true, default: None, help: "pin vector units per SM" },
                     OptSpec { name: "m-sm", takes_value: true, default: None, help: "pin shared memory (kB)" },
-                    OptSpec { name: "stencil", takes_value: true, default: None, help: "single-stencil workload, preset or family name (default: 2d mix)" },
+                    OptSpec { name: "stencil", takes_value: true, default: None, help: "single-stencil workload: preset, family or fused-chain name (default: 2d mix)" },
                 ],
             },
             Command {

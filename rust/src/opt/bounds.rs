@@ -33,6 +33,15 @@
 //! factor absorbs f64 rounding in the derivation chain; it only ever makes
 //! the bound smaller (= prune less), never unsound.
 //!
+//! Every term above is parametric in the stencil's six characterization
+//! fields (σ, flops, buffers, bytes, `C_iter`, dimensionality) and monotone
+//! in each — nothing assumes a preset radius or a single kernel. A fused
+//! chain (DESIGN.md §10) enters as exactly such a characterization (its
+//! macro step carries the fused halo as σ and the redundancy-inflated
+//! `C_iter`), so the one-sided derivation holds verbatim over composed
+//! kernels; `chain_bounds_sound_on_sample_evaluations` and the differential
+//! prune tier re-certify it over the deeper-σ regime chains reach.
+//!
 //! The instance-level bound additionally needs the *feasible* `t_T` range:
 //! `t_T ≤ opts.max_t_t` (nothing the solver — grid or refinement — ever
 //! evaluates exceeds it) and the shared-memory cap from `w1_min` above.
@@ -320,6 +329,44 @@ mod tests {
                 assert!(g >= tt, "t_t {t_t} t_s2 {t_s2}: group {g} < subtree {tt}");
             }
         }
+    }
+
+    #[test]
+    fn chain_bounds_sound_on_sample_evaluations() {
+        // The bound derivation is parametric in the characterization, so a
+        // fused chain's deeper σ and heavier C_iter must still bound every
+        // feasible evaluation from below — sampled across the chain's
+        // feasible tile range.
+        use crate::stencil::spec::FusedChain;
+        let m = model();
+        let st = Stencil::get(FusedChain::parse("fuse:heat2d+laplacian2d:t2").unwrap().register());
+        let hw = HwParams::gtx980();
+        let size = ProblemSize::d2(4096, 1024);
+        let lb = lower_bound(&m, st, &size, &hw, &SolveOpts::default());
+        assert!(lb.is_finite() && lb > 0.0, "chain instance must be feasible: {lb}");
+        let mut checked = 0;
+        for (tiles, k) in [
+            (TileSizes::d2(32, 64, 2), 2),
+            (TileSizes::d2(16, 96, 4), 3),
+            (TileSizes::d2(1, 32, 2), 1),
+        ] {
+            let sw = SoftwareParams::new(tiles, k);
+            if m.feasibility(st, &hw, &sw).is_err() {
+                continue;
+            }
+            checked += 1;
+            let est = m.evaluate(st, &size, &hw, &sw);
+            assert!(lb <= est.seconds, "lb {lb} vs {}", est.seconds);
+            let tt_lb = lower_bound_tt(&m, st, &size, &hw, tiles.t_t);
+            assert!(tt_lb <= est.seconds, "tt lb {tt_lb} vs {}", est.seconds);
+            let g_lb = lower_bound_group(&m, st, &size, &hw, tiles.t_t, tiles.t_s2, tiles.t_s3);
+            assert!(g_lb <= est.seconds, "group lb {g_lb} vs {}", est.seconds);
+        }
+        assert!(checked >= 2, "chain sample points must mostly be feasible ({checked})");
+        // σ = 4 shrinks the feasible time-tile range vs the σ = 1 presets.
+        let cap = t_t_cap(st, &hw, 1 << 20);
+        let preset_cap = t_t_cap(Stencil::get(StencilId::Heat2D), &hw, 1 << 20);
+        assert!(cap > 0 && cap < preset_cap, "chain cap {cap} vs preset {preset_cap}");
     }
 
     #[test]

@@ -201,6 +201,51 @@ mod tests {
     }
 
     #[test]
+    fn smart_solver_matches_exhaustive_on_fused_chain() {
+        // PR 10 opens the workload space to fused chains; the oracle
+        // certification follows the PR 3/PR 8 pattern: on a fully-enumerated
+        // small grid the production solver (batched AND scalar, bit-identical
+        // to each other) must land on the chain's optimum — the chain enters
+        // both solvers purely through its derived characterization.
+        use crate::stencil::spec::FusedChain;
+        let model = TimeModel::maxwell();
+        let st = *Stencil::get(
+            FusedChain::parse("fuse:heat2d+laplacian2d:t2").unwrap().register(),
+        );
+        let size = ProblemSize::d2(64, 8);
+        let opts = SolveOpts { all_k: true, refine: false, max_t_t: 8, ..SolveOpts::default() };
+        let p = InnerProblem { stencil: st, size, hw: HwParams::gtx980() };
+        let brute = solve_exhaustive(&model, &p, size.s1, size.s2, 1, opts.max_t_t)
+            .expect("σ=4 chain fits GTX 980 shared memory on a 64² block");
+        let batched = solve_inner(&model, &p, &opts).expect("chain point feasible");
+        let scalar = solve_inner(&model, &p, &opts.clone().with_scalar_eval())
+            .expect("scalar path feasible");
+        assert_eq!(
+            batched.est.seconds.to_bits(),
+            scalar.est.seconds.to_bits(),
+            "batched {:?} vs scalar {:?}",
+            batched.sw,
+            scalar.sw
+        );
+        assert_eq!(batched.sw, scalar.sw);
+        assert_eq!(batched.evals, scalar.evals);
+        assert!(
+            batched.est.seconds <= brute.est.seconds * (1.0 + 1e-9),
+            "smart {} ({:?}) worse than exhaustive {} ({:?})",
+            batched.est.seconds,
+            batched.sw,
+            brute.est.seconds,
+            brute.sw
+        );
+        let on_grid = batched.sw.tiles.t_s2 <= size.s2
+            && batched.sw.k <= model.machine.max_blocks_per_sm;
+        if on_grid {
+            let rel = (batched.est.seconds - brute.est.seconds).abs() / brute.est.seconds;
+            assert!(rel < 1e-9, "rel {rel:e}: {:?} vs {:?}", batched.sw, brute.sw);
+        }
+    }
+
+    #[test]
     fn smart_solver_matches_exhaustive_on_small_instance() {
         // On an instance whose optimum lies inside the smart solver's grid
         // coverage, the two must agree closely; the smart solver may even be

@@ -25,8 +25,8 @@ pub enum WorkloadClass {
     TwoD,
     /// The two 3-D stencils over the cube grid.
     ThreeD,
-    /// One stencil — preset or registered parametric family member — over
-    /// its dimension-appropriate size grid.
+    /// One stencil — preset, registered parametric family member, or fused
+    /// chain — over its dimension-appropriate size grid.
     Single(StencilId),
 }
 
@@ -39,10 +39,11 @@ impl WorkloadClass {
         }
     }
 
-    /// Parse a class name: `2d`, `3d`, a preset stencil name, or a
-    /// parametric family name (`star3d:r2`). Unknown names error with the
-    /// full list of valid presets and the family grammar — the message the
-    /// CLI's `--class`/`--stencil` and the wire decoder surface.
+    /// Parse a class name: `2d`, `3d`, a preset stencil name, a parametric
+    /// family name (`star3d:r2`), or a fused chain
+    /// (`fuse:heat2d+laplacian2d:t4`). Unknown names error with the full
+    /// list of valid presets and both grammars — the message the CLI's
+    /// `--class`/`--stencil` and the wire decoder surface.
     pub fn parse(s: &str) -> anyhow::Result<WorkloadClass> {
         match s {
             "2d" => Ok(WorkloadClass::TwoD),
@@ -120,6 +121,21 @@ impl ScenarioSpec {
     /// ```
     pub fn parametric(spec: StencilSpec) -> ScenarioSpec {
         ScenarioSpec::single(spec.register())
+    }
+
+    /// A single-stencil scenario over a fused chain, registering the chain's
+    /// derived characterization on construction.
+    ///
+    /// ```no_run
+    /// use codesign::service::ScenarioSpec;
+    /// use codesign::stencil::spec::FusedChain;
+    ///
+    /// let chain = FusedChain::parse("fuse:heat2d+laplacian2d:t4").unwrap();
+    /// assert_eq!(ScenarioSpec::fused(&chain).scenario_name(),
+    ///            "fuse:heat2d+laplacian2d:t4");
+    /// ```
+    pub fn fused(chain: &crate::stencil::spec::FusedChain) -> ScenarioSpec {
+        ScenarioSpec::single(chain.register())
     }
 
     pub fn named(mut self, name: &str) -> ScenarioSpec {
@@ -711,11 +727,29 @@ mod tests {
             panic!("family name must parse to Single");
         };
         assert_eq!(id.name(), "star3d:r2");
+        let WorkloadClass::Single(id) =
+            WorkloadClass::parse("fuse:heat2d+laplacian2d:t4").unwrap()
+        else {
+            panic!("chain name must parse to Single");
+        };
+        assert_eq!(id.name(), "fuse:heat2d+laplacian2d:t4");
         // The rejection lists every valid option, not a bare "unknown".
         let err = format!("{:#}", WorkloadClass::parse("warp5d").unwrap_err());
-        for needle in ["jacobi2d", "heat3d", "star|box", "2d, 3d"] {
+        for needle in ["jacobi2d", "heat3d", "star|box", "fuse:", "2d, 3d"] {
             assert!(err.contains(needle), "'{err}' should mention '{needle}'");
         }
+    }
+
+    #[test]
+    fn fused_chain_materializes_dimension_matched_scenario() {
+        use crate::stencil::spec::FusedChain;
+        let chain = FusedChain::parse("fuse:heat3d+laplacian3d:t2").unwrap();
+        let sc = ScenarioSpec::fused(&chain)
+            .quick(3)
+            .to_scenario(Platform::default_spec())
+            .unwrap();
+        assert_eq!(sc.name, "fuse:heat3d+laplacian3d:t2");
+        assert!(sc.workload.entries.iter().all(|e| e.size.s3.is_some()));
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! `{"type": …}`-tagged object and decodes back **bit-exactly** (floats ride
 //! Rust's shortest-round-trip formatting; non-finite values encode as
 //! `null` and decode as NaN). Request and response files share one envelope,
-//! `{"schema": 6, "requests"|"responses": […]}`; an unknown schema version is
+//! `{"schema": 7, "requests"|"responses": […]}`; an unknown schema version is
 //! a clean error, never a guess.
 //!
 //! **Schema history.** Each version is a strict superset of its predecessor
@@ -38,6 +38,12 @@
 //!   energy) front, and its response whose designs carry two extra fields,
 //!   `power_w` and `energy_j`. No existing field changed meaning, so v1–v5
 //!   files decode unchanged.
+//! * **v7** — fused chains: every stencil-name field additionally accepts a
+//!   fused-chain name `fuse:<stage>(+<stage>)*[:t<1-8>]` (the canonical
+//!   [`FusedChain`](crate::stencil::spec::FusedChain) grammar, e.g.
+//!   `fuse:heat2d+laplacian2d:t4`), which registers the chain's derived
+//!   characterization on decode. Purely a wider name grammar — no envelope
+//!   or field changed shape, so v1–v6 files decode unchanged.
 //!
 //! Encoding emits canonical names, so specs round-trip bit-exactly through
 //! their name.
@@ -66,7 +72,7 @@ use crate::util::json::{parse, Json};
 use anyhow::{anyhow, bail, ensure, Result};
 
 /// The wire schema this build emits.
-pub const SCHEMA_VERSION: u64 = 6;
+pub const SCHEMA_VERSION: u64 = 7;
 
 /// The oldest schema this build still accepts (each version is additive).
 pub const MIN_SCHEMA_VERSION: u64 = 1;
@@ -713,7 +719,7 @@ fn check_schema(j: &Json) -> Result<()> {
     Ok(())
 }
 
-/// `{"schema": 6, "requests": […]}`.
+/// `{"schema": 7, "requests": […]}`.
 pub fn encode_requests(requests: &[CodesignRequest]) -> Json {
     Json::obj(vec![
         ("schema", Json::Num(SCHEMA_VERSION as f64)),
@@ -733,7 +739,7 @@ pub fn decode_requests(text: &str) -> Result<Vec<CodesignRequest>> {
         .collect()
 }
 
-/// `{"schema": 6, "responses": […]}`.
+/// `{"schema": 7, "responses": […]}`.
 pub fn encode_responses(responses: &[CodesignResponse]) -> Json {
     Json::obj(vec![
         ("schema", Json::Num(SCHEMA_VERSION as f64)),
@@ -773,6 +779,8 @@ mod tests {
         assert!(decode_requests(r#"{"requests": []}"#).is_err());
         assert!(decode_requests("not json").is_err());
         // The emitted version and every legacy envelope decode.
+        assert!(decode_requests(r#"{"schema": 7, "requests": []}"#).unwrap().is_empty());
+        assert!(decode_requests(r#"{"schema": 6, "requests": []}"#).unwrap().is_empty());
         assert!(decode_requests(r#"{"schema": 5, "requests": []}"#).unwrap().is_empty());
         assert!(decode_requests(r#"{"schema": 4, "requests": []}"#).unwrap().is_empty());
         assert!(decode_requests(r#"{"schema": 3, "requests": []}"#).unwrap().is_empty());
@@ -829,6 +837,25 @@ mod tests {
         let j = parse(r#"{"class": "pentagon2d:r1"}"#).unwrap();
         let err = format!("{:#}", spec_from_json(&j).unwrap_err());
         assert!(err.contains("jacobi2d"), "{err}");
+    }
+
+    #[test]
+    fn fused_chain_names_decode_and_roundtrip() {
+        // v7: stencil-name fields accept fused-chain names; encoding emits
+        // the canonical spelling, so chains round-trip through their name.
+        let chain = crate::stencil::spec::FusedChain::parse("fuse:heat2d+laplacian2d:t4")
+            .unwrap();
+        let spec = ScenarioSpec::single(chain.register());
+        let back = spec_from_json(&spec_to_json(&spec)).unwrap();
+        assert_eq!(spec, back);
+        let j = parse(r#"{"class": "fuse:jacobi2d+heat2d:t2"}"#).unwrap();
+        let s = spec_from_json(&j).unwrap();
+        assert_eq!(s.class.name(), "fuse:jacobi2d+heat2d:t2");
+        // A bad chain reports the chain-specific failure plus the grammar.
+        let j = parse(r#"{"class": "fuse:heat2d+heat3d:t2"}"#).unwrap();
+        let err = format!("{:#}", spec_from_json(&j).unwrap_err());
+        assert!(err.contains("share one dimensionality"), "{err}");
+        assert!(err.contains("fuse:"), "{err}");
     }
 
     #[test]

@@ -21,7 +21,7 @@
 //! resolves preset names *and* parses family names like `star3d:r2`,
 //! registering them on first sight.
 
-use crate::stencil::spec::{Dim, Shape, StencilSpec};
+use crate::stencil::spec::{Dim, FusedChain, Shape, StencilSpec};
 use std::collections::HashMap;
 use std::sync::{OnceLock, RwLock};
 
@@ -60,9 +60,12 @@ impl std::fmt::Debug for StencilId {
 #[derive(Clone, Copy, Debug)]
 pub struct Stencil {
     pub id: StencilId,
-    /// Registry name (`jacobi2d`, `star3d:r2`, …).
+    /// Registry name (`jacobi2d`, `star3d:r2`, `fuse:heat2d+laplacian2d:t4`, …).
     pub name: &'static str,
     /// The generating family spec (presets pin exact loop-body counts).
+    /// Fused chains carry their synthetic *effective* spec — it re-derives
+    /// the characterization below exactly, but its radius is the fused halo
+    /// and may exceed `MAX_RADIUS`, so it is not a registrable family.
     pub spec: StencilSpec,
     /// Space dimensions (2 or 3); every benchmark adds one time dimension.
     pub space_dims: u32,
@@ -117,6 +120,12 @@ impl Stencil {
         if let Some(id) = registered {
             return Ok(Stencil::get(id));
         }
+        if name.starts_with("fuse:") {
+            return match FusedChain::parse(name) {
+                Ok(chain) => register_chain(&chain, Some(name)).map(Stencil::get),
+                Err(reason) => Err(unknown_stencil_msg(name, &reason)),
+            };
+        }
         match StencilSpec::parse(name) {
             Ok(spec) => register_named(&spec, Some(name)).map(Stencil::get),
             Err(reason) => Err(unknown_stencil_msg(name, &reason)),
@@ -131,7 +140,9 @@ pub fn unknown_stencil_msg(name: &str, reason: &str) -> String {
     format!(
         "unknown stencil '{name}' ({reason}); valid presets: {}; or a parametric family \
          '<star|box><2d|3d>:r<1-8>' with optional ':b<bufs>', ':w<bytes>', ':f<flops>', \
-         ':c<cycles>' overrides (e.g. star3d:r2, box2d:r1:f20)",
+         ':c<cycles>' overrides (e.g. star3d:r2, box2d:r1:f20); or a fused chain \
+         'fuse:<stage>(+<stage>)*[:t<1-8>]' of same-dimension stages \
+         (e.g. fuse:heat2d+laplacian2d:t4)",
         presets.join(", ")
     )
 }
@@ -167,7 +178,30 @@ fn register_named(spec: &StencilSpec, alias: Option<&str>) -> Result<StencilId, 
     if let Err(e) = spec.validate() {
         return Err(format!("invalid StencilSpec: {e}"));
     }
-    let canonical = spec.canonical_name();
+    intern(spec.canonical_name(), spec, alias)
+}
+
+/// Intern a fused chain under its canonical name (idempotent; the alias is
+/// the as-written spelling). The registry entry carries the chain's
+/// *effective* spec, so every downstream consumer — cache keys, time model,
+/// bounds, workloads, the wire — sees a plain characterized stencil. Two
+/// chains with identical characterizations but different names still share
+/// sweeps: `CacheKey` is built from the characterization bits, not the id.
+pub(crate) fn register_chain(
+    chain: &FusedChain,
+    alias: Option<&str>,
+) -> Result<StencilId, String> {
+    if let Err(e) = chain.validate() {
+        return Err(format!("invalid fused chain: {e}"));
+    }
+    intern(chain.canonical_name(), &chain.effective_spec(), alias)
+}
+
+fn intern(
+    canonical: String,
+    spec: &StencilSpec,
+    alias: Option<&str>,
+) -> Result<StencilId, String> {
     let mut reg = registry().write().unwrap();
     let id = match reg.by_name.get(&canonical) {
         Some(&id) => id,
@@ -332,12 +366,36 @@ mod tests {
     #[test]
     fn unknown_names_list_presets_and_grammar() {
         let err = Stencil::by_name_err("frobnicate").unwrap_err();
-        for needle in ["jacobi2d", "laplacian3d", "star|box", "r<1-8>", "frobnicate"] {
+        for needle in
+            ["jacobi2d", "laplacian3d", "star|box", "r<1-8>", "fuse:", "frobnicate"]
+        {
             assert!(err.contains(needle), "'{err}' should mention '{needle}'");
         }
         // A near-miss family name reports the specific parse failure too.
         let err = Stencil::by_name_err("star3d:r99").unwrap_err();
         assert!(err.contains("radius must be"), "{err}");
+        // So does a near-miss chain name.
+        let err = Stencil::by_name_err("fuse:heat2d+heat3d:t2").unwrap_err();
+        assert!(err.contains("share one dimensionality"), "{err}");
+    }
+
+    #[test]
+    fn fused_chain_lookup_registers_and_interns() {
+        let a = Stencil::by_name("fuse:heat3d+laplacian3d:t2").expect("chain must parse");
+        assert_eq!(a.space_dims, 3);
+        assert!(a.is_3d());
+        assert_eq!(a.sigma, 4, "2 passes × (σ=1 + σ=1)");
+        let b = Stencil::by_name("fuse:heat3d+laplacian3d:t2").unwrap();
+        assert_eq!(a.id, b.id, "interned under the canonical name");
+        assert_eq!(format!("{:?}", a.id), "fuse:heat3d+laplacian3d:t2");
+        // The effective spec re-derives the registered characterization,
+        // preset-table style.
+        assert_eq!(a.spec.radius, a.sigma);
+        assert_eq!(a.spec.flops_per_point().to_bits(), a.flops_per_point.to_bits());
+        assert_eq!(a.spec.c_iter_cycles().to_bits(), a.c_iter_cycles.to_bits());
+        // A non-canonical spelling aliases to the same entry.
+        let c = Stencil::by_name("fuse:star3d:r1:f14:c16+laplacian3d:t2").unwrap();
+        assert_eq!(a.id, c.id, "preset-equal stage spec canonicalizes to the preset");
     }
 
     #[test]

@@ -13,5 +13,5 @@ pub mod spec;
 pub mod workload;
 
 pub use defs::{Stencil, StencilId, ALL_STENCILS};
-pub use spec::{Dim, Shape, StencilSpec};
+pub use spec::{Dim, FusedChain, Shape, StencilSpec};
 pub use workload::{ProblemSize, Workload, WorkloadEntry};

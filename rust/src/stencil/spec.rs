@@ -25,6 +25,12 @@
 //! (`star3d:r2`, `box2d:r1:f20`) and round-trips through [`StencilSpec::parse`]
 //! bit-exactly — the wire format (schema v2) carries specs as these names.
 //!
+//! A [`FusedChain`] composes several same-dimension specs into one fused
+//! ghost-zone workload (`fuse:heat2d+laplacian2d:t4`, schema v7) whose
+//! *derived* characterization — deepened halo, redundancy-inflated flops and
+//! `C_iter`, shared plane buffers — registers and caches exactly like any
+//! single spec (DESIGN.md §10 has the derivation).
+//!
 //! # Examples
 //!
 //! ```no_run
@@ -323,6 +329,312 @@ impl StencilSpec {
     }
 }
 
+/// Maximum stages in a fused chain (the six paper presets set the scale).
+pub const MAX_FUSE_STAGES: usize = 6;
+
+/// Maximum chain passes per fused block (`:t` in the grammar). The Python
+/// fused kernels are exercised at `t_steps ≤ 8`; beyond that the ghost zone
+/// dominates any realistic block.
+pub const MAX_FUSE_STEPS: u32 = 8;
+
+/// Maximum fused halo `h = t·Σσᵢ`. The hybrid-hexagonal model stays valid
+/// for any σ, but a halo beyond this swallows every calibrated tile footprint.
+pub const MAX_FUSE_HALO: u32 = 32;
+
+/// Reference square-tile edge at which the redundant-compute factor is
+/// frozen into the characterization — the Python kernels' default block edge
+/// (`common.choose_tile` prefers 64).
+pub const FUSE_REF_TILE: u64 = 64;
+
+/// A fused multi-stencil chain: `1..=MAX_FUSE_STAGES` same-dimension stages
+/// applied in sequence, the whole sequence repeated `t_steps` times per
+/// fused block (the ghost-zone / redundant-computation scheme of Meng &
+/// Skadron realized by `python/compile/kernels/fused.py`).
+///
+/// One chain application is one *macro time step*: a block stages once with
+/// an `h = t_steps·Σσᵢ`-deep halo, advances all `t_steps·K` stage
+/// applications in shared memory (the valid region shrinking by the stage's
+/// σ per application), and writes back once. A workload's `T` counts macro
+/// steps, so per *stage application* the staged traffic drops by the fusion
+/// depth while the halo trapezoid adds `O(h·σ/t)` redundant compute per tile
+/// edge — both captured by the derived characterization
+/// ([`FusedChain::effective_spec`]), which registers and cache-keys exactly
+/// like a plain spec. DESIGN.md §10 derives every term.
+///
+/// Canonical grammar (round-trips bit-exactly):
+///
+/// ```text
+/// "fuse:" <stage> ("+" <stage>)* [":t" <1-8>]
+/// stage = preset name | StencilSpec family name
+/// ```
+///
+/// # Examples
+///
+/// ```no_run
+/// use codesign::stencil::spec::FusedChain;
+///
+/// let chain = FusedChain::parse("fuse:heat2d+laplacian2d:t4").unwrap();
+/// assert_eq!(chain.halo(), 8);                  // 4 passes × (σ=1 + σ=1)
+/// assert_eq!(chain.canonical_name(), "fuse:heat2d+laplacian2d:t4");
+/// let id = chain.register();                    // behaves like any stencil
+/// assert_eq!(codesign::stencil::defs::Stencil::get(id).sigma, 8);
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct FusedChain {
+    /// Stage specs, applied in order within each chain pass. All stages
+    /// share the dimensionality and word size (validated).
+    pub stages: Vec<StencilSpec>,
+    /// Chain passes per fused block (`t` in `h = t·Σσᵢ`), `1..=MAX_FUSE_STEPS`.
+    pub t_steps: u32,
+}
+
+impl FusedChain {
+    pub fn new(stages: Vec<StencilSpec>, t_steps: u32) -> Result<FusedChain, String> {
+        let chain = FusedChain { stages, t_steps };
+        chain.validate()?;
+        Ok(chain)
+    }
+
+    /// Validate the composition; `Err` carries a human-readable reason.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.stages.is_empty() {
+            return Err("a fused chain needs at least one stage".to_string());
+        }
+        if self.stages.len() > MAX_FUSE_STAGES {
+            return Err(format!(
+                "a fused chain carries at most {MAX_FUSE_STAGES} stages (got {})",
+                self.stages.len()
+            ));
+        }
+        if self.t_steps < 1 || self.t_steps > MAX_FUSE_STEPS {
+            return Err(format!(
+                "fuse steps must be 1..={MAX_FUSE_STEPS} (got t{})",
+                self.t_steps
+            ));
+        }
+        for (i, stage) in self.stages.iter().enumerate() {
+            stage.validate().map_err(|e| format!("stage {}: {e}", i + 1))?;
+            if stage.dim != self.stages[0].dim {
+                return Err(format!(
+                    "all stages must share one dimensionality (stage {} is {}, stage 1 is {})",
+                    i + 1,
+                    stage.dim.token(),
+                    self.stages[0].dim.token()
+                ));
+            }
+            if stage.bytes_per_cell != self.stages[0].bytes_per_cell {
+                return Err(format!(
+                    "all stages must share one word size (stage {} stages {} B cells, \
+                     stage 1 stages {} B)",
+                    i + 1,
+                    stage.bytes_per_cell,
+                    self.stages[0].bytes_per_cell
+                ));
+            }
+        }
+        if self.halo() > MAX_FUSE_HALO {
+            return Err(format!(
+                "fused halo t·Σσ = {} exceeds {MAX_FUSE_HALO} (deeper ghost zones swallow \
+                 every calibrated tile)",
+                self.halo()
+            ));
+        }
+        if self.effective_buffers() < 1.0 {
+            return Err(format!(
+                "stages stage too few buffers to share the fused time planes \
+                 (Σbᵢ − 2(K−1) = {} < 1)",
+                self.effective_buffers()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Common space dimensionality of all stages.
+    pub fn dim(&self) -> Dim {
+        self.stages[0].dim
+    }
+
+    /// Fused halo depth `h = t_steps · Σᵢ σᵢ` — ghost-zone cells staged per
+    /// block face, and the macro step's dependence-cone slope (the chain's
+    /// effective σ in the tiling model).
+    pub fn halo(&self) -> u32 {
+        self.t_steps * self.stages.iter().map(|s| s.radius).sum::<u32>()
+    }
+
+    /// Stage applications per macro step: `t_steps · K`.
+    pub fn applications(&self) -> u32 {
+        self.t_steps * self.stages.len() as u32
+    }
+
+    /// Ghost-zone redundant-compute factor over a `t1 × t2 (× t3)` tile:
+    /// total stencil applications (the halo trapezoid shrinking by the
+    /// stage's σ per application) over the useful `t1·t2(·t3)·n`. Mirrors
+    /// `python/compile/kernels/fused.redundancy_factor` exactly for a
+    /// single-stage chain; `1.0` exactly when `applications() == 1`.
+    pub fn redundancy_factor(&self, t1: u64, t2: u64, t3: Option<u64>) -> f64 {
+        let h = self.halo() as f64;
+        let mut cum = 0u32;
+        let mut total = 0.0;
+        for _pass in 0..self.t_steps {
+            for stage in &self.stages {
+                cum += stage.radius;
+                let rem = h - cum as f64; // halo left after this application
+                let w1 = t1 as f64 + 2.0 * rem;
+                let w2 = t2 as f64 + 2.0 * rem;
+                let w3 = t3.map_or(1.0, |t| t as f64 + 2.0 * rem);
+                total += w1 * w2 * w3;
+            }
+        }
+        let useful = t1 as f64
+            * t2 as f64
+            * t3.unwrap_or(1) as f64
+            * self.applications() as f64;
+        total / useful
+    }
+
+    /// Bytes a fused grid step stages over a `t1 × t2` block: input block
+    /// plus `h`-deep halo, output block — the exact
+    /// `python/compile/kernels/fused.vmem_footprint_bytes` formula (2-D
+    /// parity helper; the tiling model's own hexagonal footprint is
+    /// `timemodel::tiling::tile_footprint_bytes`).
+    pub fn vmem_footprint_bytes(&self, t1: u64, t2: u64) -> f64 {
+        let h = self.halo() as u64;
+        self.stages[0].bytes_per_cell
+            * (((t1 + 2 * h) * (t2 + 2 * h) + t1 * t2) as f64)
+    }
+
+    /// The redundancy factor frozen at the reference tile
+    /// ([`FUSE_REF_TILE`] per space dimension) — the factor baked into the
+    /// effective flops and `C_iter`.
+    pub fn reference_redundancy(&self) -> f64 {
+        let t3 = match self.dim() {
+            Dim::D2 => None,
+            Dim::D3 => Some(FUSE_REF_TILE),
+        };
+        self.redundancy_factor(FUSE_REF_TILE, FUSE_REF_TILE, t3)
+    }
+
+    /// Flops per macro-step point: the useful `t·Σfᵢ` inflated by the
+    /// reference redundancy (redundant halo applications execute real
+    /// flops). Bit-equal to the lone stage's flops when
+    /// `applications() == 1`.
+    pub fn effective_flops(&self) -> f64 {
+        self.reference_redundancy()
+            * self.t_steps as f64
+            * self.stages.iter().map(|s| s.flops_per_point()).sum::<f64>()
+    }
+
+    /// `C_iter` cycles per macro iteration: every stage application a thread
+    /// issues per macro step, inflated by the same reference redundancy.
+    pub fn effective_c_iter(&self) -> f64 {
+        self.reference_redundancy()
+            * self.t_steps as f64
+            * self.stages.iter().map(|s| s.c_iter_cycles()).sum::<f64>()
+    }
+
+    /// Combined live buffers: the stages run sequentially inside one block,
+    /// so the double-buffered in/out planes are shared — one pair total —
+    /// while every stage's extra arrays (coefficients, derived fields) stay
+    /// live across the whole macro step: `Σbᵢ − 2(K−1)`.
+    pub fn effective_buffers(&self) -> f64 {
+        self.stages.iter().map(|s| s.n_buffers).sum::<f64>()
+            - 2.0 * (self.stages.len() as f64 - 1.0)
+    }
+
+    /// The derived single-stencil characterization the whole model stack
+    /// consumes, as a synthetic spec: radius = fused halo, flops / `C_iter`
+    /// pinned to the effective values. It re-derives the chain
+    /// characterization exactly, but is *not* a registrable family of its
+    /// own (the halo may exceed [`MAX_RADIUS`]) — it only rides inside the
+    /// chain's registry entry.
+    pub fn effective_spec(&self) -> StencilSpec {
+        StencilSpec {
+            dim: self.dim(),
+            shape: self.stages[0].shape,
+            radius: self.halo(),
+            n_buffers: self.effective_buffers(),
+            bytes_per_cell: self.stages[0].bytes_per_cell,
+            flops: Some(self.effective_flops()),
+            c_iter: Some(self.effective_c_iter()),
+        }
+    }
+
+    /// The canonical name: `fuse:` + stage names joined with `+`, plus `:t`
+    /// when `t_steps != 1`. A stage whose spec is bit-equal to a preset's
+    /// prints the preset name (`heat2d`), otherwise its family canonical
+    /// name — so `parse(canonical_name()) == self` bit-exactly.
+    pub fn canonical_name(&self) -> String {
+        let stages: Vec<String> = self
+            .stages
+            .iter()
+            .map(|s| match defs::ALL_STENCILS.iter().find(|p| p.spec == *s) {
+                Some(p) => p.name.to_string(),
+                None => s.canonical_name(),
+            })
+            .collect();
+        let mut name = format!("fuse:{}", stages.join("+"));
+        if self.t_steps != 1 {
+            name.push_str(&format!(":t{}", self.t_steps));
+        }
+        name
+    }
+
+    /// Parse a chain name. Grammar:
+    ///
+    /// ```text
+    /// "fuse:" <stage> ("+" <stage>)* [":t" <steps>]
+    /// stage = preset name (heat2d) | family name (star2d:r2:f20)
+    /// steps = 1..=8 (default 1)
+    /// ```
+    ///
+    /// The trailing `:t` segment is unambiguous: `t` is not a stage suffix
+    /// tag, and stage names never contain `+`. Chains do not nest.
+    pub fn parse(name: &str) -> Result<FusedChain, String> {
+        let Some(body) = name.strip_prefix("fuse:") else {
+            return Err(format!("'{name}' is not a fused chain (want fuse:…)"));
+        };
+        let (head, t_steps) = match body.rsplit_once(':') {
+            Some((head, last)) if last.starts_with('t') => {
+                let steps = last[1..]
+                    .parse::<u32>()
+                    .map_err(|_| format!("bad fuse steps '{last}' (want t<count>)"))?;
+                (head, steps)
+            }
+            _ => (body, 1),
+        };
+        let mut stages = Vec::new();
+        for tok in head.split('+') {
+            if tok.is_empty() {
+                return Err(format!("empty stage in '{name}'"));
+            }
+            stages.push(Self::stage_spec(tok)?);
+        }
+        FusedChain::new(stages, t_steps)
+    }
+
+    /// Resolve one stage token: a preset name yields the preset's pinned
+    /// spec, anything else must parse as a family name. Deliberately *not*
+    /// `Stencil::by_name_err`, so chains cannot nest and stage parsing never
+    /// touches the registry.
+    fn stage_spec(tok: &str) -> Result<StencilSpec, String> {
+        if let Some(p) = defs::ALL_STENCILS.iter().find(|p| p.name == tok) {
+            return Ok(p.spec);
+        }
+        StencilSpec::parse(tok).map_err(|e| format!("stage '{tok}': {e}"))
+    }
+
+    /// Intern this chain in the global stencil registry under its canonical
+    /// name (idempotent) and get its [`StencilId`] — from there workloads,
+    /// scenarios, cache keys, the wire and the daemon treat it as just
+    /// another characterized stencil.
+    ///
+    /// Panics on an invalid chain or a full registry; untrusted inputs go
+    /// through [`Stencil::by_name_err`](crate::stencil::defs::Stencil::by_name_err).
+    pub fn register(&self) -> StencilId {
+        defs::register_chain(self, None).unwrap_or_else(|e| panic!("{e}"))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -401,5 +713,136 @@ mod tests {
         let b = StencilSpec::parse("star3d:r2").unwrap().register();
         assert_eq!(a, b);
         assert_eq!(a.name(), "star3d:r2");
+    }
+
+    #[test]
+    fn chain_halo_sums_stage_depths() {
+        let chain = FusedChain::parse("fuse:heat2d+laplacian2d:t4").unwrap();
+        assert_eq!(chain.stages.len(), 2);
+        assert_eq!(chain.t_steps, 4);
+        assert_eq!(chain.halo(), 8, "4 passes × (σ=1 + σ=1)");
+        assert_eq!(chain.applications(), 8);
+        let deep = FusedChain::new(
+            vec![StencilSpec::star(Dim::D2, 2), StencilSpec::star(Dim::D2, 1)],
+            3,
+        )
+        .unwrap();
+        assert_eq!(deep.halo(), 9, "3 passes × (σ=2 + σ=1)");
+    }
+
+    #[test]
+    fn chain_canonical_name_roundtrips() {
+        let cases = [
+            "fuse:heat2d",
+            "fuse:heat2d:t4",
+            "fuse:heat2d+laplacian2d:t4",
+            "fuse:jacobi2d+heat2d+laplacian2d:t2",
+            "fuse:heat3d+laplacian3d:t3",
+            "fuse:star2d:r2+box2d:r1:t2",
+            "fuse:star2d:r2:b3:f20+heat2d:t2",
+            "fuse:box3d:r1:c25.5+star3d:r2:t2",
+        ];
+        for name in cases {
+            let chain = FusedChain::parse(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(chain.canonical_name(), name, "canonical");
+            let back = FusedChain::parse(&chain.canonical_name()).unwrap();
+            assert_eq!(chain, back, "{name}");
+        }
+        // A family spelling of a preset canonicalizes to the preset name.
+        let chain = FusedChain::parse("fuse:star2d:r1:f10:c13+laplacian2d:t4").unwrap();
+        assert_eq!(chain.canonical_name(), "fuse:heat2d+laplacian2d:t4");
+    }
+
+    #[test]
+    fn chain_parse_rejects_garbage_with_reasons() {
+        for (name, needle) in [
+            ("fuse:", "empty stage"),
+            ("fuse:heat2d++laplacian2d", "empty stage"),
+            ("fuse:frobnicate:t2", "stage 'frobnicate'"),
+            ("fuse:heat2d:tmany", "bad fuse steps"),
+            ("fuse:heat2d:t0", "fuse steps must be"),
+            ("fuse:heat2d:t99", "fuse steps must be"),
+            ("fuse:heat2d+heat3d:t2", "share one dimensionality"),
+            ("fuse:heat2d+star2d:r1:w8:t2", "share one word size"),
+            ("fuse:star2d:r8+star2d:r8+star2d:r8+star2d:r8+star2d:r8:t8", "exceeds"),
+            (
+                "fuse:jacobi2d+heat2d+laplacian2d+gradient2d+jacobi2d+heat2d+laplacian2d",
+                "at most",
+            ),
+            ("fuse:star2d:r1:b1+star2d:r1:b1:t2", "too few buffers"),
+            ("heat2d", "not a fused chain"),
+        ] {
+            let err = FusedChain::parse(name).unwrap_err();
+            assert!(err.contains(needle), "{name}: '{err}' should mention '{needle}'");
+        }
+    }
+
+    #[test]
+    fn single_application_chain_characterizes_as_its_stage() {
+        // K = 1, t = 1: the redundancy factor is exactly 1 and every
+        // effective field is bit-equal to the lone stage's — the identity
+        // the property tier certifies across random stages.
+        for stage in [
+            StencilSpec::star(Dim::D2, 1).with_flops(10.0).with_c_iter(13.0),
+            StencilSpec::boxed(Dim::D3, 2).with_buffers(3.0),
+        ] {
+            let chain = FusedChain::new(vec![stage], 1).unwrap();
+            assert_eq!(chain.reference_redundancy().to_bits(), 1.0_f64.to_bits());
+            let eff = chain.effective_spec();
+            assert_eq!(eff.radius, stage.radius);
+            assert_eq!(eff.flops_per_point().to_bits(), stage.flops_per_point().to_bits());
+            assert_eq!(eff.c_iter_cycles().to_bits(), stage.c_iter_cycles().to_bits());
+            assert_eq!(eff.n_buffers.to_bits(), stage.n_buffers.to_bits());
+            assert_eq!(eff.bytes_per_cell.to_bits(), stage.bytes_per_cell.to_bits());
+        }
+    }
+
+    #[test]
+    fn chain_redundancy_matches_python_fused_kernels() {
+        // python/compile/kernels/fused.redundancy_factor(16, 24, 4) with
+        // σ = 1: Σ_{s=0}^{3} (16+2(3−s))·(24+2(3−s)) / (16·24·4).
+        let chain = FusedChain::new(vec![StencilSpec::star(Dim::D2, 1)], 4).unwrap();
+        let expect = (22.0 * 30.0 + 20.0 * 28.0 + 18.0 * 26.0 + 16.0 * 24.0)
+            / (16.0 * 24.0 * 4.0);
+        assert_eq!(chain.redundancy_factor(16, 24, None).to_bits(), expect.to_bits());
+        // And the footprint formula: 4 B · [(t1+2h)(t2+2h) + t1·t2] at
+        // 64×64, h = 4 — the module docstring's 21.6 kB example.
+        assert_eq!(chain.vmem_footprint_bytes(64, 64), 4.0 * ((72 * 72 + 64 * 64) as f64));
+        assert_eq!(chain.halo(), 4);
+    }
+
+    #[test]
+    fn chain_characterization_scales_with_depth() {
+        // Deeper fusion: more halo, more redundant compute per macro point,
+        // same staged word — the traffic amortization lives in the macro
+        // step carrying `applications()` real stage applications.
+        let per_pass: f64 = 10.0 + 6.0; // heat2d + laplacian2d flops
+        let mut last_r = 0.0;
+        for t in 1..=4u32 {
+            let chain = FusedChain::parse(&format!("fuse:heat2d+laplacian2d:t{t}")).unwrap();
+            let r = chain.reference_redundancy();
+            assert!(r >= 1.0 && r > last_r || t == 1, "redundancy grows with depth");
+            assert!(
+                chain.effective_flops() >= t as f64 * per_pass,
+                "effective flops carry the useful work plus the edge term"
+            );
+            assert_eq!(chain.effective_buffers(), 2.0, "default stages share one plane pair");
+            last_r = r;
+        }
+    }
+
+    #[test]
+    fn chain_registers_like_a_stencil() {
+        let chain = FusedChain::parse("fuse:heat2d+laplacian2d:t4").unwrap();
+        let id = chain.register();
+        assert_eq!(id, chain.register(), "idempotent");
+        let st = defs::Stencil::get(id);
+        assert_eq!(st.name(), "fuse:heat2d+laplacian2d:t4");
+        assert_eq!(st.sigma, 8);
+        assert_eq!(st.space_dims, 2);
+        assert_eq!(st.flops_per_point.to_bits(), chain.effective_flops().to_bits());
+        assert_eq!(st.c_iter_cycles.to_bits(), chain.effective_c_iter().to_bits());
+        assert_eq!(st.n_buffers, 2.0);
+        assert_eq!(st.bytes_per_cell, 4.0);
     }
 }

@@ -117,9 +117,15 @@ impl Workload {
     /// A uniform workload over an arbitrary stencil set — e.g. a whole
     /// radius family. Each stencil contributes its dimension-appropriate
     /// size grid (so 2-D and 3-D members can mix); every (stencil, size)
-    /// instance is equally likely.
-    pub fn uniform_over(name: &str, ids: &[StencilId]) -> Workload {
-        assert!(!ids.is_empty(), "uniform_over needs at least one stencil");
+    /// instance is equally likely. An empty id set is an `Err` (this is
+    /// reachable from request-assembly code, so no panic).
+    pub fn uniform_over(name: &str, ids: &[StencilId]) -> Result<Workload, String> {
+        if ids.is_empty() {
+            return Err(format!(
+                "workload '{name}': uniform_over needs at least one stencil \
+                 (got an empty id list)"
+            ));
+        }
         let grid_2d = sz_2d();
         let grid_3d = sz_3d();
         let mut entries = Vec::new();
@@ -133,7 +139,7 @@ impl Workload {
         for e in &mut entries {
             e.weight = w;
         }
-        Workload { name: name.to_string(), entries }
+        Ok(Workload { name: name.to_string(), entries })
     }
 
     fn uniform<'a>(
@@ -237,7 +243,7 @@ mod tests {
             2,
         )
         .register();
-        let w = Workload::uniform_over("family", &[StencilId::Jacobi2D, star3d_r2]);
+        let w = Workload::uniform_over("family", &[StencilId::Jacobi2D, star3d_r2]).unwrap();
         assert_eq!(w.entries.len(), 16 + 9, "2-D grid + 3-D grid");
         assert!((w.total_weight() - 1.0).abs() < 1e-9);
         assert!(w
@@ -245,6 +251,28 @@ mod tests {
             .iter()
             .filter(|e| e.stencil == star3d_r2)
             .all(|e| e.size.s3.is_some()));
+    }
+
+    #[test]
+    fn uniform_over_empty_set_is_a_clean_error() {
+        // Reachable from request assembly, so an Err naming the failing
+        // input — not a panic.
+        let err = Workload::uniform_over("empty-mix", &[]).unwrap_err();
+        assert!(err.contains("empty-mix"), "{err}");
+        assert!(err.contains("at least one stencil"), "{err}");
+    }
+
+    #[test]
+    fn fused_chains_join_workloads_like_presets() {
+        let chain =
+            crate::stencil::spec::FusedChain::parse("fuse:heat2d+laplacian2d:t4")
+                .unwrap()
+                .register();
+        let w = Workload::single(chain);
+        assert_eq!(w.entries.len(), 16, "2-D chain gets the 2-D size grid");
+        assert!((w.total_weight() - 1.0).abs() < 1e-9);
+        let mixed = Workload::uniform_over("mixed", &[StencilId::Heat2D, chain]).unwrap();
+        assert_eq!(mixed.entries.len(), 32);
     }
 
     #[test]

@@ -5,9 +5,10 @@
 //! path on every surface that matters:
 //!
 //! * Explore sweeps (all six paper presets via the 2-D/3-D mixes, plus the
-//!   `star3d:r2` / `box2d:r2` parametric families) on the `maxwell`,
-//!   `maxwell:bw20` and `maxwell-nocache` platforms — identical designs,
-//!   best points, Pareto fronts and reference statistics;
+//!   `star3d:r2` / `box2d:r2` parametric families and the PR 10 fused
+//!   chains `fuse:…`) on the `maxwell`, `maxwell:bw20` and
+//!   `maxwell-nocache` platforms — identical designs, best points, Pareto
+//!   fronts and reference statistics;
 //! * bound-gated Pareto requests — identical fronts and feasibility counts
 //!   while spending a small fraction of the model evaluations (the paper
 //!   sweep must come in at ≤ 1/3);
@@ -168,6 +169,59 @@ fn pruned_explore_is_bit_identical_on_parametric_families() {
         };
         assert_explore_bit_identical(ps, fs);
     }
+}
+
+#[test]
+fn pruned_explore_is_bit_identical_on_fused_chains() {
+    // PR 10: a fused chain enters the sweep purely through its derived
+    // characterization, so the bound layer's one-sidedness must hold for
+    // it verbatim — prune-on answers bit-identically to --no-prune on a
+    // deep-halo two-stage chain and a repeated-application single stage.
+    let specs = [
+        ScenarioSpec::new(
+            codesign::service::WorkloadClass::parse("fuse:heat2d+laplacian2d:t2").unwrap(),
+        )
+        .quick(8),
+        ScenarioSpec::new(codesign::service::WorkloadClass::parse("fuse:jacobi2d:t4").unwrap())
+            .quick(8),
+    ];
+    for spec in specs {
+        let pruned = session_for(PlatformId::Maxwell).submit(&explore(spec.clone()));
+        let full = session_for(PlatformId::Maxwell)
+            .submit(&explore(spec.clone().with_solve_opts(no_prune())));
+        let (CodesignResponse::Explore(ps), CodesignResponse::Explore(fs)) =
+            (&pruned.response, &full.response)
+        else {
+            panic!("unexpected response kinds");
+        };
+        assert_explore_bit_identical(ps, fs);
+    }
+}
+
+#[test]
+fn fused_chain_batches_are_bit_identical_across_thread_counts() {
+    // The chain acceptance criterion's second axis: explore + pareto over a
+    // fused chain answer bit-identically on 1 and 8 worker threads,
+    // telemetry included.
+    let chain = || {
+        ScenarioSpec::new(
+            codesign::service::WorkloadClass::parse("fuse:heat2d+laplacian2d:t2").unwrap(),
+        )
+    };
+    let answers: Vec<Vec<CodesignResponse>> = [1usize, 8]
+        .iter()
+        .map(|&threads| {
+            let requests = vec![
+                CodesignRequest::explore(chain().quick(8).with_threads(threads)),
+                CodesignRequest::pareto(chain().quick(8).with_threads(threads)),
+            ];
+            session_for(PlatformId::Maxwell).submit_all(&requests).into_responses()
+        })
+        .collect();
+    assert_eq!(
+        answers[0], answers[1],
+        "thread count must not change any fused-chain response field"
+    );
 }
 
 // ---------------------------------------------------------------------------

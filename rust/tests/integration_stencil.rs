@@ -9,6 +9,12 @@
 //!   the batched sweep, and mixed with presets in one batch;
 //! * **Wire compatibility** — schema v1 request files still decode; v2
 //!   responses round-trip with parametric names in place.
+//!
+//! PR 10 extends the same certification over fused chains (`fuse:…`, wire
+//! v7): chains run end-to-end through the wire, a single-application chain
+//! is bit-identical to its lone stage (and shares its sweep), and the
+//! registered chain characterization pins the Python fused-kernel model's
+//! constants bit-for-bit.
 
 use codesign::codesign::scenario::Scenario;
 use codesign::coordinator::Coordinator;
@@ -201,6 +207,117 @@ fn family_workloads_solve_like_presets() {
     let st = Stencil::get(id);
     assert_eq!(st.sigma, 2);
     assert!(st.flops_per_point > Stencil::get(StencilId::Jacobi2D).flops_per_point);
+}
+
+#[test]
+fn fused_chain_runs_end_to_end_through_the_wire() {
+    // The serve path over wire v7: a hand-written request file naming a
+    // fused chain in both the scenario class and a what-if weight entry.
+    let text = r#"{
+        "schema": 7,
+        "requests": [
+            {"type": "explore",
+             "scenario": {"class": "fuse:heat2d+laplacian2d:t2", "quick_stride": 3}},
+            {"type": "what_if",
+             "scenario": {"class": "fuse:heat2d+laplacian2d:t2", "quick_stride": 3},
+             "weights": [{"stencil": "fuse:heat2d+laplacian2d:t2", "weight": 2.5}]}
+        ]
+    }"#;
+    let requests = wire::decode_requests(text).expect("v7 fused-chain file must decode");
+    assert_eq!(requests.len(), 2);
+
+    let mut session = Session::paper();
+    let rep = session.submit_all(&requests);
+    let CodesignResponse::Explore(s) = &rep.answers[0].response else {
+        panic!("unexpected {:?}", rep.answers[0].response.kind());
+    };
+    assert_eq!(s.scenario, "fuse:heat2d+laplacian2d:t2");
+    assert!(s.designs > 100, "{} designs", s.designs);
+    assert!(!s.pareto.is_empty());
+    assert!(!rep.answers[1].response.is_error());
+
+    // Responses carrying chain names round-trip the wire.
+    let responses: Vec<CodesignResponse> =
+        rep.answers.iter().map(|a| a.response.clone()).collect();
+    let encoded = wire::encode_responses(&responses).to_string_compact();
+    assert_eq!(wire::decode_responses(&encoded).unwrap(), responses);
+
+    // A repeat submission over the warm session is pure cache service and
+    // bit-identical — chains memoize exactly like presets.
+    let again = session.submit_all(&requests);
+    assert!(again.cache_hit_rate() >= 0.99, "repeat hit rate {}", again.cache_hit_rate());
+    for (a, b) in rep.answers.iter().zip(&again.answers) {
+        assert_eq!(a.response, b.response);
+    }
+}
+
+#[test]
+fn single_application_chain_shares_the_preset_sweep_bit_exactly() {
+    // A one-stage, one-pass chain has redundancy exactly 1.0, so its
+    // derived characterization is bit-identical to the lone stage — and
+    // the characterization-keyed cache makes it share the preset's sweep.
+    use codesign::stencil::spec::FusedChain;
+    let chain = FusedChain::parse("fuse:heat2d").unwrap().register();
+    assert_ne!(chain, StencilId::Heat2D, "distinct registry identity");
+    let (c, p) = (Stencil::get(chain), Stencil::get(StencilId::Heat2D));
+    assert_eq!(c.sigma, p.sigma);
+    assert_eq!(c.flops_per_point.to_bits(), p.flops_per_point.to_bits());
+    assert_eq!(c.n_buffers.to_bits(), p.n_buffers.to_bits());
+    assert_eq!(c.bytes_per_cell.to_bits(), p.bytes_per_cell.to_bits());
+    assert_eq!(c.c_iter_cycles.to_bits(), p.c_iter_cycles.to_bits());
+
+    let base = Scenario::quick(Scenario::paper_2d(), 8);
+    let mut chained = base.clone().named("2d-fused-twin");
+    for e in &mut chained.workload.entries {
+        if e.stencil == StencilId::Heat2D {
+            e.stencil = chain;
+        }
+    }
+    let coord = Coordinator::paper();
+    let rep = coord.run_batch_report(&[base.clone(), chained]);
+    let [a, b] = &rep.reports[..] else { panic!("two scenarios in, two out") };
+    assert_eq!(a.result.points.len(), b.result.points.len());
+    for (pa, pb) in a.result.points.iter().zip(&b.result.points) {
+        assert_eq!(pa.hw, pb.hw);
+        assert_eq!(pa.gflops.to_bits(), pb.gflops.to_bits(), "objective must be bit-identical");
+        assert_eq!(pa.seconds.to_bits(), pb.seconds.to_bits());
+    }
+    assert_eq!(a.result.pareto, b.result.pareto, "fronts must be identical");
+
+    let solo = Coordinator::paper();
+    let solo_rep = solo.run_batch_report(std::slice::from_ref(&base));
+    assert_eq!(
+        rep.unique_instances, solo_rep.unique_instances,
+        "the chained scenario must add no sweep work"
+    );
+}
+
+#[test]
+fn fused_chain_characterization_pins_the_python_fused_model() {
+    // Desk-derived constants for fuse:heat2d+laplacian2d:t4 (h = 8, eight
+    // applications shrinking the 64-point reference tile's halo by one σ
+    // each): ΣₐΠᵢ(64 + 2·remₐ)² = 40496 over 64²·8 useful points. Every
+    // term is an exact binary value, so the registered characterization
+    // must match bit-for-bit — and the footprint helper must match
+    // `python/compile/kernels/fused.vmem_footprint_bytes` exactly.
+    use codesign::stencil::spec::FusedChain;
+    let st = Stencil::by_name_err("fuse:heat2d+laplacian2d:t4").unwrap();
+    assert_eq!(st.name(), "fuse:heat2d+laplacian2d:t4");
+    assert_eq!(st.space_dims, 2);
+    assert_eq!(st.sigma, 8, "halo t·Σσ = 4·(1+1)");
+    let r_ref = 40496.0 / 32768.0;
+    assert_eq!(st.flops_per_point.to_bits(), (r_ref * 4.0 * (10.0 + 6.0)).to_bits());
+    assert_eq!(st.c_iter_cycles.to_bits(), (r_ref * 4.0 * (13.0 + 10.0)).to_bits());
+    assert_eq!(st.n_buffers.to_bits(), 2.0_f64.to_bits(), "Σbᵢ − 2(K−1)");
+    assert_eq!(st.bytes_per_cell.to_bits(), 4.0_f64.to_bits());
+    // The non-preset C_iter path serves the chain's effective value.
+    assert_eq!(CIterTable::paper().get(st.id).to_bits(), st.c_iter_cycles.to_bits());
+
+    let chain = FusedChain::parse("fuse:heat2d+laplacian2d:t4").unwrap();
+    assert_eq!(chain.reference_redundancy().to_bits(), r_ref.to_bits());
+    // Python parity: bytes·((t1+2h)(t2+2h) + t1·t2) at a 64² block.
+    let expect = 4.0 * ((64.0 + 16.0) * (64.0 + 16.0) + 64.0 * 64.0);
+    assert_eq!(chain.vmem_footprint_bytes(64, 64).to_bits(), expect.to_bits());
 }
 
 #[test]

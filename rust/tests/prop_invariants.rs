@@ -889,6 +889,109 @@ fn prop_cache_key_is_characterization() {
 }
 
 #[test]
+fn prop_fused_chain_names_roundtrip_bit_exactly() {
+    // PR 10's grammar contract: any valid chain — random stage count, star
+    // and box stages, b/f/c overrides, random pass count — survives
+    // canonical_name → parse with every f64 bit intact, and its registry
+    // entry re-derives the chain characterization bit-for-bit.
+    use codesign::stencil::spec::{Dim, FusedChain, StencilSpec};
+    forall_res(Config::default().cases(80), |rng| {
+        let dim = *rng.choose(&[Dim::D2, Dim::D3]);
+        let n_stages = rng.range_u64(1, 3) as usize;
+        let mut stages = Vec::new();
+        for _ in 0..n_stages {
+            let r = rng.range_u64(1, 2) as u32;
+            let mut spec = if rng.bernoulli(0.5) {
+                StencilSpec::star(dim, r)
+            } else {
+                StencilSpec::boxed(dim, r)
+            };
+            if rng.bernoulli(0.4) {
+                spec = spec.with_flops((rng.f64() * 100.0).max(f64::MIN_POSITIVE));
+            }
+            if rng.bernoulli(0.4) {
+                spec = spec.with_c_iter((rng.f64() * 40.0).max(f64::MIN_POSITIVE));
+            }
+            if rng.bernoulli(0.3) {
+                // ≥ 2 per stage keeps Σbᵢ − 2(K−1) ≥ 2, so every draw is a
+                // valid chain (the generator must not trip validation).
+                spec = spec.with_buffers(2.0 + rng.f64() * 2.0);
+            }
+            stages.push(spec);
+        }
+        let sigma: u64 = stages.iter().map(|s| s.radius as u64).sum();
+        let t_steps = rng.range_u64(1, (32 / sigma).min(8)) as u32;
+        let chain =
+            FusedChain::new(stages, t_steps).map_err(|e| format!("generator invalid: {e}"))?;
+        let name = chain.canonical_name();
+        let parsed = FusedChain::parse(&name).map_err(|e| format!("{name}: {e}"))?;
+        if parsed != chain {
+            return Err(format!("{name}: parse mismatch {parsed:?} vs {chain:?}"));
+        }
+        let st = Stencil::get(chain.register());
+        if st.sigma != chain.halo()
+            || st.space_dims != if dim == Dim::D3 { 3 } else { 2 }
+            || st.flops_per_point.to_bits() != chain.effective_flops().to_bits()
+            || st.c_iter_cycles.to_bits() != chain.effective_c_iter().to_bits()
+            || st.n_buffers.to_bits() != chain.effective_buffers().to_bits()
+        {
+            return Err(format!("{name}: registry characterization drift"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_single_stage_chain_is_bit_identical_to_its_stage() {
+    // A one-stage one-pass chain has exactly one application, so the halo
+    // trapezoid degenerates and the redundancy factor is exactly 1.0 — the
+    // chain's derived characterization must equal the lone stage's
+    // bit-for-bit, which is what makes `fuse:<x>` share `<x>`'s sweeps.
+    use codesign::coordinator::CacheKey;
+    use codesign::stencil::spec::{Dim, FusedChain, StencilSpec};
+    forall_res(Config::default().cases(60), |rng| {
+        let dim = *rng.choose(&[Dim::D2, Dim::D3]);
+        let r = rng.range_u64(1, 4) as u32;
+        let mut spec = if rng.bernoulli(0.5) {
+            StencilSpec::star(dim, r)
+        } else {
+            StencilSpec::boxed(dim, r)
+        };
+        if rng.bernoulli(0.5) {
+            spec = spec.with_flops((rng.f64() * 100.0).max(f64::MIN_POSITIVE));
+        }
+        if rng.bernoulli(0.5) {
+            spec = spec.with_c_iter((rng.f64() * 40.0).max(f64::MIN_POSITIVE));
+        }
+        let chain = FusedChain::new(vec![spec], 1)?;
+        if chain.reference_redundancy().to_bits() != 1.0f64.to_bits() {
+            return Err(format!("R must be exactly 1.0, got {}", chain.reference_redundancy()));
+        }
+        let lone = Stencil::get(spec.register());
+        let fused = Stencil::get(chain.register());
+        if lone.id == fused.id {
+            return Err("chain and stage must keep distinct identities".into());
+        }
+        if fused.sigma != lone.sigma
+            || fused.flops_per_point.to_bits() != lone.flops_per_point.to_bits()
+            || fused.c_iter_cycles.to_bits() != lone.c_iter_cycles.to_bits()
+            || fused.n_buffers.to_bits() != lone.n_buffers.to_bits()
+            || fused.bytes_per_cell.to_bits() != lone.bytes_per_cell.to_bits()
+        {
+            return Err(format!("{}: characterization differs from stage", chain.canonical_name()));
+        }
+        // Equal characterization ⇒ equal cache key ⇒ one shared sweep.
+        let size = if lone.is_3d() { ProblemSize::d3(64, 16) } else { ProblemSize::d2(512, 128) };
+        let fp = codesign::platform::Platform::default_spec().fingerprint();
+        let hw = HwParams::gtx980();
+        if CacheKey::new(fp, &hw, lone, &size) != CacheKey::new(fp, &hw, fused, &size) {
+            return Err(format!("{}: cache key differs from stage", chain.canonical_name()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_best_weighted_minimizes_the_weighted_objective() {
     // §V-D's λ·T + (1−λ)·E selector: at every λ — the pure-performance and
     // pure-energy extremes included — the returned index must beat (or tie)
